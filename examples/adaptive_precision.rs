@@ -1,0 +1,49 @@
+//! Tunable precision in action (paper §4's proposal): solve the
+//! MuST-mini τ-matrix along the energy contour with the adaptive
+//! policy — few splits where the KKR matrix is well-conditioned, many
+//! near the 0.72 Ry resonance — and compare against fixed splits.
+//!
+//! Run with `cargo run --release --example adaptive_precision`.
+
+use ozaccel::coordinator::{AdaptivePolicy, DispatchConfig, Dispatcher};
+use ozaccel::must::params::{mt_u56_mini, tiny_case};
+use ozaccel::must::scf::{ModeSelect, ScfDriver};
+use ozaccel::ozaki::ComputeMode;
+
+fn main() -> ozaccel::Result<()> {
+    ozaccel::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut case = if quick { tiny_case() } else { mt_u56_mini() };
+    case.iterations = 1;
+
+    let dispatcher = Dispatcher::new(DispatchConfig::host_only(ComputeMode::Dgemm))?;
+    let driver = ScfDriver::new(case, &dispatcher)?;
+
+    let policy = AdaptivePolicy {
+        target: 1e-9,
+        ..Default::default()
+    };
+    let run = driver.run(ModeSelect::Adaptive(policy))?;
+
+    println!("per-energy-point split choice (target rel err 1e-9):\n");
+    println!("   Re(z)    Im(z)     kappa(est)   splits");
+    for p in &run.iterations[0].points {
+        let bar = "#".repeat(p.splits_used as usize);
+        println!(
+            " {:7.4}  {:7.4}  {:10.2e}   {:2}  {bar}",
+            p.z.re, p.z.im, p.kappa, p.splits_used
+        );
+    }
+    let mean: f64 = run.iterations[0]
+        .points
+        .iter()
+        .map(|p| p.splits_used as f64)
+        .sum::<f64>()
+        / run.iterations[0].points.len() as f64;
+    println!(
+        "\nmean splits {mean:.2} — vs a fixed policy that must run the max\n\
+         everywhere; cost scales with s(s+1)/2 per GEMM (paper §4:\n\
+         \"minimizing splits while maintaining accuracy is critical\")."
+    );
+    Ok(())
+}

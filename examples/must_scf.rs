@@ -1,0 +1,69 @@
+//! End-to-end driver (DESIGN.md E1/E4): run the MuST-mini `mt-u56-mini`
+//! case — a dim-256 KKR multiple-scattering problem — through the full
+//! three-layer stack (Rust coordinator → PJRT → AOT'd JAX/Pallas INT8
+//! emulation), for the native mode and one INT8 mode, and print the
+//! accuracy + offload report.
+//!
+//! Run with:
+//!   cargo run --release --example must_scf            (full case)
+//!   cargo run --release --example must_scf -- --quick (tiny case)
+//!   OZIMMU_COMPUTE_MODE=fp64_int8_5 cargo run --release --example must_scf
+
+use ozaccel::coordinator::{DispatchConfig, Dispatcher};
+use ozaccel::experiments::table1::error_row;
+use ozaccel::must::params::{mt_u56_mini, tiny_case};
+use ozaccel::must::scf::{ModeSelect, ScfDriver};
+use ozaccel::ozaki::ComputeMode;
+
+fn main() -> ozaccel::Result<()> {
+    ozaccel::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let case = if quick { tiny_case() } else { mt_u56_mini() };
+    let mode = ComputeMode::from_env()?;
+    let mode = if mode == ComputeMode::Dgemm {
+        ComputeMode::Int8 { splits: 6 }
+    } else {
+        mode
+    };
+
+    let dispatcher = Dispatcher::new(DispatchConfig::default())?;
+    println!(
+        "case: {} sites, dim {}, {} contour points, resonance at {} Ry",
+        case.n_sites,
+        case.dim(),
+        case.n_contour,
+        case.e_res
+    );
+    println!("PJRT runtime attached: {}\n", dispatcher.has_runtime());
+
+    let driver = ScfDriver::new(case, &dispatcher)?;
+    println!("running dgemm reference ...");
+    let reference = driver.run(ModeSelect::Fixed(ComputeMode::Dgemm))?;
+    println!("running {} ...", mode.name());
+    dispatcher.reset_stats();
+    let emulated = driver.run(ModeSelect::Fixed(mode))?;
+
+    println!("\niter |   Etot(dgemm)    Etot({})  |  EF(dgemm)  EF(emul) | max_real  max_imag", mode.short_name());
+    let row = error_row(&reference, &emulated);
+    for (i, ((r, e), c)) in reference
+        .iterations
+        .iter()
+        .zip(&emulated.iterations)
+        .zip(&row.cells)
+        .enumerate()
+    {
+        println!(
+            "  {}  | {:12.6} {:12.6} | {:9.5} {:9.5} | {:.2e}  {:.2e}",
+            i + 1,
+            r.etot,
+            e.etot,
+            r.efermi,
+            e.efermi,
+            c.max_real,
+            c.max_imag
+        );
+    }
+
+    println!("\n{}", dispatcher.report().render());
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Automatic-offload walkthrough (the SCILIB-Accel story, paper §2.1):
+//! a synthetic BLAS-heavy workload issues GEMMs of mixed sizes from
+//! several call sites; the coordinator routes each one (host for small,
+//! device for large), tracks per-call-site statistics PEAK-style, and
+//! prices the data movement under all three UMA strategies.
+//!
+//! Run with `cargo run --release --example offload_trace`.
+
+use ozaccel::coordinator::{DataMoveStrategy, DispatchConfig, Dispatcher};
+use ozaccel::linalg::Mat;
+use ozaccel::ozaki::ComputeMode;
+use ozaccel::testing::Rng;
+
+/// A fake application phase: repeated small updates (stay on host).
+fn small_updates(d: &Dispatcher, rng: &mut Rng) -> ozaccel::Result<()> {
+    let a = Mat::from_fn(24, 24, |_, _| rng.normal());
+    let b = Mat::from_fn(24, 24, |_, _| rng.normal());
+    for _ in 0..20 {
+        d.dgemm(&a, &b)?; // call site A — below the offload threshold
+    }
+    Ok(())
+}
+
+/// A fake solver phase: large products reusing the same operands
+/// (offloaded; first-touch migration pays once).
+fn solver_phase(d: &Dispatcher, rng: &mut Rng) -> ozaccel::Result<()> {
+    let a = Mat::from_fn(256, 256, |_, _| rng.normal());
+    let b = Mat::from_fn(256, 256, |_, _| rng.normal());
+    for _ in 0..10 {
+        let c = d.dgemm(&a, &b)?; // call site B — offloaded
+        d.cpu_touch(&c); // application reads the result on the CPU
+    }
+    Ok(())
+}
+
+fn main() -> ozaccel::Result<()> {
+    ozaccel::logging::init();
+    for strategy in [
+        DataMoveStrategy::CopyAlways,
+        DataMoveStrategy::UnifiedAccess,
+        DataMoveStrategy::FirstTouchMigrate,
+    ] {
+        let cfg = DispatchConfig {
+            mode: ComputeMode::Int8 { splits: 6 },
+            strategy,
+            ..DispatchConfig::default()
+        };
+        let d = Dispatcher::new(cfg)?;
+        let mut rng = Rng::new(1);
+        small_updates(&d, &mut rng)?;
+        solver_phase(&d, &mut rng)?;
+        println!("{}", d.report().render());
+    }
+    println!("note how only the large-GEMM call site is offloaded, and how");
+    println!("first_touch moves the fewest bytes on the reuse-heavy phase —");
+    println!("the UMA advantage that makes automatic offload viable (§2.1).");
+    Ok(())
+}

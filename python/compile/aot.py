@@ -1,0 +1,137 @@
+"""AOT driver: lower the L2 model to HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are shape-specialised.  The shape set covers the buckets the
+Rust runtime pads to (DESIGN.md §Shape/bucket policy): the K=64 family
+used by MuST-mini's blocked LU trailing updates plus square benchmark
+shapes.  ``artifacts/manifest.txt`` lists every module as
+
+    kind splits M K N filename
+
+with ``splits = 0`` for the native-FP64 ``dgemm`` mode.
+
+The L1 kernel tiling defaults to the CPU execution profile (one grid
+cell — see model.ozaki_dgemm's docstring and EXPERIMENTS.md §Perf);
+pass ``--tile tpu`` to emit the MXU-shaped tiled variant instead
+(compile-only on this testbed).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--jobs N] [--quick] [--tile cpu|tpu]
+"""
+
+from __future__ import annotations
+
+import argparse
+import concurrent.futures as cf
+import os
+import sys
+import time
+
+# MuST-mini blocked-LU trailing-update shapes (dim 256, NB 64), padded
+# to buckets {64, 128, 256}.
+MUST_SHAPES = [
+    (m, 64, n) for m in (64, 128, 256) for n in (64, 128, 256)
+]
+# Square shapes for the §4 DGEMM benchmark (E3).  2048 is modelled, not
+# compiled — interpret-mode emulation at 2048^3 x s^2 is out of testbed
+# budget; perfmodel extrapolates from these.
+BENCH_SHAPES = [(128, 128, 128), (256, 256, 256), (512, 512, 512)]
+
+SPLITS = list(range(3, 10))  # fp64_int8_3 .. fp64_int8_9 (Table 1)
+
+
+def artifact_name(kind: str, splits: int, m: int, k: int, n: int) -> str:
+    if kind == "dgemm":
+        return f"dgemm_{m}x{k}x{n}.hlo.txt"
+    return f"ozdg_s{splits}_{m}x{k}x{n}.hlo.txt"
+
+
+def lower_one(job):
+    """Lower one (kind, splits, m, k, n[, tile]) to HLO text.  Runs in a
+    worker process: jax + the model are imported lazily so processes
+    stay cheap."""
+    kind, splits, m, k, n, out_dir = job[:6]
+    tile = job[6] if len(job) > 6 else "cpu"
+    import jax
+    import jax.numpy as jnp
+
+    jax.config.update("jax_enable_x64", True)
+    from jax._src.lib import xla_client as xc
+
+    from . import model
+
+    fn = model.make_entry(kind, splits, tile=tile)
+    a = jax.ShapeDtypeStruct((m, k), jnp.float64)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float64)
+    t0 = time.perf_counter()
+    lowered = jax.jit(fn).lower(a, b)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text()
+    name = artifact_name(kind, splits, m, k, n)
+    path = os.path.join(out_dir, name)
+    with open(path + ".tmp", "w") as f:
+        f.write(text)
+    os.replace(path + ".tmp", path)
+    return name, len(text), time.perf_counter() - t0
+
+
+def build_jobs(out_dir: str, quick: bool, tile: str = "cpu"):
+    shapes = sorted(set(MUST_SHAPES + BENCH_SHAPES))
+    splits = SPLITS if not quick else [3, 6]
+    jobs = []
+    for (m, k, n) in shapes:
+        for kind, ss in [("dgemm", [0])] + [("ozdg", splits)]:
+            for s in ss:
+                name = artifact_name(kind, s, m, k, n)
+                if not os.path.exists(os.path.join(out_dir, name)):
+                    jobs.append((kind, s, m, k, n, out_dir, tile))
+    return shapes, splits, jobs
+
+
+def write_manifest(out_dir: str, quick: bool):
+    shapes = sorted(set(MUST_SHAPES + BENCH_SHAPES))
+    splits = SPLITS if not quick else [3, 6]
+    lines = []
+    for (m, k, n) in shapes:
+        lines.append(f"dgemm 0 {m} {k} {n} {artifact_name('dgemm', 0, m, k, n)}")
+        for s in splits:
+            lines.append(f"ozdg {s} {m} {k} {n} {artifact_name('ozdg', s, m, k, n)}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# kind splits M K N filename\n")
+        f.write("\n".join(lines) + "\n")
+    return len(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--jobs", type=int, default=os.cpu_count() or 4)
+    ap.add_argument("--quick", action="store_true",
+                    help="only splits {3,6} — for CI smoke runs")
+    ap.add_argument("--tile", choices=["cpu", "tpu"], default="cpu",
+                    help="L1 kernel BlockSpec profile (see §Perf)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    _, _, jobs = build_jobs(args.out_dir, args.quick, args.tile)
+    t0 = time.perf_counter()
+    if jobs:
+        print(f"lowering {len(jobs)} modules with {args.jobs} workers ...")
+        with cf.ProcessPoolExecutor(max_workers=args.jobs) as ex:
+            for name, nbytes, dt in ex.map(lower_one, jobs):
+                print(f"  {name:34s} {nbytes/1024:7.1f} KiB  {dt:5.1f}s")
+    else:
+        print("all artifacts up to date")
+    n = write_manifest(args.out_dir, args.quick)
+    print(f"manifest: {n} modules; total {time.perf_counter() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

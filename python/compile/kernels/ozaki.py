@@ -1,0 +1,149 @@
+"""Layer-1 Pallas kernels for the Ozaki-scheme INT8 GEMM emulation.
+
+The compute hot-spot of ``fp64_int8_s`` DGEMM emulation is a set of
+packed INT8 matrix multiplications with INT32 accumulation — one per
+anti-diagonal ``d`` of the slice-pair grid (the ``s(s+1)/2`` retained
+products of the ozIMMU_H economisation):
+
+    D_d = [A_0 | ... | A_d] @ [B_d; ...; B_0]       contraction K*(d+1)
+
+On real IMMU hardware (NVIDIA integer tensor cores, TPU MXU int8 mode) this
+maps onto the native 8-bit multiply / 32-bit accumulate path.  Here the
+kernel is written in Pallas and lowered with ``interpret=True`` so the same
+HLO runs on the CPU PJRT backend (see DESIGN.md §Hardware-Adaptation: real
+TPU lowering would emit a Mosaic custom-call the CPU plugin cannot execute).
+
+Two kernels live here:
+
+* :func:`int8_gemm` — tiled INT8 GEMM with an INT32 scratch accumulator.
+* :func:`split_kernel` — the 7-bit truncate-and-rescale slicer, exposed as a
+  standalone Pallas kernel for benchmarking; the L2 model normally fuses the
+  equivalent jnp computation into the same HLO module.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Bits carried per INT8 slice.  7 (not 8) so that truncation of a scaled
+# mantissa |r| < 1 yields |q| = |trunc(r * 2^7)| <= 127, which fits int8
+# without saturation, and so K*127^2 stays far below the INT32 accumulator
+# limit (exact for K < 133_000).
+SLICE_BITS = 7
+
+
+def _gemm_body(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    """Grid cell of the INT8 GEMM: one (bm, bk) x (bk, bn) MAC step.
+
+    Grid is (M/bm, N/bn, K/bk); the K axis is innermost so the INT32
+    accumulator lives in scratch (VMEM on a real TPU) across K steps.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...]
+
+
+def int8_gemm(a, b, *, bm: int | None = None, bn: int | None = None,
+              bk: int | None = None):
+    """INT8 matrix multiply with exact INT32 accumulation.
+
+    ``a``: (M, K) int8, ``b``: (K, N) int8 → (M, N) int32.
+
+    Block sizes must divide the corresponding dimensions; callers pick them
+    so the grid stays small under ``interpret=True`` (every grid cell is a
+    scan iteration on CPU).  Defaults take the whole axis when it is modest
+    and otherwise the largest power-of-two tile that divides it.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    bm = bm or _pick_block(m)
+    bn = bn or _pick_block(n)
+    bk = bk or _pick_block(k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"blocks ({bm},{bk},{bn}) must divide shape ({m},{k},{n})")
+    nm, nn, nk = m // bm, n // bn, k // bk
+    return pl.pallas_call(
+        functools.partial(_gemm_body, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[
+            pl.MemoryRef(jax.core.ShapedArray((bm, bn), jnp.int32),
+                         pl.MemorySpace.ANY)
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+        name="ozaki_int8_gemm",
+    )(a, b)
+
+
+def _pick_block(dim: int, cap: int = 512) -> int:
+    """Largest divisor of ``dim`` that is <= cap and keeps tiles chunky."""
+    if dim <= cap:
+        return dim
+    best = 1
+    block = cap
+    while block >= 1:
+        if dim % block == 0:
+            best = block
+            break
+        block //= 2
+    return max(best, 1)
+
+
+def vmem_bytes(bm: int, bk: int, bn: int) -> int:
+    """Estimated VMEM footprint of one grid cell (DESIGN.md §Perf).
+
+    int8 A-tile + int8 B-tile + int32 accumulator + int32 output tile.
+    """
+    return bm * bk + bk * bn + 2 * 4 * bm * bn
+
+
+def _split_body(x_ref, o_ref, *, splits: int):
+    """Slice a pre-scaled block (|x| < 1) into ``splits`` 7-bit integers."""
+    r = x_ref[...]
+    for s in range(splits):
+        q = jnp.trunc(r * (2.0 ** SLICE_BITS))
+        o_ref[s, ...] = q.astype(jnp.int8)
+        # Exact: power-of-two scaling then subtraction of the truncated
+        # integer part (Sterbenz) leaves |r| < 1 for the next round.
+        r = r * (2.0 ** SLICE_BITS) - q
+
+
+def split_kernel(x, splits: int, *, block: int | None = None):
+    """Standalone Pallas slicer: (M, K) f64 with |x| < 1 → (splits, M, K) i8.
+
+    The L2 model fuses an equivalent jnp loop; this kernel exists so the
+    split stage can be benchmarked and tested in isolation at L1.
+    """
+    m, k = x.shape
+    bm = block or _pick_block(m)
+    return pl.pallas_call(
+        functools.partial(_split_body, splits=splits),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((splits, bm, k), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((splits, m, k), jnp.int8),
+        interpret=True,
+        name="ozaki_split",
+    )(x)

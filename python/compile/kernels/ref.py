@@ -1,0 +1,97 @@
+"""Pure-jnp reference oracles for the L1 kernels and the L2 emulation.
+
+Everything here is written with plain ``jnp`` ops (no Pallas) and is the
+correctness anchor for pytest: the Pallas kernel and the full AOT'd model
+must match these bit-for-bit (integer paths) or to tight FP64 tolerances
+(emulation paths).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ozaki import SLICE_BITS
+
+
+def int8_gemm_ref(a, b):
+    """Reference INT8→INT32 GEMM: plain dot_general, no tiling."""
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def scale_rows(a):
+    """Per-row power-of-two scaling so every entry has magnitude < 1.
+
+    Returns ``(scaled, e)`` with ``a == scaled * 2**e`` rowwise and
+    ``|scaled| < 1``.  Zero rows get e = 0.
+    """
+    amax = jnp.max(jnp.abs(a), axis=1, keepdims=True)
+    amax = jnp.where(amax == 0, 1.0, amax)
+    _, e = jnp.frexp(amax)  # amax = mant * 2**e with mant in [0.5, 1)
+    # ldexp, not exp2: XLA's exp2 is exp(x*ln2) and can be 1 ulp off a
+    # true power of two, which would break error-free splitting.
+    return jnp.ldexp(a, -e), e
+
+
+def split_ref(x, splits: int):
+    """Reference 7-bit slicer for pre-scaled input (|x| < 1).
+
+    Returns (splits, ...) int8 such that
+    ``x ≈ sum_k slices[k] * 2**(-SLICE_BITS*(k+1))`` with residual
+    ``< 2**(-SLICE_BITS*splits)``.  The arithmetic is exact in FP64: the
+    scaling is by powers of two and the subtraction is of the truncated
+    integer part.
+    """
+    slices = []
+    r = x
+    for _ in range(splits):
+        q = jnp.trunc(r * (2.0 ** SLICE_BITS))
+        slices.append(q.astype(jnp.int8))
+        r = r * (2.0 ** SLICE_BITS) - q
+    return jnp.stack(slices)
+
+
+def reconstruct_ref(slices):
+    """Inverse of :func:`split_ref` up to the dropped residual."""
+    s = slices.shape[0]
+    w = jnp.ldexp(jnp.float64(1.0), -SLICE_BITS * (jnp.arange(s) + 1))
+    return jnp.einsum("k...,k->...", slices.astype(jnp.float64), w)
+
+
+def ozaki_dgemm_ref(a, b, splits: int):
+    """Reference fp64_int8_s DGEMM: identical math to the L2 model
+    (per-diagonal packed products — see model.ozaki_dgemm) but with an
+    un-tiled dot_general in place of the Pallas kernel."""
+    m, _k = a.shape
+    _, n = b.shape
+    sa_scaled, ea = scale_rows(a)
+    sb_scaled, eb = scale_rows(b.T)
+    sa = split_ref(sa_scaled, splits)  # (s, M, K)
+    sb = split_ref(sb_scaled, splits)  # (s, N, K)
+    c = jnp.zeros((m, n), jnp.float64)
+    for d in range(splits):
+        a_cat = jnp.concatenate([sa[kk] for kk in range(d + 1)], axis=1)
+        b_cat = jnp.concatenate([sb[d - kk].T for kk in range(d + 1)], axis=0)
+        dd = int8_gemm_ref(a_cat, b_cat)
+        w = jnp.ldexp(jnp.float64(1.0), -SLICE_BITS * (d + 2))
+        c = c + dd.astype(jnp.float64) * w
+    return jnp.ldexp(c, ea + eb.T)
+
+
+def dgemm_ref(a, b):
+    """Native FP64 GEMM (the paper's `dgemm` compute mode)."""
+    return a @ b
+
+
+def zgemm_via_dgemm_ref(ar, ai, br, bi, splits: int | None):
+    """ZGEMM decomposed into four real GEMMs, each optionally emulated.
+
+    This mirrors how the Rust coordinator lowers complex GEMMs; ozIMMU
+    likewise splits real/imaginary parts.
+    """
+    g = (lambda x, y: ozaki_dgemm_ref(x, y, splits)) if splits else dgemm_ref
+    cre = g(ar, br) - g(ai, bi)
+    cim = g(ar, bi) + g(ai, br)
+    return cre, cim

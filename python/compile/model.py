@@ -1,0 +1,130 @@
+"""Layer-2 JAX model: the ``fp64_int8_s`` DGEMM emulation graph.
+
+This is the Ozaki scheme on an integer matrix-multiplication unit
+(Ootomo et al. 2024; Uchino et al. 2025), as used by the paper:
+
+1. scale rows of A (columns of B) by powers of two so entries are < 1;
+2. slice every entry into ``s`` signed 7-bit integers (exact);
+3. run ONE fused INT8 GEMM over all slice pairs — the Layer-1 Pallas
+   kernel — with INT32 accumulation (exact for K < 133k);
+4. accumulate the slice-pair products in FP64 with weights
+   ``2^{-7(k+l+2)}``, keeping the ``k+l < s`` triangle (ozIMMU_H
+   economisation), and undo the scaling.
+
+The whole graph (split + kernel + accumulate) lowers into a single HLO
+module so the Rust runtime feeds plain FP64 matrices and receives FP64
+results — no host round-trips between stages.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ozaki
+from .kernels.ozaki import SLICE_BITS
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _scale_rows(a):
+    """Rowwise power-of-two scaling; see kernels.ref.scale_rows.
+
+    Scaling uses ``ldexp`` (exact exponent manipulation).  ``jnp.exp2``
+    must NOT be used here: XLA lowers it to ``exp(x*ln2)`` whose result
+    can be one ulp off a true power of two, which would break the
+    error-free-transformation property of the Ozaki splitting.
+    """
+    amax = jnp.max(jnp.abs(a), axis=1, keepdims=True)
+    amax = jnp.where(amax == 0, 1.0, amax)
+    _, e = jnp.frexp(amax)  # amax = mant * 2**e, mant in [0.5, 1)
+    return jnp.ldexp(a, -e), e
+
+
+def _split(x, splits: int):
+    """7-bit truncate-and-rescale slicing, fused into the model graph.
+
+    Identical math to the standalone L1 split kernel; inlined here so XLA
+    fuses it with the scaling and the weight application.
+    """
+    slices = []
+    r = x
+    for _ in range(splits):
+        q = jnp.trunc(r * (2.0 ** SLICE_BITS))
+        slices.append(q.astype(jnp.int8))
+        r = r * (2.0 ** SLICE_BITS) - q
+    return jnp.stack(slices)
+
+
+def ozaki_dgemm(a, b, splits: int, tile: str = "cpu"):
+    """Emulated FP64 GEMM: ``C ≈ A @ B`` computed on INT8 units.
+
+    a: (M, K) f64, b: (K, N) f64 → (M, N) f64.
+
+    ``tile`` selects the L1 kernel's BlockSpec profile (§Perf):
+
+    * ``"cpu"`` — one grid cell covering the whole fused GEMM.  Under
+      ``interpret=True`` every grid cell is a scan iteration with
+      dynamic-slice traffic, which dominated the measured runtime
+      (~40x over the raw int8-dot floor at 256³); CPU has no VMEM
+      constraint, so one cell is strictly better there.
+    * ``"tpu"`` — (M, N, K) tiles, grid (s, s, 1): each cell's working
+      set (bm·bk + bk·bn int8 + 2·4·bm·bn int32) stays inside a 16 MiB
+      VMEM budget for the shipped shapes.  This is the layout a real
+      MXU build would use; on the CPU testbed it is compile-only
+      validated + used for the VMEM/occupancy estimates in DESIGN.md.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    a_scaled, ea = _scale_rows(a)
+    b_scaled, eb = _scale_rows(b.T)  # column scaling of B
+    sa = _split(a_scaled, splits)  # (s, M, K) int8
+    sb = _split(b_scaled, splits)  # (s, N, K) int8
+
+    # Per-diagonal packing (§Perf): the retained slice pairs share the
+    # weight 2^{-7(d+2)} along each anti-diagonal d = k+l, so pack the
+    # pairs of one diagonal into a single INT8 GEMM with contraction
+    # K·(d+1):
+    #
+    #   D_d = [A_0 | A_1 | ... | A_d] @ [B_d; B_{d-1}; ...; B_0]
+    #
+    # This performs exactly the s(s+1)/2 products of the ozIMMU_H
+    # economisation (vs s² for the all-pairs layout) and shrinks the
+    # FP64 accumulation from s²·M·N to s·M·N values.  INT32 stays exact:
+    # (d+1)·K·127² < 2³¹ for K·(d+1) < 133k.
+    c = jnp.zeros((m, n), jnp.float64)
+    for d in range(splits):
+        a_cat = jnp.concatenate([sa[kk] for kk in range(d + 1)], axis=1)
+        b_cat = jnp.concatenate(
+            [sb[d - kk].T for kk in range(d + 1)], axis=0
+        )  # (K*(d+1), N)
+        kd = k * (d + 1)
+        if tile == "cpu":
+            bm, bn, bk = m, n, kd
+        elif tile == "tpu":
+            bm, bn, bk = m, n, min(k, kd)
+        else:
+            raise ValueError(f"unknown tile profile {tile!r}")
+        dd = ozaki.int8_gemm(a_cat, b_cat, bm=bm, bn=bn, bk=bk)
+        w = jnp.ldexp(jnp.float64(1.0), -SLICE_BITS * (d + 2))
+        c = c + dd.astype(jnp.float64) * w
+    return jnp.ldexp(c, ea + eb.T)  # exact pow2 unscaling
+
+
+def native_dgemm(a, b):
+    """The paper's ``dgemm`` compute mode: native FP64 dot."""
+    return jnp.matmul(a, b)
+
+
+def make_entry(kind: str, splits: int | None, tile: str = "cpu"):
+    """Build the AOT entry point for one artifact.
+
+    All entries take (A, B) FP64 and return a 1-tuple (C,) — the Rust
+    runtime unwraps with ``to_tuple1``.
+    """
+    if kind == "dgemm":
+        return lambda a, b: (native_dgemm(a, b),)
+    if kind == "ozdg":
+        assert splits is not None and splits >= 2
+        return lambda a, b: (ozaki_dgemm(a, b, splits, tile=tile),)
+    raise ValueError(f"unknown artifact kind {kind!r}")

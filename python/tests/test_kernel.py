@@ -1,0 +1,113 @@
+"""L1 kernel vs pure-jnp oracle — the core build-time correctness signal.
+
+The Pallas INT8 GEMM must match ``dot_general`` bit-for-bit (integer
+arithmetic is exact), across shapes, tilings and value ranges; hypothesis
+sweeps the space.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import ozaki, ref  # noqa: E402
+
+DIMS = st.sampled_from([8, 16, 24, 32, 64, 96, 128])
+
+
+def rand_i8(rng, shape):
+    return jnp.asarray(rng.integers(-127, 128, shape, dtype=np.int8))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_int8_gemm_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand_i8(rng, (m, k)), rand_i8(rng, (k, n))
+    got = ozaki.int8_gemm(a, b)
+    want = ref.int8_gemm_ref(a, b)
+    assert got.dtype == jnp.int32
+    assert bool(jnp.all(got == want))
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (16, 32, 8), (64, 64, 64),
+                                    (32, 64, 16)])
+def test_int8_gemm_tilings_agree(blocks):
+    """Every legal tiling computes the identical integer result."""
+    rng = np.random.default_rng(7)
+    a, b = rand_i8(rng, (64, 64)), rand_i8(rng, (64, 64))
+    bm, bk, bn = blocks
+    got = ozaki.int8_gemm(a, b, bm=bm, bk=bk, bn=bn)
+    want = ref.int8_gemm_ref(a, b)
+    assert bool(jnp.all(got == want))
+
+
+def test_int8_gemm_rejects_bad_blocks():
+    rng = np.random.default_rng(0)
+    a, b = rand_i8(rng, (64, 64)), rand_i8(rng, (64, 64))
+    with pytest.raises(AssertionError):
+        ozaki.int8_gemm(a, b, bm=48, bk=64, bn=64)
+
+
+def test_int8_gemm_extreme_values_no_overflow():
+    """K * 127^2 accumulation stays exact in INT32."""
+    k = 512
+    a = jnp.full((8, k), 127, jnp.int8)
+    b = jnp.full((k, 8), 127, jnp.int8)
+    got = ozaki.int8_gemm(a, b, bm=8, bn=8, bk=k)
+    assert bool(jnp.all(got == k * 127 * 127))
+    b2 = jnp.full((k, 8), -127, jnp.int8)
+    got2 = ozaki.int8_gemm(a, b2, bm=8, bn=8, bk=k)
+    assert bool(jnp.all(got2 == -k * 127 * 127))
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, splits=st.integers(2, 9), seed=st.integers(0, 2**31 - 1))
+def test_split_kernel_matches_ref(m, k, splits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-0.999, 0.999, (m, k)))
+    got = ozaki.split_kernel(x, splits)
+    want = ref.split_ref(x, splits)
+    assert got.dtype == jnp.int8
+    assert bool(jnp.all(got == want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(splits=st.integers(2, 9), seed=st.integers(0, 2**31 - 1))
+def test_split_slices_bounded(splits, seed):
+    """|q_k| <= 127 always — no int8 saturation (SLICE_BITS = 7)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1, 1, (16, 16)) * 0.99999999)
+    sl = ref.split_ref(x, splits)
+    assert int(jnp.max(jnp.abs(sl.astype(jnp.int32)))) <= 127
+
+
+@settings(max_examples=20, deadline=None)
+@given(splits=st.integers(2, 9), seed=st.integers(0, 2**31 - 1))
+def test_split_reconstruction_residual_bound(splits, seed):
+    """Residual after s slices is < 2^(-7s) (exact truncation chain)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-0.999, 0.999, (32, 32)))
+    rec = ref.reconstruct_ref(ref.split_ref(x, splits))
+    # The mathematical residual is < 2^(-7s); evaluating the weighted sum
+    # in FP64 adds up to `splits` rounding errors of <= eps/2 each.
+    bound = 2.0 ** (-ozaki.SLICE_BITS * splits) + splits * 2.0 ** -53
+    assert float(jnp.max(jnp.abs(rec - x))) < bound
+
+
+def test_split_zero_and_exact_values():
+    """Dyadic values reconstruct exactly — this is what forced the model
+    to use ldexp rather than XLA's inexact exp2 (see kernels/ref.py)."""
+    x = jnp.asarray([[0.0, 0.5, -0.5, 2.0 ** -7, -(2.0 ** -14), 0.75]])
+    sl = ref.split_ref(x, 4)
+    rec = ref.reconstruct_ref(sl)
+    assert float(jnp.max(jnp.abs(rec - x))) == 0.0
+
+
+def test_vmem_estimate_monotone():
+    assert ozaki.vmem_bytes(128, 128, 128) < ozaki.vmem_bytes(256, 256, 256)
+    # documented §Perf bound: default MuST bucket fits in 16 MiB
+    assert ozaki.vmem_bytes(256, 64, 256) <= 16 * 2 ** 20

@@ -1,0 +1,132 @@
+"""L2 model properties: emulation accuracy decays with splits, scaling
+invariances hold, and the model agrees with the un-tiled oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+
+def rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.sampled_from([16, 32, 64]), k=st.sampled_from([16, 32, 64]),
+       n=st.sampled_from([16, 32, 64]), splits=st.integers(3, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_model_matches_oracle(m, k, n, splits, seed):
+    """Pallas-kernel model == un-tiled jnp oracle, bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, (m, k)), rand(rng, (k, n))
+    got = model.ozaki_dgemm(a, b, splits)
+    want = ref.ozaki_dgemm_ref(a, b, splits)
+    assert bool(jnp.all(got == want))
+
+
+def test_accuracy_decays_with_splits():
+    """~100x error reduction per extra split until the FP64 floor (the
+    paper's Table 1 pattern)."""
+    rng = np.random.default_rng(3)
+    a, b = rand(rng, (64, 64)), rand(rng, (64, 64))
+    cref = np.asarray(a) @ np.asarray(b)
+    scale = float(np.max(np.abs(cref)))
+    errs = []
+    for s in range(3, 10):
+        c = model.ozaki_dgemm(a, b, s)
+        errs.append(float(jnp.max(jnp.abs(c - cref))) / scale)
+    # at least 30x per split while above the FP64 floor
+    for e, e_next in zip(errs[:-1], errs[1:]):
+        if e > 1e-13:
+            assert e_next < e / 30
+    assert errs[-1] < 1e-13  # s=9 is at the FP64 floor
+    assert errs[0] < 1e-4    # s=3 on well-conditioned data
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), p=st.integers(-30, 30))
+def test_power_of_two_scaling_invariance(seed, p):
+    """C(2^p A, B) == 2^p C(A, B) exactly: scaling is pure exponent math."""
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, (16, 16)), rand(rng, (16, 16))
+    c1 = ref.ozaki_dgemm_ref(a * (2.0 ** p), b, 5)
+    c2 = ref.ozaki_dgemm_ref(a, b, 5) * (2.0 ** p)
+    assert bool(jnp.all(c1 == c2))
+
+
+def test_wide_dynamic_range_rows():
+    """Rowwise scaling keeps accuracy when row magnitudes differ by 2^40."""
+    rng = np.random.default_rng(5)
+    a = np.array(rand(rng, (32, 32)))  # writable copy
+    a[::2] *= 2.0 ** 40
+    b = rand(rng, (32, 32))
+    c = ref.ozaki_dgemm_ref(jnp.asarray(a), b, 7)
+    cref = a @ np.asarray(b)
+    # Rowwise normalisation: each row has its own scale (2^40 apart), so
+    # a global max would hide the small rows entirely.
+    row_scale = np.max(np.abs(cref), axis=1, keepdims=True)
+    rel = float(np.max(np.abs(np.asarray(c) - cref) / row_scale))
+    assert rel < 1e-11
+
+
+def test_zero_matrix():
+    z = jnp.zeros((16, 16))
+    b = rand(np.random.default_rng(0), (16, 16))
+    assert bool(jnp.all(ref.ozaki_dgemm_ref(z, b, 4) == 0.0))
+    assert bool(jnp.all(ref.ozaki_dgemm_ref(b, z, 4) == 0.0))
+
+
+def test_identity_matrix():
+    rng = np.random.default_rng(1)
+    b = rand(rng, (32, 32))
+    c = ref.ozaki_dgemm_ref(jnp.eye(32), b, 8)
+    assert float(jnp.max(jnp.abs(c - b))) < 1e-13
+
+
+def test_zgemm_decomposition():
+    """4-real-GEMM complex product matches numpy complex matmul."""
+    rng = np.random.default_rng(2)
+    ar, ai = rand(rng, (24, 24)), rand(rng, (24, 24))
+    br, bi = rand(rng, (24, 24)), rand(rng, (24, 24))
+    cre, cim = ref.zgemm_via_dgemm_ref(ar, ai, br, bi, splits=8)
+    want = (np.asarray(ar) + 1j * np.asarray(ai)) @ (
+        np.asarray(br) + 1j * np.asarray(bi))
+    got = np.asarray(cre) + 1j * np.asarray(cim)
+    assert np.max(np.abs(got - want)) / np.max(np.abs(want)) < 1e-13
+
+
+def test_native_dgemm_entry():
+    rng = np.random.default_rng(4)
+    a, b = rand(rng, (32, 16)), rand(rng, (16, 8))
+    (c,) = model.make_entry("dgemm", None)(a, b)
+    assert np.allclose(np.asarray(c), np.asarray(a) @ np.asarray(b))
+
+
+def test_make_entry_rejects_unknown():
+    with pytest.raises(ValueError):
+        model.make_entry("sgemm", None)
+    with pytest.raises(AssertionError):
+        model.make_entry("ozdg", 1)
+
+
+def test_conditioning_amplifies_error():
+    """The paper's §4 observation: near-singular consumers amplify the
+    emulation error.  Solve A X = B with A increasingly ill-conditioned
+    using the emulated product inside a residual check."""
+    rng = np.random.default_rng(9)
+    n = 32
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    errs = []
+    for cond in (1e1, 1e6):
+        dvals = np.logspace(0, -np.log10(cond), n)
+        a = q @ np.diag(dvals) @ q.T
+        ainv = np.linalg.inv(a)
+        prod = ref.ozaki_dgemm_ref(jnp.asarray(a), jnp.asarray(ainv), 4)
+        errs.append(float(jnp.max(jnp.abs(prod - np.eye(n)))))
+    assert errs[1] > errs[0] * 10  # ill-conditioned case is visibly worse

@@ -1,0 +1,37 @@
+//! E5 bench — the three data-movement strategies of the automatic
+//! offload tool (paper §2.1), replayed on the MuST-mini GEMM trace.
+//! Expected ordering for iterative workloads: first_touch ≤ unified ≪
+//! copy_always.  Run with `cargo bench --bench datamove`.
+
+use ozaccel::coordinator::DispatchConfig;
+use ozaccel::experiments::{datamove, run_datamove_comparison};
+use ozaccel::must::params::{mt_u56_mini, tiny_case};
+use ozaccel::ozaki::ComputeMode;
+
+fn main() {
+    ozaccel::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let case = if quick { tiny_case() } else { mt_u56_mini() };
+    let base = DispatchConfig::default();
+    for mode in [ComputeMode::Dgemm, ComputeMode::Int8 { splits: 6 }] {
+        let rows = run_datamove_comparison(&case, &base, mode).expect("datamove");
+        println!("== E5: data-movement strategies, mode={} ==", mode.name());
+        println!("{}", datamove::render(&rows));
+        let get = |n: &str| {
+            rows.iter()
+                .find(|r| r.strategy == n)
+                .map(|r| r.modeled_move_s)
+                .unwrap_or(0.0)
+        };
+        let (ft, ua, ca) = (get("first_touch"), get("unified_access"), get("copy_always"));
+        println!("unified/copy speedup: {:.1}x; first_touch/copy: {:.1}x", ca / ua, ca / ft);
+        println!(
+            "note: MuST-mini rebuilds the KKR matrix per energy point, so\n\
+             first_touch re-migrates fresh buffers and lands near unified\n\
+             access; with stable application buffers (see the\n\
+             offload_trace example and coordinator::datamove unit tests)\n\
+             first_touch pays once and wins — both regimes match Li et\n\
+             al.'s analysis.\n"
+        );
+    }
+}

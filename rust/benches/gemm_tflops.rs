@@ -1,0 +1,51 @@
+//! E3 bench — regenerates the paper's §4 DGEMM comparison:
+//! "split number 6 achieves 20.35 TFLOPS versus FP64's 62.52 TFLOPS"
+//! at 2048³ on GH200 (modelled), with measured CPU-PJRT rows for the
+//! compiled sizes.  Run with `cargo bench --bench gemm_tflops`.
+
+use ozaccel::bench::Bench;
+use ozaccel::experiments::{gemm_bench, run_gemm_bench};
+use ozaccel::runtime::Runtime;
+
+fn main() {
+    ozaccel::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let runtime = match Runtime::from_default_dir() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("note: no artifacts ({e}); model-only rows");
+            None
+        }
+    };
+    let sizes: Vec<usize> = if quick {
+        vec![128, 256, 2048]
+    } else {
+        vec![128, 256, 512, 2048]
+    };
+    let splits: Vec<u32> = if quick { vec![3, 6, 9] } else { (3..=9).collect() };
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let rows = run_gemm_bench(runtime.as_ref(), &sizes, &splits, bench).expect("bench");
+    println!("== E3: DGEMM effective TFLOPS (paper §4) ==");
+    println!("{}", gemm_bench::render(&rows));
+
+    // Paper-shape checks, printed as a verdict line.
+    let pick = |n: usize, m: &str, f: fn(&ozaccel::experiments::GemmBenchRow) -> f64| {
+        rows.iter()
+            .find(|r| r.n == n && r.mode == m)
+            .map(f)
+            .unwrap_or(0.0)
+    };
+    let native_gh = pick(2048, "dgemm", |r| r.gh200_tflops);
+    let int8_gh = pick(2048, "int8_6", |r| r.gh200_tflops);
+    println!(
+        "GH200 model at 2048^3: dgemm {native_gh:.2} TFLOPS vs int8_6 {int8_gh:.2} TFLOPS \
+         (paper: 62.52 vs 20.35) -> native wins on GH200: {}",
+        native_gh > int8_gh
+    );
+    let native_gb = pick(2048, "dgemm", |r| r.gb200_tflops);
+    let int8_gb = pick(2048, "int8_6", |r| r.gb200_tflops);
+    println!(
+        "GB200 model at 2048^3: dgemm {native_gb:.2} vs int8_6 {int8_gb:.2} -> emulation wins on GB200: {}",
+        int8_gb > native_gb
+    );
+}

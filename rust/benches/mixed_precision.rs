@@ -1,0 +1,105 @@
+//! Ablation: tunable-precision *emulation* vs classic *mixed-precision*
+//! iterative refinement (the contrast the paper's §2.2 draws).
+//!
+//! Both solve the same KKR systems.  IR (FP32 LU + FP64 refinement)
+//! modifies the solver and depends on κ(A)·ε₃₂ < 1; emulation keeps the
+//! FP64 algorithm and trades splits for accuracy transparently.
+//! Run with `cargo bench --bench mixed_precision`.
+
+use ozaccel::bench::{Bench, Table};
+use ozaccel::complex::c64;
+use ozaccel::coordinator::{DispatchConfig, Dispatcher};
+use ozaccel::linalg::{zcgesv_ir, zgemm_naive, zgetrf_blocked, zgetrs, Mat};
+use ozaccel::must::lattice::Cluster;
+use ozaccel::must::params::mt_u56_mini;
+use ozaccel::must::structure::StructureConstants;
+use ozaccel::must::tmatrix::TMatrix;
+use ozaccel::ozaki::{ozaki_zgemm, ComputeMode};
+use ozaccel::testing::Rng;
+
+fn main() {
+    ozaccel::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut p = mt_u56_mini();
+    if quick {
+        p.n_sites = 4;
+        p.lmax = 2;
+    }
+    let sc = StructureConstants::new(Cluster::fcc(p.alat, p.n_sites), p.lmax);
+    let t = TMatrix::new(&p);
+    let _dispatcher =
+        Dispatcher::new(DispatchConfig::host_only(ComputeMode::Dgemm)).expect("dispatcher");
+    let bench = Bench::quick();
+
+    let mut table = Table::new(&[
+        "z (Ry)",
+        "kappa-regime",
+        "method",
+        "rel err vs FP64 LU",
+        "time (ms)",
+        "notes",
+    ]);
+
+    let mut rng = Rng::new(2);
+    for (z, regime) in [
+        (c64(0.30, 0.40), "well-cond (arc)"),
+        (c64(p.e_res, 0.02), "ill-cond (resonance)"),
+    ] {
+        let m = sc.kkr_matrix(&t, z);
+        let rhs = sc.t_rhs(&t, z, p.n_lm());
+        let _ = &mut rng;
+
+        // FP64 reference
+        let f64_factor = zgetrf_blocked(&m, p.nb, &|a, b| zgemm_naive(a, b)).unwrap();
+        let x_ref = zgetrs(&f64_factor, &rhs).unwrap();
+        let scale = x_ref.data().iter().fold(0.0f64, |mx, v| mx.max(v.abs()));
+
+        let err_of = |x: &Mat<c64>| {
+            x.data()
+                .iter()
+                .zip(x_ref.data())
+                .fold(0.0f64, |mx, (g, w)| mx.max((*g - *w).abs()))
+                / scale
+        };
+
+        // (a) mixed-precision IR
+        let m_ir = bench.run(|| {
+            let _ = zcgesv_ir(&m, &rhs, 8).unwrap();
+        });
+        let ir = zcgesv_ir(&m, &rhs, 8).unwrap();
+        table.row(&[
+            format!("{:.3}{:+.3}i", z.re, z.im),
+            regime.into(),
+            "FP32 LU + IR".into(),
+            format!("{:.2e}", err_of(&ir.x)),
+            format!("{:.2}", m_ir.median_s * 1e3),
+            format!("iters={}, converged={}", ir.iters, ir.converged),
+        ]);
+
+        // (b) emulation at two split counts (host mirror; same integers
+        //     as the PJRT path)
+        for s in [4u32, 8] {
+            let m_oz = bench.run(|| {
+                let f = zgetrf_blocked(&m, p.nb, &|a, b| ozaki_zgemm(a, b, s)).unwrap();
+                let _ = zgetrs(&f, &rhs).unwrap();
+            });
+            let f = zgetrf_blocked(&m, p.nb, &|a, b| ozaki_zgemm(a, b, s)).unwrap();
+            let x = zgetrs(&f, &rhs).unwrap();
+            table.row(&[
+                format!("{:.3}{:+.3}i", z.re, z.im),
+                regime.into(),
+                format!("fp64_int8_{s} emulation"),
+                format!("{:.2e}", err_of(&x)),
+                format!("{:.2}", m_oz.median_s * 1e3),
+                "algorithm unchanged".into(),
+            ]);
+        }
+    }
+    println!("== mixed-precision IR vs tunable-precision emulation (KKR solves) ==");
+    println!("{}", table.render());
+    println!(
+        "reading: IR is fast and accurate while kappa*eps32 << 1 but is an\n\
+         algorithm change; emulation preserves the FP64 code path and its\n\
+         accuracy is tuned by splits alone (the paper's §2.2 distinction)."
+    );
+}

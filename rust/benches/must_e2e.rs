@@ -1,0 +1,44 @@
+//! E4 bench — the paper's §4 end-to-end MuST timing: 731.8 s (int8_6)
+//! vs 412.1 s (dgemm) on GH200.  MuST-mini runs per mode; the recorded
+//! GEMM trace is projected onto GH200 and GB200.
+//! Run with `cargo bench --bench must_e2e` (add `--quick`).
+
+use ozaccel::coordinator::{DispatchConfig, Dispatcher};
+use ozaccel::experiments::{e2e_time, run_e2e_timing};
+use ozaccel::must::params::{mt_u56_mini, tiny_case};
+use ozaccel::ozaki::ComputeMode;
+use ozaccel::perfmodel::GB200;
+
+fn main() {
+    ozaccel::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut case = if quick { tiny_case() } else { mt_u56_mini() };
+    case.iterations = 1;
+
+    let modes = [ComputeMode::Dgemm, ComputeMode::Int8 { splits: 6 }];
+
+    for gpu in ["GH200", "GB200"] {
+        let mut cfg = DispatchConfig::default();
+        if gpu == "GB200" {
+            cfg.gpu = GB200;
+        }
+        let dispatcher = Dispatcher::new(cfg).expect("dispatcher");
+        let rows = run_e2e_timing(&case, &dispatcher, &modes).expect("run");
+        println!(
+            "== E4: MuST-mini end-to-end, {gpu} model (paper §4: 731.8s vs 412.1s on GH200) =="
+        );
+        println!("{}", e2e_time::render(&rows, gpu));
+        let total = |m: &str| -> f64 {
+            rows.iter()
+                .find(|r| r.mode == m)
+                .map(|r| r.modeled_gemm_s + r.modeled_move_s)
+                .unwrap_or(0.0)
+        };
+        if total("dgemm") > 0.0 {
+            println!(
+                "{gpu} GEMM-time verdict: int8_6/dgemm = {:.2}x (paper GH200 app-level: 1.78x)\n",
+                total("int8_6") / total("dgemm")
+            );
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Microbench of the Ozaki pipeline stages on the host path: scaling,
+//! 7-bit splitting, INT8 GEMM, FP64 accumulation — the overheads the
+//! perfmodel prices against the paper's measured TFLOPS, and the §Perf
+//! evidence for where host time goes.  Run with
+//! `cargo bench --bench split_kernel`.
+
+use ozaccel::bench::{Bench, Table};
+use ozaccel::linalg::Mat;
+use ozaccel::ozaki::{int8_gemm_i32, ozaki_dgemm, scale_rows, split_scaled};
+use ozaccel::perfmodel::gemm_flops;
+use ozaccel::testing::Rng;
+
+fn main() {
+    ozaccel::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let sizes: Vec<usize> = if quick { vec![64, 128] } else { vec![64, 128, 256] };
+    let splits = 6u32;
+
+    let mut table = Table::new(&[
+        "N",
+        "scale (ms)",
+        "split x2 (ms)",
+        "int8 gemm all pairs (ms)",
+        "full ozaki_dgemm (ms)",
+        "emul GFLOP/s",
+    ]);
+    let mut rng = Rng::new(7);
+    for &n in &sizes {
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let bt = b.transposed();
+
+        let m_scale = bench.run(|| {
+            let _ = scale_rows(&a);
+        });
+        let (a_scaled, _) = scale_rows(&a);
+        let (b_scaled, _) = scale_rows(&bt);
+        let m_split = bench.run(|| {
+            let _ = split_scaled(&a_scaled, splits);
+            let _ = split_scaled(&b_scaled, splits);
+        });
+        let sa = split_scaled(&a_scaled, splits);
+        let sb = split_scaled(&b_scaled, splits);
+        let m_gemm = bench.run(|| {
+            for (k, pa) in sa.iter().enumerate() {
+                for (l, pb) in sb.iter().enumerate() {
+                    if k + l < splits as usize {
+                        let _ = int8_gemm_i32(pa, pb).unwrap();
+                    }
+                }
+            }
+        });
+        let m_full = bench.run(|| {
+            let _ = ozaki_dgemm(&a, &b, splits).unwrap();
+        });
+        table.row(&[
+            n.to_string(),
+            format!("{:.3}", m_scale.median_s * 1e3),
+            format!("{:.3}", m_split.median_s * 1e3),
+            format!("{:.3}", m_gemm.median_s * 1e3),
+            format!("{:.3}", m_full.median_s * 1e3),
+            format!("{:.2}", gemm_flops(n, n, n) / m_full.median_s / 1e9),
+        ]);
+    }
+    println!("== split/accumulate overhead breakdown (host Ozaki, s={splits}) ==");
+    println!("{}", table.render());
+}

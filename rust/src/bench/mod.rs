@@ -1,0 +1,192 @@
+//! Mini-criterion: the measurement harness used by `cargo bench`
+//! (criterion itself is unavailable offline — DESIGN.md §Substitutions).
+//!
+//! Methodology matches criterion's core loop: warm up, pick an
+//! iteration count from the warmup rate, take `samples` timed batches,
+//! and report median ± MAD.  Throughput helpers convert to the units
+//! the paper's tables use (TFLOPS, GiB/s).
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Median absolute deviation, seconds.
+    pub mad_s: f64,
+    /// Iterations per sample batch.
+    pub iters_per_sample: u64,
+    /// Number of sample batches.
+    pub samples: usize,
+}
+
+impl Measurement {
+    /// FLOP/s given work per iteration.
+    pub fn flops(&self, flop_per_iter: f64) -> f64 {
+        flop_per_iter / self.median_s
+    }
+
+    /// TFLOPS given work per iteration.
+    pub fn tflops(&self, flop_per_iter: f64) -> f64 {
+        self.flops(flop_per_iter) / 1e12
+    }
+}
+
+/// Benchmark runner with a fixed time budget per benchmark.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    /// Warmup wall time, seconds.
+    pub warmup_s: f64,
+    /// Measurement wall time budget, seconds.
+    pub measure_s: f64,
+    /// Sample batches to split the budget into.
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_s: 0.5,
+            measure_s: 2.0,
+            samples: 11,
+        }
+    }
+}
+
+impl Bench {
+    /// Quick profile for slow end-to-end benches.
+    pub fn quick() -> Self {
+        Bench {
+            warmup_s: 0.1,
+            measure_s: 0.6,
+            samples: 5,
+        }
+    }
+
+    /// Run `f` repeatedly and measure.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Measurement {
+        // Warmup + rate estimate.
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed().as_secs_f64() < self.warmup_s || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+        }
+        let rate = warm_iters as f64 / t0.elapsed().as_secs_f64();
+        let iters_per_sample =
+            ((rate * self.measure_s / self.samples as f64).ceil() as u64).max(1);
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            times.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Measurement {
+            median_s: median,
+            mad_s: devs[devs.len() / 2],
+            iters_per_sample,
+            samples: self.samples,
+        }
+    }
+}
+
+/// Markdown table printer for bench results.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as a GitHub-flavoured markdown table.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                s.push_str(&format!(" {c:>w$} |"));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&fmt_row(&self.headers, &width));
+        out.push('|');
+        for w in &width {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_sleep() {
+        let b = Bench {
+            warmup_s: 0.02,
+            measure_s: 0.1,
+            samples: 3,
+        };
+        let m = b.run(|| std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(m.median_s > 1.5e-3 && m.median_s < 20e-3, "{}", m.median_s);
+        assert!(m.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn throughput_conversion() {
+        let m = Measurement {
+            median_s: 1e-3,
+            mad_s: 0.0,
+            iters_per_sample: 1,
+            samples: 1,
+        };
+        assert!((m.tflops(2e9) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["mode", "TFLOPS"]);
+        t.row(&["dgemm".into(), "62.52".into()]);
+        t.row(&["int8_6".into(), "20.35".into()]);
+        let s = t.render();
+        assert!(s.contains("dgemm |"));
+        assert!(s.lines().count() == 4);
+        let lens: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "aligned: {s}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Command-line parsing (clap is unavailable offline — DESIGN.md
+//! §Substitutions): subcommand + `--key value` flags.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub subcommand: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// Parse `args` (without argv[0]).
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        let mut cli = Cli::default();
+        let mut it = args.iter().peekable();
+        match it.next() {
+            Some(cmd) if !cmd.starts_with('-') => cli.subcommand = cmd.clone(),
+            Some(cmd) => {
+                return Err(Error::Config(format!(
+                    "expected a subcommand before flags, got {cmd:?}"
+                )))
+            }
+            None => cli.subcommand = "help".into(),
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    cli.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    cli.flags.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    cli.flags.insert(name.to_string(), "true".into());
+                }
+            } else {
+                cli.positional.push(a.clone());
+            }
+        }
+        Ok(cli)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Cli> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| Error::Config(format!("bad value for --{name}: {v:?}"))),
+        }
+    }
+
+    /// Comma-separated u32 list flag.
+    pub fn flag_u32_list(&self, name: &str) -> Result<Option<Vec<u32>>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<u32>()
+                        .map_err(|_| Error::Config(format!("bad --{name}: {v:?}")))
+                })
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        // NB: a bare boolean flag greedily consumes a following bare
+        // word, so positionals go before flags (or use --flag=true).
+        let c = Cli::parse(&args(&[
+            "table1",
+            "out.csv",
+            "--mode",
+            "fp64_int8_6",
+            "--splits=3,5,7",
+            "--force-host",
+        ]))
+        .unwrap();
+        assert_eq!(c.subcommand, "table1");
+        assert_eq!(c.flag("mode"), Some("fp64_int8_6"));
+        assert_eq!(c.flag_u32_list("splits").unwrap().unwrap(), vec![3, 5, 7]);
+        assert!(c.flag_bool("force-host"));
+        assert_eq!(c.positional, vec!["out.csv"]);
+        // explicit = form works anywhere
+        let c2 = Cli::parse(&args(&["x", "--force-host=true", "pos"])).unwrap();
+        assert!(c2.flag_bool("force-host"));
+        assert_eq!(c2.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn empty_means_help() {
+        let c = Cli::parse(&[]).unwrap();
+        assert_eq!(c.subcommand, "help");
+    }
+
+    #[test]
+    fn flag_before_subcommand_rejected() {
+        assert!(Cli::parse(&args(&["--mode", "dgemm"])).is_err());
+    }
+
+    #[test]
+    fn typed_flag_errors() {
+        let c = Cli::parse(&args(&["x", "--n", "abc"])).unwrap();
+        assert!(c.flag_parse::<usize>("n").is_err());
+        assert!(c.flag_u32_list("n").is_err());
+        let ok = Cli::parse(&args(&["x", "--n", "12"])).unwrap();
+        assert_eq!(ok.flag_parse::<usize>("n").unwrap(), Some(12));
+    }
+}

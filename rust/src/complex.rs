@@ -1,0 +1,436 @@
+//! Double-precision complex arithmetic built from scratch.
+//!
+//! `num-complex` is not available in this offline environment (DESIGN.md
+//! §Substitutions), and MuST-mini's multiple-scattering theory is complex
+//! end to end, so the crate carries its own `c64`.  The layout is
+//! `repr(C)` `(re, im)` so a `&[c64]` can be reinterpreted as interleaved
+//! `&[f64]` when marshalling to the runtime.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Complex number with `f64` components.
+#[allow(non_camel_case_types)]
+#[derive(Clone, Copy, PartialEq, Default)]
+#[repr(C)]
+pub struct c64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+/// Shorthand constructor.
+#[inline]
+pub const fn c64(re: f64, im: f64) -> c64 {
+    c64 { re, im }
+}
+
+impl c64 {
+    pub const ZERO: c64 = c64(0.0, 0.0);
+    pub const ONE: c64 = c64(1.0, 0.0);
+    pub const I: c64 = c64(0.0, 1.0);
+
+    #[inline]
+    pub const fn new(re: f64, im: f64) -> Self {
+        c64 { re, im }
+    }
+
+    /// Purely real value.
+    #[inline]
+    pub const fn real(re: f64) -> Self {
+        c64 { re, im: 0.0 }
+    }
+
+    /// Complex conjugate.
+    #[inline]
+    pub fn conj(self) -> Self {
+        c64(self.re, -self.im)
+    }
+
+    /// Squared magnitude |z|^2 (no sqrt).
+    #[inline]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    /// Magnitude |z|, overflow-safe via `hypot`.
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    /// Argument in (-pi, pi].
+    #[inline]
+    pub fn arg(self) -> f64 {
+        self.im.atan2(self.re)
+    }
+
+    /// Multiplicative inverse, overflow-safe (Smith's algorithm).
+    pub fn inv(self) -> Self {
+        let (a, b) = (self.re, self.im);
+        if a.abs() >= b.abs() {
+            let r = b / a;
+            let d = a + b * r;
+            c64(1.0 / d, -r / d)
+        } else {
+            let r = a / b;
+            let d = a * r + b;
+            c64(r / d, -1.0 / d)
+        }
+    }
+
+    /// Principal square root (branch cut along the negative real axis).
+    pub fn sqrt(self) -> Self {
+        if self.re == 0.0 && self.im == 0.0 {
+            return c64::ZERO;
+        }
+        let m = self.abs();
+        let re = ((m + self.re) / 2.0).sqrt();
+        let im_mag = ((m - self.re) / 2.0).sqrt();
+        c64(re, if self.im >= 0.0 { im_mag } else { -im_mag })
+    }
+
+    /// Complex exponential.
+    pub fn exp(self) -> Self {
+        let r = self.re.exp();
+        c64(r * self.im.cos(), r * self.im.sin())
+    }
+
+    /// Principal natural logarithm.
+    pub fn ln(self) -> Self {
+        c64(self.abs().ln(), self.arg())
+    }
+
+    /// Complex power z^w = exp(w ln z).
+    pub fn powc(self, w: c64) -> Self {
+        (self.ln() * w).exp()
+    }
+
+    /// Integer power by repeated squaring (exact op-count, no ln branch
+    /// issues for negative reals).
+    pub fn powi(self, mut n: i32) -> Self {
+        if n == 0 {
+            return c64::ONE;
+        }
+        let invert = n < 0;
+        if invert {
+            n = -n;
+        }
+        let mut base = self;
+        let mut acc = c64::ONE;
+        let mut e = n as u32;
+        while e > 0 {
+            if e & 1 == 1 {
+                acc *= base;
+            }
+            base *= base;
+            e >>= 1;
+        }
+        if invert {
+            acc.inv()
+        } else {
+            acc
+        }
+    }
+
+    /// Complex sine.
+    pub fn sin(self) -> Self {
+        c64(
+            self.re.sin() * self.im.cosh(),
+            self.re.cos() * self.im.sinh(),
+        )
+    }
+
+    /// Complex cosine.
+    pub fn cos(self) -> Self {
+        c64(
+            self.re.cos() * self.im.cosh(),
+            -self.re.sin() * self.im.sinh(),
+        )
+    }
+
+    /// True if either component is NaN.
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.re.is_nan() || self.im.is_nan()
+    }
+
+    /// True if both components are finite.
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+
+    /// Scale by a real factor.
+    #[inline]
+    pub fn scale(self, s: f64) -> Self {
+        c64(self.re * s, self.im * s)
+    }
+}
+
+impl fmt::Debug for c64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({:e}{:+e}i)", self.re, self.im)
+    }
+}
+
+impl fmt::Display for c64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{:+}i", self.re, self.im)
+    }
+}
+
+impl From<f64> for c64 {
+    #[inline]
+    fn from(re: f64) -> Self {
+        c64(re, 0.0)
+    }
+}
+
+impl Neg for c64 {
+    type Output = c64;
+    #[inline]
+    fn neg(self) -> c64 {
+        c64(-self.re, -self.im)
+    }
+}
+
+impl Add for c64 {
+    type Output = c64;
+    #[inline]
+    fn add(self, o: c64) -> c64 {
+        c64(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl Sub for c64 {
+    type Output = c64;
+    #[inline]
+    fn sub(self, o: c64) -> c64 {
+        c64(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for c64 {
+    type Output = c64;
+    #[inline]
+    fn mul(self, o: c64) -> c64 {
+        c64(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Div for c64 {
+    type Output = c64;
+    #[inline]
+    fn div(self, o: c64) -> c64 {
+        self * o.inv()
+    }
+}
+
+impl Add<f64> for c64 {
+    type Output = c64;
+    #[inline]
+    fn add(self, o: f64) -> c64 {
+        c64(self.re + o, self.im)
+    }
+}
+
+impl Sub<f64> for c64 {
+    type Output = c64;
+    #[inline]
+    fn sub(self, o: f64) -> c64 {
+        c64(self.re - o, self.im)
+    }
+}
+
+impl Mul<f64> for c64 {
+    type Output = c64;
+    #[inline]
+    fn mul(self, o: f64) -> c64 {
+        c64(self.re * o, self.im * o)
+    }
+}
+
+impl Div<f64> for c64 {
+    type Output = c64;
+    #[inline]
+    fn div(self, o: f64) -> c64 {
+        c64(self.re / o, self.im / o)
+    }
+}
+
+impl Add<c64> for f64 {
+    type Output = c64;
+    #[inline]
+    fn add(self, o: c64) -> c64 {
+        c64(self + o.re, o.im)
+    }
+}
+
+impl Sub<c64> for f64 {
+    type Output = c64;
+    #[inline]
+    fn sub(self, o: c64) -> c64 {
+        c64(self - o.re, -o.im)
+    }
+}
+
+impl Mul<c64> for f64 {
+    type Output = c64;
+    #[inline]
+    fn mul(self, o: c64) -> c64 {
+        o * self
+    }
+}
+
+impl Div<c64> for f64 {
+    type Output = c64;
+    #[inline]
+    fn div(self, o: c64) -> c64 {
+        c64::real(self) / o
+    }
+}
+
+impl AddAssign for c64 {
+    #[inline]
+    fn add_assign(&mut self, o: c64) {
+        *self = *self + o;
+    }
+}
+
+impl SubAssign for c64 {
+    #[inline]
+    fn sub_assign(&mut self, o: c64) {
+        *self = *self - o;
+    }
+}
+
+impl MulAssign for c64 {
+    #[inline]
+    fn mul_assign(&mut self, o: c64) {
+        *self = *self * o;
+    }
+}
+
+impl DivAssign for c64 {
+    #[inline]
+    fn div_assign(&mut self, o: c64) {
+        *self = *self / o;
+    }
+}
+
+impl Sum for c64 {
+    fn sum<I: Iterator<Item = c64>>(iter: I) -> c64 {
+        iter.fold(c64::ZERO, |a, b| a + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: c64, b: c64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn arithmetic_identities() {
+        let z = c64(3.0, -4.0);
+        let w = c64(-1.5, 2.5);
+        assert_eq!(z + w - w, z);
+        assert!(close(z * w / w, z, 1e-15));
+        assert_eq!(-(-z), z);
+        assert_eq!(z * c64::ONE, z);
+        assert_eq!(z + c64::ZERO, z);
+    }
+
+    #[test]
+    fn abs_and_norm() {
+        let z = c64(3.0, 4.0);
+        assert_eq!(z.abs(), 5.0);
+        assert_eq!(z.norm_sqr(), 25.0);
+        // hypot path avoids overflow
+        let big = c64(1e308, 1e308);
+        assert!(big.abs().is_finite());
+    }
+
+    #[test]
+    fn conj_properties() {
+        let z = c64(1.2, -0.7);
+        assert_eq!(z.conj().conj(), z);
+        let zz = z * z.conj();
+        assert!((zz.im).abs() < 1e-16);
+        assert!((zz.re - z.norm_sqr()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn inv_is_reciprocal() {
+        for &z in &[c64(2.0, 0.0), c64(0.0, -3.0), c64(1e-200, 4.0), c64(5.0, 1e200)] {
+            assert!(close(z * z.inv(), c64::ONE, 1e-14), "{z:?}");
+        }
+    }
+
+    #[test]
+    fn sqrt_branch() {
+        assert!(close(c64(-1.0, 0.0).sqrt(), c64::I, 1e-15));
+        let z = c64(-2.0, -1e-30);
+        assert!(z.sqrt().im < 0.0); // just below the cut -> negative imag
+        for &z in &[c64(2.0, 3.0), c64(-5.0, 0.1), c64(0.0, -2.0)] {
+            let r = z.sqrt();
+            assert!(close(r * r, z, 1e-14));
+            assert!(r.re >= 0.0);
+        }
+    }
+
+    #[test]
+    fn exp_ln_roundtrip() {
+        let z = c64(0.3, -1.1);
+        assert!(close(z.exp().ln(), z, 1e-14));
+        // Euler
+        assert!(close(c64(0.0, std::f64::consts::PI).exp(), c64(-1.0, 0.0), 1e-15));
+    }
+
+    #[test]
+    fn trig_identity() {
+        let z = c64(0.7, 0.4);
+        let s = z.sin();
+        let c = z.cos();
+        assert!(close(s * s + c * c, c64::ONE, 1e-14));
+    }
+
+    #[test]
+    fn powi_matches_repeated_mul() {
+        let z = c64(1.1, -0.3);
+        let mut acc = c64::ONE;
+        for n in 0..8 {
+            assert!(close(z.powi(n), acc, 1e-13));
+            acc *= z;
+        }
+        assert!(close(z.powi(-3) * z.powi(3), c64::ONE, 1e-13));
+    }
+
+    #[test]
+    fn powc_consistency() {
+        let z = c64(2.0, 1.0);
+        assert!(close(z.powc(c64(2.0, 0.0)), z * z, 1e-13));
+    }
+
+    #[test]
+    fn sum_iterator() {
+        let v = vec![c64(1.0, 2.0); 10];
+        let s: c64 = v.iter().copied().sum();
+        assert_eq!(s, c64(10.0, 20.0));
+    }
+
+    #[test]
+    fn layout_is_interleaved_f64() {
+        assert_eq!(std::mem::size_of::<c64>(), 16);
+        let v = [c64(1.0, 2.0), c64(3.0, 4.0)];
+        let f: &[f64] =
+            unsafe { std::slice::from_raw_parts(v.as_ptr() as *const f64, 4) };
+        assert_eq!(f, &[1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Run configuration: a TOML-subset parser (serde/toml are unavailable
+//! offline — DESIGN.md §Substitutions) plus the typed run config with
+//! environment overrides.
+
+mod toml_mini;
+
+pub use toml_mini::{parse_toml, TomlValue};
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::coordinator::{DataMoveStrategy, DispatchConfig, RoutingPolicy};
+use crate::error::{Error, Result};
+use crate::must::params::{mt_u56_mini, tiny_case, CaseParams};
+use crate::ozaki::ComputeMode;
+use crate::perfmodel::{GB200, GH200};
+
+/// Full run configuration for the `ozaccel` binary.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dispatch: DispatchConfig,
+    pub case: CaseParams,
+    /// Modes swept by `table1` (dgemm is always included as reference).
+    pub sweep_splits: Vec<u32>,
+    pub output_dir: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dispatch: DispatchConfig::default(),
+            case: mt_u56_mini(),
+            sweep_splits: (3..=9).collect(),
+            output_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML file, then apply environment overrides
+    /// (`OZIMMU_COMPUTE_MODE`, `OZACCEL_ARTIFACTS`).
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut cfg = Self::from_toml(&text)?;
+        cfg.apply_env()?;
+        Ok(cfg)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let table = parse_toml(text)?;
+        let mut cfg = RunConfig::default();
+        if let Some(v) = lookup(&table, "run.case") {
+            cfg.case = match v.as_str()? {
+                "mt-u56-mini" => mt_u56_mini(),
+                "tiny" => tiny_case(),
+                other => return Err(Error::Config(format!("unknown case {other:?}"))),
+            };
+        }
+        if let Some(v) = lookup(&table, "run.mode") {
+            cfg.dispatch.mode = ComputeMode::parse(v.as_str()?)?;
+        }
+        if let Some(v) = lookup(&table, "run.strategy") {
+            cfg.dispatch.strategy = DataMoveStrategy::parse(v.as_str()?)
+                .ok_or_else(|| Error::Config(format!("bad strategy {v:?}")))?;
+        }
+        if let Some(v) = lookup(&table, "run.gpu") {
+            cfg.dispatch.gpu = match v.as_str()? {
+                "gh200" | "GH200" => GH200,
+                "gb200" | "GB200" => GB200,
+                other => return Err(Error::Config(format!("unknown gpu {other:?}"))),
+            };
+        }
+        if let Some(v) = lookup(&table, "run.force_host") {
+            cfg.dispatch.policy = RoutingPolicy {
+                force_host: v.as_bool()?,
+                ..cfg.dispatch.policy
+            };
+        }
+        if let Some(v) = lookup(&table, "run.offload_min_flops") {
+            cfg.dispatch.policy = RoutingPolicy {
+                min_flops: v.as_f64()?,
+                ..cfg.dispatch.policy
+            };
+        }
+        if let Some(v) = lookup(&table, "run.artifacts") {
+            cfg.dispatch.artifact_dir = Some(PathBuf::from(v.as_str()?));
+        }
+        if let Some(v) = lookup(&table, "run.output_dir") {
+            cfg.output_dir = PathBuf::from(v.as_str()?);
+        }
+        if let Some(v) = lookup(&table, "adaptive.target") {
+            let mut pol = cfg.dispatch.adaptive.unwrap_or_default();
+            pol.target = v.as_f64()?;
+            cfg.dispatch.adaptive = Some(pol);
+        }
+        if let Some(v) = lookup(&table, "sweep.splits") {
+            cfg.sweep_splits = v
+                .as_array()?
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as u32))
+                .collect::<Result<_>>()?;
+        }
+        for key in ["case.n_contour", "case.n_sites", "case.n_dos", "case.iterations"] {
+            if let Some(v) = lookup(&table, key) {
+                let n = v.as_f64()? as usize;
+                match key {
+                    "case.n_contour" => cfg.case.n_contour = n,
+                    "case.n_sites" => cfg.case.n_sites = n,
+                    "case.n_dos" => cfg.case.n_dos = n,
+                    "case.iterations" => cfg.case.iterations = n,
+                    _ => unreachable!(),
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Apply the paper's env-var interface on top.
+    pub fn apply_env(&mut self) -> Result<()> {
+        if std::env::var("OZIMMU_COMPUTE_MODE").is_ok() {
+            self.dispatch.mode = ComputeMode::from_env()?;
+        }
+        Ok(())
+    }
+}
+
+fn lookup<'a>(table: &'a BTreeMap<String, TomlValue>, path: &str) -> Option<&'a TomlValue> {
+    table.get(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Table-1 run
+[run]
+case = "tiny"
+mode = "fp64_int8_6"
+strategy = "first_touch"
+gpu = "gb200"
+force_host = true
+
+[sweep]
+splits = [3, 5, 7]
+
+[adaptive]
+target = 1e-8
+
+[case]
+n_contour = 12
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let cfg = RunConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.dispatch.mode, ComputeMode::Int8 { splits: 6 });
+        assert_eq!(cfg.dispatch.strategy, DataMoveStrategy::FirstTouchMigrate);
+        assert_eq!(cfg.dispatch.gpu.name, "GB200");
+        assert!(cfg.dispatch.policy.force_host);
+        assert_eq!(cfg.sweep_splits, vec![3, 5, 7]);
+        assert_eq!(cfg.case.n_contour, 12);
+        assert!((cfg.dispatch.adaptive.unwrap().target - 1e-8).abs() < 1e-20);
+    }
+
+    #[test]
+    fn defaults_without_file() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.dispatch.mode, ComputeMode::Dgemm);
+        assert_eq!(cfg.case.dim(), 256);
+        assert_eq!(cfg.sweep_splits, (3..=9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(RunConfig::from_toml("[run]\nmode = \"fp32\"\n").is_err());
+        assert!(RunConfig::from_toml("[run]\ncase = \"nope\"\n").is_err());
+        assert!(RunConfig::from_toml("[run]\ngpu = \"h100\"\n").is_err());
+    }
+
+    #[test]
+    fn env_override_wins() {
+        // NB: not parallel-safe w.r.t. other env tests; uses a unique var
+        std::env::set_var("OZIMMU_COMPUTE_MODE", "fp64_int8_9");
+        let mut cfg = RunConfig::from_toml("[run]\nmode = \"dgemm\"\n").unwrap();
+        cfg.apply_env().unwrap();
+        assert_eq!(cfg.dispatch.mode, ComputeMode::Int8 { splits: 9 });
+        std::env::remove_var("OZIMMU_COMPUTE_MODE");
+    }
+}

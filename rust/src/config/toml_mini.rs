@@ -1,0 +1,215 @@
+//! Minimal TOML-subset parser — sections, string/number/bool/array
+//! values, comments.  Keys are flattened to `section.key`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => Err(Error::Config(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Num(n) => Ok(*n),
+            other => Err(Error::Config(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(Error::Config(format!("expected bool, got {other:?}"))),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Ok(a),
+            other => Err(Error::Config(format!("expected array, got {other:?}"))),
+        }
+    }
+}
+
+/// Parse TOML-subset text into a flat `section.key -> value` map.
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(Error::Config(format!("line {}: bad section", lineno + 1)));
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(Error::Config(format!("line {}: expected key = value", lineno + 1)));
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| Error::Config(format!("line {}: {e}", lineno + 1)))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.insert(full, value);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` outside of quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    let s = s.trim();
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(format!("unterminated string: {s}"));
+        }
+        return Ok(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(format!("unterminated array: {s}"));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| format!("cannot parse value: {s}"))
+}
+
+/// Split on commas that are not nested inside brackets/strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        parts.push(&s[start..]);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let t = parse_toml(
+            "top = 1\n[a]\nx = \"hi\"\ny = 2.5\nz = true\n[b]\nx = -3\n",
+        )
+        .unwrap();
+        assert_eq!(t["top"], TomlValue::Num(1.0));
+        assert_eq!(t["a.x"], TomlValue::Str("hi".into()));
+        assert_eq!(t["a.y"], TomlValue::Num(2.5));
+        assert_eq!(t["a.z"], TomlValue::Bool(true));
+        assert_eq!(t["b.x"], TomlValue::Num(-3.0));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let t = parse_toml("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nempty = []\n").unwrap();
+        assert_eq!(
+            t["xs"],
+            TomlValue::Array(vec![
+                TomlValue::Num(1.0),
+                TomlValue::Num(2.0),
+                TomlValue::Num(3.0)
+            ])
+        );
+        assert_eq!(t["ys"].as_array().unwrap().len(), 2);
+        assert_eq!(t["empty"].as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let t = parse_toml("a = 1 # trailing\n# full line\nb = \"x#y\"\n").unwrap();
+        assert_eq!(t["a"], TomlValue::Num(1.0));
+        assert_eq!(t["b"], TomlValue::Str("x#y".into()));
+    }
+
+    #[test]
+    fn scientific_and_underscore_numbers() {
+        let t = parse_toml("a = 1e-9\nb = 1_000_000\n").unwrap();
+        assert_eq!(t["a"], TomlValue::Num(1e-9));
+        assert_eq!(t["b"], TomlValue::Num(1e6));
+    }
+
+    #[test]
+    fn errors_on_malformed() {
+        assert!(parse_toml("[unclosed\n").is_err());
+        assert!(parse_toml("novalue\n").is_err());
+        assert!(parse_toml("x = [1, 2\n").is_err());
+        assert!(parse_toml("x = \"open\n").is_err());
+        assert!(parse_toml("x = wat\n").is_err());
+    }
+
+    #[test]
+    fn type_accessors_error_cleanly() {
+        let t = parse_toml("x = 1\n").unwrap();
+        assert!(t["x"].as_str().is_err());
+        assert!(t["x"].as_bool().is_err());
+        assert!(t["x"].as_array().is_err());
+        assert_eq!(t["x"].as_f64().unwrap(), 1.0);
+    }
+}

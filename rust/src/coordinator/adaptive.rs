@@ -1,0 +1,92 @@
+//! Tunable / adaptive precision policy — the paper's §4 proposal
+//! ("dynamically adjusting the split number in that region") made
+//! concrete.
+//!
+//! Given a target relative accuracy for the *solved* system and an
+//! estimate of the consumer's condition number, invert the a-priori
+//! Ozaki error bound to pick the cheapest split count that still meets
+//! the target.  Well-conditioned energy points get few splits; the
+//! resonance region gets many — accuracy where it matters, speed where
+//! it doesn't.
+
+use crate::ozaki::{required_splits, ComputeMode};
+
+/// Adaptive split-count selection.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptivePolicy {
+    /// Target relative accuracy of downstream results.
+    pub target: f64,
+    /// Floor for the split count (never go below; ozIMMU minimum is 3).
+    pub min_splits: u32,
+    /// Ceiling (cost guard; ozIMMU maximum is 18).
+    pub max_splits: u32,
+}
+
+impl Default for AdaptivePolicy {
+    fn default() -> Self {
+        AdaptivePolicy {
+            target: 1e-9,
+            min_splits: 3,
+            max_splits: 18,
+        }
+    }
+}
+
+impl AdaptivePolicy {
+    /// Pick a compute mode for a GEMM of contraction size `k_dim` whose
+    /// result feeds a consumer of condition number `kappa`.
+    pub fn mode_for(&self, k_dim: usize, kappa: f64) -> ComputeMode {
+        let s = required_splits(self.target, k_dim, kappa)
+            .clamp(self.min_splits, self.max_splits);
+        ComputeMode::Int8 { splits: s }
+    }
+
+    /// Split count only (convenience for reports).
+    pub fn splits_for(&self, k_dim: usize, kappa: f64) -> u32 {
+        match self.mode_for(k_dim, kappa) {
+            ComputeMode::Int8 { splits } => splits,
+            ComputeMode::Dgemm => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn well_conditioned_gets_few_splits() {
+        let p = AdaptivePolicy {
+            target: 1e-6,
+            ..Default::default()
+        };
+        let s_well = p.splits_for(256, 1.0);
+        let s_ill = p.splits_for(256, 1e8);
+        assert!(s_well < s_ill, "{s_well} !< {s_ill}");
+        assert!(s_well >= 3);
+        assert!(s_ill <= 18);
+    }
+
+    #[test]
+    fn tighter_target_needs_more_splits() {
+        let loose = AdaptivePolicy { target: 1e-4, ..Default::default() };
+        let tight = AdaptivePolicy { target: 1e-12, ..Default::default() };
+        assert!(loose.splits_for(256, 10.0) < tight.splits_for(256, 10.0));
+    }
+
+    #[test]
+    fn clamping_respected() {
+        let p = AdaptivePolicy {
+            target: 1e-30,
+            min_splits: 4,
+            max_splits: 9,
+        };
+        assert_eq!(p.splits_for(2048, 1e12), 9);
+        let p2 = AdaptivePolicy {
+            target: 1.0,
+            min_splits: 5,
+            max_splits: 9,
+        };
+        assert_eq!(p2.splits_for(16, 1.0), 5);
+    }
+}

@@ -1,0 +1,125 @@
+//! Per-call-site profiling — the PEAK profiler analogue.
+//!
+//! SCILIB-Accel attributes every intercepted BLAS call to its caller
+//! (return address) so that routing decisions can be made per site; we
+//! use `#[track_caller]` source locations, which identify call sites
+//! just as stably without binary patching.
+
+use std::collections::BTreeMap;
+
+/// Identity of one BLAS call site (source location).
+pub type CallSiteId = &'static str;
+
+/// Accumulated statistics for one call site.
+#[derive(Clone, Debug, Default)]
+pub struct CallSiteStats {
+    pub calls: u64,
+    pub flops: f64,
+    pub offloaded: u64,
+    pub host: u64,
+    /// Wall time measured around the GEMM itself, seconds.
+    pub measured_s: f64,
+    /// Simulated GPU compute seconds (perfmodel).
+    pub modeled_gpu_s: f64,
+    /// Simulated data-movement seconds (datamove).
+    pub modeled_move_s: f64,
+}
+
+/// Registry of every call site seen this run.
+#[derive(Clone, Debug, Default)]
+pub struct SiteRegistry {
+    sites: BTreeMap<CallSiteId, CallSiteStats>,
+}
+
+impl SiteRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one call.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &mut self,
+        site: CallSiteId,
+        flops: f64,
+        offloaded: bool,
+        measured_s: f64,
+        modeled_gpu_s: f64,
+        modeled_move_s: f64,
+    ) {
+        let e = self.sites.entry(site).or_default();
+        e.calls += 1;
+        e.flops += flops;
+        if offloaded {
+            e.offloaded += 1;
+        } else {
+            e.host += 1;
+        }
+        e.measured_s += measured_s;
+        e.modeled_gpu_s += modeled_gpu_s;
+        e.modeled_move_s += modeled_move_s;
+    }
+
+    /// Iterate sites (sorted by id for stable reports).
+    pub fn iter(&self) -> impl Iterator<Item = (&CallSiteId, &CallSiteStats)> {
+        self.sites.iter()
+    }
+
+    pub fn get(&self, site: CallSiteId) -> Option<&CallSiteStats> {
+        self.sites.get(site)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sites.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    /// Totals across all sites.
+    pub fn totals(&self) -> CallSiteStats {
+        let mut t = CallSiteStats::default();
+        for s in self.sites.values() {
+            t.calls += s.calls;
+            t.flops += s.flops;
+            t.offloaded += s.offloaded;
+            t.host += s.host;
+            t.measured_s += s.measured_s;
+            t.modeled_gpu_s += s.modeled_gpu_s;
+            t.modeled_move_s += s.modeled_move_s;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_totals() {
+        let mut r = SiteRegistry::new();
+        r.record("a.rs:1", 100.0, true, 1e-3, 2e-3, 3e-4);
+        r.record("a.rs:1", 100.0, false, 1e-3, 0.0, 0.0);
+        r.record("b.rs:9", 50.0, true, 5e-4, 1e-3, 1e-4);
+        assert_eq!(r.len(), 2);
+        let a = r.get("a.rs:1").unwrap();
+        assert_eq!(a.calls, 2);
+        assert_eq!(a.offloaded, 1);
+        assert_eq!(a.host, 1);
+        let t = r.totals();
+        assert_eq!(t.calls, 3);
+        assert!((t.flops - 250.0).abs() < 1e-12);
+        assert!((t.modeled_gpu_s - 3e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iteration_is_sorted() {
+        let mut r = SiteRegistry::new();
+        r.record("z.rs:5", 1.0, true, 0.0, 0.0, 0.0);
+        r.record("a.rs:2", 1.0, true, 0.0, 0.0, 0.0);
+        let ids: Vec<_> = r.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec!["a.rs:2", "z.rs:5"]);
+    }
+}

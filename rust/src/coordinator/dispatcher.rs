@@ -1,0 +1,385 @@
+//! The dispatch seam: every BLAS call in the application flows through
+//! here, gets profiled per call site, routed host-or-device, priced by
+//! the data-movement model, and executed in the configured compute mode.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use log::{debug, warn};
+
+use super::adaptive::AdaptivePolicy;
+use super::callsite::SiteRegistry;
+use super::datamove::{DataMoveStrategy, MemModel};
+use super::policy::{OffloadDecision, RoutingPolicy};
+use super::stats::Report;
+use crate::complex::c64;
+use crate::error::Result;
+use crate::linalg::{self, Mat, ZMat};
+use crate::ozaki::{self, ComputeMode};
+use crate::perfmodel::{emulated_gemm_time, gemm_flops, native_gemm_time, GpuSpec, GH200};
+use crate::runtime::{ArtifactKind, Runtime};
+
+/// Dispatcher configuration (the CLI / config-file surface).
+#[derive(Clone, Debug)]
+pub struct DispatchConfig {
+    /// Compute mode (`OZIMMU_COMPUTE_MODE`).
+    pub mode: ComputeMode,
+    /// Routing policy (offload threshold).
+    pub policy: RoutingPolicy,
+    /// Data-movement strategy to model.
+    pub strategy: DataMoveStrategy,
+    /// GPU to model data movement / kernel cost against.
+    pub gpu: GpuSpec,
+    /// Artifact directory override (None = env / repo discovery).
+    pub artifact_dir: Option<PathBuf>,
+    /// Adaptive-precision policy (None = fixed mode).
+    pub adaptive: Option<AdaptivePolicy>,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        DispatchConfig {
+            mode: ComputeMode::Dgemm,
+            policy: RoutingPolicy::default(),
+            strategy: DataMoveStrategy::FirstTouchMigrate,
+            gpu: GH200,
+            artifact_dir: None,
+            adaptive: None,
+        }
+    }
+}
+
+impl DispatchConfig {
+    /// Host-only config (no PJRT): useful for tests and pure-CPU runs.
+    pub fn host_only(mode: ComputeMode) -> Self {
+        DispatchConfig {
+            mode,
+            policy: RoutingPolicy {
+                force_host: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+}
+
+/// The automatic-offload coordinator.
+pub struct Dispatcher {
+    cfg: DispatchConfig,
+    runtime: Option<Runtime>,
+    sites: Mutex<SiteRegistry>,
+    mem: Mutex<MemModel>,
+}
+
+impl Dispatcher {
+    /// Build a dispatcher; connects to the PJRT runtime unless the
+    /// policy forces host execution.
+    pub fn new(cfg: DispatchConfig) -> Result<Self> {
+        let runtime = if cfg.policy.force_host {
+            None
+        } else {
+            let rt = match &cfg.artifact_dir {
+                Some(dir) => Runtime::new(dir.clone()),
+                None => Runtime::from_default_dir(),
+            };
+            match rt {
+                Ok(rt) => Some(rt),
+                Err(e) => {
+                    warn!("dispatcher: no runtime ({e}); falling back to host-only");
+                    None
+                }
+            }
+        };
+        let mem = MemModel::new(cfg.strategy, cfg.gpu);
+        Ok(Dispatcher {
+            cfg,
+            runtime,
+            sites: Mutex::new(SiteRegistry::new()),
+            mem: Mutex::new(mem),
+        })
+    }
+
+    /// The configured compute mode.
+    pub fn mode(&self) -> ComputeMode {
+        self.cfg.mode
+    }
+
+    /// The adaptive policy, if enabled.
+    pub fn adaptive(&self) -> Option<AdaptivePolicy> {
+        self.cfg.adaptive
+    }
+
+    /// Whether a live PJRT runtime is attached.
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// FP64 GEMM through the coordinator (call site auto-captured).
+    #[track_caller]
+    pub fn dgemm(&self, a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
+        let site = site_id(std::panic::Location::caller());
+        self.dgemm_mode_at(site, self.cfg.mode, a, b)
+    }
+
+    /// FP64 GEMM with an explicit per-call mode (adaptive precision).
+    #[track_caller]
+    pub fn dgemm_mode(&self, mode: ComputeMode, a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
+        let site = site_id(std::panic::Location::caller());
+        self.dgemm_mode_at(site, mode, a, b)
+    }
+
+    /// Complex GEMM: decomposed into four real GEMMs (ozIMMU's re/im
+    /// split), each routed like any intercepted DGEMM but attributed to
+    /// the complex call site.
+    #[track_caller]
+    pub fn zgemm(&self, a: &ZMat, b: &ZMat) -> Result<ZMat> {
+        let site = site_id(std::panic::Location::caller());
+        self.zgemm_mode_at(site, self.cfg.mode, a, b)
+    }
+
+    /// Complex GEMM with an explicit per-call mode.
+    #[track_caller]
+    pub fn zgemm_mode(&self, mode: ComputeMode, a: &ZMat, b: &ZMat) -> Result<ZMat> {
+        let site = site_id(std::panic::Location::caller());
+        self.zgemm_mode_at(site, mode, a, b)
+    }
+
+    fn zgemm_mode_at(
+        &self,
+        site: &'static str,
+        mode: ComputeMode,
+        a: &ZMat,
+        b: &ZMat,
+    ) -> Result<ZMat> {
+        let (ar, ai) = (a.re(), a.im());
+        let (br, bi) = (b.re(), b.im());
+        let rr = self.dgemm_mode_at(site, mode, &ar, &br)?;
+        let ii = self.dgemm_mode_at(site, mode, &ai, &bi)?;
+        let ri = self.dgemm_mode_at(site, mode, &ar, &bi)?;
+        let ir = self.dgemm_mode_at(site, mode, &ai, &br)?;
+        Ok(Mat::from_fn(rr.rows(), rr.cols(), |i, j| {
+            c64(rr.get(i, j) - ii.get(i, j), ri.get(i, j) + ir.get(i, j))
+        }))
+    }
+
+    fn dgemm_mode_at(
+        &self,
+        site: &'static str,
+        mode: ComputeMode,
+        a: &Mat<f64>,
+        b: &Mat<f64>,
+    ) -> Result<Mat<f64>> {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let kind = ArtifactKind::for_mode(mode);
+        let covered = self
+            .runtime
+            .as_ref()
+            .map(|rt| rt.covers(kind, m, k, n))
+            .unwrap_or(false);
+        let decision = if self.runtime.is_none() {
+            OffloadDecision::HostForced
+        } else {
+            self.cfg.policy.decide(m, k, n, covered)
+        };
+
+        let t0 = Instant::now();
+        let result = if decision.offloaded() {
+            self.runtime.as_ref().unwrap().gemm(kind, a, b)?
+        } else {
+            match mode {
+                ComputeMode::Dgemm => linalg::dgemm(a, b)?,
+                ComputeMode::Int8 { splits } => ozaki::ozaki_dgemm(a, b, splits)?,
+            }
+        };
+        let measured = t0.elapsed().as_secs_f64();
+
+        // Model GPU compute + movement for offloaded calls only.
+        let (gpu_s, move_s) = if decision.offloaded() {
+            let gpu_s = match mode {
+                ComputeMode::Dgemm => native_gemm_time(&self.cfg.gpu, m, k, n),
+                ComputeMode::Int8 { splits } => {
+                    emulated_gemm_time(&self.cfg.gpu, m, k, n, splits).total_s
+                }
+            };
+            let mut mem = self.mem.lock().unwrap();
+            let mut move_s = 0.0;
+            move_s += mem.gpu_read(a.data().as_ptr() as usize, (a.data().len() * 8) as u64);
+            move_s += mem.gpu_read(b.data().as_ptr() as usize, (b.data().len() * 8) as u64);
+            move_s += mem.gpu_write(result.data().as_ptr() as usize, (result.data().len() * 8) as u64);
+            (gpu_s, move_s)
+        } else {
+            (0.0, 0.0)
+        };
+
+        debug!(
+            "gemm {}x{}x{} mode={} at {site}: {:?} measured={measured:.2e}s",
+            m,
+            k,
+            n,
+            mode.name(),
+            decision
+        );
+        self.sites.lock().unwrap().record(
+            site,
+            gemm_flops(m, k, n),
+            decision.offloaded(),
+            measured,
+            gpu_s,
+            move_s,
+        );
+        Ok(result)
+    }
+
+    /// Account a CPU touch of a result buffer (residency model input).
+    pub fn cpu_touch(&self, buf: &Mat<f64>) {
+        self.mem
+            .lock()
+            .unwrap()
+            .cpu_touch(buf.data().as_ptr() as usize, (buf.data().len() * 8) as u64);
+    }
+
+    /// Snapshot the run report.
+    pub fn report(&self) -> Report {
+        let sites = self.sites.lock().unwrap().clone();
+        let mem = self.mem.lock().unwrap();
+        let t = sites.totals();
+        Report {
+            mode: self.cfg.mode,
+            strategy: self.cfg.strategy,
+            gpu_name: self.cfg.gpu.name,
+            total_calls: t.calls,
+            offloaded_calls: t.offloaded,
+            host_calls: t.host,
+            total_flops: t.flops,
+            measured_s: t.measured_s,
+            modeled_gpu_s: t.modeled_gpu_s,
+            modeled_move_s: t.modeled_move_s,
+            moved_bytes: mem.moved_bytes,
+            migrations: mem.migrations,
+            sites,
+        }
+    }
+
+    /// Clear profiling + residency state (e.g. between benchmark reps).
+    pub fn reset_stats(&self) {
+        *self.sites.lock().unwrap() = SiteRegistry::new();
+        self.mem.lock().unwrap().reset();
+    }
+}
+
+fn site_id(loc: &'static std::panic::Location<'static>) -> &'static str {
+    // Leak one small string per distinct call site — bounded by the
+    // number of textual call sites in the program.
+    use std::collections::HashMap;
+    use std::sync::Mutex as StdMutex;
+    use once_cell::sync::Lazy;
+    static INTERN: Lazy<StdMutex<HashMap<(u32, &'static str), &'static str>>> =
+        Lazy::new(|| StdMutex::new(HashMap::new()));
+    let mut map = INTERN.lock().unwrap();
+    map.entry((loc.line(), loc.file()))
+        .or_insert_with(|| Box::leak(format!("{}:{}", loc.file(), loc.line()).into_boxed_str()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{max_rel_err, Rng};
+
+    fn host_dispatcher(mode: ComputeMode) -> Dispatcher {
+        Dispatcher::new(DispatchConfig::host_only(mode)).unwrap()
+    }
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat<f64> {
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn host_dgemm_matches_linalg() {
+        let d = host_dispatcher(ComputeMode::Dgemm);
+        let mut rng = Rng::new(1);
+        let a = rand_mat(&mut rng, 20, 20);
+        let b = rand_mat(&mut rng, 20, 20);
+        let got = d.dgemm(&a, &b).unwrap();
+        let want = linalg::dgemm(&a, &b).unwrap();
+        assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
+    fn host_int8_mode_uses_emulation() {
+        let d = host_dispatcher(ComputeMode::Int8 { splits: 4 });
+        let mut rng = Rng::new(2);
+        let a = rand_mat(&mut rng, 16, 16);
+        let b = rand_mat(&mut rng, 16, 16);
+        let got = d.dgemm(&a, &b).unwrap();
+        let want = ozaki::ozaki_dgemm(&a, &b, 4).unwrap();
+        assert_eq!(got.data(), want.data());
+        // and it is *not* the exact product
+        let exact = linalg::dgemm(&a, &b).unwrap();
+        assert!(max_rel_err(got.data(), exact.data()) > 1e-12);
+    }
+
+    #[test]
+    fn zgemm_matches_naive() {
+        let d = host_dispatcher(ComputeMode::Dgemm);
+        let mut rng = Rng::new(3);
+        let a = ZMat::from_fn(12, 12, |_, _| rng.cnormal());
+        let b = ZMat::from_fn(12, 12, |_, _| rng.cnormal());
+        let got = d.zgemm(&a, &b).unwrap();
+        let want = linalg::zgemm_naive(&a, &b).unwrap();
+        let scale = want.data().iter().fold(0.0f64, |m, z| m.max(z.abs()));
+        for (g, w) in got.data().iter().zip(want.data()) {
+            assert!((*g - *w).abs() < 1e-12 * scale);
+        }
+    }
+
+    #[test]
+    fn per_call_mode_override() {
+        let d = host_dispatcher(ComputeMode::Dgemm);
+        let mut rng = Rng::new(4);
+        let a = rand_mat(&mut rng, 16, 16);
+        let b = rand_mat(&mut rng, 16, 16);
+        let emul = d.dgemm_mode(ComputeMode::Int8 { splits: 3 }, &a, &b).unwrap();
+        let want = ozaki::ozaki_dgemm(&a, &b, 3).unwrap();
+        assert_eq!(emul.data(), want.data());
+    }
+
+    #[test]
+    fn call_sites_are_tracked_separately() {
+        let d = host_dispatcher(ComputeMode::Dgemm);
+        let mut rng = Rng::new(5);
+        let a = rand_mat(&mut rng, 8, 8);
+        let b = rand_mat(&mut rng, 8, 8);
+        for _ in 0..3 {
+            d.dgemm(&a, &b).unwrap(); // site A
+        }
+        d.dgemm(&a, &b).unwrap(); // site B
+        let rep = d.report();
+        assert_eq!(rep.total_calls, 4);
+        assert_eq!(rep.sites.len(), 2);
+        assert_eq!(rep.host_calls, 4);
+        assert_eq!(rep.offloaded_calls, 0);
+    }
+
+    #[test]
+    fn zgemm_counts_four_real_gemms() {
+        let d = host_dispatcher(ComputeMode::Dgemm);
+        let mut rng = Rng::new(6);
+        let a = ZMat::from_fn(8, 8, |_, _| rng.cnormal());
+        let b = ZMat::from_fn(8, 8, |_, _| rng.cnormal());
+        d.zgemm(&a, &b).unwrap();
+        let rep = d.report();
+        assert_eq!(rep.total_calls, 4);
+        assert_eq!(rep.sites.len(), 1, "attributed to the one zgemm site");
+    }
+
+    #[test]
+    fn reset_clears_report() {
+        let d = host_dispatcher(ComputeMode::Dgemm);
+        let mut rng = Rng::new(7);
+        let a = rand_mat(&mut rng, 8, 8);
+        d.dgemm(&a, &a.clone()).unwrap();
+        d.reset_stats();
+        assert_eq!(d.report().total_calls, 0);
+    }
+}

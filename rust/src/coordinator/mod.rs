@@ -1,0 +1,33 @@
+//! The automatic BLAS-offload coordinator — this repo's SCILIB-Accel.
+//!
+//! SCILIB-Accel intercepts level-3 BLAS calls in unmodified CPU binaries
+//! with a trampoline DBI patch, profiles them per call site (the PEAK
+//! framework), decides host-vs-GPU per call, and manages data movement
+//! on the Grace-Hopper UMA.  We cannot trampoline-patch a static Rust
+//! binary portably, so the same decision surface lives behind an
+//! explicit dispatch seam ([`Dispatcher`]): applications link against it
+//! exactly as MuST links against BLAS, and everything downstream of the
+//! call boundary — call-site identity, shape inspection, routing policy,
+//! residency tracking, compute-mode selection via
+//! `OZIMMU_COMPUTE_MODE` — matches the paper's stack in kind.
+//!
+//! Components:
+//! * [`callsite`] — PEAK-style per-call-site profiler;
+//! * [`policy`] — offload decision (FLOP threshold + artifact coverage);
+//! * [`datamove`] — the three data-movement strategies of Li et al.;
+//! * [`adaptive`] — tunable-precision extension (paper §4 future work);
+//! * [`Dispatcher`] — ties them to the PJRT runtime and host fallback.
+
+mod adaptive;
+mod callsite;
+mod datamove;
+mod dispatcher;
+mod policy;
+mod stats;
+
+pub use adaptive::AdaptivePolicy;
+pub use callsite::{CallSiteId, CallSiteStats, SiteRegistry};
+pub use datamove::{BufferId, DataMoveStrategy, MemModel, Residency};
+pub use dispatcher::{DispatchConfig, Dispatcher};
+pub use policy::{OffloadDecision, RoutingPolicy};
+pub use stats::{GemmKind, Report};

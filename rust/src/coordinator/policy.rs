@@ -1,0 +1,100 @@
+//! Offload routing policy.
+//!
+//! SCILIB-Accel offloads only the compute-intensive level-3 calls where
+//! the GPU wins despite movement costs; small GEMMs stay on the host.
+//! The policy here mirrors that: a FLOP threshold plus artifact
+//! coverage, with per-site overrides possible on top.
+
+use crate::perfmodel::gemm_flops;
+
+/// Outcome of a routing decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OffloadDecision {
+    /// Run on the device (PJRT artifact path).
+    Offload,
+    /// Run on the host (below threshold).
+    HostSmall,
+    /// Run on the host (no artifact covers the shape).
+    HostNoArtifact,
+    /// Run on the host (dispatcher configured host-only).
+    HostForced,
+}
+
+impl OffloadDecision {
+    pub fn offloaded(self) -> bool {
+        matches!(self, OffloadDecision::Offload)
+    }
+}
+
+/// Size-threshold routing policy.
+#[derive(Clone, Copy, Debug)]
+pub struct RoutingPolicy {
+    /// Minimum GEMM FLOPs worth offloading.  Default corresponds to a
+    /// 64³ GEMM — the smallest artifact bucket.
+    pub min_flops: f64,
+    /// Hard host-only switch (no runtime available / benchmarking).
+    pub force_host: bool,
+}
+
+impl Default for RoutingPolicy {
+    fn default() -> Self {
+        RoutingPolicy {
+            min_flops: gemm_flops(64, 64, 64),
+            force_host: false,
+        }
+    }
+}
+
+impl RoutingPolicy {
+    /// Decide for a GEMM of logical shape (m, k, n).  `covered` reports
+    /// whether an artifact bucket exists for the shape.
+    pub fn decide(&self, m: usize, k: usize, n: usize, covered: bool) -> OffloadDecision {
+        if self.force_host {
+            return OffloadDecision::HostForced;
+        }
+        if gemm_flops(m, k, n) < self.min_flops {
+            return OffloadDecision::HostSmall;
+        }
+        if !covered {
+            return OffloadDecision::HostNoArtifact;
+        }
+        OffloadDecision::Offload
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_threshold_is_64_cubed() {
+        let p = RoutingPolicy::default();
+        assert_eq!(p.decide(64, 64, 64, true), OffloadDecision::Offload);
+        assert_eq!(p.decide(16, 16, 16, true), OffloadDecision::HostSmall);
+    }
+
+    #[test]
+    fn uncovered_shapes_fall_back() {
+        let p = RoutingPolicy::default();
+        assert_eq!(p.decide(4096, 4096, 4096, false), OffloadDecision::HostNoArtifact);
+    }
+
+    #[test]
+    fn force_host_wins() {
+        let p = RoutingPolicy {
+            force_host: true,
+            ..Default::default()
+        };
+        assert_eq!(p.decide(512, 512, 512, true), OffloadDecision::HostForced);
+        assert!(!p.decide(512, 512, 512, true).offloaded());
+    }
+
+    #[test]
+    fn rectangular_shapes_use_flops_not_dims() {
+        // 128 x 8 x 128 has fewer FLOPs than 64^3 → host
+        let p = RoutingPolicy::default();
+        assert_eq!(p.decide(128, 8, 128, true), OffloadDecision::HostSmall);
+        // 256 x 64 x 256 clears the bar
+        assert_eq!(p.decide(256, 64, 256, true), OffloadDecision::Offload);
+    }
+}

@@ -1,0 +1,112 @@
+//! Run report: what the offload tool did and what it would have cost on
+//! the modelled GPU (the paper's E4/E5 numbers come from here).
+
+use super::callsite::SiteRegistry;
+use super::datamove::DataMoveStrategy;
+use crate::ozaki::ComputeMode;
+
+/// Which BLAS entry point a call came through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKind {
+    Dgemm,
+    Zgemm,
+}
+
+/// Aggregated run report.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub mode: ComputeMode,
+    pub strategy: DataMoveStrategy,
+    pub gpu_name: &'static str,
+    pub total_calls: u64,
+    pub offloaded_calls: u64,
+    pub host_calls: u64,
+    pub total_flops: f64,
+    pub measured_s: f64,
+    pub modeled_gpu_s: f64,
+    pub modeled_move_s: f64,
+    pub moved_bytes: u64,
+    pub migrations: u64,
+    pub sites: SiteRegistry,
+}
+
+impl Report {
+    /// Modelled end-to-end GEMM seconds on the target GPU.
+    pub fn modeled_total_s(&self) -> f64 {
+        self.modeled_gpu_s + self.modeled_move_s
+    }
+
+    /// Render a PEAK-style per-site table plus totals.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "== offload report: mode={} strategy={} gpu={} ==\n",
+            self.mode.name(),
+            self.strategy.name(),
+            self.gpu_name
+        ));
+        out.push_str(&format!(
+            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11}\n",
+            "call site", "calls", "offload", "GFLOP", "measured", "gpu-model", "move-model"
+        ));
+        for (site, s) in self.sites.iter() {
+            out.push_str(&format!(
+                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s\n",
+                site,
+                s.calls,
+                s.offloaded,
+                s.flops / 1e9,
+                s.measured_s,
+                s.modeled_gpu_s,
+                s.modeled_move_s
+            ));
+        }
+        out.push_str(&format!(
+            "TOTAL: {} calls ({} offloaded, {} host), {:.3} GFLOP, measured {:.4}s, modeled gpu {:.4}s + move {:.4}s = {:.4}s, {} MiB moved, {} migrations\n",
+            self.total_calls,
+            self.offloaded_calls,
+            self.host_calls,
+            self.total_flops / 1e9,
+            self.measured_s,
+            self.modeled_gpu_s,
+            self.modeled_move_s,
+            self.modeled_total_s(),
+            self.moved_bytes >> 20,
+            self.migrations
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::DataMoveStrategy;
+
+    #[test]
+    fn render_contains_the_essentials() {
+        let mut sites = SiteRegistry::new();
+        sites.record("lu.rs:88", 1e9, true, 0.5, 0.1, 0.01);
+        let r = Report {
+            mode: ComputeMode::Int8 { splits: 6 },
+            strategy: DataMoveStrategy::FirstTouchMigrate,
+            gpu_name: "GH200",
+            total_calls: 1,
+            offloaded_calls: 1,
+            host_calls: 0,
+            total_flops: 1e9,
+            measured_s: 0.5,
+            modeled_gpu_s: 0.1,
+            modeled_move_s: 0.01,
+            moved_bytes: 1 << 21,
+            migrations: 2,
+            sites,
+        };
+        let txt = r.render();
+        assert!(txt.contains("fp64_int8_6"));
+        assert!(txt.contains("first_touch"));
+        assert!(txt.contains("lu.rs:88"));
+        assert!(txt.contains("2 MiB"));
+        assert!((r.modeled_total_s() - 0.11).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,53 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by ozaccel's public API.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Shape mismatch or otherwise invalid matrix arguments.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// No AOT artifact covers the requested (kind, splits, shape).
+    #[error("no artifact for {kind} splits={splits} shape {m}x{k}x{n} (have you run `make artifacts`?)")]
+    NoArtifact {
+        kind: &'static str,
+        splits: u32,
+        m: usize,
+        k: usize,
+        n: usize,
+    },
+
+    /// Artifact manifest missing or malformed.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// Invalid compute-mode string (`OZIMMU_COMPUTE_MODE` syntax).
+    #[error("invalid compute mode {0:?}: expected `dgemm` or `fp64_int8_<3..18>`")]
+    Mode(String),
+
+    /// Configuration file / CLI errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Numerical failure (singular pivot, non-convergence, ...).
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

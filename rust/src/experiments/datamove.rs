@@ -1,0 +1,87 @@
+//! E5 — the data-movement strategy comparison (§2.1: the three schemes
+//! of the automatic-offload tool on UMA).
+//!
+//! The same MuST-mini GEMM workload is replayed under CopyAlways /
+//! UnifiedAccess / FirstTouchMigrate; the modelled movement seconds and
+//! bytes crossed are reported.  Expected ordering for iterative
+//! workloads: FirstTouch ≤ Unified ≪ CopyAlways (Li et al.'s result —
+//! the reason pre-UMA offload tools disappointed).
+
+use crate::bench::Table;
+use crate::coordinator::{DataMoveStrategy, DispatchConfig, Dispatcher};
+use crate::error::Result;
+use crate::must::params::CaseParams;
+use crate::must::scf::{ModeSelect, ScfDriver};
+use crate::ozaki::ComputeMode;
+
+/// One strategy's modelled cost.
+#[derive(Clone, Debug)]
+pub struct DataMoveRow {
+    pub strategy: &'static str,
+    pub moved_gib: f64,
+    pub migrations: u64,
+    pub modeled_move_s: f64,
+    pub modeled_gemm_s: f64,
+}
+
+/// Replay one SCF iteration under each strategy.
+pub fn run_datamove_comparison(
+    case: &CaseParams,
+    base: &DispatchConfig,
+    mode: ComputeMode,
+) -> Result<Vec<DataMoveRow>> {
+    let mut out = Vec::new();
+    for strategy in [
+        DataMoveStrategy::CopyAlways,
+        DataMoveStrategy::UnifiedAccess,
+        DataMoveStrategy::FirstTouchMigrate,
+    ] {
+        let cfg = DispatchConfig {
+            strategy,
+            mode,
+            ..base.clone()
+        };
+        let dispatcher = Dispatcher::new(cfg)?;
+        let mut one = case.clone();
+        one.iterations = 1;
+        let driver = ScfDriver::new(one, &dispatcher)?;
+        driver.run(ModeSelect::Fixed(mode))?;
+        let rep = dispatcher.report();
+        out.push(DataMoveRow {
+            strategy: strategy.name(),
+            moved_gib: rep.moved_bytes as f64 / (1u64 << 30) as f64,
+            migrations: rep.migrations,
+            modeled_move_s: rep.modeled_move_s,
+            modeled_gemm_s: rep.modeled_gpu_s,
+        });
+    }
+    Ok(out)
+}
+
+/// Render the comparison table.
+pub fn render(rows: &[DataMoveRow]) -> String {
+    let mut t = Table::new(&[
+        "strategy",
+        "GiB moved",
+        "migrations",
+        "model move (s)",
+        "model GEMM (s)",
+        "move overhead",
+    ]);
+    for r in rows {
+        let ovh = if r.modeled_gemm_s > 0.0 {
+            format!("{:.1}%", 100.0 * r.modeled_move_s / r.modeled_gemm_s)
+        } else {
+            "-".into()
+        };
+        t.row(&[
+            r.strategy.to_string(),
+            format!("{:.3}", r.moved_gib),
+            r.migrations.to_string(),
+            format!("{:.4}", r.modeled_move_s),
+            format!("{:.4}", r.modeled_gemm_s),
+            ovh,
+        ]);
+    }
+    t.render()
+}

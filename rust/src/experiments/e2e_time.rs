@@ -1,0 +1,112 @@
+//! E4 — the §4 end-to-end MuST timing comparison.
+//!
+//! The paper: the split-6 MuST run takes 731.8 s vs 412.1 s native FP64
+//! on GH200 — emulation *loses* there because GH200's INT8:FP64 ratio
+//! (29.5×) is too small; the projected GB200 ratio (125×) flips it.
+//! We replay the recorded GEMM call trace of one SCF run through the
+//! perfmodel for both GPUs, and also report the measured testbed wall
+//! time.
+
+use std::time::Instant;
+
+use crate::bench::Table;
+use crate::coordinator::Dispatcher;
+use crate::error::Result;
+use crate::must::params::CaseParams;
+use crate::must::scf::{ModeSelect, ScfDriver};
+use crate::ozaki::ComputeMode;
+
+/// One mode's end-to-end timing.
+#[derive(Clone, Debug)]
+pub struct E2eTiming {
+    pub mode: String,
+    /// Wall seconds on this testbed.
+    pub measured_s: f64,
+    /// GEMM calls issued.
+    pub gemm_calls: u64,
+    /// Modelled GPU GEMM seconds (per the dispatcher's configured GPU).
+    pub modeled_gemm_s: f64,
+    /// Modelled data-movement seconds.
+    pub modeled_move_s: f64,
+}
+
+/// Run one SCF pass per mode, recording wall time + modelled trace cost.
+pub fn run_e2e_timing(
+    case: &CaseParams,
+    dispatcher: &Dispatcher,
+    modes: &[ComputeMode],
+) -> Result<Vec<E2eTiming>> {
+    let driver = ScfDriver::new(case.clone(), dispatcher)?;
+    let mut out = Vec::new();
+    for &mode in modes {
+        dispatcher.reset_stats();
+        let t0 = Instant::now();
+        driver.run(ModeSelect::Fixed(mode))?;
+        let measured = t0.elapsed().as_secs_f64();
+        let rep = dispatcher.report();
+        out.push(E2eTiming {
+            mode: mode.short_name(),
+            measured_s: measured,
+            gemm_calls: rep.total_calls,
+            modeled_gemm_s: rep.modeled_gpu_s,
+            modeled_move_s: rep.modeled_move_s,
+        });
+    }
+    Ok(out)
+}
+
+/// Render with the native row as the speedup baseline.
+pub fn render(rows: &[E2eTiming], gpu_name: &str) -> String {
+    let mut t = Table::new(&[
+        "mode",
+        "measured wall (s)",
+        "GEMM calls",
+        &format!("{gpu_name} model GEMM (s)"),
+        &format!("{gpu_name} model move (s)"),
+        "model total vs dgemm",
+    ]);
+    let base: Option<f64> = rows
+        .iter()
+        .find(|r| r.mode == "dgemm")
+        .map(|r| r.modeled_gemm_s + r.modeled_move_s);
+    for r in rows {
+        let total = r.modeled_gemm_s + r.modeled_move_s;
+        t.row(&[
+            r.mode.clone(),
+            format!("{:.3}", r.measured_s),
+            r.gemm_calls.to_string(),
+            format!("{:.4}", r.modeled_gemm_s),
+            format!("{:.4}", r.modeled_move_s),
+            base.map(|b| format!("{:.2}x", total / b)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::DispatchConfig;
+    use crate::must::params::tiny_case;
+
+    #[test]
+    fn e2e_timing_rows() {
+        let d = Dispatcher::new(DispatchConfig::host_only(ComputeMode::Dgemm)).unwrap();
+        let mut case = tiny_case();
+        case.iterations = 1;
+        let rows = run_e2e_timing(
+            &case,
+            &d,
+            &[ComputeMode::Dgemm, ComputeMode::Int8 { splits: 6 }],
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.measured_s > 0.0));
+        assert!(rows.iter().all(|r| r.gemm_calls > 0));
+        // both runs issue the same GEMM trace
+        assert_eq!(rows[0].gemm_calls, rows[1].gemm_calls);
+        let txt = render(&rows, "GH200");
+        assert!(txt.contains("dgemm"));
+        assert!(txt.contains("int8_6"));
+    }
+}

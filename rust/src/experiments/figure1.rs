@@ -1,0 +1,162 @@
+//! E2 — the paper's Figure 1: relative error of Re/Im G(z) at every
+//! energy point of the contour, for two split numbers, iteration 1.
+//!
+//! The paper's observation: errors peak in an isolated region near the
+//! Fermi energy (the d-resonance at 0.72 Ry) and decay exponentially as
+//! the points move counterclockwise away; split 3 is more sensitive
+//! than split 5.
+
+use crate::coordinator::Dispatcher;
+use crate::error::Result;
+use crate::must::greens::g_rel_err;
+use crate::must::params::CaseParams;
+use crate::must::scf::{ModeSelect, ScfDriver};
+use crate::ozaki::ComputeMode;
+
+/// One contour point's errors.
+#[derive(Clone, Copy, Debug)]
+pub struct Figure1Point {
+    pub re_z: f64,
+    pub im_z: f64,
+    pub theta: f64,
+    pub rel_real: f64,
+    pub rel_imag: f64,
+    pub kappa: f64,
+}
+
+/// One split number's series.
+#[derive(Clone, Debug)]
+pub struct Figure1Series {
+    pub splits: u32,
+    pub points: Vec<Figure1Point>,
+}
+
+/// Run E2 for the given split numbers (paper uses 3 and 5), iteration 1.
+pub fn run_figure1(
+    case: &CaseParams,
+    dispatcher: &Dispatcher,
+    splits: &[u32],
+) -> Result<Vec<Figure1Series>> {
+    let mut one_iter = case.clone();
+    one_iter.iterations = 1;
+    let driver = ScfDriver::new(one_iter, dispatcher)?;
+    let reference = driver.run(ModeSelect::Fixed(ComputeMode::Dgemm))?;
+    let ref_points = &reference.iterations[0].points;
+
+    let mut out = Vec::new();
+    for &s in splits {
+        let run = driver.run(ModeSelect::Fixed(ComputeMode::Int8 { splits: s }))?;
+        let points = ref_points
+            .iter()
+            .zip(&run.iterations[0].points)
+            .map(|(r, e)| {
+                let err = g_rel_err(r.g, e.g);
+                Figure1Point {
+                    re_z: r.z.re,
+                    im_z: r.z.im,
+                    theta: r.theta,
+                    rel_real: err.rel_real,
+                    rel_imag: err.rel_imag,
+                    kappa: r.kappa,
+                }
+            })
+            .collect();
+        out.push(Figure1Series { splits: s, points });
+    }
+    Ok(out)
+}
+
+/// CSV of all series (long format).
+pub fn to_csv(series: &[Figure1Series]) -> String {
+    let mut s = String::from("splits,theta,re_z,im_z,rel_real,rel_imag,kappa\n");
+    for ser in series {
+        for p in &ser.points {
+            s.push_str(&format!(
+                "{},{:.5},{:.5},{:.5},{:.6e},{:.6e},{:.4e}\n",
+                ser.splits, p.theta, p.re_z, p.im_z, p.rel_real, p.rel_imag, p.kappa
+            ));
+        }
+    }
+    s
+}
+
+/// ASCII log-scale plot of one series (terminal rendition of Figure 1).
+pub fn ascii_plot(series: &Figure1Series, height: usize) -> String {
+    let pts = &series.points;
+    let vals: Vec<(f64, f64)> = pts
+        .iter()
+        .map(|p| {
+            (
+                p.rel_real.max(1e-18).log10(),
+                p.rel_imag.max(1e-18).log10(),
+            )
+        })
+        .collect();
+    let lo = vals
+        .iter()
+        .map(|v| v.0.min(v.1))
+        .fold(f64::INFINITY, f64::min)
+        .floor();
+    let hi = vals
+        .iter()
+        .map(|v| v.0.max(v.1))
+        .fold(f64::NEG_INFINITY, f64::max)
+        .ceil();
+    let span = (hi - lo).max(1.0);
+    let mut rows = vec![vec![b' '; pts.len()]; height];
+    for (j, (vr, vi)) in vals.iter().enumerate() {
+        let r_row = ((hi - vr) / span * (height - 1) as f64).round() as usize;
+        let i_row = ((hi - vi) / span * (height - 1) as f64).round() as usize;
+        rows[i_row.min(height - 1)][j] = b'i';
+        rows[r_row.min(height - 1)][j] = b'r'; // r wins ties
+    }
+    let mut out = format!(
+        "rel err of G(z), fp64_int8_{} (r = Re, i = Im); x: contour counterclockwise, band bottom -> E_F\n",
+        series.splits
+    );
+    for (k, row) in rows.iter().enumerate() {
+        let label = hi - span * k as f64 / (height - 1) as f64;
+        out.push_str(&format!("1e{label:+6.1} |{}|\n", String::from_utf8_lossy(row)));
+    }
+    out.push_str(&format!(
+        "        {}\n        E={:+.2} Ry{}E={:+.2} Ry (E_F region)\n",
+        "-".repeat(pts.len() + 2),
+        pts.first().map(|p| p.re_z).unwrap_or(0.0),
+        " ".repeat(pts.len().saturating_sub(16)),
+        pts.last().map(|p| p.re_z).unwrap_or(0.0),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::DispatchConfig;
+    use crate::must::params::tiny_case;
+
+    #[test]
+    fn figure1_series_structure() {
+        let d = Dispatcher::new(DispatchConfig::host_only(ComputeMode::Dgemm)).unwrap();
+        let case = tiny_case();
+        let series = run_figure1(&case, &d, &[3, 5]).unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].points.len(), case.n_contour);
+        // split 5 is everywhere at least as accurate as split 3 (up to
+        // noise floor); compare the max
+        let max3 = series[0]
+            .points
+            .iter()
+            .fold(0.0f64, |m, p| m.max(p.rel_real.max(p.rel_imag)));
+        let max5 = series[1]
+            .points
+            .iter()
+            .fold(0.0f64, |m, p| m.max(p.rel_real.max(p.rel_imag)));
+        assert!(max5 < max3, "split 5 ({max5:e}) should beat split 3 ({max3:e})");
+        // csv + plot smoke
+        let csv = to_csv(&series);
+        assert_eq!(csv.lines().count(), 1 + 2 * case.n_contour);
+        let plot = ascii_plot(&series[0], 12);
+        assert!(plot.contains("fp64_int8_3"));
+        assert!(plot.lines().count() >= 13);
+    }
+}

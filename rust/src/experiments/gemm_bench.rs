@@ -1,0 +1,140 @@
+//! E3 — the §4 DGEMM benchmark: effective FP64 TFLOPS of native vs
+//! emulated GEMM per split number.
+//!
+//! The paper reports 62.52 TFLOPS (native) vs 20.35 TFLOPS (int8_6) at
+//! 2048³ on GH200.  Here every row carries both the *measured* CPU-PJRT
+//! testbed number and the *modelled* GH200/GB200 numbers (the testbed's
+//! INT8:FP64 ratio is GH200-like, so who-wins matches; absolute numbers
+//! are modelled — DESIGN.md §Substitutions #1).
+
+use crate::bench::{Bench, Table};
+use crate::error::Result;
+use crate::linalg::Mat;
+use crate::ozaki::ComputeMode;
+use crate::perfmodel::{emulated_gemm_time, gemm_flops, native_gemm_time, GB200, GH200};
+use crate::runtime::{ArtifactKind, Runtime};
+use crate::testing::Rng;
+
+/// One (mode, size) measurement.
+#[derive(Clone, Debug)]
+pub struct GemmBenchRow {
+    pub mode: String,
+    pub n: usize,
+    /// Measured on the CPU-PJRT testbed, TFLOPS.
+    pub measured_tflops: Option<f64>,
+    /// Modelled GH200 effective TFLOPS.
+    pub gh200_tflops: f64,
+    /// Modelled GB200 effective TFLOPS.
+    pub gb200_tflops: f64,
+}
+
+/// Run E3 over square sizes × modes.  Sizes without artifacts (e.g. the
+/// paper's 2048) get model-only rows.
+pub fn run_gemm_bench(
+    runtime: Option<&Runtime>,
+    sizes: &[usize],
+    splits: &[u32],
+    bench: Bench,
+) -> Result<Vec<GemmBenchRow>> {
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(0xE3);
+    for &n in sizes {
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let flop = gemm_flops(n, n, n);
+        let mut modes = vec![ComputeMode::Dgemm];
+        modes.extend(splits.iter().map(|&s| ComputeMode::Int8 { splits: s }));
+        for mode in modes {
+            let kind = ArtifactKind::for_mode(mode);
+            let measured = match runtime {
+                Some(rt) if rt.covers(kind, n, n, n) => {
+                    let m = bench.run(|| {
+                        rt.gemm(kind, &a, &b).expect("gemm");
+                    });
+                    Some(m.tflops(flop))
+                }
+                _ => None,
+            };
+            let (gh, gb) = match mode {
+                ComputeMode::Dgemm => (
+                    flop / native_gemm_time(&GH200, n, n, n) / 1e12,
+                    flop / native_gemm_time(&GB200, n, n, n) / 1e12,
+                ),
+                ComputeMode::Int8 { splits } => (
+                    emulated_gemm_time(&GH200, n, n, n, splits).effective_tflops,
+                    emulated_gemm_time(&GB200, n, n, n, splits).effective_tflops,
+                ),
+            };
+            rows.push(GemmBenchRow {
+                mode: mode.short_name(),
+                n,
+                measured_tflops: measured,
+                gh200_tflops: gh,
+                gb200_tflops: gb,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render the table.
+pub fn render(rows: &[GemmBenchRow]) -> String {
+    let mut t = Table::new(&[
+        "N",
+        "mode",
+        "measured (CPU-PJRT) TFLOPS",
+        "GH200 model TFLOPS",
+        "GB200 model TFLOPS",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.n.to_string(),
+            r.mode.clone(),
+            r.measured_tflops
+                .map(|v| format!("{v:.3}"))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.2}", r.gh200_tflops),
+            format!("{:.2}", r.gb200_tflops),
+        ]);
+    }
+    t.render()
+}
+
+/// CSV output.
+pub fn to_csv(rows: &[GemmBenchRow]) -> String {
+    let mut s = String::from("n,mode,measured_tflops,gh200_tflops,gb200_tflops\n");
+    for r in rows {
+        s.push_str(&format!(
+            "{},{},{},{:.4},{:.4}\n",
+            r.n,
+            r.mode,
+            r.measured_tflops
+                .map(|v| format!("{v:.5}"))
+                .unwrap_or_default(),
+            r.gh200_tflops,
+            r.gb200_tflops
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_only_rows_reproduce_paper_headlines() {
+        // no runtime: 2048^3 model-only — the paper's §4 numbers
+        let rows = run_gemm_bench(None, &[2048], &[6], Bench::quick()).unwrap();
+        assert_eq!(rows.len(), 2);
+        let native = &rows[0];
+        let int8 = &rows[1];
+        assert!(native.measured_tflops.is_none());
+        assert!((native.gh200_tflops - 62.52).abs() < 1.0);
+        assert!((int8.gh200_tflops - 20.35).abs() < 2.0);
+        // and the GB200 verdict flips
+        assert!(int8.gb200_tflops > native.gb200_tflops);
+        let txt = render(&rows);
+        assert!(txt.contains("int8_6"));
+    }
+}

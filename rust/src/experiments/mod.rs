@@ -1,0 +1,28 @@
+//! Experiment drivers — one module per paper table/figure (DESIGN.md
+//! experiment index).  Shared by the `ozaccel` CLI subcommands and the
+//! `cargo bench` harnesses so both produce the same numbers.
+
+pub mod adaptive;
+pub mod datamove;
+pub mod e2e_time;
+pub mod figure1;
+pub mod gemm_bench;
+pub mod table1;
+
+pub use adaptive::{run_adaptive_ablation, AdaptiveAblation};
+pub use datamove::{run_datamove_comparison, DataMoveRow};
+pub use e2e_time::{run_e2e_timing, E2eTiming};
+pub use figure1::{ascii_plot, run_figure1, Figure1Point, Figure1Series};
+pub use gemm_bench::{run_gemm_bench, GemmBenchRow};
+pub use table1::{run_table1, Table1, Table1Row};
+
+use crate::error::Result;
+use std::path::Path;
+
+/// Write text to `<dir>/<name>`, creating the directory.
+pub fn write_output(dir: &Path, name: &str, text: &str) -> Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, text)?;
+    Ok(path)
+}

@@ -1,0 +1,194 @@
+//! E1 — the paper's Table 1: impact of split numbers on accuracy across
+//! SCF iterations.
+//!
+//! For each compute mode (`dgemm` reference + `fp64_int8_s`), run the
+//! full MuST-mini SCF; report per iteration the maximum componentwise
+//! relative error of G(z) over all contour points
+//! (`max_real`, `max_imag`), the total energy and the Fermi energy —
+//! exactly the columns of the paper's table.
+
+use log::info;
+
+use crate::bench::Table;
+use crate::coordinator::Dispatcher;
+use crate::error::Result;
+use crate::must::greens::g_rel_err;
+use crate::must::params::CaseParams;
+use crate::must::scf::{ModeSelect, ScfDriver, ScfResult};
+use crate::ozaki::ComputeMode;
+
+/// One (mode, iteration) cell group.
+#[derive(Clone, Debug)]
+pub struct Table1Cell {
+    pub max_real: f64,
+    pub max_imag: f64,
+    pub etot: f64,
+    pub efermi: f64,
+}
+
+/// One mode row (all iterations).
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub mode: String,
+    pub cells: Vec<Table1Cell>,
+}
+
+/// The full table plus the raw SCF runs (Figure 1 reuses them).
+#[derive(Clone, Debug)]
+pub struct Table1 {
+    pub rows: Vec<Table1Row>,
+    pub reference: ScfResult,
+    pub runs: Vec<ScfResult>,
+}
+
+/// Run E1: reference plus one row per split count.
+pub fn run_table1(
+    case: &CaseParams,
+    dispatcher: &Dispatcher,
+    splits: &[u32],
+) -> Result<Table1> {
+    let driver = ScfDriver::new(case.clone(), dispatcher)?;
+    info!("table1: running dgemm reference");
+    let reference = driver.run(ModeSelect::Fixed(ComputeMode::Dgemm))?;
+
+    let mut rows = Vec::new();
+    // reference row: no error columns
+    rows.push(Table1Row {
+        mode: "dgemm".into(),
+        cells: reference
+            .iterations
+            .iter()
+            .map(|it| Table1Cell {
+                max_real: 0.0,
+                max_imag: 0.0,
+                etot: it.etot,
+                efermi: it.efermi,
+            })
+            .collect(),
+    });
+
+    let mut runs = Vec::new();
+    for &s in splits {
+        info!("table1: running fp64_int8_{s}");
+        let run = driver.run(ModeSelect::Fixed(ComputeMode::Int8 { splits: s }))?;
+        rows.push(error_row(&reference, &run));
+        runs.push(run);
+    }
+    Ok(Table1 {
+        rows,
+        reference,
+        runs,
+    })
+}
+
+/// Compute one error row against the reference run.
+pub fn error_row(reference: &ScfResult, run: &ScfResult) -> Table1Row {
+    let cells = reference
+        .iterations
+        .iter()
+        .zip(&run.iterations)
+        .map(|(r, e)| {
+            let mut max_real = 0.0f64;
+            let mut max_imag = 0.0f64;
+            for (pr, pe) in r.points.iter().zip(&e.points) {
+                let err = g_rel_err(pr.g, pe.g);
+                max_real = max_real.max(err.rel_real);
+                max_imag = max_imag.max(err.rel_imag);
+            }
+            Table1Cell {
+                max_real,
+                max_imag,
+                etot: e.etot,
+                efermi: e.efermi,
+            }
+        })
+        .collect();
+    Table1Row {
+        mode: run.mode_name.clone(),
+        cells,
+    }
+}
+
+impl Table1 {
+    /// Render in the paper's layout (iterations side by side).
+    pub fn render(&self) -> String {
+        let iters = self.reference.iterations.len();
+        let mut headers: Vec<String> = vec!["mode".into()];
+        for i in 1..=iters {
+            headers.extend([
+                format!("max_real[{i}]"),
+                format!("max_imag[{i}]"),
+                format!("Etot[{i}]"),
+                format!("Efermi[{i}]"),
+            ]);
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&hdr_refs);
+        for row in &self.rows {
+            let mut cells = vec![row.mode.clone()];
+            for c in &row.cells {
+                if row.mode == "dgemm" {
+                    cells.push("-".into());
+                    cells.push("-".into());
+                } else {
+                    cells.push(format!("{:.2e}", c.max_real));
+                    cells.push(format!("{:.2e}", c.max_imag));
+                }
+                cells.push(format!("{:.6}", c.etot));
+                cells.push(format!("{:.5}", c.efermi));
+            }
+            t.row(&cells);
+        }
+        t.render()
+    }
+
+    /// CSV for EXPERIMENTS.md / plotting.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("mode,iteration,max_real,max_imag,etot,efermi\n");
+        for row in &self.rows {
+            for (i, c) in row.cells.iter().enumerate() {
+                s.push_str(&format!(
+                    "{},{},{:.6e},{:.6e},{:.8},{:.6}\n",
+                    row.mode,
+                    i + 1,
+                    c.max_real,
+                    c.max_imag,
+                    c.etot,
+                    c.efermi
+                ));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::DispatchConfig;
+    use crate::must::params::tiny_case;
+
+    #[test]
+    fn tiny_table1_shows_decay_and_convergence() {
+        let d = Dispatcher::new(DispatchConfig::host_only(ComputeMode::Dgemm)).unwrap();
+        let case = tiny_case();
+        let t = run_table1(&case, &d, &[3, 6, 9]).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        // errors decay monotonically with splits at every iteration
+        for it in 0..case.iterations {
+            let e3 = t.rows[1].cells[it].max_real.max(t.rows[1].cells[it].max_imag);
+            let e6 = t.rows[2].cells[it].max_real.max(t.rows[2].cells[it].max_imag);
+            let e9 = t.rows[3].cells[it].max_real.max(t.rows[3].cells[it].max_imag);
+            assert!(e6 < e3, "iter {it}: {e6} !< {e3}");
+            assert!(e9 < e6 * 10.0, "iter {it}: {e9} vs {e6}");
+            // high splits converge Etot/Efermi to the reference
+            assert!((t.rows[3].cells[it].etot - t.rows[0].cells[it].etot).abs() < 1e-4);
+            assert!((t.rows[3].cells[it].efermi - t.rows[0].cells[it].efermi).abs() < 1e-4);
+        }
+        // render + csv smoke
+        let r = t.render();
+        assert!(r.contains("int8_6"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 1 + 4 * case.iterations);
+    }
+}

@@ -1,0 +1,57 @@
+//! # ozaccel — Tunable Precision Emulation via Automatic BLAS Offloading
+//!
+//! Reproduction of Liu, Li & Wang, *"A Pilot Study on Tunable Precision
+//! Emulation via Automatic BLAS Offloading"* (PEARC '25) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas, build-time Python)** — the INT8 GEMM kernel used by
+//!   the Ozaki-scheme emulation (`python/compile/kernels/ozaki.py`).
+//! * **Layer 2 (JAX, build-time Python)** — the full `fp64_int8_s` DGEMM
+//!   emulation graph (row-scaling, 7-bit slicing, one fused INT8 GEMM over
+//!   all slice pairs, FP64 accumulation), AOT-lowered to HLO text
+//!   (`python/compile/model.py`, `python/compile/aot.py`).
+//! * **Layer 3 (this crate)** — the *automatic BLAS offloading* coordinator
+//!   (a SCILIB-Accel analogue: call interception seam, per-call-site PEAK
+//!   profiler, routing policy, data-movement strategies), the PJRT runtime
+//!   that loads the AOT artifacts, the MuST-mini multiple-scattering
+//!   application used for the paper's accuracy study, and the GH200/GB200
+//!   performance model.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the JAX
+//! model once, and the Rust binary is self-contained afterwards.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use ozaccel::coordinator::{Dispatcher, DispatchConfig};
+//! use ozaccel::ozaki::ComputeMode;
+//! use ozaccel::linalg::Mat;
+//!
+//! let cfg = DispatchConfig {
+//!     mode: ComputeMode::Int8 { splits: 6 },
+//!     ..DispatchConfig::default()
+//! };
+//! let disp = Dispatcher::new(cfg).unwrap();
+//! let a = Mat::from_fn(128, 128, |i, j| (i + j) as f64 / 128.0);
+//! let b = Mat::from_fn(128, 128, |i, j| (i as f64 - j as f64) / 128.0);
+//! let c = disp.dgemm(&a, &b).unwrap();
+//! # let _ = c;
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod complex;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod experiments;
+pub mod linalg;
+pub mod logging;
+pub mod must;
+pub mod ozaki;
+pub mod perfmodel;
+pub mod runtime;
+pub mod testing;
+
+pub use complex::c64;
+pub use error::{Error, Result};

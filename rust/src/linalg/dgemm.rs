@@ -1,0 +1,168 @@
+//! Host FP64 GEMM: the CPU fallback path of the coordinator and the
+//! reference oracle for the emulated paths.
+
+use super::matrix::Mat;
+use crate::error::{Error, Result};
+
+/// Textbook triple loop — kept as the bit-obvious oracle for tests.
+pub fn dgemm_naive(a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
+    check(a, b)?;
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a.get(i, p);
+            let brow = b.row(p);
+            let crow = c.row_mut(i);
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// Blocked GEMM with a packed row x packed-column microkernel.
+///
+/// B is packed transposed once so the inner loop is two contiguous
+/// streams; four independent accumulators let LLVM vectorise.  This is
+/// the host hot path (DESIGN.md §Perf target: >= 1 GFLOP/s).
+pub fn dgemm(a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
+    check(a, b)?;
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    // Pack B^T: bt[j*k + p] = b[p, j]
+    let mut bt = vec![0.0f64; n * k];
+    for p in 0..k {
+        let brow = b.row(p);
+        for j in 0..n {
+            bt[j * k + p] = brow[j];
+        }
+    }
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            crow[j] = dot(arow, &bt[j * k..(j + 1) * k]);
+        }
+    }
+    Ok(c)
+}
+
+/// Unrolled dot product with four independent accumulators.
+#[inline]
+fn dot(x: &[f64], y: &[f64]) -> f64 {
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+fn check(a: &Mat<f64>, b: &Mat<f64>) -> Result<()> {
+    if a.cols() != b.rows() {
+        return Err(Error::Shape(format!(
+            "dgemm: {}x{} @ {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{for_cases, Rng};
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat<f64> {
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn matches_naive_on_random_shapes() {
+        for_cases(20, 11, |rng| {
+            let m = rng.index(1, 40);
+            let k = rng.index(1, 40);
+            let n = rng.index(1, 40);
+            let a = rand_mat(rng, m, k);
+            let b = rand_mat(rng, k, n);
+            let fast = dgemm(&a, &b).unwrap();
+            let slow = dgemm_naive(&a, &b).unwrap();
+            for (x, y) in fast.data().iter().zip(slow.data()) {
+                assert!((x - y).abs() <= 1e-12 * (1.0 + y.abs()), "{x} vs {y}");
+            }
+        });
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(5);
+        let a = rand_mat(&mut rng, 17, 17);
+        let c = dgemm(&a, &Mat::eye(17)).unwrap();
+        assert_eq!(c.data(), a.data());
+        let c2 = dgemm(&Mat::eye(17), &a).unwrap();
+        assert_eq!(c2.data(), a.data());
+    }
+
+    #[test]
+    fn rejects_mismatched_shapes() {
+        let a = Mat::<f64>::zeros(3, 4);
+        let b = Mat::<f64>::zeros(5, 2);
+        assert!(dgemm(&a, &b).is_err());
+        assert!(dgemm_naive(&a, &b).is_err());
+    }
+
+    #[test]
+    fn known_product() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = dgemm(&a, &b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn padding_rows_cols_is_bit_exact() {
+        // M/N zero padding never touches the contraction, so results are
+        // bit-identical — the runtime's bucket policy depends on this.
+        let mut rng = Rng::new(9);
+        let a = rand_mat(&mut rng, 13, 8);
+        let b = rand_mat(&mut rng, 8, 11);
+        let c = dgemm(&a, &b).unwrap();
+        let cp = dgemm(&a.padded(16, 8), &b.padded(8, 16)).unwrap();
+        for i in 0..13 {
+            for j in 0..11 {
+                assert_eq!(c.get(i, j), cp.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn padding_k_is_mathematically_exact() {
+        // K padding appends zero products; the value is unchanged up to
+        // summation-order rounding (the accumulators regroup).
+        let mut rng = Rng::new(10);
+        let a = rand_mat(&mut rng, 13, 7);
+        let b = rand_mat(&mut rng, 7, 11);
+        let c = dgemm(&a, &b).unwrap();
+        let cp = dgemm(&a.padded(13, 12), &b.padded(12, 11)).unwrap();
+        for i in 0..13 {
+            for j in 0..11 {
+                let (x, y) = (c.get(i, j), cp.get(i, j));
+                assert!((x - y).abs() <= 1e-14 * (1.0 + y.abs()));
+            }
+        }
+    }
+}

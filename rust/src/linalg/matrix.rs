@@ -1,0 +1,268 @@
+//! Row-major owned matrices over `f64` and `c64`.
+
+use crate::complex::c64;
+use crate::error::{Error, Result};
+
+/// Dense row-major matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat<T> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+/// Complex matrix alias used throughout MuST-mini.
+pub type ZMat = Mat<c64>;
+
+impl<T: Copy + Default> Mat<T> {
+    /// Zero-initialised `rows x cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![T::default(); rows * cols],
+        }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer len {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Flat row-major data.
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of the `r0..r0+nr` x `c0..c0+nc` block.
+    pub fn block(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Mat<T> {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols, "block OOB");
+        Mat::from_fn(nr, nc, |i, j| self.get(r0 + i, c0 + j))
+    }
+
+    /// Write `src` into the block starting at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, src: &Mat<T>) {
+        assert!(r0 + src.rows <= self.rows && c0 + src.cols <= self.cols);
+        for i in 0..src.rows {
+            let dst =
+                &mut self.data[(r0 + i) * self.cols + c0..(r0 + i) * self.cols + c0 + src.cols];
+            dst.copy_from_slice(src.row(i));
+        }
+    }
+
+    /// Zero-pad to `(rows, cols)` (must be >= current shape).
+    pub fn padded(&self, rows: usize, cols: usize) -> Mat<T> {
+        assert!(rows >= self.rows && cols >= self.cols);
+        let mut out = Mat::zeros(rows, cols);
+        out.set_block(0, 0, self);
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> Mat<T> {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+
+    /// Swap rows `a` and `b` over the full width.
+    pub fn swap_rows(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        let (a, b) = (a.min(b), a.max(b));
+        let (top, bot) = self.data.split_at_mut(b * self.cols);
+        top[a * self.cols..(a + 1) * self.cols].swap_with_slice(&mut bot[..self.cols]);
+    }
+}
+
+impl Mat<f64> {
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+}
+
+impl Mat<c64> {
+    /// Complex identity matrix.
+    pub fn zeye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { c64::ONE } else { c64::ZERO })
+    }
+
+    /// Real part as an `f64` matrix.
+    pub fn re(&self) -> Mat<f64> {
+        Mat::from_fn(self.rows, self.cols, |i, j| self.get(i, j).re)
+    }
+
+    /// Imaginary part as an `f64` matrix.
+    pub fn im(&self) -> Mat<f64> {
+        Mat::from_fn(self.rows, self.cols, |i, j| self.get(i, j).im)
+    }
+
+    /// Assemble from real and imaginary parts.
+    pub fn from_re_im(re: &Mat<f64>, im: &Mat<f64>) -> Result<Self> {
+        if re.rows != im.rows || re.cols != im.cols {
+            return Err(Error::Shape("re/im shape mismatch".into()));
+        }
+        Ok(Mat::from_fn(re.rows, re.cols, |i, j| {
+            c64(re.get(i, j), im.get(i, j))
+        }))
+    }
+}
+
+impl<T: Copy + Default + std::fmt::Debug> std::fmt::Debug for Mat<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show = self.rows.min(6);
+        for i in 0..show {
+            let cols = self.cols.min(6);
+            write!(f, "  ")?;
+            for j in 0..cols {
+                write!(f, "{:?} ", self.get(i, j))?;
+            }
+            writeln!(f, "{}", if self.cols > 6 { "..." } else { "" })?;
+        }
+        if self.rows > 6 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::complex::c64;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 4);
+        assert_eq!(m.get(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Mat::from_vec(2, 2, vec![1.0; 3]).is_err());
+        assert!(Mat::from_vec(2, 2, vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let m = Mat::from_fn(6, 6, |i, j| (i * 6 + j) as f64);
+        let b = m.block(2, 3, 3, 2);
+        assert_eq!(b.get(0, 0), m.get(2, 3));
+        let mut m2 = Mat::zeros(6, 6);
+        m2.set_block(2, 3, &b);
+        assert_eq!(m2.get(4, 4), m.get(4, 4));
+        assert_eq!(m2.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn padding_is_zero_extension() {
+        let m = Mat::from_fn(2, 3, |i, j| (i + j) as f64 + 1.0);
+        let p = m.padded(4, 5);
+        assert_eq!(p.get(1, 2), m.get(1, 2));
+        assert_eq!(p.get(3, 4), 0.0);
+        assert_eq!(p.block(0, 0, 2, 3).data(), m.data());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::from_fn(3, 5, |i, j| (i * 5 + j) as f64);
+        assert_eq!(m.transposed().transposed().data(), m.data());
+        assert_eq!(m.transposed().get(4, 2), m.get(2, 4));
+    }
+
+    #[test]
+    fn swap_rows_works() {
+        let mut m = Mat::from_fn(3, 3, |i, _| i as f64);
+        m.swap_rows(0, 2);
+        assert_eq!(m.get(0, 0), 2.0);
+        assert_eq!(m.get(2, 0), 0.0);
+        m.swap_rows(1, 1); // no-op
+        assert_eq!(m.get(1, 0), 1.0);
+    }
+
+    #[test]
+    fn complex_parts_roundtrip() {
+        let z = Mat::from_fn(2, 2, |i, j| c64(i as f64, j as f64));
+        let back = Mat::from_re_im(&z.re(), &z.im()).unwrap();
+        assert_eq!(back.data(), z.data());
+    }
+
+    #[test]
+    fn eye_is_identity() {
+        let i3 = Mat::eye(3);
+        assert_eq!(i3.get(0, 0), 1.0);
+        assert_eq!(i3.get(0, 1), 0.0);
+        let z3 = Mat::zeye(3);
+        assert_eq!(z3.get(2, 2), c64::ONE);
+    }
+}

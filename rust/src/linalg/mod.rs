@@ -1,0 +1,28 @@
+//! Host linear-algebra substrate (the "CPU BLAS/LAPACK" the paper's
+//! application links against).
+//!
+//! Everything is implemented from scratch: row-major matrices, real and
+//! complex GEMM (blocked, with a packed microkernel on the hot path),
+//! blocked LU with partial pivoting (`ZGETRF`), triangular solves
+//! (`ZTRSM`), and norm/condition estimators.  The blocked LU issues its
+//! trailing updates as ZGEMM calls through a caller-supplied hook so the
+//! coordinator can intercept them — exactly how MuST's LU spends its
+//! FLOPs in zgemm and gets offloaded by SCILIB-Accel.
+
+mod cond;
+mod dgemm;
+mod lu;
+mod matrix;
+mod norms;
+mod refinement;
+mod trsm;
+mod zgemm;
+
+pub use cond::{cond_estimate_1norm, inv_norm_estimate};
+pub use dgemm::{dgemm, dgemm_naive};
+pub use lu::{zgetrf_blocked, zgetrs, zlu_solve, ZLuFactors};
+pub use matrix::{Mat, ZMat};
+pub use norms::{fro_norm, max_abs, one_norm, zfro_norm, zmax_abs, zone_norm};
+pub use refinement::{cgetrf, zcgesv_ir, CLuFactors, IrResult};
+pub use trsm::{ztrsm_left_lower_unit, ztrsm_left_upper};
+pub use zgemm::{zgemm, zgemm_naive, ZgemmHook};

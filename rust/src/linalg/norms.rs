@@ -1,0 +1,92 @@
+//! Matrix norms for error analysis and condition estimation.
+
+use super::matrix::{Mat, ZMat};
+
+/// Max |a_ij|.
+pub fn max_abs(a: &Mat<f64>) -> f64 {
+    a.data().iter().fold(0.0f64, |m, v| m.max(v.abs()))
+}
+
+/// Frobenius norm.
+pub fn fro_norm(a: &Mat<f64>) -> f64 {
+    a.data().iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// Induced 1-norm (max column sum).
+pub fn one_norm(a: &Mat<f64>) -> f64 {
+    let mut best = 0.0f64;
+    for j in 0..a.cols() {
+        let mut s = 0.0;
+        for i in 0..a.rows() {
+            s += a.get(i, j).abs();
+        }
+        best = best.max(s);
+    }
+    best
+}
+
+/// Max |z_ij| for complex matrices.
+pub fn zmax_abs(a: &ZMat) -> f64 {
+    a.data().iter().fold(0.0f64, |m, z| m.max(z.abs()))
+}
+
+/// Complex Frobenius norm.
+pub fn zfro_norm(a: &ZMat) -> f64 {
+    a.data().iter().map(|z| z.norm_sqr()).sum::<f64>().sqrt()
+}
+
+/// Complex induced 1-norm (max column sum of moduli).
+pub fn zone_norm(a: &ZMat) -> f64 {
+    let mut best = 0.0f64;
+    for j in 0..a.cols() {
+        let mut s = 0.0;
+        for i in 0..a.rows() {
+            s += a.get(i, j).abs();
+        }
+        best = best.max(s);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::complex::c64;
+
+    #[test]
+    fn real_norms_on_known_matrix() {
+        let a = Mat::from_vec(2, 2, vec![1.0, -2.0, 3.0, -4.0]).unwrap();
+        assert_eq!(max_abs(&a), 4.0);
+        assert_eq!(one_norm(&a), 6.0); // column 1: |−2|+|−4| = 6
+        assert!((fro_norm(&a) - (30.0f64).sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn complex_norms_on_known_matrix() {
+        let a = Mat::from_vec(
+            1,
+            2,
+            vec![c64(3.0, 4.0), c64(0.0, -1.0)],
+        )
+        .unwrap();
+        assert_eq!(zmax_abs(&a), 5.0);
+        assert_eq!(zone_norm(&a), 5.0);
+        assert!((zfro_norm(&a) - 26.0f64.sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn norm_inequalities() {
+        let a = Mat::from_fn(5, 5, |i, j| ((i * 5 + j) as f64).sin());
+        // max_abs <= one_norm and fro within sqrt(n) of one_norm
+        assert!(max_abs(&a) <= one_norm(&a) + 1e-15);
+        assert!(fro_norm(&a) <= 5.0 * max_abs(&a) + 1e-15);
+    }
+
+    #[test]
+    fn zero_matrix_norms() {
+        let z = ZMat::zeros(3, 3);
+        assert_eq!(zmax_abs(&z), 0.0);
+        assert_eq!(zfro_norm(&z), 0.0);
+        assert_eq!(zone_norm(&z), 0.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Complex triangular solves (the ZTRSM pieces the blocked LU needs).
+//!
+//! These stay on the host: they are O(n^2 · nb) panel operations, far
+//! below the coordinator's offload threshold — just as SCILIB-Accel only
+//! intercepts the compute-intensive level-3 calls.
+
+use super::matrix::ZMat;
+use crate::complex::c64;
+
+/// Solve `L X = B` in place where `L` is the unit-lower-triangular part
+/// of `lu`'s `(r0..r0+n, c0..c0+n)` block.  `b` is `n x m`.
+pub fn ztrsm_left_lower_unit(lu: &ZMat, r0: usize, c0: usize, n: usize, b: &mut ZMat) {
+    debug_assert_eq!(b.rows(), n);
+    let m = b.cols();
+    for i in 0..n {
+        for p in 0..i {
+            let lip = lu.get(r0 + i, c0 + p);
+            if lip == c64::ZERO {
+                continue;
+            }
+            // b[i, :] -= L[i, p] * b[p, :]
+            for j in 0..m {
+                let v = b.get(i, j) - lip * b.get(p, j);
+                b.set(i, j, v);
+            }
+        }
+        // unit diagonal: no divide
+    }
+}
+
+/// Solve `U X = B` in place where `U` is the upper-triangular part of
+/// `lu`'s `(r0..r0+n, c0..c0+n)` block (non-unit diagonal).  `b` is `n x m`.
+pub fn ztrsm_left_upper(lu: &ZMat, r0: usize, c0: usize, n: usize, b: &mut ZMat) {
+    debug_assert_eq!(b.rows(), n);
+    let m = b.cols();
+    for ii in (0..n).rev() {
+        let diag = lu.get(r0 + ii, c0 + ii);
+        let dinv = diag.inv();
+        for j in 0..m {
+            let v = b.get(ii, j) * dinv;
+            b.set(ii, j, v);
+        }
+        for p in 0..ii {
+            let upi = lu.get(r0 + p, c0 + ii);
+            if upi == c64::ZERO {
+                continue;
+            }
+            for j in 0..m {
+                let v = b.get(p, j) - upi * b.get(ii, j);
+                b.set(p, j, v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{zgemm_naive, Mat};
+    use crate::testing::{for_cases, Rng};
+
+    #[test]
+    fn lower_unit_solve_roundtrip() {
+        for_cases(10, 31, |rng| {
+            let n = rng.index(1, 12);
+            let m = rng.index(1, 8);
+            // random unit lower triangular
+            let l = Mat::from_fn(n, n, |i, j| {
+                if i == j {
+                    c64::ONE
+                } else if j < i {
+                    rng.cnormal()
+                } else {
+                    c64::ZERO
+                }
+            });
+            let x = Mat::from_fn(n, m, |_, _| rng.cnormal());
+            let b = zgemm_naive(&l, &x).unwrap();
+            let mut solved = b.clone();
+            ztrsm_left_lower_unit(&l, 0, 0, n, &mut solved);
+            for (got, want) in solved.data().iter().zip(x.data()) {
+                assert!((*got - *want).abs() < 1e-10);
+            }
+        });
+    }
+
+    #[test]
+    fn upper_solve_roundtrip() {
+        for_cases(10, 37, |rng| {
+            let n = rng.index(1, 12);
+            let m = rng.index(1, 8);
+            let u = Mat::from_fn(n, n, |i, j| {
+                if i == j {
+                    rng.cnormal() + c64(3.0, 0.0) // well away from zero
+                } else if j > i {
+                    rng.cnormal()
+                } else {
+                    c64::ZERO
+                }
+            });
+            let x = Mat::from_fn(n, m, |_, _| rng.cnormal());
+            let b = zgemm_naive(&u, &x).unwrap();
+            let mut solved = b.clone();
+            ztrsm_left_upper(&u, 0, 0, n, &mut solved);
+            for (got, want) in solved.data().iter().zip(x.data()) {
+                assert!((*got - *want).abs() < 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn solve_on_submatrix_block() {
+        // L stored as a block inside a larger matrix (how the blocked LU
+        // uses it).
+        let mut rng = Rng::new(4);
+        let big = Mat::from_fn(8, 8, |_, _| rng.cnormal());
+        let mut l = big.clone();
+        for i in 0..4 {
+            l.set(2 + i, 2 + i, c64::ONE);
+            for j in 0..4 {
+                if j > i {
+                    l.set(2 + i, 2 + j, c64::ZERO);
+                }
+            }
+        }
+        let lblock = Mat::from_fn(4, 4, |i, j| {
+            if i == j {
+                c64::ONE
+            } else if j < i {
+                l.get(2 + i, 2 + j)
+            } else {
+                c64::ZERO
+            }
+        });
+        let x = Mat::from_fn(4, 3, |_, _| rng.cnormal());
+        let b = zgemm_naive(&lblock, &x).unwrap();
+        let mut solved = b.clone();
+        ztrsm_left_lower_unit(&l, 2, 2, 4, &mut solved);
+        for (got, want) in solved.data().iter().zip(x.data()) {
+            assert!((*got - *want).abs() < 1e-10);
+        }
+    }
+}

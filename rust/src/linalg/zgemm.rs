@@ -1,0 +1,157 @@
+//! Complex GEMM, and the hook type that lets the coordinator intercept
+//! the trailing-update products of the blocked LU (the ZGEMM calls MuST
+//! spends its FLOPs in).
+
+use super::matrix::ZMat;
+use crate::complex::c64;
+use crate::error::{Error, Result};
+#[cfg(test)]
+use super::matrix::Mat;
+
+/// A ZGEMM implementation the LU can call instead of the host one.
+///
+/// This is the interception seam (DESIGN.md §Substitutions: the analogue
+/// of SCILIB-Accel's DBI trampoline): the application's linear algebra is
+/// parameterised over "whatever provides ZGEMM", and the coordinator
+/// plugs itself in here.
+pub type ZgemmHook<'a> = &'a dyn Fn(&ZMat, &ZMat) -> Result<ZMat>;
+
+/// Textbook complex triple loop (test oracle).
+pub fn zgemm_naive(a: &ZMat, b: &ZMat) -> Result<ZMat> {
+    check(a, b)?;
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = ZMat::zeros(m, n);
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a.get(i, p);
+            for j in 0..n {
+                let v = c.get(i, j) + aip * b.get(p, j);
+                c.set(i, j, v);
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// Host complex GEMM via split real arithmetic:
+/// packs re/im planes once, then four real dot products per output.
+///
+/// Cre = Ar·Br − Ai·Bi,  Cim = Ar·Bi + Ai·Br  — the same 4-real-GEMM
+/// decomposition the coordinator uses for the offloaded path, so host
+/// and device paths agree in structure (ozIMMU splits re/im likewise).
+pub fn zgemm(a: &ZMat, b: &ZMat) -> Result<ZMat> {
+    check(a, b)?;
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    // Pack A rows (re, im) and B^T columns (re, im) contiguously.
+    let mut ar = vec![0.0; m * k];
+    let mut ai = vec![0.0; m * k];
+    for i in 0..m {
+        for p in 0..k {
+            let z = a.get(i, p);
+            ar[i * k + p] = z.re;
+            ai[i * k + p] = z.im;
+        }
+    }
+    let mut btr = vec![0.0; n * k];
+    let mut bti = vec![0.0; n * k];
+    for p in 0..k {
+        for j in 0..n {
+            let z = b.get(p, j);
+            btr[j * k + p] = z.re;
+            bti[j * k + p] = z.im;
+        }
+    }
+    let mut c = ZMat::zeros(m, n);
+    for i in 0..m {
+        let (arr, aii) = (&ar[i * k..(i + 1) * k], &ai[i * k..(i + 1) * k]);
+        for j in 0..n {
+            let (brr, bii) = (&btr[j * k..(j + 1) * k], &bti[j * k..(j + 1) * k]);
+            let (mut srr, mut sii, mut sri, mut sir) = (0.0, 0.0, 0.0, 0.0);
+            for p in 0..k {
+                srr += arr[p] * brr[p];
+                sii += aii[p] * bii[p];
+                sri += arr[p] * bii[p];
+                sir += aii[p] * brr[p];
+            }
+            c.set(i, j, c64(srr - sii, sri + sir));
+        }
+    }
+    Ok(c)
+}
+
+fn check(a: &ZMat, b: &ZMat) -> Result<()> {
+    if a.cols() != b.rows() {
+        return Err(Error::Shape(format!(
+            "zgemm: {}x{} @ {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{for_cases, Rng};
+
+    fn rand_zmat(rng: &mut Rng, r: usize, c: usize) -> ZMat {
+        Mat::from_fn(r, c, |_, _| rng.cnormal())
+    }
+
+    #[test]
+    fn matches_naive() {
+        for_cases(15, 21, |rng| {
+            let (m, k, n) = (rng.index(1, 24), rng.index(1, 24), rng.index(1, 24));
+            let a = rand_zmat(rng, m, k);
+            let b = rand_zmat(rng, k, n);
+            let fast = zgemm(&a, &b).unwrap();
+            let slow = zgemm_naive(&a, &b).unwrap();
+            for (x, y) in fast.data().iter().zip(slow.data()) {
+                assert!((*x - *y).abs() <= 1e-12 * (1.0 + y.abs()));
+            }
+        });
+    }
+
+    #[test]
+    fn complex_identity() {
+        let mut rng = Rng::new(2);
+        let a = rand_zmat(&mut rng, 9, 9);
+        let c = zgemm(&a, &Mat::zeye(9)).unwrap();
+        for (x, y) in c.data().iter().zip(a.data()) {
+            assert!((*x - *y).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn i_squared_is_minus_one() {
+        let i2 = Mat::from_fn(2, 2, |r, c| if r == c { c64::I } else { c64::ZERO });
+        let c = zgemm(&i2, &i2).unwrap();
+        assert!((c.get(0, 0) - c64(-1.0, 0.0)).abs() < 1e-15);
+        assert_eq!(c.get(0, 1), c64::ZERO);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a = ZMat::zeros(2, 3);
+        let b = ZMat::zeros(4, 2);
+        assert!(zgemm(&a, &b).is_err());
+    }
+
+    #[test]
+    fn conjugation_distributes() {
+        // conj(A) conj(B) == conj(A B)
+        let mut rng = Rng::new(8);
+        let a = rand_zmat(&mut rng, 7, 7);
+        let b = rand_zmat(&mut rng, 7, 7);
+        let ab = zgemm(&a, &b).unwrap();
+        let ac = Mat::from_fn(7, 7, |i, j| a.get(i, j).conj());
+        let bc = Mat::from_fn(7, 7, |i, j| b.get(i, j).conj());
+        let acbc = zgemm(&ac, &bc).unwrap();
+        for (x, y) in acbc.data().iter().zip(ab.data()) {
+            assert!((*x - y.conj()).abs() < 1e-12);
+        }
+    }
+}

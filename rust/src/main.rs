@@ -1,0 +1,208 @@
+//! `ozaccel` — leader binary: run the paper's experiments against the
+//! AOT artifacts (build them once with `make artifacts`).
+
+use std::process::ExitCode;
+
+use ozaccel::bench::Bench;
+use ozaccel::cli::Cli;
+use ozaccel::config::RunConfig;
+use ozaccel::coordinator::{DataMoveStrategy, Dispatcher, RoutingPolicy};
+use ozaccel::error::Result;
+use ozaccel::experiments as exp;
+use ozaccel::must::params::{mt_u56_mini, tiny_case};
+use ozaccel::ozaki::ComputeMode;
+use ozaccel::perfmodel::{GB200, GH200};
+
+const HELP: &str = "\
+ozaccel — tunable precision emulation via automatic BLAS offloading
+(reproduction of Liu, Li & Wang, PEARC'25)
+
+USAGE: ozaccel <SUBCOMMAND> [flags]
+
+SUBCOMMANDS
+  table1      E1: accuracy vs split number across SCF iterations (Table 1)
+  figure1     E2: per-energy-point G(z) error on the contour (Figure 1)
+  bench-gemm  E3: DGEMM TFLOPS, measured + GH200/GB200 models (§4)
+  must-scf    E4: end-to-end MuST-mini run with offload report (§4 timing)
+  datamove    E5: data-movement strategy comparison (§2.1)
+  adaptive    E6: adaptive-precision ablation (§4 future work)
+  modes       list supported compute modes
+  help        this text
+
+COMMON FLAGS
+  --config <file.toml>      load a run configuration
+  --case tiny|mt-u56-mini   select the physics case (default mt-u56-mini)
+  --mode <dgemm|fp64_int8_N>  compute mode (or env OZIMMU_COMPUTE_MODE)
+  --splits 3,4,...          split sweep for table1/figure1/bench-gemm
+  --strategy copy|unified|first_touch
+  --gpu gh200|gb200         GPU to model
+  --force-host              never offload (pure host execution)
+  --out <dir>               output directory (default results/)
+  --quick                   smaller workloads for smoke runs
+";
+
+fn main() -> ExitCode {
+    ozaccel::logging::init();
+    let cli = match Cli::from_env() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match run(&cli) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn build_config(cli: &Cli) -> Result<RunConfig> {
+    let mut cfg = match cli.flag("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
+        None => {
+            let mut c = RunConfig::default();
+            c.apply_env()?;
+            c
+        }
+    };
+    if let Some(case) = cli.flag("case") {
+        cfg.case = match case {
+            "tiny" => tiny_case(),
+            "mt-u56-mini" => mt_u56_mini(),
+            other => {
+                return Err(ozaccel::Error::Config(format!("unknown case {other:?}")))
+            }
+        };
+    }
+    if let Some(mode) = cli.flag("mode") {
+        cfg.dispatch.mode = ComputeMode::parse(mode)?;
+    }
+    if let Some(s) = cli.flag_u32_list("splits")? {
+        cfg.sweep_splits = s;
+    }
+    if let Some(st) = cli.flag("strategy") {
+        cfg.dispatch.strategy = DataMoveStrategy::parse(st)
+            .ok_or_else(|| ozaccel::Error::Config(format!("bad strategy {st:?}")))?;
+    }
+    if let Some(g) = cli.flag("gpu") {
+        cfg.dispatch.gpu = match g {
+            "gh200" => GH200,
+            "gb200" => GB200,
+            other => return Err(ozaccel::Error::Config(format!("unknown gpu {other:?}"))),
+        };
+    }
+    if cli.flag_bool("force-host") {
+        cfg.dispatch.policy = RoutingPolicy {
+            force_host: true,
+            ..cfg.dispatch.policy
+        };
+    }
+    if let Some(dir) = cli.flag("out") {
+        cfg.output_dir = dir.into();
+    }
+    if cli.flag_bool("quick") {
+        cfg.case = tiny_case();
+        cfg.sweep_splits = vec![3, 6, 9];
+    }
+    Ok(cfg)
+}
+
+fn run(cli: &Cli) -> Result<()> {
+    match cli.subcommand.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "modes" => {
+            println!("dgemm");
+            for s in 3..=18 {
+                println!("fp64_int8_{s}");
+            }
+            Ok(())
+        }
+        "table1" => {
+            let cfg = build_config(cli)?;
+            let dispatcher = Dispatcher::new(cfg.dispatch.clone())?;
+            let t = exp::run_table1(&cfg.case, &dispatcher, &cfg.sweep_splits)?;
+            println!("{}", t.render());
+            let path = exp::write_output(&cfg.output_dir, "table1.csv", &t.to_csv())?;
+            println!("wrote {}", path.display());
+            Ok(())
+        }
+        "figure1" => {
+            let cfg = build_config(cli)?;
+            let dispatcher = Dispatcher::new(cfg.dispatch.clone())?;
+            let splits = if cfg.sweep_splits.len() == 7 {
+                vec![3, 5] // paper default
+            } else {
+                cfg.sweep_splits.clone()
+            };
+            let series = exp::run_figure1(&cfg.case, &dispatcher, &splits)?;
+            for s in &series {
+                println!("{}", exp::ascii_plot(s, 14));
+            }
+            let csv = exp::figure1::to_csv(&series);
+            let path = exp::write_output(&cfg.output_dir, "figure1.csv", &csv)?;
+            println!("wrote {}", path.display());
+            Ok(())
+        }
+        "bench-gemm" => {
+            let cfg = build_config(cli)?;
+            let runtime = ozaccel::runtime::Runtime::from_default_dir().ok();
+            let sizes: Vec<usize> = if cli.flag_bool("quick") {
+                vec![128, 256]
+            } else {
+                vec![128, 256, 512, 2048]
+            };
+            let rows = exp::run_gemm_bench(
+                runtime.as_ref(),
+                &sizes,
+                &cfg.sweep_splits,
+                if cli.flag_bool("quick") {
+                    Bench::quick()
+                } else {
+                    Bench::default()
+                },
+            )?;
+            println!("{}", exp::gemm_bench::render(&rows));
+            let path = exp::write_output(
+                &cfg.output_dir,
+                "gemm_bench.csv",
+                &exp::gemm_bench::to_csv(&rows),
+            )?;
+            println!("wrote {}", path.display());
+            Ok(())
+        }
+        "must-scf" => {
+            let cfg = build_config(cli)?;
+            let dispatcher = Dispatcher::new(cfg.dispatch.clone())?;
+            let modes = vec![ComputeMode::Dgemm, cfg.dispatch.mode];
+            let rows = exp::run_e2e_timing(&cfg.case, &dispatcher, &modes)?;
+            println!("{}", exp::e2e_time::render(&rows, cfg.dispatch.gpu.name));
+            println!("{}", dispatcher.report().render());
+            Ok(())
+        }
+        "datamove" => {
+            let cfg = build_config(cli)?;
+            let rows =
+                exp::run_datamove_comparison(&cfg.case, &cfg.dispatch, cfg.dispatch.mode)?;
+            println!("{}", exp::datamove::render(&rows));
+            Ok(())
+        }
+        "adaptive" => {
+            let cfg = build_config(cli)?;
+            let dispatcher = Dispatcher::new(cfg.dispatch.clone())?;
+            let fixed: Vec<u32> = cfg.sweep_splits.clone();
+            let rows =
+                exp::run_adaptive_ablation(&cfg.case, &dispatcher, &fixed, &[1e-6, 1e-9])?;
+            println!("{}", exp::adaptive::render(&rows));
+            Ok(())
+        }
+        other => Err(ozaccel::Error::Config(format!(
+            "unknown subcommand {other:?}; try `ozaccel help`"
+        ))),
+    }
+}

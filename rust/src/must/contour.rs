@@ -1,0 +1,169 @@
+//! Complex-energy contour (the black dots of the paper's Figure 1).
+//!
+//! LSMS integrates the Green function over a contour that leaves the
+//! real axis at the band bottom, arcs through the upper half plane and
+//! comes back down at (or just above) the Fermi energy.  We use a
+//! semicircle sampled at Gauss–Legendre points in angle; the weights
+//! carry the `dz` factor so `∫ f(z) dz ≈ Σ w_i f(z_i)`.
+
+use crate::complex::c64;
+
+/// One quadrature node on the contour.
+#[derive(Clone, Copy, Debug)]
+pub struct ContourPoint {
+    pub z: c64,
+    /// Quadrature weight including dz (complex).
+    pub w: c64,
+    /// Angle parameter (π = band bottom, 0 = upper end).
+    pub theta: f64,
+}
+
+/// Semicircular contour from `e_bottom` to `e_top`.
+#[derive(Clone, Debug)]
+pub struct Contour {
+    pub e_bottom: f64,
+    pub e_top: f64,
+    pub points: Vec<ContourPoint>,
+}
+
+impl Contour {
+    /// Build with `n` Gauss–Legendre nodes, ordered counterclockwise
+    /// (from the band bottom up over the arc and down towards `e_top`,
+    /// matching the paper's "move counterclockwise along the contour").
+    pub fn semicircle(e_bottom: f64, e_top: f64, n: usize) -> Self {
+        let c = 0.5 * (e_bottom + e_top);
+        let r = 0.5 * (e_top - e_bottom);
+        let (xs, ws) = gauss_legendre(n);
+        // θ from π → 0;  z = c + r e^{iθ};  dz = i r e^{iθ} dθ
+        let mut points = Vec::with_capacity(n);
+        for (x, w) in xs.iter().zip(&ws) {
+            // map x in [-1,1] to θ in [π, 0]: θ = π(1-x)/2
+            let theta = std::f64::consts::PI * (1.0 - x) / 2.0;
+            let e_itheta = c64(0.0, theta).exp();
+            let z = c64::real(c) + e_itheta * r;
+            let dz_dtheta = c64::I * e_itheta * r;
+            let dtheta_dx = -std::f64::consts::PI / 2.0;
+            points.push(ContourPoint {
+                z,
+                w: dz_dtheta * (w * dtheta_dx),
+                theta,
+            });
+        }
+        Contour {
+            e_bottom,
+            e_top,
+            points,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// Gauss–Legendre nodes/weights on [-1, 1] by Newton iteration on the
+/// Legendre polynomial (plenty for n ≤ 128).
+pub fn gauss_legendre(n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut xs = vec![0.0; n];
+    let mut ws = vec![0.0; n];
+    let m = n.div_ceil(2);
+    for i in 0..m {
+        // Chebyshev initial guess
+        let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+        let mut dp = 0.0;
+        for _ in 0..100 {
+            // Legendre P_n(x) and P'_n(x) by recurrence
+            let (mut p0, mut p1) = (1.0, x);
+            for k in 2..=n {
+                let p2 = ((2 * k - 1) as f64 * x * p1 - (k - 1) as f64 * p0) / k as f64;
+                p0 = p1;
+                p1 = p2;
+            }
+            dp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+            let dx = p1 / dp;
+            x -= dx;
+            if dx.abs() < 1e-15 {
+                break;
+            }
+        }
+        xs[i] = -x;
+        xs[n - 1 - i] = x;
+        let w = 2.0 / ((1.0 - x * x) * dp * dp);
+        ws[i] = w;
+        ws[n - 1 - i] = w;
+    }
+    (xs, ws)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gl_integrates_polynomials_exactly() {
+        let (xs, ws) = gauss_legendre(8);
+        // degree <= 15 exact
+        for p in 0..=15usize {
+            let got: f64 = xs.iter().zip(&ws).map(|(x, w)| w * x.powi(p as i32)).sum();
+            let want = if p % 2 == 0 { 2.0 / (p as f64 + 1.0) } else { 0.0 };
+            assert!((got - want).abs() < 1e-13, "degree {p}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn gl_weights_sum_to_two() {
+        for n in [2, 5, 16, 31, 64] {
+            let (_, ws) = gauss_legendre(n);
+            let s: f64 = ws.iter().sum();
+            assert!((s - 2.0).abs() < 1e-12, "n={n}: {s}");
+        }
+    }
+
+    #[test]
+    fn contour_endpoints_and_ordering() {
+        let c = Contour::semicircle(-0.3, 0.8, 24);
+        assert_eq!(c.len(), 24);
+        // first point near band bottom, last near e_top, all Im > 0
+        assert!(c.points[0].z.re < -0.2);
+        assert!(c.points[23].z.re > 0.7);
+        for p in &c.points {
+            assert!(p.z.im > 0.0, "contour must stay in the upper half plane");
+        }
+        // counterclockwise: Re increases monotonically for a semicircle
+        for w in c.points.windows(2) {
+            assert!(w[1].z.re > w[0].z.re);
+            assert!(w[1].theta < w[0].theta);
+        }
+    }
+
+    #[test]
+    fn contour_integrates_analytic_functions() {
+        // ∮ along the open semicircle of f(z)=1: ∫ dz = e_top − e_bottom
+        let c = Contour::semicircle(-0.3, 0.8, 32);
+        let s: c64 = c.points.iter().map(|p| p.w).sum();
+        assert!((s - c64::real(1.1)).abs() < 1e-10, "{s:?}");
+        // ∫ z dz = (e_top² − e_bottom²)/2
+        let s2: c64 = c.points.iter().map(|p| p.w * p.z).sum();
+        let want = (0.8f64 * 0.8 - 0.3 * 0.3) / 2.0;
+        assert!((s2 - c64::real(want)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn cauchy_pole_below_axis() {
+        // f(z) = 1/(z − p) with p below the real axis: the contour value
+        // matches the straight-line integral along the real axis only up
+        // to the closed-loop residue; here just check analyticity by
+        // comparing two resolutions.
+        let p = c64(0.25, -0.05);
+        let f = |z: c64| (z - p).inv();
+        let c1 = Contour::semicircle(-0.3, 0.8, 24);
+        let c2 = Contour::semicircle(-0.3, 0.8, 48);
+        let s1: c64 = c1.points.iter().map(|q| q.w * f(q.z)).sum();
+        let s2: c64 = c2.points.iter().map(|q| q.w * f(q.z)).sum();
+        assert!((s1 - s2).abs() < 1e-8, "quadrature not converged: {s1:?} {s2:?}");
+    }
+}

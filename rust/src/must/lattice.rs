@@ -1,0 +1,107 @@
+//! FCC cluster geometry.
+
+/// A cluster of atomic sites (positions in bohr).
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub alat: f64,
+    pub sites: Vec<[f64; 3]>,
+}
+
+impl Cluster {
+    /// Build an FCC cluster of `n` sites: origin plus the closest
+    /// lattice vectors, deterministically ordered (distance, then
+    /// lexicographic) so runs are reproducible.
+    pub fn fcc(alat: f64, n: usize) -> Self {
+        let mut pts: Vec<[f64; 3]> = Vec::new();
+        let r = 3; // generation range in conventional cells
+        for i in -r..=r {
+            for j in -r..=r {
+                for k in -r..=r {
+                    // FCC primitive vectors a/2 (0,1,1), (1,0,1), (1,1,0)
+                    let x = 0.5 * alat * (j as f64 + k as f64);
+                    let y = 0.5 * alat * (i as f64 + k as f64);
+                    let z = 0.5 * alat * (i as f64 + j as f64);
+                    pts.push([x, y, z]);
+                }
+            }
+        }
+        pts.sort_by(|a, b| {
+            let da = a[0] * a[0] + a[1] * a[1] + a[2] * a[2];
+            let db = b[0] * b[0] + b[1] * b[1] + b[2] * b[2];
+            da.partial_cmp(&db)
+                .unwrap()
+                .then(a.partial_cmp(b).unwrap())
+        });
+        pts.truncate(n);
+        assert_eq!(pts.len(), n, "generation range too small for n={n}");
+        Cluster { alat, sites: pts }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sites.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    /// Difference vector R_ij = R_j − R_i.
+    pub fn rij(&self, i: usize, j: usize) -> [f64; 3] {
+        let (a, b) = (self.sites[i], self.sites[j]);
+        [b[0] - a[0], b[1] - a[1], b[2] - a[2]]
+    }
+
+    /// |R_ij|.
+    pub fn dist(&self, i: usize, j: usize) -> f64 {
+        let r = self.rij(i, j);
+        (r[0] * r[0] + r[1] * r[1] + r[2] * r[2]).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn origin_first_and_nn_distance() {
+        let c = Cluster::fcc(6.8, 16);
+        assert_eq!(c.sites[0], [0.0, 0.0, 0.0]);
+        // FCC nearest-neighbour distance = a/√2
+        let nn = c.dist(0, 1);
+        assert!((nn - 6.8 / 2.0f64.sqrt()).abs() < 1e-12);
+        // 12 nearest neighbours at the same distance
+        let same: usize = (1..13).filter(|&j| (c.dist(0, j) - nn).abs() < 1e-9).count();
+        assert_eq!(same, 12);
+    }
+
+    #[test]
+    fn sites_are_distinct() {
+        let c = Cluster::fcc(6.8, 16);
+        for i in 0..c.len() {
+            for j in 0..i {
+                assert!(c.dist(i, j) > 1.0, "sites {i},{j} coincide");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_ordering() {
+        let a = Cluster::fcc(6.8, 16);
+        let b = Cluster::fcc(6.8, 16);
+        assert_eq!(a.sites, b.sites);
+    }
+
+    #[test]
+    fn rij_antisymmetry() {
+        let c = Cluster::fcc(5.0, 8);
+        for i in 0..8 {
+            for j in 0..8 {
+                let rij = c.rij(i, j);
+                let rji = c.rij(j, i);
+                for d in 0..3 {
+                    assert_eq!(rij[d], -rji[d]);
+                }
+            }
+        }
+    }
+}

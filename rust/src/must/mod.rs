@@ -1,0 +1,40 @@
+//! MuST-mini: a multiple-scattering (KKR/LSMS-style) electronic-structure
+//! solver — the application substrate of the paper's accuracy study.
+//!
+//! The paper runs the `MT u56` LSMS case from the MuST suite; its solver
+//! inverts the KKR matrix `t(z)⁻¹ − G0(z)` with LU at every point of a
+//! complex-energy contour, making ZGEMM the dominant kernel.  MuST-mini
+//! rebuilds that operator structure from scratch (DESIGN.md
+//! §Substitutions #3):
+//!
+//! * [`special`] — spherical Bessel/Hankel, spherical harmonics,
+//!   Wigner-3j / Gaunt coefficients;
+//! * [`lattice`] — FCC cluster geometry;
+//! * [`tmatrix`] — single-site scattering with a d-wave resonance pinned
+//!   at 0.72 Ry (this is what puts the poles of G(z) near the Fermi
+//!   energy, reproducing the paper's Figure-1 error peak);
+//! * [`structure`] — free-space structure constants `G0_{LL'}(R; z)`;
+//! * [`tau`] — the scattering-path matrix τ = (t⁻¹ − G0)⁻¹, solved by
+//!   blocked LU whose trailing updates go through the offload
+//!   [`Dispatcher`](crate::coordinator::Dispatcher);
+//! * [`contour`] — semicircular Gauss–Legendre energy contour;
+//! * [`greens`] — the observable `G(z)` (the paper's `Int[Z*Tau*Z − Z*J]`);
+//! * [`scf`] — DOS, Fermi energy, band energy, and the 3-iteration SCF
+//!   loop behind Table 1.
+
+pub mod contour;
+pub mod greens;
+pub mod lattice;
+pub mod params;
+pub mod scf;
+pub mod special;
+pub mod structure;
+pub mod tau;
+pub mod tmatrix;
+
+pub use contour::{Contour, ContourPoint};
+pub use greens::GreensCalculator;
+pub use params::CaseParams;
+pub use scf::{IterationResult, ScfDriver, ScfResult};
+pub use tau::TauSolver;
+pub use tmatrix::TMatrix;

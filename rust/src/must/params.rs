@@ -1,0 +1,130 @@
+//! Case definition — `mt-u56-mini`, the stand-in for the paper's
+//! MuST `MT u56` benchmark case (DESIGN.md §Substitutions #3).
+
+/// All physical + numerical parameters of a MuST-mini run.
+#[derive(Clone, Debug)]
+pub struct CaseParams {
+    /// Angular-momentum cutoff (channels per site = (lmax+1)²).
+    pub lmax: i32,
+    /// Cluster size; KKR matrix dimension = n_sites · (lmax+1)².
+    pub n_sites: usize,
+    /// FCC lattice constant (bohr).
+    pub alat: f64,
+    /// Contour bottom (Ry) — below the band.
+    pub e_bottom: f64,
+    /// Contour top (Ry) — just above the Fermi energy.
+    pub e_top: f64,
+    /// Contour quadrature points.
+    pub n_contour: usize,
+    /// Resonant channel (d-wave, like a transition metal).
+    pub resonance_l: i32,
+    /// Resonance centre (Ry) — 0.72, pinning the ill-conditioned region
+    /// of Figure 1 near the Fermi energy.
+    pub e_res: f64,
+    /// Resonance width Γ (Ry).
+    pub gamma: f64,
+    /// Hard-sphere (muffin-tin) radius for the background scattering,
+    /// bohr.  Must be < half the nearest-neighbour distance.
+    pub a_hs: f64,
+    /// Electron-count target for the Fermi search.
+    pub n_electrons: f64,
+    /// Imaginary offset for real-axis DOS evaluation (Ry).
+    pub eta_dos: f64,
+    /// DOS mesh for the Fermi search: [dos_emin, dos_emax] with n_dos pts.
+    pub dos_emin: f64,
+    pub dos_emax: f64,
+    pub n_dos: usize,
+    /// Blocked-LU panel width (64 ⇒ trailing updates hit the artifact
+    /// buckets exactly).
+    pub nb: usize,
+    /// SCF mixing for the potential-shift update.
+    pub scf_mix: f64,
+    /// SCF iterations (Table 1 uses 3).
+    pub iterations: usize,
+}
+
+impl CaseParams {
+    /// Channels per site.
+    pub fn n_lm(&self) -> usize {
+        ((self.lmax + 1) * (self.lmax + 1)) as usize
+    }
+
+    /// KKR matrix dimension.
+    pub fn dim(&self) -> usize {
+        self.n_sites * self.n_lm()
+    }
+}
+
+/// The default Table-1 / Figure-1 case: 16-site FCC cluster, lmax = 3
+/// (dim-256 KKR matrix), 24-point contour ending just above the
+/// resonance at 0.72 Ry.
+pub fn mt_u56_mini() -> CaseParams {
+    CaseParams {
+        lmax: 3,
+        n_sites: 16,
+        alat: 6.8,
+        e_bottom: -0.3,
+        e_top: 0.78,
+        n_contour: 24,
+        resonance_l: 2,
+        e_res: 0.72,
+        gamma: 0.045,
+        a_hs: 2.2,
+        n_electrons: f64::NAN, // calibrated by ScfDriver::calibrate_charge
+        eta_dos: 0.012,
+        dos_emin: 0.55,
+        dos_emax: 0.88,
+        n_dos: 28,
+        nb: 64,
+        scf_mix: 0.4,
+        iterations: 3,
+    }
+}
+
+/// A reduced case for tests and CI: 4 sites, lmax = 2 (dim 36), short
+/// contour.  Exercises every code path in seconds.
+pub fn tiny_case() -> CaseParams {
+    CaseParams {
+        lmax: 2,
+        n_sites: 4,
+        alat: 6.8,
+        e_bottom: -0.3,
+        e_top: 0.78,
+        n_contour: 8,
+        resonance_l: 2,
+        e_res: 0.72,
+        gamma: 0.045,
+        a_hs: 2.2,
+        n_electrons: f64::NAN,
+        eta_dos: 0.015,
+        dos_emin: 0.55,
+        dos_emax: 0.88,
+        n_dos: 10,
+        nb: 16,
+        scf_mix: 0.4,
+        iterations: 3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensions() {
+        let p = mt_u56_mini();
+        assert_eq!(p.n_lm(), 16);
+        assert_eq!(p.dim(), 256);
+        let t = tiny_case();
+        assert_eq!(t.dim(), 36);
+    }
+
+    #[test]
+    fn resonance_near_paper_fermi_energy() {
+        let p = mt_u56_mini();
+        assert!((p.e_res - 0.72).abs() < 1e-12);
+        assert!(p.e_top > p.e_res, "contour must reach past the resonance");
+        // hard-sphere radius below half the FCC nearest-neighbour distance
+        assert!(p.a_hs < p.alat / 2.0f64.sqrt() / 2.0);
+    }
+}

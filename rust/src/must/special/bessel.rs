@@ -1,0 +1,187 @@
+//! Spherical Bessel / Hankel functions of complex argument.
+//!
+//! Multiple-scattering structure constants need `h⁺_l(κR)` with complex
+//! κ = √z on the energy contour; the t-matrix normalisation uses `j_l`.
+//! For the l ≤ 8 range of this solver the closed finite sums are exact
+//! and stable:
+//!
+//!   h⁺_l(x) = (−i)^{l+1} e^{ix}/x · Σ_{k=0}^{l} (l+k)!/(k!(l−k)!) · (−2ix)^{−k}
+//!   j_l     = (h⁺_l + h⁻_l)/2,  y_l = (h⁺_l − h⁻_l)/(2i)
+//!
+//! with the usual small-|x| series fallback for `j_l` where the h⁺/h⁻
+//! combination would cancel catastrophically.
+
+use crate::complex::c64;
+
+use super::factorial::factorial;
+
+/// h⁺_l(x) = j_l(x) + i·y_l(x) (spherical Hankel of the first kind).
+pub fn hankel1_sph(l: i32, x: c64) -> c64 {
+    debug_assert!(l >= 0);
+    let ix = c64::I * x;
+    let pref = (-c64::I).powi(l + 1) * ix.exp() / x;
+    let mut sum = c64::ZERO;
+    // (−2ix)^{−k} accumulated incrementally
+    let mut term = c64::ONE;
+    let inv = ((-c64(0.0, 2.0)) * x).inv();
+    for k in 0..=l {
+        let coef = factorial(l + k) / (factorial(k) * factorial(l - k));
+        sum += term * coef;
+        term *= inv;
+    }
+    pref * sum
+}
+
+/// h⁻_l(x) = j_l(x) − i·y_l(x) = conj-form of h⁺ (exact finite sum).
+pub fn hankel2_sph(l: i32, x: c64) -> c64 {
+    let ix = c64::I * x;
+    let pref = c64::I.powi(l + 1) * (-ix).exp() / x;
+    let mut sum = c64::ZERO;
+    let mut term = c64::ONE;
+    let inv = (c64(0.0, 2.0) * x).inv();
+    for k in 0..=l {
+        let coef = factorial(l + k) / (factorial(k) * factorial(l - k));
+        sum += term * coef;
+        term *= inv;
+    }
+    pref * sum
+}
+
+/// Spherical Bessel j_l(x) for complex x.
+pub fn sph_bessel_j(l: i32, x: c64) -> c64 {
+    if x.abs() < 0.5 + 0.35 * l as f64 {
+        return j_series(l, x);
+    }
+    (hankel1_sph(l, x) + hankel2_sph(l, x)) * 0.5
+}
+
+/// Spherical Bessel y_l(x) for complex x.
+pub fn sph_bessel_y(l: i32, x: c64) -> c64 {
+    (hankel1_sph(l, x) - hankel2_sph(l, x)) / c64(0.0, 2.0)
+}
+
+/// Power series j_l(x) = x^l Σ_k (−x²/2)^k / (k! (2l+2k+1)!!).
+fn j_series(l: i32, x: c64) -> c64 {
+    let x2 = x * x * (-0.5);
+    let mut dfact = 1.0; // (2l+1)!!
+    for i in 0..=l {
+        dfact *= (2 * i + 1) as f64;
+    }
+    let mut term = x.powi(l) / dfact;
+    let mut sum = term;
+    for k in 1..40 {
+        term = term * x2 / (k as f64 * (2 * l + 2 * k + 1) as f64);
+        sum += term;
+        if term.abs() < 1e-18 * sum.abs() {
+            break;
+        }
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::for_cases;
+
+    fn close(a: c64, b: c64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn j0_closed_form() {
+        for_cases(30, 11, |rng| {
+            let x = c64(rng.range(0.2, 8.0), rng.range(-1.5, 1.5));
+            let want = x.sin() / x;
+            assert!(close(sph_bessel_j(0, x), want, 1e-12));
+        });
+    }
+
+    #[test]
+    fn j1_and_y0_closed_forms() {
+        for_cases(30, 13, |rng| {
+            let x = c64(rng.range(0.3, 8.0), rng.range(-1.0, 1.0));
+            let j1 = x.sin() / (x * x) - x.cos() / x;
+            assert!(close(sph_bessel_j(1, x), j1, 1e-11));
+            let y0 = -(x.cos()) / x;
+            assert!(close(sph_bessel_y(0, x), y0, 1e-11));
+        });
+    }
+
+    #[test]
+    fn h0_is_exponential() {
+        // h0+(x) = −i e^{ix}/x
+        for_cases(20, 17, |rng| {
+            let x = c64(rng.range(0.2, 6.0), rng.range(0.0, 2.0));
+            let want = (c64::I * x).exp() * (-c64::I) / x;
+            assert!(close(hankel1_sph(0, x), want, 1e-13));
+        });
+    }
+
+    #[test]
+    fn recurrence_consistency() {
+        // f_{l-1} + f_{l+1} = (2l+1)/x f_l holds for j, y, h+
+        for_cases(20, 19, |rng| {
+            let x = c64(rng.range(1.0, 7.0), rng.range(-0.8, 0.8));
+            for l in 1..=6 {
+                for f in [sph_bessel_j, sph_bessel_y, hankel1_sph] {
+                    let lhs = f(l - 1, x) + f(l + 1, x);
+                    let rhs = f(l, x) * ((2 * l + 1) as f64) / x;
+                    assert!(close(lhs, rhs, 1e-9), "l={l} x={x:?}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn wronskian_identity() {
+        // j_l(x) y_{l-1}(x) − j_{l-1}(x) y_l(x) = 1/x²
+        for_cases(20, 23, |rng| {
+            let x = c64(rng.range(0.5, 6.0), rng.range(-0.5, 0.5));
+            for l in 1..=6 {
+                let w = sph_bessel_j(l, x) * sph_bessel_y(l - 1, x)
+                    - sph_bessel_j(l - 1, x) * sph_bessel_y(l, x);
+                let want = (x * x).inv();
+                assert!(close(w, want, 1e-9), "l={l}");
+            }
+        });
+    }
+
+    #[test]
+    fn series_and_hankel_paths_agree() {
+        // Around the switch radius both j_l evaluations must agree.
+        for l in 0..=6 {
+            let r = 0.5 + 0.35 * l as f64;
+            for &f in &[0.9, 1.1] {
+                let x = c64(r * f, 0.3);
+                let via_series = j_series(l, x);
+                let via_hankel = (hankel1_sph(l, x) + hankel2_sph(l, x)) * 0.5;
+                assert!(close(via_series, via_hankel, 1e-9), "l={l} x={x:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn hankel_decays_in_upper_half_plane() {
+        // Im x > 0 ⇒ |h+_l| decays with Im x — the contour convergence
+        // property the Green function depends on.
+        let a = hankel1_sph(2, c64(3.0, 0.5)).abs();
+        let b = hankel1_sph(2, c64(3.0, 2.0)).abs();
+        let c = hankel1_sph(2, c64(3.0, 5.0)).abs();
+        assert!(a > b && b > c);
+    }
+
+    #[test]
+    fn small_argument_scaling() {
+        // j_l ~ x^l/(2l+1)!! as x → 0
+        let x = c64(1e-4, 0.0);
+        for l in 0..=4 {
+            let mut dfact = 1.0;
+            for i in 0..=l {
+                dfact *= (2 * i + 1) as f64;
+            }
+            let want = x.powi(l) / dfact;
+            assert!(close(sph_bessel_j(l, x), want, 1e-6), "l={l}");
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Exact FP64 factorials (n ≤ 170 stays finite; multiple-scattering at
+//! lmax ≤ 8 needs at most (l1+l2+l3+1)! = 25!).
+
+use once_cell::sync::Lazy;
+
+static TABLE: Lazy<[f64; 171]> = Lazy::new(|| {
+    let mut t = [1.0f64; 171];
+    for n in 1..171 {
+        t[n] = t[n - 1] * n as f64;
+    }
+    t
+});
+
+/// n! as f64 (panics above 170 where f64 overflows).
+pub fn factorial(n: i32) -> f64 {
+    assert!((0..=170).contains(&n), "factorial({n}) out of range");
+    TABLE[n as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_exact() {
+        assert_eq!(factorial(0), 1.0);
+        assert_eq!(factorial(1), 1.0);
+        assert_eq!(factorial(5), 120.0);
+        assert_eq!(factorial(10), 3_628_800.0);
+    }
+
+    #[test]
+    fn exact_up_to_22() {
+        // 22! = 1124000727777607680000 < 2^70 but every factor is exact
+        // in f64 multiplication up to 22! < 2^70? Verify against u128.
+        let mut acc: u128 = 1;
+        for n in 1..=22u128 {
+            acc *= n;
+            assert_eq!(factorial(n as i32), acc as f64);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_panics() {
+        factorial(171);
+    }
+}

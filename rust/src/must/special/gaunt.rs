@@ -1,0 +1,192 @@
+//! Gaunt coefficients — the angular integrals coupling (L, L') channels
+//! in the structure constants.
+//!
+//!   G(L1, L2, L3) = ∫ Y_{L1}(Ω) Y_{L2}(Ω) Y*_{L3}(Ω) dΩ
+//!
+//! expressed through Wigner-3j symbols.  A precomputed [`GauntTable`]
+//! keeps only the non-zero couplings for the (L, L') pairs the KKR
+//! matrix needs (selection rules make the table sparse).
+
+use super::harmonics::lm_index;
+use super::wigner::wigner3j;
+use std::f64::consts::PI;
+
+/// ∫ Y_{l1 m1} Y_{l2 m2} Y*_{l3 m3} dΩ.
+pub fn gaunt(l1: i32, m1: i32, l2: i32, m2: i32, l3: i32, m3: i32) -> f64 {
+    // selection: m3 = m1 + m2, triangle, parity
+    if m3 != m1 + m2 {
+        return 0.0;
+    }
+    if (l1 + l2 + l3) % 2 != 0 {
+        return 0.0;
+    }
+    if l3 < (l1 - l2).abs() || l3 > l1 + l2 {
+        return 0.0;
+    }
+    // ∫ Y1 Y2 Y3* = (−1)^{m3} sqrt((2l1+1)(2l2+1)(2l3+1)/4π)
+    //               (l1 l2 l3; 0 0 0)(l1 l2 l3; m1 m2 −m3)
+    let sign = if m3 % 2 == 0 { 1.0 } else { -1.0 };
+    sign * (((2 * l1 + 1) * (2 * l2 + 1) * (2 * l3 + 1)) as f64 / (4.0 * PI)).sqrt()
+        * wigner3j(l1, l2, l3, 0, 0, 0)
+        * wigner3j(l1, l2, l3, m1, m2, -m3)
+}
+
+/// One coupling term: (l'', m'') channel with its Gaunt factor.
+#[derive(Clone, Copy, Debug)]
+pub struct GauntTerm {
+    pub lpp: i32,
+    pub mpp: i32,
+    pub coeff: f64,
+}
+
+/// Precomputed non-zero Gaunt couplings for all (L, L') with l ≤ lmax
+/// against l'' ≤ 2·lmax.
+#[derive(Clone, Debug)]
+pub struct GauntTable {
+    lmax: i32,
+    /// terms[L * num_lm + L'] — list of contributing (l'', m'').
+    terms: Vec<Vec<GauntTerm>>,
+}
+
+impl GauntTable {
+    /// Couplings ∫ Y_{L1} Y_{L2} Y*_{L''} dΩ with m'' = m1 + m2 — the
+    /// pattern the KKR structure-constant expansion needs (verified
+    /// against a numeric two-center projection of the free Green
+    /// function; see `must::structure`).
+    pub fn new(lmax: i32) -> Self {
+        let n = super::harmonics::num_lm(lmax);
+        let mut terms = vec![Vec::new(); n * n];
+        for l1 in 0..=lmax {
+            for m1 in -l1..=l1 {
+                for l2 in 0..=lmax {
+                    for m2 in -l2..=l2 {
+                        let dst = &mut terms[lm_index(l1, m1) * n + lm_index(l2, m2)];
+                        let mpp = m1 + m2;
+                        for lpp in (l1 - l2).abs()..=(l1 + l2) {
+                            if mpp.abs() > lpp {
+                                continue;
+                            }
+                            let c = gaunt(l1, m1, l2, m2, lpp, mpp);
+                            if c.abs() > 1e-14 {
+                                dst.push(GauntTerm {
+                                    lpp,
+                                    mpp,
+                                    coeff: c,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        GauntTable { lmax, terms }
+    }
+
+    pub fn lmax(&self) -> i32 {
+        self.lmax
+    }
+
+    /// Non-zero couplings for the (L1, L2) channel pair.
+    pub fn couplings(&self, il1: usize, il2: usize) -> &[GauntTerm] {
+        let n = super::harmonics::num_lm(self.lmax);
+        &self.terms[il1 * n + il2]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::complex::c64;
+    use crate::must::special::harmonics::sph_harmonic;
+
+    #[test]
+    fn l0_projection() {
+        // ∫ Y_{00} Y_{lm} Y*_{lm} = 1/sqrt(4π) (orthonormality)
+        for (l, m) in [(0, 0), (1, -1), (2, 2), (3, 0)] {
+            let g = gaunt(0, 0, l, m, l, m);
+            assert!((g - 1.0 / (4.0 * PI).sqrt()).abs() < 1e-12, "l={l} m={m}");
+        }
+    }
+
+    #[test]
+    fn selection_rules_hold() {
+        assert_eq!(gaunt(1, 0, 1, 0, 1, 0), 0.0); // parity
+        assert_eq!(gaunt(1, 1, 1, 1, 2, 0), 0.0); // m mismatch
+        assert_eq!(gaunt(1, 0, 1, 0, 4, 0), 0.0); // triangle
+    }
+
+    #[test]
+    fn matches_quadrature() {
+        // check a handful of values against direct angular integration
+        let ntheta = 32;
+        let nphi = 64;
+        let (xs, ws) = crate::must::contour::gauss_legendre(ntheta);
+        let quad = |l1: i32, m1: i32, l2: i32, m2: i32, l3: i32, m3: i32| -> c64 {
+            let mut s = c64::ZERO;
+            for (ct, w) in xs.iter().zip(&ws) {
+                let st = (1.0 - ct * ct).sqrt();
+                for ip in 0..nphi {
+                    let phi = 2.0 * PI * ip as f64 / nphi as f64;
+                    let d = [st * phi.cos(), st * phi.sin(), *ct];
+                    s += sph_harmonic(l1, m1, d)
+                        * sph_harmonic(l2, m2, d)
+                        * sph_harmonic(l3, m3, d).conj()
+                        * (*w * 2.0 * PI / nphi as f64);
+                }
+            }
+            s
+        };
+        for (l1, m1, l2, m2, l3, m3) in [
+            (1, 0, 1, 0, 2, 0),
+            (1, 1, 1, -1, 2, 0),
+            (2, 1, 1, 0, 3, 1),
+            (2, -2, 2, 1, 2, -1),
+            (3, 2, 2, -1, 1, 1),
+            (2, 0, 2, 0, 4, 0),
+        ] {
+            let want = gaunt(l1, m1, l2, m2, l3, m3);
+            let got = quad(l1, m1, l2, m2, l3, m3);
+            assert!(
+                (got - c64::real(want)).abs() < 1e-9,
+                "({l1}{m1},{l2}{m2},{l3}{m3}): {got:?} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn table_matches_direct_evaluation() {
+        let t = GauntTable::new(2);
+        for l1 in 0..=2 {
+            for m1 in -l1..=l1 {
+                for l2 in 0..=2 {
+                    for m2 in -l2..=l2 {
+                        let terms = t.couplings(lm_index(l1, m1), lm_index(l2, m2));
+                        for term in terms {
+                            let direct =
+                                gaunt(l1, m1, l2, m2, term.lpp, term.mpp);
+                            assert!((term.coeff - direct).abs() < 1e-14);
+                            assert_eq!(term.mpp, m1 + m2);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_sparsity() {
+        let t = GauntTable::new(3);
+        // (L, L̄) pairs with m + m' = 0 couple down to l'' = 0
+        let d = t.couplings(lm_index(2, 1), lm_index(2, -1));
+        assert!(d.iter().any(|g| g.lpp == 0 && g.mpp == 0));
+        // m'' = m + m' always
+        for g in t.couplings(lm_index(2, 1), lm_index(2, 1)) {
+            assert_eq!(g.mpp, 2);
+            assert!(g.lpp >= 2);
+        }
+        // parity: only even l1+l2+l'' survive
+        for g in t.couplings(lm_index(2, 0), lm_index(1, 0)) {
+            assert_eq!((2 + 1 + g.lpp) % 2, 0);
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Complex spherical harmonics Y_lm (Condon–Shortley convention).
+
+use crate::complex::c64;
+
+use super::factorial::factorial;
+
+/// Combined (l, m) index: `idx = l² + l + m`.
+pub type LmIndex = usize;
+
+/// Flattened L index.
+pub fn lm_index(l: i32, m: i32) -> LmIndex {
+    debug_assert!(m.abs() <= l);
+    (l * l + l + m) as usize
+}
+
+/// Number of (l, m) channels for `l <= lmax`.
+pub fn num_lm(lmax: i32) -> usize {
+    ((lmax + 1) * (lmax + 1)) as usize
+}
+
+/// Associated Legendre P_l^m(x) for m >= 0, with Condon–Shortley phase.
+fn assoc_legendre(l: i32, m: i32, x: f64) -> f64 {
+    debug_assert!(m >= 0 && m <= l);
+    // P_m^m = (-1)^m (2m-1)!! (1-x^2)^{m/2}
+    let somx2 = ((1.0 - x) * (1.0 + x)).max(0.0).sqrt();
+    let mut pmm = 1.0;
+    let mut fact = 1.0;
+    for _ in 0..m {
+        pmm *= -fact * somx2;
+        fact += 2.0;
+    }
+    if l == m {
+        return pmm;
+    }
+    // P_{m+1}^m = x (2m+1) P_m^m
+    let mut pmmp1 = x * (2 * m + 1) as f64 * pmm;
+    if l == m + 1 {
+        return pmmp1;
+    }
+    let mut pll = 0.0;
+    for ll in (m + 2)..=l {
+        pll = (x * (2 * ll - 1) as f64 * pmmp1 - (ll + m - 1) as f64 * pmm)
+            / (ll - m) as f64;
+        pmm = pmmp1;
+        pmmp1 = pll;
+    }
+    pll
+}
+
+/// Y_lm(θ, φ) for a unit direction `(x, y, z)`.
+pub fn sph_harmonic(l: i32, m: i32, dir: [f64; 3]) -> c64 {
+    let r = (dir[0] * dir[0] + dir[1] * dir[1] + dir[2] * dir[2]).sqrt();
+    debug_assert!(r > 0.0);
+    let ct = dir[2] / r; // cos θ
+    let phi = dir[1].atan2(dir[0]);
+    let ma = m.abs();
+    let norm = (((2 * l + 1) as f64 / (4.0 * std::f64::consts::PI))
+        * (factorial(l - ma) / factorial(l + ma)))
+        .sqrt();
+    let plm = assoc_legendre(l, ma, ct);
+    let e = c64(0.0, ma as f64 * phi).exp();
+    let y = c64::real(norm * plm) * e;
+    if m >= 0 {
+        y
+    } else {
+        // Y_{l,-m} = (-1)^m conj(Y_{l,m})
+        let sign = if ma % 2 == 0 { 1.0 } else { -1.0 };
+        y.conj() * sign
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{for_cases, Rng};
+    use std::f64::consts::PI;
+
+    fn rand_dir(rng: &mut Rng) -> [f64; 3] {
+        loop {
+            let v = [rng.normal(), rng.normal(), rng.normal()];
+            let r = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+            if r > 0.1 {
+                return [v[0] / r, v[1] / r, v[2] / r];
+            }
+        }
+    }
+
+    #[test]
+    fn y00_is_constant() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            let y = sph_harmonic(0, 0, rand_dir(&mut rng));
+            assert!((y.re - 0.5 / PI.sqrt()).abs() < 1e-14);
+            assert!(y.im.abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn y10_and_y11_closed_forms() {
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let d = rand_dir(&mut rng);
+            let (x, y, z) = (d[0], d[1], d[2]);
+            let y10 = sph_harmonic(1, 0, d);
+            assert!((y10.re - (3.0 / (4.0 * PI)).sqrt() * z).abs() < 1e-13);
+            let y11 = sph_harmonic(1, 1, d);
+            let want = c64(-x, -y) * (3.0 / (8.0 * PI)).sqrt();
+            assert!((y11 - want).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn conjugation_symmetry() {
+        for_cases(30, 5, |rng| {
+            let d = rand_dir(rng);
+            for l in 0..=4 {
+                for m in 0..=l {
+                    let yp = sph_harmonic(l, m, d);
+                    let ym = sph_harmonic(l, -m, d);
+                    let sign = if m % 2 == 0 { 1.0 } else { -1.0 };
+                    assert!((ym - yp.conj() * sign).abs() < 1e-13);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn orthonormality_by_quadrature() {
+        // ∫ Y_lm Y*_l'm' = δ — Lebedev-like product Gauss grid
+        let ntheta = 24;
+        let nphi = 48;
+        // Gauss–Legendre in cos θ
+        let (xs, ws) = crate::must::contour::gauss_legendre(ntheta);
+        let inner = |l1: i32, m1: i32, l2: i32, m2: i32| -> c64 {
+            let mut s = c64::ZERO;
+            for (ct, w) in xs.iter().zip(&ws) {
+                let st = (1.0 - ct * ct).sqrt();
+                for ip in 0..nphi {
+                    let phi = 2.0 * PI * ip as f64 / nphi as f64;
+                    let d = [st * phi.cos(), st * phi.sin(), *ct];
+                    let a = sph_harmonic(l1, m1, d);
+                    let b = sph_harmonic(l2, m2, d).conj();
+                    s += a * b * (*w * 2.0 * PI / nphi as f64);
+                }
+            }
+            s
+        };
+        assert!((inner(2, 1, 2, 1) - c64::ONE).abs() < 1e-10);
+        assert!((inner(3, -2, 3, -2) - c64::ONE).abs() < 1e-10);
+        assert!(inner(2, 1, 2, -1).abs() < 1e-10);
+        assert!(inner(2, 0, 3, 0).abs() < 1e-10);
+        assert!(inner(1, 1, 2, 1).abs() < 1e-10);
+    }
+
+    #[test]
+    fn lm_index_layout() {
+        assert_eq!(lm_index(0, 0), 0);
+        assert_eq!(lm_index(1, -1), 1);
+        assert_eq!(lm_index(1, 0), 2);
+        assert_eq!(lm_index(1, 1), 3);
+        assert_eq!(lm_index(2, -2), 4);
+        assert_eq!(num_lm(3), 16);
+        // bijective over l <= 4
+        let mut seen = std::collections::HashSet::new();
+        for l in 0..=4 {
+            for m in -l..=l {
+                assert!(seen.insert(lm_index(l, m)));
+            }
+        }
+        assert_eq!(seen.len(), num_lm(4));
+    }
+}

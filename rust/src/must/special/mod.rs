@@ -1,0 +1,13 @@
+//! Special functions for multiple-scattering theory.
+
+mod bessel;
+mod factorial;
+mod gaunt;
+mod harmonics;
+mod wigner;
+
+pub use bessel::{hankel1_sph, hankel2_sph, sph_bessel_j, sph_bessel_y};
+pub use factorial::factorial;
+pub use gaunt::{gaunt, GauntTable};
+pub use harmonics::{lm_index, num_lm, sph_harmonic, LmIndex};
+pub use wigner::wigner3j;

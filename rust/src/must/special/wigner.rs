@@ -1,0 +1,126 @@
+//! Wigner 3-j symbols via the Racah formula.
+
+use super::factorial::factorial;
+
+/// Triangle coefficient Δ(a, b, c).
+fn triangle(a: i32, b: i32, c: i32) -> f64 {
+    factorial(a + b - c) * factorial(a - b + c) * factorial(-a + b + c)
+        / factorial(a + b + c + 1)
+}
+
+/// Wigner 3-j symbol (l1 l2 l3; m1 m2 m3) by Racah's sum.  Valid for
+/// l ≤ ~12 in FP64 (we use l ≤ 8).
+pub fn wigner3j(l1: i32, l2: i32, l3: i32, m1: i32, m2: i32, m3: i32) -> f64 {
+    // selection rules
+    if m1 + m2 + m3 != 0 {
+        return 0.0;
+    }
+    if l3 < (l1 - l2).abs() || l3 > l1 + l2 {
+        return 0.0;
+    }
+    if m1.abs() > l1 || m2.abs() > l2 || m3.abs() > l3 {
+        return 0.0;
+    }
+    let prefactor = (triangle(l1, l2, l3)
+        * factorial(l1 + m1)
+        * factorial(l1 - m1)
+        * factorial(l2 + m2)
+        * factorial(l2 - m2)
+        * factorial(l3 + m3)
+        * factorial(l3 - m3))
+        .sqrt();
+
+    let t_min = 0
+        .max(l2 - l3 - m1)
+        .max(l1 - l3 + m2);
+    let t_max = (l1 + l2 - l3)
+        .min(l1 - m1)
+        .min(l2 + m2);
+    let mut sum = 0.0;
+    for t in t_min..=t_max {
+        let denom = factorial(t)
+            * factorial(l3 - l2 + m1 + t)
+            * factorial(l3 - l1 - m2 + t)
+            * factorial(l1 + l2 - l3 - t)
+            * factorial(l1 - m1 - t)
+            * factorial(l2 + m2 - t);
+        sum += if t % 2 == 0 { 1.0 } else { -1.0 } / denom;
+    }
+    let sign = if (l1 - l2 - m3) % 2 == 0 { 1.0 } else { -1.0 };
+    sign * prefactor * sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-12
+    }
+
+    #[test]
+    fn known_values() {
+        // (1 1 0; 0 0 0) = -1/sqrt(3)
+        assert!(close(wigner3j(1, 1, 0, 0, 0, 0), -1.0 / 3.0f64.sqrt()));
+        // (1 1 2; 0 0 0) = sqrt(2/15)
+        assert!(close(wigner3j(1, 1, 2, 0, 0, 0), (2.0 / 15.0f64).sqrt()));
+        // (2 2 0; 0 0 0) = 1/sqrt(5)
+        assert!(close(wigner3j(2, 2, 0, 0, 0, 0), 1.0 / 5.0f64.sqrt()));
+        // (2 1 1; 0 0 0) = sqrt(2/15)
+        assert!(close(wigner3j(2, 1, 1, 0, 0, 0), (2.0 / 15.0f64).sqrt()));
+        // (1 1 1; 0 0 0) = 0 (odd sum rule)
+        assert!(close(wigner3j(1, 1, 1, 0, 0, 0), 0.0));
+        // (1 1 2; 1 -1 0) = 1/sqrt(30)
+        assert!(close(wigner3j(1, 1, 2, 1, -1, 0), 1.0 / 30.0f64.sqrt()));
+    }
+
+    #[test]
+    fn selection_rules() {
+        assert_eq!(wigner3j(1, 1, 3, 0, 0, 0), 0.0); // triangle violated
+        assert_eq!(wigner3j(1, 1, 2, 1, 1, 0), 0.0); // m-sum non-zero
+        assert_eq!(wigner3j(1, 1, 2, 2, -2, 0), 0.0); // |m| > l
+    }
+
+    #[test]
+    fn column_swap_symmetry() {
+        // even permutation of columns leaves the 3j unchanged
+        for (l1, l2, l3, m1, m2, m3) in
+            [(2, 3, 4, 1, -2, 1), (1, 2, 3, 0, 1, -1), (4, 4, 4, 2, -1, -1)]
+        {
+            let a = wigner3j(l1, l2, l3, m1, m2, m3);
+            let b = wigner3j(l2, l3, l1, m2, m3, m1);
+            assert!(close(a, b), "{a} vs {b}");
+            // odd permutation multiplies by (-1)^(l1+l2+l3)
+            let c = wigner3j(l2, l1, l3, m2, m1, m3);
+            let sign = if (l1 + l2 + l3) % 2 == 0 { 1.0 } else { -1.0 };
+            assert!(close(a, sign * c));
+        }
+    }
+
+    #[test]
+    fn orthogonality_sum() {
+        // sum_{m1 m2} (2 l3 + 1) 3j(...m1 m2 m3)^2 = 1 for valid l3
+        let (l1, l2, l3, m3) = (3, 2, 4, 1);
+        let mut s = 0.0;
+        for m1 in -l1..=l1 {
+            for m2 in -l2..=l2 {
+                let w = wigner3j(l1, l2, l3, m1, m2, -m3);
+                s += (2 * l3 + 1) as f64 * w * w;
+            }
+        }
+        assert!(close(s, 1.0), "orthogonality sum = {s}");
+    }
+
+    #[test]
+    fn sign_flip_symmetry() {
+        // 3j(m -> -m) = (-1)^(l1+l2+l3) 3j(m)
+        let (l1, l2, l3) = (3, 3, 4);
+        for (m1, m2) in [(1, 2), (0, -3), (2, 2)] {
+            let m3 = -m1 - m2;
+            let a = wigner3j(l1, l2, l3, m1, m2, m3);
+            let b = wigner3j(l1, l2, l3, -m1, -m2, -m3);
+            let sign = if (l1 + l2 + l3) % 2 == 0 { 1.0 } else { -1.0 };
+            assert!(close(a, sign * b));
+        }
+    }
+}

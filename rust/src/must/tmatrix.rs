@@ -1,0 +1,183 @@
+//! Single-site scattering t-matrix: hard-sphere background plus a
+//! Breit–Wigner d-wave resonance.
+//!
+//! `t_l(z) = (S_l(z) − 1) / (2iκ)` with κ = √z (Im κ ≥ 0) and
+//!
+//!   S_l(z)   = S_hs,l(z) · [BW_l(z)],
+//!   S_hs,l   = −h⁻_l(κa) / h⁺_l(κa)            (hard sphere, radius a),
+//!   BW(z)    = (z − E_r − iΓ/2)/(z − E_r + iΓ/2)  (resonant channel only).
+//!
+//! The hard-sphere background has the physical threshold behaviour
+//! δ_l ~ κ^{2l+1}: high-l channels scatter weakly at low energy, which
+//! keeps `1 − t·G0` well-conditioned at the band bottom — so the *only*
+//! ill-conditioned region is the physical one, the cluster states near
+//! the resonance pinned at 0.72 Ry (the paper's Figure-1 error peak near
+//! the Fermi energy).  The BW pole sits in the lower half plane, keeping
+//! the upper-half-plane contour analytic.
+
+use crate::complex::c64;
+
+use super::params::CaseParams;
+use super::special::{hankel1_sph, hankel2_sph};
+
+/// Single-site t-matrix evaluator (site-independent: one species).
+#[derive(Clone, Debug)]
+pub struct TMatrix {
+    lmax: i32,
+    /// Hard-sphere (muffin-tin) radius, bohr.
+    a_hs: f64,
+    resonance_l: i32,
+    e_res: f64,
+    gamma: f64,
+}
+
+impl TMatrix {
+    pub fn new(p: &CaseParams) -> Self {
+        TMatrix {
+            lmax: p.lmax,
+            a_hs: p.a_hs,
+            resonance_l: p.resonance_l,
+            e_res: p.e_res,
+            gamma: p.gamma,
+        }
+    }
+
+    /// Potential shift applied by the SCF loop (rigidly moves the
+    /// resonance).
+    pub fn shifted(&self, dv: f64) -> Self {
+        let mut t = self.clone();
+        t.e_res += dv;
+        t
+    }
+
+    /// κ = √z with Im κ ≥ 0 (physical sheet).
+    pub fn kappa(z: c64) -> c64 {
+        let k = z.sqrt();
+        if k.im < 0.0 {
+            -k
+        } else {
+            k
+        }
+    }
+
+    /// S-matrix of channel l at complex energy z.
+    pub fn s_matrix(&self, l: i32, z: c64) -> c64 {
+        let x = Self::kappa(z) * self.a_hs;
+        let bg = -hankel2_sph(l, x) / hankel1_sph(l, x);
+        if l == self.resonance_l {
+            let half = c64(0.0, self.gamma / 2.0);
+            bg * ((z - self.e_res - half) / (z - self.e_res + half))
+        } else {
+            bg
+        }
+    }
+
+    /// t_l(z) = (S_l(z) − 1) / (2iκ).
+    pub fn t(&self, l: i32, z: c64) -> c64 {
+        let kappa = Self::kappa(z);
+        (self.s_matrix(l, z) - c64::ONE) / (c64(0.0, 2.0) * kappa)
+    }
+
+    /// 1 / t_l(z).
+    pub fn t_inv(&self, l: i32, z: c64) -> c64 {
+        self.t(l, z).inv()
+    }
+
+    pub fn lmax(&self) -> i32 {
+        self.lmax
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::must::params::mt_u56_mini;
+
+    fn tm() -> TMatrix {
+        TMatrix::new(&mt_u56_mini())
+    }
+
+    #[test]
+    fn s_matrix_unitary_on_real_axis() {
+        let t = tm();
+        for l in 0..=3 {
+            for &e in &[0.1, 0.5, 0.72, 0.9] {
+                let s = t.s_matrix(l, c64::real(e));
+                assert!((s.abs() - 1.0).abs() < 1e-10, "|S_{l}({e})| = {}", s.abs());
+            }
+        }
+    }
+
+    #[test]
+    fn hard_sphere_s0_phase() {
+        // δ_0 = −κa for a hard sphere: S_0 = e^{−2iκa}.
+        let t = tm();
+        let e = 0.4f64;
+        let k = e.sqrt();
+        let s = t.s_matrix(0, c64::real(e));
+        let want = c64(0.0, -2.0 * k * t.a_hs).exp();
+        assert!((s - want).abs() < 1e-10, "{s:?} vs {want:?}");
+    }
+
+    #[test]
+    fn threshold_behaviour_high_l_weak() {
+        // δ_l ~ κ^{2l+1}: at low energy high-l channels barely scatter.
+        let t = tm();
+        let z = c64::real(0.05);
+        let t0 = t.t(0, z).abs();
+        let t3 = t.t(3, z).abs();
+        assert!(t3 < t0 * 1e-2, "t3 {t3} should be << t0 {t0}");
+    }
+
+    #[test]
+    fn resonance_at_er_flips_sign_of_background() {
+        let t = tm();
+        let s_at = t.s_matrix(2, c64::real(0.72));
+        let x = c64::real(0.72f64.sqrt() * t.a_hs);
+        let bg = -hankel2_sph(2, x) / hankel1_sph(2, x);
+        assert!((s_at + bg).abs() < 1e-10, "at E_r the BW factor is −1");
+    }
+
+    #[test]
+    fn t_peaks_at_resonance() {
+        let t = tm();
+        let t_at = t.t(2, c64(0.72, 0.01)).abs();
+        let t_off = t.t(2, c64(0.50, 0.01)).abs();
+        assert!(t_at > 2.0 * t_off, "resonant |t| {t_at} vs off {t_off}");
+        // non-resonant channel is smooth through the same energies
+        let r = t.t(1, c64(0.72, 0.01)).abs() / t.t(1, c64(0.50, 0.01)).abs();
+        assert!(r < 3.0 && r > 0.3);
+    }
+
+    #[test]
+    fn kappa_branch_is_upper_half_plane() {
+        for &z in &[c64(0.5, 0.1), c64(-0.2, 0.05), c64(0.7, 1.0)] {
+            let k = TMatrix::kappa(z);
+            assert!(k.im >= 0.0);
+            assert!((k * k - z).abs() < 1e-12);
+        }
+        let k = TMatrix::kappa(c64(-0.25, 0.0));
+        assert!(k.re.abs() < 1e-12 && (k.im - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn analytic_on_the_contour() {
+        let t = tm();
+        for im in [0.005, 0.05, 0.3] {
+            for re in [-0.3, 0.1, 0.5, 0.72, 0.78] {
+                for l in 0..=3 {
+                    assert!(t.t(l, c64(re, im)).is_finite(), "t_{l}({re},{im})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shifted_moves_the_resonance() {
+        let t = tm();
+        let ts = t.shifted(0.05);
+        let a = ts.t(2, c64(0.77, 0.01)).abs();
+        let b = t.t(2, c64(0.77, 0.01)).abs();
+        assert!(a > b, "shifted resonance should peak at 0.77 now");
+    }
+}

@@ -1,0 +1,92 @@
+//! A-priori forward error model for the Ozaki emulation.
+//!
+//! The truncated slice-pair terms `k + l >= s` carry relative magnitude
+//! below `2^{-7s}` per element pair; the dropped contributions have
+//! independent signs, so across the K contraction they accumulate like a
+//! random walk and the max-norm forward error of one GEMM behaves as
+//!
+//! ```text
+//! |C_emul − C| / max|C|  <=  c · sqrt(K) · 2^{-7(s-1)}
+//! ```
+//!
+//! with a modest constant (we use c = 4; the worst-case bound replaces
+//! sqrt(K) by K but is ~100x pessimistic in practice, which would cost
+//! the adaptive policy a full extra split everywhere — validated against
+//! measurement in the `ozaki::gemm` tests).  The adaptive policy inverts
+//! this to pick the cheapest split count for a target accuracy and
+//! conditioning.
+
+use super::split::SLICE_BITS;
+use super::modes::{MAX_SPLITS, MIN_SPLITS};
+
+/// Probabilistic bound on the max-norm relative error of one emulated
+/// DGEMM (random-sign accumulation model; see module docs).
+pub fn forward_error_bound(splits: u32, k_dim: usize) -> f64 {
+    let c = 4.0;
+    c * (k_dim as f64).sqrt() * 2.0f64.powi(-(SLICE_BITS as i32) * (splits as i32 - 1))
+}
+
+/// Smallest split count whose bound, amplified by the consumer's
+/// condition number, meets `target` relative accuracy.
+///
+/// This is the paper's §4 proposal made concrete: "dynamically adjusting
+/// the split number in that region" using conditioning information.
+pub fn required_splits(target: f64, k_dim: usize, kappa: f64) -> u32 {
+    let kappa = kappa.max(1.0);
+    for s in MIN_SPLITS..=MAX_SPLITS {
+        if forward_error_bound(s, k_dim) * kappa <= target {
+            return s;
+        }
+    }
+    MAX_SPLITS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_decreases_with_splits() {
+        let mut prev = f64::INFINITY;
+        for s in 3..=12 {
+            let b = forward_error_bound(s, 256);
+            assert!(b < prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn bound_grows_with_k() {
+        assert!(forward_error_bound(6, 2048) > forward_error_bound(6, 64));
+    }
+
+    #[test]
+    fn required_splits_monotone_in_target() {
+        let k = 256;
+        let s_loose = required_splits(1e-3, k, 1.0);
+        let s_tight = required_splits(1e-12, k, 1.0);
+        assert!(s_tight > s_loose, "{s_tight} !> {s_loose}");
+    }
+
+    #[test]
+    fn required_splits_monotone_in_kappa() {
+        let k = 256;
+        let s_well = required_splits(1e-9, k, 1.0);
+        let s_ill = required_splits(1e-9, k, 1e6);
+        assert!(s_ill > s_well);
+    }
+
+    #[test]
+    fn required_splits_clamped_to_ozimmu_range() {
+        assert_eq!(required_splits(1e-300, 2048, 1e12), MAX_SPLITS);
+        assert_eq!(required_splits(1.0, 4, 1.0), MIN_SPLITS);
+    }
+
+    #[test]
+    fn hundredfold_per_split_rule_of_thumb() {
+        // each +1 split improves the bound by 2^7 = 128x ~ the paper's
+        // "exponentially improved" observation between Table-1 rows
+        let r = forward_error_bound(5, 256) / forward_error_bound(6, 256);
+        assert!((r - 128.0).abs() < 1e-9);
+    }
+}

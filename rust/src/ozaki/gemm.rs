@@ -1,0 +1,215 @@
+//! Host-side fp64_int8_s DGEMM — the pure-Rust mirror of the AOT model.
+//!
+//! The accumulation order (slice-pair-major, K-inner) matches the HLO
+//! graph so the PJRT path and this path agree to the last bit; the
+//! integration suite relies on that.
+
+use super::split::{ldexp, scale_rows, split_scaled, SLICE_BITS};
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// INT8 GEMM with exact i32 accumulation: `a (M×K) · bt (N×K)ᵀ`.
+///
+/// `bt` is given transposed (N×K) so both operands stream row-major —
+/// same data layout the packed Pallas kernel sees.
+pub fn int8_gemm_i32(a: &Mat<i8>, bt: &Mat<i8>) -> Result<Mat<i32>> {
+    if a.cols() != bt.cols() {
+        return Err(Error::Shape(format!(
+            "int8_gemm: {}x{} · ({}x{})ᵀ",
+            a.rows(),
+            a.cols(),
+            bt.rows(),
+            bt.cols()
+        )));
+    }
+    let (m, k, n) = (a.rows(), a.cols(), bt.rows());
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            let brow = bt.row(j);
+            let mut s: i32 = 0;
+            for p in 0..k {
+                s += arow[p] as i32 * brow[p] as i32;
+            }
+            crow[j] = s;
+        }
+    }
+    Ok(c)
+}
+
+/// Emulated FP64 GEMM via the Ozaki scheme with `splits` slices.
+///
+/// Slice pairs are grouped per anti-diagonal `d = k + l < splits` (the
+/// ozIMMU_H economisation: later diagonals sit below the precision the
+/// retained ones deliver).  Each diagonal's products share one weight
+/// and are summed *in INT32* — exact, since `(d+1)·K·127² < 2³¹` for
+/// `K·(d+1) < 133k` — matching the L2 model's packed-diagonal GEMM
+/// bit-for-bit (the FP64 accumulation sees identical integers in the
+/// identical order).
+pub fn ozaki_dgemm(a: &Mat<f64>, b: &Mat<f64>, splits: u32) -> Result<Mat<f64>> {
+    if a.cols() != b.rows() {
+        return Err(Error::Shape(format!(
+            "ozaki_dgemm: {}x{} @ {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    if splits < 2 {
+        return Err(Error::Numerical("ozaki_dgemm needs >= 2 splits".into()));
+    }
+    let (m, n) = (a.rows(), b.cols());
+    let (a_scaled, ea) = scale_rows(a);
+    let bt = b.transposed();
+    let (b_scaled, eb) = scale_rows(&bt); // per-column scaling of B
+    let sa = split_scaled(&a_scaled, splits);
+    let sb = split_scaled(&b_scaled, splits);
+
+    let mut c = Mat::zeros(m, n);
+    let mut diag: Mat<i32> = Mat::zeros(m, n);
+    for d in 0..splits as usize {
+        // D_d = Σ_{k=0..d} A_k · B_{d−k}, accumulated exactly in i32
+        for v in diag.data_mut() {
+            *v = 0;
+        }
+        for kk in 0..=d {
+            let prod = int8_gemm_i32(&sa[kk], &sb[d - kk])?;
+            for (dst, src) in diag.data_mut().iter_mut().zip(prod.data()) {
+                *dst += *src;
+            }
+        }
+        let w = ldexp(1.0, -(SLICE_BITS as i32) * (d as i32 + 2));
+        for (cv, dv) in c.data_mut().iter_mut().zip(diag.data()) {
+            *cv += *dv as f64 * w;
+        }
+    }
+    // Undo the row/column scaling: exact exponent shifts.
+    for i in 0..m {
+        let ei = ea[i];
+        let crow = c.row_mut(i);
+        for (j, v) in crow.iter_mut().enumerate() {
+            *v = ldexp(*v, ei + eb[j]);
+        }
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dgemm_naive, Mat};
+    use crate::ozaki::forward_error_bound;
+    use crate::testing::{for_cases, max_rel_err, Rng};
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat<f64> {
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn int8_gemm_small_known() {
+        let a = Mat::from_vec(2, 2, vec![1i8, 2, 3, 4]).unwrap();
+        let bt = Mat::from_vec(2, 2, vec![5i8, 6, 7, 8]).unwrap();
+        // C = A * B with B = bt^T = [[5,7],[6,8]]
+        let c = int8_gemm_i32(&a, &bt).unwrap();
+        assert_eq!(c.data(), &[17, 23, 39, 53]);
+    }
+
+    #[test]
+    fn int8_gemm_saturating_inputs_exact() {
+        let k = 300;
+        let a = Mat::from_fn(2, k, |_, _| 127i8);
+        let bt = Mat::from_fn(2, k, |_, _| -127i8);
+        let c = int8_gemm_i32(&a, &bt).unwrap();
+        assert!(c.data().iter().all(|&v| v == -(k as i32) * 127 * 127));
+    }
+
+    #[test]
+    fn accuracy_decays_with_splits() {
+        // The Table-1 pattern: ~2^-7 per split until the FP64 floor.
+        let mut rng = Rng::new(51);
+        let a = rand_mat(&mut rng, 48, 48);
+        let b = rand_mat(&mut rng, 48, 48);
+        let exact = dgemm_naive(&a, &b).unwrap();
+        let mut prev = f64::INFINITY;
+        for s in 3..=9u32 {
+            let c = ozaki_dgemm(&a, &b, s).unwrap();
+            let err = max_rel_err(c.data(), exact.data());
+            if prev > 1e-13 {
+                assert!(err < prev / 30.0, "s={s}: {err} !<< {prev}");
+            }
+            prev = err;
+        }
+        assert!(prev < 1e-13, "s=9 should reach the FP64 floor: {prev}");
+    }
+
+    #[test]
+    fn error_within_a_priori_bound() {
+        for_cases(10, 53, |rng| {
+            let n = rng.index(4, 32);
+            let a = Mat::from_fn(n, n, |_, _| rng.normal());
+            let b = Mat::from_fn(n, n, |_, _| rng.normal());
+            let exact = dgemm_naive(&a, &b).unwrap();
+            for s in [3u32, 5, 7] {
+                let c = ozaki_dgemm(&a, &b, s).unwrap();
+                let err = max_rel_err(c.data(), exact.data());
+                let bound = forward_error_bound(s, n);
+                assert!(err < bound, "s={s} n={n}: err {err} >= bound {bound}");
+            }
+        });
+    }
+
+    #[test]
+    fn power_of_two_scaling_invariance() {
+        // C(2^p A, B) == 2^p C(A, B) bit-for-bit: scaling is exponent-only.
+        let mut rng = Rng::new(57);
+        let a = rand_mat(&mut rng, 12, 12);
+        let b = rand_mat(&mut rng, 12, 12);
+        for p in [-20i32, -1, 1, 13] {
+            let a2 = Mat::from_fn(12, 12, |i, j| ldexp(a.get(i, j), p));
+            let c1 = ozaki_dgemm(&a2, &b, 5).unwrap();
+            let c2 = ozaki_dgemm(&a, &b, 5).unwrap();
+            for (x, y) in c1.data().iter().zip(c2.data()) {
+                assert_eq!(*x, ldexp(*y, p));
+            }
+        }
+    }
+
+    #[test]
+    fn wide_dynamic_range_rows_stay_accurate() {
+        let mut rng = Rng::new(59);
+        let a = Mat::from_fn(16, 16, |i, _| rng.normal() * ldexp(1.0, (i as i32 % 4) * 20));
+        let b = rand_mat(&mut rng, 16, 16);
+        let exact = dgemm_naive(&a, &b).unwrap();
+        let c = ozaki_dgemm(&a, &b, 7).unwrap();
+        // rowwise relative error (each row has its own scale)
+        for i in 0..16 {
+            let scale = exact.row(i).iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            for (g, w) in c.row(i).iter().zip(exact.row(i)) {
+                assert!((g - w).abs() < 1e-11 * scale);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_and_identity() {
+        let z = Mat::zeros(8, 8);
+        let mut rng = Rng::new(61);
+        let b = rand_mat(&mut rng, 8, 8);
+        assert!(ozaki_dgemm(&z, &b, 4).unwrap().data().iter().all(|v| *v == 0.0));
+        let c = ozaki_dgemm(&Mat::eye(8), &b, 8).unwrap();
+        let err = max_rel_err(c.data(), b.data());
+        assert!(err < 1e-13);
+    }
+
+    #[test]
+    fn shape_and_split_validation() {
+        let a = Mat::<f64>::zeros(2, 3);
+        let b = Mat::<f64>::zeros(4, 2);
+        assert!(ozaki_dgemm(&a, &b, 4).is_err());
+        let sq = Mat::<f64>::zeros(2, 2);
+        assert!(ozaki_dgemm(&sq, &sq, 1).is_err());
+    }
+}

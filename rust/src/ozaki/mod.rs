@@ -1,0 +1,24 @@
+//! Pure-Rust mirror of the L1/L2 Ozaki-scheme emulation.
+//!
+//! Identical math to `python/compile/model.py` (same slice width, same
+//! triangular economisation, same scaling rules), used for three things:
+//!
+//! 1. **host fallback** — GEMMs below the offload threshold, or runs
+//!    without artifacts, still honour the requested compute mode;
+//! 2. **oracle** — integration tests check the PJRT path reproduces this
+//!    implementation bit-for-bit (the INT8 pipeline is exact, so results
+//!    must agree exactly up to the final FP64 accumulation order, which
+//!    both sides fix to slice-pair-major);
+//! 3. **a-priori error model** — the bound feeding the adaptive policy.
+
+mod error_model;
+mod gemm;
+mod modes;
+mod split;
+mod zgemm;
+
+pub use error_model::{forward_error_bound, required_splits};
+pub use gemm::{int8_gemm_i32, ozaki_dgemm};
+pub use modes::ComputeMode;
+pub use split::{reconstruct, scale_rows, split_scaled, SLICE_BITS};
+pub use zgemm::ozaki_zgemm;

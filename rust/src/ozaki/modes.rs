@@ -1,0 +1,113 @@
+//! Compute-mode selection — the `OZIMMU_COMPUTE_MODE` surface.
+//!
+//! The paper drives ozIMMU with `OZIMMU_COMPUTE_MODE=dgemm` or
+//! `fp64_int8_<s>` with split numbers 3..18; we accept the same strings.
+
+use crate::error::{Error, Result};
+
+/// How GEMMs are computed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ComputeMode {
+    /// Native FP64 (the paper's `dgemm` mode — cuBLAS there, XLA `dot`
+    /// or the host GEMM here).
+    Dgemm,
+    /// Ozaki-scheme INT8 emulation with the given split count.
+    Int8 { splits: u32 },
+}
+
+/// Split numbers ozIMMU supports.
+pub const MIN_SPLITS: u32 = 3;
+pub const MAX_SPLITS: u32 = 18;
+
+impl ComputeMode {
+    /// Parse `dgemm` or `fp64_int8_<3..18>` (the ozIMMU env-var syntax).
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("dgemm") {
+            return Ok(ComputeMode::Dgemm);
+        }
+        if let Some(num) = s.strip_prefix("fp64_int8_") {
+            let splits: u32 = num
+                .parse()
+                .map_err(|_| Error::Mode(s.to_string()))?;
+            if (MIN_SPLITS..=MAX_SPLITS).contains(&splits) {
+                return Ok(ComputeMode::Int8 { splits });
+            }
+        }
+        Err(Error::Mode(s.to_string()))
+    }
+
+    /// Read from `OZIMMU_COMPUTE_MODE`, defaulting to `dgemm` when unset.
+    pub fn from_env() -> Result<Self> {
+        match std::env::var("OZIMMU_COMPUTE_MODE") {
+            Ok(v) => Self::parse(&v),
+            Err(_) => Ok(ComputeMode::Dgemm),
+        }
+    }
+
+    /// Split count, or `None` for native FP64.
+    pub fn splits(self) -> Option<u32> {
+        match self {
+            ComputeMode::Dgemm => None,
+            ComputeMode::Int8 { splits } => Some(splits),
+        }
+    }
+
+    /// The ozIMMU-style mode string.
+    pub fn name(self) -> String {
+        match self {
+            ComputeMode::Dgemm => "dgemm".into(),
+            ComputeMode::Int8 { splits } => format!("fp64_int8_{splits}"),
+        }
+    }
+
+    /// Table-1 row label (`dgemm`, `int8_3`, ...).
+    pub fn short_name(self) -> String {
+        match self {
+            ComputeMode::Dgemm => "dgemm".into(),
+            ComputeMode::Int8 { splits } => format!("int8_{splits}"),
+        }
+    }
+}
+
+impl std::fmt::Display for ComputeMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_paper_modes() {
+        assert_eq!(ComputeMode::parse("dgemm").unwrap(), ComputeMode::Dgemm);
+        for s in 3..=18 {
+            let m = ComputeMode::parse(&format!("fp64_int8_{s}")).unwrap();
+            assert_eq!(m, ComputeMode::Int8 { splits: s });
+            assert_eq!(m.splits(), Some(s));
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range_and_garbage() {
+        for bad in ["fp64_int8_2", "fp64_int8_19", "fp64_int8_", "int8_6",
+                    "fp16", "", "fp64_int8_-3", "fp64_int8_3.5"] {
+            assert!(ComputeMode::parse(bad).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for m in [ComputeMode::Dgemm, ComputeMode::Int8 { splits: 7 }] {
+            assert_eq!(ComputeMode::parse(&m.name()).unwrap(), m);
+        }
+        assert_eq!(ComputeMode::Int8 { splits: 4 }.short_name(), "int8_4");
+    }
+
+    #[test]
+    fn case_insensitive_dgemm() {
+        assert_eq!(ComputeMode::parse("DGEMM").unwrap(), ComputeMode::Dgemm);
+    }
+}

@@ -1,0 +1,232 @@
+//! FP64 → signed-7-bit-slice decomposition (the Ozaki error-free
+//! transformation), exactly mirroring `python/compile/model.py`.
+
+use crate::linalg::Mat;
+
+/// Bits carried per INT8 slice.  7, not 8: truncating a scaled mantissa
+/// |r| < 1 gives |q| = |trunc(r·2⁷)| ≤ 127, which fits `i8` without
+/// saturation, and K·127² stays far below the i32 accumulator limit.
+pub const SLICE_BITS: u32 = 7;
+
+/// Per-row power-of-two scaling: returns `(scaled, e)` with
+/// `a[i][j] == scaled[i][j] * 2^e[i]` and `|scaled| < 1`.
+///
+/// Exponent manipulation only — no multiplication rounding (the Rust
+/// equivalent of the model's `ldexp`; see the exp2 pitfall documented in
+/// `python/compile/kernels/ref.py`).
+pub fn scale_rows(a: &Mat<f64>) -> (Mat<f64>, Vec<i32>) {
+    let m = a.rows();
+    let mut exps = Vec::with_capacity(m);
+    let mut scaled = Mat::zeros(m, a.cols());
+    for i in 0..m {
+        let amax = a.row(i).iter().fold(0.0f64, |mx, v| mx.max(v.abs()));
+        // e such that amax = mant * 2^e, mant in [0.5, 1)  (frexp)
+        let e = if amax == 0.0 {
+            0
+        } else {
+            // f64 exponent via bit inspection handles subnormals too
+            frexp_exp(amax)
+        };
+        exps.push(e);
+        let s = &mut scaled.row_mut(i);
+        for (dst, src) in s.iter_mut().zip(a.row(i)) {
+            *dst = ldexp(*src, -e);
+        }
+    }
+    (scaled, exps)
+}
+
+/// Exponent of `frexp`: x = mant * 2^e with mant in [0.5, 1).
+fn frexp_exp(x: f64) -> i32 {
+    debug_assert!(x > 0.0);
+    let bits = x.to_bits();
+    let biased = ((bits >> 52) & 0x7FF) as i32;
+    if biased == 0 {
+        // subnormal: normalise the mantissa first
+        let mant = bits & 0x000F_FFFF_FFFF_FFFF;
+        let shift = mant.leading_zeros() as i32 - 11; // bits above bit 52
+        -1021 - shift
+    } else {
+        biased - 1022
+    }
+}
+
+/// Exact scaling by 2^e (libm `ldexp`).
+pub fn ldexp(x: f64, e: i32) -> f64 {
+    // Fast path: stay inside normal range.
+    if (-1000..=1000).contains(&e) {
+        let factor = f64::from_bits((((e + 1023) as u64) & 0x7FF) << 52);
+        let r = x * factor;
+        if r.is_finite() && (r == 0.0) == (x == 0.0) {
+            return r;
+        }
+    }
+    // Slow path: split the exponent.
+    let mut r = x;
+    let mut rem = e;
+    while rem > 900 {
+        r *= f64::from_bits(((900 + 1023) as u64) << 52);
+        rem -= 900;
+    }
+    while rem < -900 {
+        r *= f64::from_bits(((-900 + 1023) as u64) << 52);
+        rem += 900;
+    }
+    r * f64::from_bits((((rem + 1023) as u64) & 0x7FF) << 52)
+}
+
+/// Slice a pre-scaled matrix (|x| < 1) into `splits` i8 planes:
+/// `x ≈ Σ_k slices[k] · 2^(−7(k+1))`, residual < 2^(−7·splits).
+/// Returns planes stacked slice-major: `out[k]` is an M×K matrix.
+pub fn split_scaled(x: &Mat<f64>, splits: u32) -> Vec<Mat<i8>> {
+    let (m, k) = (x.rows(), x.cols());
+    let mut out: Vec<Mat<i8>> = (0..splits).map(|_| Mat::zeros(m, k)).collect();
+    let scale = (1u64 << SLICE_BITS) as f64; // 128.0, exact
+    let mut r = vec![0.0f64; k];
+    for i in 0..m {
+        r.copy_from_slice(x.row(i));
+        for plane in out.iter_mut() {
+            let row = plane.row_mut(i);
+            for (dst, rv) in row.iter_mut().zip(r.iter_mut()) {
+                let scaled = *rv * scale;
+                let q = scaled.trunc();
+                *dst = q as i8;
+                *rv = scaled - q; // exact (Sterbenz)
+            }
+        }
+    }
+    out
+}
+
+/// Reconstruct the scaled matrix from slices (test helper; inverse of
+/// [`split_scaled`] up to the dropped residual).
+pub fn reconstruct(slices: &[Mat<i8>]) -> Mat<f64> {
+    let (m, k) = (slices[0].rows(), slices[0].cols());
+    let mut out = Mat::zeros(m, k);
+    for (idx, plane) in slices.iter().enumerate() {
+        let w = ldexp(1.0, -(SLICE_BITS as i32) * (idx as i32 + 1));
+        for i in 0..m {
+            let row = out.row_mut(i);
+            for (dst, q) in row.iter_mut().zip(plane.row(i)) {
+                *dst += (*q as f64) * w;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::for_cases;
+
+    #[test]
+    fn ldexp_exactness() {
+        assert_eq!(ldexp(1.0, 10), 1024.0);
+        assert_eq!(ldexp(3.0, -2), 0.75);
+        assert_eq!(ldexp(0.0, 100), 0.0);
+        assert_eq!(ldexp(1.5, 0), 1.5);
+        // extreme exponents round-trip through the slow path
+        let tiny = ldexp(1.0, -1050);
+        assert!(tiny > 0.0);
+        assert_eq!(ldexp(tiny, 1050), 1.0);
+    }
+
+    #[test]
+    fn frexp_matches_std() {
+        for_cases(200, 3, |rng| {
+            let x = rng.wide(300).abs();
+            if x == 0.0 {
+                return;
+            }
+            let e = frexp_exp(x);
+            let mant = ldexp(x, -e);
+            assert!((0.5..1.0).contains(&mant), "x={x} e={e} mant={mant}");
+        });
+    }
+
+    #[test]
+    fn frexp_subnormals() {
+        let x = f64::MIN_POSITIVE / 8.0; // subnormal
+        let e = frexp_exp(x);
+        let mant = ldexp(x, -e);
+        assert!((0.5..1.0).contains(&mant), "mant={mant}");
+    }
+
+    #[test]
+    fn scale_rows_bounds_and_exactness() {
+        for_cases(50, 17, |rng| {
+            let m = rng.index(1, 10);
+            let k = rng.index(1, 10);
+            let a = Mat::from_fn(m, k, |_, _| rng.wide(40));
+            let (scaled, e) = scale_rows(&a);
+            for i in 0..m {
+                for j in 0..k {
+                    let s = scaled.get(i, j);
+                    assert!(s.abs() < 1.0, "unscaled {s}");
+                    // exact round-trip
+                    assert_eq!(ldexp(s, e[i]), a.get(i, j));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn zero_row_scales_to_zero_exponent() {
+        let a = Mat::zeros(3, 4);
+        let (scaled, e) = scale_rows(&a);
+        assert_eq!(e, vec![0, 0, 0]);
+        assert!(scaled.data().iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn slices_bounded_by_127() {
+        for_cases(30, 23, |rng| {
+            let x = Mat::from_fn(6, 6, |_, _| rng.range(-1.0, 1.0) * 0.99999);
+            for s in 2..=9u32 {
+                for plane in split_scaled(&x, s) {
+                    assert!(plane.data().iter().all(|q| q.unsigned_abs() <= 127));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn reconstruction_residual_bound() {
+        for_cases(30, 29, |rng| {
+            let x = Mat::from_fn(8, 8, |_, _| rng.range(-0.999, 0.999));
+            for s in 2..=9u32 {
+                let rec = reconstruct(&split_scaled(&x, s));
+                let bound =
+                    ldexp(1.0, -(SLICE_BITS as i32) * s as i32) + s as f64 * 2e-16;
+                for (r, v) in rec.data().iter().zip(x.data()) {
+                    assert!((r - v).abs() < bound, "s={s}: {r} vs {v}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn dyadic_values_reconstruct_exactly() {
+        let x = Mat::from_vec(
+            1,
+            6,
+            vec![0.0, 0.5, -0.5, 2.0f64.powi(-7), -(2.0f64.powi(-14)), 0.75],
+        )
+        .unwrap();
+        let rec = reconstruct(&split_scaled(&x, 4));
+        assert_eq!(rec.data(), x.data());
+    }
+
+    #[test]
+    fn matches_python_slicing_rule() {
+        // Pin a concrete case so the Rust and Python splitters can never
+        // drift apart silently: 0.3 with 3 slices.
+        let x = Mat::from_vec(1, 1, vec![0.3]).unwrap();
+        let sl = split_scaled(&x, 3);
+        // 0.3*128 = 38.4 -> 38; r=0.4; 0.4*128 = 51.2 -> 51; r=0.2; 0.2*128=25.6 -> 25
+        assert_eq!(sl[0].get(0, 0), 38);
+        assert_eq!(sl[1].get(0, 0), 51);
+        assert_eq!(sl[2].get(0, 0), 25);
+    }
+}

@@ -1,0 +1,78 @@
+//! Emulated complex GEMM: four real emulated GEMMs (ozIMMU splits
+//! real/imaginary parts the same way).
+
+use super::gemm::ozaki_dgemm;
+use crate::complex::c64;
+use crate::error::Result;
+use crate::linalg::{Mat, ZMat};
+
+/// `C ≈ A · B` on complex matrices via the Ozaki scheme:
+/// `Cre = Ar·Br − Ai·Bi`, `Cim = Ar·Bi + Ai·Br`, each product emulated
+/// with `splits` INT8 slices.
+pub fn ozaki_zgemm(a: &ZMat, b: &ZMat, splits: u32) -> Result<ZMat> {
+    let (ar, ai) = (a.re(), a.im());
+    let (br, bi) = (b.re(), b.im());
+    let rr = ozaki_dgemm(&ar, &br, splits)?;
+    let ii = ozaki_dgemm(&ai, &bi, splits)?;
+    let ri = ozaki_dgemm(&ar, &bi, splits)?;
+    let ir = ozaki_dgemm(&ai, &br, splits)?;
+    let (m, n) = (rr.rows(), rr.cols());
+    Ok(Mat::from_fn(m, n, |i, j| {
+        c64(
+            rr.get(i, j) - ii.get(i, j),
+            ri.get(i, j) + ir.get(i, j),
+        )
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::zgemm_naive;
+    use crate::testing::{for_cases, Rng};
+
+    #[test]
+    fn matches_exact_complex_product() {
+        for_cases(8, 71, |rng| {
+            let (m, k, n) = (rng.index(2, 16), rng.index(2, 16), rng.index(2, 16));
+            let a = Mat::from_fn(m, k, |_, _| rng.cnormal());
+            let b = Mat::from_fn(k, n, |_, _| rng.cnormal());
+            let exact = zgemm_naive(&a, &b).unwrap();
+            let c = ozaki_zgemm(&a, &b, 8).unwrap();
+            let scale = exact.data().iter().fold(0.0f64, |mx, z| mx.max(z.abs()));
+            for (g, w) in c.data().iter().zip(exact.data()) {
+                assert!((*g - *w).abs() < 1e-13 * scale);
+            }
+        });
+    }
+
+    #[test]
+    fn error_decays_with_splits() {
+        let mut rng = Rng::new(73);
+        let a = Mat::from_fn(24, 24, |_, _| rng.cnormal());
+        let b = Mat::from_fn(24, 24, |_, _| rng.cnormal());
+        let exact = zgemm_naive(&a, &b).unwrap();
+        let scale = exact.data().iter().fold(0.0f64, |mx, z| mx.max(z.abs()));
+        let mut prev = f64::INFINITY;
+        for s in [3u32, 5, 7] {
+            let c = ozaki_zgemm(&a, &b, s).unwrap();
+            let err = c
+                .data()
+                .iter()
+                .zip(exact.data())
+                .fold(0.0f64, |mx, (g, w)| mx.max((*g - *w).abs()))
+                / scale;
+            assert!(err < prev / 100.0, "s={s}: {err} vs {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn purely_real_inputs_have_real_outputs() {
+        let mut rng = Rng::new(79);
+        let a = Mat::from_fn(8, 8, |_, _| c64::real(rng.normal()));
+        let b = Mat::from_fn(8, 8, |_, _| c64::real(rng.normal()));
+        let c = ozaki_zgemm(&a, &b, 5).unwrap();
+        assert!(c.data().iter().all(|z| z.im == 0.0));
+    }
+}

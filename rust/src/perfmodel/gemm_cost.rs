@@ -1,0 +1,109 @@
+//! Cost model for native and Ozaki-emulated GEMM on modelled GPUs.
+
+use super::hardware::GpuSpec;
+
+/// FLOPs of a real GEMM.
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+/// Modelled wall time of one native FP64 GEMM.
+pub fn native_gemm_time(spec: &GpuSpec, m: usize, k: usize, n: usize) -> f64 {
+    gemm_flops(m, k, n) / (spec.fp64_tflops * spec.dgemm_efficiency * 1e12)
+}
+
+/// Cost breakdown of one emulated fp64_int8_s GEMM.
+#[derive(Clone, Copy, Debug)]
+pub struct OzakiCost {
+    /// INT8 tensor-core time for the s(s+1)/2 slice-pair products.
+    pub int8_s: f64,
+    /// HBM time for splitting inputs and accumulating products.
+    pub mem_s: f64,
+    /// Total modelled seconds.
+    pub total_s: f64,
+    /// Effective FP64-equivalent throughput (TFLOPS) — the number the
+    /// paper's §4 DGEMM benchmark reports.
+    pub effective_tflops: f64,
+}
+
+/// Model one emulated GEMM: `s(s+1)/2` INT8 products (the ozIMMU_H
+/// triangle) at the calibrated INT8 efficiency, plus memory passes for
+/// slicing (write s slices of A and B) and FP64 accumulation (read every
+/// INT32 product once, update C).
+pub fn emulated_gemm_time(spec: &GpuSpec, m: usize, k: usize, n: usize, splits: u32) -> OzakiCost {
+    let s = splits as f64;
+    let products = s * (s + 1.0) / 2.0;
+    let int8_ops = gemm_flops(m, k, n) * products;
+    let int8_s = int8_ops / (spec.int8_tops * spec.int8_efficiency * 1e12);
+
+    // Memory traffic (bytes): read A,B in FP64; write s INT8 slices of
+    // each; read the product INT32s once each; read+write C in FP64.
+    let bytes_split = (m * k + k * n) as f64 * (8.0 + s);
+    let bytes_accum = products * (m * n) as f64 * 4.0 + (m * n) as f64 * 16.0;
+    let mem_s = (bytes_split + bytes_accum) / (spec.hbm_bw_gbs * 1e9);
+
+    let total_s = int8_s + mem_s;
+    OzakiCost {
+        int8_s,
+        mem_s,
+        total_s,
+        effective_tflops: gemm_flops(m, k, n) / total_s / 1e12,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::{GB200, GH200};
+
+    #[test]
+    fn calibration_matches_paper_native() {
+        // §4: "FP64's 62.52 TFLOPS" at 2048^3 on GH200
+        let t = native_gemm_time(&GH200, 2048, 2048, 2048);
+        let tflops = gemm_flops(2048, 2048, 2048) / t / 1e12;
+        assert!((tflops - 62.52).abs() < 0.6, "native model gives {tflops}");
+    }
+
+    #[test]
+    fn calibration_matches_paper_split6() {
+        // §4: "split number 6 achieves 20.35 TFLOPS" at 2048^3 on GH200
+        let c = emulated_gemm_time(&GH200, 2048, 2048, 2048, 6);
+        assert!(
+            (c.effective_tflops - 20.35).abs() < 2.0,
+            "split-6 model gives {}",
+            c.effective_tflops
+        );
+    }
+
+    #[test]
+    fn gh200_native_beats_emulation_but_gb200_flips() {
+        // The paper's headline hardware argument (§4 last paragraph).
+        let n = 2048;
+        let gh_native = native_gemm_time(&GH200, n, n, n);
+        let gh_emul = emulated_gemm_time(&GH200, n, n, n, 6).total_s;
+        assert!(gh_emul > gh_native, "on GH200 emulation should lose");
+
+        let gb_native = native_gemm_time(&GB200, n, n, n);
+        let gb_emul = emulated_gemm_time(&GB200, n, n, n, 6).total_s;
+        assert!(gb_emul < gb_native, "on GB200 emulation should win");
+    }
+
+    #[test]
+    fn cost_quadratic_in_splits() {
+        // §4: "performance drops quadratically with increasing split
+        // numbers"
+        let t6 = emulated_gemm_time(&GH200, 2048, 2048, 2048, 6).int8_s;
+        let t12 = emulated_gemm_time(&GH200, 2048, 2048, 2048, 12).int8_s;
+        let ratio = t12 / t6;
+        let expect = (12.0 * 13.0) / (6.0 * 7.0);
+        assert!((ratio - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn small_gemms_are_memory_bound() {
+        let c = emulated_gemm_time(&GH200, 64, 64, 64, 6);
+        assert!(c.mem_s > c.int8_s * 0.1); // overheads dominate at small n
+        let big = emulated_gemm_time(&GH200, 4096, 4096, 4096, 6);
+        assert!(big.int8_s > big.mem_s); // compute dominates at large n
+    }
+}

@@ -1,0 +1,94 @@
+//! Hardware specification records for the GPUs the paper discusses.
+
+/// Interconnect between CPU and GPU memory.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    /// Explicit-copy bandwidth (staging DMA), GB/s.
+    pub copy_bw_gbs: f64,
+    /// Cache-coherent load/store bandwidth (NVLink-C2C), GB/s.
+    pub coherent_bw_gbs: f64,
+    /// Page-migration bandwidth (first-touch move), GB/s.
+    pub migrate_bw_gbs: f64,
+    /// Per-transfer latency, seconds.
+    pub latency_s: f64,
+}
+
+/// GPU compute + memory specification.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Peak FP64 (vector+matrix) throughput, TFLOPS.
+    pub fp64_tflops: f64,
+    /// Peak INT8 tensor-core throughput, TOPS.
+    pub int8_tops: f64,
+    /// HBM bandwidth, GB/s.
+    pub hbm_bw_gbs: f64,
+    /// Achievable fraction of peak for large DGEMM (calibrated: the
+    /// paper measures 62.52 TFLOPS of 67 peak on GH200 -> 0.933).
+    pub dgemm_efficiency: f64,
+    /// Achievable fraction of INT8 peak inside the Ozaki kernel
+    /// (calibrated from the paper's 20.35 TFLOPS at split 6, see
+    /// `gemm_cost::tests::calibration_matches_paper_split6`).
+    pub int8_efficiency: f64,
+    /// CPU <-> GPU link.
+    pub link: LinkSpec,
+}
+
+/// NVIDIA GH200 (the paper's Vista node).
+pub const GH200: GpuSpec = GpuSpec {
+    name: "GH200",
+    fp64_tflops: 67.0,
+    int8_tops: 1979.0,
+    hbm_bw_gbs: 4000.0,
+    dgemm_efficiency: 0.933,
+    int8_efficiency: 0.25,
+    link: LinkSpec {
+        copy_bw_gbs: 55.0,      // staged copies (effective PCIe-class)
+        coherent_bw_gbs: 450.0, // NVLink-C2C
+        migrate_bw_gbs: 300.0,  // page-migration engine
+        latency_s: 8e-6,
+    },
+};
+
+/// NVIDIA GB200 (paper §4: "projected 5,000 TOPS of INT8 and 40 TFLOPS
+/// of FP64" — the ratio that flips the emulation-vs-native verdict).
+pub const GB200: GpuSpec = GpuSpec {
+    name: "GB200",
+    fp64_tflops: 40.0,
+    int8_tops: 5000.0,
+    hbm_bw_gbs: 8000.0,
+    dgemm_efficiency: 0.933,
+    int8_efficiency: 0.25,
+    link: LinkSpec {
+        copy_bw_gbs: 64.0,
+        coherent_bw_gbs: 900.0,
+        migrate_bw_gbs: 600.0,
+        latency_s: 8e-6,
+    },
+};
+
+impl GpuSpec {
+    /// INT8 : FP64 peak throughput ratio (GH200 ≈ 29.5, GB200 = 125).
+    pub fn int8_fp64_ratio(&self) -> f64 {
+        self.int8_tops / self.fp64_tflops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_ratios() {
+        assert!((GH200.int8_fp64_ratio() - 29.54).abs() < 0.1);
+        assert!((GB200.int8_fp64_ratio() - 125.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn links_ordered_as_paper_describes() {
+        // coherent access beats explicit copies on UMA; migration sits
+        // in between for one-shot cost
+        assert!(GH200.link.coherent_bw_gbs > GH200.link.migrate_bw_gbs);
+        assert!(GH200.link.migrate_bw_gbs > GH200.link.copy_bw_gbs);
+    }
+}

@@ -1,0 +1,32 @@
+//! Analytic performance model for the paper's GPU hardware.
+//!
+//! The testbed here is the CPU PJRT backend, so absolute GH200 numbers
+//! cannot be *measured*; they are *projected* with this model, which is
+//! calibrated against the figures the paper reports (§4: 62.52 TFLOPS
+//! native DGEMM and 20.35 TFLOPS for `fp64_int8_6` at 2048³ on GH200;
+//! 1979 TOPS INT8 / 67 TFLOPS FP64 peak; GB200 projected 5000 TOPS /
+//! 40 TFLOPS).  The model also prices the three data-movement strategies
+//! of the automatic-offload tool (Li et al., PEARC'24).
+
+mod gemm_cost;
+mod hardware;
+
+pub use gemm_cost::{emulated_gemm_time, gemm_flops, native_gemm_time, OzakiCost};
+pub use hardware::{GpuSpec, LinkSpec, GB200, GH200};
+
+/// Simulated seconds for moving `bytes` over a link.
+pub fn transfer_time(bytes: u64, link_bw_gbs: f64) -> f64 {
+    bytes as f64 / (link_bw_gbs * 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_linearly() {
+        let t1 = transfer_time(1 << 30, 450.0);
+        let t2 = transfer_time(2 << 30, 450.0);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,211 @@
+//! Artifact manifest: which (kind, splits, shape) modules exist on disk.
+//!
+//! `artifacts/manifest.txt` is plain text (`kind splits M K N filename`)
+//! written by `python/compile/aot.py`; a hand parser keeps the runtime
+//! free of serde (unavailable offline).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::ozaki::ComputeMode;
+
+/// Kind of compiled GEMM module.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ArtifactKind {
+    /// Native FP64 `dot` (the paper's `dgemm` mode).
+    Dgemm,
+    /// Ozaki INT8 emulation with a given split count.
+    Ozdg { splits: u32 },
+}
+
+impl ArtifactKind {
+    /// Artifact kind serving a compute mode.
+    pub fn for_mode(mode: ComputeMode) -> Self {
+        match mode {
+            ComputeMode::Dgemm => ArtifactKind::Dgemm,
+            ComputeMode::Int8 { splits } => ArtifactKind::Ozdg { splits },
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Artifact {
+    pub kind: ArtifactKind,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest with bucket lookup.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// kind -> sorted list of (m, k, n, path).
+    by_kind: BTreeMap<ArtifactKind, Vec<Artifact>>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} ({e}); run `make artifacts`",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` prefixes the filenames.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut by_kind: BTreeMap<ArtifactKind, Vec<Artifact>> = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 6 {
+                return Err(Error::Manifest(format!(
+                    "line {}: expected 6 fields, got {}",
+                    lineno + 1,
+                    f.len()
+                )));
+            }
+            let splits: u32 = f[1]
+                .parse()
+                .map_err(|_| Error::Manifest(format!("line {}: bad splits", lineno + 1)))?;
+            let kind = match f[0] {
+                "dgemm" => ArtifactKind::Dgemm,
+                "ozdg" => ArtifactKind::Ozdg { splits },
+                other => {
+                    return Err(Error::Manifest(format!(
+                        "line {}: unknown kind {other:?}",
+                        lineno + 1
+                    )))
+                }
+            };
+            let dims: Vec<usize> = f[2..5]
+                .iter()
+                .map(|s| s.parse())
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|_| Error::Manifest(format!("line {}: bad dims", lineno + 1)))?;
+            by_kind.entry(kind).or_default().push(Artifact {
+                kind,
+                m: dims[0],
+                k: dims[1],
+                n: dims[2],
+                path: dir.join(f[5]),
+            });
+        }
+        for list in by_kind.values_mut() {
+            // sort by padded volume so `find_bucket` picks the cheapest cover
+            list.sort_by_key(|a| a.m * a.k * a.n);
+        }
+        Ok(Manifest { by_kind })
+    }
+
+    /// Exact-shape lookup.
+    pub fn find_exact(&self, kind: ArtifactKind, m: usize, k: usize, n: usize) -> Option<&Artifact> {
+        self.by_kind
+            .get(&kind)?
+            .iter()
+            .find(|a| a.m == m && a.k == k && a.n == n)
+    }
+
+    /// Smallest artifact whose shape covers (m, k, n) — zero padding is
+    /// exact for GEMM, so any covering bucket computes the right answer.
+    pub fn find_bucket(&self, kind: ArtifactKind, m: usize, k: usize, n: usize) -> Option<&Artifact> {
+        self.by_kind
+            .get(&kind)?
+            .iter()
+            .find(|a| a.m >= m && a.k >= k && a.n >= n)
+    }
+
+    /// All artifacts of a kind (sorted by volume).
+    pub fn of_kind(&self, kind: ArtifactKind) -> &[Artifact] {
+        self.by_kind.get(&kind).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Total number of artifacts.
+    pub fn len(&self) -> usize {
+        self.by_kind.values().map(|v| v.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Distinct split counts with at least one artifact.
+    pub fn available_splits(&self) -> Vec<u32> {
+        self.by_kind
+            .keys()
+            .filter_map(|k| match k {
+                ArtifactKind::Ozdg { splits } => Some(*splits),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# kind splits M K N filename
+dgemm 0 64 64 64 dgemm_64x64x64.hlo.txt
+ozdg 3 64 64 64 ozdg_s3_64x64x64.hlo.txt
+ozdg 3 256 64 256 ozdg_s3_256x64x256.hlo.txt
+ozdg 6 128 64 128 ozdg_s6_128x64x128.hlo.txt
+";
+
+    fn manifest() -> Manifest {
+        Manifest::parse(SAMPLE, Path::new("/art")).unwrap()
+    }
+
+    #[test]
+    fn parses_and_counts() {
+        let m = manifest();
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.available_splits(), vec![3, 6]);
+    }
+
+    #[test]
+    fn exact_lookup() {
+        let m = manifest();
+        let a = m
+            .find_exact(ArtifactKind::Ozdg { splits: 3 }, 64, 64, 64)
+            .unwrap();
+        assert_eq!(a.path, PathBuf::from("/art/ozdg_s3_64x64x64.hlo.txt"));
+        assert!(m.find_exact(ArtifactKind::Ozdg { splits: 4 }, 64, 64, 64).is_none());
+    }
+
+    #[test]
+    fn bucket_picks_smallest_cover() {
+        let m = manifest();
+        let a = m
+            .find_bucket(ArtifactKind::Ozdg { splits: 3 }, 65, 10, 65)
+            .unwrap();
+        assert_eq!((a.m, a.k, a.n), (256, 64, 256));
+        // too large for any bucket
+        assert!(m.find_bucket(ArtifactKind::Ozdg { splits: 3 }, 300, 64, 64).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("dgemm 0 64 64", Path::new("/a")).is_err());
+        assert!(Manifest::parse("wat 0 1 1 1 f", Path::new("/a")).is_err());
+        assert!(Manifest::parse("ozdg x 1 1 1 f", Path::new("/a")).is_err());
+        assert!(Manifest::parse("ozdg 3 a 1 1 f", Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let m = Manifest::parse("# hi\n\n  \n", Path::new("/a")).unwrap();
+        assert!(m.is_empty());
+    }
+}

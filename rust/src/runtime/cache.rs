@@ -1,0 +1,171 @@
+//! Lazy executable cache: one PJRT client, one compiled executable per
+//! (kind, shape), compiled on first use and reused for the rest of the
+//! run (DESIGN.md §Perf: compile once per shape).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use log::{debug, info};
+
+use super::artifact::{ArtifactKind, Manifest};
+use super::exec::GemmExecutable;
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// PJRT runtime with the artifact manifest and executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<(ArtifactKind, usize, usize, usize), &'static GemmExecutable>>,
+    stats: Mutex<RuntimeStats>,
+}
+
+/// Counters for the §Perf analysis.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub padded_executions: u64,
+}
+
+impl Runtime {
+    /// Create against an artifact directory (must contain manifest.txt).
+    pub fn new(dir: PathBuf) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        info!(
+            "runtime: PJRT {} with {} devices, {} artifacts from {}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.len(),
+            dir.display()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Create against the default artifact dir (env/repo discovery).
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(super::default_artifact_dir())
+    }
+
+    /// The artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Artifact directory in use.
+    pub fn dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    /// Runtime counters snapshot.
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// True if a bucket exists for this GEMM under `kind`.
+    pub fn covers(&self, kind: ArtifactKind, m: usize, k: usize, n: usize) -> bool {
+        self.manifest.find_bucket(kind, m, k, n).is_some()
+    }
+
+    /// Compile-or-fetch the executable for the smallest covering bucket.
+    fn executable(
+        &self,
+        kind: ArtifactKind,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Result<&'static GemmExecutable> {
+        let art = self
+            .manifest
+            .find_bucket(kind, m, k, n)
+            .ok_or(Error::NoArtifact {
+                kind: match kind {
+                    ArtifactKind::Dgemm => "dgemm",
+                    ArtifactKind::Ozdg { .. } => "ozdg",
+                },
+                splits: match kind {
+                    ArtifactKind::Ozdg { splits } => splits,
+                    _ => 0,
+                },
+                m,
+                k,
+                n,
+            })?
+            .clone();
+        let key = (kind, art.m, art.k, art.n);
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(&key) {
+            return Ok(exe);
+        }
+        debug!(
+            "runtime: compiling {:?} {}x{}x{} from {}",
+            kind,
+            art.m,
+            art.k,
+            art.n,
+            art.path.display()
+        );
+        let exe = GemmExecutable::load(&self.client, &art.path, art.m, art.k, art.n)?;
+        self.stats.lock().unwrap().compiles += 1;
+        // Executables live for the process lifetime; leaking them gives a
+        // 'static borrow without self-referential lifetimes.
+        let leaked: &'static GemmExecutable = Box::leak(Box::new(exe));
+        cache.insert(key, leaked);
+        Ok(leaked)
+    }
+
+    /// Run an FP64 GEMM through the artifact for `kind`, padding to the
+    /// bucket when the logical shape is smaller.
+    pub fn gemm(&self, kind: ArtifactKind, a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        if a.cols() != b.rows() {
+            return Err(Error::Shape(format!(
+                "runtime gemm: {}x{} @ {}x{}",
+                a.rows(),
+                a.cols(),
+                b.rows(),
+                b.cols()
+            )));
+        }
+        let exe = self.executable(kind, m, k, n)?;
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.executions += 1;
+            if exe.shape() != (m, k, n) {
+                s.padded_executions += 1;
+            }
+        }
+        exe.run_padded(a, b, m, n)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/runtime_roundtrip.rs where
+    // they can assume `make artifacts` has run; here we only check the
+    // error path that needs no artifacts.
+    #[test]
+    fn missing_manifest_is_a_clean_error() {
+        match Runtime::new(PathBuf::from("/nonexistent-dir-xyz")) {
+            Err(Error::Manifest(msg)) => assert!(msg.contains("make artifacts")),
+            Err(other) => panic!("unexpected error {other:?}"),
+            Ok(_) => panic!("expected an error"),
+        }
+    }
+}

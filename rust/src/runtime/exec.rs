@@ -1,0 +1,98 @@
+//! One compiled GEMM executable: literal marshalling + execution.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// A compiled `(A: f64[M,K], B: f64[K,N]) -> (C: f64[M,N],)` module.
+pub struct GemmExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+impl GemmExecutable {
+    /// Load HLO text, compile on `client`.
+    pub fn load(client: &xla::PjRtClient, path: &Path, m: usize, k: usize, n: usize) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(GemmExecutable { exe, m, k, n })
+    }
+
+    /// Compiled shape.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.m, self.k, self.n)
+    }
+
+    /// Execute on exact-shape inputs.
+    pub fn run(&self, a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
+        if a.rows() != self.m || a.cols() != self.k || b.rows() != self.k || b.cols() != self.n {
+            return Err(Error::Shape(format!(
+                "executable {}x{}x{} fed {}x{} @ {}x{}",
+                self.m,
+                self.k,
+                self.n,
+                a.rows(),
+                a.cols(),
+                b.rows(),
+                b.cols()
+            )));
+        }
+        let la = literal_f64(a)?;
+        let lb = literal_f64(b)?;
+        let results = self.exe.execute::<xla::Literal>(&[la, lb])?;
+        let out = results[0][0].to_literal_sync()?;
+        // the model lowers with return_tuple=True -> unwrap the 1-tuple
+        let c = out.to_tuple1()?;
+        let mut buf = vec![0.0f64; self.m * self.n];
+        c.copy_raw_to(&mut buf)?;
+        Mat::from_vec(self.m, self.n, buf)
+    }
+
+    /// Execute with zero padding up to the compiled bucket, slicing the
+    /// result back to `(m_logical, n_logical)`.  Zero padding is exact
+    /// for GEMM, so this returns the same values as an exact-shape run.
+    pub fn run_padded(
+        &self,
+        a: &Mat<f64>,
+        b: &Mat<f64>,
+        m_logical: usize,
+        n_logical: usize,
+    ) -> Result<Mat<f64>> {
+        let ap;
+        let bp;
+        let a = if a.rows() == self.m && a.cols() == self.k {
+            a
+        } else {
+            ap = a.padded(self.m, self.k);
+            &ap
+        };
+        let b = if b.rows() == self.k && b.cols() == self.n {
+            b
+        } else {
+            bp = b.padded(self.k, self.n);
+            &bp
+        };
+        let full = self.run(a, b)?;
+        if m_logical == self.m && n_logical == self.n {
+            Ok(full)
+        } else {
+            Ok(full.block(0, 0, m_logical, n_logical))
+        }
+    }
+}
+
+/// Row-major `Mat<f64>` → XLA literal without an element-wise copy.
+fn literal_f64(m: &Mat<f64>) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(m.data().as_ptr() as *const u8, m.data().len() * 8)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F64,
+        &[m.rows(), m.cols()],
+        bytes,
+    )?)
+}

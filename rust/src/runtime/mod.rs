@@ -1,0 +1,38 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! The Rust request path never touches Python: `make artifacts` lowered
+//! the L2 JAX model (containing the L1 Pallas kernel) to HLO text, and
+//! this module compiles those modules on the PJRT CPU client — lazily,
+//! once per shape — and runs them.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`,
+//! with `to_tuple1` unwrapping (the model lowers with
+//! `return_tuple=True`).
+
+mod artifact;
+mod cache;
+mod exec;
+
+pub use artifact::{Artifact, ArtifactKind, Manifest};
+pub use cache::Runtime;
+pub use exec::GemmExecutable;
+
+/// Default artifact directory, overridable via `OZACCEL_ARTIFACTS`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("OZACCEL_ARTIFACTS") {
+        return dir.into();
+    }
+    // Walk up from the current dir so tests/benches/examples all find
+    // the repo-root artifacts/ regardless of their working directory.
+    let mut d = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = d.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return cand;
+        }
+        if !d.pop() {
+            return "artifacts".into();
+        }
+    }
+}

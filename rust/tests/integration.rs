@@ -1,0 +1,121 @@
+//! Cross-module integration: coordinator + runtime + ozaki host path.
+//! Requires `make artifacts`.
+
+use ozaccel::coordinator::{DispatchConfig, Dispatcher, RoutingPolicy};
+use ozaccel::linalg::{dgemm_naive, zgemm_naive, Mat, ZMat};
+use ozaccel::ozaki::{self, ComputeMode};
+use ozaccel::testing::{max_rel_err, Rng};
+
+fn offload_dispatcher(mode: ComputeMode) -> Dispatcher {
+    Dispatcher::new(DispatchConfig {
+        mode,
+        ..DispatchConfig::default()
+    })
+    .expect("dispatcher with runtime")
+}
+
+#[test]
+fn offloaded_dgemm_matches_host_ozaki_exactly() {
+    // Device path (PJRT artifact) and host path (pure Rust) implement
+    // the same integer pipeline — results must agree to the last bit
+    // for every split count (the cross-layer contract of this repo).
+    let mut rng = Rng::new(1);
+    let a = Mat::from_fn(128, 128, |_, _| rng.normal());
+    let b = Mat::from_fn(128, 128, |_, _| rng.normal());
+    for s in [3u32, 5, 7, 9] {
+        let d = offload_dispatcher(ComputeMode::Int8 { splits: s });
+        assert!(d.has_runtime(), "artifacts missing — run `make artifacts`");
+        let dev = d.dgemm(&a, &b).unwrap();
+        let host = ozaki::ozaki_dgemm(&a, &b, s).unwrap();
+        let mut worst = 0.0f64;
+        for (x, y) in dev.data().iter().zip(host.data()) {
+            worst = worst.max((x - y).abs() / (1.0 + y.abs()));
+        }
+        assert!(worst < 1e-15, "s={s}: device vs host worst {worst:e}");
+        assert_eq!(d.report().offloaded_calls, 1);
+    }
+}
+
+#[test]
+fn small_gemms_stay_on_host_large_offload() {
+    let d = offload_dispatcher(ComputeMode::Dgemm);
+    let mut rng = Rng::new(2);
+    let small = Mat::from_fn(16, 16, |_, _| rng.normal());
+    let large = Mat::from_fn(256, 256, |_, _| rng.normal());
+    d.dgemm(&small, &small).unwrap();
+    d.dgemm(&large, &large).unwrap();
+    let rep = d.report();
+    assert_eq!(rep.total_calls, 2);
+    assert_eq!(rep.host_calls, 1);
+    assert_eq!(rep.offloaded_calls, 1);
+    assert!(rep.modeled_move_s > 0.0, "offload must be priced");
+}
+
+#[test]
+fn zgemm_through_device_matches_naive() {
+    let d = offload_dispatcher(ComputeMode::Int8 { splits: 8 });
+    let mut rng = Rng::new(3);
+    let a: ZMat = Mat::from_fn(96, 96, |_, _| rng.cnormal());
+    let b: ZMat = Mat::from_fn(96, 96, |_, _| rng.cnormal());
+    let got = d.zgemm(&a, &b).unwrap();
+    let want = zgemm_naive(&a, &b).unwrap();
+    let scale = want.data().iter().fold(0.0f64, |m, z| m.max(z.abs()));
+    for (g, w) in got.data().iter().zip(want.data()) {
+        assert!((*g - *w).abs() < 1e-12 * scale);
+    }
+    // 4 real GEMMs, all offloaded
+    assert_eq!(d.report().offloaded_calls, 4);
+}
+
+#[test]
+fn mode_accuracy_ladder_through_full_stack() {
+    let mut rng = Rng::new(4);
+    let a = Mat::from_fn(192, 64, |_, _| rng.normal());
+    let b = Mat::from_fn(64, 192, |_, _| rng.normal());
+    let exact = dgemm_naive(&a, &b).unwrap();
+    let mut prev = f64::INFINITY;
+    for s in 3..=9u32 {
+        let d = offload_dispatcher(ComputeMode::Int8 { splits: s });
+        let c = d.dgemm(&a, &b).unwrap();
+        let err = max_rel_err(c.data(), exact.data());
+        if prev > 1e-13 {
+            assert!(err < prev, "s={s}: {err:e} !< {prev:e}");
+        }
+        prev = err;
+    }
+    assert!(prev < 1e-12, "s=9 floor: {prev:e}");
+}
+
+#[test]
+fn per_call_mode_override_hits_different_artifacts() {
+    let d = offload_dispatcher(ComputeMode::Dgemm);
+    let mut rng = Rng::new(5);
+    let a = Mat::from_fn(128, 128, |_, _| rng.normal());
+    let b = Mat::from_fn(128, 128, |_, _| rng.normal());
+    let exact = d.dgemm(&a, &b).unwrap();
+    let rough = d
+        .dgemm_mode(ComputeMode::Int8 { splits: 3 }, &a, &b)
+        .unwrap();
+    let err = max_rel_err(rough.data(), exact.data());
+    assert!(err > 1e-10, "split-3 must be visibly less accurate: {err:e}");
+    assert!(err < 1e-3);
+}
+
+#[test]
+fn force_host_policy_never_offloads() {
+    let d = Dispatcher::new(DispatchConfig {
+        mode: ComputeMode::Int8 { splits: 6 },
+        policy: RoutingPolicy {
+            force_host: true,
+            ..Default::default()
+        },
+        ..DispatchConfig::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(6);
+    let a = Mat::from_fn(256, 256, |_, _| rng.normal());
+    d.dgemm(&a, &a.clone()).unwrap();
+    let rep = d.report();
+    assert_eq!(rep.offloaded_calls, 0);
+    assert_eq!(rep.host_calls, 1);
+}

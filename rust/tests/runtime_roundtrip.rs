@@ -1,0 +1,115 @@
+//! Integration: the AOT artifacts loaded through PJRT reproduce the
+//! pure-Rust Ozaki oracle.  Requires `make artifacts` (the Makefile's
+//! `test` target guarantees that).
+
+use ozaccel::linalg::{dgemm_naive, Mat};
+use ozaccel::ozaki;
+use ozaccel::runtime::{ArtifactKind, Runtime};
+use ozaccel::testing::{max_rel_err, Rng};
+
+fn runtime() -> Runtime {
+    Runtime::from_default_dir().expect("run `make artifacts` before cargo test")
+}
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat<f64> {
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+#[test]
+fn native_dgemm_artifact_matches_host() {
+    let rt = runtime();
+    let mut rng = Rng::new(1);
+    let a = rand_mat(&mut rng, 64, 64);
+    let b = rand_mat(&mut rng, 64, 64);
+    let got = rt.gemm(ArtifactKind::Dgemm, &a, &b).unwrap();
+    let want = dgemm_naive(&a, &b).unwrap();
+    assert!(max_rel_err(got.data(), want.data()) < 1e-14);
+}
+
+#[test]
+fn ozdg_artifact_matches_rust_oracle_bit_for_bit() {
+    // The INT8 pipeline is exact and both sides accumulate slice-pair-
+    // major, so PJRT and host must agree to the last bit.
+    let rt = runtime();
+    let mut rng = Rng::new(2);
+    for &s in &[3u32, 6, 9] {
+        let a = rand_mat(&mut rng, 64, 64);
+        let b = rand_mat(&mut rng, 64, 64);
+        let got = rt.gemm(ArtifactKind::Ozdg { splits: s }, &a, &b).unwrap();
+        let want = ozaki::ozaki_dgemm(&a, &b, s).unwrap();
+        let mut worst = 0.0f64;
+        for (g, w) in got.data().iter().zip(want.data()) {
+            worst = worst.max((g - w).abs() / (1.0 + w.abs()));
+        }
+        // identical math; tolerate only the final-accumulation ulp in case
+        // XLA reassociates the einsum
+        assert!(worst < 1e-15, "splits={s}: worst={worst:e}");
+    }
+}
+
+#[test]
+fn emulation_accuracy_decays_with_splits_through_pjrt() {
+    let rt = runtime();
+    let mut rng = Rng::new(3);
+    let a = rand_mat(&mut rng, 128, 128);
+    let b = rand_mat(&mut rng, 128, 128);
+    let exact = dgemm_naive(&a, &b).unwrap();
+    let mut prev = f64::INFINITY;
+    for s in 3..=9u32 {
+        let c = rt.gemm(ArtifactKind::Ozdg { splits: s }, &a, &b).unwrap();
+        let err = max_rel_err(c.data(), exact.data());
+        if prev > 1e-13 {
+            assert!(err < prev / 20.0, "s={s}: {err:e} !<< {prev:e}");
+        }
+        prev = err;
+    }
+    assert!(prev < 1e-13, "s=9 must reach the FP64 floor, got {prev:e}");
+}
+
+#[test]
+fn padded_bucket_execution_is_exact() {
+    let rt = runtime();
+    let mut rng = Rng::new(4);
+    // 100x50x80 pads into the 128^3 bucket (or larger)
+    let a = rand_mat(&mut rng, 100, 50);
+    let b = rand_mat(&mut rng, 50, 80);
+    let got = rt.gemm(ArtifactKind::Dgemm, &a, &b).unwrap();
+    assert_eq!((got.rows(), got.cols()), (100, 80));
+    let want = dgemm_naive(&a, &b).unwrap();
+    assert!(max_rel_err(got.data(), want.data()) < 1e-13);
+    assert!(rt.stats().padded_executions >= 1);
+}
+
+#[test]
+fn executable_cache_compiles_once_per_shape() {
+    let rt = runtime();
+    let mut rng = Rng::new(5);
+    let a = rand_mat(&mut rng, 64, 64);
+    let b = rand_mat(&mut rng, 64, 64);
+    for _ in 0..5 {
+        rt.gemm(ArtifactKind::Dgemm, &a, &b).unwrap();
+    }
+    assert_eq!(rt.stats().compiles, 1);
+    assert_eq!(rt.stats().executions, 5);
+    assert_eq!(rt.cached_executables(), 1);
+}
+
+#[test]
+fn oversize_gemm_reports_no_artifact() {
+    let rt = runtime();
+    let a = Mat::<f64>::zeros(4096, 4096);
+    let err = rt.gemm(ArtifactKind::Dgemm, &a, &a).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("no artifact"), "{msg}");
+}
+
+#[test]
+fn manifest_covers_expected_modes() {
+    let rt = runtime();
+    let splits = rt.manifest().available_splits();
+    for s in 3..=9 {
+        assert!(splits.contains(&s), "missing split {s} artifacts");
+    }
+    assert!(rt.covers(ArtifactKind::Dgemm, 256, 64, 256));
+    assert!(rt.covers(ArtifactKind::Ozdg { splits: 6 }, 512, 512, 512));
+}
