@@ -1,15 +1,26 @@
 //! E3 bench — regenerates the paper's §4 DGEMM comparison:
 //! "split number 6 achieves 20.35 TFLOPS versus FP64's 62.52 TFLOPS"
 //! at 2048³ on GH200 (modelled), with measured CPU-PJRT rows for the
-//! compiled sizes.  Run with `cargo bench --bench gemm_tflops`.
+//! compiled sizes and measured host-kernel rows (blocked/packed/
+//! threaded core vs the naive reference).
+//! Run with `cargo bench --bench gemm_tflops` (add `--quick`,
+//! `--json` writes BENCH_gemm_tflops.json).
 
-use ozaccel::bench::Bench;
+use ozaccel::bench::{Bench, JsonRecord, JsonReport, Table};
 use ozaccel::experiments::{gemm_bench, run_gemm_bench};
+use ozaccel::kernels::{dgemm_blocked, KernelConfig};
+use ozaccel::linalg::{dgemm_naive, Mat};
+use ozaccel::ozaki::{ozaki_dgemm_naive, ozaki_dgemm_with, SLICE_BITS};
+use ozaccel::perfmodel::gemm_flops;
 use ozaccel::runtime::Runtime;
+use ozaccel::testing::Rng;
 
 fn main() {
     ozaccel::logging::init();
     let quick = std::env::args().any(|a| a == "--quick");
+    let json = std::env::args().any(|a| a == "--json");
+    let mut report = JsonReport::new();
+
     let runtime = match Runtime::from_default_dir() {
         Ok(rt) => Some(rt),
         Err(e) => {
@@ -27,6 +38,18 @@ fn main() {
     let rows = run_gemm_bench(runtime.as_ref(), &sizes, &splits, bench).expect("bench");
     println!("== E3: DGEMM effective TFLOPS (paper §4) ==");
     println!("{}", gemm_bench::render(&rows));
+    for r in &rows {
+        if let Some(t) = r.measured_tflops {
+            report.push(JsonRecord {
+                name: format!("pjrt:{}@{}", r.mode, r.n),
+                median_s: gemm_flops(r.n, r.n, r.n) / (t * 1e12),
+                mad_s: 0.0,
+                gflops: Some(t * 1e3),
+                bytes_packed: None,
+                threads: 1,
+            });
+        }
+    }
 
     // Paper-shape checks, printed as a verdict line.
     let pick = |n: usize, m: &str, f: fn(&ozaccel::experiments::GemmBenchRow) -> f64| {
@@ -48,4 +71,74 @@ fn main() {
         "GB200 model at 2048^3: dgemm {native_gb:.2} vs int8_6 {int8_gb:.2} -> emulation wins on GB200: {}",
         int8_gb > native_gb
     );
+
+    // Host kernel core: measured CPU rows (the perf surface the
+    // kernels/ subsystem owns; BENCH_*.json tracks this trajectory).
+    let host_sizes: Vec<usize> = if quick { vec![128] } else { vec![256, 512] };
+    let host_splits = 6u32;
+    let cfg = KernelConfig::default();
+    let single = KernelConfig::single_threaded();
+    let host_bench = if quick { Bench::quick() } else { Bench::default() };
+    let mut t = Table::new(&[
+        "N",
+        "kernel",
+        "threads",
+        "median (ms)",
+        "GFLOP/s",
+    ]);
+    let mut rng = Rng::new(0xE3);
+    for &n in &host_sizes {
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let flop = gemm_flops(n, n, n);
+        // bytes packed per ozaki iteration: both operands, all slices
+        let packed = (2 * n * n) as u64 * host_splits as u64;
+
+        let m_blocked = host_bench.run(|| {
+            dgemm_blocked(&a, &b, &cfg).expect("dgemm_blocked");
+        });
+        let m_naive = host_bench.run(|| {
+            dgemm_naive(&a, &b).expect("dgemm_naive");
+        });
+        let m_fused = host_bench.run(|| {
+            ozaki_dgemm_with(&a, &b, host_splits, &cfg).expect("fused");
+        });
+        let m_fused_1t = host_bench.run(|| {
+            ozaki_dgemm_with(&a, &b, host_splits, &single).expect("fused 1t");
+        });
+        let m_oznaive = host_bench.run(|| {
+            ozaki_dgemm_naive(&a, &b, host_splits).expect("naive");
+        });
+        let rows = [
+            (format!("dgemm_blocked@{n}"), cfg.threads, Some((2 * n * n * 8) as u64), m_blocked),
+            (format!("dgemm_naive@{n}"), 1, None, m_naive),
+            (format!("ozaki_fused@{n}/s{host_splits}"), cfg.threads, Some(packed), m_fused),
+            (format!("ozaki_fused_1t@{n}/s{host_splits}"), 1, Some(packed), m_fused_1t),
+            (format!("ozaki_naive@{n}/s{host_splits}"), 1, None, m_oznaive),
+        ];
+        for (name, threads, bytes, m) in rows {
+            t.row(&[
+                n.to_string(),
+                name.clone(),
+                threads.to_string(),
+                format!("{:.3}", m.median_s * 1e3),
+                format!("{:.2}", m.flops(flop) / 1e9),
+            ]);
+            report.push(JsonRecord::from_measurement(name, &m, Some(flop), bytes, threads));
+        }
+        println!(
+            "N={n}: fused/naive ozaki speedup {:.1}x ({} threads), {:.1}x single-threaded",
+            m_oznaive.median_s / m_fused.median_s,
+            cfg.threads,
+            m_oznaive.median_s / m_fused_1t.median_s
+        );
+    }
+    println!("== host kernel core (measured on this machine, {SLICE_BITS}-bit slices) ==");
+    println!("{}", t.render());
+
+    if json {
+        let path = std::path::Path::new("BENCH_gemm_tflops.json");
+        report.write(path).expect("write BENCH_gemm_tflops.json");
+        println!("wrote {} ({} records)", path.display(), report.len());
+    }
 }

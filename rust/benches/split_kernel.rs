@@ -1,28 +1,39 @@
 //! Microbench of the Ozaki pipeline stages on the host path: scaling,
 //! 7-bit splitting, INT8 GEMM, FP64 accumulation — the overheads the
 //! perfmodel prices against the paper's measured TFLOPS, and the §Perf
-//! evidence for where host time goes.  Run with
-//! `cargo bench --bench split_kernel`.
+//! evidence for where host time goes.  Also measures the fused
+//! packed-panel driver against the per-pair naive loop (the kernels/
+//! subsystem's headline speedup).  Run with
+//! `cargo bench --bench split_kernel` (add `--quick`; `--json` writes
+//! BENCH_split_kernel.json).
 
-use ozaccel::bench::{Bench, Table};
+use ozaccel::bench::{Bench, JsonRecord, JsonReport, Table};
+use ozaccel::kernels::KernelConfig;
 use ozaccel::linalg::Mat;
-use ozaccel::ozaki::{int8_gemm_i32, ozaki_dgemm, scale_rows, split_scaled};
+use ozaccel::ozaki::{
+    int8_gemm_i32, ozaki_dgemm, ozaki_dgemm_naive, ozaki_dgemm_with, scale_rows, split_scaled,
+};
 use ozaccel::perfmodel::gemm_flops;
 use ozaccel::testing::Rng;
 
 fn main() {
     ozaccel::logging::init();
     let quick = std::env::args().any(|a| a == "--quick");
+    let json = std::env::args().any(|a| a == "--json");
     let bench = if quick { Bench::quick() } else { Bench::default() };
     let sizes: Vec<usize> = if quick { vec![64, 128] } else { vec![64, 128, 256] };
     let splits = 6u32;
+    let mut report = JsonReport::new();
 
     let mut table = Table::new(&[
         "N",
         "scale (ms)",
         "split x2 (ms)",
         "int8 gemm all pairs (ms)",
-        "full ozaki_dgemm (ms)",
+        "naive ozaki (ms)",
+        "fused ozaki (ms)",
+        "fused 1-thread (ms)",
+        "fused speedup",
         "emul GFLOP/s",
     ]);
     let mut rng = Rng::new(7);
@@ -30,6 +41,7 @@ fn main() {
         let a = Mat::from_fn(n, n, |_, _| rng.normal());
         let b = Mat::from_fn(n, n, |_, _| rng.normal());
         let bt = b.transposed();
+        let packed_bytes = (2 * n * n) as u64 * splits as u64;
 
         let m_scale = bench.run(|| {
             let _ = scale_rows(&a);
@@ -51,18 +63,77 @@ fn main() {
                 }
             }
         });
-        let m_full = bench.run(|| {
+        let m_naive = bench.run(|| {
+            let _ = ozaki_dgemm_naive(&a, &b, splits).unwrap();
+        });
+        let m_fused = bench.run(|| {
             let _ = ozaki_dgemm(&a, &b, splits).unwrap();
+        });
+        let m_fused_1t = bench.run(|| {
+            let _ = ozaki_dgemm_with(&a, &b, splits, &KernelConfig::single_threaded()).unwrap();
         });
         table.row(&[
             n.to_string(),
             format!("{:.3}", m_scale.median_s * 1e3),
             format!("{:.3}", m_split.median_s * 1e3),
             format!("{:.3}", m_gemm.median_s * 1e3),
-            format!("{:.3}", m_full.median_s * 1e3),
-            format!("{:.2}", gemm_flops(n, n, n) / m_full.median_s / 1e9),
+            format!("{:.3}", m_naive.median_s * 1e3),
+            format!("{:.3}", m_fused.median_s * 1e3),
+            format!("{:.3}", m_fused_1t.median_s * 1e3),
+            format!("{:.1}x", m_naive.median_s / m_fused.median_s),
+            format!("{:.2}", gemm_flops(n, n, n) / m_fused.median_s / 1e9),
         ]);
+        let flop = gemm_flops(n, n, n);
+        let threads = KernelConfig::default().threads;
+        report.push(JsonRecord::from_measurement(
+            format!("scale@{n}"),
+            &m_scale,
+            None,
+            None,
+            1,
+        ));
+        report.push(JsonRecord::from_measurement(
+            format!("split@{n}/s{splits}"),
+            &m_split,
+            None,
+            Some(packed_bytes),
+            1,
+        ));
+        report.push(JsonRecord::from_measurement(
+            format!("int8_pairs@{n}/s{splits}"),
+            &m_gemm,
+            None,
+            None,
+            1,
+        ));
+        report.push(JsonRecord::from_measurement(
+            format!("ozaki_naive@{n}/s{splits}"),
+            &m_naive,
+            Some(flop),
+            None,
+            1,
+        ));
+        report.push(JsonRecord::from_measurement(
+            format!("ozaki_fused@{n}/s{splits}"),
+            &m_fused,
+            Some(flop),
+            Some(packed_bytes),
+            threads,
+        ));
+        report.push(JsonRecord::from_measurement(
+            format!("ozaki_fused_1t@{n}/s{splits}"),
+            &m_fused_1t,
+            Some(flop),
+            Some(packed_bytes),
+            1,
+        ));
     }
     println!("== split/accumulate overhead breakdown (host Ozaki, s={splits}) ==");
     println!("{}", table.render());
+
+    if json {
+        let path = std::path::Path::new("BENCH_split_kernel.json");
+        report.write(path).expect("write BENCH_split_kernel.json");
+        println!("wrote {} ({} records)", path.display(), report.len());
+    }
 }

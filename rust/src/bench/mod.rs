@@ -151,6 +151,126 @@ impl Table {
     }
 }
 
+/// One machine-readable benchmark record for the `--json` emitters
+/// (`BENCH_*.json`); future PRs diff these files to track the perf
+/// trajectory.
+#[derive(Clone, Debug)]
+pub struct JsonRecord {
+    /// Benchmark id, e.g. `ozaki_fused@512x512x512/s6`.
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Median absolute deviation, seconds.
+    pub mad_s: f64,
+    /// Effective GFLOP/s (None when no FLOP count applies).
+    pub gflops: Option<f64>,
+    /// Bytes packed into tile panels per iteration (None if unpacked).
+    pub bytes_packed: Option<u64>,
+    /// Host threads used.
+    pub threads: usize,
+}
+
+impl JsonRecord {
+    /// Build from a [`Measurement`] plus throughput metadata.
+    pub fn from_measurement(
+        name: impl Into<String>,
+        m: &Measurement,
+        flop_per_iter: Option<f64>,
+        bytes_packed: Option<u64>,
+        threads: usize,
+    ) -> Self {
+        JsonRecord {
+            name: name.into(),
+            median_s: m.median_s,
+            mad_s: m.mad_s,
+            gflops: flop_per_iter.map(|f| m.flops(f) / 1e9),
+            bytes_packed,
+            threads,
+        }
+    }
+}
+
+/// Collects [`JsonRecord`]s and renders/writes them as a JSON array
+/// (hand-rolled — serde is unavailable offline).
+#[derive(Clone, Debug, Default)]
+pub struct JsonReport {
+    records: Vec<JsonRecord>,
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: JsonRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Render as a JSON array, one object per line.
+    pub fn render(&self) -> String {
+        let mut out = String::from("[\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str("  {");
+            out.push_str(&format!("\"name\": \"{}\", ", json_escape(&r.name)));
+            out.push_str(&format!("\"median_s\": {}, ", json_num(r.median_s)));
+            out.push_str(&format!("\"mad_s\": {}, ", json_num(r.mad_s)));
+            match r.gflops {
+                Some(g) => out.push_str(&format!("\"gflops\": {}, ", json_num(g))),
+                None => out.push_str("\"gflops\": null, "),
+            }
+            match r.bytes_packed {
+                Some(b) => out.push_str(&format!("\"bytes_packed\": {b}, ")),
+                None => out.push_str("\"bytes_packed\": null, "),
+            }
+            out.push_str(&format!("\"threads\": {}", r.threads));
+            out.push('}');
+            if i + 1 < self.records.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("]\n");
+        out
+    }
+
+    /// Write `render()` to `path`.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// JSON number formatting: finite values round-trip via Rust's shortest
+/// representation; non-finite values become null.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        // Rust's shortest round-trip form; bare integers like "3" are
+        // valid JSON numbers already.
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +296,43 @@ mod tests {
             samples: 1,
         };
         assert!((m.tflops(2e9) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_report_is_well_formed() {
+        let m = Measurement {
+            median_s: 2.5e-3,
+            mad_s: 1e-5,
+            iters_per_sample: 10,
+            samples: 5,
+        };
+        let mut rep = JsonReport::new();
+        rep.push(JsonRecord::from_measurement(
+            "ozaki_fused@64/s6",
+            &m,
+            Some(2.0 * 64f64.powi(3)),
+            Some(49152),
+            4,
+        ));
+        rep.push(JsonRecord::from_measurement("no\"metrics", &m, None, None, 1));
+        let s = rep.render();
+        assert!(s.starts_with("[\n") && s.ends_with("]\n"), "{s}");
+        assert!(s.contains("\"name\": \"ozaki_fused@64/s6\""));
+        assert!(s.contains("\"bytes_packed\": 49152"));
+        assert!(s.contains("\"gflops\": null"));
+        assert!(s.contains("no\\\"metrics"));
+        assert!(s.contains("\"threads\": 4"));
+        // exactly one separating comma between the two records
+        assert_eq!(s.matches("},\n").count(), 1);
+        assert_eq!(rep.len(), 2);
+        assert!(!rep.is_empty());
+    }
+
+    #[test]
+    fn json_numbers_handle_non_finite() {
+        assert_eq!(json_num(f64::INFINITY), "null");
+        assert_eq!(json_num(2.5), "2.5");
+        assert_eq!(json_num(3.0), "3");
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub use toml_mini::{parse_toml, TomlValue};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-use crate::coordinator::{DataMoveStrategy, DispatchConfig, RoutingPolicy};
+use crate::coordinator::{DataMoveStrategy, DispatchConfig, HostKernel, RoutingPolicy};
 use crate::error::{Error, Result};
 use crate::must::params::{mt_u56_mini, tiny_case, CaseParams};
 use crate::ozaki::ComputeMode;
@@ -83,6 +83,19 @@ impl RunConfig {
                 ..cfg.dispatch.policy
             };
         }
+        if let Some(v) = lookup(&table, "run.threads") {
+            let f = v.as_f64()?;
+            if f.fract() != 0.0 || f < 1.0 {
+                return Err(Error::Config(format!(
+                    "run.threads must be a positive integer, got {f}"
+                )));
+            }
+            cfg.dispatch.kernels.config.threads = f as usize;
+        }
+        if let Some(v) = lookup(&table, "run.host_kernel") {
+            cfg.dispatch.kernels.kernel = HostKernel::parse(v.as_str()?)
+                .ok_or_else(|| Error::Config(format!("bad host_kernel {v:?}")))?;
+        }
         if let Some(v) = lookup(&table, "run.artifacts") {
             cfg.dispatch.artifact_dir = Some(PathBuf::from(v.as_str()?));
         }
@@ -116,10 +129,26 @@ impl RunConfig {
         Ok(cfg)
     }
 
-    /// Apply the paper's env-var interface on top.
+    /// Apply the paper's env-var interface on top
+    /// (`OZIMMU_COMPUTE_MODE`, plus the host-kernel knobs
+    /// `OZACCEL_THREADS` and `OZACCEL_HOST_KERNEL`).
     pub fn apply_env(&mut self) -> Result<()> {
         if std::env::var("OZIMMU_COMPUTE_MODE").is_ok() {
             self.dispatch.mode = ComputeMode::from_env()?;
+        }
+        if let Ok(v) = std::env::var("OZACCEL_THREADS") {
+            let n: usize = v
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("bad OZACCEL_THREADS {v:?}")))?;
+            if n == 0 {
+                return Err(Error::Config("OZACCEL_THREADS must be >= 1".into()));
+            }
+            self.dispatch.kernels.config.threads = n;
+        }
+        if let Ok(v) = std::env::var("OZACCEL_HOST_KERNEL") {
+            self.dispatch.kernels.kernel = HostKernel::parse(&v)
+                .ok_or_else(|| Error::Config(format!("bad OZACCEL_HOST_KERNEL {v:?}")))?;
         }
         Ok(())
     }
@@ -177,6 +206,21 @@ n_contour = 12
         assert!(RunConfig::from_toml("[run]\nmode = \"fp32\"\n").is_err());
         assert!(RunConfig::from_toml("[run]\ncase = \"nope\"\n").is_err());
         assert!(RunConfig::from_toml("[run]\ngpu = \"h100\"\n").is_err());
+        assert!(RunConfig::from_toml("[run]\nthreads = 0\n").is_err());
+        assert!(RunConfig::from_toml("[run]\nthreads = 2.5\n").is_err());
+        assert!(RunConfig::from_toml("[run]\nhost_kernel = \"cuda\"\n").is_err());
+    }
+
+    #[test]
+    fn kernel_knobs_parse() {
+        use crate::coordinator::HostKernel;
+        let cfg =
+            RunConfig::from_toml("[run]\nthreads = 3\nhost_kernel = \"naive\"\n").unwrap();
+        assert_eq!(cfg.dispatch.kernels.config.threads, 3);
+        assert_eq!(cfg.dispatch.kernels.kernel, HostKernel::Naive);
+        let d = RunConfig::default();
+        assert_eq!(d.dispatch.kernels.kernel, HostKernel::Blocked);
+        assert!(d.dispatch.kernels.config.threads >= 1);
     }
 
     #[test]

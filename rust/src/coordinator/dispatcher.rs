@@ -11,12 +11,13 @@ use log::{debug, warn};
 use super::adaptive::AdaptivePolicy;
 use super::callsite::SiteRegistry;
 use super::datamove::{DataMoveStrategy, MemModel};
+use super::kernel_select::KernelSelector;
 use super::policy::{OffloadDecision, RoutingPolicy};
 use super::stats::Report;
 use crate::complex::c64;
 use crate::error::Result;
-use crate::linalg::{self, Mat, ZMat};
-use crate::ozaki::{self, ComputeMode};
+use crate::linalg::{Mat, ZMat};
+use crate::ozaki::ComputeMode;
 use crate::perfmodel::{emulated_gemm_time, gemm_flops, native_gemm_time, GpuSpec, GH200};
 use crate::runtime::{ArtifactKind, Runtime};
 
@@ -35,6 +36,9 @@ pub struct DispatchConfig {
     pub artifact_dir: Option<PathBuf>,
     /// Adaptive-precision policy (None = fixed mode).
     pub adaptive: Option<AdaptivePolicy>,
+    /// Host kernel routing (naive reference vs blocked/threaded core)
+    /// plus its tiling and `OZACCEL_THREADS` parameters.
+    pub kernels: KernelSelector,
 }
 
 impl Default for DispatchConfig {
@@ -46,6 +50,10 @@ impl Default for DispatchConfig {
             gpu: GH200,
             artifact_dir: None,
             adaptive: None,
+            // honours OZACCEL_HOST_KERNEL / OZACCEL_THREADS out of the
+            // box; config files can still override via `run.host_kernel`
+            // and `run.threads`.
+            kernels: KernelSelector::from_env(),
         }
     }
 }
@@ -187,9 +195,11 @@ impl Dispatcher {
         let result = if decision.offloaded() {
             self.runtime.as_ref().unwrap().gemm(kind, a, b)?
         } else {
+            // Host execution: route through the configured kernel
+            // selector (naive reference vs blocked/threaded core).
             match mode {
-                ComputeMode::Dgemm => linalg::dgemm(a, b)?,
-                ComputeMode::Int8 { splits } => ozaki::ozaki_dgemm(a, b, splits)?,
+                ComputeMode::Dgemm => self.cfg.kernels.dgemm(a, b)?,
+                ComputeMode::Int8 { splits } => self.cfg.kernels.ozaki_dgemm(a, b, splits)?,
             }
         };
         let measured = t0.elapsed().as_secs_f64();
@@ -277,7 +287,7 @@ fn site_id(loc: &'static std::panic::Location<'static>) -> &'static str {
     static INTERN: Lazy<StdMutex<HashMap<(u32, &'static str), &'static str>>> =
         Lazy::new(|| StdMutex::new(HashMap::new()));
     let mut map = INTERN.lock().unwrap();
-    map.entry((loc.line(), loc.file()))
+    *map.entry((loc.line(), loc.file()))
         .or_insert_with(|| Box::leak(format!("{}:{}", loc.file(), loc.line()).into_boxed_str()))
 }
 
@@ -285,6 +295,7 @@ fn site_id(loc: &'static std::panic::Location<'static>) -> &'static str {
 mod tests {
     use super::*;
     use crate::testing::{max_rel_err, Rng};
+    use crate::{linalg, ozaki};
 
     fn host_dispatcher(mode: ComputeMode) -> Dispatcher {
         Dispatcher::new(DispatchConfig::host_only(mode)).unwrap()

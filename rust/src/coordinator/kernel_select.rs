@@ -1,0 +1,164 @@
+//! Host kernel selection — the same routing idea as host-vs-device, one
+//! level down: once a GEMM stays on the host, *which* host
+//! implementation runs is a dispatch decision, not a hard-wired call.
+//!
+//! `Blocked` (default) routes to the packed, cache-blocked,
+//! multithreaded kernel core in [`crate::kernels`]; `Naive` keeps the
+//! textbook reference loops — useful as an A/B baseline and as the
+//! oracle in differential tests.  Both selections return bit-identical
+//! FP64-GEMM and Ozaki results (the kernels preserve the reference
+//! accumulation orders), so flipping the selector never changes
+//! numbers, only speed.
+
+use crate::error::Result;
+use crate::kernels::{self, KernelConfig};
+use crate::linalg::{self, Mat, ZMat};
+use crate::ozaki;
+
+/// Which host implementation serves non-offloaded calls.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HostKernel {
+    /// Textbook reference loops (`dgemm_naive`, per-pair Ozaki).
+    Naive,
+    /// Packed, blocked, multithreaded kernel core (`crate::kernels`).
+    Blocked,
+}
+
+impl HostKernel {
+    /// Parse CLI/config/env names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "naive" | "reference" => Some(HostKernel::Naive),
+            "blocked" | "packed" | "fast" => Some(HostKernel::Blocked),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HostKernel::Naive => "naive",
+            HostKernel::Blocked => "blocked",
+        }
+    }
+}
+
+/// The host-kernel routing decision plus its tiling/threading knobs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelSelector {
+    pub kernel: HostKernel,
+    pub config: KernelConfig,
+}
+
+impl Default for KernelSelector {
+    fn default() -> Self {
+        KernelSelector {
+            kernel: HostKernel::Blocked,
+            config: KernelConfig::default(),
+        }
+    }
+}
+
+impl KernelSelector {
+    /// Default selector with `OZACCEL_HOST_KERNEL` applied on top
+    /// (`naive` | `blocked`; threads already honour `OZACCEL_THREADS`
+    /// through [`KernelConfig::default`]).  Unparseable values keep the
+    /// default but warn — `Default` cannot fail loudly the way
+    /// `RunConfig::apply_env` does.
+    pub fn from_env() -> Self {
+        let mut sel = KernelSelector::default();
+        if let Ok(v) = std::env::var("OZACCEL_HOST_KERNEL") {
+            match HostKernel::parse(&v) {
+                Some(k) => sel.kernel = k,
+                None => log::warn!(
+                    "ignoring invalid OZACCEL_HOST_KERNEL={v:?} (expected naive|blocked)"
+                ),
+            }
+        }
+        sel
+    }
+
+    /// Host FP64 GEMM through the selected kernel.
+    pub fn dgemm(&self, a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
+        match self.kernel {
+            HostKernel::Naive => linalg::dgemm_naive(a, b),
+            HostKernel::Blocked => kernels::dgemm_blocked(a, b, &self.config),
+        }
+    }
+
+    /// Host Ozaki-emulated FP64 GEMM through the selected kernel.
+    pub fn ozaki_dgemm(&self, a: &Mat<f64>, b: &Mat<f64>, splits: u32) -> Result<Mat<f64>> {
+        match self.kernel {
+            HostKernel::Naive => ozaki::ozaki_dgemm_naive(a, b, splits),
+            HostKernel::Blocked => ozaki::ozaki_dgemm_with(a, b, splits, &self.config),
+        }
+    }
+
+    /// Host complex GEMM through the selected kernel.
+    pub fn zgemm(&self, a: &ZMat, b: &ZMat) -> Result<ZMat> {
+        match self.kernel {
+            HostKernel::Naive => linalg::zgemm_naive(a, b),
+            HostKernel::Blocked => kernels::zgemm_blocked(a, b, &self.config),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(HostKernel::parse("naive"), Some(HostKernel::Naive));
+        assert_eq!(HostKernel::parse("BLOCKED"), Some(HostKernel::Blocked));
+        assert_eq!(HostKernel::parse("packed"), Some(HostKernel::Blocked));
+        assert_eq!(HostKernel::parse("gpu"), None);
+        assert_eq!(HostKernel::Blocked.name(), "blocked");
+    }
+
+    #[test]
+    fn selections_agree_bit_for_bit() {
+        let mut rng = Rng::new(0x5E1);
+        let a = Mat::from_fn(9, 11, |_, _| rng.normal());
+        let b = Mat::from_fn(11, 6, |_, _| rng.normal());
+        let naive = KernelSelector {
+            kernel: HostKernel::Naive,
+            config: KernelConfig::single_threaded(),
+        };
+        let blocked = KernelSelector {
+            kernel: HostKernel::Blocked,
+            config: KernelConfig::with_threads(3),
+        };
+        assert_eq!(
+            naive.dgemm(&a, &b).unwrap().data(),
+            blocked.dgemm(&a, &b).unwrap().data()
+        );
+        assert_eq!(
+            naive.ozaki_dgemm(&a, &b, 5).unwrap().data(),
+            blocked.ozaki_dgemm(&a, &b, 5).unwrap().data()
+        );
+    }
+
+    #[test]
+    fn zgemm_selections_agree_within_rounding() {
+        // complex kernels differ only in FP64 summation grouping, so the
+        // two selections agree to rounding (not bit-for-bit).
+        let mut rng = Rng::new(0x5E2);
+        let a = ZMat::from_fn(7, 9, |_, _| rng.cnormal());
+        let b = ZMat::from_fn(9, 5, |_, _| rng.cnormal());
+        let naive = KernelSelector {
+            kernel: HostKernel::Naive,
+            config: KernelConfig::single_threaded(),
+        };
+        let blocked = KernelSelector {
+            kernel: HostKernel::Blocked,
+            config: KernelConfig::with_threads(3),
+        };
+        let x = naive.zgemm(&a, &b).unwrap();
+        let y = blocked.zgemm(&a, &b).unwrap();
+        let scale = x.data().iter().fold(0.0f64, |m, z| m.max(z.abs())) + 1e-300;
+        for (p, q) in x.data().iter().zip(y.data()) {
+            assert!((*p - *q).abs() <= 1e-12 * scale);
+        }
+    }
+}

@@ -13,6 +13,10 @@
 //!
 //! Components:
 //! * [`callsite`] — PEAK-style per-call-site profiler;
+//! * [`kernel_select`] — which *host* kernel serves non-offloaded calls
+//!   (naive reference vs the blocked/packed/threaded `crate::kernels`
+//!   core) — host-kernel choice is a routing decision like
+//!   host-vs-device;
 //! * [`policy`] — offload decision (FLOP threshold + artifact coverage);
 //! * [`datamove`] — the three data-movement strategies of Li et al.;
 //! * [`adaptive`] — tunable-precision extension (paper §4 future work);
@@ -22,6 +26,7 @@ mod adaptive;
 mod callsite;
 mod datamove;
 mod dispatcher;
+mod kernel_select;
 mod policy;
 mod stats;
 
@@ -29,5 +34,6 @@ pub use adaptive::AdaptivePolicy;
 pub use callsite::{CallSiteId, CallSiteStats, SiteRegistry};
 pub use datamove::{BufferId, DataMoveStrategy, MemModel, Residency};
 pub use dispatcher::{DispatchConfig, Dispatcher};
+pub use kernel_select::{HostKernel, KernelSelector};
 pub use policy::{OffloadDecision, RoutingPolicy};
 pub use stats::{GemmKind, Report};

@@ -1,16 +1,15 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls —
+//! `thiserror` is unavailable offline).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by ozaccel's public API.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape mismatch or otherwise invalid matrix arguments.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// No AOT artifact covers the requested (kind, splits, shape).
-    #[error("no artifact for {kind} splits={splits} shape {m}x{k}x{n} (have you run `make artifacts`?)")]
     NoArtifact {
         kind: &'static str,
         splits: u32,
@@ -20,27 +19,65 @@ pub enum Error {
     },
 
     /// Artifact manifest missing or malformed.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
     /// Invalid compute-mode string (`OZIMMU_COMPUTE_MODE` syntax).
-    #[error("invalid compute mode {0:?}: expected `dgemm` or `fp64_int8_<3..18>`")]
     Mode(String),
 
     /// Configuration file / CLI errors.
-    #[error("config error: {0}")]
     Config(String),
 
-    /// Numerical failure (singular pivot, non-convergence, ...).
-    #[error("numerical error: {0}")]
+    /// Numerical failure (singular pivot, non-convergence, overflow, ...).
     Numerical(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("xla runtime: {0}")]
     Xla(String),
 
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    /// I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(msg) => write!(f, "shape error: {msg}"),
+            Error::NoArtifact {
+                kind,
+                splits,
+                m,
+                k,
+                n,
+            } => write!(
+                f,
+                "no artifact for {kind} splits={splits} shape {m}x{k}x{n} \
+                 (have you run `make artifacts`?)"
+            ),
+            Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
+            Error::Mode(s) => write!(
+                f,
+                "invalid compute mode {s:?}: expected `dgemm` or `fp64_int8_<3..18>`"
+            ),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Numerical(msg) => write!(f, "numerical error: {msg}"),
+            Error::Xla(msg) => write!(f, "xla runtime: {msg}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -51,3 +88,33 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_documented_formats() {
+        assert_eq!(
+            Error::Shape("2x3 @ 4x5".into()).to_string(),
+            "shape error: 2x3 @ 4x5"
+        );
+        let e = Error::NoArtifact {
+            kind: "ozdg",
+            splits: 6,
+            m: 64,
+            k: 64,
+            n: 64,
+        };
+        assert!(e.to_string().contains("ozdg splits=6 shape 64x64x64"));
+        assert!(Error::Mode("fp32".into()).to_string().contains("fp64_int8_<3..18>"));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().starts_with("io: "));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

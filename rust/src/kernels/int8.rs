@@ -1,0 +1,425 @@
+//! Blocked INT8→INT32 GEMM core and the fused multi-slice driver of the
+//! host Ozaki path.
+//!
+//! The microkernel computes an `MR_I8 x NR_I8` register tile: per `p` it
+//! broadcasts `MR_I8` packed A values against `NR_I8` packed B values —
+//! the dp4a-style shape (SNIPPETS.md §1) LLVM turns into SIMD
+//! multiply-accumulate.  The fused driver sweeps the packed panels once
+//! per output tile and accumulates *every* retained slice pair
+//! `k + l = d < splits` while the tile's operands are cache-hot,
+//! replacing the seed's `splits·(splits+1)/2` full-matrix passes with
+//! one pass and zero heap allocations in the hot loop (the EmuGEMM
+//! fusion idea, PAPERS.md).
+//!
+//! Exactness: each anti-diagonal's products are summed in `i32`, which
+//! is exact while `(d+1)·K·127² < 2³¹` (`K·(d+1) <=`
+//! [`MAX_EXACT_I32_TERMS`]).  Past that bound the driver falls back to
+//! `i64` accumulators — still exact, never silently wrapping.  The FP64
+//! combine then adds diagonals in ascending-`d` order per element, so
+//! results are bit-for-bit identical to the reference slice-pair-major
+//! path and the AOT'd HLO graph regardless of tiling or thread count.
+
+use super::pack::Panels;
+use super::KernelConfig;
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// Rows per A-side register tile.
+pub const MR_I8: usize = 4;
+/// Columns per B-side register tile.
+pub const NR_I8: usize = 8;
+
+/// Maximum number of `i8·i8` product terms an `i32` accumulator can
+/// absorb exactly in the worst case (`|q| <= 127`):
+/// `floor((2³¹−1) / 127²) = 133_144`.
+pub const MAX_EXACT_I32_TERMS: usize = (i32::MAX as usize) / (127 * 127);
+
+#[inline]
+fn microkernel_i32(acc: &mut [[i32; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
+    for (av, bv) in a_panel.chunks_exact(MR_I8).zip(b_panel.chunks_exact(NR_I8)) {
+        for r in 0..MR_I8 {
+            let ar = av[r] as i32;
+            let row = &mut acc[r];
+            for c in 0..NR_I8 {
+                row[c] += ar * bv[c] as i32;
+            }
+        }
+    }
+}
+
+#[inline]
+fn microkernel_i64(acc: &mut [[i64; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
+    for (av, bv) in a_panel.chunks_exact(MR_I8).zip(b_panel.chunks_exact(NR_I8)) {
+        for r in 0..MR_I8 {
+            let ar = av[r] as i64;
+            let row = &mut acc[r];
+            for c in 0..NR_I8 {
+                row[c] += ar * bv[c] as i64;
+            }
+        }
+    }
+}
+
+/// Fused multi-slice sweep: `C = Σ_d weights[d] · D_d` with
+/// `D_d = Σ_{k+l=d} A_k · B_lᵀ`, one pass over the packed panels.
+///
+/// `ap` must be packed with tile [`MR_I8`], `bp` with [`NR_I8`], and
+/// `weights.len()` selects how many anti-diagonals are retained (the
+/// ozIMMU triangle keeps `d < splits`).  Row bands are distributed over
+/// `cfg.threads` scoped threads; the result is independent of the
+/// thread count.
+pub fn fused_ozaki_sweep(
+    ap: &Panels<i8>,
+    bp: &Panels<i8>,
+    weights: &[f64],
+    cfg: &KernelConfig,
+) -> Result<Mat<f64>> {
+    if ap.tile() != MR_I8 || bp.tile() != NR_I8 {
+        return Err(Error::Shape(format!(
+            "fused_ozaki_sweep: panels must be packed with tiles {MR_I8}/{NR_I8}, \
+             got {}/{}",
+            ap.tile(),
+            bp.tile()
+        )));
+    }
+    if ap.k() != bp.k() {
+        return Err(Error::Shape(format!(
+            "fused_ozaki_sweep: contraction mismatch {} vs {}",
+            ap.k(),
+            bp.k()
+        )));
+    }
+    if ap.planes() != bp.planes() || weights.len() > ap.planes() {
+        return Err(Error::Shape(format!(
+            "fused_ozaki_sweep: {} A-planes, {} B-planes, {} weights",
+            ap.planes(),
+            bp.planes(),
+            weights.len()
+        )));
+    }
+    let (m, n) = (ap.rows(), bp.rows());
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 || weights.is_empty() {
+        return Ok(c);
+    }
+    // Worst-case terms per anti-diagonal accumulator: K·splits.
+    let wide = ap.k().saturating_mul(weights.len()) > MAX_EXACT_I32_TERMS;
+
+    let m_tiles = ap.tiles();
+    let threads = cfg.threads.max(1).min(m_tiles);
+    if threads <= 1 {
+        fused_band(c.data_mut(), 0, n, ap, bp, weights, cfg, wide);
+    } else {
+        let tiles_per_band = m_tiles.div_ceil(threads);
+        let rows_per_band = tiles_per_band * MR_I8;
+        let (apr, bpr) = (ap, bp);
+        std::thread::scope(|scope| {
+            for (bi, band) in c.data_mut().chunks_mut(rows_per_band * n).enumerate() {
+                scope.spawn(move || {
+                    fused_band(band, bi * tiles_per_band, n, apr, bpr, weights, cfg, wide)
+                });
+            }
+        });
+    }
+    Ok(c)
+}
+
+/// One row band of the fused sweep.  `c_band` covers whole tiles
+/// (bands are multiples of `MR_I8` rows except the ragged tail).
+#[allow(clippy::too_many_arguments)]
+fn fused_band(
+    c_band: &mut [f64],
+    tile0: usize,
+    n: usize,
+    ap: &Panels<i8>,
+    bp: &Panels<i8>,
+    weights: &[f64],
+    cfg: &KernelConfig,
+    wide: bool,
+) {
+    let band_rows = c_band.len() / n;
+    let band_tiles = band_rows.div_ceil(MR_I8);
+    let k = ap.k();
+    let kc = cfg.kc.max(1);
+    let mc_tiles = (cfg.mc / MR_I8).max(1);
+    let nc_tiles = (cfg.nc / NR_I8).max(1);
+    let n_tiles = bp.tiles();
+
+    for ic in (0..band_tiles).step_by(mc_tiles) {
+        let ic_end = (ic + mc_tiles).min(band_tiles);
+        for jc in (0..n_tiles).step_by(nc_tiles) {
+            let jc_end = (jc + nc_tiles).min(n_tiles);
+            for it in ic..ic_end {
+                let row0 = it * MR_I8;
+                let ilim = MR_I8.min(band_rows - row0);
+                for jt in jc..jc_end {
+                    let col0 = jt * NR_I8;
+                    let jlim = NR_I8.min(n - col0);
+                    let mut ctile = [[0.0f64; NR_I8]; MR_I8];
+                    for (d, &w) in weights.iter().enumerate() {
+                        if wide {
+                            let mut acc = [[0i64; NR_I8]; MR_I8];
+                            for kk in 0..=d {
+                                let apan = ap.panel(kk, tile0 + it);
+                                let bpan = bp.panel(d - kk, jt);
+                                let mut k0 = 0;
+                                while k0 < k {
+                                    let k1 = (k0 + kc).min(k);
+                                    microkernel_i64(
+                                        &mut acc,
+                                        &apan[k0 * MR_I8..k1 * MR_I8],
+                                        &bpan[k0 * NR_I8..k1 * NR_I8],
+                                    );
+                                    k0 = k1;
+                                }
+                            }
+                            for r in 0..MR_I8 {
+                                for cc in 0..NR_I8 {
+                                    ctile[r][cc] += acc[r][cc] as f64 * w;
+                                }
+                            }
+                        } else {
+                            let mut acc = [[0i32; NR_I8]; MR_I8];
+                            for kk in 0..=d {
+                                let apan = ap.panel(kk, tile0 + it);
+                                let bpan = bp.panel(d - kk, jt);
+                                let mut k0 = 0;
+                                while k0 < k {
+                                    let k1 = (k0 + kc).min(k);
+                                    microkernel_i32(
+                                        &mut acc,
+                                        &apan[k0 * MR_I8..k1 * MR_I8],
+                                        &bpan[k0 * NR_I8..k1 * NR_I8],
+                                    );
+                                    k0 = k1;
+                                }
+                            }
+                            for r in 0..MR_I8 {
+                                for cc in 0..NR_I8 {
+                                    ctile[r][cc] += acc[r][cc] as f64 * w;
+                                }
+                            }
+                        }
+                    }
+                    for r in 0..ilim {
+                        let base = (row0 + r) * n + col0;
+                        for (dst, src) in c_band[base..base + jlim].iter_mut().zip(&ctile[r]) {
+                            *dst = *src;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Blocked, threaded INT8 GEMM with exact `i32` accumulation:
+/// `a (M×K) · bt (N×K)ᵀ` on the packed microkernel — the single-slice
+/// entry point, bit-for-bit equal to [`crate::ozaki::int8_gemm_i32`].
+pub fn int8_gemm_blocked(a: &Mat<i8>, bt: &Mat<i8>, cfg: &KernelConfig) -> Result<Mat<i32>> {
+    if a.cols() != bt.cols() {
+        return Err(Error::Shape(format!(
+            "int8_gemm_blocked: {}x{} · ({}x{})ᵀ",
+            a.rows(),
+            a.cols(),
+            bt.rows(),
+            bt.cols()
+        )));
+    }
+    if a.cols() > MAX_EXACT_I32_TERMS {
+        return Err(Error::Numerical(format!(
+            "int8_gemm_blocked: K={} may overflow the i32 accumulator \
+             (exact bound K <= {MAX_EXACT_I32_TERMS})",
+            a.cols()
+        )));
+    }
+    let (m, n) = (a.rows(), bt.rows());
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return Ok(c);
+    }
+    let ap = Panels::pack_planes(std::slice::from_ref(a), MR_I8);
+    let bp = Panels::pack_planes(std::slice::from_ref(bt), NR_I8);
+
+    let m_tiles = ap.tiles();
+    let threads = cfg.threads.max(1).min(m_tiles);
+    if threads <= 1 {
+        int8_band(c.data_mut(), 0, n, &ap, &bp, cfg);
+    } else {
+        let tiles_per_band = m_tiles.div_ceil(threads);
+        let rows_per_band = tiles_per_band * MR_I8;
+        let (apr, bpr) = (&ap, &bp);
+        std::thread::scope(|scope| {
+            for (bi, band) in c.data_mut().chunks_mut(rows_per_band * n).enumerate() {
+                scope.spawn(move || int8_band(band, bi * tiles_per_band, n, apr, bpr, cfg));
+            }
+        });
+    }
+    Ok(c)
+}
+
+/// One row band of the single-slice INT8 GEMM.
+fn int8_band(
+    c_band: &mut [i32],
+    tile0: usize,
+    n: usize,
+    ap: &Panels<i8>,
+    bp: &Panels<i8>,
+    cfg: &KernelConfig,
+) {
+    let band_rows = c_band.len() / n;
+    let band_tiles = band_rows.div_ceil(MR_I8);
+    let k = ap.k();
+    let kc = cfg.kc.max(1);
+    let nc_tiles = (cfg.nc / NR_I8).max(1);
+    let n_tiles = bp.tiles();
+
+    for jc in (0..n_tiles).step_by(nc_tiles) {
+        let jc_end = (jc + nc_tiles).min(n_tiles);
+        for it in 0..band_tiles {
+            let row0 = it * MR_I8;
+            let ilim = MR_I8.min(band_rows - row0);
+            let apan = ap.panel(0, tile0 + it);
+            for jt in jc..jc_end {
+                let col0 = jt * NR_I8;
+                let jlim = NR_I8.min(n - col0);
+                let bpan = bp.panel(0, jt);
+                let mut acc = [[0i32; NR_I8]; MR_I8];
+                let mut k0 = 0;
+                while k0 < k {
+                    let k1 = (k0 + kc).min(k);
+                    microkernel_i32(
+                        &mut acc,
+                        &apan[k0 * MR_I8..k1 * MR_I8],
+                        &bpan[k0 * NR_I8..k1 * NR_I8],
+                    );
+                    k0 = k1;
+                }
+                for r in 0..ilim {
+                    let base = (row0 + r) * n + col0;
+                    for (dst, src) in c_band[base..base + jlim].iter_mut().zip(&acc[r]) {
+                        *dst = *src;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    fn rand_i8(rng: &mut Rng, r: usize, c: usize) -> Mat<i8> {
+        Mat::from_fn(r, c, |_, _| (rng.index(0, 255) as i32 - 127) as i8)
+    }
+
+    fn naive_i32(a: &Mat<i8>, bt: &Mat<i8>) -> Mat<i32> {
+        Mat::from_fn(a.rows(), bt.rows(), |i, j| {
+            a.row(i)
+                .iter()
+                .zip(bt.row(j))
+                .map(|(&x, &y)| x as i32 * y as i32)
+                .sum()
+        })
+    }
+
+    #[test]
+    fn blocked_matches_naive_across_shapes_and_threads() {
+        let mut rng = Rng::new(0xB10C);
+        for (m, k, n) in [
+            (1, 1, 1),
+            (4, 8, 8),
+            (3, 5, 7),
+            (5, 4, 9),
+            (17, 33, 9),
+            (64, 8, 3),
+            (3, 8, 64),
+            (2, 0, 3),
+        ] {
+            let a = rand_i8(&mut rng, m, k);
+            let bt = rand_i8(&mut rng, n, k);
+            let want = naive_i32(&a, &bt);
+            for threads in [1usize, 4] {
+                let cfg = KernelConfig {
+                    threads,
+                    ..KernelConfig::default()
+                };
+                let got = int8_gemm_blocked(&a, &bt, &cfg).unwrap();
+                assert_eq!(got.data(), want.data(), "{m}x{k}x{n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_blocking_parameters_still_exact() {
+        let mut rng = Rng::new(0xB10D);
+        let a = rand_i8(&mut rng, 9, 13);
+        let bt = rand_i8(&mut rng, 11, 13);
+        let want = naive_i32(&a, &bt);
+        for kc in [1usize, 2, 12, 13, 14, 1024] {
+            let cfg = KernelConfig {
+                mc: MR_I8,
+                nc: NR_I8,
+                kc,
+                threads: 2,
+            };
+            let got = int8_gemm_blocked(&a, &bt, &cfg).unwrap();
+            assert_eq!(got.data(), want.data(), "kc={kc}");
+        }
+    }
+
+    #[test]
+    fn saturated_inputs_at_the_i32_boundary_are_exact() {
+        // K at the exact bound with worst-case ±127 entries: the largest
+        // magnitude an i32 accumulator must hold without wrapping.
+        let k = MAX_EXACT_I32_TERMS;
+        let a = Mat::from_fn(1, k, |_, _| 127i8);
+        let bt = Mat::from_fn(1, k, |_, _| -127i8);
+        let cfg = KernelConfig {
+            threads: 1,
+            ..KernelConfig::default()
+        };
+        let c = int8_gemm_blocked(&a, &bt, &cfg).unwrap();
+        assert_eq!(c.get(0, 0) as i64, -(k as i64) * 127 * 127);
+    }
+
+    #[test]
+    fn k_past_the_bound_is_rejected() {
+        let k = MAX_EXACT_I32_TERMS + 1;
+        let a = Mat::from_fn(1, k, |_, _| 127i8);
+        let bt = Mat::from_fn(1, k, |_, _| -127i8);
+        let err = int8_gemm_blocked(&a, &bt, &KernelConfig::default()).unwrap_err();
+        assert!(matches!(err, Error::Numerical(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn fused_sweep_wide_path_is_exact_past_the_i32_bound() {
+        // K·splits beyond the i32 bound: diagonal d=2 sums 3·K terms of
+        // -127² and would wrap i32; the i64 fallback must stay exact.
+        let splits = 3usize;
+        let k = MAX_EXACT_I32_TERMS / 2; // k*splits > bound, single pair fits
+        let planes_a: Vec<Mat<i8>> = (0..splits).map(|_| Mat::from_fn(1, k, |_, _| 127i8)).collect();
+        let planes_b: Vec<Mat<i8>> = (0..splits)
+            .map(|_| Mat::from_fn(1, k, |_, _| -127i8))
+            .collect();
+        let ap = Panels::pack_planes(&planes_a, MR_I8);
+        let bp = Panels::pack_planes(&planes_b, NR_I8);
+        let weights = [1.0f64, 1.0, 1.0];
+        let c = fused_ozaki_sweep(&ap, &bp, &weights, &KernelConfig::default()).unwrap();
+        // Σ_d (d+1)·K·(−127²) = 6·K·(−16129), exact in f64 (< 2^53).
+        let want = -6.0 * k as f64 * 16129.0;
+        assert_eq!(c.get(0, 0), want);
+    }
+
+    #[test]
+    fn fused_sweep_rejects_mismatched_panels() {
+        let a = Panels::pack_planes(&[Mat::<i8>::zeros(2, 3)], MR_I8);
+        let b_badk = Panels::pack_planes(&[Mat::<i8>::zeros(2, 4)], NR_I8);
+        let cfg = KernelConfig::default();
+        assert!(fused_ozaki_sweep(&a, &b_badk, &[1.0], &cfg).is_err());
+        let b_badtile = Panels::pack_planes(&[Mat::<i8>::zeros(2, 3)], MR_I8);
+        assert!(fused_ozaki_sweep(&a, &b_badtile, &[1.0], &cfg).is_err());
+    }
+}

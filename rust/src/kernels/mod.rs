@@ -1,0 +1,114 @@
+//! Host kernel core: cache-blocked, panel-packed, multithreaded GEMM
+//! microkernels — the "as fast as the hardware allows" CPU compute layer
+//! under `linalg` and `ozaki`.
+//!
+//! Structure (the GotoBLAS/TVM-dp4a decomposition):
+//!
+//! * [`pack`] — operands are packed **once** into k-major tile panels
+//!   (slice-major across Ozaki planes), so every microkernel step reads
+//!   two short contiguous vectors;
+//! * [`int8`] — the INT8→INT32 register-tile microkernel, the blocked
+//!   single-slice GEMM ([`int8_gemm_blocked`]), and the **fused
+//!   multi-slice driver** ([`fused_ozaki_sweep`]) that accumulates every
+//!   retained slice pair `k+l = d` in one sweep over the packed panels
+//!   with an automatic i64 escape past the exact-i32 bound
+//!   ([`MAX_EXACT_I32_TERMS`]);
+//! * [`fp64`] — the FP64 and fused-complex kernels on the same
+//!   infrastructure ([`dgemm_blocked`], [`zgemm_blocked`]).
+//!
+//! Tiling and threading are governed by [`KernelConfig`]: `mc`/`nc`/`kc`
+//! are the cache-block extents in matrix elements, `threads` the number
+//! of row bands executed on scoped threads (`OZACCEL_THREADS`
+//! overrides; default = available parallelism).  Results are bit-for-bit
+//! independent of all four knobs for the integer and Ozaki paths, and of
+//! `mc`/`nc`/`threads` for the FP64 path (`kc` fixes the FP64 summation
+//! order, so dispatch sites share one default config).
+
+pub mod fp64;
+pub mod int8;
+pub mod pack;
+
+pub use fp64::{dgemm_blocked, zgemm_blocked, MR_C64, MR_F64, NR_C64, NR_F64};
+pub use int8::{fused_ozaki_sweep, int8_gemm_blocked, MAX_EXACT_I32_TERMS, MR_I8, NR_I8};
+pub use pack::{pack_cols_c64, pack_cols_f64, pack_rows_c64, pack_rows_f64, Panels};
+
+/// Tiling + threading parameters of the blocked kernels.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Row-block extent (rows of A per cache block).
+    pub mc: usize,
+    /// Column-block extent (columns of B per cache block).
+    pub nc: usize,
+    /// Contraction-block extent (elements of K per microkernel call).
+    pub kc: usize,
+    /// Row bands executed concurrently via `std::thread::scope`.
+    pub threads: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig {
+            mc: 128,
+            nc: 256,
+            kc: 256,
+            threads: default_threads(),
+        }
+    }
+}
+
+impl KernelConfig {
+    /// Default tiling, single-threaded (deterministic CI baseline).
+    pub fn single_threaded() -> Self {
+        KernelConfig {
+            threads: 1,
+            ..KernelConfig::default()
+        }
+    }
+
+    /// Default tiling with an explicit thread count.
+    pub fn with_threads(threads: usize) -> Self {
+        KernelConfig {
+            threads: threads.max(1),
+            ..KernelConfig::default()
+        }
+    }
+}
+
+/// Thread-count default: `OZACCEL_THREADS` if set to a positive
+/// integer (invalid values are ignored here; `config::RunConfig`
+/// rejects them loudly), otherwise the machine's available
+/// parallelism.  Resolved once per process — `KernelConfig::default()`
+/// sits on the per-GEMM hot path and must not re-read the environment.
+pub fn default_threads() -> usize {
+    static DEFAULT: once_cell::sync::Lazy<usize> = once_cell::sync::Lazy::new(|| {
+        if let Ok(v) = std::env::var("OZACCEL_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    });
+    *DEFAULT
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = KernelConfig::default();
+        assert!(c.mc >= MR_I8 && c.nc >= NR_I8 && c.kc >= 1 && c.threads >= 1);
+    }
+
+    #[test]
+    fn with_threads_clamps_to_one() {
+        assert_eq!(KernelConfig::with_threads(0).threads, 1);
+        assert_eq!(KernelConfig::with_threads(7).threads, 7);
+        assert_eq!(KernelConfig::single_threaded().threads, 1);
+    }
+}

@@ -1,0 +1,237 @@
+//! Panel packing: operands are laid out once into k-major tile panels
+//! so the microkernels stream both inputs contiguously.
+//!
+//! A panel holds `tile` logical rows interleaved k-major: element
+//! `(row, p)` of plane `s` lives at
+//! `(s·tiles + row/tile)·k·tile + p·tile + row%tile`, so one microkernel
+//! step reads `tile` consecutive values for consecutive rows at the same
+//! `p` — the broadcast/vector shape LLVM autovectorizes.  Planes are
+//! slice-major (all tiles of slice 0, then slice 1, ...), which is what
+//! lets the fused Ozaki driver walk every retained slice pair over one
+//! allocation.  Ragged edges are zero-padded; zero products are exact in
+//! both integer and FP64 arithmetic, so padding never changes results.
+
+use crate::linalg::Mat;
+
+/// Packed tile panels over `planes` slice planes of a `rows x k`
+/// operand (`planes == 1` for plain FP64/complex-component GEMM).
+#[derive(Clone, Debug)]
+pub struct Panels<T> {
+    data: Vec<T>,
+    planes: usize,
+    rows: usize,
+    k: usize,
+    tile: usize,
+    tiles: usize,
+}
+
+impl<T: Copy + Default> Panels<T> {
+    /// Zero-filled panels (`ceil(rows/tile)` tiles per plane).
+    pub fn zeroed(planes: usize, rows: usize, k: usize, tile: usize) -> Self {
+        assert!(tile > 0, "panel tile must be positive");
+        let tiles = rows.div_ceil(tile);
+        Panels {
+            data: vec![T::default(); planes * tiles * k * tile],
+            planes,
+            rows,
+            k,
+            tile,
+            tiles,
+        }
+    }
+
+    /// Pack pre-sliced planes (each a `rows x k` row-major matrix).
+    pub fn pack_planes(planes: &[Mat<T>], tile: usize) -> Self {
+        let rows = planes.first().map(|m| m.rows()).unwrap_or(0);
+        let k = planes.first().map(|m| m.cols()).unwrap_or(0);
+        let mut out = Self::zeroed(planes.len(), rows, k, tile);
+        for (s, plane) in planes.iter().enumerate() {
+            assert!(
+                plane.rows() == rows && plane.cols() == k,
+                "pack_planes: ragged plane shapes"
+            );
+            for i in 0..rows {
+                for (p, &v) in plane.row(i).iter().enumerate() {
+                    out.set(s, i, p, v);
+                }
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn planes(&self) -> usize {
+        self.planes
+    }
+
+    /// Logical (unpadded) rows packed.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Number of tiles per plane.
+    #[inline]
+    pub fn tiles(&self) -> usize {
+        self.tiles
+    }
+
+    /// Packed bytes (perf accounting for the bench JSON emitter).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<T>()
+    }
+
+    #[inline]
+    fn panel_stride(&self) -> usize {
+        self.k * self.tile
+    }
+
+    /// The k-major panel of tile `t` in plane `s`
+    /// (length `k * tile`; `p`-th chunk of `tile` values is column `p`).
+    #[inline]
+    pub fn panel(&self, s: usize, t: usize) -> &[T] {
+        let stride = self.panel_stride();
+        let base = (s * self.tiles + t) * stride;
+        &self.data[base..base + stride]
+    }
+
+    /// Write one element (used by the packers; zero-padding stays).
+    #[inline]
+    pub fn set(&mut self, s: usize, row: usize, p: usize, v: T) {
+        debug_assert!(s < self.planes && row < self.rows && p < self.k);
+        let stride = self.panel_stride();
+        let idx = (s * self.tiles + row / self.tile) * stride + p * self.tile + row % self.tile;
+        self.data[idx] = v;
+    }
+
+    /// Read one element back (tests).
+    #[inline]
+    pub fn get(&self, s: usize, row: usize, p: usize) -> T {
+        let stride = self.panel_stride();
+        let idx = (s * self.tiles + row / self.tile) * stride + p * self.tile + row % self.tile;
+        self.data[idx]
+    }
+}
+
+/// Pack the rows of `a` (A-side operand) into one-plane panels.
+pub fn pack_rows_f64(a: &Mat<f64>, tile: usize) -> Panels<f64> {
+    let mut out = Panels::zeroed(1, a.rows(), a.cols(), tile);
+    for i in 0..a.rows() {
+        for (p, &v) in a.row(i).iter().enumerate() {
+            out.set(0, i, p, v);
+        }
+    }
+    out
+}
+
+/// Pack the columns of `b` (B-side operand, `k x n`) into one-plane
+/// panels: packed row `j` is column `j` of `b`.
+pub fn pack_cols_f64(b: &Mat<f64>, tile: usize) -> Panels<f64> {
+    let (k, n) = (b.rows(), b.cols());
+    let mut out = Panels::zeroed(1, n, k, tile);
+    for p in 0..k {
+        for (j, &v) in b.row(p).iter().enumerate() {
+            out.set(0, j, p, v);
+        }
+    }
+    out
+}
+
+/// Pack the rows of a complex matrix into separate re/im panels.
+pub fn pack_rows_c64(a: &crate::linalg::ZMat, tile: usize) -> (Panels<f64>, Panels<f64>) {
+    let mut re = Panels::zeroed(1, a.rows(), a.cols(), tile);
+    let mut im = Panels::zeroed(1, a.rows(), a.cols(), tile);
+    for i in 0..a.rows() {
+        for (p, z) in a.row(i).iter().enumerate() {
+            re.set(0, i, p, z.re);
+            im.set(0, i, p, z.im);
+        }
+    }
+    (re, im)
+}
+
+/// Pack the columns of a complex `k x n` matrix into re/im panels.
+pub fn pack_cols_c64(b: &crate::linalg::ZMat, tile: usize) -> (Panels<f64>, Panels<f64>) {
+    let (k, n) = (b.rows(), b.cols());
+    let mut re = Panels::zeroed(1, n, k, tile);
+    let mut im = Panels::zeroed(1, n, k, tile);
+    for p in 0..k {
+        for (j, z) in b.row(p).iter().enumerate() {
+            re.set(0, j, p, z.re);
+            im.set(0, j, p, z.im);
+        }
+    }
+    (re, im)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panel_layout_is_k_major() {
+        // 3 rows, tile 2 -> 2 tiles, second padded with one zero row.
+        let m = Mat::from_fn(3, 2, |i, j| (10 * i + j) as f64);
+        let p = pack_rows_f64(&m, 2);
+        assert_eq!(p.tiles(), 2);
+        assert_eq!(p.panel(0, 0), &[0.0, 10.0, 1.0, 11.0]);
+        assert_eq!(p.panel(0, 1), &[20.0, 0.0, 21.0, 0.0]);
+    }
+
+    #[test]
+    fn col_pack_matches_transpose() {
+        let b = Mat::from_fn(3, 5, |i, j| (i * 5 + j) as f64);
+        let p = pack_cols_f64(&b, 4);
+        for j in 0..5 {
+            for k in 0..3 {
+                assert_eq!(p.get(0, j, k), b.get(k, j));
+            }
+        }
+    }
+
+    #[test]
+    fn pack_planes_roundtrips() {
+        let a = Mat::from_fn(5, 7, |i, j| (i * 7 + j) as i8);
+        let b = Mat::from_fn(5, 7, |i, j| -((i + j) as i8));
+        let p = Panels::pack_planes(&[a.clone(), b.clone()], 4);
+        assert_eq!(p.planes(), 2);
+        for i in 0..5 {
+            for j in 0..7 {
+                assert_eq!(p.get(0, i, j), a.get(i, j));
+                assert_eq!(p.get(1, i, j), b.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_operands_are_legal() {
+        let p = Panels::<i8>::zeroed(3, 0, 4, 8);
+        assert_eq!(p.tiles(), 0);
+        assert_eq!(p.bytes(), 0);
+        let q = pack_rows_f64(&Mat::zeros(2, 0), 4);
+        assert_eq!(q.k(), 0);
+        assert_eq!(q.panel(0, 0), &[] as &[f64]);
+    }
+
+    #[test]
+    fn complex_pack_splits_components() {
+        use crate::complex::c64;
+        let z = Mat::from_fn(2, 3, |i, j| c64(i as f64, j as f64));
+        let (re, im) = pack_rows_c64(&z, 2);
+        assert_eq!(re.get(0, 1, 2), 1.0);
+        assert_eq!(im.get(0, 1, 2), 2.0);
+        let (bre, bim) = pack_cols_c64(&z, 2);
+        assert_eq!(bre.get(0, 2, 1), 1.0);
+        assert_eq!(bim.get(0, 2, 1), 2.0);
+    }
+}

@@ -17,6 +17,28 @@
 //!   application used for the paper's accuracy study, and the GH200/GB200
 //!   performance model.
 //!
+//! ## Host kernel core ([`kernels`])
+//!
+//! All host compute — the coordinator's CPU fallback and the pure-Rust
+//! Ozaki mirror — runs on a packed, cache-blocked, multithreaded kernel
+//! layer:
+//!
+//! * operands are packed **once** into k-major tile panels (slice-major
+//!   across the INT8 planes), then streamed by register-tile
+//!   microkernels that LLVM autovectorizes;
+//! * the Ozaki path uses a **fused multi-slice driver**: every retained
+//!   slice pair `k + l = d < splits` is accumulated in a single sweep
+//!   over the packed panels (no per-pair allocations or extra passes),
+//!   with an automatic i64 escape past the exact-i32 bound
+//!   `K·splits <= 133_144`;
+//! * row bands run on `std::thread::scope` threads — `OZACCEL_THREADS`
+//!   (env / `run.threads` in the config file) sets the count, and
+//!   results are bit-for-bit independent of it;
+//! * tiling is governed by [`kernels::KernelConfig`] (`mc`/`nc`/`kc`);
+//!   the coordinator picks implementations through a
+//!   [`coordinator::KernelSelector`] (`OZACCEL_HOST_KERNEL=naive` keeps
+//!   the textbook reference loops for A/B runs).
+//!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! model once, and the Rust binary is self-contained afterwards.
 //!
@@ -45,6 +67,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod experiments;
+pub mod kernels;
 pub mod linalg;
 pub mod logging;
 pub mod must;

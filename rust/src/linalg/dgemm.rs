@@ -22,51 +22,16 @@ pub fn dgemm_naive(a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
     Ok(c)
 }
 
-/// Blocked GEMM with a packed row x packed-column microkernel.
+/// Blocked + threaded GEMM on the packed-panel microkernel of
+/// [`crate::kernels`] (crate-default tiling; `OZACCEL_THREADS` governs
+/// the row-band parallelism).
 ///
-/// B is packed transposed once so the inner loop is two contiguous
-/// streams; four independent accumulators let LLVM vectorise.  This is
-/// the host hot path (DESIGN.md §Perf target: >= 1 GFLOP/s).
+/// Every output element is accumulated in ascending-K order, so the
+/// result is bit-for-bit identical to [`dgemm_naive`] at any blocking
+/// factor or thread count — the runtime's bucket-padding policy and the
+/// dispatcher's kernel routing both rely on that determinism.
 pub fn dgemm(a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
-    check(a, b)?;
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    // Pack B^T: bt[j*k + p] = b[p, j]
-    let mut bt = vec![0.0f64; n * k];
-    for p in 0..k {
-        let brow = b.row(p);
-        for j in 0..n {
-            bt[j * k + p] = brow[j];
-        }
-    }
-    let mut c = Mat::zeros(m, n);
-    for i in 0..m {
-        let arow = a.row(i);
-        let crow = c.row_mut(i);
-        for j in 0..n {
-            crow[j] = dot(arow, &bt[j * k..(j + 1) * k]);
-        }
-    }
-    Ok(c)
-}
-
-/// Unrolled dot product with four independent accumulators.
-#[inline]
-fn dot(x: &[f64], y: &[f64]) -> f64 {
-    let n = x.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += x[i] * y[i];
-        s1 += x[i + 1] * y[i + 1];
-        s2 += x[i + 2] * y[i + 2];
-        s3 += x[i + 3] * y[i + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for i in chunks * 4..n {
-        s += x[i] * y[i];
-    }
-    s
+    crate::kernels::dgemm_blocked(a, b, &crate::kernels::KernelConfig::default())
 }
 
 fn check(a: &Mat<f64>, b: &Mat<f64>) -> Result<()> {
@@ -101,9 +66,9 @@ mod tests {
             let b = rand_mat(rng, k, n);
             let fast = dgemm(&a, &b).unwrap();
             let slow = dgemm_naive(&a, &b).unwrap();
-            for (x, y) in fast.data().iter().zip(slow.data()) {
-                assert!((x - y).abs() <= 1e-12 * (1.0 + y.abs()), "{x} vs {y}");
-            }
+            // The blocked kernel preserves the naive per-element
+            // summation order, so agreement is exact.
+            assert_eq!(fast.data(), slow.data());
         });
     }
 

@@ -3,10 +3,11 @@
 //! spends its FLOPs in).
 
 use super::matrix::ZMat;
-use crate::complex::c64;
 use crate::error::{Error, Result};
 #[cfg(test)]
 use super::matrix::Mat;
+#[cfg(test)]
+use crate::complex::c64;
 
 /// A ZGEMM implementation the LU can call instead of the host one.
 ///
@@ -33,50 +34,16 @@ pub fn zgemm_naive(a: &ZMat, b: &ZMat) -> Result<ZMat> {
     Ok(c)
 }
 
-/// Host complex GEMM via split real arithmetic:
-/// packs re/im planes once, then four real dot products per output.
+/// Host complex GEMM via split real arithmetic, on the blocked +
+/// threaded kernel core of [`crate::kernels`]: re/im planes are packed
+/// once into tile panels and the four real products are fused into one
+/// sweep.
 ///
 /// Cre = Ar·Br − Ai·Bi,  Cim = Ar·Bi + Ai·Br  — the same 4-real-GEMM
 /// decomposition the coordinator uses for the offloaded path, so host
 /// and device paths agree in structure (ozIMMU splits re/im likewise).
 pub fn zgemm(a: &ZMat, b: &ZMat) -> Result<ZMat> {
-    check(a, b)?;
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    // Pack A rows (re, im) and B^T columns (re, im) contiguously.
-    let mut ar = vec![0.0; m * k];
-    let mut ai = vec![0.0; m * k];
-    for i in 0..m {
-        for p in 0..k {
-            let z = a.get(i, p);
-            ar[i * k + p] = z.re;
-            ai[i * k + p] = z.im;
-        }
-    }
-    let mut btr = vec![0.0; n * k];
-    let mut bti = vec![0.0; n * k];
-    for p in 0..k {
-        for j in 0..n {
-            let z = b.get(p, j);
-            btr[j * k + p] = z.re;
-            bti[j * k + p] = z.im;
-        }
-    }
-    let mut c = ZMat::zeros(m, n);
-    for i in 0..m {
-        let (arr, aii) = (&ar[i * k..(i + 1) * k], &ai[i * k..(i + 1) * k]);
-        for j in 0..n {
-            let (brr, bii) = (&btr[j * k..(j + 1) * k], &bti[j * k..(j + 1) * k]);
-            let (mut srr, mut sii, mut sri, mut sir) = (0.0, 0.0, 0.0, 0.0);
-            for p in 0..k {
-                srr += arr[p] * brr[p];
-                sii += aii[p] * bii[p];
-                sri += arr[p] * bii[p];
-                sir += aii[p] * brr[p];
-            }
-            c.set(i, j, c64(srr - sii, sri + sir));
-        }
-    }
-    Ok(c)
+    crate::kernels::zgemm_blocked(a, b, &crate::kernels::KernelConfig::default())
 }
 
 fn check(a: &ZMat, b: &ZMat) -> Result<()> {

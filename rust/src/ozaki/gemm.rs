@@ -1,17 +1,33 @@
 //! Host-side fp64_int8_s DGEMM — the pure-Rust mirror of the AOT model.
 //!
-//! The accumulation order (slice-pair-major, K-inner) matches the HLO
-//! graph so the PJRT path and this path agree to the last bit; the
-//! integration suite relies on that.
+//! The accumulation order (slice-pair-major, K-inner per anti-diagonal)
+//! matches the HLO graph so the PJRT path and this path agree to the
+//! last bit; the integration suite relies on that.
+//!
+//! Two host implementations share that contract:
+//!
+//! * [`ozaki_dgemm`] — the production path: scale + slice + pack once,
+//!   then the fused multi-slice sweep of
+//!   [`crate::kernels::fused_ozaki_sweep`] (blocked, threaded, zero
+//!   heap allocations in the hot loop);
+//! * [`ozaki_dgemm_naive`] — the original per-pair reference
+//!   (`splits·(splits+1)/2` separate INT8 GEMMs), kept as the oracle the
+//!   kernel-equivalence tests pin the fast path against bit-for-bit.
 
-use super::split::{ldexp, scale_rows, split_scaled, SLICE_BITS};
+use super::split::{
+    ldexp, row_scale_exponents, scale_rows, split_scaled, split_scaled_into_panels, SLICE_BITS,
+};
 use crate::error::{Error, Result};
+use crate::kernels::{
+    fused_ozaki_sweep, KernelConfig, Panels, MAX_EXACT_I32_TERMS, MR_I8, NR_I8,
+};
 use crate::linalg::Mat;
 
 /// INT8 GEMM with exact i32 accumulation: `a (M×K) · bt (N×K)ᵀ`.
 ///
 /// `bt` is given transposed (N×K) so both operands stream row-major —
-/// same data layout the packed Pallas kernel sees.
+/// same data layout the packed Pallas kernel sees.  Rejects `K` beyond
+/// the worst-case exact-i32 bound instead of silently wrapping.
 pub fn int8_gemm_i32(a: &Mat<i8>, bt: &Mat<i8>) -> Result<Mat<i32>> {
     if a.cols() != bt.cols() {
         return Err(Error::Shape(format!(
@@ -20,6 +36,13 @@ pub fn int8_gemm_i32(a: &Mat<i8>, bt: &Mat<i8>) -> Result<Mat<i32>> {
             a.cols(),
             bt.rows(),
             bt.cols()
+        )));
+    }
+    if a.cols() > MAX_EXACT_I32_TERMS {
+        return Err(Error::Numerical(format!(
+            "int8_gemm: K={} may overflow the i32 accumulator \
+             (exact bound K <= {MAX_EXACT_I32_TERMS})",
+            a.cols()
         )));
     }
     let (m, k, n) = (a.rows(), a.cols(), bt.rows());
@@ -39,16 +62,8 @@ pub fn int8_gemm_i32(a: &Mat<i8>, bt: &Mat<i8>) -> Result<Mat<i32>> {
     Ok(c)
 }
 
-/// Emulated FP64 GEMM via the Ozaki scheme with `splits` slices.
-///
-/// Slice pairs are grouped per anti-diagonal `d = k + l < splits` (the
-/// ozIMMU_H economisation: later diagonals sit below the precision the
-/// retained ones deliver).  Each diagonal's products share one weight
-/// and are summed *in INT32* — exact, since `(d+1)·K·127² < 2³¹` for
-/// `K·(d+1) < 133k` — matching the L2 model's packed-diagonal GEMM
-/// bit-for-bit (the FP64 accumulation sees identical integers in the
-/// identical order).
-pub fn ozaki_dgemm(a: &Mat<f64>, b: &Mat<f64>, splits: u32) -> Result<Mat<f64>> {
+/// Validate an Ozaki GEMM call (shared by the fused and naive paths).
+fn check_ozaki(a: &Mat<f64>, b: &Mat<f64>, splits: u32) -> Result<()> {
     if a.cols() != b.rows() {
         return Err(Error::Shape(format!(
             "ozaki_dgemm: {}x{} @ {}x{}",
@@ -60,6 +75,88 @@ pub fn ozaki_dgemm(a: &Mat<f64>, b: &Mat<f64>, splits: u32) -> Result<Mat<f64>> 
     }
     if splits < 2 {
         return Err(Error::Numerical("ozaki_dgemm needs >= 2 splits".into()));
+    }
+    Ok(())
+}
+
+/// Anti-diagonal weights `2^(−7(d+2))` for `d < splits`.
+pub(crate) fn diagonal_weights(splits: u32) -> Vec<f64> {
+    (0..splits as i32)
+        .map(|d| ldexp(1.0, -(SLICE_BITS as i32) * (d + 2)))
+        .collect()
+}
+
+/// Scale + slice + pack the A operand (row scaling, `MR` panels).
+pub(crate) fn prepare_a(a: &Mat<f64>, splits: u32) -> (Panels<i8>, Vec<i32>) {
+    let ea = row_scale_exponents(a);
+    let pa = split_scaled_into_panels(a, &ea, splits, MR_I8);
+    (pa, ea)
+}
+
+/// Scale + slice + pack the B operand (per-column scaling via its
+/// transpose, `NR` panels).
+pub(crate) fn prepare_b(b: &Mat<f64>, splits: u32) -> (Panels<i8>, Vec<i32>) {
+    let bt = b.transposed();
+    let eb = row_scale_exponents(&bt);
+    let pb = split_scaled_into_panels(&bt, &eb, splits, NR_I8);
+    (pb, eb)
+}
+
+/// Undo the row/column power-of-two scaling: exact exponent shifts.
+pub(crate) fn unscale(c: &mut Mat<f64>, ea: &[i32], eb: &[i32]) {
+    for i in 0..c.rows() {
+        let ei = ea[i];
+        let crow = c.row_mut(i);
+        for (j, v) in crow.iter_mut().enumerate() {
+            *v = ldexp(*v, ei + eb[j]);
+        }
+    }
+}
+
+/// Emulated FP64 GEMM via the Ozaki scheme with `splits` slices —
+/// the blocked, packed, multithreaded host path with the crate-default
+/// [`KernelConfig`].
+///
+/// Slice pairs are grouped per anti-diagonal `d = k + l < splits` (the
+/// ozIMMU_H economisation: later diagonals sit below the precision the
+/// retained ones deliver).  Each diagonal's products share one weight
+/// and are summed *in integers* — exact: i32 while
+/// `K·splits <= `[`MAX_EXACT_I32_TERMS`], i64 beyond — so the FP64
+/// accumulation sees identical values in the identical order as the
+/// L2 model's packed-diagonal GEMM and [`ozaki_dgemm_naive`].
+pub fn ozaki_dgemm(a: &Mat<f64>, b: &Mat<f64>, splits: u32) -> Result<Mat<f64>> {
+    ozaki_dgemm_with(a, b, splits, &KernelConfig::default())
+}
+
+/// [`ozaki_dgemm`] with explicit tiling/threading parameters.
+pub fn ozaki_dgemm_with(
+    a: &Mat<f64>,
+    b: &Mat<f64>,
+    splits: u32,
+    cfg: &KernelConfig,
+) -> Result<Mat<f64>> {
+    check_ozaki(a, b, splits)?;
+    let (pa, ea) = prepare_a(a, splits);
+    let (pb, eb) = prepare_b(b, splits);
+    let weights = diagonal_weights(splits);
+    let mut c = fused_ozaki_sweep(&pa, &pb, &weights, cfg)?;
+    unscale(&mut c, &ea, &eb);
+    Ok(c)
+}
+
+/// The original unblocked reference: one [`int8_gemm_i32`] per retained
+/// slice pair, diagonals accumulated into a scratch i32 matrix.  Kept as
+/// the bit-for-bit oracle for the fused path (and selectable through the
+/// coordinator's `KernelSelector` for A/B comparisons).
+pub fn ozaki_dgemm_naive(a: &Mat<f64>, b: &Mat<f64>, splits: u32) -> Result<Mat<f64>> {
+    check_ozaki(a, b, splits)?;
+    if a.cols().saturating_mul(splits as usize) > MAX_EXACT_I32_TERMS {
+        return Err(Error::Numerical(format!(
+            "ozaki_dgemm_naive: K·splits = {}·{splits} may overflow the i32 \
+             diagonal accumulator (exact bound {MAX_EXACT_I32_TERMS}); \
+             use the fused path, which widens to i64",
+            a.cols()
+        )));
     }
     let (m, n) = (a.rows(), b.cols());
     let (a_scaled, ea) = scale_rows(a);
@@ -86,14 +183,7 @@ pub fn ozaki_dgemm(a: &Mat<f64>, b: &Mat<f64>, splits: u32) -> Result<Mat<f64>> 
             *cv += *dv as f64 * w;
         }
     }
-    // Undo the row/column scaling: exact exponent shifts.
-    for i in 0..m {
-        let ei = ea[i];
-        let crow = c.row_mut(i);
-        for (j, v) in crow.iter_mut().enumerate() {
-            *v = ldexp(*v, ei + eb[j]);
-        }
-    }
+    unscale(&mut c, &ea, &eb);
     Ok(c)
 }
 
@@ -124,6 +214,36 @@ mod tests {
         let bt = Mat::from_fn(2, k, |_, _| -127i8);
         let c = int8_gemm_i32(&a, &bt).unwrap();
         assert!(c.data().iter().all(|&v| v == -(k as i32) * 127 * 127));
+    }
+
+    #[test]
+    fn int8_gemm_rejects_overflowing_k() {
+        let k = MAX_EXACT_I32_TERMS + 1;
+        let a = Mat::<i8>::zeros(1, k);
+        let bt = Mat::<i8>::zeros(1, k);
+        assert!(matches!(
+            int8_gemm_i32(&a, &bt),
+            Err(Error::Numerical(_))
+        ));
+        // ... and accepts K exactly at the bound.
+        let a = Mat::from_fn(1, MAX_EXACT_I32_TERMS, |_, _| 127i8);
+        let bt = Mat::from_fn(1, MAX_EXACT_I32_TERMS, |_, _| 127i8);
+        let c = int8_gemm_i32(&a, &bt).unwrap();
+        assert_eq!(c.get(0, 0) as i64, (MAX_EXACT_I32_TERMS as i64) * 127 * 127);
+    }
+
+    #[test]
+    fn fused_path_matches_naive_reference_bit_for_bit() {
+        let mut rng = Rng::new(47);
+        for (m, k, n) in [(1, 1, 1), (7, 5, 3), (16, 16, 16), (13, 33, 9), (2, 64, 2)] {
+            let a = Mat::from_fn(m, k, |_, _| rng.normal() * ldexp(1.0, (m as i32 % 5) - 2));
+            let b = rand_mat(&mut rng, k, n);
+            for s in [2u32, 3, 6] {
+                let fast = ozaki_dgemm(&a, &b, s).unwrap();
+                let slow = ozaki_dgemm_naive(&a, &b, s).unwrap();
+                assert_eq!(fast.data(), slow.data(), "{m}x{k}x{n} s={s}");
+            }
+        }
     }
 
     #[test]
@@ -209,7 +329,9 @@ mod tests {
         let a = Mat::<f64>::zeros(2, 3);
         let b = Mat::<f64>::zeros(4, 2);
         assert!(ozaki_dgemm(&a, &b, 4).is_err());
+        assert!(ozaki_dgemm_naive(&a, &b, 4).is_err());
         let sq = Mat::<f64>::zeros(2, 2);
         assert!(ozaki_dgemm(&sq, &sq, 1).is_err());
+        assert!(ozaki_dgemm_naive(&sq, &sq, 1).is_err());
     }
 }

@@ -10,6 +10,10 @@
 //!    must agree exactly up to the final FP64 accumulation order, which
 //!    both sides fix to slice-pair-major);
 //! 3. **a-priori error model** — the bound feeding the adaptive policy.
+//!
+//! The compute core lives in [`crate::kernels`]: `ozaki_dgemm` packs the
+//! slices once and runs the fused multi-slice sweep; `ozaki_dgemm_naive`
+//! keeps the original per-pair loop as the bit-for-bit oracle.
 
 mod error_model;
 mod gemm;
@@ -18,7 +22,10 @@ mod split;
 mod zgemm;
 
 pub use error_model::{forward_error_bound, required_splits};
-pub use gemm::{int8_gemm_i32, ozaki_dgemm};
+pub use gemm::{int8_gemm_i32, ozaki_dgemm, ozaki_dgemm_naive, ozaki_dgemm_with};
 pub use modes::ComputeMode;
-pub use split::{reconstruct, scale_rows, split_scaled, SLICE_BITS};
-pub use zgemm::ozaki_zgemm;
+pub use split::{
+    reconstruct, row_scale_exponents, scale_rows, split_scaled, split_scaled_into_panels,
+    SLICE_BITS,
+};
+pub use zgemm::{ozaki_zgemm, ozaki_zgemm_with};

@@ -1,6 +1,7 @@
 //! FP64 → signed-7-bit-slice decomposition (the Ozaki error-free
 //! transformation), exactly mirroring `python/compile/model.py`.
 
+use crate::kernels::Panels;
 use crate::linalg::Mat;
 
 /// Bits carried per INT8 slice.  7, not 8: truncating a scaled mantissa
@@ -34,6 +35,56 @@ pub fn scale_rows(a: &Mat<f64>) -> (Mat<f64>, Vec<i32>) {
         }
     }
     (scaled, exps)
+}
+
+/// Per-row scaling exponents only (the allocation-light variant of
+/// [`scale_rows`] used by the packed kernel path): `e[i]` such that
+/// `|a[i][j] * 2^-e[i]| < 1` with equality-free headroom (frexp).
+pub fn row_scale_exponents(a: &Mat<f64>) -> Vec<i32> {
+    (0..a.rows())
+        .map(|i| {
+            let amax = a.row(i).iter().fold(0.0f64, |mx, v| mx.max(v.abs()));
+            if amax == 0.0 {
+                0
+            } else {
+                frexp_exp(amax)
+            }
+        })
+        .collect()
+}
+
+/// Scale, slice, and pack in one pass: the rows of `a` are scaled by
+/// `2^-exps[i]` (exact), split into `splits` signed-7-bit planes, and
+/// written straight into slice-major tile panels for the blocked
+/// kernels — no intermediate scaled matrix or per-plane `Mat`
+/// allocations.  The emitted slice values are bit-for-bit those of
+/// `split_scaled(scale_rows(a).0, splits)`.
+pub fn split_scaled_into_panels(
+    a: &Mat<f64>,
+    exps: &[i32],
+    splits: u32,
+    tile: usize,
+) -> Panels<i8> {
+    let (m, k) = (a.rows(), a.cols());
+    debug_assert_eq!(exps.len(), m);
+    let mut panels = Panels::zeroed(splits as usize, m, k, tile);
+    let scale = (1u64 << SLICE_BITS) as f64; // 128.0, exact
+    let mut r = vec![0.0f64; k];
+    for i in 0..m {
+        let e = exps[i];
+        for (dst, src) in r.iter_mut().zip(a.row(i)) {
+            *dst = ldexp(*src, -e);
+        }
+        for s in 0..splits as usize {
+            for (p, rv) in r.iter_mut().enumerate() {
+                let scaled = *rv * scale;
+                let q = scaled.trunc();
+                panels.set(s, i, p, q as i8);
+                *rv = scaled - q; // exact (Sterbenz)
+            }
+        }
+    }
+    panels
 }
 
 /// Exponent of `frexp`: x = mant * 2^e with mant in [0.5, 1).
@@ -216,6 +267,36 @@ mod tests {
         .unwrap();
         let rec = reconstruct(&split_scaled(&x, 4));
         assert_eq!(rec.data(), x.data());
+    }
+
+    #[test]
+    fn packed_split_matches_two_step_split() {
+        use crate::kernels::{MR_I8, NR_I8};
+        for_cases(20, 31, |rng| {
+            let m = rng.index(1, 12);
+            let k = rng.index(1, 12);
+            let a = Mat::from_fn(m, k, |_, _| rng.wide(30));
+            let exps = row_scale_exponents(&a);
+            let (scaled, exps2) = scale_rows(&a);
+            assert_eq!(exps, exps2);
+            for splits in [2u32, 5] {
+                let planes = split_scaled(&scaled, splits);
+                for tile in [MR_I8, NR_I8] {
+                    let packed = split_scaled_into_panels(&a, &exps, splits, tile);
+                    for (s, plane) in planes.iter().enumerate() {
+                        for i in 0..m {
+                            for p in 0..k {
+                                assert_eq!(
+                                    packed.get(s, i, p),
+                                    plane.get(i, p),
+                                    "s={s} i={i} p={p} tile={tile}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        });
     }
 
     #[test]

@@ -1,21 +1,58 @@
 //! Emulated complex GEMM: four real emulated GEMMs (ozIMMU splits
 //! real/imaginary parts the same way).
+//!
+//! The four products share operands pairwise (`Ar` feeds `Ar·Br` and
+//! `Ar·Bi`, ...), so each component is scaled, sliced, and packed
+//! exactly **once** and the packed panels are reused across the four
+//! fused sweeps — half the splitting/packing work of four independent
+//! `ozaki_dgemm` calls, with bit-identical results.
 
-use super::gemm::ozaki_dgemm;
+use super::gemm::{diagonal_weights, prepare_a, prepare_b, unscale};
 use crate::complex::c64;
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::kernels::{fused_ozaki_sweep, KernelConfig, Panels};
 use crate::linalg::{Mat, ZMat};
 
 /// `C ≈ A · B` on complex matrices via the Ozaki scheme:
 /// `Cre = Ar·Br − Ai·Bi`, `Cim = Ar·Bi + Ai·Br`, each product emulated
-/// with `splits` INT8 slices.
+/// with `splits` INT8 slices (crate-default kernel parameters).
 pub fn ozaki_zgemm(a: &ZMat, b: &ZMat, splits: u32) -> Result<ZMat> {
+    ozaki_zgemm_with(a, b, splits, &KernelConfig::default())
+}
+
+/// [`ozaki_zgemm`] with explicit tiling/threading parameters.
+pub fn ozaki_zgemm_with(a: &ZMat, b: &ZMat, splits: u32, cfg: &KernelConfig) -> Result<ZMat> {
+    if a.cols() != b.rows() {
+        return Err(Error::Shape(format!(
+            "ozaki_zgemm: {}x{} @ {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    if splits < 2 {
+        return Err(Error::Numerical("ozaki_zgemm needs >= 2 splits".into()));
+    }
     let (ar, ai) = (a.re(), a.im());
     let (br, bi) = (b.re(), b.im());
-    let rr = ozaki_dgemm(&ar, &br, splits)?;
-    let ii = ozaki_dgemm(&ai, &bi, splits)?;
-    let ri = ozaki_dgemm(&ar, &bi, splits)?;
-    let ir = ozaki_dgemm(&ai, &br, splits)?;
+    // Pack each component once; reuse across the four products.
+    let (par, ear) = prepare_a(&ar, splits);
+    let (pai, eai) = prepare_a(&ai, splits);
+    let (pbr, ebr) = prepare_b(&br, splits);
+    let (pbi, ebi) = prepare_b(&bi, splits);
+    let weights = diagonal_weights(splits);
+
+    let product = |pa: &Panels<i8>, ea: &[i32], pb: &Panels<i8>, eb: &[i32]| -> Result<Mat<f64>> {
+        let mut c = fused_ozaki_sweep(pa, pb, &weights, cfg)?;
+        unscale(&mut c, ea, eb);
+        Ok(c)
+    };
+    let rr = product(&par, &ear, &pbr, &ebr)?;
+    let ii = product(&pai, &eai, &pbi, &ebi)?;
+    let ri = product(&par, &ear, &pbi, &ebi)?;
+    let ir = product(&pai, &eai, &pbr, &ebr)?;
+
     let (m, n) = (rr.rows(), rr.cols());
     Ok(Mat::from_fn(m, n, |i, j| {
         c64(
@@ -29,6 +66,7 @@ pub fn ozaki_zgemm(a: &ZMat, b: &ZMat, splits: u32) -> Result<ZMat> {
 mod tests {
     use super::*;
     use crate::linalg::zgemm_naive;
+    use crate::ozaki::ozaki_dgemm;
     use crate::testing::{for_cases, Rng};
 
     #[test]
@@ -44,6 +82,29 @@ mod tests {
                 assert!((*g - *w).abs() < 1e-13 * scale);
             }
         });
+    }
+
+    #[test]
+    fn panel_reuse_matches_four_independent_dgemms() {
+        // The shared-panel fast path must be bit-identical to composing
+        // four ozaki_dgemm calls (each pipeline is the same math).
+        let mut rng = Rng::new(77);
+        let a: ZMat = Mat::from_fn(11, 9, |_, _| rng.cnormal());
+        let b: ZMat = Mat::from_fn(9, 13, |_, _| rng.cnormal());
+        let s = 5u32;
+        let got = ozaki_zgemm(&a, &b, s).unwrap();
+        let (ar, ai) = (a.re(), a.im());
+        let (br, bi) = (b.re(), b.im());
+        let rr = ozaki_dgemm(&ar, &br, s).unwrap();
+        let ii = ozaki_dgemm(&ai, &bi, s).unwrap();
+        let ri = ozaki_dgemm(&ar, &bi, s).unwrap();
+        let ir = ozaki_dgemm(&ai, &br, s).unwrap();
+        for i in 0..11 {
+            for j in 0..13 {
+                let want = c64(rr.get(i, j) - ii.get(i, j), ri.get(i, j) + ir.get(i, j));
+                assert_eq!(got.get(i, j), want, "({i},{j})");
+            }
+        }
     }
 
     #[test]
@@ -74,5 +135,14 @@ mod tests {
         let b = Mat::from_fn(8, 8, |_, _| c64::real(rng.normal()));
         let c = ozaki_zgemm(&a, &b, 5).unwrap();
         assert!(c.data().iter().all(|z| z.im == 0.0));
+    }
+
+    #[test]
+    fn shape_and_split_validation() {
+        let a = ZMat::zeros(2, 3);
+        let b = ZMat::zeros(4, 2);
+        assert!(ozaki_zgemm(&a, &b, 4).is_err());
+        let sq = ZMat::zeros(2, 2);
+        assert!(ozaki_zgemm(&sq, &sq, 1).is_err());
     }
 }

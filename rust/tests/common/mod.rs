@@ -1,0 +1,25 @@
+//! Shared helpers for the integration test binaries.
+
+// Each test binary uses only a subset of these helpers; the unused
+// ones would otherwise warn per-binary.
+#![allow(dead_code)]
+
+use ozaccel::runtime::Runtime;
+
+/// The PJRT runtime, or `None` (with a printed skip marker) when the
+/// AOT artifacts are missing or the `xla` dependency is the offline
+/// stub.  PJRT-dependent tests skip instead of failing.
+pub fn runtime() -> Option<Runtime> {
+    match Runtime::from_default_dir() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP-PJRT: runtime unavailable ({e})");
+            None
+        }
+    }
+}
+
+/// Convenience predicate form of [`runtime`].
+pub fn pjrt_available() -> bool {
+    runtime().is_some()
+}

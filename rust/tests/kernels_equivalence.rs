@@ -1,0 +1,201 @@
+//! Differential tests of the blocked/packed/threaded kernel core
+//! against the textbook oracles, across awkward shapes (tile-boundary,
+//! tall/skinny, degenerate) and thread counts.  These pin the
+//! bit-for-bit contracts the dispatcher's `KernelSelector` and the
+//! PJRT integration suite rely on.
+
+use ozaccel::coordinator::{DispatchConfig, Dispatcher, HostKernel, KernelSelector};
+use ozaccel::kernels::{dgemm_blocked, int8_gemm_blocked, KernelConfig, MR_I8, NR_I8};
+use ozaccel::linalg::{dgemm_naive, zgemm_naive, Mat, ZMat};
+use ozaccel::ozaki::{int8_gemm_i32, ozaki_dgemm, ozaki_dgemm_naive, ComputeMode};
+use ozaccel::testing::Rng;
+
+/// Shapes that stress every raggedness case of the MR=4 / NR=8 tiling:
+/// exact multiples, one off either side, K=0/1, single row/column,
+/// tall/skinny both ways.
+fn stress_shapes() -> Vec<(usize, usize, usize)> {
+    vec![
+        (1, 1, 1),
+        (1, 5, 1),
+        (4, 3, 8),
+        (MR_I8 - 1, 7, NR_I8 - 1),
+        (MR_I8, 7, NR_I8),
+        (MR_I8 + 1, 7, NR_I8 + 1),
+        (2 * MR_I8 + 3, 13, 3 * NR_I8 + 5),
+        (64, 8, 3),
+        (3, 8, 64),
+        (5, 0, 7),
+        (7, 1, 5),
+        (1, 33, 17),
+    ]
+}
+
+fn rand_i8(rng: &mut Rng, r: usize, c: usize) -> Mat<i8> {
+    Mat::from_fn(r, c, |_, _| (rng.index(0, 255) as i32 - 127) as i8)
+}
+
+fn rand_f64(rng: &mut Rng, r: usize, c: usize) -> Mat<f64> {
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+#[test]
+fn int8_blocked_equals_unblocked_oracle() {
+    let mut rng = Rng::new(101);
+    for (m, k, n) in stress_shapes() {
+        let a = rand_i8(&mut rng, m, k);
+        let bt = rand_i8(&mut rng, n, k);
+        let want = int8_gemm_i32(&a, &bt).unwrap();
+        for threads in [1usize, 4] {
+            let got = int8_gemm_blocked(&a, &bt, &KernelConfig::with_threads(threads)).unwrap();
+            assert_eq!(got.data(), want.data(), "{m}x{k}x{n} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn kc_boundary_blocking_is_invisible() {
+    // K one below / at / one above the KC block must all agree.
+    let mut rng = Rng::new(103);
+    let kc = 16;
+    for k in [kc - 1, kc, kc + 1, 2 * kc + 3] {
+        let a = rand_i8(&mut rng, 9, k);
+        let bt = rand_i8(&mut rng, 11, k);
+        let want = int8_gemm_i32(&a, &bt).unwrap();
+        let cfg = KernelConfig {
+            kc,
+            ..KernelConfig::with_threads(2)
+        };
+        let got = int8_gemm_blocked(&a, &bt, &cfg).unwrap();
+        assert_eq!(got.data(), want.data(), "k={k}");
+    }
+}
+
+#[test]
+fn fused_ozaki_equals_naive_reference_across_shapes() {
+    let mut rng = Rng::new(107);
+    for (m, k, n) in stress_shapes() {
+        if k == 0 {
+            // the Ozaki scaling is defined on nonempty rows; keep K >= 1
+            continue;
+        }
+        let a = rand_f64(&mut rng, m, k);
+        let b = rand_f64(&mut rng, k, n);
+        for splits in [2u32, 3, 6] {
+            let want = ozaki_dgemm_naive(&a, &b, splits).unwrap();
+            for threads in [1usize, 4] {
+                let got = ozaccel::ozaki::ozaki_dgemm_with(
+                    &a,
+                    &b,
+                    splits,
+                    &KernelConfig::with_threads(threads),
+                )
+                .unwrap();
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "{m}x{k}x{n} s={splits} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fp64_blocked_equals_naive_across_shapes() {
+    let mut rng = Rng::new(109);
+    for (m, k, n) in stress_shapes() {
+        let a = rand_f64(&mut rng, m, k);
+        let b = rand_f64(&mut rng, k, n);
+        let want = dgemm_naive(&a, &b).unwrap();
+        for threads in [1usize, 3] {
+            let got = dgemm_blocked(&a, &b, &KernelConfig::with_threads(threads)).unwrap();
+            assert_eq!(got.data(), want.data(), "{m}x{k}x{n} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn complex_blocked_matches_naive_within_rounding() {
+    let mut rng = Rng::new(113);
+    for (m, k, n) in [(5, 7, 9), (8, 4, 8), (13, 16, 3)] {
+        let a: ZMat = Mat::from_fn(m, k, |_, _| rng.cnormal());
+        let b: ZMat = Mat::from_fn(k, n, |_, _| rng.cnormal());
+        let want = zgemm_naive(&a, &b).unwrap();
+        let scale = want.data().iter().fold(0.0f64, |mx, z| mx.max(z.abs())) + 1e-300;
+        for threads in [1usize, 4] {
+            let got = ozaccel::kernels::zgemm_blocked(
+                &a,
+                &b,
+                &KernelConfig::with_threads(threads),
+            )
+            .unwrap();
+            for (x, y) in got.data().iter().zip(want.data()) {
+                assert!((*x - *y).abs() <= 1e-12 * scale);
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_count_never_changes_results() {
+    // Same inputs, 1..6 threads: identical bits for all three kernels.
+    let mut rng = Rng::new(127);
+    let a = rand_f64(&mut rng, 37, 29);
+    let b = rand_f64(&mut rng, 29, 23);
+    let d1 = dgemm_blocked(&a, &b, &KernelConfig::with_threads(1)).unwrap();
+    let o1 = ozaccel::ozaki::ozaki_dgemm_with(&a, &b, 6, &KernelConfig::with_threads(1)).unwrap();
+    for threads in 2..=6 {
+        let cfg = KernelConfig::with_threads(threads);
+        let dt = dgemm_blocked(&a, &b, &cfg).unwrap();
+        let ot = ozaccel::ozaki::ozaki_dgemm_with(&a, &b, 6, &cfg).unwrap();
+        assert_eq!(d1.data(), dt.data(), "dgemm threads={threads}");
+        assert_eq!(o1.data(), ot.data(), "ozaki threads={threads}");
+    }
+}
+
+#[test]
+fn dispatcher_routes_by_kernel_selector() {
+    // host-only dispatchers with naive vs blocked selection agree
+    // bit-for-bit in both compute modes.
+    let mut rng = Rng::new(131);
+    let a = rand_f64(&mut rng, 24, 24);
+    let b = rand_f64(&mut rng, 24, 24);
+    for mode in [ComputeMode::Dgemm, ComputeMode::Int8 { splits: 5 }] {
+        let mut naive_cfg = DispatchConfig::host_only(mode);
+        naive_cfg.kernels = KernelSelector {
+            kernel: HostKernel::Naive,
+            config: KernelConfig::single_threaded(),
+        };
+        let mut blocked_cfg = DispatchConfig::host_only(mode);
+        blocked_cfg.kernels = KernelSelector {
+            kernel: HostKernel::Blocked,
+            config: KernelConfig::with_threads(4),
+        };
+        let dn = Dispatcher::new(naive_cfg).unwrap();
+        let db = Dispatcher::new(blocked_cfg).unwrap();
+        let got_n = dn.dgemm(&a, &b).unwrap();
+        let got_b = db.dgemm(&a, &b).unwrap();
+        assert_eq!(got_n.data(), got_b.data(), "mode {mode:?}");
+    }
+}
+
+#[test]
+fn ozaki_zgemm_blocked_is_consistent_with_real_decomposition() {
+    let mut rng = Rng::new(137);
+    let a: ZMat = Mat::from_fn(10, 12, |_, _| rng.cnormal());
+    let b: ZMat = Mat::from_fn(12, 6, |_, _| rng.cnormal());
+    let s = 6u32;
+    let got = ozaccel::ozaki::ozaki_zgemm(&a, &b, s).unwrap();
+    let (ar, ai) = (a.re(), a.im());
+    let (br, bi) = (b.re(), b.im());
+    let rr = ozaki_dgemm(&ar, &br, s).unwrap();
+    let ii = ozaki_dgemm(&ai, &bi, s).unwrap();
+    let ri = ozaki_dgemm(&ar, &bi, s).unwrap();
+    let ir = ozaki_dgemm(&ai, &br, s).unwrap();
+    for i in 0..10 {
+        for j in 0..6 {
+            assert_eq!(got.get(i, j).re, rr.get(i, j) - ii.get(i, j));
+            assert_eq!(got.get(i, j).im, ri.get(i, j) + ir.get(i, j));
+        }
+    }
+}

@@ -1,10 +1,14 @@
 //! End-to-end MuST-mini through the PJRT offload path (tiny case so CI
-//! stays fast).  Requires `make artifacts`.
+//! stays fast).  Requires `make artifacts` and a real `xla` dependency;
+//! skips cleanly when the PJRT runtime is unavailable (e.g. the offline
+//! `xla` stub build).
 
+mod common;
+
+use common::pjrt_available;
 use ozaccel::coordinator::{DispatchConfig, Dispatcher};
 use ozaccel::experiments::{run_figure1, run_table1};
 use ozaccel::must::params::tiny_case;
-
 
 fn dispatcher() -> Dispatcher {
     // The tiny case's LU trailing updates (20x16x20) sit below the
@@ -17,6 +21,9 @@ fn dispatcher() -> Dispatcher {
 
 #[test]
 fn tiny_case_through_pjrt_table1_shape() {
+    if !pjrt_available() {
+        return;
+    }
     let d = dispatcher();
     assert!(d.has_runtime(), "artifacts missing — run `make artifacts`");
     let case = tiny_case();
@@ -45,6 +52,9 @@ fn tiny_case_through_pjrt_table1_shape() {
 
 #[test]
 fn tiny_figure1_error_profile_through_pjrt() {
+    if !pjrt_available() {
+        return;
+    }
     let d = dispatcher();
     let case = tiny_case();
     let series = run_figure1(&case, &d, &[3, 5]).unwrap();

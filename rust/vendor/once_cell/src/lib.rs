@@ -1,0 +1,59 @@
+//! Minimal offline shim of `once_cell` (crates.io is unavailable):
+//! just `sync::Lazy`, implemented on `std::sync::OnceLock`.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access, thread-safe.
+    ///
+    /// Unlike the real crate this requires `F: Fn() -> T` (not
+    /// `FnOnce`); every in-tree use is a non-capturing closure or fn
+    /// pointer, for which the two are equivalent.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Self {
+            Lazy {
+                cell: OnceLock::new(),
+                init,
+            }
+        }
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub fn force(this: &Self) -> &T {
+            this.cell.get_or_init(&this.init)
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static SQUARES: Lazy<Vec<u64>> = Lazy::new(|| (0..10).map(|i| i * i).collect());
+
+    #[test]
+    fn static_lazy_initializes_once() {
+        assert_eq!(SQUARES[3], 9);
+        assert_eq!(SQUARES.len(), 10);
+    }
+
+    #[test]
+    fn local_lazy_with_fn_pointer() {
+        let l: Lazy<u32> = Lazy::new(|| 7);
+        assert_eq!(*l, 7);
+    }
+}
