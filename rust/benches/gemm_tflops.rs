@@ -10,7 +10,7 @@ use ozaccel::bench::{Bench, JsonRecord, JsonReport, Table};
 use ozaccel::experiments::{gemm_bench, run_gemm_bench};
 use ozaccel::kernels::{dgemm_blocked, KernelConfig};
 use ozaccel::linalg::{dgemm_naive, Mat};
-use ozaccel::ozaki::{ozaki_dgemm_naive, ozaki_dgemm_with, SLICE_BITS};
+use ozaccel::ozaki::{ozaki_dgemm_naive, ozaki_dgemm_with, ozaki_zgemm_with, SLICE_BITS};
 use ozaccel::perfmodel::gemm_flops;
 use ozaccel::runtime::Runtime;
 use ozaccel::testing::Rng;
@@ -74,10 +74,19 @@ fn main() {
 
     // Host kernel core: measured CPU rows (the perf surface the
     // kernels/ subsystem owns; BENCH_*.json tracks this trajectory).
+    // The panel cache is disabled here so these rows keep measuring the
+    // full per-call split+pack work, comparable with the PR 1 baseline;
+    // the pool+cache section below measures the warm-cache path.
     let host_sizes: Vec<usize> = if quick { vec![128] } else { vec![256, 512] };
     let host_splits = 6u32;
-    let cfg = KernelConfig::default();
-    let single = KernelConfig::single_threaded();
+    let cfg = KernelConfig {
+        panel_cache_mb: 0,
+        ..KernelConfig::default()
+    };
+    let single = KernelConfig {
+        panel_cache_mb: 0,
+        ..KernelConfig::single_threaded()
+    };
     let host_bench = if quick { Bench::quick() } else { Bench::default() };
     let mut t = Table::new(&[
         "N",
@@ -135,6 +144,90 @@ fn main() {
     }
     println!("== host kernel core (measured on this machine, {SLICE_BITS}-bit slices) ==");
     println!("{}", t.render());
+
+    // Pool + panel-cache trajectory (PR 2): repeated small GEMMs — the
+    // LU-trailing-update / SCF pattern the paper's application
+    // produces — and the complex path with its four shared component
+    // products.  The `coldpack` rows disable the cache and parallel
+    // pack (the PR 1 per-call split/pack behaviour) so the JSON records
+    // the warm/cold ratio directly.
+    let warm = KernelConfig::default();
+    let cold = KernelConfig {
+        pack_parallel: false,
+        panel_cache_mb: 0,
+        ..KernelConfig::default()
+    };
+    let rep_sizes: Vec<usize> = if quick { vec![64] } else { vec![64, 96] };
+    let rep_splits = 6u32;
+    let mut rt = Table::new(&["case", "threads", "median (ms)", "GFLOP/s", "warm/cold"]);
+    for &n in &rep_sizes {
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let flop = gemm_flops(n, n, n);
+        let packed = (2 * n * n) as u64 * rep_splits as u64;
+        let m_warm = host_bench.run(|| {
+            ozaki_dgemm_with(&a, &b, rep_splits, &warm).expect("ozaki warm");
+        });
+        let m_cold = host_bench.run(|| {
+            ozaki_dgemm_with(&a, &b, rep_splits, &cold).expect("ozaki cold");
+        });
+        let ratio = m_cold.median_s / m_warm.median_s;
+        for (name, m, bytes) in [
+            (format!("ozaki_repeat@{n}/s{rep_splits}"), m_warm, Some(0u64)),
+            (
+                format!("ozaki_repeat_coldpack@{n}/s{rep_splits}"),
+                m_cold,
+                Some(packed),
+            ),
+        ] {
+            rt.row(&[
+                name.clone(),
+                warm.threads.to_string(),
+                format!("{:.3}", m.median_s * 1e3),
+                format!("{:.2}", m.flops(flop) / 1e9),
+                format!("{ratio:.2}x"),
+            ]);
+            report.push(JsonRecord::from_measurement(name, &m, Some(flop), bytes, warm.threads));
+        }
+        println!(
+            "repeated small dgemm N={n}: pool+cache {ratio:.2}x over per-call split/pack"
+        );
+
+        let za = Mat::from_fn(n, n, |_, _| rng.cnormal());
+        let zb = Mat::from_fn(n, n, |_, _| rng.cnormal());
+        let zflop = 4.0 * flop; // four real GEMMs per complex product
+        let z_warm = host_bench.run(|| {
+            ozaki_zgemm_with(&za, &zb, rep_splits, &warm).expect("zgemm warm");
+        });
+        let z_cold = host_bench.run(|| {
+            ozaki_zgemm_with(&za, &zb, rep_splits, &cold).expect("zgemm cold");
+        });
+        let zratio = z_cold.median_s / z_warm.median_s;
+        for (name, m, bytes) in [
+            (format!("ozaki_zgemm@{n}/s{rep_splits}"), z_warm, Some(0u64)),
+            (
+                // four component matrices packed once each = 2x the
+                // two-operand bytes of one real GEMM
+                format!("ozaki_zgemm_coldpack@{n}/s{rep_splits}"),
+                z_cold,
+                Some(2 * packed),
+            ),
+        ] {
+            rt.row(&[
+                name.clone(),
+                warm.threads.to_string(),
+                format!("{:.3}", m.median_s * 1e3),
+                format!("{:.2}", m.flops(zflop) / 1e9),
+                format!("{zratio:.2}x"),
+            ]);
+            report.push(JsonRecord::from_measurement(name, &m, Some(zflop), bytes, warm.threads));
+        }
+        println!(
+            "repeated zgemm N={n}: shared packed panels {zratio:.2}x over per-call split/pack"
+        );
+    }
+    println!("== pool + panel cache (repeated operands; warm = cache on, coldpack = PR1-style) ==");
+    println!("{}", rt.render());
 
     if json {
         let path = std::path::Path::new("BENCH_gemm_tflops.json");

@@ -96,6 +96,18 @@ impl RunConfig {
             cfg.dispatch.kernels.kernel = HostKernel::parse(v.as_str()?)
                 .ok_or_else(|| Error::Config(format!("bad host_kernel {v:?}")))?;
         }
+        if let Some(v) = lookup(&table, "run.pack_parallel") {
+            cfg.dispatch.kernels.config.pack_parallel = v.as_bool()?;
+        }
+        if let Some(v) = lookup(&table, "run.panel_cache_mb") {
+            let f = v.as_f64()?;
+            if f.fract() != 0.0 || f < 0.0 {
+                return Err(Error::Config(format!(
+                    "run.panel_cache_mb must be a non-negative integer, got {f}"
+                )));
+            }
+            cfg.dispatch.kernels.config.panel_cache_mb = f as usize;
+        }
         if let Some(v) = lookup(&table, "run.artifacts") {
             cfg.dispatch.artifact_dir = Some(PathBuf::from(v.as_str()?));
         }
@@ -221,6 +233,27 @@ n_contour = 12
         let d = RunConfig::default();
         assert_eq!(d.dispatch.kernels.kernel, HostKernel::Blocked);
         assert!(d.dispatch.kernels.config.threads >= 1);
+    }
+
+    #[test]
+    fn pool_and_cache_knobs_parse() {
+        let cfg = RunConfig::from_toml(
+            "[run]\npack_parallel = false\npanel_cache_mb = 128\n",
+        )
+        .unwrap();
+        assert!(!cfg.dispatch.kernels.config.pack_parallel);
+        assert_eq!(cfg.dispatch.kernels.config.panel_cache_mb, 128);
+        // 0 disables the cache
+        let off = RunConfig::from_toml("[run]\npanel_cache_mb = 0\n").unwrap();
+        assert_eq!(off.dispatch.kernels.config.panel_cache_mb, 0);
+        // defaults: parallel pack on, cache enabled
+        let d = RunConfig::default();
+        assert!(d.dispatch.kernels.config.pack_parallel);
+        assert!(d.dispatch.kernels.config.panel_cache_mb > 0);
+        // invalid values are rejected loudly
+        assert!(RunConfig::from_toml("[run]\npanel_cache_mb = -4\n").is_err());
+        assert!(RunConfig::from_toml("[run]\npanel_cache_mb = 2.5\n").is_err());
+        assert!(RunConfig::from_toml("[run]\npack_parallel = \"yes\"\n").is_err());
     }
 
     #[test]

@@ -7,6 +7,8 @@
 
 use std::collections::BTreeMap;
 
+use super::kernel_select::HostCallInfo;
+
 /// Identity of one BLAS call site (source location).
 pub type CallSiteId = &'static str;
 
@@ -23,6 +25,16 @@ pub struct CallSiteStats {
     pub modeled_gpu_s: f64,
     /// Simulated data-movement seconds (datamove).
     pub modeled_move_s: f64,
+    /// Host kernel that served this site's host calls (last seen).
+    pub host_kernel: Option<&'static str>,
+    /// Largest row-band parallelism a host call at this site used.
+    pub bands: u64,
+    /// Split/pack seconds spent by this site's host calls.
+    pub pack_s: f64,
+    /// Packed-panel cache hits across this site's host calls.
+    pub cache_hits: u64,
+    /// Packed-panel cache misses across this site's host calls.
+    pub cache_misses: u64,
 }
 
 /// Registry of every call site seen this run.
@@ -36,7 +48,8 @@ impl SiteRegistry {
         Self::default()
     }
 
-    /// Record one call.
+    /// Record one call.  `host` carries kernel-selector statistics for
+    /// host-executed calls (None for offloaded ones).
     #[allow(clippy::too_many_arguments)]
     pub fn record(
         &mut self,
@@ -46,6 +59,7 @@ impl SiteRegistry {
         measured_s: f64,
         modeled_gpu_s: f64,
         modeled_move_s: f64,
+        host: Option<HostCallInfo>,
     ) {
         let e = self.sites.entry(site).or_default();
         e.calls += 1;
@@ -58,6 +72,13 @@ impl SiteRegistry {
         e.measured_s += measured_s;
         e.modeled_gpu_s += modeled_gpu_s;
         e.modeled_move_s += modeled_move_s;
+        if let Some(h) = host {
+            e.host_kernel = Some(h.kernel);
+            e.bands = e.bands.max(h.bands);
+            e.pack_s += h.pack_s;
+            e.cache_hits += h.cache_hits;
+            e.cache_misses += h.cache_misses;
+        }
     }
 
     /// Iterate sites (sorted by id for stable reports).
@@ -88,6 +109,11 @@ impl SiteRegistry {
             t.measured_s += s.measured_s;
             t.modeled_gpu_s += s.modeled_gpu_s;
             t.modeled_move_s += s.modeled_move_s;
+            t.host_kernel = t.host_kernel.or(s.host_kernel);
+            t.bands = t.bands.max(s.bands);
+            t.pack_s += s.pack_s;
+            t.cache_hits += s.cache_hits;
+            t.cache_misses += s.cache_misses;
         }
         t
     }
@@ -100,25 +126,38 @@ mod tests {
     #[test]
     fn records_and_totals() {
         let mut r = SiteRegistry::new();
-        r.record("a.rs:1", 100.0, true, 1e-3, 2e-3, 3e-4);
-        r.record("a.rs:1", 100.0, false, 1e-3, 0.0, 0.0);
-        r.record("b.rs:9", 50.0, true, 5e-4, 1e-3, 1e-4);
+        r.record("a.rs:1", 100.0, true, 1e-3, 2e-3, 3e-4, None);
+        let host = HostCallInfo {
+            kernel: "blocked",
+            bands: 4,
+            pack_s: 2e-4,
+            cache_hits: 3,
+            cache_misses: 1,
+        };
+        r.record("a.rs:1", 100.0, false, 1e-3, 0.0, 0.0, Some(host));
+        r.record("b.rs:9", 50.0, true, 5e-4, 1e-3, 1e-4, None);
         assert_eq!(r.len(), 2);
         let a = r.get("a.rs:1").unwrap();
         assert_eq!(a.calls, 2);
         assert_eq!(a.offloaded, 1);
         assert_eq!(a.host, 1);
+        assert_eq!(a.host_kernel, Some("blocked"));
+        assert_eq!(a.bands, 4);
+        assert_eq!((a.cache_hits, a.cache_misses), (3, 1));
+        assert!((a.pack_s - 2e-4).abs() < 1e-12);
         let t = r.totals();
         assert_eq!(t.calls, 3);
         assert!((t.flops - 250.0).abs() < 1e-12);
         assert!((t.modeled_gpu_s - 3e-3).abs() < 1e-12);
+        assert_eq!(t.host_kernel, Some("blocked"));
+        assert_eq!(t.cache_hits, 3);
     }
 
     #[test]
     fn iteration_is_sorted() {
         let mut r = SiteRegistry::new();
-        r.record("z.rs:5", 1.0, true, 0.0, 0.0, 0.0);
-        r.record("a.rs:2", 1.0, true, 0.0, 0.0, 0.0);
+        r.record("z.rs:5", 1.0, true, 0.0, 0.0, 0.0, None);
+        r.record("a.rs:2", 1.0, true, 0.0, 0.0, 0.0, None);
         let ids: Vec<_> = r.iter().map(|(id, _)| *id).collect();
         assert_eq!(ids, vec!["a.rs:2", "z.rs:5"]);
     }

@@ -15,6 +15,24 @@ use crate::kernels::{self, KernelConfig};
 use crate::linalg::{self, Mat, ZMat};
 use crate::ozaki;
 
+/// Per-call host-kernel statistics the dispatcher attaches to the PEAK
+/// per-site record: which host kernel served the call, the row-band
+/// parallelism it used, and the split/pack time + panel-cache traffic
+/// it incurred.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HostCallInfo {
+    /// `HostKernel::name()` of the implementation that ran.
+    pub kernel: &'static str,
+    /// Row bands the blocked drivers used (1 for the naive kernel).
+    pub bands: u64,
+    /// Split/pack seconds attributed to this call.
+    pub pack_s: f64,
+    /// Packed-panel cache hits during this call.
+    pub cache_hits: u64,
+    /// Packed-panel cache misses during this call.
+    pub cache_misses: u64,
+}
+
 /// Which host implementation serves non-offloaded calls.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum HostKernel {
@@ -94,10 +112,63 @@ impl KernelSelector {
     }
 
     /// Host complex GEMM through the selected kernel.
+    ///
+    /// Both arms compute the 4-real-GEMM decomposition with separate
+    /// per-product accumulators (`Naive` composes four `dgemm_naive`
+    /// calls; `Blocked` fuses the four products over shared packed
+    /// panels but keeps four accumulator tiles), so flipping the
+    /// selector never changes complex results bit-wise — the same A/B
+    /// invariant the real and Ozaki paths provide.  The interleaved
+    /// `zgemm_naive` loop rounds differently and stays a test oracle
+    /// only.
     pub fn zgemm(&self, a: &ZMat, b: &ZMat) -> Result<ZMat> {
         match self.kernel {
-            HostKernel::Naive => linalg::zgemm_naive(a, b),
+            HostKernel::Naive => {
+                let (ar, ai) = (a.re(), a.im());
+                let (br, bi) = (b.re(), b.im());
+                let rr = linalg::dgemm_naive(&ar, &br)?;
+                let ii = linalg::dgemm_naive(&ai, &bi)?;
+                let ri = linalg::dgemm_naive(&ar, &bi)?;
+                let ir = linalg::dgemm_naive(&ai, &br)?;
+                Ok(linalg::zcombine(&rr, &ii, &ri, &ir))
+            }
             HostKernel::Blocked => kernels::zgemm_blocked(a, b, &self.config),
+        }
+    }
+
+    /// Host Ozaki-emulated complex GEMM through the selected kernel.
+    ///
+    /// `Blocked` runs the fused four-product sweep of
+    /// [`ozaki::ozaki_zgemm_with`], which packs each re/im component
+    /// once (and reuses cached panels across calls); `Naive` composes
+    /// the same 4-real-GEMM decomposition from the per-pair oracle, so
+    /// the two selections stay bit-identical.
+    pub fn ozaki_zgemm(&self, a: &ZMat, b: &ZMat, splits: u32) -> Result<ZMat> {
+        match self.kernel {
+            HostKernel::Naive => {
+                let (ar, ai) = (a.re(), a.im());
+                let (br, bi) = (b.re(), b.im());
+                let rr = ozaki::ozaki_dgemm_naive(&ar, &br, splits)?;
+                let ii = ozaki::ozaki_dgemm_naive(&ai, &bi, splits)?;
+                let ri = ozaki::ozaki_dgemm_naive(&ar, &bi, splits)?;
+                let ir = ozaki::ozaki_dgemm_naive(&ai, &br, splits)?;
+                Ok(linalg::zcombine(&rr, &ii, &ri, &ir))
+            }
+            HostKernel::Blocked => ozaki::ozaki_zgemm_with(a, b, splits, &self.config),
+        }
+    }
+
+    /// Row bands the selected kernel will use for an `m`-row output
+    /// whose A-side packs `mr` rows per tile (PEAK report input) —
+    /// delegates to [`kernels::band_count`], the same arithmetic
+    /// `run_bands` executes.
+    pub fn bands_for(&self, m: usize, mr: usize) -> u64 {
+        match self.kernel {
+            HostKernel::Naive => 1,
+            HostKernel::Blocked => {
+                let tiles = m.div_ceil(mr.max(1));
+                kernels::band_count(tiles, self.config.threads) as u64
+            }
         }
     }
 }
@@ -140,9 +211,50 @@ mod tests {
     }
 
     #[test]
-    fn zgemm_selections_agree_within_rounding() {
-        // complex kernels differ only in FP64 summation grouping, so the
-        // two selections agree to rounding (not bit-for-bit).
+    fn ozaki_zgemm_selections_agree_bit_for_bit() {
+        // The fused shared-panel path and the naive 4-real-GEMM oracle
+        // composition are the same math in the same order.
+        let mut rng = Rng::new(0x5E3);
+        let a = ZMat::from_fn(9, 7, |_, _| rng.cnormal());
+        let b = ZMat::from_fn(7, 8, |_, _| rng.cnormal());
+        let naive = KernelSelector {
+            kernel: HostKernel::Naive,
+            config: KernelConfig::single_threaded(),
+        };
+        let blocked = KernelSelector {
+            kernel: HostKernel::Blocked,
+            config: KernelConfig::with_threads(3),
+        };
+        let x = naive.ozaki_zgemm(&a, &b, 5).unwrap();
+        let y = blocked.ozaki_zgemm(&a, &b, 5).unwrap();
+        assert_eq!(x.data(), y.data());
+    }
+
+    #[test]
+    fn bands_reflect_kernel_and_shape() {
+        let blocked = KernelSelector {
+            kernel: HostKernel::Blocked,
+            config: KernelConfig::with_threads(6),
+        };
+        // m=100, mr=4 -> 25 tiles; 6 threads -> 5 tiles/band -> 5 bands
+        // (ceil(tiles / ceil(tiles/threads)), exactly what run_bands cuts).
+        assert_eq!(blocked.bands_for(100, 4), 5);
+        assert_eq!(blocked.bands_for(96, 4), 6, "even split uses all threads");
+        assert_eq!(blocked.bands_for(7, 4), 2, "clamped to tile count");
+        assert_eq!(blocked.bands_for(0, 4), 1);
+        let naive = KernelSelector {
+            kernel: HostKernel::Naive,
+            config: KernelConfig::default(),
+        };
+        assert_eq!(naive.bands_for(100, 4), 1);
+    }
+
+    #[test]
+    fn zgemm_selections_agree_bit_for_bit() {
+        // Both arms compute the 4-real-GEMM decomposition with separate
+        // accumulators, so the A/B invariant is exact for complex too
+        // (zgemm_naive's interleaved loop would not be — it is a test
+        // oracle, not a selector arm).
         let mut rng = Rng::new(0x5E2);
         let a = ZMat::from_fn(7, 9, |_, _| rng.cnormal());
         let b = ZMat::from_fn(9, 5, |_, _| rng.cnormal());
@@ -156,8 +268,11 @@ mod tests {
         };
         let x = naive.zgemm(&a, &b).unwrap();
         let y = blocked.zgemm(&a, &b).unwrap();
-        let scale = x.data().iter().fold(0.0f64, |m, z| m.max(z.abs())) + 1e-300;
-        for (p, q) in x.data().iter().zip(y.data()) {
+        assert_eq!(x.data(), y.data());
+        // ... and both stay within rounding of the interleaved oracle.
+        let o = linalg::zgemm_naive(&a, &b).unwrap();
+        let scale = o.data().iter().fold(0.0f64, |m, z| m.max(z.abs())) + 1e-300;
+        for (p, q) in x.data().iter().zip(o.data()) {
             assert!((*p - *q).abs() <= 1e-12 * scale);
         }
     }

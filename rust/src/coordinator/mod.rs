@@ -34,6 +34,6 @@ pub use adaptive::AdaptivePolicy;
 pub use callsite::{CallSiteId, CallSiteStats, SiteRegistry};
 pub use datamove::{BufferId, DataMoveStrategy, MemModel, Residency};
 pub use dispatcher::{DispatchConfig, Dispatcher};
-pub use kernel_select::{HostKernel, KernelSelector};
+pub use kernel_select::{HostCallInfo, HostKernel, KernelSelector};
 pub use policy::{OffloadDecision, RoutingPolicy};
 pub use stats::{GemmKind, Report};

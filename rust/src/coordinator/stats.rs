@@ -46,19 +46,33 @@ impl Report {
             self.gpu_name
         ));
         out.push_str(&format!(
-            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11}\n",
-            "call site", "calls", "offload", "GFLOP", "measured", "gpu-model", "move-model"
+            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>5} {:>10} {:>9}\n",
+            "call site",
+            "calls",
+            "offload",
+            "GFLOP",
+            "measured",
+            "gpu-model",
+            "move-model",
+            "kernel",
+            "bands",
+            "pack",
+            "cache h/m"
         ));
         for (site, s) in self.sites.iter() {
             out.push_str(&format!(
-                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s\n",
+                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>5} {:>9.4}s {:>9}\n",
                 site,
                 s.calls,
                 s.offloaded,
                 s.flops / 1e9,
                 s.measured_s,
                 s.modeled_gpu_s,
-                s.modeled_move_s
+                s.modeled_move_s,
+                s.host_kernel.unwrap_or("-"),
+                s.bands,
+                s.pack_s,
+                format!("{}/{}", s.cache_hits, s.cache_misses),
             ));
         }
         out.push_str(&format!(
@@ -85,8 +99,24 @@ mod tests {
 
     #[test]
     fn render_contains_the_essentials() {
+        use crate::coordinator::HostCallInfo;
         let mut sites = SiteRegistry::new();
-        sites.record("lu.rs:88", 1e9, true, 0.5, 0.1, 0.01);
+        sites.record("lu.rs:88", 1e9, true, 0.5, 0.1, 0.01, None);
+        sites.record(
+            "scf.rs:12",
+            1e8,
+            false,
+            0.2,
+            0.0,
+            0.0,
+            Some(HostCallInfo {
+                kernel: "blocked",
+                bands: 4,
+                pack_s: 0.05,
+                cache_hits: 2,
+                cache_misses: 1,
+            }),
+        );
         let r = Report {
             mode: ComputeMode::Int8 { splits: 6 },
             strategy: DataMoveStrategy::FirstTouchMigrate,
@@ -107,6 +137,9 @@ mod tests {
         assert!(txt.contains("first_touch"));
         assert!(txt.contains("lu.rs:88"));
         assert!(txt.contains("2 MiB"));
+        assert!(txt.contains("kernel"), "header shows host-kernel column");
+        assert!(txt.contains("blocked"), "host kernel surfaced per site");
+        assert!(txt.contains("2/1"), "cache hits/misses surfaced");
         assert!((r.modeled_total_s() - 0.11).abs() < 1e-12);
     }
 }

@@ -13,8 +13,8 @@
 //! products of the ozIMMU decomposition (`Cre = Ar·Br − Ai·Bi`,
 //! `Cim = Ar·Bi + Ai·Br`) into one sweep over the shared panels.
 
-use super::pack::{pack_cols_c64, pack_cols_f64, pack_rows_c64, pack_rows_f64, Panels};
-use super::KernelConfig;
+use super::pack::{pack_cols_c64_mt, pack_cols_f64_mt, pack_rows_c64_mt, pack_rows_f64_mt, Panels};
+use super::{run_bands, KernelConfig};
 use crate::complex::c64;
 use crate::error::{Error, Result};
 use crate::linalg::{Mat, ZMat};
@@ -59,23 +59,17 @@ pub fn dgemm_blocked(a: &Mat<f64>, b: &Mat<f64>, cfg: &KernelConfig) -> Result<M
     if m == 0 || n == 0 {
         return Ok(c);
     }
-    let ap = pack_rows_f64(a, MR_F64);
-    let bp = pack_cols_f64(b, NR_F64);
+    let ap = pack_rows_f64_mt(a, MR_F64, cfg.pack_threads());
+    let bp = pack_cols_f64_mt(b, NR_F64, cfg.pack_threads());
 
-    let m_tiles = ap.tiles();
-    let threads = cfg.threads.max(1).min(m_tiles);
-    if threads <= 1 {
-        f64_band(c.data_mut(), 0, n, &ap, &bp, cfg);
-    } else {
-        let tiles_per_band = m_tiles.div_ceil(threads);
-        let rows_per_band = tiles_per_band * MR_F64;
-        let (apr, bpr) = (&ap, &bp);
-        std::thread::scope(|scope| {
-            for (bi, band) in c.data_mut().chunks_mut(rows_per_band * n).enumerate() {
-                scope.spawn(move || f64_band(band, bi * tiles_per_band, n, apr, bpr, cfg));
-            }
-        });
-    }
+    run_bands(
+        c.data_mut(),
+        n,
+        MR_F64,
+        ap.tiles(),
+        cfg.threads,
+        |band, tile0| f64_band(band, tile0, n, &ap, &bp, cfg),
+    );
     Ok(c)
 }
 
@@ -171,24 +165,17 @@ pub fn zgemm_blocked(a: &ZMat, b: &ZMat, cfg: &KernelConfig) -> Result<ZMat> {
     if m == 0 || n == 0 {
         return Ok(c);
     }
-    let (apr_re, apr_im) = pack_rows_c64(a, MR_C64);
-    let (bpr_re, bpr_im) = pack_cols_c64(b, NR_C64);
+    let (apr_re, apr_im) = pack_rows_c64_mt(a, MR_C64, cfg.pack_threads());
+    let (bpr_re, bpr_im) = pack_cols_c64_mt(b, NR_C64, cfg.pack_threads());
 
-    let m_tiles = apr_re.tiles();
-    let threads = cfg.threads.max(1).min(m_tiles);
-    if threads <= 1 {
-        z64_band(c.data_mut(), 0, n, &apr_re, &apr_im, &bpr_re, &bpr_im, cfg);
-    } else {
-        let tiles_per_band = m_tiles.div_ceil(threads);
-        let rows_per_band = tiles_per_band * MR_C64;
-        let (are, aim, bre, bim) = (&apr_re, &apr_im, &bpr_re, &bpr_im);
-        std::thread::scope(|scope| {
-            for (bi, band) in c.data_mut().chunks_mut(rows_per_band * n).enumerate() {
-                scope
-                    .spawn(move || z64_band(band, bi * tiles_per_band, n, are, aim, bre, bim, cfg));
-            }
-        });
-    }
+    run_bands(
+        c.data_mut(),
+        n,
+        MR_C64,
+        apr_re.tiles(),
+        cfg.threads,
+        |band, tile0| z64_band(band, tile0, n, &apr_re, &apr_im, &bpr_re, &bpr_im, cfg),
+    );
     Ok(c)
 }
 

@@ -4,9 +4,12 @@
 //! The microkernel computes an `MR_I8 x NR_I8` register tile: per `p` it
 //! broadcasts `MR_I8` packed A values against `NR_I8` packed B values —
 //! the dp4a-style shape (SNIPPETS.md §1) LLVM turns into SIMD
-//! multiply-accumulate.  The fused driver sweeps the packed panels once
-//! per output tile and accumulates *every* retained slice pair
-//! `k + l = d < splits` while the tile's operands are cache-hot,
+//! multiply-accumulate.  One generic implementation serves both
+//! accumulator widths through the [`Accum`] trait (`i32` on the exact
+//! fast path, `i64` past the overflow bound), so the escape path can
+//! never drift from the fast one.  The fused driver sweeps the packed
+//! panels once per output tile and accumulates *every* retained slice
+//! pair `k + l = d < splits` while the tile's operands are cache-hot,
 //! replacing the seed's `splits·(splits+1)/2` full-matrix passes with
 //! one pass and zero heap allocations in the hot loop (the EmuGEMM
 //! fusion idea, PAPERS.md).
@@ -18,9 +21,11 @@
 //! combine then adds diagonals in ascending-`d` order per element, so
 //! results are bit-for-bit identical to the reference slice-pair-major
 //! path and the AOT'd HLO graph regardless of tiling or thread count.
+//! Row bands execute on the persistent worker pool through
+//! [`super::run_bands`].
 
 use super::pack::Panels;
-use super::KernelConfig;
+use super::{run_bands, KernelConfig};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
 
@@ -34,28 +39,94 @@ pub const NR_I8: usize = 8;
 /// `floor((2³¹−1) / 127²) = 133_144`.
 pub const MAX_EXACT_I32_TERMS: usize = (i32::MAX as usize) / (127 * 127);
 
+/// Integer accumulator of the INT8 microkernel: `i32` while the term
+/// count stays under [`MAX_EXACT_I32_TERMS`], `i64` beyond.  Both
+/// widths share one microkernel and one diagonal-accumulation body, so
+/// the overflow-escape path is the same code as the fast path.
+trait Accum: Copy + Default {
+    fn from_i8(v: i8) -> Self;
+    /// `self + a·b`, exact in the accumulator's range.
+    fn mul_acc(self, a: Self, b: Self) -> Self;
+    fn to_f64(self) -> f64;
+}
+
+impl Accum for i32 {
+    #[inline(always)]
+    fn from_i8(v: i8) -> Self {
+        v as i32
+    }
+    #[inline(always)]
+    fn mul_acc(self, a: Self, b: Self) -> Self {
+        self + a * b
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Accum for i64 {
+    #[inline(always)]
+    fn from_i8(v: i8) -> Self {
+        v as i64
+    }
+    #[inline(always)]
+    fn mul_acc(self, a: Self, b: Self) -> Self {
+        self + a * b
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
 #[inline]
-fn microkernel_i32(acc: &mut [[i32; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
+fn microkernel<A: Accum>(acc: &mut [[A; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
     for (av, bv) in a_panel.chunks_exact(MR_I8).zip(b_panel.chunks_exact(NR_I8)) {
         for r in 0..MR_I8 {
-            let ar = av[r] as i32;
+            let ar = A::from_i8(av[r]);
             let row = &mut acc[r];
             for c in 0..NR_I8 {
-                row[c] += ar * bv[c] as i32;
+                row[c] = row[c].mul_acc(ar, A::from_i8(bv[c]));
             }
         }
     }
 }
 
+/// Accumulate one anti-diagonal `d` of the fused sweep into `ctile`:
+/// `ctile += w · Σ_{kk=0..=d} A_kk · B_{d−kk}ᵀ` for the `(it, jt)`
+/// output tile, summed exactly in the integer accumulator `A`.
 #[inline]
-fn microkernel_i64(acc: &mut [[i64; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
-    for (av, bv) in a_panel.chunks_exact(MR_I8).zip(b_panel.chunks_exact(NR_I8)) {
-        for r in 0..MR_I8 {
-            let ar = av[r] as i64;
-            let row = &mut acc[r];
-            for c in 0..NR_I8 {
-                row[c] += ar * bv[c] as i64;
-            }
+#[allow(clippy::too_many_arguments)]
+fn accumulate_diagonal<A: Accum>(
+    ctile: &mut [[f64; NR_I8]; MR_I8],
+    d: usize,
+    w: f64,
+    a_tile: usize,
+    jt: usize,
+    ap: &Panels<i8>,
+    bp: &Panels<i8>,
+    kc: usize,
+) {
+    let k = ap.k();
+    let mut acc = [[A::default(); NR_I8]; MR_I8];
+    for kk in 0..=d {
+        let apan = ap.panel(kk, a_tile);
+        let bpan = bp.panel(d - kk, jt);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + kc).min(k);
+            microkernel::<A>(
+                &mut acc,
+                &apan[k0 * MR_I8..k1 * MR_I8],
+                &bpan[k0 * NR_I8..k1 * NR_I8],
+            );
+            k0 = k1;
+        }
+    }
+    for r in 0..MR_I8 {
+        for cc in 0..NR_I8 {
+            ctile[r][cc] += acc[r][cc].to_f64() * w;
         }
     }
 }
@@ -66,8 +137,8 @@ fn microkernel_i64(acc: &mut [[i64; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i
 /// `ap` must be packed with tile [`MR_I8`], `bp` with [`NR_I8`], and
 /// `weights.len()` selects how many anti-diagonals are retained (the
 /// ozIMMU triangle keeps `d < splits`).  Row bands are distributed over
-/// `cfg.threads` scoped threads; the result is independent of the
-/// thread count.
+/// `cfg.threads` tasks on the persistent worker pool; the result is
+/// independent of the thread count.
 pub fn fused_ozaki_sweep(
     ap: &Panels<i8>,
     bp: &Panels<i8>,
@@ -105,22 +176,14 @@ pub fn fused_ozaki_sweep(
     // Worst-case terms per anti-diagonal accumulator: K·splits.
     let wide = ap.k().saturating_mul(weights.len()) > MAX_EXACT_I32_TERMS;
 
-    let m_tiles = ap.tiles();
-    let threads = cfg.threads.max(1).min(m_tiles);
-    if threads <= 1 {
-        fused_band(c.data_mut(), 0, n, ap, bp, weights, cfg, wide);
-    } else {
-        let tiles_per_band = m_tiles.div_ceil(threads);
-        let rows_per_band = tiles_per_band * MR_I8;
-        let (apr, bpr) = (ap, bp);
-        std::thread::scope(|scope| {
-            for (bi, band) in c.data_mut().chunks_mut(rows_per_band * n).enumerate() {
-                scope.spawn(move || {
-                    fused_band(band, bi * tiles_per_band, n, apr, bpr, weights, cfg, wide)
-                });
-            }
-        });
-    }
+    run_bands(
+        c.data_mut(),
+        n,
+        MR_I8,
+        ap.tiles(),
+        cfg.threads,
+        |band, tile0| fused_band(band, tile0, n, ap, bp, weights, cfg, wide),
+    );
     Ok(c)
 }
 
@@ -139,7 +202,6 @@ fn fused_band(
 ) {
     let band_rows = c_band.len() / n;
     let band_tiles = band_rows.div_ceil(MR_I8);
-    let k = ap.k();
     let kc = cfg.kc.max(1);
     let mc_tiles = (cfg.mc / MR_I8).max(1);
     let nc_tiles = (cfg.nc / NR_I8).max(1);
@@ -158,47 +220,27 @@ fn fused_band(
                     let mut ctile = [[0.0f64; NR_I8]; MR_I8];
                     for (d, &w) in weights.iter().enumerate() {
                         if wide {
-                            let mut acc = [[0i64; NR_I8]; MR_I8];
-                            for kk in 0..=d {
-                                let apan = ap.panel(kk, tile0 + it);
-                                let bpan = bp.panel(d - kk, jt);
-                                let mut k0 = 0;
-                                while k0 < k {
-                                    let k1 = (k0 + kc).min(k);
-                                    microkernel_i64(
-                                        &mut acc,
-                                        &apan[k0 * MR_I8..k1 * MR_I8],
-                                        &bpan[k0 * NR_I8..k1 * NR_I8],
-                                    );
-                                    k0 = k1;
-                                }
-                            }
-                            for r in 0..MR_I8 {
-                                for cc in 0..NR_I8 {
-                                    ctile[r][cc] += acc[r][cc] as f64 * w;
-                                }
-                            }
+                            accumulate_diagonal::<i64>(
+                                &mut ctile,
+                                d,
+                                w,
+                                tile0 + it,
+                                jt,
+                                ap,
+                                bp,
+                                kc,
+                            );
                         } else {
-                            let mut acc = [[0i32; NR_I8]; MR_I8];
-                            for kk in 0..=d {
-                                let apan = ap.panel(kk, tile0 + it);
-                                let bpan = bp.panel(d - kk, jt);
-                                let mut k0 = 0;
-                                while k0 < k {
-                                    let k1 = (k0 + kc).min(k);
-                                    microkernel_i32(
-                                        &mut acc,
-                                        &apan[k0 * MR_I8..k1 * MR_I8],
-                                        &bpan[k0 * NR_I8..k1 * NR_I8],
-                                    );
-                                    k0 = k1;
-                                }
-                            }
-                            for r in 0..MR_I8 {
-                                for cc in 0..NR_I8 {
-                                    ctile[r][cc] += acc[r][cc] as f64 * w;
-                                }
-                            }
+                            accumulate_diagonal::<i32>(
+                                &mut ctile,
+                                d,
+                                w,
+                                tile0 + it,
+                                jt,
+                                ap,
+                                bp,
+                                kc,
+                            );
                         }
                     }
                     for r in 0..ilim {
@@ -241,20 +283,14 @@ pub fn int8_gemm_blocked(a: &Mat<i8>, bt: &Mat<i8>, cfg: &KernelConfig) -> Resul
     let ap = Panels::pack_planes(std::slice::from_ref(a), MR_I8);
     let bp = Panels::pack_planes(std::slice::from_ref(bt), NR_I8);
 
-    let m_tiles = ap.tiles();
-    let threads = cfg.threads.max(1).min(m_tiles);
-    if threads <= 1 {
-        int8_band(c.data_mut(), 0, n, &ap, &bp, cfg);
-    } else {
-        let tiles_per_band = m_tiles.div_ceil(threads);
-        let rows_per_band = tiles_per_band * MR_I8;
-        let (apr, bpr) = (&ap, &bp);
-        std::thread::scope(|scope| {
-            for (bi, band) in c.data_mut().chunks_mut(rows_per_band * n).enumerate() {
-                scope.spawn(move || int8_band(band, bi * tiles_per_band, n, apr, bpr, cfg));
-            }
-        });
-    }
+    run_bands(
+        c.data_mut(),
+        n,
+        MR_I8,
+        ap.tiles(),
+        cfg.threads,
+        |band, tile0| int8_band(band, tile0, n, &ap, &bp, cfg),
+    );
     Ok(c)
 }
 
@@ -288,7 +324,7 @@ fn int8_band(
                 let mut k0 = 0;
                 while k0 < k {
                     let k1 = (k0 + kc).min(k);
-                    microkernel_i32(
+                    microkernel::<i32>(
                         &mut acc,
                         &apan[k0 * MR_I8..k1 * MR_I8],
                         &bpan[k0 * NR_I8..k1 * NR_I8],
@@ -364,6 +400,7 @@ mod tests {
                 nc: NR_I8,
                 kc,
                 threads: 2,
+                ..KernelConfig::default()
             };
             let got = int8_gemm_blocked(&a, &bt, &cfg).unwrap();
             assert_eq!(got.data(), want.data(), "kc={kc}");
@@ -400,7 +437,8 @@ mod tests {
         // -127² and would wrap i32; the i64 fallback must stay exact.
         let splits = 3usize;
         let k = MAX_EXACT_I32_TERMS / 2; // k*splits > bound, single pair fits
-        let planes_a: Vec<Mat<i8>> = (0..splits).map(|_| Mat::from_fn(1, k, |_, _| 127i8)).collect();
+        let planes_a: Vec<Mat<i8>> =
+            (0..splits).map(|_| Mat::from_fn(1, k, |_, _| 127i8)).collect();
         let planes_b: Vec<Mat<i8>> = (0..splits)
             .map(|_| Mat::from_fn(1, k, |_, _| -127i8))
             .collect();
@@ -421,5 +459,25 @@ mod tests {
         assert!(fused_ozaki_sweep(&a, &b_badk, &[1.0], &cfg).is_err());
         let b_badtile = Panels::pack_planes(&[Mat::<i8>::zeros(2, 3)], MR_I8);
         assert!(fused_ozaki_sweep(&a, &b_badtile, &[1.0], &cfg).is_err());
+    }
+
+    #[test]
+    fn wide_and_narrow_accumulators_agree_in_range() {
+        // Same packed inputs through both Accum widths: identical sums
+        // (the generic dedup must keep the escape path bit-compatible).
+        let mut rng = Rng::new(0xACC);
+        let a = rand_i8(&mut rng, 6, 40);
+        let bt = rand_i8(&mut rng, 9, 40);
+        let ap = Panels::pack_planes(std::slice::from_ref(&a), MR_I8);
+        let bp = Panels::pack_planes(std::slice::from_ref(&bt), NR_I8);
+        let mut n32 = [[0i32; NR_I8]; MR_I8];
+        let mut n64 = [[0i64; NR_I8]; MR_I8];
+        microkernel::<i32>(&mut n32, ap.panel(0, 0), bp.panel(0, 0));
+        microkernel::<i64>(&mut n64, ap.panel(0, 0), bp.panel(0, 0));
+        for r in 0..MR_I8 {
+            for c in 0..NR_I8 {
+                assert_eq!(n32[r][c] as i64, n64[r][c]);
+            }
+        }
     }
 }

@@ -6,31 +6,50 @@
 //!
 //! * [`pack`] — operands are packed **once** into k-major tile panels
 //!   (slice-major across Ozaki planes), so every microkernel step reads
-//!   two short contiguous vectors;
-//! * [`int8`] — the INT8→INT32 register-tile microkernel, the blocked
+//!   two short contiguous vectors; packing itself runs as parallel
+//!   tile-block tasks on the persistent worker pool
+//!   ([`crate::runtime::pool`]) when `pack_parallel` is set;
+//! * [`int8`] — the INT8 register-tile microkernel (one generic
+//!   implementation over `i32`/`i64` accumulators), the blocked
 //!   single-slice GEMM ([`int8_gemm_blocked`]), and the **fused
 //!   multi-slice driver** ([`fused_ozaki_sweep`]) that accumulates every
 //!   retained slice pair `k+l = d` in one sweep over the packed panels
 //!   with an automatic i64 escape past the exact-i32 bound
 //!   ([`MAX_EXACT_I32_TERMS`]);
 //! * [`fp64`] — the FP64 and fused-complex kernels on the same
-//!   infrastructure ([`dgemm_blocked`], [`zgemm_blocked`]).
+//!   infrastructure ([`dgemm_blocked`], [`zgemm_blocked`]);
+//! * [`panel_cache`] — a capacity-bounded, content-addressed reuse
+//!   cache for packed Ozaki panels, so repeated GEMMs on the same
+//!   operands (LU trailing updates, the four complex component
+//!   products, SCF iterations) skip the split/pack stage entirely.
 //!
-//! Tiling and threading are governed by [`KernelConfig`]: `mc`/`nc`/`kc`
-//! are the cache-block extents in matrix elements, `threads` the number
-//! of row bands executed on scoped threads (`OZACCEL_THREADS`
-//! overrides; default = available parallelism).  Results are bit-for-bit
-//! independent of all four knobs for the integer and Ozaki paths, and of
-//! `mc`/`nc`/`threads` for the FP64 path (`kc` fixes the FP64 summation
-//! order, so dispatch sites share one default config).
+//! All four band drivers share one [`run_bands`] scaffold: the output
+//! is cut into whole-tile row bands and each band executes as one task
+//! on the persistent pool — no per-call thread spawns.  Tiling and
+//! threading are governed by [`KernelConfig`]: `mc`/`nc`/`kc` are the
+//! cache-block extents, `threads` the number of row bands
+//! (`OZACCEL_THREADS` overrides; default = available parallelism),
+//! `pack_parallel` gates pool-parallel packing, and `panel_cache_mb`
+//! bounds the packed-panel cache (0 disables it).  Results are
+//! bit-for-bit independent of all knobs for the integer and Ozaki
+//! paths, and of everything except `kc` for the FP64 path (`kc` fixes
+//! the FP64 summation order, so dispatch sites share one default
+//! config).
 
 pub mod fp64;
 pub mod int8;
 pub mod pack;
+pub mod panel_cache;
 
 pub use fp64::{dgemm_blocked, zgemm_blocked, MR_C64, MR_F64, NR_C64, NR_F64};
 pub use int8::{fused_ozaki_sweep, int8_gemm_blocked, MAX_EXACT_I32_TERMS, MR_I8, NR_I8};
-pub use pack::{pack_cols_c64, pack_cols_f64, pack_rows_c64, pack_rows_f64, Panels};
+pub use pack::{
+    pack_cols_c64, pack_cols_c64_mt, pack_cols_f64, pack_cols_f64_mt, pack_rows_c64,
+    pack_rows_c64_mt, pack_rows_f64, pack_rows_f64_mt, Panels,
+};
+pub use panel_cache::{CacheStats, PanelCache, Side};
+
+use crate::runtime::pool::{self, SendPtr};
 
 /// Tiling + threading parameters of the blocked kernels.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -41,8 +60,15 @@ pub struct KernelConfig {
     pub nc: usize,
     /// Contraction-block extent (elements of K per microkernel call).
     pub kc: usize,
-    /// Row bands executed concurrently via `std::thread::scope`.
+    /// Row bands executed concurrently on the persistent worker pool.
     pub threads: usize,
+    /// Run the split/pack stage as parallel tile-block tasks on the
+    /// same pool (`run.pack_parallel`; results are identical either
+    /// way — rows are packed independently).
+    pub pack_parallel: bool,
+    /// Packed-panel reuse cache budget in MiB (`run.panel_cache_mb`);
+    /// 0 disables the cache.
+    pub panel_cache_mb: usize,
 }
 
 impl Default for KernelConfig {
@@ -52,6 +78,8 @@ impl Default for KernelConfig {
             nc: 256,
             kc: 256,
             threads: default_threads(),
+            pack_parallel: true,
+            panel_cache_mb: panel_cache::DEFAULT_CAPACITY_MB,
         }
     }
 }
@@ -72,6 +100,68 @@ impl KernelConfig {
             ..KernelConfig::default()
         }
     }
+
+    /// Threads the pack stage may use (1 when parallel pack is off).
+    #[inline]
+    pub fn pack_threads(&self) -> usize {
+        if self.pack_parallel {
+            self.threads.max(1)
+        } else {
+            1
+        }
+    }
+}
+
+/// Shared row-band scaffold of the four blocked drivers.
+///
+/// `c` is the `rows x n` row-major output of a kernel whose A-side was
+/// packed with `tile` rows per panel (`m_tiles` tiles).  The output is
+/// cut into contiguous whole-tile row bands — `ceil(m_tiles / threads)`
+/// tiles each, the last possibly ragged — and `band(slice, tile0)` runs
+/// for each as one task on the persistent worker pool.
+///
+/// The partition depends only on `threads`, and every band writes a
+/// pure function of the packed inputs into its own disjoint slice, so
+/// results are bit-for-bit independent of the pool's actual
+/// parallelism — the same contract the scoped-thread code this
+/// replaces provided.
+pub fn run_bands<T, F>(c: &mut [T], n: usize, tile: usize, m_tiles: usize, threads: usize, band: F)
+where
+    T: Send,
+    F: Fn(&mut [T], usize) + Sync,
+{
+    if c.is_empty() || n == 0 || m_tiles == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(m_tiles);
+    if threads <= 1 {
+        band(c, 0);
+        return;
+    }
+    let tiles_per_band = m_tiles.div_ceil(threads);
+    let chunk = tiles_per_band * tile * n;
+    let len = c.len();
+    let jobs = len.div_ceil(chunk);
+    debug_assert_eq!(jobs, band_count(m_tiles, threads), "bands_for must match");
+    let base = SendPtr(c.as_mut_ptr());
+    pool::run(jobs, threads, |bi| {
+        let start = bi * chunk;
+        let end = (start + chunk).min(len);
+        // Safety: bands are disjoint in-bounds subslices of `c`.
+        let slice = unsafe { std::slice::from_raw_parts_mut(base.get().add(start), end - start) };
+        band(slice, bi * tiles_per_band);
+    });
+}
+
+/// Number of row bands [`run_bands`] cuts for `m_tiles` A-side tiles at
+/// a requested `threads` — the single home of the partition arithmetic,
+/// shared with the PEAK report's `KernelSelector::bands_for` (and
+/// pinned against `run_bands` by a debug assertion there).
+pub fn band_count(m_tiles: usize, threads: usize) -> usize {
+    let m_tiles = m_tiles.max(1);
+    let threads = threads.max(1).min(m_tiles);
+    let tiles_per_band = m_tiles.div_ceil(threads);
+    m_tiles.div_ceil(tiles_per_band)
 }
 
 /// Thread-count default: `OZACCEL_THREADS` if set to a positive
@@ -103,6 +193,8 @@ mod tests {
     fn default_config_is_sane() {
         let c = KernelConfig::default();
         assert!(c.mc >= MR_I8 && c.nc >= NR_I8 && c.kc >= 1 && c.threads >= 1);
+        assert!(c.pack_parallel);
+        assert_eq!(c.panel_cache_mb, panel_cache::DEFAULT_CAPACITY_MB);
     }
 
     #[test]
@@ -110,5 +202,40 @@ mod tests {
         assert_eq!(KernelConfig::with_threads(0).threads, 1);
         assert_eq!(KernelConfig::with_threads(7).threads, 7);
         assert_eq!(KernelConfig::single_threaded().threads, 1);
+    }
+
+    #[test]
+    fn pack_threads_respects_the_gate() {
+        let mut c = KernelConfig::with_threads(6);
+        assert_eq!(c.pack_threads(), 6);
+        c.pack_parallel = false;
+        assert_eq!(c.pack_threads(), 1);
+    }
+
+    #[test]
+    fn run_bands_partitions_like_chunks_mut() {
+        // 10 tiles of 4 rows, 3 columns, 4 bands: bands of 3/3/3/1 tiles.
+        let (tile, m_tiles, n) = (4usize, 10usize, 3usize);
+        let rows = 37; // ragged final tile
+        let mut c = vec![0usize; rows * n];
+        run_bands(&mut c, n, tile, m_tiles, 4, |band, tile0| {
+            band.fill(tile0 + 1);
+        });
+        // rows 0..12 -> tile0 0, 12..24 -> 3, 24..36 -> 6, 36..37 -> 9
+        assert!(c[..12 * n].iter().all(|&v| v == 1));
+        assert!(c[12 * n..24 * n].iter().all(|&v| v == 4));
+        assert!(c[24 * n..36 * n].iter().all(|&v| v == 7));
+        assert!(c[36 * n..].iter().all(|&v| v == 10));
+    }
+
+    #[test]
+    fn run_bands_single_thread_gets_everything() {
+        let mut c = vec![0u8; 12];
+        run_bands(&mut c, 3, 4, 1, 8, |band, tile0| {
+            assert_eq!(tile0, 0);
+            assert_eq!(band.len(), 12);
+            band.fill(7);
+        });
+        assert!(c.iter().all(|&v| v == 7));
     }
 }

@@ -10,8 +10,15 @@
 //! lets the fused Ozaki driver walk every retained slice pair over one
 //! allocation.  Ragged edges are zero-padded; zero products are exact in
 //! both integer and FP64 arithmetic, so padding never changes results.
+//!
+//! Packing parallelises over **whole-tile row blocks** on the
+//! persistent worker pool ([`crate::runtime::pool`]): rows of the same
+//! tile share a panel but different tiles never do, so tile-aligned
+//! blocks write disjoint regions and the parallel packers emit the
+//! exact bytes of their serial counterparts in any schedule.
 
 use crate::linalg::Mat;
+use crate::runtime::pool::{self, SendPtr};
 
 /// Packed tile panels over `planes` slice planes of a `rows x k`
 /// operand (`planes == 1` for plain FP64/complex-component GEMM).
@@ -23,6 +30,25 @@ pub struct Panels<T> {
     k: usize,
     tile: usize,
     tiles: usize,
+}
+
+/// The index geometry of a [`Panels`] buffer — a small `Copy` snapshot
+/// the parallel packers close over so they can write through a raw
+/// pointer without borrowing the `Panels` itself.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct PanelLayout {
+    tiles: usize,
+    k: usize,
+    tile: usize,
+}
+
+impl PanelLayout {
+    /// Flat index of element `(row, p)` in plane `s` — the single
+    /// source of truth for the panel layout.
+    #[inline]
+    pub(crate) fn index(&self, s: usize, row: usize, p: usize) -> usize {
+        (s * self.tiles + row / self.tile) * (self.k * self.tile) + p * self.tile + row % self.tile
+    }
 }
 
 impl<T: Copy + Default> Panels<T> {
@@ -86,9 +112,26 @@ impl<T: Copy + Default> Panels<T> {
         self.tiles
     }
 
-    /// Packed bytes (perf accounting for the bench JSON emitter).
+    /// Packed bytes (perf accounting for the bench JSON emitter and the
+    /// panel cache's capacity bound).
     pub fn bytes(&self) -> usize {
         self.data.len() * std::mem::size_of::<T>()
+    }
+
+    /// Index geometry snapshot for the parallel packers.
+    #[inline]
+    pub(crate) fn layout(&self) -> PanelLayout {
+        PanelLayout {
+            tiles: self.tiles,
+            k: self.k,
+            tile: self.tile,
+        }
+    }
+
+    /// Base pointer for the parallel packers (writes must be disjoint).
+    #[inline]
+    pub(crate) fn as_mut_ptr(&mut self) -> *mut T {
+        self.data.as_mut_ptr()
     }
 
     #[inline]
@@ -109,69 +152,156 @@ impl<T: Copy + Default> Panels<T> {
     #[inline]
     pub fn set(&mut self, s: usize, row: usize, p: usize, v: T) {
         debug_assert!(s < self.planes && row < self.rows && p < self.k);
-        let stride = self.panel_stride();
-        let idx = (s * self.tiles + row / self.tile) * stride + p * self.tile + row % self.tile;
+        let idx = self.layout().index(s, row, p);
         self.data[idx] = v;
     }
 
     /// Read one element back (tests).
     #[inline]
     pub fn get(&self, s: usize, row: usize, p: usize) -> T {
-        let stride = self.panel_stride();
-        let idx = (s * self.tiles + row / self.tile) * stride + p * self.tile + row % self.tile;
+        let idx = self.layout().index(s, row, p);
         self.data[idx]
     }
 }
 
+/// Run `fill(r0, r1)` over tile-aligned row blocks — serial when
+/// `threads <= 1`, otherwise as tasks on the persistent worker pool.
+/// Blocks cover whole tiles, so concurrent fills write disjoint panel
+/// regions; results are identical to the serial order.
+pub(crate) fn parallel_tile_rows<F>(rows: usize, tile: usize, threads: usize, fill: &F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if rows == 0 {
+        return;
+    }
+    let tiles = rows.div_ceil(tile);
+    let threads = threads.max(1).min(tiles);
+    if threads <= 1 {
+        fill(0, rows);
+        return;
+    }
+    let tiles_per_task = tiles.div_ceil(threads);
+    let jobs = tiles.div_ceil(tiles_per_task);
+    pool::run(jobs, threads, |j| {
+        let r0 = j * tiles_per_task * tile;
+        let r1 = ((j + 1) * tiles_per_task * tile).min(rows);
+        fill(r0, r1);
+    });
+}
+
+/// Pack the rows of `a` (A-side operand) into one-plane panels, using
+/// up to `threads` pool tasks.
+pub fn pack_rows_f64_mt(a: &Mat<f64>, tile: usize, threads: usize) -> Panels<f64> {
+    let mut out = Panels::zeroed(1, a.rows(), a.cols(), tile);
+    let layout = out.layout();
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_tile_rows(a.rows(), tile, threads, &|r0, r1| {
+        for i in r0..r1 {
+            for (p, &v) in a.row(i).iter().enumerate() {
+                // Safety: row blocks are tile-aligned, hence disjoint.
+                unsafe { *ptr.get().add(layout.index(0, i, p)) = v };
+            }
+        }
+    });
+    out
+}
+
 /// Pack the rows of `a` (A-side operand) into one-plane panels.
 pub fn pack_rows_f64(a: &Mat<f64>, tile: usize) -> Panels<f64> {
-    let mut out = Panels::zeroed(1, a.rows(), a.cols(), tile);
-    for i in 0..a.rows() {
-        for (p, &v) in a.row(i).iter().enumerate() {
-            out.set(0, i, p, v);
+    pack_rows_f64_mt(a, tile, 1)
+}
+
+/// Pack the columns of `b` (B-side operand, `k x n`) into one-plane
+/// panels, using up to `threads` pool tasks: packed row `j` is column
+/// `j` of `b`, and tasks split over tile blocks of `j`.
+pub fn pack_cols_f64_mt(b: &Mat<f64>, tile: usize, threads: usize) -> Panels<f64> {
+    let (k, n) = (b.rows(), b.cols());
+    let mut out = Panels::zeroed(1, n, k, tile);
+    let layout = out.layout();
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_tile_rows(n, tile, threads, &|j0, j1| {
+        for p in 0..k {
+            let brow = b.row(p);
+            for (j, &v) in brow[j0..j1].iter().enumerate() {
+                // Safety: column blocks are tile-aligned, hence disjoint.
+                unsafe { *ptr.get().add(layout.index(0, j0 + j, p)) = v };
+            }
         }
-    }
+    });
     out
 }
 
 /// Pack the columns of `b` (B-side operand, `k x n`) into one-plane
 /// panels: packed row `j` is column `j` of `b`.
 pub fn pack_cols_f64(b: &Mat<f64>, tile: usize) -> Panels<f64> {
-    let (k, n) = (b.rows(), b.cols());
-    let mut out = Panels::zeroed(1, n, k, tile);
-    for p in 0..k {
-        for (j, &v) in b.row(p).iter().enumerate() {
-            out.set(0, j, p, v);
+    pack_cols_f64_mt(b, tile, 1)
+}
+
+/// Pack the rows of a complex matrix into separate re/im panels, using
+/// up to `threads` pool tasks.
+pub fn pack_rows_c64_mt(
+    a: &crate::linalg::ZMat,
+    tile: usize,
+    threads: usize,
+) -> (Panels<f64>, Panels<f64>) {
+    let mut re = Panels::zeroed(1, a.rows(), a.cols(), tile);
+    let mut im = Panels::zeroed(1, a.rows(), a.cols(), tile);
+    let layout = re.layout();
+    let ptr_re = SendPtr(re.as_mut_ptr());
+    let ptr_im = SendPtr(im.as_mut_ptr());
+    parallel_tile_rows(a.rows(), tile, threads, &|r0, r1| {
+        for i in r0..r1 {
+            for (p, z) in a.row(i).iter().enumerate() {
+                let idx = layout.index(0, i, p);
+                // Safety: row blocks are tile-aligned, hence disjoint.
+                unsafe {
+                    *ptr_re.get().add(idx) = z.re;
+                    *ptr_im.get().add(idx) = z.im;
+                }
+            }
         }
-    }
-    out
+    });
+    (re, im)
 }
 
 /// Pack the rows of a complex matrix into separate re/im panels.
 pub fn pack_rows_c64(a: &crate::linalg::ZMat, tile: usize) -> (Panels<f64>, Panels<f64>) {
-    let mut re = Panels::zeroed(1, a.rows(), a.cols(), tile);
-    let mut im = Panels::zeroed(1, a.rows(), a.cols(), tile);
-    for i in 0..a.rows() {
-        for (p, z) in a.row(i).iter().enumerate() {
-            re.set(0, i, p, z.re);
-            im.set(0, i, p, z.im);
+    pack_rows_c64_mt(a, tile, 1)
+}
+
+/// Pack the columns of a complex `k x n` matrix into re/im panels,
+/// using up to `threads` pool tasks.
+pub fn pack_cols_c64_mt(
+    b: &crate::linalg::ZMat,
+    tile: usize,
+    threads: usize,
+) -> (Panels<f64>, Panels<f64>) {
+    let (k, n) = (b.rows(), b.cols());
+    let mut re = Panels::zeroed(1, n, k, tile);
+    let mut im = Panels::zeroed(1, n, k, tile);
+    let layout = re.layout();
+    let ptr_re = SendPtr(re.as_mut_ptr());
+    let ptr_im = SendPtr(im.as_mut_ptr());
+    parallel_tile_rows(n, tile, threads, &|j0, j1| {
+        for p in 0..k {
+            let brow = b.row(p);
+            for (j, z) in brow[j0..j1].iter().enumerate() {
+                let idx = layout.index(0, j0 + j, p);
+                // Safety: column blocks are tile-aligned, hence disjoint.
+                unsafe {
+                    *ptr_re.get().add(idx) = z.re;
+                    *ptr_im.get().add(idx) = z.im;
+                }
+            }
         }
-    }
+    });
     (re, im)
 }
 
 /// Pack the columns of a complex `k x n` matrix into re/im panels.
 pub fn pack_cols_c64(b: &crate::linalg::ZMat, tile: usize) -> (Panels<f64>, Panels<f64>) {
-    let (k, n) = (b.rows(), b.cols());
-    let mut re = Panels::zeroed(1, n, k, tile);
-    let mut im = Panels::zeroed(1, n, k, tile);
-    for p in 0..k {
-        for (j, z) in b.row(p).iter().enumerate() {
-            re.set(0, j, p, z.re);
-            im.set(0, j, p, z.im);
-        }
-    }
-    (re, im)
+    pack_cols_c64_mt(b, tile, 1)
 }
 
 #[cfg(test)]
@@ -233,5 +363,44 @@ mod tests {
         let (bre, bim) = pack_cols_c64(&z, 2);
         assert_eq!(bre.get(0, 2, 1), 1.0);
         assert_eq!(bim.get(0, 2, 1), 2.0);
+    }
+
+    #[test]
+    fn parallel_packers_match_serial_bytes() {
+        use crate::complex::c64;
+        let a = Mat::from_fn(13, 9, |i, j| (i * 100 + j) as f64 * 0.25);
+        let z = Mat::from_fn(13, 9, |i, j| c64(i as f64, -(j as f64)));
+        for threads in [2usize, 3, 8] {
+            let s = pack_rows_f64(&a, 4);
+            let p = pack_rows_f64_mt(&a, 4, threads);
+            for i in 0..13 {
+                for q in 0..9 {
+                    assert_eq!(p.get(0, i, q), s.get(0, i, q), "rows t={threads}");
+                }
+            }
+            let sc = pack_cols_f64(&a, 8);
+            let pc = pack_cols_f64_mt(&a, 8, threads);
+            for j in 0..9 {
+                for q in 0..13 {
+                    assert_eq!(pc.get(0, j, q), sc.get(0, j, q), "cols t={threads}");
+                }
+            }
+            let (sre, sim) = pack_rows_c64(&z, 2);
+            let (pre, pim) = pack_rows_c64_mt(&z, 2, threads);
+            let (scr, sci) = pack_cols_c64(&z, 4);
+            let (pcr, pci) = pack_cols_c64_mt(&z, 4, threads);
+            for i in 0..13 {
+                for q in 0..9 {
+                    assert_eq!(pre.get(0, i, q), sre.get(0, i, q));
+                    assert_eq!(pim.get(0, i, q), sim.get(0, i, q));
+                }
+            }
+            for j in 0..9 {
+                for q in 0..13 {
+                    assert_eq!(pcr.get(0, j, q), scr.get(0, j, q));
+                    assert_eq!(pci.get(0, j, q), sci.get(0, j, q));
+                }
+            }
+        }
     }
 }

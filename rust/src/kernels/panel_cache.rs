@@ -1,0 +1,465 @@
+//! Packed-panel reuse cache: content-addressed, capacity-bounded LRU
+//! storage for the Ozaki split/pack products.
+//!
+//! The split+pack stage is the dominant per-call cost of small emulated
+//! GEMMs, and real workloads repeat operands constantly: the four
+//! component products of one complex GEMM share their A/B planes, LU
+//! trailing updates re-multiply the same L21 panel, and SCF iterations
+//! re-factor nearly identical matrices call after call.  This cache
+//! lets `ozaki_dgemm` / `ozaki_zgemm` reuse the packed slice panels
+//! (and the per-row scaling exponents) across such calls instead of
+//! re-splitting — the packed-A reuse trick of the EmuGEMM / NVIDIA
+//! Ozaki-extension line of work, applied on the host.
+//!
+//! Keys are **content fingerprints** (a SplitMix64-mixed digest of the
+//! raw f64 bits — see [`fingerprint`] for why full per-word avalanche
+//! is load-bearing) plus shape, split count, and operand side — never
+//! bare pointers — so
+//! aliased copies of the same matrix hit, and in-place mutation misses
+//! by construction (the stale entry simply ages out of the LRU).  A hit
+//! therefore always returns exactly the panels a fresh pack would
+//! produce, and cached results stay bit-for-bit identical to uncached
+//! ones.  The fingerprint costs one pass over the operand, against the
+//! `splits` scale/truncate passes (plus, for B, a transpose) it saves.
+//!
+//! Capacity is bounded in bytes (`run.panel_cache_mb`, default
+//! [`DEFAULT_CAPACITY_MB`]); eviction is LRU.  Statistics (hits,
+//! misses, evictions, cumulative pack seconds) feed the PEAK per-site
+//! report through the dispatcher.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::pack::Panels;
+
+/// Default cache budget in MiB.
+pub const DEFAULT_CAPACITY_MB: usize = 64;
+
+/// Which operand layout a cached entry holds: A-side panels are packed
+/// with the `MR` tile from the operand's rows; B-side panels with the
+/// `NR` tile from the operand's *columns* (the transpose happens at
+/// pack time, so a B-side hit skips the transpose too).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Side {
+    A,
+    B,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct Key {
+    side: Side,
+    rows: usize,
+    cols: usize,
+    splits: u32,
+    fp: u64,
+}
+
+struct Entry {
+    panels: Arc<Panels<i8>>,
+    exps: Arc<Vec<i32>>,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// Cache counters (cumulative since process start for the global
+/// instance; the dispatcher diffs snapshots to attribute per-call
+/// pack time and cache traffic to call sites).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Seconds spent packing (cache misses and uncached packs).
+    pub pack_s: f64,
+}
+
+/// A capacity-bounded LRU cache of packed Ozaki panels.
+pub struct PanelCache {
+    map: HashMap<Key, Entry>,
+    capacity: usize,
+    resident: usize,
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl PanelCache {
+    pub fn new(capacity_bytes: usize) -> Self {
+        PanelCache {
+            map: HashMap::new(),
+            capacity: capacity_bytes,
+            resident: 0,
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Current capacity bound in bytes.
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity
+    }
+
+    /// Bytes of packed panels currently resident.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident
+    }
+
+    /// Number of cached entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Account pack time performed outside the cache (the uncached
+    /// path), so per-site pack attribution stays complete.
+    pub fn note_pack(&mut self, seconds: f64) {
+        self.stats.pack_s += seconds;
+    }
+
+    /// Adjust the capacity bound, evicting LRU entries if it shrank.
+    pub fn set_capacity(&mut self, bytes: usize) {
+        self.capacity = bytes;
+        while self.resident > self.capacity && self.evict_lru(None) {}
+    }
+
+    /// Grow the capacity bound to at least `bytes` — the per-call path
+    /// into the shared global cache.  Growth-only on purpose: a caller
+    /// configured with a small `panel_cache_mb` must not evict a
+    /// concurrent large-budget caller's working set on every call
+    /// (explicit shrinking stays available via [`set_capacity`]).
+    ///
+    /// [`set_capacity`]: PanelCache::set_capacity
+    pub fn ensure_capacity(&mut self, bytes: usize) {
+        if bytes > self.capacity {
+            self.capacity = bytes;
+        }
+    }
+
+    /// Drop every cached entry (tests / explicit invalidation).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.resident = 0;
+    }
+
+    /// Look up the packed panels for (`side`, shape, `splits`, content
+    /// fingerprint `fp`), counting the hit or miss.  The caller packs
+    /// on a miss **without holding the cache lock** and hands the
+    /// product to [`PanelCache::insert`].
+    pub fn lookup(
+        &mut self,
+        side: Side,
+        rows: usize,
+        cols: usize,
+        splits: u32,
+        fp: u64,
+    ) -> Option<(Arc<Panels<i8>>, Arc<Vec<i32>>)> {
+        self.tick += 1;
+        let key = Key {
+            side,
+            rows,
+            cols,
+            splits,
+            fp,
+        };
+        match self.map.get_mut(&key) {
+            Some(e) => {
+                e.last_used = self.tick;
+                self.stats.hits += 1;
+                Some((e.panels.clone(), e.exps.clone()))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly packed product (accounting `pack_seconds` spent
+    /// outside the lock) and return the shared handles.  If another
+    /// thread raced the same key in first, its identical entry wins and
+    /// is returned instead.  Entries larger than the capacity bound are
+    /// returned uncached.
+    #[allow(clippy::too_many_arguments)]
+    pub fn insert(
+        &mut self,
+        side: Side,
+        rows: usize,
+        cols: usize,
+        splits: u32,
+        fp: u64,
+        panels: Panels<i8>,
+        exps: Vec<i32>,
+        pack_seconds: f64,
+    ) -> (Arc<Panels<i8>>, Arc<Vec<i32>>) {
+        self.tick += 1;
+        self.stats.pack_s += pack_seconds;
+        let key = Key {
+            side,
+            rows,
+            cols,
+            splits,
+            fp,
+        };
+        if let Some(e) = self.map.get_mut(&key) {
+            // a concurrent pack of the same contents landed first;
+            // the entries are bit-identical, keep the resident one
+            e.last_used = self.tick;
+            return (e.panels.clone(), e.exps.clone());
+        }
+        let bytes = panels.bytes() + exps.len() * std::mem::size_of::<i32>();
+        let panels = Arc::new(panels);
+        let exps = Arc::new(exps);
+        if bytes <= self.capacity {
+            self.resident += bytes;
+            self.map.insert(
+                key,
+                Entry {
+                    panels: panels.clone(),
+                    exps: exps.clone(),
+                    bytes,
+                    last_used: self.tick,
+                },
+            );
+            while self.resident > self.capacity && self.evict_lru(Some(self.tick)) {}
+        }
+        (panels, exps)
+    }
+
+    /// Convenience for tests and single-threaded callers: [`lookup`]
+    /// then pack + [`insert`] on a miss (the pack runs under the
+    /// caller's borrow of the cache, i.e. with the lock held when the
+    /// cache is shared — the `ozaki` prepare stage uses the split API
+    /// instead to keep the global lock out of the pack).
+    ///
+    /// [`lookup`]: PanelCache::lookup
+    /// [`insert`]: PanelCache::insert
+    pub fn get_or_pack(
+        &mut self,
+        side: Side,
+        rows: usize,
+        cols: usize,
+        splits: u32,
+        fp: u64,
+        pack: impl FnOnce() -> (Panels<i8>, Vec<i32>),
+    ) -> (Arc<Panels<i8>>, Arc<Vec<i32>>) {
+        if let Some(hit) = self.lookup(side, rows, cols, splits, fp) {
+            return hit;
+        }
+        let t0 = Instant::now();
+        let (panels, exps) = pack();
+        let dt = t0.elapsed().as_secs_f64();
+        self.insert(side, rows, cols, splits, fp, panels, exps, dt)
+    }
+
+    /// Evict the least-recently-used entry, skipping (when `protect` is
+    /// set) entries touched at that tick.  Returns whether an entry was
+    /// evicted.
+    fn evict_lru(&mut self, protect: Option<u64>) -> bool {
+        let victim = self
+            .map
+            .iter()
+            .filter(|(_, e)| match protect {
+                Some(t) => e.last_used < t,
+                None => true,
+            })
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| *k);
+        match victim {
+            Some(k) => {
+                let e = self.map.remove(&k).unwrap();
+                self.resident -= e.bytes;
+                self.stats.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// Content digest over the raw f64 bits — the identity of a cache key.
+///
+/// Each word passes through the SplitMix64 finalizer (xor-shift +
+/// multiply, twice) before folding into the running state.  The
+/// xor-shifts matter: a plain word-wise FNV (`h ^= w; h *= prime`) is
+/// closed modulo `2^t`, so matrices whose entries all share `t`
+/// trailing-zero bits (every small-integer-valued f64 has ~52) would
+/// get value-independent low digest bits and collide after only a few
+/// thousand distinct operands.  With full avalanche per word, a
+/// collision needs two same-shaped matrices agreeing on an honest
+/// 64-bit digest — negligible next to the cost model this serves.
+pub fn fingerprint(data: &[f64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in data {
+        let mut z = h ^ v.to_bits();
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        h = z ^ (z >> 31);
+    }
+    h
+}
+
+/// The process-wide cache instance the `ozaki` prepare stage uses.
+pub fn global() -> &'static Mutex<PanelCache> {
+    static GLOBAL: once_cell::sync::Lazy<Mutex<PanelCache>> =
+        once_cell::sync::Lazy::new(|| Mutex::new(PanelCache::new(DEFAULT_CAPACITY_MB << 20)));
+    &GLOBAL
+}
+
+/// Snapshot of the global cache's counters.
+pub fn global_stats() -> CacheStats {
+    global().lock().unwrap().stats()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::MR_I8;
+    use crate::linalg::Mat;
+    use crate::ozaki::{row_scale_exponents, split_scaled_into_panels};
+
+    fn pack_a(a: &Mat<f64>, splits: u32) -> (Panels<i8>, Vec<i32>) {
+        let ea = row_scale_exponents(a);
+        let pa = split_scaled_into_panels(a, &ea, splits, MR_I8);
+        (pa, ea)
+    }
+
+    #[test]
+    fn second_lookup_hits_and_shares_the_allocation() {
+        let mut cache = PanelCache::new(1 << 20);
+        let a = Mat::from_fn(8, 8, |i, j| (i * 8 + j) as f64 * 0.125 - 3.0);
+        let fp = fingerprint(a.data());
+        let (p1, e1) = cache.get_or_pack(Side::A, 8, 8, 4, fp, || pack_a(&a, 4));
+        let (p2, e2) =
+            cache.get_or_pack(Side::A, 8, 8, 4, fp, || panic!("must not repack on a hit"));
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert!(Arc::ptr_eq(&e1, &e2));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!(s.pack_s >= 0.0);
+    }
+
+    #[test]
+    fn aliased_copy_hits_by_content() {
+        let mut cache = PanelCache::new(1 << 20);
+        let a = Mat::from_fn(6, 5, |i, j| (i as f64 - j as f64) * 0.5);
+        let alias = a.clone(); // different allocation, same content
+        let (p1, _) =
+            cache.get_or_pack(Side::A, 6, 5, 3, fingerprint(a.data()), || pack_a(&a, 3));
+        let (p2, _) = cache.get_or_pack(Side::A, 6, 5, 3, fingerprint(alias.data()), || {
+            panic!("aliased content must hit")
+        });
+        assert!(Arc::ptr_eq(&p1, &p2));
+    }
+
+    #[test]
+    fn mutation_invalidates_by_fingerprint() {
+        let mut cache = PanelCache::new(1 << 20);
+        let mut a = Mat::from_fn(4, 4, |i, j| (i + j) as f64 + 0.25);
+        let fp1 = fingerprint(a.data());
+        let (p1, _) = cache.get_or_pack(Side::A, 4, 4, 3, fp1, || pack_a(&a, 3));
+        a.set(2, 2, -17.5); // in-place mutation, same allocation
+        let fp2 = fingerprint(a.data());
+        assert_ne!(fp1, fp2);
+        let (p2, _) = cache.get_or_pack(Side::A, 4, 4, 3, fp2, || pack_a(&a, 3));
+        assert!(!Arc::ptr_eq(&p1, &p2), "mutated operand must repack");
+        assert_eq!(cache.stats().misses, 2);
+        // fresh pack of the mutated matrix matches the cached copy
+        let fresh = pack_a(&a, 3).0;
+        for s in 0..3 {
+            for i in 0..4 {
+                for p in 0..4 {
+                    assert_eq!(p2.get(s, i, p), fresh.get(s, i, p));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn splits_and_side_are_part_of_the_key() {
+        let mut cache = PanelCache::new(1 << 20);
+        let a = Mat::from_fn(5, 5, |i, j| (i * j) as f64 * 0.1 + 0.01);
+        let fp = fingerprint(a.data());
+        cache.get_or_pack(Side::A, 5, 5, 3, fp, || pack_a(&a, 3));
+        cache.get_or_pack(Side::A, 5, 5, 4, fp, || pack_a(&a, 4));
+        cache.get_or_pack(Side::B, 5, 5, 3, fp, || pack_a(&a, 3));
+        assert_eq!(cache.stats().misses, 3);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn capacity_bound_is_enforced_lru() {
+        let mut cache = PanelCache::new(0);
+        let a = Mat::from_fn(4, 4, |_, _| 0.5);
+        // capacity 0: computed but never stored
+        cache.get_or_pack(Side::A, 4, 4, 2, fingerprint(a.data()), || pack_a(&a, 2));
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.resident_bytes(), 0);
+
+        // small but nonzero: old entries age out, bound holds
+        let one_entry = {
+            let (p, e) = pack_a(&a, 2);
+            p.bytes() + e.len() * 4
+        };
+        let mut cache = PanelCache::new(one_entry);
+        for v in 0..5 {
+            let m = Mat::from_fn(4, 4, |_, _| v as f64 + 0.5);
+            cache.get_or_pack(Side::A, 4, 4, 2, fingerprint(m.data()), || pack_a(&m, 2));
+            assert!(cache.resident_bytes() <= cache.capacity_bytes());
+        }
+        assert_eq!(cache.stats().evictions, 4);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn shrinking_capacity_evicts() {
+        let a = Mat::from_fn(4, 4, |_, _| 1.25);
+        let mut cache = PanelCache::new(1 << 20);
+        cache.get_or_pack(Side::A, 4, 4, 2, fingerprint(a.data()), || pack_a(&a, 2));
+        assert_eq!(cache.len(), 1);
+        cache.set_capacity(0);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.resident_bytes(), 0);
+        // ensure_capacity grows but never shrinks (per-call path into
+        // the shared global cache)
+        cache.ensure_capacity(1 << 10);
+        assert_eq!(cache.capacity_bytes(), 1 << 10);
+        cache.ensure_capacity(1 << 4);
+        assert_eq!(cache.capacity_bytes(), 1 << 10);
+    }
+
+    #[test]
+    fn fingerprint_is_content_sensitive() {
+        let a = vec![1.0f64, 2.0, 3.0];
+        let b = vec![1.0f64, 2.0, 3.0 + 1e-15];
+        let c = vec![2.0f64, 1.0, 3.0];
+        assert_eq!(fingerprint(&a), fingerprint(&a.clone()));
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        assert_ne!(fingerprint(&a), fingerprint(&c), "order matters");
+    }
+
+    #[test]
+    fn fingerprint_low_bits_avalanche_on_integer_values() {
+        // The degenerate class for a word-wise FNV: small-integer f64s
+        // carry ~52 trailing-zero bits, which a multiply-only hash keeps
+        // value-independent in the low digest bits.  The SplitMix64 mix
+        // must spread them (collision here would silently serve wrong
+        // panels to integer-valued workloads).
+        let x = fingerprint(&[1.0, 2.0]);
+        let y = fingerprint(&[3.0, 4.0]);
+        assert_ne!(x & 0xFFFF, y & 0xFFFF, "low 16 bits must differ");
+        // and exhaustively over a small grid: all digests distinct
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..32 {
+            for b in 0..32 {
+                assert!(seen.insert(fingerprint(&[a as f64, b as f64])));
+            }
+        }
+    }
+}

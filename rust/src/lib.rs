@@ -25,19 +25,30 @@
 //!
 //! * operands are packed **once** into k-major tile panels (slice-major
 //!   across the INT8 planes), then streamed by register-tile
-//!   microkernels that LLVM autovectorizes;
+//!   microkernels that LLVM autovectorizes; the pack itself runs as
+//!   parallel tile-block tasks (`run.pack_parallel`, on by default);
 //! * the Ozaki path uses a **fused multi-slice driver**: every retained
 //!   slice pair `k + l = d < splits` is accumulated in a single sweep
 //!   over the packed panels (no per-pair allocations or extra passes),
 //!   with an automatic i64 escape past the exact-i32 bound
 //!   `K·splits <= 133_144`;
-//! * row bands run on `std::thread::scope` threads — `OZACCEL_THREADS`
-//!   (env / `run.threads` in the config file) sets the count, and
-//!   results are bit-for-bit independent of it;
+//! * row bands and pack tasks execute on a **persistent worker pool**
+//!   ([`runtime::pool`]) spawned once per process — no per-GEMM thread
+//!   spawns; `OZACCEL_THREADS` (env / `run.threads` in the config file)
+//!   sets the band count, and results are bit-for-bit independent of
+//!   it;
+//! * packed Ozaki panels are reused through a **content-addressed
+//!   panel cache** ([`kernels::panel_cache`], `run.panel_cache_mb`,
+//!   default 64 MiB, 0 disables): repeated GEMMs on the same operands —
+//!   LU trailing updates, the four re/im component products of a
+//!   complex GEMM, SCF iterations — skip the split/pack stage, with
+//!   aliasing and in-place mutation handled by content fingerprints;
 //! * tiling is governed by [`kernels::KernelConfig`] (`mc`/`nc`/`kc`);
 //!   the coordinator picks implementations through a
 //!   [`coordinator::KernelSelector`] (`OZACCEL_HOST_KERNEL=naive` keeps
-//!   the textbook reference loops for A/B runs).
+//!   the textbook reference loops for A/B runs) and surfaces kernel
+//!   choice, band counts, pack time, and cache traffic in the PEAK
+//!   per-site report.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! model once, and the Rust binary is self-contained afterwards.

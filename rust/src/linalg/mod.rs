@@ -25,4 +25,4 @@ pub use matrix::{Mat, ZMat};
 pub use norms::{fro_norm, max_abs, one_norm, zfro_norm, zmax_abs, zone_norm};
 pub use refinement::{cgetrf, zcgesv_ir, CLuFactors, IrResult};
 pub use trsm::{ztrsm_left_lower_unit, ztrsm_left_upper};
-pub use zgemm::{zgemm, zgemm_naive, ZgemmHook};
+pub use zgemm::{zcombine, zgemm, zgemm_naive, ZgemmHook};

@@ -2,12 +2,9 @@
 //! the trailing-update products of the blocked LU (the ZGEMM calls MuST
 //! spends its FLOPs in).
 
-use super::matrix::ZMat;
-use crate::error::{Error, Result};
-#[cfg(test)]
-use super::matrix::Mat;
-#[cfg(test)]
+use super::matrix::{Mat, ZMat};
 use crate::complex::c64;
+use crate::error::{Error, Result};
 
 /// A ZGEMM implementation the LU can call instead of the host one.
 ///
@@ -44,6 +41,20 @@ pub fn zgemm_naive(a: &ZMat, b: &ZMat) -> Result<ZMat> {
 /// and device paths agree in structure (ozIMMU splits re/im likewise).
 pub fn zgemm(a: &ZMat, b: &ZMat) -> Result<ZMat> {
     crate::kernels::zgemm_blocked(a, b, &crate::kernels::KernelConfig::default())
+}
+
+/// Recombine the four real products of the re/im decomposition:
+/// `C = (rr − ii) + i·(ri + ir)`.
+///
+/// Every 4-real-GEMM path — the dispatcher's offloaded decomposition,
+/// the kernel selector's naive complex arms, and the fused Ozaki
+/// complex driver — goes through this one helper, so the element-wise
+/// combine order (and therefore the bit-for-bit A/B invariant across
+/// those paths) is structural rather than copy-discipline.
+pub fn zcombine(rr: &Mat<f64>, ii: &Mat<f64>, ri: &Mat<f64>, ir: &Mat<f64>) -> ZMat {
+    Mat::from_fn(rr.rows(), rr.cols(), |i, j| {
+        c64(rr.get(i, j) - ii.get(i, j), ri.get(i, j) + ir.get(i, j))
+    })
 }
 
 fn check(a: &ZMat, b: &ZMat) -> Result<()> {

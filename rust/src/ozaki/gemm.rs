@@ -14,12 +14,16 @@
 //!   (`splits·(splits+1)/2` separate INT8 GEMMs), kept as the oracle the
 //!   kernel-equivalence tests pin the fast path against bit-for-bit.
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use super::split::{
-    ldexp, row_scale_exponents, scale_rows, split_scaled, split_scaled_into_panels, SLICE_BITS,
+    ldexp, row_scale_exponents, scale_rows, split_scaled, split_scaled_into_panels_mt,
+    SLICE_BITS,
 };
 use crate::error::{Error, Result};
 use crate::kernels::{
-    fused_ozaki_sweep, KernelConfig, Panels, MAX_EXACT_I32_TERMS, MR_I8, NR_I8,
+    fused_ozaki_sweep, panel_cache, KernelConfig, Panels, MAX_EXACT_I32_TERMS, MR_I8, NR_I8,
 };
 use crate::linalg::Mat;
 
@@ -86,20 +90,78 @@ pub(crate) fn diagonal_weights(splits: u32) -> Vec<f64> {
         .collect()
 }
 
-/// Scale + slice + pack the A operand (row scaling, `MR` panels).
-pub(crate) fn prepare_a(a: &Mat<f64>, splits: u32) -> (Panels<i8>, Vec<i32>) {
-    let ea = row_scale_exponents(a);
-    let pa = split_scaled_into_panels(a, &ea, splits, MR_I8);
-    (pa, ea)
+/// The shared cache protocol of the prepare stage: consult the global
+/// packed-panel cache (keyed by `side` + the *untransposed* operand's
+/// shape and content fingerprint), and on a miss run `pack` **outside**
+/// the global lock — concurrent GEMMs' prepare stages never serialize
+/// on each other's (pool-parallel) packs — then insert the product.
+/// With the cache disabled (`panel_cache_mb == 0`) only the pack-time
+/// accounting touches the cache.
+fn prepare_cached(
+    side: panel_cache::Side,
+    operand: &Mat<f64>,
+    splits: u32,
+    cfg: &KernelConfig,
+    pack: impl FnOnce() -> (Panels<i8>, Vec<i32>),
+) -> (Arc<Panels<i8>>, Arc<Vec<i32>>) {
+    if cfg.panel_cache_mb == 0 {
+        let t0 = Instant::now();
+        let (p, e) = pack();
+        let dt = t0.elapsed().as_secs_f64();
+        panel_cache::global().lock().unwrap().note_pack(dt);
+        return (Arc::new(p), Arc::new(e));
+    }
+    let fp = panel_cache::fingerprint(operand.data());
+    let (rows, cols) = (operand.rows(), operand.cols());
+    {
+        let mut cache = panel_cache::global().lock().unwrap();
+        cache.ensure_capacity(cfg.panel_cache_mb << 20);
+        if let Some(hit) = cache.lookup(side, rows, cols, splits, fp) {
+            return hit;
+        }
+    }
+    let t0 = Instant::now();
+    let (p, e) = pack();
+    let dt = t0.elapsed().as_secs_f64();
+    panel_cache::global()
+        .lock()
+        .unwrap()
+        .insert(side, rows, cols, splits, fp, p, e, dt)
+}
+
+/// Scale + slice + pack the A operand (row scaling, `MR` panels),
+/// through the packed-panel cache when `cfg.panel_cache_mb > 0` —
+/// repeated GEMMs on the same contents skip the split entirely.  The
+/// pack itself runs as parallel tile-block tasks per
+/// [`KernelConfig::pack_threads`].
+pub(crate) fn prepare_a(
+    a: &Mat<f64>,
+    splits: u32,
+    cfg: &KernelConfig,
+) -> (Arc<Panels<i8>>, Arc<Vec<i32>>) {
+    let threads = cfg.pack_threads();
+    prepare_cached(panel_cache::Side::A, a, splits, cfg, || {
+        let ea = row_scale_exponents(a);
+        let pa = split_scaled_into_panels_mt(a, &ea, splits, MR_I8, threads);
+        (pa, ea)
+    })
 }
 
 /// Scale + slice + pack the B operand (per-column scaling via its
-/// transpose, `NR` panels).
-pub(crate) fn prepare_b(b: &Mat<f64>, splits: u32) -> (Panels<i8>, Vec<i32>) {
-    let bt = b.transposed();
-    let eb = row_scale_exponents(&bt);
-    let pb = split_scaled_into_panels(&bt, &eb, splits, NR_I8);
-    (pb, eb)
+/// transpose, `NR` panels), cached like [`prepare_a`].  The cache key
+/// is the *untransposed* contents, so a hit also skips the transpose.
+pub(crate) fn prepare_b(
+    b: &Mat<f64>,
+    splits: u32,
+    cfg: &KernelConfig,
+) -> (Arc<Panels<i8>>, Arc<Vec<i32>>) {
+    let threads = cfg.pack_threads();
+    prepare_cached(panel_cache::Side::B, b, splits, cfg, || {
+        let bt = b.transposed();
+        let eb = row_scale_exponents(&bt);
+        let pb = split_scaled_into_panels_mt(&bt, &eb, splits, NR_I8, threads);
+        (pb, eb)
+    })
 }
 
 /// Undo the row/column power-of-two scaling: exact exponent shifts.
@@ -136,11 +198,11 @@ pub fn ozaki_dgemm_with(
     cfg: &KernelConfig,
 ) -> Result<Mat<f64>> {
     check_ozaki(a, b, splits)?;
-    let (pa, ea) = prepare_a(a, splits);
-    let (pb, eb) = prepare_b(b, splits);
+    let (pa, ea) = prepare_a(a, splits, cfg);
+    let (pb, eb) = prepare_b(b, splits, cfg);
     let weights = diagonal_weights(splits);
     let mut c = fused_ozaki_sweep(&pa, &pb, &weights, cfg)?;
-    unscale(&mut c, &ea, &eb);
+    unscale(&mut c, ea.as_slice(), eb.as_slice());
     Ok(c)
 }
 

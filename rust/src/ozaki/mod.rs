@@ -26,6 +26,6 @@ pub use gemm::{int8_gemm_i32, ozaki_dgemm, ozaki_dgemm_naive, ozaki_dgemm_with};
 pub use modes::ComputeMode;
 pub use split::{
     reconstruct, row_scale_exponents, scale_rows, split_scaled, split_scaled_into_panels,
-    SLICE_BITS,
+    split_scaled_into_panels_mt, SLICE_BITS,
 };
 pub use zgemm::{ozaki_zgemm, ozaki_zgemm_with};

@@ -1,8 +1,10 @@
 //! FP64 → signed-7-bit-slice decomposition (the Ozaki error-free
 //! transformation), exactly mirroring `python/compile/model.py`.
 
+use crate::kernels::pack::parallel_tile_rows;
 use crate::kernels::Panels;
 use crate::linalg::Mat;
+use crate::runtime::pool::SendPtr;
 
 /// Bits carried per INT8 slice.  7, not 8: truncating a scaled mantissa
 /// |r| < 1 gives |q| = |trunc(r·2⁷)| ≤ 127, which fits `i8` without
@@ -65,25 +67,46 @@ pub fn split_scaled_into_panels(
     splits: u32,
     tile: usize,
 ) -> Panels<i8> {
+    split_scaled_into_panels_mt(a, exps, splits, tile, 1)
+}
+
+/// [`split_scaled_into_panels`] with the row loop cut into tile-aligned
+/// blocks executed as up to `threads` tasks on the persistent worker
+/// pool.  Rows are split independently and blocks cover whole tiles
+/// (disjoint panel regions), so the packed bytes are identical to the
+/// serial pass at every thread count.
+pub fn split_scaled_into_panels_mt(
+    a: &Mat<f64>,
+    exps: &[i32],
+    splits: u32,
+    tile: usize,
+    threads: usize,
+) -> Panels<i8> {
     let (m, k) = (a.rows(), a.cols());
     debug_assert_eq!(exps.len(), m);
     let mut panels = Panels::zeroed(splits as usize, m, k, tile);
+    let layout = panels.layout();
+    let ptr = SendPtr(panels.as_mut_ptr());
     let scale = (1u64 << SLICE_BITS) as f64; // 128.0, exact
-    let mut r = vec![0.0f64; k];
-    for i in 0..m {
-        let e = exps[i];
-        for (dst, src) in r.iter_mut().zip(a.row(i)) {
-            *dst = ldexp(*src, -e);
-        }
-        for s in 0..splits as usize {
-            for (p, rv) in r.iter_mut().enumerate() {
-                let scaled = *rv * scale;
-                let q = scaled.trunc();
-                panels.set(s, i, p, q as i8);
-                *rv = scaled - q; // exact (Sterbenz)
+    parallel_tile_rows(m, tile, threads, &|r0, r1| {
+        let mut r = vec![0.0f64; k];
+        for i in r0..r1 {
+            let e = exps[i];
+            for (dst, src) in r.iter_mut().zip(a.row(i)) {
+                *dst = ldexp(*src, -e);
+            }
+            for s in 0..splits as usize {
+                for (p, rv) in r.iter_mut().enumerate() {
+                    let scaled = *rv * scale;
+                    let q = scaled.trunc();
+                    // Safety: row blocks are tile-aligned, so tasks
+                    // write disjoint panel regions.
+                    unsafe { *ptr.get().add(layout.index(s, i, p)) = q as i8 };
+                    *rv = scaled - q; // exact (Sterbenz)
+                }
             }
         }
-    }
+    });
     panels
 }
 
@@ -291,6 +314,37 @@ mod tests {
                                     plane.get(i, p),
                                     "s={s} i={i} p={p} tile={tile}"
                                 );
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_split_matches_serial_split() {
+        use crate::kernels::{MR_I8, NR_I8};
+        for_cases(10, 37, |rng| {
+            let m = rng.index(1, 20);
+            let k = rng.index(1, 16);
+            let a = Mat::from_fn(m, k, |_, _| rng.wide(30));
+            let exps = row_scale_exponents(&a);
+            for splits in [2u32, 6] {
+                for tile in [MR_I8, NR_I8] {
+                    let serial = split_scaled_into_panels(&a, &exps, splits, tile);
+                    for threads in [2usize, 3, 8] {
+                        let par =
+                            split_scaled_into_panels_mt(&a, &exps, splits, tile, threads);
+                        for s in 0..splits as usize {
+                            for i in 0..m {
+                                for p in 0..k {
+                                    assert_eq!(
+                                        par.get(s, i, p),
+                                        serial.get(s, i, p),
+                                        "s={s} i={i} p={p} tile={tile} threads={threads}"
+                                    );
+                                }
                             }
                         }
                     }

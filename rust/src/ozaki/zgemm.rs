@@ -5,10 +5,12 @@
 //! `Ar·Bi`, ...), so each component is scaled, sliced, and packed
 //! exactly **once** and the packed panels are reused across the four
 //! fused sweeps — half the splitting/packing work of four independent
-//! `ozaki_dgemm` calls, with bit-identical results.
+//! `ozaki_dgemm` calls, with bit-identical results.  The prepare stage
+//! goes through the packed-panel cache, so *repeated* zgemm calls on
+//! the same operands (LU trailing updates, SCF sweeps) skip the
+//! splitting entirely.
 
 use super::gemm::{diagonal_weights, prepare_a, prepare_b, unscale};
-use crate::complex::c64;
 use crate::error::{Error, Result};
 use crate::kernels::{fused_ozaki_sweep, KernelConfig, Panels};
 use crate::linalg::{Mat, ZMat};
@@ -36,11 +38,12 @@ pub fn ozaki_zgemm_with(a: &ZMat, b: &ZMat, splits: u32, cfg: &KernelConfig) -> 
     }
     let (ar, ai) = (a.re(), a.im());
     let (br, bi) = (b.re(), b.im());
-    // Pack each component once; reuse across the four products.
-    let (par, ear) = prepare_a(&ar, splits);
-    let (pai, eai) = prepare_a(&ai, splits);
-    let (pbr, ebr) = prepare_b(&br, splits);
-    let (pbi, ebi) = prepare_b(&bi, splits);
+    // Pack each component once; reuse across the four products (and,
+    // via the panel cache, across repeated calls on the same operands).
+    let (par, ear) = prepare_a(&ar, splits, cfg);
+    let (pai, eai) = prepare_a(&ai, splits, cfg);
+    let (pbr, ebr) = prepare_b(&br, splits, cfg);
+    let (pbi, ebi) = prepare_b(&bi, splits, cfg);
     let weights = diagonal_weights(splits);
 
     let product = |pa: &Panels<i8>, ea: &[i32], pb: &Panels<i8>, eb: &[i32]| -> Result<Mat<f64>> {
@@ -48,23 +51,18 @@ pub fn ozaki_zgemm_with(a: &ZMat, b: &ZMat, splits: u32, cfg: &KernelConfig) -> 
         unscale(&mut c, ea, eb);
         Ok(c)
     };
-    let rr = product(&par, &ear, &pbr, &ebr)?;
-    let ii = product(&pai, &eai, &pbi, &ebi)?;
-    let ri = product(&par, &ear, &pbi, &ebi)?;
-    let ir = product(&pai, &eai, &pbr, &ebr)?;
+    let rr = product(&par, ear.as_slice(), &pbr, ebr.as_slice())?;
+    let ii = product(&pai, eai.as_slice(), &pbi, ebi.as_slice())?;
+    let ri = product(&par, ear.as_slice(), &pbi, ebi.as_slice())?;
+    let ir = product(&pai, eai.as_slice(), &pbr, ebr.as_slice())?;
 
-    let (m, n) = (rr.rows(), rr.cols());
-    Ok(Mat::from_fn(m, n, |i, j| {
-        c64(
-            rr.get(i, j) - ii.get(i, j),
-            ri.get(i, j) + ir.get(i, j),
-        )
-    }))
+    Ok(crate::linalg::zcombine(&rr, &ii, &ri, &ir))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::complex::c64;
     use crate::linalg::zgemm_naive;
     use crate::ozaki::ozaki_dgemm;
     use crate::testing::{for_cases, Rng};

@@ -9,10 +9,14 @@
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`,
 //! with `to_tuple1` unwrapping (the model lowers with
 //! `return_tuple=True`).
+//!
+//! This module also owns [`pool`], the process-wide persistent worker
+//! pool the host kernel core runs its band and pack tasks on.
 
 mod artifact;
 mod cache;
 mod exec;
+pub mod pool;
 
 pub use artifact::{Artifact, ArtifactKind, Manifest};
 pub use cache::Runtime;

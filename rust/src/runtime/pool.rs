@@ -1,0 +1,321 @@
+//! Persistent worker pool for the host kernel core.
+//!
+//! PR 1's band drivers spawned fresh `std::thread::scope` threads on
+//! every GEMM; on the many-small-GEMM workloads the paper's LU trailing
+//! updates produce, spawn/join cost was the dominant Amdahl term after
+//! the fused sweep.  This pool spawns its workers **once per process**
+//! (lazily, on the first parallel call) and reuses them for every band
+//! and pack task afterwards.
+//!
+//! Sizing: the pool grows on demand to the largest `threads` any caller
+//! requests (i.e. `OZACCEL_THREADS` / `run.threads` via
+//! [`crate::kernels::KernelConfig`]), capped at [`MAX_POOL_THREADS`].
+//! The calling thread always participates, so a request for `t` threads
+//! needs only `t - 1` workers.
+//!
+//! Work items are *borrowed* closures: [`run`] type-erases the closure
+//! behind a raw pointer and blocks on a completion latch until every
+//! job has finished, so the borrow never outlives the call.  Nested
+//! [`run`] calls from inside a pool task execute inline — the pool
+//! never blocks a worker on another task's completion, which keeps it
+//! deadlock-free by construction.
+//!
+//! Determinism: the pool only decides *who* executes a job, never what
+//! the job computes or where it writes.  Band partitioning (and
+//! therefore every kernel result bit) depends only on the caller's
+//! requested `threads`, exactly as with the scoped-thread code it
+//! replaces.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Hard cap on pool workers (a safety bound, far above any sane
+/// `OZACCEL_THREADS`).
+pub const MAX_POOL_THREADS: usize = 512;
+
+/// A type-erased, borrowed work item.  `ctx` points at the submitting
+/// call's closure and `latch` at its completion latch; both live on the
+/// submitter's stack and are kept alive because [`run`] does not return
+/// until the latch reports every job done.
+struct Task {
+    call: unsafe fn(*const (), usize),
+    ctx: *const (),
+    index: usize,
+    latch: *const Latch,
+}
+
+// Safety: Task's raw pointers reference the submitting thread's stack
+// frame, which outlives all uses — `run` blocks until the latch counts
+// every job complete before that frame unwinds.  The pointed-to closure
+// is `Sync`, so shared execution from worker threads is sound.
+unsafe impl Send for Task {}
+
+struct LatchState {
+    done: usize,
+    total: usize,
+    panicked: bool,
+}
+
+/// Counts completed jobs of one `run` call.
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(total: usize) -> Self {
+        Latch {
+            state: Mutex::new(LatchState {
+                done: 0,
+                total,
+                panicked: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.done += 1;
+        s.panicked |= panicked;
+        if s.done >= s.total {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until all jobs completed; returns whether any panicked.
+    fn wait_done(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        while s.done < s.total {
+            s = self.cv.wait(s).unwrap();
+        }
+        s.panicked
+    }
+
+    fn is_done(&self) -> bool {
+        let s = self.state.lock().unwrap();
+        s.done >= s.total
+    }
+}
+
+struct Pool {
+    queue: Mutex<VecDeque<Task>>,
+    cv: Condvar,
+    spawned: Mutex<usize>,
+}
+
+impl Pool {
+    fn global() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(|| Pool {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            spawned: Mutex::new(0),
+        })
+    }
+
+    /// Grow the worker set to at least `want` detached workers.
+    fn ensure_workers(&'static self, want: usize) {
+        let want = want.min(MAX_POOL_THREADS - 1);
+        let mut n = self.spawned.lock().unwrap();
+        while *n < want {
+            let id = *n;
+            std::thread::Builder::new()
+                .name(format!("ozaccel-pool-{id}"))
+                .spawn(move || worker_loop(Pool::global()))
+                .expect("spawn pool worker");
+            *n += 1;
+        }
+    }
+}
+
+thread_local! {
+    /// Set while this thread is executing a pool task; nested `run`
+    /// calls observe it and fall back to inline execution.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+fn worker_loop(pool: &'static Pool) {
+    loop {
+        let task = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = pool.cv.wait(q).unwrap();
+            }
+        };
+        exec_task(task);
+    }
+}
+
+/// Execute one task, completing its latch even if the closure panics
+/// (the panic is surfaced to the submitter, and the worker survives).
+fn exec_task(t: Task) {
+    IN_POOL.with(|f| f.set(true));
+    let result = catch_unwind(AssertUnwindSafe(|| unsafe { (t.call)(t.ctx, t.index) }));
+    IN_POOL.with(|f| f.set(false));
+    // Safety: the submitter keeps the latch alive until it has observed
+    // done == total, which can only happen after this call returns.
+    unsafe { (*t.latch).complete(result.is_err()) };
+}
+
+/// Number of persistent workers spawned so far (tests/introspection).
+pub fn workers_spawned() -> usize {
+    *Pool::global().spawned.lock().unwrap()
+}
+
+/// Execute `jobs` indexed work items (`f(0) .. f(jobs-1)`) with up to
+/// `threads` concurrent executors — the calling thread plus persistent
+/// pool workers — and block until all have completed.
+///
+/// Falls back to inline sequential execution when `threads <= 1`, when
+/// only one job exists, or when called from inside a pool task (nested
+/// parallelism runs inline; the pool stays deadlock-free).  Panics in
+/// any job are re-raised here after all jobs have settled.
+pub fn run<F: Fn(usize) + Sync>(jobs: usize, threads: usize, f: F) {
+    if jobs == 0 {
+        return;
+    }
+    let threads = threads.min(jobs).min(MAX_POOL_THREADS);
+    if threads <= 1 || jobs == 1 || IN_POOL.with(|x| x.get()) {
+        for i in 0..jobs {
+            f(i);
+        }
+        return;
+    }
+
+    unsafe fn call_closure<F: Fn(usize) + Sync>(ctx: *const (), index: usize) {
+        (*(ctx as *const F))(index);
+    }
+
+    let pool = Pool::global();
+    pool.ensure_workers(threads - 1);
+    let latch = Latch::new(jobs);
+    {
+        let mut q = pool.queue.lock().unwrap();
+        for index in 0..jobs {
+            q.push_back(Task {
+                call: call_closure::<F>,
+                ctx: &f as *const F as *const (),
+                index,
+                latch: &latch as *const Latch,
+            });
+        }
+    }
+    pool.cv.notify_all();
+
+    // The caller helps drain the queue (its own jobs, or — harmlessly —
+    // another concurrent run's) until its own latch completes or the
+    // queue runs dry, then waits for in-flight stragglers.  The latch
+    // check bounds the help: once this run's jobs are done the caller
+    // returns promptly instead of servicing other runs' backlogs.
+    while !latch.is_done() {
+        let task = pool.queue.lock().unwrap().pop_front();
+        match task {
+            Some(t) => exec_task(t),
+            None => break,
+        }
+    }
+    if latch.wait_done() {
+        panic!("worker pool: a parallel task panicked");
+    }
+}
+
+/// A raw mutable pointer blessed for cross-thread use.  The band and
+/// pack drivers use it to hand **disjoint** regions of one output
+/// buffer to pool tasks; safety rests entirely on the caller's index
+/// partition being disjoint and in-bounds.
+#[derive(Clone, Copy, Debug)]
+pub struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    #[inline]
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        for jobs in [0usize, 1, 2, 7, 64] {
+            for threads in [1usize, 2, 4, 9] {
+                let hits: Vec<AtomicUsize> = (0..jobs).map(|_| AtomicUsize::new(0)).collect();
+                run(jobs, threads, |i| {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                    "jobs={jobs} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_writes_through_send_ptr() {
+        let mut out = vec![0usize; 1000];
+        let base = SendPtr(out.as_mut_ptr());
+        run(10, 4, |j| {
+            let chunk = unsafe { std::slice::from_raw_parts_mut(base.get().add(j * 100), 100) };
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = j * 100 + i;
+            }
+        });
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i));
+    }
+
+    #[test]
+    fn nested_runs_execute_inline() {
+        let count = AtomicUsize::new(0);
+        run(4, 4, |_| {
+            // inner run must not deadlock even with every worker busy
+            run(3, 4, |_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn pool_survives_repeated_use() {
+        for round in 0..50 {
+            let sum = AtomicUsize::new(0);
+            run(8, 3, |i| {
+                sum.fetch_add(i + 1, Ordering::SeqCst);
+            });
+            assert_eq!(sum.load(Ordering::SeqCst), 36, "round {round}");
+        }
+        assert!(workers_spawned() >= 2);
+        assert!(workers_spawned() <= MAX_POOL_THREADS);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_recovers() {
+        let caught = std::panic::catch_unwind(|| {
+            run(4, 2, |i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(caught.is_err(), "panic must surface to the submitter");
+        // The pool must still work afterwards.
+        let sum = AtomicUsize::new(0);
+        run(6, 3, |i| {
+            sum.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 15);
+    }
+}

@@ -2,7 +2,9 @@
 //! against the textbook oracles, across awkward shapes (tile-boundary,
 //! tall/skinny, degenerate) and thread counts.  These pin the
 //! bit-for-bit contracts the dispatcher's `KernelSelector` and the
-//! PJRT integration suite rely on.
+//! PJRT integration suite rely on — including the persistent worker
+//! pool, the parallel split/pack stage, and the packed-panel reuse
+//! cache added in PR 2.
 
 use ozaccel::coordinator::{DispatchConfig, Dispatcher, HostKernel, KernelSelector};
 use ozaccel::kernels::{dgemm_blocked, int8_gemm_blocked, KernelConfig, MR_I8, NR_I8};
@@ -138,19 +140,175 @@ fn complex_blocked_matches_naive_within_rounding() {
 
 #[test]
 fn thread_count_never_changes_results() {
-    // Same inputs, 1..6 threads: identical bits for all three kernels.
+    // Same inputs, 1..8 band counts on the persistent pool: identical
+    // bits for all three kernels (the OZACCEL_THREADS determinism
+    // contract — the env default feeds the same `threads` knob).
     let mut rng = Rng::new(127);
     let a = rand_f64(&mut rng, 37, 29);
     let b = rand_f64(&mut rng, 29, 23);
+    let ai = rand_i8(&mut rng, 37, 29);
+    let bi = rand_i8(&mut rng, 23, 29);
     let d1 = dgemm_blocked(&a, &b, &KernelConfig::with_threads(1)).unwrap();
     let o1 = ozaccel::ozaki::ozaki_dgemm_with(&a, &b, 6, &KernelConfig::with_threads(1)).unwrap();
-    for threads in 2..=6 {
+    let i1 = int8_gemm_blocked(&ai, &bi, &KernelConfig::with_threads(1)).unwrap();
+    for threads in 2..=8 {
         let cfg = KernelConfig::with_threads(threads);
         let dt = dgemm_blocked(&a, &b, &cfg).unwrap();
         let ot = ozaccel::ozaki::ozaki_dgemm_with(&a, &b, 6, &cfg).unwrap();
+        let it = int8_gemm_blocked(&ai, &bi, &cfg).unwrap();
         assert_eq!(d1.data(), dt.data(), "dgemm threads={threads}");
         assert_eq!(o1.data(), ot.data(), "ozaki threads={threads}");
+        assert_eq!(i1.data(), it.data(), "int8 threads={threads}");
     }
+}
+
+#[test]
+fn pool_determinism_with_parallel_pack_and_cache_toggles() {
+    // Every combination of band count x pack_parallel x cache must
+    // produce the naive oracle's bits exactly — the pool and cache are
+    // pure scheduling/reuse layers.
+    let mut rng = Rng::new(139);
+    let a = rand_f64(&mut rng, 29, 31);
+    let b = rand_f64(&mut rng, 31, 18);
+    let want = ozaki_dgemm_naive(&a, &b, 5).unwrap();
+    for threads in 1..=8 {
+        for pack_parallel in [false, true] {
+            for panel_cache_mb in [0usize, 64] {
+                let cfg = KernelConfig {
+                    threads,
+                    pack_parallel,
+                    panel_cache_mb,
+                    ..KernelConfig::default()
+                };
+                let got = ozaccel::ozaki::ozaki_dgemm_with(&a, &b, 5, &cfg).unwrap();
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "threads={threads} pack_parallel={pack_parallel} cache={panel_cache_mb}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_pack_equals_serial_pack() {
+    // The pool-parallel split/pack stage must emit byte-identical
+    // panels (and hence identical GEMM results) to the serial pass.
+    use ozaccel::ozaki::{
+        row_scale_exponents, split_scaled_into_panels, split_scaled_into_panels_mt,
+    };
+    let mut rng = Rng::new(149);
+    for (m, k) in [(1usize, 1usize), (7, 13), (23, 9), (40, 33)] {
+        let a = rand_f64(&mut rng, m, k);
+        let exps = row_scale_exponents(&a);
+        for tile in [MR_I8, NR_I8] {
+            let serial = split_scaled_into_panels(&a, &exps, 6, tile);
+            for threads in [2usize, 5, 8] {
+                let par = split_scaled_into_panels_mt(&a, &exps, 6, tile, threads);
+                for s in 0..6 {
+                    for i in 0..m {
+                        for p in 0..k {
+                            assert_eq!(
+                                par.get(s, i, p),
+                                serial.get(s, i, p),
+                                "{m}x{k} tile={tile} threads={threads} s={s}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // and the f64 packers used by dgemm/zgemm
+    use ozaccel::kernels::{pack_cols_f64, pack_cols_f64_mt, pack_rows_f64, pack_rows_f64_mt};
+    let a = rand_f64(&mut rng, 19, 11);
+    let sr = pack_rows_f64(&a, 4);
+    let sc = pack_cols_f64(&a, 8);
+    for threads in [3usize, 6] {
+        let pr = pack_rows_f64_mt(&a, 4, threads);
+        let pc = pack_cols_f64_mt(&a, 8, threads);
+        for i in 0..19 {
+            for p in 0..11 {
+                assert_eq!(pr.get(0, i, p), sr.get(0, i, p));
+            }
+        }
+        for j in 0..11 {
+            for p in 0..19 {
+                assert_eq!(pc.get(0, j, p), sc.get(0, j, p));
+            }
+        }
+    }
+}
+
+#[test]
+fn panel_cache_reuse_tracks_aliasing_and_mutation() {
+    use ozaccel::kernels::panel_cache::{fingerprint, PanelCache, Side};
+    use ozaccel::ozaki::{row_scale_exponents, split_scaled_into_panels};
+    use std::sync::Arc;
+
+    let pack = |m: &Mat<f64>| {
+        let e = row_scale_exponents(m);
+        let p = split_scaled_into_panels(m, &e, 4, MR_I8);
+        (p, e)
+    };
+    let mut cache = PanelCache::new(1 << 20);
+    let mut rng = Rng::new(151);
+    let mut a = rand_f64(&mut rng, 9, 7);
+
+    // repeat -> hit, same Arc
+    let (p1, _) = cache.get_or_pack(Side::A, 9, 7, 4, fingerprint(a.data()), || pack(&a));
+    let (p2, _) = cache.get_or_pack(Side::A, 9, 7, 4, fingerprint(a.data()), || {
+        panic!("repeat lookups must hit")
+    });
+    assert!(Arc::ptr_eq(&p1, &p2));
+    assert_eq!(cache.stats().hits, 1);
+
+    // aliased clone (different allocation, same bits) -> hit
+    let alias = a.clone();
+    let (p3, _) = cache.get_or_pack(Side::A, 9, 7, 4, fingerprint(alias.data()), || {
+        panic!("aliased content must hit")
+    });
+    assert!(Arc::ptr_eq(&p1, &p3));
+
+    // in-place mutation -> miss, repacked panels match a fresh pack
+    a.set(4, 3, 1234.5);
+    let (p4, _) = cache.get_or_pack(Side::A, 9, 7, 4, fingerprint(a.data()), || pack(&a));
+    assert!(!Arc::ptr_eq(&p1, &p4), "mutation must invalidate");
+    let fresh = pack(&a).0;
+    for s in 0..4 {
+        for i in 0..9 {
+            for p in 0..7 {
+                assert_eq!(p4.get(s, i, p), fresh.get(s, i, p));
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_ozaki_results_track_operand_mutation_end_to_end() {
+    // The global cache sits under ozaki_dgemm_with; mutating an operand
+    // in place (same allocation) must never resurface stale panels.
+    let cfg = KernelConfig::with_threads(2); // cache on by default
+    let mut rng = Rng::new(157);
+    let mut a = rand_f64(&mut rng, 12, 10);
+    let b = rand_f64(&mut rng, 10, 8);
+
+    let c1 = ozaccel::ozaki::ozaki_dgemm_with(&a, &b, 5, &cfg).unwrap();
+    assert_eq!(c1.data(), ozaki_dgemm_naive(&a, &b, 5).unwrap().data());
+
+    a.set(3, 3, a.get(3, 3) + 1.0);
+    let c2 = ozaccel::ozaki::ozaki_dgemm_with(&a, &b, 5, &cfg).unwrap();
+    assert_eq!(
+        c2.data(),
+        ozaki_dgemm_naive(&a, &b, 5).unwrap().data(),
+        "mutated operand must be repacked, not served stale"
+    );
+    assert_ne!(c1.data(), c2.data());
+
+    // repeated call on the now-warm cache: identical bits again
+    let c3 = ozaccel::ozaki::ozaki_dgemm_with(&a, &b, 5, &cfg).unwrap();
+    assert_eq!(c2.data(), c3.data());
 }
 
 #[test]
