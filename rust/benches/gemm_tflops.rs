@@ -8,7 +8,7 @@
 
 use ozaccel::bench::{Bench, JsonRecord, JsonReport, Table};
 use ozaccel::experiments::{gemm_bench, run_gemm_bench};
-use ozaccel::kernels::{dgemm_blocked, KernelConfig};
+use ozaccel::kernels::{dgemm_blocked, int8_gemm_blocked, KernelConfig, SimdSelect};
 use ozaccel::linalg::{dgemm_naive, Mat};
 use ozaccel::ozaki::{ozaki_dgemm_naive, ozaki_dgemm_with, ozaki_zgemm_with, SLICE_BITS};
 use ozaccel::perfmodel::gemm_flops;
@@ -76,17 +76,27 @@ fn main() {
     // kernels/ subsystem owns; BENCH_*.json tracks this trajectory).
     // The panel cache is disabled here so these rows keep measuring the
     // full per-call split+pack work, comparable with the PR 1 baseline;
-    // the pool+cache section below measures the warm-cache path.
+    // the pool+cache section below measures the warm-cache path.  The
+    // `blocked` rows pin the scalar/autovec microkernel (the PR-1/PR-2
+    // core); the `simd` rows run the runtime-dispatched explicit-SIMD
+    // kernel, so the JSON carries the simd-vs-blocked speedup directly.
     let host_sizes: Vec<usize> = if quick { vec![128] } else { vec![256, 512] };
     let host_splits = 6u32;
     let cfg = KernelConfig {
         panel_cache_mb: 0,
+        simd: SimdSelect::Scalar,
         ..KernelConfig::default()
     };
     let single = KernelConfig {
         panel_cache_mb: 0,
+        simd: SimdSelect::Scalar,
         ..KernelConfig::single_threaded()
     };
+    let simd_cfg = KernelConfig {
+        panel_cache_mb: 0,
+        ..KernelConfig::default()
+    };
+    let isa = simd_cfg.simd.resolve().name();
     let host_bench = if quick { Bench::quick() } else { Bench::default() };
     let mut t = Table::new(&[
         "N",
@@ -115,14 +125,29 @@ fn main() {
         let m_fused_1t = host_bench.run(|| {
             ozaki_dgemm_with(&a, &b, host_splits, &single).expect("fused 1t");
         });
+        let m_simd = host_bench.run(|| {
+            ozaki_dgemm_with(&a, &b, host_splits, &simd_cfg).expect("simd fused");
+        });
         let m_oznaive = host_bench.run(|| {
             ozaki_dgemm_naive(&a, &b, host_splits).expect("naive");
+        });
+        // Pure INT8 kernel pair: the microkernel speedup without the
+        // split/scale/combine stages diluting it.
+        let ai = Mat::from_fn(n, n, |_, _| (rng.index(0, 255) as i32 - 127) as i8);
+        let bi = Mat::from_fn(n, n, |_, _| (rng.index(0, 255) as i32 - 127) as i8);
+        let i8_flop = gemm_flops(n, n, n);
+        let m_i8_scalar = host_bench.run(|| {
+            int8_gemm_blocked(&ai, &bi, &cfg).expect("int8 blocked");
+        });
+        let m_i8_simd = host_bench.run(|| {
+            int8_gemm_blocked(&ai, &bi, &simd_cfg).expect("int8 simd");
         });
         let rows = [
             (format!("dgemm_blocked@{n}"), cfg.threads, Some((2 * n * n * 8) as u64), m_blocked),
             (format!("dgemm_naive@{n}"), 1, None, m_naive),
             (format!("ozaki_fused@{n}/s{host_splits}"), cfg.threads, Some(packed), m_fused),
             (format!("ozaki_fused_1t@{n}/s{host_splits}"), 1, Some(packed), m_fused_1t),
+            (format!("ozaki_simd@{n}/s{host_splits}"), simd_cfg.threads, Some(packed), m_simd),
             (format!("ozaki_naive@{n}/s{host_splits}"), 1, None, m_oznaive),
         ];
         for (name, threads, bytes, m) in rows {
@@ -135,11 +160,35 @@ fn main() {
             ]);
             report.push(JsonRecord::from_measurement(name, &m, Some(flop), bytes, threads));
         }
+        for (name, m) in [
+            (format!("int8_blocked@{n}"), m_i8_scalar),
+            (format!("int8_simd@{n}"), m_i8_simd),
+        ] {
+            t.row(&[
+                n.to_string(),
+                name.clone(),
+                cfg.threads.to_string(),
+                format!("{:.3}", m.median_s * 1e3),
+                format!("{:.2}", m.flops(i8_flop) / 1e9),
+            ]);
+            report.push(JsonRecord::from_measurement(
+                name,
+                &m,
+                Some(i8_flop),
+                Some((2 * n * n) as u64),
+                cfg.threads,
+            ));
+        }
         println!(
             "N={n}: fused/naive ozaki speedup {:.1}x ({} threads), {:.1}x single-threaded",
             m_oznaive.median_s / m_fused.median_s,
             cfg.threads,
             m_oznaive.median_s / m_fused_1t.median_s
+        );
+        println!(
+            "N={n}: simd({isa})/blocked speedup {:.2}x on ozaki, {:.2}x on the raw INT8 kernel",
+            m_fused.median_s / m_simd.median_s,
+            m_i8_scalar.median_s / m_i8_simd.median_s
         );
     }
     println!("== host kernel core (measured on this machine, {SLICE_BITS}-bit slices) ==");

@@ -105,6 +105,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -112,6 +113,7 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header arity).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells.to_vec());
@@ -198,18 +200,22 @@ pub struct JsonReport {
 }
 
 impl JsonReport {
+    /// Empty report.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one record.
     pub fn push(&mut self, r: JsonRecord) {
         self.records.push(r);
     }
 
+    /// Number of records collected.
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
+    /// Whether no record has been collected.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }

@@ -8,8 +8,11 @@ use crate::error::{Error, Result};
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Cli {
+    /// First non-flag argument (`help` when absent).
     pub subcommand: String,
+    /// `--key value` / `--key=value` / bare `--switch` flags.
     pub flags: BTreeMap<String, String>,
+    /// Arguments that are neither the subcommand nor flags.
     pub positional: Vec<String>,
 }
 
@@ -49,14 +52,18 @@ impl Cli {
         Self::parse(&args)
     }
 
+    /// Raw string value of `--name`, if present.
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// Whether `--name` was given as a truthy switch.
     pub fn flag_bool(&self, name: &str) -> bool {
         matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// `--name` parsed as `T`; `None` when absent, loud error when
+    /// present but unparseable.
     pub fn flag_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
         match self.flag(name) {
             None => Ok(None),

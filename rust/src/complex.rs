@@ -15,7 +15,9 @@ use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssi
 #[derive(Clone, Copy, PartialEq, Default)]
 #[repr(C)]
 pub struct c64 {
+    /// Real part.
     pub re: f64,
+    /// Imaginary part.
     pub im: f64,
 }
 
@@ -26,10 +28,14 @@ pub const fn c64(re: f64, im: f64) -> c64 {
 }
 
 impl c64 {
+    /// Additive identity.
     pub const ZERO: c64 = c64(0.0, 0.0);
+    /// Multiplicative identity.
     pub const ONE: c64 = c64(1.0, 0.0);
+    /// The imaginary unit.
     pub const I: c64 = c64(0.0, 1.0);
 
+    /// Construct from components (same as the [`c64`] fn shorthand).
     #[inline]
     pub const fn new(re: f64, im: f64) -> Self {
         c64 { re, im }

@@ -11,6 +11,7 @@ use std::path::PathBuf;
 
 use crate::coordinator::{DataMoveStrategy, DispatchConfig, HostKernel, RoutingPolicy};
 use crate::error::{Error, Result};
+use crate::kernels::SimdSelect;
 use crate::must::params::{mt_u56_mini, tiny_case, CaseParams};
 use crate::ozaki::ComputeMode;
 use crate::perfmodel::{GB200, GH200};
@@ -18,10 +19,13 @@ use crate::perfmodel::{GB200, GH200};
 /// Full run configuration for the `ozaccel` binary.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// Coordinator configuration (mode, routing, kernels, GPU model).
     pub dispatch: DispatchConfig,
+    /// MuST-mini application case to run.
     pub case: CaseParams,
     /// Modes swept by `table1` (dgemm is always included as reference).
     pub sweep_splits: Vec<u32>,
+    /// Where result tables and JSON reports are written.
     pub output_dir: PathBuf,
 }
 
@@ -96,6 +100,19 @@ impl RunConfig {
             cfg.dispatch.kernels.kernel = HostKernel::parse(v.as_str()?)
                 .ok_or_else(|| Error::Config(format!("bad host_kernel {v:?}")))?;
         }
+        if let Some(v) = lookup(&table, "run.simd") {
+            cfg.dispatch.kernels.config.simd = SimdSelect::parse(v.as_str()?)
+                .ok_or_else(|| Error::Config(format!("bad simd {v:?}")))?;
+        }
+        if let Some(v) = lookup(&table, "run.kc") {
+            let f = v.as_f64()?;
+            if f.fract() != 0.0 || f < 1.0 {
+                return Err(Error::Config(format!(
+                    "run.kc must be a positive integer, got {f}"
+                )));
+            }
+            cfg.dispatch.kernels.config.kc = f as usize;
+        }
         if let Some(v) = lookup(&table, "run.pack_parallel") {
             cfg.dispatch.kernels.config.pack_parallel = v.as_bool()?;
         }
@@ -143,7 +160,7 @@ impl RunConfig {
 
     /// Apply the paper's env-var interface on top
     /// (`OZIMMU_COMPUTE_MODE`, plus the host-kernel knobs
-    /// `OZACCEL_THREADS` and `OZACCEL_HOST_KERNEL`).
+    /// `OZACCEL_THREADS`, `OZACCEL_HOST_KERNEL`, and `OZACCEL_SIMD`).
     pub fn apply_env(&mut self) -> Result<()> {
         if std::env::var("OZIMMU_COMPUTE_MODE").is_ok() {
             self.dispatch.mode = ComputeMode::from_env()?;
@@ -161,6 +178,10 @@ impl RunConfig {
         if let Ok(v) = std::env::var("OZACCEL_HOST_KERNEL") {
             self.dispatch.kernels.kernel = HostKernel::parse(&v)
                 .ok_or_else(|| Error::Config(format!("bad OZACCEL_HOST_KERNEL {v:?}")))?;
+        }
+        if let Ok(v) = std::env::var("OZACCEL_SIMD") {
+            self.dispatch.kernels.config.simd = SimdSelect::parse(&v)
+                .ok_or_else(|| Error::Config(format!("bad OZACCEL_SIMD {v:?}")))?;
         }
         Ok(())
     }
@@ -231,8 +252,44 @@ n_contour = 12
         assert_eq!(cfg.dispatch.kernels.config.threads, 3);
         assert_eq!(cfg.dispatch.kernels.kernel, HostKernel::Naive);
         let d = RunConfig::default();
-        assert_eq!(d.dispatch.kernels.kernel, HostKernel::Blocked);
+        assert_eq!(d.dispatch.kernels.kernel, HostKernel::Auto);
         assert!(d.dispatch.kernels.config.threads >= 1);
+    }
+
+    #[test]
+    fn simd_and_kc_knobs_parse() {
+        use crate::coordinator::HostKernel;
+        use crate::kernels::Isa;
+        // every host_kernel name round-trips through the config file
+        for (name, want) in [
+            ("naive", HostKernel::Naive),
+            ("blocked", HostKernel::Blocked),
+            ("simd", HostKernel::Simd),
+            ("auto", HostKernel::Auto),
+        ] {
+            let cfg =
+                RunConfig::from_toml(&format!("[run]\nhost_kernel = \"{name}\"\n")).unwrap();
+            assert_eq!(cfg.dispatch.kernels.kernel, want, "host_kernel={name}");
+        }
+        // SIMD routing policy
+        let cfg = RunConfig::from_toml("[run]\nsimd = \"scalar\"\n").unwrap();
+        assert_eq!(cfg.dispatch.kernels.config.simd, SimdSelect::Scalar);
+        let cfg = RunConfig::from_toml("[run]\nsimd = \"avx2\"\n").unwrap();
+        assert_eq!(
+            cfg.dispatch.kernels.config.simd,
+            SimdSelect::Force(Isa::Avx2)
+        );
+        let d = RunConfig::default();
+        assert_eq!(d.dispatch.kernels.config.simd, SimdSelect::Auto);
+        // KC block extent
+        let cfg = RunConfig::from_toml("[run]\nkc = 128\n").unwrap();
+        assert_eq!(cfg.dispatch.kernels.config.kc, 128);
+        // rejections are loud
+        assert!(RunConfig::from_toml("[run]\nsimd = \"sse9\"\n").is_err());
+        assert!(RunConfig::from_toml("[run]\nhost_kernel = \"cuda\"\n").is_err());
+        assert!(RunConfig::from_toml("[run]\nkc = 0\n").is_err());
+        assert!(RunConfig::from_toml("[run]\nkc = -8\n").is_err());
+        assert!(RunConfig::from_toml("[run]\nkc = 2.5\n").is_err());
     }
 
     #[test]

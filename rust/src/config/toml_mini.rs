@@ -8,13 +8,19 @@ use crate::error::{Error, Result};
 /// A parsed TOML value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
+    /// Quoted string.
     Str(String),
+    /// Number (all numerics parse as `f64`; consumers validate
+    /// integrality where it matters).
     Num(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// `[ ... ]` array.
     Array(Vec<TomlValue>),
 }
 
 impl TomlValue {
+    /// The string value, or a loud type error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             TomlValue::Str(s) => Ok(s),
@@ -22,6 +28,7 @@ impl TomlValue {
         }
     }
 
+    /// The numeric value, or a loud type error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             TomlValue::Num(n) => Ok(*n),
@@ -29,6 +36,7 @@ impl TomlValue {
         }
     }
 
+    /// The boolean value, or a loud type error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             TomlValue::Bool(b) => Ok(*b),
@@ -36,6 +44,7 @@ impl TomlValue {
         }
     }
 
+    /// The array elements, or a loud type error.
     pub fn as_array(&self) -> Result<&[TomlValue]> {
         match self {
             TomlValue::Array(a) => Ok(a),

@@ -15,9 +15,13 @@ pub type CallSiteId = &'static str;
 /// Accumulated statistics for one call site.
 #[derive(Clone, Debug, Default)]
 pub struct CallSiteStats {
+    /// Calls attributed to this site.
     pub calls: u64,
+    /// FLOPs those calls represent (`2·m·k·n` per GEMM).
     pub flops: f64,
+    /// How many calls were routed to the device.
     pub offloaded: u64,
+    /// How many calls executed on the host.
     pub host: u64,
     /// Wall time measured around the GEMM itself, seconds.
     pub measured_s: f64,
@@ -27,6 +31,9 @@ pub struct CallSiteStats {
     pub modeled_move_s: f64,
     /// Host kernel that served this site's host calls (last seen).
     pub host_kernel: Option<&'static str>,
+    /// INT8 microkernel ISA that served this site's emulated host
+    /// calls (last seen; `None` for naive/FP64-only sites).
+    pub isa: Option<&'static str>,
     /// Largest row-band parallelism a host call at this site used.
     pub bands: u64,
     /// Split/pack seconds spent by this site's host calls.
@@ -44,6 +51,7 @@ pub struct SiteRegistry {
 }
 
 impl SiteRegistry {
+    /// Empty registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -74,6 +82,9 @@ impl SiteRegistry {
         e.modeled_move_s += modeled_move_s;
         if let Some(h) = host {
             e.host_kernel = Some(h.kernel);
+            if !h.isa.is_empty() {
+                e.isa = Some(h.isa);
+            }
             e.bands = e.bands.max(h.bands);
             e.pack_s += h.pack_s;
             e.cache_hits += h.cache_hits;
@@ -86,14 +97,17 @@ impl SiteRegistry {
         self.sites.iter()
     }
 
+    /// Statistics for one site, if it has been seen.
     pub fn get(&self, site: CallSiteId) -> Option<&CallSiteStats> {
         self.sites.get(site)
     }
 
+    /// Number of distinct call sites recorded.
     pub fn len(&self) -> usize {
         self.sites.len()
     }
 
+    /// Whether no call has been recorded yet.
     pub fn is_empty(&self) -> bool {
         self.sites.is_empty()
     }
@@ -110,6 +124,7 @@ impl SiteRegistry {
             t.modeled_gpu_s += s.modeled_gpu_s;
             t.modeled_move_s += s.modeled_move_s;
             t.host_kernel = t.host_kernel.or(s.host_kernel);
+            t.isa = t.isa.or(s.isa);
             t.bands = t.bands.max(s.bands);
             t.pack_s += s.pack_s;
             t.cache_hits += s.cache_hits;
@@ -129,6 +144,7 @@ mod tests {
         r.record("a.rs:1", 100.0, true, 1e-3, 2e-3, 3e-4, None);
         let host = HostCallInfo {
             kernel: "blocked",
+            isa: "avx2",
             bands: 4,
             pack_s: 2e-4,
             cache_hits: 3,
@@ -142,6 +158,7 @@ mod tests {
         assert_eq!(a.offloaded, 1);
         assert_eq!(a.host, 1);
         assert_eq!(a.host_kernel, Some("blocked"));
+        assert_eq!(a.isa, Some("avx2"));
         assert_eq!(a.bands, 4);
         assert_eq!((a.cache_hits, a.cache_misses), (3, 1));
         assert!((a.pack_s - 2e-4).abs() < 1e-12);
@@ -150,6 +167,7 @@ mod tests {
         assert!((t.flops - 250.0).abs() < 1e-12);
         assert!((t.modeled_gpu_s - 3e-3).abs() < 1e-12);
         assert_eq!(t.host_kernel, Some("blocked"));
+        assert_eq!(t.isa, Some("avx2"));
         assert_eq!(t.cache_hits, 3);
     }
 

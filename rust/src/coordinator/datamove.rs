@@ -25,15 +25,20 @@ pub type BufferId = usize;
 /// Where a buffer's pages currently live.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Residency {
+    /// Pages live in host memory.
     Host,
+    /// Pages live in device memory.
     Device,
 }
 
 /// The three strategies of the automatic-offload tool.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DataMoveStrategy {
+    /// Copy operands/results over the link for every call.
     CopyAlways,
+    /// Access host memory from the device over the coherent link.
     UnifiedAccess,
+    /// Migrate pages to the device on first touch, then reuse.
     FirstTouchMigrate,
 }
 
@@ -48,6 +53,7 @@ impl DataMoveStrategy {
         }
     }
 
+    /// Stable lower-case label (reports and config files).
     pub fn name(self) -> &'static str {
         match self {
             Self::CopyAlways => "copy_always",
@@ -72,6 +78,7 @@ pub struct MemModel {
 }
 
 impl MemModel {
+    /// Fresh model: everything host-resident, zero movement booked.
     pub fn new(strategy: DataMoveStrategy, spec: GpuSpec) -> Self {
         MemModel {
             strategy,
@@ -83,6 +90,7 @@ impl MemModel {
         }
     }
 
+    /// The strategy this model prices.
     pub fn strategy(&self) -> DataMoveStrategy {
         self.strategy
     }

@@ -180,6 +180,16 @@ impl Dispatcher {
         }
     }
 
+    /// The INT8 microkernel ISA a host call in `mode` runs under the
+    /// configured selector — the PEAK report's `isa` column.  Empty for
+    /// FP64 mode (no INT8 tile) and for the naive kernel.
+    fn host_isa(&self, mode: ComputeMode) -> &'static str {
+        match mode {
+            ComputeMode::Int8 { .. } => self.cfg.kernels.resolved_isa().unwrap_or(""),
+            ComputeMode::Dgemm => "",
+        }
+    }
+
     /// Complex host calls run as **one** fused call through the kernel
     /// selector (`zgemm_blocked` / `ozaki_zgemm_with`), so the four
     /// component products share packed panels instead of paying the
@@ -224,6 +234,7 @@ impl Dispatcher {
         };
         let mut full = HostCallInfo {
             kernel: self.cfg.kernels.kernel.name(),
+            isa: self.host_isa(mode),
             bands: self.cfg.kernels.bands_for(m, mr),
             ..Default::default()
         };
@@ -302,6 +313,7 @@ impl Dispatcher {
             };
             let mut info = HostCallInfo {
                 kernel: self.cfg.kernels.kernel.name(),
+                isa: self.host_isa(mode),
                 bands: self.cfg.kernels.bands_for(m, mr),
                 ..Default::default()
             };
@@ -509,7 +521,12 @@ mod tests {
         }
         let rep = d.report();
         let (_, s) = rep.sites.iter().next().unwrap();
-        assert_eq!(s.host_kernel, Some("blocked"));
+        assert_eq!(s.host_kernel, Some("auto"), "default selector is auto");
+        assert_eq!(
+            s.isa,
+            Some(crate::kernels::simd::detect().name()),
+            "emulated host calls surface the resolved microkernel ISA"
+        );
         assert!(s.bands >= 1);
         assert!(s.pack_s >= 0.0);
         assert!(
@@ -518,7 +535,7 @@ mod tests {
             s.cache_hits
         );
         let txt = rep.render();
-        assert!(txt.contains("blocked"));
+        assert!(txt.contains("auto"));
     }
 
     #[test]

@@ -2,16 +2,19 @@
 //! level down: once a GEMM stays on the host, *which* host
 //! implementation runs is a dispatch decision, not a hard-wired call.
 //!
-//! `Blocked` (default) routes to the packed, cache-blocked,
-//! multithreaded kernel core in [`crate::kernels`]; `Naive` keeps the
-//! textbook reference loops — useful as an A/B baseline and as the
-//! oracle in differential tests.  Both selections return bit-identical
-//! FP64-GEMM and Ozaki results (the kernels preserve the reference
-//! accumulation orders), so flipping the selector never changes
-//! numbers, only speed.
+//! `Auto` (default) routes to the packed, cache-blocked, multithreaded
+//! kernel core in [`crate::kernels`] with the best runtime-detected
+//! SIMD microkernel; `Simd` is the same but insists on an explicit
+//! vector ISA; `Blocked` pins the core to the scalar/autovectorized
+//! body (the PR-1/PR-2 kernel, useful for SIMD A/B runs); `Naive`
+//! keeps the textbook reference loops — the oracle in differential
+//! tests.  Every selection returns bit-identical FP64-GEMM and Ozaki
+//! results (the kernels preserve the reference accumulation orders and
+//! integer accumulation is exact), so flipping the selector never
+//! changes numbers, only speed.
 
 use crate::error::Result;
-use crate::kernels::{self, KernelConfig};
+use crate::kernels::{self, KernelConfig, SimdSelect};
 use crate::linalg::{self, Mat, ZMat};
 use crate::ozaki;
 
@@ -23,6 +26,10 @@ use crate::ozaki;
 pub struct HostCallInfo {
     /// `HostKernel::name()` of the implementation that ran.
     pub kernel: &'static str,
+    /// INT8 microkernel ISA that served the call (`scalar`, `avx2`,
+    /// ...); empty for the naive kernel and for FP64-mode calls, which
+    /// never enter the INT8 tile.
+    pub isa: &'static str,
     /// Row bands the blocked drivers used (1 for the naive kernel).
     pub bands: u64,
     /// Split/pack seconds attributed to this call.
@@ -33,29 +40,46 @@ pub struct HostCallInfo {
     pub cache_misses: u64,
 }
 
-/// Which host implementation serves non-offloaded calls.
+/// Which host implementation serves non-offloaded calls
+/// (`OZACCEL_HOST_KERNEL` / `run.host_kernel`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum HostKernel {
     /// Textbook reference loops (`dgemm_naive`, per-pair Ozaki).
     Naive,
-    /// Packed, blocked, multithreaded kernel core (`crate::kernels`).
+    /// Packed, blocked, multithreaded kernel core (`crate::kernels`)
+    /// pinned to the scalar/autovectorized INT8 body — the PR-1/PR-2
+    /// behaviour, kept as the SIMD A/B baseline.
     Blocked,
+    /// The blocked core with an explicit-SIMD INT8 microkernel; honours
+    /// a forced ISA in [`KernelConfig::simd`] and otherwise
+    /// auto-detects (falling back to scalar, with a warning, on
+    /// machines without vector units).
+    Simd,
+    /// The blocked core with whatever [`crate::kernels::simd::detect`]
+    /// finds — the default.
+    Auto,
 }
 
 impl HostKernel {
-    /// Parse CLI/config/env names.
+    /// Parse CLI/config/env names
+    /// (`naive` | `blocked` | `simd` | `auto`).
     pub fn parse(s: &str) -> Option<Self> {
         match s.trim().to_ascii_lowercase().as_str() {
             "naive" | "reference" => Some(HostKernel::Naive),
-            "blocked" | "packed" | "fast" => Some(HostKernel::Blocked),
+            "blocked" | "packed" => Some(HostKernel::Blocked),
+            "simd" | "vector" => Some(HostKernel::Simd),
+            "auto" | "fast" => Some(HostKernel::Auto),
             _ => None,
         }
     }
 
+    /// Stable lower-case label (PEAK report `kernel` column).
     pub fn name(self) -> &'static str {
         match self {
             HostKernel::Naive => "naive",
             HostKernel::Blocked => "blocked",
+            HostKernel::Simd => "simd",
+            HostKernel::Auto => "auto",
         }
     }
 }
@@ -63,22 +87,24 @@ impl HostKernel {
 /// The host-kernel routing decision plus its tiling/threading knobs.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct KernelSelector {
+    /// Which host implementation serves non-offloaded calls.
     pub kernel: HostKernel,
+    /// Tiling/threading/SIMD parameters handed to the blocked core.
     pub config: KernelConfig,
 }
 
 impl Default for KernelSelector {
     fn default() -> Self {
         KernelSelector {
-            kernel: HostKernel::Blocked,
+            kernel: HostKernel::Auto,
             config: KernelConfig::default(),
         }
     }
 }
 
 impl KernelSelector {
-    /// Default selector with `OZACCEL_HOST_KERNEL` applied on top
-    /// (`naive` | `blocked`; threads already honour `OZACCEL_THREADS`
+    /// Default selector with `OZACCEL_HOST_KERNEL` and `OZACCEL_SIMD`
+    /// applied on top (threads already honour `OZACCEL_THREADS`
     /// through [`KernelConfig::default`]).  Unparseable values keep the
     /// default but warn — `Default` cannot fail loudly the way
     /// `RunConfig::apply_env` does.
@@ -88,18 +114,58 @@ impl KernelSelector {
             match HostKernel::parse(&v) {
                 Some(k) => sel.kernel = k,
                 None => log::warn!(
-                    "ignoring invalid OZACCEL_HOST_KERNEL={v:?} (expected naive|blocked)"
+                    "ignoring invalid OZACCEL_HOST_KERNEL={v:?} \
+                     (expected naive|blocked|simd|auto)"
+                ),
+            }
+        }
+        if let Ok(v) = std::env::var("OZACCEL_SIMD") {
+            match SimdSelect::parse(&v) {
+                Some(s) => sel.config.simd = s,
+                None => log::warn!(
+                    "ignoring invalid OZACCEL_SIMD={v:?} \
+                     (expected scalar|auto|avx2|avx512|neon)"
                 ),
             }
         }
         sel
     }
 
+    /// The [`KernelConfig`] the blocked core actually receives: the
+    /// `Blocked` selection pins the scalar INT8 body, `Simd` promotes a
+    /// contradictory `simd = scalar` back to auto-detection, and
+    /// `Auto`/`Naive` pass the config through.
+    fn effective_config(&self) -> KernelConfig {
+        let mut cfg = self.config.clone();
+        match self.kernel {
+            HostKernel::Blocked => cfg.simd = SimdSelect::Scalar,
+            HostKernel::Simd => {
+                if cfg.simd == SimdSelect::Scalar {
+                    cfg.simd = SimdSelect::Auto;
+                }
+            }
+            HostKernel::Auto | HostKernel::Naive => {}
+        }
+        cfg
+    }
+
+    /// The INT8 microkernel ISA emulated host calls will run under this
+    /// selector — the PEAK report's `isa` column (`None` for the naive
+    /// kernel; FP64-mode calls never enter the INT8 tile and report no
+    /// ISA either).  The rare `i64` wide escape always runs scalar
+    /// regardless of this value.
+    pub fn resolved_isa(&self) -> Option<&'static str> {
+        match self.kernel {
+            HostKernel::Naive => None,
+            _ => Some(self.effective_config().simd.resolve().name()),
+        }
+    }
+
     /// Host FP64 GEMM through the selected kernel.
     pub fn dgemm(&self, a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
         match self.kernel {
             HostKernel::Naive => linalg::dgemm_naive(a, b),
-            HostKernel::Blocked => kernels::dgemm_blocked(a, b, &self.config),
+            _ => kernels::dgemm_blocked(a, b, &self.effective_config()),
         }
     }
 
@@ -107,7 +173,7 @@ impl KernelSelector {
     pub fn ozaki_dgemm(&self, a: &Mat<f64>, b: &Mat<f64>, splits: u32) -> Result<Mat<f64>> {
         match self.kernel {
             HostKernel::Naive => ozaki::ozaki_dgemm_naive(a, b, splits),
-            HostKernel::Blocked => ozaki::ozaki_dgemm_with(a, b, splits, &self.config),
+            _ => ozaki::ozaki_dgemm_with(a, b, splits, &self.effective_config()),
         }
     }
 
@@ -132,7 +198,7 @@ impl KernelSelector {
                 let ir = linalg::dgemm_naive(&ai, &br)?;
                 Ok(linalg::zcombine(&rr, &ii, &ri, &ir))
             }
-            HostKernel::Blocked => kernels::zgemm_blocked(a, b, &self.config),
+            _ => kernels::zgemm_blocked(a, b, &self.effective_config()),
         }
     }
 
@@ -154,7 +220,7 @@ impl KernelSelector {
                 let ir = ozaki::ozaki_dgemm_naive(&ai, &br, splits)?;
                 Ok(linalg::zcombine(&rr, &ii, &ri, &ir))
             }
-            HostKernel::Blocked => ozaki::ozaki_zgemm_with(a, b, splits, &self.config),
+            _ => ozaki::ozaki_zgemm_with(a, b, splits, &self.effective_config()),
         }
     }
 
@@ -165,7 +231,7 @@ impl KernelSelector {
     pub fn bands_for(&self, m: usize, mr: usize) -> u64 {
         match self.kernel {
             HostKernel::Naive => 1,
-            HostKernel::Blocked => {
+            _ => {
                 let tiles = m.div_ceil(mr.max(1));
                 kernels::band_count(tiles, self.config.threads) as u64
             }
@@ -183,8 +249,37 @@ mod tests {
         assert_eq!(HostKernel::parse("naive"), Some(HostKernel::Naive));
         assert_eq!(HostKernel::parse("BLOCKED"), Some(HostKernel::Blocked));
         assert_eq!(HostKernel::parse("packed"), Some(HostKernel::Blocked));
+        assert_eq!(HostKernel::parse("simd"), Some(HostKernel::Simd));
+        assert_eq!(HostKernel::parse("auto"), Some(HostKernel::Auto));
+        assert_eq!(HostKernel::parse("fast"), Some(HostKernel::Auto));
         assert_eq!(HostKernel::parse("gpu"), None);
         assert_eq!(HostKernel::Blocked.name(), "blocked");
+        assert_eq!(HostKernel::Auto.name(), "auto");
+    }
+
+    #[test]
+    fn effective_config_pins_and_promotes_simd() {
+        use crate::kernels::Isa;
+        let mut sel = KernelSelector::default();
+        assert_eq!(sel.kernel, HostKernel::Auto);
+        // Blocked pins the scalar oracle body regardless of config.
+        sel.kernel = HostKernel::Blocked;
+        assert_eq!(sel.resolved_isa(), Some("scalar"));
+        // Simd with a contradictory scalar config promotes to auto.
+        sel.kernel = HostKernel::Simd;
+        sel.config.simd = SimdSelect::Scalar;
+        assert_eq!(
+            sel.resolved_isa(),
+            Some(crate::kernels::simd::detect().name())
+        );
+        // A forced-but-unavailable ISA resolves to scalar, never UB.
+        sel.config.simd = SimdSelect::Force(Isa::Neon);
+        if !Isa::Neon.available() {
+            assert_eq!(sel.resolved_isa(), Some("scalar"));
+        }
+        // The naive kernel reports no ISA.
+        sel.kernel = HostKernel::Naive;
+        assert_eq!(sel.resolved_isa(), None);
     }
 
     #[test]
@@ -208,6 +303,20 @@ mod tests {
             naive.ozaki_dgemm(&a, &b, 5).unwrap().data(),
             blocked.ozaki_dgemm(&a, &b, 5).unwrap().data()
         );
+        // ... and the SIMD selections are bit-identical too (exact
+        // integer accumulation makes the ISA invisible in the bits).
+        for kernel in [HostKernel::Simd, HostKernel::Auto] {
+            let simd = KernelSelector {
+                kernel,
+                config: KernelConfig::with_threads(2),
+            };
+            assert_eq!(
+                naive.ozaki_dgemm(&a, &b, 5).unwrap().data(),
+                simd.ozaki_dgemm(&a, &b, 5).unwrap().data(),
+                "kernel={}",
+                kernel.name()
+            );
+        }
     }
 
     #[test]

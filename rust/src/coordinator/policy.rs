@@ -21,6 +21,7 @@ pub enum OffloadDecision {
 }
 
 impl OffloadDecision {
+    /// Whether the call goes to the device.
     pub fn offloaded(self) -> bool {
         matches!(self, OffloadDecision::Offload)
     }

@@ -8,25 +8,40 @@ use crate::ozaki::ComputeMode;
 /// Which BLAS entry point a call came through.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum GemmKind {
+    /// Real FP64 GEMM.
     Dgemm,
+    /// Complex FP64 GEMM (the 4-real-GEMM decomposition).
     Zgemm,
 }
 
 /// Aggregated run report.
 #[derive(Clone, Debug)]
 pub struct Report {
+    /// Compute mode the run was configured with.
     pub mode: ComputeMode,
+    /// Data-movement strategy that was modelled.
     pub strategy: DataMoveStrategy,
+    /// GPU the movement/compute models priced against.
     pub gpu_name: &'static str,
+    /// Total intercepted GEMM calls.
     pub total_calls: u64,
+    /// Calls routed to the device.
     pub offloaded_calls: u64,
+    /// Calls executed on the host.
     pub host_calls: u64,
+    /// FLOPs across all calls.
     pub total_flops: f64,
+    /// Wall seconds measured around the GEMMs themselves.
     pub measured_s: f64,
+    /// Modelled GPU compute seconds (offloaded calls).
     pub modeled_gpu_s: f64,
+    /// Modelled data-movement seconds (offloaded calls).
     pub modeled_move_s: f64,
+    /// Bytes the residency model says crossed the interconnect.
     pub moved_bytes: u64,
+    /// Page migrations the residency model counted.
     pub migrations: u64,
+    /// Per-call-site breakdown (the PEAK table).
     pub sites: SiteRegistry,
 }
 
@@ -46,7 +61,7 @@ impl Report {
             self.gpu_name
         ));
         out.push_str(&format!(
-            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>5} {:>10} {:>9}\n",
+            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>7} {:>5} {:>10} {:>9}\n",
             "call site",
             "calls",
             "offload",
@@ -55,13 +70,14 @@ impl Report {
             "gpu-model",
             "move-model",
             "kernel",
+            "isa",
             "bands",
             "pack",
             "cache h/m"
         ));
         for (site, s) in self.sites.iter() {
             out.push_str(&format!(
-                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>5} {:>9.4}s {:>9}\n",
+                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>7} {:>5} {:>9.4}s {:>9}\n",
                 site,
                 s.calls,
                 s.offloaded,
@@ -70,6 +86,7 @@ impl Report {
                 s.modeled_gpu_s,
                 s.modeled_move_s,
                 s.host_kernel.unwrap_or("-"),
+                s.isa.unwrap_or("-"),
                 s.bands,
                 s.pack_s,
                 format!("{}/{}", s.cache_hits, s.cache_misses),
@@ -110,7 +127,8 @@ mod tests {
             0.0,
             0.0,
             Some(HostCallInfo {
-                kernel: "blocked",
+                kernel: "simd",
+                isa: "avx2",
                 bands: 4,
                 pack_s: 0.05,
                 cache_hits: 2,
@@ -138,7 +156,9 @@ mod tests {
         assert!(txt.contains("lu.rs:88"));
         assert!(txt.contains("2 MiB"));
         assert!(txt.contains("kernel"), "header shows host-kernel column");
-        assert!(txt.contains("blocked"), "host kernel surfaced per site");
+        assert!(txt.contains("isa"), "header shows the microkernel ISA column");
+        assert!(txt.contains("simd"), "host kernel surfaced per site");
+        assert!(txt.contains("avx2"), "microkernel ISA surfaced per site");
         assert!(txt.contains("2/1"), "cache hits/misses surfaced");
         assert!((r.modeled_total_s() - 0.11).abs() < 1e-12);
     }

@@ -18,8 +18,11 @@ use crate::ozaki::ComputeMode;
 /// One policy's accuracy/cost point.
 #[derive(Clone, Debug)]
 pub struct AdaptiveAblation {
+    /// Policy label (`fixed_6`, `adaptive@1e-8`, ...).
     pub policy: String,
+    /// Max relative error of Re G vs the reference.
     pub max_real: f64,
+    /// Max relative error of Im G vs the reference.
     pub max_imag: f64,
     /// Total slice-pair products across the run, in units of one GEMM's
     /// products (relative cost; dgemm counts 0).

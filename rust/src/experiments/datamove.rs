@@ -17,10 +17,15 @@ use crate::ozaki::ComputeMode;
 /// One strategy's modelled cost.
 #[derive(Clone, Debug)]
 pub struct DataMoveRow {
+    /// Strategy label.
     pub strategy: &'static str,
+    /// GiB the model says crossed the link.
     pub moved_gib: f64,
+    /// Page migrations counted (first-touch only).
     pub migrations: u64,
+    /// Modelled movement seconds.
     pub modeled_move_s: f64,
+    /// Modelled GPU GEMM seconds (same for all strategies).
     pub modeled_gemm_s: f64,
 }
 

@@ -19,6 +19,7 @@ use crate::ozaki::ComputeMode;
 /// One mode's end-to-end timing.
 #[derive(Clone, Debug)]
 pub struct E2eTiming {
+    /// Mode label.
     pub mode: String,
     /// Wall seconds on this testbed.
     pub measured_s: f64,

@@ -16,18 +16,26 @@ use crate::ozaki::ComputeMode;
 /// One contour point's errors.
 #[derive(Clone, Copy, Debug)]
 pub struct Figure1Point {
+    /// Re z of the contour point.
     pub re_z: f64,
+    /// Im z of the contour point.
     pub im_z: f64,
+    /// Contour parameter θ of the point.
     pub theta: f64,
+    /// Relative error of Re G at the point.
     pub rel_real: f64,
+    /// Relative error of Im G at the point.
     pub rel_imag: f64,
+    /// Condition number estimate of the τ solve at the point.
     pub kappa: f64,
 }
 
 /// One split number's series.
 #[derive(Clone, Debug)]
 pub struct Figure1Series {
+    /// Split count the series was run with.
     pub splits: u32,
+    /// Per-contour-point errors.
     pub points: Vec<Figure1Point>,
 }
 

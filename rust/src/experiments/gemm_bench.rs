@@ -18,7 +18,9 @@ use crate::testing::Rng;
 /// One (mode, size) measurement.
 #[derive(Clone, Debug)]
 pub struct GemmBenchRow {
+    /// Mode label (`dgemm`, `int8_6`, ...).
     pub mode: String,
+    /// Square GEMM dimension.
     pub n: usize,
     /// Measured on the CPU-PJRT testbed, TFLOPS.
     pub measured_tflops: Option<f64>,

@@ -20,24 +20,33 @@ use crate::ozaki::ComputeMode;
 /// One (mode, iteration) cell group.
 #[derive(Clone, Debug)]
 pub struct Table1Cell {
+    /// Max relative error of Re G vs the dgemm reference.
     pub max_real: f64,
+    /// Max relative error of Im G vs the dgemm reference.
     pub max_imag: f64,
+    /// Total energy of the iteration.
     pub etot: f64,
+    /// Fermi energy of the iteration.
     pub efermi: f64,
 }
 
 /// One mode row (all iterations).
 #[derive(Clone, Debug)]
 pub struct Table1Row {
+    /// Mode label (`dgemm`, `int8_3`, ...).
     pub mode: String,
+    /// Per-iteration cells.
     pub cells: Vec<Table1Cell>,
 }
 
 /// The full table plus the raw SCF runs (Figure 1 reuses them).
 #[derive(Clone, Debug)]
 pub struct Table1 {
+    /// One row per compute mode.
     pub rows: Vec<Table1Row>,
+    /// The dgemm reference run.
     pub reference: ScfResult,
+    /// The emulated runs, one per split number.
     pub runs: Vec<ScfResult>,
 }
 

@@ -3,10 +3,14 @@
 //!
 //! The microkernel computes an `MR_I8 x NR_I8` register tile: per `p` it
 //! broadcasts `MR_I8` packed A values against `NR_I8` packed B values —
-//! the dp4a-style shape (SNIPPETS.md §1) LLVM turns into SIMD
-//! multiply-accumulate.  One generic implementation serves both
-//! accumulator widths through the [`Accum`] trait (`i32` on the exact
-//! fast path, `i64` past the overflow bound), so the escape path can
+//! the dp4a-style shape (SNIPPETS.md §1).  On the exact-`i32` fast path
+//! the tile body is **runtime-dispatched** through
+//! [`super::simd`]: explicit AVX2/AVX-512/NEON kernels when the machine
+//! has them (`KernelConfig::simd`, `run.simd`/`OZACCEL_SIMD`), the
+//! scalar/autovectorized body otherwise.  The scalar generic serves
+//! both accumulator widths through the crate-private `Accum` trait
+//! (`i32` oracle,
+//! `i64` past the overflow bound), so the escape path can
 //! never drift from the fast one.  The fused driver sweeps the packed
 //! panels once per output tile and accumulates *every* retained slice
 //! pair `k + l = d < splits` while the tile's operands are cache-hot,
@@ -25,6 +29,7 @@
 //! [`super::run_bands`].
 
 use super::pack::Panels;
+use super::simd::Microkernel;
 use super::{run_bands, KernelConfig};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
@@ -43,7 +48,7 @@ pub const MAX_EXACT_I32_TERMS: usize = (i32::MAX as usize) / (127 * 127);
 /// count stays under [`MAX_EXACT_I32_TERMS`], `i64` beyond.  Both
 /// widths share one microkernel and one diagonal-accumulation body, so
 /// the overflow-escape path is the same code as the fast path.
-trait Accum: Copy + Default {
+pub(crate) trait Accum: Copy + Default {
     fn from_i8(v: i8) -> Self;
     /// `self + a·b`, exact in the accumulator's range.
     fn mul_acc(self, a: Self, b: Self) -> Self;
@@ -80,8 +85,11 @@ impl Accum for i64 {
     }
 }
 
+/// The scalar/autovectorized microkernel body — the oracle the
+/// explicit-SIMD kernels in [`super::simd`] are pinned against, and the
+/// only body the rare `i64` wide-accumulator escape runs.
 #[inline]
-fn microkernel<A: Accum>(acc: &mut [[A; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
+pub(crate) fn microkernel<A: Accum>(acc: &mut [[A; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
     for (av, bv) in a_panel.chunks_exact(MR_I8).zip(b_panel.chunks_exact(NR_I8)) {
         for r in 0..MR_I8 {
             let ar = A::from_i8(av[r]);
@@ -95,7 +103,17 @@ fn microkernel<A: Accum>(acc: &mut [[A; NR_I8]; MR_I8], a_panel: &[i8], b_panel:
 
 /// Accumulate one anti-diagonal `d` of the fused sweep into `ctile`:
 /// `ctile += w · Σ_{kk=0..=d} A_kk · B_{d−kk}ᵀ` for the `(it, jt)`
-/// output tile, summed exactly in the integer accumulator `A`.
+/// output tile, summed exactly in the integer accumulator `A` by the
+/// given tile runner (`run` is the selected SIMD microkernel on the
+/// `i32` path, the scalar generic on the `i64` wide escape — one body
+/// serves both widths, so the escape path cannot drift from the fast
+/// one).
+///
+/// The KC block loop runs **outside** the slice-pair loop, so all
+/// `d+1` plane pairs stream the same `[k0, k1)` panel windows while
+/// they are cache-hot (KC-resident streaming on large-K GEMMs);
+/// integer accumulation is exact, so this reordering — like the ISA
+/// choice — cannot change a single bit.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn accumulate_diagonal<A: Accum>(
@@ -107,22 +125,21 @@ fn accumulate_diagonal<A: Accum>(
     ap: &Panels<i8>,
     bp: &Panels<i8>,
     kc: usize,
+    run: &dyn Fn(&mut [[A; NR_I8]; MR_I8], &[i8], &[i8]),
 ) {
     let k = ap.k();
     let mut acc = [[A::default(); NR_I8]; MR_I8];
-    for kk in 0..=d {
-        let apan = ap.panel(kk, a_tile);
-        let bpan = bp.panel(d - kk, jt);
-        let mut k0 = 0;
-        while k0 < k {
-            let k1 = (k0 + kc).min(k);
-            microkernel::<A>(
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + kc).min(k);
+        for kk in 0..=d {
+            run(
                 &mut acc,
-                &apan[k0 * MR_I8..k1 * MR_I8],
-                &bpan[k0 * NR_I8..k1 * NR_I8],
+                ap.panel_window(kk, a_tile, k0, k1),
+                bp.panel_window(d - kk, jt, k0, k1),
             );
-            k0 = k1;
         }
+        k0 = k1;
     }
     for r in 0..MR_I8 {
         for cc in 0..NR_I8 {
@@ -175,6 +192,7 @@ pub fn fused_ozaki_sweep(
     }
     // Worst-case terms per anti-diagonal accumulator: K·splits.
     let wide = ap.k().saturating_mul(weights.len()) > MAX_EXACT_I32_TERMS;
+    let mk = cfg.simd.resolve().microkernel();
 
     run_bands(
         c.data_mut(),
@@ -182,7 +200,7 @@ pub fn fused_ozaki_sweep(
         MR_I8,
         ap.tiles(),
         cfg.threads,
-        |band, tile0| fused_band(band, tile0, n, ap, bp, weights, cfg, wide),
+        |band, tile0| fused_band(band, tile0, n, ap, bp, weights, cfg, wide, mk),
     );
     Ok(c)
 }
@@ -199,6 +217,7 @@ fn fused_band(
     weights: &[f64],
     cfg: &KernelConfig,
     wide: bool,
+    mk: &dyn Microkernel,
 ) {
     let band_rows = c_band.len() / n;
     let band_tiles = band_rows.div_ceil(MR_I8);
@@ -229,6 +248,7 @@ fn fused_band(
                                 ap,
                                 bp,
                                 kc,
+                                &|acc, a, b| microkernel::<i64>(acc, a, b),
                             );
                         } else {
                             accumulate_diagonal::<i32>(
@@ -240,6 +260,7 @@ fn fused_band(
                                 ap,
                                 bp,
                                 kc,
+                                &|acc, a, b| mk.run(acc, a, b),
                             );
                         }
                     }
@@ -282,6 +303,7 @@ pub fn int8_gemm_blocked(a: &Mat<i8>, bt: &Mat<i8>, cfg: &KernelConfig) -> Resul
     }
     let ap = Panels::pack_planes(std::slice::from_ref(a), MR_I8);
     let bp = Panels::pack_planes(std::slice::from_ref(bt), NR_I8);
+    let mk = cfg.simd.resolve().microkernel();
 
     run_bands(
         c.data_mut(),
@@ -289,12 +311,22 @@ pub fn int8_gemm_blocked(a: &Mat<i8>, bt: &Mat<i8>, cfg: &KernelConfig) -> Resul
         MR_I8,
         ap.tiles(),
         cfg.threads,
-        |band, tile0| int8_band(band, tile0, n, &ap, &bp, cfg),
+        |band, tile0| int8_band(band, tile0, n, &ap, &bp, cfg, mk),
     );
     Ok(c)
 }
 
 /// One row band of the single-slice INT8 GEMM.
+///
+/// The KC block loop sits **outside** the tile loops: for each `[k0,
+/// k1)` contraction window the band revisits every output tile and
+/// adds the window's partial products into `c_band`, so the B-side
+/// slab of the current `jc` block (`nc_tiles · kc · NR_I8` bytes)
+/// stays cache-resident across all row tiles instead of the full-K
+/// panels being re-streamed from memory per tile.  Partial sums land
+/// directly in the `i32` output — exact, so the KC blocking (like
+/// threads and ISA) is invisible in the result bits.
+#[allow(clippy::too_many_arguments)]
 fn int8_band(
     c_band: &mut [i32],
     tile0: usize,
@@ -302,6 +334,7 @@ fn int8_band(
     ap: &Panels<i8>,
     bp: &Panels<i8>,
     cfg: &KernelConfig,
+    mk: &dyn Microkernel,
 ) {
     let band_rows = c_band.len() / n;
     let band_tiles = band_rows.div_ceil(MR_I8);
@@ -312,32 +345,27 @@ fn int8_band(
 
     for jc in (0..n_tiles).step_by(nc_tiles) {
         let jc_end = (jc + nc_tiles).min(n_tiles);
-        for it in 0..band_tiles {
-            let row0 = it * MR_I8;
-            let ilim = MR_I8.min(band_rows - row0);
-            let apan = ap.panel(0, tile0 + it);
-            for jt in jc..jc_end {
-                let col0 = jt * NR_I8;
-                let jlim = NR_I8.min(n - col0);
-                let bpan = bp.panel(0, jt);
-                let mut acc = [[0i32; NR_I8]; MR_I8];
-                let mut k0 = 0;
-                while k0 < k {
-                    let k1 = (k0 + kc).min(k);
-                    microkernel::<i32>(
-                        &mut acc,
-                        &apan[k0 * MR_I8..k1 * MR_I8],
-                        &bpan[k0 * NR_I8..k1 * NR_I8],
-                    );
-                    k0 = k1;
-                }
-                for r in 0..ilim {
-                    let base = (row0 + r) * n + col0;
-                    for (dst, src) in c_band[base..base + jlim].iter_mut().zip(&acc[r]) {
-                        *dst = *src;
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + kc).min(k);
+            for it in 0..band_tiles {
+                let row0 = it * MR_I8;
+                let ilim = MR_I8.min(band_rows - row0);
+                let awin = ap.panel_window(0, tile0 + it, k0, k1);
+                for jt in jc..jc_end {
+                    let col0 = jt * NR_I8;
+                    let jlim = NR_I8.min(n - col0);
+                    let mut acc = [[0i32; NR_I8]; MR_I8];
+                    mk.run(&mut acc, awin, bp.panel_window(0, jt, k0, k1));
+                    for r in 0..ilim {
+                        let base = (row0 + r) * n + col0;
+                        for (dst, src) in c_band[base..base + jlim].iter_mut().zip(&acc[r]) {
+                            *dst += *src;
+                        }
                     }
                 }
             }
+            k0 = k1;
         }
     }
 }

@@ -9,13 +9,19 @@
 //!   two short contiguous vectors; packing itself runs as parallel
 //!   tile-block tasks on the persistent worker pool
 //!   ([`crate::runtime::pool`]) when `pack_parallel` is set;
-//! * [`int8`] — the INT8 register-tile microkernel (one generic
-//!   implementation over `i32`/`i64` accumulators), the blocked
+//! * [`int8`] — the INT8 register-tile microkernel, the blocked
 //!   single-slice GEMM ([`int8_gemm_blocked`]), and the **fused
 //!   multi-slice driver** ([`fused_ozaki_sweep`]) that accumulates every
 //!   retained slice pair `k+l = d` in one sweep over the packed panels
 //!   with an automatic i64 escape past the exact-i32 bound
-//!   ([`MAX_EXACT_I32_TERMS`]);
+//!   ([`MAX_EXACT_I32_TERMS`]); both walk KC-resident panel windows
+//!   ([`pack::Panels::panel_window`]) so large-K GEMMs stream from
+//!   cache;
+//! * [`simd`] — explicit AVX2/AVX-512/NEON INT8 microkernels behind
+//!   the [`Microkernel`] trait, runtime-dispatched per
+//!   [`KernelConfig::simd`] with the scalar body as the
+//!   always-available fallback and oracle (bit-identical by exact
+//!   integer accumulation);
 //! * [`fp64`] — the FP64 and fused-complex kernels on the same
 //!   infrastructure ([`dgemm_blocked`], [`zgemm_blocked`]);
 //! * [`panel_cache`] — a capacity-bounded, content-addressed reuse
@@ -40,9 +46,11 @@ pub mod fp64;
 pub mod int8;
 pub mod pack;
 pub mod panel_cache;
+pub mod simd;
 
 pub use fp64::{dgemm_blocked, zgemm_blocked, MR_C64, MR_F64, NR_C64, NR_F64};
 pub use int8::{fused_ozaki_sweep, int8_gemm_blocked, MAX_EXACT_I32_TERMS, MR_I8, NR_I8};
+pub use simd::{available_isas, Isa, Microkernel, SimdSelect};
 pub use pack::{
     pack_cols_c64, pack_cols_c64_mt, pack_cols_f64, pack_cols_f64_mt, pack_rows_c64,
     pack_rows_c64_mt, pack_rows_f64, pack_rows_f64_mt, Panels,
@@ -69,6 +77,12 @@ pub struct KernelConfig {
     /// Packed-panel reuse cache budget in MiB (`run.panel_cache_mb`);
     /// 0 disables the cache.
     pub panel_cache_mb: usize,
+    /// INT8 microkernel ISA routing (`run.simd` / `OZACCEL_SIMD`):
+    /// [`SimdSelect::Auto`] picks the best runtime-detected ISA,
+    /// [`SimdSelect::Scalar`] pins the autovectorized oracle body.
+    /// Results are bit-identical either way (exact integer
+    /// accumulation); only speed changes.
+    pub simd: SimdSelect,
 }
 
 impl Default for KernelConfig {
@@ -80,6 +94,7 @@ impl Default for KernelConfig {
             threads: default_threads(),
             pack_parallel: true,
             panel_cache_mb: panel_cache::DEFAULT_CAPACITY_MB,
+            simd: SimdSelect::Auto,
         }
     }
 }
@@ -195,6 +210,8 @@ mod tests {
         assert!(c.mc >= MR_I8 && c.nc >= NR_I8 && c.kc >= 1 && c.threads >= 1);
         assert!(c.pack_parallel);
         assert_eq!(c.panel_cache_mb, panel_cache::DEFAULT_CAPACITY_MB);
+        assert_eq!(c.simd, SimdSelect::Auto);
+        assert!(c.simd.resolve().available());
     }
 
     #[test]

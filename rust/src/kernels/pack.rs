@@ -85,6 +85,7 @@ impl<T: Copy + Default> Panels<T> {
         out
     }
 
+    /// Number of slice planes packed (1 for plain FP64/complex GEMM).
     #[inline]
     pub fn planes(&self) -> usize {
         self.planes
@@ -96,11 +97,13 @@ impl<T: Copy + Default> Panels<T> {
         self.rows
     }
 
+    /// Contraction depth packed per panel.
     #[inline]
     pub fn k(&self) -> usize {
         self.k
     }
 
+    /// Logical rows per tile (`MR`/`NR` of the consuming microkernel).
     #[inline]
     pub fn tile(&self) -> usize {
         self.tile
@@ -146,6 +149,21 @@ impl<T: Copy + Default> Panels<T> {
         let stride = self.panel_stride();
         let base = (s * self.tiles + t) * stride;
         &self.data[base..base + stride]
+    }
+
+    /// The contiguous `[k0, k1)` contraction window of panel `(s, t)` —
+    /// the KC-resident slab the blocked drivers stream.  Because panels
+    /// are k-major, a K window is a contiguous byte range; the drivers
+    /// walk these windows with the KC loop outside the tile/slice-pair
+    /// loops so one window's worth of panel data is reused while
+    /// cache-hot instead of panels spanning the full K being re-read
+    /// per output tile.
+    #[inline]
+    pub fn panel_window(&self, s: usize, t: usize, k0: usize, k1: usize) -> &[T] {
+        debug_assert!(k0 <= k1 && k1 <= self.k);
+        let stride = self.panel_stride();
+        let base = (s * self.tiles + t) * stride;
+        &self.data[base + k0 * self.tile..base + k1 * self.tile]
     }
 
     /// Write one element (used by the packers; zero-padding stays).
@@ -316,6 +334,19 @@ mod tests {
         assert_eq!(p.tiles(), 2);
         assert_eq!(p.panel(0, 0), &[0.0, 10.0, 1.0, 11.0]);
         assert_eq!(p.panel(0, 1), &[20.0, 0.0, 21.0, 0.0]);
+    }
+
+    #[test]
+    fn panel_windows_tile_the_full_panel() {
+        let m = Mat::from_fn(5, 7, |i, j| (i * 7 + j) as i8);
+        let p = Panels::pack_planes(std::slice::from_ref(&m), 4);
+        for (k0, k1) in [(0usize, 7usize), (0, 3), (3, 7), (2, 2), (6, 7)] {
+            assert_eq!(p.panel_window(0, 0, k0, k1), &p.panel(0, 0)[k0 * 4..k1 * 4]);
+            assert_eq!(p.panel_window(0, 1, k0, k1), &p.panel(0, 1)[k0 * 4..k1 * 4]);
+        }
+        // concatenating adjacent windows reproduces the whole panel
+        let whole: Vec<i8> = [p.panel_window(0, 0, 0, 4), p.panel_window(0, 0, 4, 7)].concat();
+        assert_eq!(whole.as_slice(), p.panel(0, 0));
     }
 
     #[test]

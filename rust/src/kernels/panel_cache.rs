@@ -42,7 +42,9 @@ pub const DEFAULT_CAPACITY_MB: usize = 64;
 /// pack time, so a B-side hit skips the transpose too).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Side {
+    /// Row-major A operand, packed with the `MR` tile.
     A,
+    /// Column-packed B operand (transposed at pack time), `NR` tile.
     B,
 }
 
@@ -67,8 +69,11 @@ struct Entry {
 /// pack time and cache traffic to call sites).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CacheStats {
+    /// Lookups served from the cache.
     pub hits: u64,
+    /// Lookups that had to pack fresh panels.
     pub misses: u64,
+    /// Entries dropped to stay within the capacity bound.
     pub evictions: u64,
     /// Seconds spent packing (cache misses and uncached packs).
     pub pack_s: f64,
@@ -84,6 +89,7 @@ pub struct PanelCache {
 }
 
 impl PanelCache {
+    /// Empty cache with the given byte capacity (0 caches nothing).
     pub fn new(capacity_bytes: usize) -> Self {
         PanelCache {
             map: HashMap::new(),
@@ -109,10 +115,12 @@ impl PanelCache {
         self.map.len()
     }
 
+    /// Whether the cache holds no entries.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Cumulative counters (hits/misses/evictions/pack seconds).
     pub fn stats(&self) -> CacheStats {
         self.stats
     }

@@ -1,0 +1,558 @@
+//! Explicit-SIMD INT8 microkernels with runtime ISA dispatch.
+//!
+//! The INT8 register tile used to rely on LLVM autovectorizing the
+//! scalar `MR_I8 x NR_I8` dp4a-style body in [`super::int8`]; this
+//! module replaces that hope with hand-written vector kernels behind a
+//! small [`Microkernel`] trait:
+//!
+//! * **AVX2** (x86-64, runtime-detected): sign-extend two consecutive
+//!   `p` steps of the packed B panel to `i16` pairs, then
+//!   `vpmaddwd` (`_mm256_madd_epi16`) against a broadcast A pair —
+//!   two multiply-adds per lane per instruction, no saturation
+//!   anywhere (`127·127·2 < 2¹⁵·2` fits the instruction's exact `i32`
+//!   output), accumulated with exact `i32` adds;
+//! * **AVX-512 VNNI** (x86-64, behind the `avx512` cargo feature and
+//!   runtime detection): the same pair layout through
+//!   `_mm256_dpwssd_epi32`, fusing the multiply-add-accumulate into
+//!   one instruction;
+//! * **NEON** (aarch64): `vmull_s8` widening multiplies with `i32`
+//!   widening accumulation;
+//! * **scalar** — the original autovectorized body, always available,
+//!   and the oracle every vector kernel is pinned against.
+//!
+//! Selection is a *dispatch decision*, not a compile-time fork:
+//! [`SimdSelect`] (the `run.simd` / `OZACCEL_SIMD` knob, threaded
+//! through [`super::KernelConfig`]) resolves to an [`Isa`] via
+//! [`detect`], which probes `is_x86_feature_detected!` once per
+//! process.  The resolved ISA is surfaced per call site in the PEAK
+//! report.
+//!
+//! **Exactness.**  Every kernel accumulates `i8·i8` products in `i32`
+//! integer arithmetic, which is associative and commutative as long as
+//! no intermediate sum overflows — and the Ozaki drivers only enter the
+//! `i32` path under the worst-case bound
+//! [`super::MAX_EXACT_I32_TERMS`], where *no* ordering of the partial
+//! sums can wrap.  Bit-for-bit equality across scalar/AVX2/AVX-512/NEON
+//! (and any tiling or thread count) is therefore provable, not
+//! aspirational; `tests/kernels_equivalence.rs` pins it anyway.  The
+//! `i64` wide-accumulator escape past the bound always runs the scalar
+//! body — it is exact by the same argument, and too rare to vectorize.
+
+use super::int8::{microkernel, MR_I8, NR_I8};
+
+// The vector bodies below hard-code the 4-row x 8-column register tile
+// (one 256-bit lane row per accumulator row, 8-byte B loads).  Retuning
+// the tile must be a compile error here, not out-of-bounds UB in the
+// unsafe blocks.
+const _: () = assert!(MR_I8 == 4 && NR_I8 == 8);
+
+/// One INT8→`i32` register-tile microkernel implementation.
+///
+/// `run` computes `acc[r][c] += Σ_p a_panel[p·MR+r] · b_panel[p·NR+c]`
+/// over the k-major packed panels (`a_panel.len() = k·MR_I8`,
+/// `b_panel.len() = k·NR_I8`) — the contract of the scalar body in
+/// [`super::int8`], which every implementation must match bit-for-bit
+/// (exact integer arithmetic makes any summation order equivalent).
+pub trait Microkernel: Send + Sync {
+    /// ISA label shown in the PEAK report (`scalar`, `avx2`, ...).
+    fn name(&self) -> &'static str;
+    /// Accumulate one packed `MR_I8 x NR_I8` tile over the given panels.
+    fn run(&self, acc: &mut [[i32; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]);
+}
+
+/// The instruction set a resolved microkernel targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// Portable scalar/autovectorized body — always available; the
+    /// oracle the vector kernels are verified against.
+    Scalar,
+    /// AVX2 `vpmaddwd` kernel (x86-64).
+    Avx2,
+    /// AVX-512 VNNI `vpdpwssd` kernel (x86-64; compiled only with the
+    /// `avx512` cargo feature).
+    Avx512,
+    /// NEON widening-multiply kernel (aarch64).
+    Neon,
+}
+
+impl Isa {
+    /// Stable lower-case label (`scalar` | `avx2` | `avx512` | `neon`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse an ISA label (the `run.simd` / `OZACCEL_SIMD` values other
+    /// than `scalar`/`auto`).
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "avx512" | "avx512vnni" => Some(Isa::Avx512),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this ISA can run on the current machine and build
+    /// (compile-time gates and the runtime CPUID probe both count).
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => std::is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            Isa::Avx2 => false,
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            Isa::Avx512 => {
+                std::is_x86_feature_detected!("avx512vl")
+                    && std::is_x86_feature_detected!("avx512vnni")
+            }
+            #[cfg(not(all(target_arch = "x86_64", feature = "avx512")))]
+            Isa::Avx512 => false,
+            Isa::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// The microkernel implementing this ISA.  Defensively returns the
+    /// scalar body when the ISA is unavailable (callers resolve through
+    /// [`SimdSelect::resolve`], which warns on that fallback).
+    pub fn microkernel(self) -> &'static dyn Microkernel {
+        if !self.available() {
+            return &SCALAR;
+        }
+        match self {
+            Isa::Scalar => &SCALAR,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => &AVX2,
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            Isa::Avx512 => &AVX512,
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => &NEON,
+            #[allow(unreachable_patterns)]
+            _ => &SCALAR,
+        }
+    }
+}
+
+/// Best ISA the current machine supports, probed once per process
+/// (CPUID via `is_x86_feature_detected!`; the result is cached because
+/// kernel selection sits on the per-GEMM hot path).
+pub fn detect() -> Isa {
+    static BEST: once_cell::sync::Lazy<Isa> = once_cell::sync::Lazy::new(|| {
+        for isa in [Isa::Avx512, Isa::Avx2, Isa::Neon] {
+            if isa.available() {
+                return isa;
+            }
+        }
+        Isa::Scalar
+    });
+    *BEST
+}
+
+/// Every ISA runnable on this machine and build, scalar first — the
+/// iteration set of the cross-ISA equivalence tests and benches.
+pub fn available_isas() -> Vec<Isa> {
+    [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon]
+        .into_iter()
+        .filter(|isa| isa.available())
+        .collect()
+}
+
+/// The SIMD routing policy carried by [`super::KernelConfig`]
+/// (`run.simd` / `OZACCEL_SIMD`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdSelect {
+    /// Always the scalar/autovectorized body (the PR-1/PR-2 kernel —
+    /// what `OZACCEL_HOST_KERNEL=blocked` runs).
+    Scalar,
+    /// Best ISA [`detect`] finds at runtime (the default).
+    Auto,
+    /// A specific ISA; falls back to scalar with a warning when the
+    /// machine or build cannot run it.
+    Force(Isa),
+}
+
+impl SimdSelect {
+    /// Parse `scalar` | `auto` | `avx2` | `avx512` | `neon`.
+    pub fn parse(s: &str) -> Option<SimdSelect> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" | "off" => Some(SimdSelect::Scalar),
+            "auto" | "on" => Some(SimdSelect::Auto),
+            other => Isa::parse(other).map(SimdSelect::Force),
+        }
+    }
+
+    /// Resolve the policy to the ISA that will actually run here.
+    pub fn resolve(self) -> Isa {
+        match self {
+            SimdSelect::Scalar => Isa::Scalar,
+            SimdSelect::Auto => detect(),
+            SimdSelect::Force(isa) => {
+                if isa.available() {
+                    isa
+                } else {
+                    // resolve() sits on the per-GEMM hot path (and runs
+                    // again in the dispatcher's ISA accounting): warn
+                    // once per process, not once per call.
+                    static WARNED: std::sync::Once = std::sync::Once::new();
+                    WARNED.call_once(|| {
+                        log::warn!(
+                            "requested SIMD ISA {:?} unavailable on this machine/build; \
+                             falling back to scalar",
+                            isa.name()
+                        );
+                    });
+                    Isa::Scalar
+                }
+            }
+        }
+    }
+}
+
+struct ScalarKernel;
+
+static SCALAR: ScalarKernel = ScalarKernel;
+
+impl Microkernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+    #[inline]
+    fn run(&self, acc: &mut [[i32; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
+        microkernel::<i32>(acc, a_panel, b_panel);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+struct Avx2Kernel;
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Avx2Kernel = Avx2Kernel;
+
+#[cfg(target_arch = "x86_64")]
+impl Microkernel for Avx2Kernel {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+    #[inline]
+    fn run(&self, acc: &mut [[i32; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
+        // Safety: this instance is only reachable through
+        // `Isa::microkernel`, which verified AVX2 via CPUID.
+        unsafe { x86::run_avx2(acc, a_panel, b_panel) }
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+struct Avx512Kernel;
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+static AVX512: Avx512Kernel = Avx512Kernel;
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+impl Microkernel for Avx512Kernel {
+    fn name(&self) -> &'static str {
+        "avx512"
+    }
+    #[inline]
+    fn run(&self, acc: &mut [[i32; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
+        // Safety: reachable only via `Isa::microkernel` after the
+        // avx512vl+avx512vnni CPUID probe.
+        unsafe { x86::run_avx512(acc, a_panel, b_panel) }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+struct NeonKernel;
+
+#[cfg(target_arch = "aarch64")]
+static NEON: NeonKernel = NeonKernel;
+
+#[cfg(target_arch = "aarch64")]
+impl Microkernel for NeonKernel {
+    fn name(&self) -> &'static str {
+        "neon"
+    }
+    #[inline]
+    fn run(&self, acc: &mut [[i32; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
+        // Safety: NEON is mandatory on aarch64.
+        unsafe { neon::run_neon(acc, a_panel, b_panel) }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{MR_I8, NR_I8};
+
+    /// Two sign-extended `i8` values packed as the `(lo, hi)` `i16`
+    /// halves of one `i32` lane — the broadcast operand of
+    /// `vpmaddwd`/`vpdpwssd`.
+    #[inline(always)]
+    fn pair16(lo: i8, hi: i8) -> i32 {
+        ((lo as i16 as u16 as u32) | ((hi as i16 as u16 as u32) << 16)) as i32
+    }
+
+    /// AVX2 microkernel body.  Processes two contraction steps per
+    /// iteration: B columns for `p` and `p+1` are interleaved into
+    /// `i16` pairs and `_mm256_madd_epi16` computes
+    /// `a[p]·b[p] + a[p+1]·b[p+1]` per output lane in exact `i32`.
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2 is available on the running CPU.
+    #[target_feature(enable = "avx2,sse4.1")]
+    pub(super) unsafe fn run_avx2(
+        acc: &mut [[i32; NR_I8]; MR_I8],
+        a_panel: &[i8],
+        b_panel: &[i8],
+    ) {
+        use std::arch::x86_64::*;
+        let k = b_panel.len() / NR_I8;
+        debug_assert_eq!(a_panel.len(), k * MR_I8);
+        debug_assert_eq!(b_panel.len(), k * NR_I8);
+        let ap = a_panel.as_ptr();
+        let bp = b_panel.as_ptr();
+        let mut c0 = _mm256_loadu_si256(acc[0].as_ptr() as *const __m256i);
+        let mut c1 = _mm256_loadu_si256(acc[1].as_ptr() as *const __m256i);
+        let mut c2 = _mm256_loadu_si256(acc[2].as_ptr() as *const __m256i);
+        let mut c3 = _mm256_loadu_si256(acc[3].as_ptr() as *const __m256i);
+        let mut p = 0usize;
+        while p + 2 <= k {
+            let b0 = _mm_cvtepi8_epi16(_mm_loadl_epi64(bp.add(p * NR_I8) as *const __m128i));
+            let b1 = _mm_cvtepi8_epi16(_mm_loadl_epi64(bp.add((p + 1) * NR_I8) as *const __m128i));
+            let bpair =
+                _mm256_set_m128i(_mm_unpackhi_epi16(b0, b1), _mm_unpacklo_epi16(b0, b1));
+            let a0 = ap.add(p * MR_I8);
+            let a1 = ap.add((p + 1) * MR_I8);
+            c0 = _mm256_add_epi32(
+                c0,
+                _mm256_madd_epi16(_mm256_set1_epi32(pair16(*a0, *a1)), bpair),
+            );
+            c1 = _mm256_add_epi32(
+                c1,
+                _mm256_madd_epi16(_mm256_set1_epi32(pair16(*a0.add(1), *a1.add(1))), bpair),
+            );
+            c2 = _mm256_add_epi32(
+                c2,
+                _mm256_madd_epi16(_mm256_set1_epi32(pair16(*a0.add(2), *a1.add(2))), bpair),
+            );
+            c3 = _mm256_add_epi32(
+                c3,
+                _mm256_madd_epi16(_mm256_set1_epi32(pair16(*a0.add(3), *a1.add(3))), bpair),
+            );
+            p += 2;
+        }
+        if p < k {
+            // Odd-K tail: pair the last step with zeros (0·x adds
+            // nothing, exactly).
+            let b0 = _mm_cvtepi8_epi16(_mm_loadl_epi64(bp.add(p * NR_I8) as *const __m128i));
+            let z = _mm_setzero_si128();
+            let bpair = _mm256_set_m128i(_mm_unpackhi_epi16(b0, z), _mm_unpacklo_epi16(b0, z));
+            let a0 = ap.add(p * MR_I8);
+            c0 = _mm256_add_epi32(
+                c0,
+                _mm256_madd_epi16(_mm256_set1_epi32(pair16(*a0, 0)), bpair),
+            );
+            c1 = _mm256_add_epi32(
+                c1,
+                _mm256_madd_epi16(_mm256_set1_epi32(pair16(*a0.add(1), 0)), bpair),
+            );
+            c2 = _mm256_add_epi32(
+                c2,
+                _mm256_madd_epi16(_mm256_set1_epi32(pair16(*a0.add(2), 0)), bpair),
+            );
+            c3 = _mm256_add_epi32(
+                c3,
+                _mm256_madd_epi16(_mm256_set1_epi32(pair16(*a0.add(3), 0)), bpair),
+            );
+        }
+        _mm256_storeu_si256(acc[0].as_mut_ptr() as *mut __m256i, c0);
+        _mm256_storeu_si256(acc[1].as_mut_ptr() as *mut __m256i, c1);
+        _mm256_storeu_si256(acc[2].as_mut_ptr() as *mut __m256i, c2);
+        _mm256_storeu_si256(acc[3].as_mut_ptr() as *mut __m256i, c3);
+    }
+
+    /// AVX-512 VNNI microkernel body: identical pair layout to
+    /// [`run_avx2`], with `_mm256_dpwssd_epi32` fusing the
+    /// multiply-add-accumulate into one instruction.
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX-512VL + AVX-512VNNI availability.
+    #[cfg(feature = "avx512")]
+    #[target_feature(enable = "avx512vnni,avx512vl,avx2,sse4.1")]
+    pub(super) unsafe fn run_avx512(
+        acc: &mut [[i32; NR_I8]; MR_I8],
+        a_panel: &[i8],
+        b_panel: &[i8],
+    ) {
+        use std::arch::x86_64::*;
+        let k = b_panel.len() / NR_I8;
+        debug_assert_eq!(a_panel.len(), k * MR_I8);
+        let ap = a_panel.as_ptr();
+        let bp = b_panel.as_ptr();
+        let mut c0 = _mm256_loadu_si256(acc[0].as_ptr() as *const __m256i);
+        let mut c1 = _mm256_loadu_si256(acc[1].as_ptr() as *const __m256i);
+        let mut c2 = _mm256_loadu_si256(acc[2].as_ptr() as *const __m256i);
+        let mut c3 = _mm256_loadu_si256(acc[3].as_ptr() as *const __m256i);
+        let mut p = 0usize;
+        while p + 2 <= k {
+            let b0 = _mm_cvtepi8_epi16(_mm_loadl_epi64(bp.add(p * NR_I8) as *const __m128i));
+            let b1 = _mm_cvtepi8_epi16(_mm_loadl_epi64(bp.add((p + 1) * NR_I8) as *const __m128i));
+            let bpair =
+                _mm256_set_m128i(_mm_unpackhi_epi16(b0, b1), _mm_unpacklo_epi16(b0, b1));
+            let a0 = ap.add(p * MR_I8);
+            let a1 = ap.add((p + 1) * MR_I8);
+            c0 = _mm256_dpwssd_epi32(c0, _mm256_set1_epi32(pair16(*a0, *a1)), bpair);
+            c1 = _mm256_dpwssd_epi32(c1, _mm256_set1_epi32(pair16(*a0.add(1), *a1.add(1))), bpair);
+            c2 = _mm256_dpwssd_epi32(c2, _mm256_set1_epi32(pair16(*a0.add(2), *a1.add(2))), bpair);
+            c3 = _mm256_dpwssd_epi32(c3, _mm256_set1_epi32(pair16(*a0.add(3), *a1.add(3))), bpair);
+            p += 2;
+        }
+        if p < k {
+            let b0 = _mm_cvtepi8_epi16(_mm_loadl_epi64(bp.add(p * NR_I8) as *const __m128i));
+            let z = _mm_setzero_si128();
+            let bpair = _mm256_set_m128i(_mm_unpackhi_epi16(b0, z), _mm_unpacklo_epi16(b0, z));
+            let a0 = ap.add(p * MR_I8);
+            c0 = _mm256_dpwssd_epi32(c0, _mm256_set1_epi32(pair16(*a0, 0)), bpair);
+            c1 = _mm256_dpwssd_epi32(c1, _mm256_set1_epi32(pair16(*a0.add(1), 0)), bpair);
+            c2 = _mm256_dpwssd_epi32(c2, _mm256_set1_epi32(pair16(*a0.add(2), 0)), bpair);
+            c3 = _mm256_dpwssd_epi32(c3, _mm256_set1_epi32(pair16(*a0.add(3), 0)), bpair);
+        }
+        _mm256_storeu_si256(acc[0].as_mut_ptr() as *mut __m256i, c0);
+        _mm256_storeu_si256(acc[1].as_mut_ptr() as *mut __m256i, c1);
+        _mm256_storeu_si256(acc[2].as_mut_ptr() as *mut __m256i, c2);
+        _mm256_storeu_si256(acc[3].as_mut_ptr() as *mut __m256i, c3);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{MR_I8, NR_I8};
+
+    /// NEON microkernel body: per contraction step, `vmull_s8` widens
+    /// the `i8` products to `i16x8` and two widening adds fold them
+    /// into the `i32` accumulators — every operation exact.
+    ///
+    /// # Safety
+    /// NEON must be available (always true on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn run_neon(
+        acc: &mut [[i32; NR_I8]; MR_I8],
+        a_panel: &[i8],
+        b_panel: &[i8],
+    ) {
+        use std::arch::aarch64::*;
+        let k = b_panel.len() / NR_I8;
+        debug_assert_eq!(a_panel.len(), k * MR_I8);
+        let ap = a_panel.as_ptr();
+        let bp = b_panel.as_ptr();
+        let mut clo = [
+            vld1q_s32(acc[0].as_ptr()),
+            vld1q_s32(acc[1].as_ptr()),
+            vld1q_s32(acc[2].as_ptr()),
+            vld1q_s32(acc[3].as_ptr()),
+        ];
+        let mut chi = [
+            vld1q_s32(acc[0].as_ptr().add(4)),
+            vld1q_s32(acc[1].as_ptr().add(4)),
+            vld1q_s32(acc[2].as_ptr().add(4)),
+            vld1q_s32(acc[3].as_ptr().add(4)),
+        ];
+        for p in 0..k {
+            let bv = vld1_s8(bp.add(p * NR_I8));
+            for r in 0..MR_I8 {
+                let av = vdup_n_s8(*ap.add(p * MR_I8 + r));
+                let prod = vmull_s8(av, bv);
+                clo[r] = vaddw_s16(clo[r], vget_low_s16(prod));
+                chi[r] = vaddw_s16(chi[r], vget_high_s16(prod));
+            }
+        }
+        for r in 0..MR_I8 {
+            vst1q_s32(acc[r].as_mut_ptr(), clo[r]);
+            vst1q_s32(acc[r].as_mut_ptr().add(4), chi[r]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    fn rand_panels(rng: &mut Rng, k: usize) -> (Vec<i8>, Vec<i8>) {
+        let a: Vec<i8> = (0..k * MR_I8)
+            .map(|_| (rng.index(0, 255) as i32 - 127) as i8)
+            .collect();
+        let b: Vec<i8> = (0..k * NR_I8)
+            .map(|_| (rng.index(0, 255) as i32 - 127) as i8)
+            .collect();
+        (a, b)
+    }
+
+    #[test]
+    fn every_available_isa_matches_scalar_bitwise() {
+        let mut rng = Rng::new(0x51D);
+        // Odd and even K exercise the paired-step tail handling.
+        for k in [0usize, 1, 2, 3, 7, 8, 33, 64, 129] {
+            let (a, b) = rand_panels(&mut rng, k);
+            let mut want = [[123i32; NR_I8]; MR_I8]; // nonzero: += not =
+            SCALAR.run(&mut want, &a, &b);
+            for isa in available_isas() {
+                let mut got = [[123i32; NR_I8]; MR_I8];
+                isa.microkernel().run(&mut got, &a, &b);
+                assert_eq!(got, want, "isa={} k={k}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn saturated_inputs_stay_exact_on_every_isa() {
+        // Worst-case ±127 panels: the largest per-step magnitudes the
+        // pair instructions must represent without saturating.
+        let k = 1000usize;
+        let a = vec![127i8; k * MR_I8];
+        let b = vec![-127i8; k * NR_I8];
+        for isa in available_isas() {
+            let mut acc = [[0i32; NR_I8]; MR_I8];
+            isa.microkernel().run(&mut acc, &a, &b);
+            for row in &acc {
+                for &v in row {
+                    assert_eq!(v, -(k as i32) * 127 * 127, "isa={}", isa.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn detect_and_selects_resolve_sanely() {
+        assert!(detect().available());
+        assert_eq!(SimdSelect::Scalar.resolve(), Isa::Scalar);
+        assert_eq!(SimdSelect::Auto.resolve(), detect());
+        // Forcing an unavailable ISA falls back to scalar instead of
+        // executing illegal instructions.
+        for isa in [Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            let r = SimdSelect::Force(isa).resolve();
+            if isa.available() {
+                assert_eq!(r, isa);
+            } else {
+                assert_eq!(r, Isa::Scalar);
+            }
+        }
+        assert!(available_isas().contains(&Isa::Scalar));
+    }
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(SimdSelect::parse("auto"), Some(SimdSelect::Auto));
+        assert_eq!(SimdSelect::parse("SCALAR"), Some(SimdSelect::Scalar));
+        assert_eq!(SimdSelect::parse("avx2"), Some(SimdSelect::Force(Isa::Avx2)));
+        assert_eq!(SimdSelect::parse("mmx"), None);
+        assert_eq!(Isa::parse("sse9"), None);
+    }
+}

@@ -24,8 +24,12 @@
 //! layer:
 //!
 //! * operands are packed **once** into k-major tile panels (slice-major
-//!   across the INT8 planes), then streamed by register-tile
-//!   microkernels that LLVM autovectorizes; the pack itself runs as
+//!   across the INT8 planes), then streamed in KC-resident windows by
+//!   register-tile microkernels; the INT8 tile body is **explicit
+//!   SIMD** ([`kernels::simd`]: AVX2, feature-gated AVX-512 VNNI, NEON)
+//!   runtime-dispatched per machine, with the scalar/autovectorized
+//!   body as the always-available fallback and oracle — bit-identical
+//!   by exact integer accumulation; the pack itself runs as
 //!   parallel tile-block tasks (`run.pack_parallel`, on by default);
 //! * the Ozaki path uses a **fused multi-slice driver**: every retained
 //!   slice pair `k + l = d < splits` is accumulated in a single sweep
@@ -43,15 +47,21 @@
 //!   LU trailing updates, the four re/im component products of a
 //!   complex GEMM, SCF iterations — skip the split/pack stage, with
 //!   aliasing and in-place mutation handled by content fingerprints;
-//! * tiling is governed by [`kernels::KernelConfig`] (`mc`/`nc`/`kc`);
-//!   the coordinator picks implementations through a
-//!   [`coordinator::KernelSelector`] (`OZACCEL_HOST_KERNEL=naive` keeps
-//!   the textbook reference loops for A/B runs) and surfaces kernel
-//!   choice, band counts, pack time, and cache traffic in the PEAK
-//!   per-site report.
+//! * tiling is governed by [`kernels::KernelConfig`] (`mc`/`nc`/`kc`,
+//!   `run.kc`); the coordinator picks implementations through a
+//!   [`coordinator::KernelSelector`]
+//!   (`OZACCEL_HOST_KERNEL=naive|blocked|simd|auto`, plus
+//!   `OZACCEL_SIMD`/`run.simd` to pin a microkernel ISA) and surfaces
+//!   kernel choice, microkernel ISA, band counts, pack time, and cache
+//!   traffic in the PEAK per-site report.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! model once, and the Rust binary is self-contained afterwards.
+//!
+//! User-facing documentation lives in the repository: `README.md` for
+//! the quickstart, `docs/CONFIG.md` for the full env-var/config-key
+//! reference, and `docs/ARCHITECTURE.md` for the pipeline-to-module
+//! map and the invariants refactors must preserve.
 //!
 //! ## Quick start
 //!
@@ -70,6 +80,21 @@
 //! let c = disp.dgemm(&a, &b).unwrap();
 //! # let _ = c;
 //! ```
+//!
+//! ## Examples
+//!
+//! Four runnable walkthroughs live under `examples/` (run with
+//! `cargo run --release --example <name>`):
+//!
+//! * `quickstart` — the snippet above, end to end, with the PEAK
+//!   report printed;
+//! * `must_scf` — the MuST-mini SCF loop under emulated precision;
+//! * `adaptive_precision` — per-call split selection from a target
+//!   accuracy;
+//! * `offload_trace` — the routing decisions and data-movement model
+//!   on a synthetic workload.
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod cli;

@@ -46,16 +46,19 @@ impl<T: Copy + Default> Mat<T> {
         Ok(Mat { rows, cols, data })
     }
 
+    /// Number of rows.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Whether rows == cols.
     #[inline]
     pub fn is_square(&self) -> bool {
         self.rows == self.cols
@@ -67,6 +70,7 @@ impl<T: Copy + Default> Mat<T> {
         &self.data
     }
 
+    /// Flat row-major data, mutable.
     #[inline]
     pub fn data_mut(&mut self) -> &mut [T] {
         &mut self.data
@@ -77,12 +81,14 @@ impl<T: Copy + Default> Mat<T> {
         self.data
     }
 
+    /// Element `(i, j)` (bounds checked in debug builds).
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> T {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j]
     }
 
+    /// Overwrite element `(i, j)` (bounds checked in debug builds).
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: T) {
         debug_assert!(i < self.rows && j < self.cols);
@@ -95,6 +101,7 @@ impl<T: Copy + Default> Mat<T> {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Borrow row `i` as a mutable slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [T] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]

@@ -162,6 +162,7 @@ impl CLuFactors {
 /// Result of the mixed-precision solve.
 #[derive(Clone, Debug)]
 pub struct IrResult {
+    /// The refined solution.
     pub x: ZMat,
     /// Refinement iterations actually taken.
     pub iters: usize,

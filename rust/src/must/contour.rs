@@ -11,6 +11,7 @@ use crate::complex::c64;
 /// One quadrature node on the contour.
 #[derive(Clone, Copy, Debug)]
 pub struct ContourPoint {
+    /// Complex energy of the node.
     pub z: c64,
     /// Quadrature weight including dz (complex).
     pub w: c64,
@@ -21,8 +22,11 @@ pub struct ContourPoint {
 /// Semicircular contour from `e_bottom` to `e_top`.
 #[derive(Clone, Debug)]
 pub struct Contour {
+    /// Band-bottom endpoint, Ry.
     pub e_bottom: f64,
+    /// Upper endpoint, Ry.
     pub e_top: f64,
+    /// Quadrature nodes, counterclockwise.
     pub points: Vec<ContourPoint>,
 }
 
@@ -56,10 +60,12 @@ impl Contour {
         }
     }
 
+    /// Number of quadrature nodes.
     pub fn len(&self) -> usize {
         self.points.len()
     }
 
+    /// Whether the contour has no nodes.
     pub fn is_empty(&self) -> bool {
         self.points.is_empty()
     }

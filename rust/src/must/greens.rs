@@ -20,6 +20,7 @@ pub struct GreensCalculator {
 }
 
 impl GreensCalculator {
+    /// Calculator for angular momenta up to `lmax`.
     pub fn new(lmax: i32) -> Self {
         GreensCalculator { lmax }
     }
@@ -55,7 +56,9 @@ impl GreensCalculator {
 /// |G_dgemm − G_int8| / |G_dgemm| applied componentwise.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct GErr {
+    /// Relative error of the real part.
     pub rel_real: f64,
+    /// Relative error of the imaginary part.
     pub rel_imag: f64,
 }
 

@@ -3,7 +3,9 @@
 /// A cluster of atomic sites (positions in bohr).
 #[derive(Clone, Debug)]
 pub struct Cluster {
+    /// Lattice constant, bohr.
     pub alat: f64,
+    /// Site positions, bohr.
     pub sites: Vec<[f64; 3]>,
 }
 
@@ -37,10 +39,12 @@ impl Cluster {
         Cluster { alat, sites: pts }
     }
 
+    /// Number of sites.
     pub fn len(&self) -> usize {
         self.sites.len()
     }
 
+    /// Whether the cluster has no sites.
     pub fn is_empty(&self) -> bool {
         self.sites.is_empty()
     }

@@ -32,7 +32,9 @@ pub struct CaseParams {
     pub eta_dos: f64,
     /// DOS mesh for the Fermi search: [dos_emin, dos_emax] with n_dos pts.
     pub dos_emin: f64,
+    /// Upper end of the DOS mesh, Ry.
     pub dos_emax: f64,
+    /// Number of DOS mesh points.
     pub n_dos: usize,
     /// Blocked-LU panel width (64 ⇒ trailing updates hit the artifact
     /// buckets exactly).

@@ -29,18 +29,26 @@ pub enum ModeSelect {
 /// One evaluated energy point.
 #[derive(Clone, Copy, Debug)]
 pub struct PointRecord {
+    /// Complex energy of the contour point.
     pub z: c64,
+    /// Contour parameter θ of the point.
     pub theta: f64,
+    /// Site-diagonal Green's function at the point.
     pub g: c64,
+    /// Condition number estimate of the τ solve.
     pub kappa: f64,
-    pub splits_used: u32, // 0 = native dgemm
+    /// Split count the point was evaluated with (0 = native dgemm).
+    pub splits_used: u32,
 }
 
 /// One SCF iteration's outputs (one Table-1 cell group).
 #[derive(Clone, Debug)]
 pub struct IterationResult {
+    /// Evaluated contour points.
     pub points: Vec<PointRecord>,
+    /// Total energy of the iteration.
     pub etot: f64,
+    /// Fermi energy of the iteration.
     pub efermi: f64,
     /// DOS samples (energy, n(E)) used for the Fermi search.
     pub dos: Vec<(f64, f64)>,
@@ -49,12 +57,15 @@ pub struct IterationResult {
 /// Full SCF run.
 #[derive(Clone, Debug)]
 pub struct ScfResult {
+    /// Mode label the run executed under.
     pub mode_name: String,
+    /// Per-iteration outputs.
     pub iterations: Vec<IterationResult>,
 }
 
 /// The MuST-mini driver.
 pub struct ScfDriver<'a> {
+    /// Case parameters the driver was built with.
     pub params: CaseParams,
     sc: StructureConstants,
     greens: GreensCalculator,
@@ -109,6 +120,7 @@ impl<'a> ScfDriver<'a> {
         })
     }
 
+    /// The structure constants the driver evaluates τ against.
     pub fn structure(&self) -> &StructureConstants {
         &self.sc
     }

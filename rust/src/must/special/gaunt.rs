@@ -34,8 +34,11 @@ pub fn gaunt(l1: i32, m1: i32, l2: i32, m2: i32, l3: i32, m3: i32) -> f64 {
 /// One coupling term: (l'', m'') channel with its Gaunt factor.
 #[derive(Clone, Copy, Debug)]
 pub struct GauntTerm {
+    /// l'' of the coupled channel.
     pub lpp: i32,
+    /// m'' of the coupled channel.
     pub mpp: i32,
+    /// The Gaunt factor.
     pub coeff: f64,
 }
 
@@ -82,6 +85,7 @@ impl GauntTable {
         GauntTable { lmax, terms }
     }
 
+    /// Angular-momentum cutoff the table was built for.
     pub fn lmax(&self) -> i32 {
         self.lmax
     }

@@ -30,6 +30,7 @@ pub struct StructureConstants {
 }
 
 impl StructureConstants {
+    /// Build for a cluster and angular-momentum cutoff.
     pub fn new(cluster: Cluster, lmax: i32) -> Self {
         StructureConstants {
             cluster,
@@ -38,6 +39,7 @@ impl StructureConstants {
         }
     }
 
+    /// The cluster geometry.
     pub fn cluster(&self) -> &Cluster {
         &self.cluster
     }

@@ -27,12 +27,16 @@ pub struct TauResult {
 
 /// τ-matrix solver bound to a dispatcher.
 pub struct TauSolver<'a> {
+    /// Structure constants of the cluster.
     pub sc: &'a StructureConstants,
+    /// Case parameters (lmax, nb, ...).
     pub params: &'a CaseParams,
+    /// Coordinator every GEMM of the solve flows through.
     pub dispatcher: &'a Dispatcher,
 }
 
 impl<'a> TauSolver<'a> {
+    /// Bind a solver to its inputs.
     pub fn new(
         sc: &'a StructureConstants,
         params: &'a CaseParams,

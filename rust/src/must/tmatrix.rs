@@ -32,6 +32,7 @@ pub struct TMatrix {
 }
 
 impl TMatrix {
+    /// Single-site scattering model from the case parameters.
     pub fn new(p: &CaseParams) -> Self {
         TMatrix {
             lmax: p.lmax,
@@ -83,6 +84,7 @@ impl TMatrix {
         self.t(l, z).inv()
     }
 
+    /// Angular-momentum cutoff.
     pub fn lmax(&self) -> i32 {
         self.lmax
     }

@@ -15,8 +15,9 @@ pub enum ComputeMode {
     Int8 { splits: u32 },
 }
 
-/// Split numbers ozIMMU supports.
+/// Smallest split number the `fp64_int8_<s>` syntax accepts.
 pub const MIN_SPLITS: u32 = 3;
+/// Largest split number the `fp64_int8_<s>` syntax accepts.
 pub const MAX_SPLITS: u32 = 18;
 
 impl ComputeMode {
@@ -96,6 +97,45 @@ mod tests {
                     "fp16", "", "fp64_int8_-3", "fp64_int8_3.5"] {
             assert!(ComputeMode::parse(bad).is_err(), "{bad:?} accepted");
         }
+    }
+
+    #[test]
+    fn rejects_malformed_split_suffixes() {
+        // Every split just outside the supported window, both sides.
+        for s in [0u64, 1, 2, 19, 20, 100, u32::MAX as u64 + 1] {
+            let m = format!("fp64_int8_{s}");
+            assert!(ComputeMode::parse(&m).is_err(), "{m:?} accepted");
+        }
+        // Suffixes that are not a u32 at all: embedded whitespace,
+        // trailing junk, hex, overflow past u32, unicode digits.
+        for bad in [
+            "fp64_int8_ 6",
+            "fp64_int8_6 x",
+            "fp64_int8_6x",
+            "fp64_int8_0x6",
+            "fp64_int8_99999999999999999999",
+            "fp64_int8_٦",
+            "fp64_int8_6_",
+            "fp64__int8_6",
+            "FP64_INT8",
+        ] {
+            assert!(ComputeMode::parse(bad).is_err(), "{bad:?} accepted");
+        }
+        // Leading/trailing whitespace around the whole mode is trimmed,
+        // matching the env-var ergonomics...
+        assert_eq!(
+            ComputeMode::parse("  fp64_int8_6  ").unwrap(),
+            ComputeMode::Int8 { splits: 6 }
+        );
+        // ...but the boundary values themselves stay accepted.
+        assert_eq!(
+            ComputeMode::parse("fp64_int8_3").unwrap().splits(),
+            Some(3)
+        );
+        assert_eq!(
+            ComputeMode::parse("fp64_int8_18").unwrap().splits(),
+            Some(18)
+        );
     }
 
     #[test]

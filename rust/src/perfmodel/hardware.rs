@@ -16,6 +16,7 @@ pub struct LinkSpec {
 /// GPU compute + memory specification.
 #[derive(Clone, Copy, Debug)]
 pub struct GpuSpec {
+    /// Marketing name (`GH200`, `GB200`) shown in reports.
     pub name: &'static str,
     /// Peak FP64 (vector+matrix) throughput, TFLOPS.
     pub fp64_tflops: f64,

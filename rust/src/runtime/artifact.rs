@@ -32,10 +32,15 @@ impl ArtifactKind {
 /// One manifest entry.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Artifact {
+    /// Compute mode the artifact was lowered for.
     pub kind: ArtifactKind,
+    /// Rows of A the artifact was shaped for.
     pub m: usize,
+    /// Contraction depth the artifact was shaped for.
     pub k: usize,
+    /// Columns of B the artifact was shaped for.
     pub n: usize,
+    /// HLO text file, relative to the artifact directory.
     pub path: PathBuf,
 }
 
@@ -135,6 +140,7 @@ impl Manifest {
         self.by_kind.values().map(|v| v.len()).sum()
     }
 
+    /// Whether the manifest lists no artifacts at all.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -25,8 +25,11 @@ pub struct Runtime {
 /// Counters for the §Perf analysis.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RuntimeStats {
+    /// HLO artifacts compiled (first execution per shape bucket).
     pub compiles: u64,
+    /// Total executable invocations.
     pub executions: u64,
+    /// Executions that padded operands up to a larger bucket.
     pub padded_executions: u64,
 }
 

@@ -236,6 +236,7 @@ unsafe impl<T: Send> Send for SendPtr<T> {}
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
+    /// The wrapped raw pointer.
     #[inline]
     pub fn get(self) -> *mut T {
         self.0

@@ -15,6 +15,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded generator (same seed, same sequence).
     pub fn new(seed: u64) -> Self {
         Rng {
             state: seed.wrapping_add(0x9E3779B97F4A7C15),

@@ -3,11 +3,15 @@
 //! tall/skinny, degenerate) and thread counts.  These pin the
 //! bit-for-bit contracts the dispatcher's `KernelSelector` and the
 //! PJRT integration suite rely on — including the persistent worker
-//! pool, the parallel split/pack stage, and the packed-panel reuse
-//! cache added in PR 2.
+//! pool, the parallel split/pack stage, the packed-panel reuse
+//! cache added in PR 2, and (PR 3) the explicit-SIMD microkernel
+//! dispatch: every available ISA × thread count × KC blocking must
+//! reproduce the scalar oracle's bits exactly.
 
 use ozaccel::coordinator::{DispatchConfig, Dispatcher, HostKernel, KernelSelector};
-use ozaccel::kernels::{dgemm_blocked, int8_gemm_blocked, KernelConfig, MR_I8, NR_I8};
+use ozaccel::kernels::{
+    available_isas, dgemm_blocked, int8_gemm_blocked, KernelConfig, SimdSelect, MR_I8, NR_I8,
+};
 use ozaccel::linalg::{dgemm_naive, zgemm_naive, Mat, ZMat};
 use ozaccel::ozaki::{int8_gemm_i32, ozaki_dgemm, ozaki_dgemm_naive, ComputeMode};
 use ozaccel::testing::Rng;
@@ -135,6 +139,107 @@ fn complex_blocked_matches_naive_within_rounding() {
                 assert!((*x - *y).abs() <= 1e-12 * scale);
             }
         }
+    }
+}
+
+#[test]
+fn every_isa_thread_count_and_kc_blocking_is_bit_identical_int8() {
+    // The acceptance bar of the SIMD dispatch: scalar, AVX2 (and any
+    // other detected ISA) × all thread counts × KC blockings produce
+    // the unblocked oracle's bits exactly, including ragged tails and
+    // odd K (the paired-step tail of the vector kernels).
+    let mut rng = Rng::new(163);
+    for (m, k, n) in [
+        (1usize, 1usize, 1usize),
+        (MR_I8 + 1, 7, NR_I8 + 1),
+        (9, 16, 11),
+        (17, 33, 9),
+        (32, 65, 24),
+    ] {
+        let a = rand_i8(&mut rng, m, k);
+        let bt = rand_i8(&mut rng, n, k);
+        let want = int8_gemm_i32(&a, &bt).unwrap();
+        for isa in available_isas() {
+            for threads in [1usize, 3, 8] {
+                for kc in [1usize, 7, 64, 1024] {
+                    let cfg = KernelConfig {
+                        kc,
+                        simd: SimdSelect::Force(isa),
+                        ..KernelConfig::with_threads(threads)
+                    };
+                    let got = int8_gemm_blocked(&a, &bt, &cfg).unwrap();
+                    assert_eq!(
+                        got.data(),
+                        want.data(),
+                        "{m}x{k}x{n} isa={} threads={threads} kc={kc}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_isa_matches_the_naive_ozaki_oracle() {
+    // Same bar for the fused multi-slice driver: the SIMD microkernel,
+    // the KC-resident slice-pair reordering, and the i64 wide escape
+    // all reproduce the per-pair reference bit-for-bit.
+    let mut rng = Rng::new(167);
+    let a = rand_f64(&mut rng, 23, 31);
+    let b = rand_f64(&mut rng, 31, 18);
+    for splits in [3u32, 6] {
+        let want = ozaki_dgemm_naive(&a, &b, splits).unwrap();
+        for isa in available_isas() {
+            for threads in [1usize, 4] {
+                for kc in [5usize, 256] {
+                    let cfg = KernelConfig {
+                        kc,
+                        simd: SimdSelect::Force(isa),
+                        panel_cache_mb: 0,
+                        ..KernelConfig::with_threads(threads)
+                    };
+                    let got = ozaccel::ozaki::ozaki_dgemm_with(&a, &b, splits, &cfg).unwrap();
+                    assert_eq!(
+                        got.data(),
+                        want.data(),
+                        "s={splits} isa={} threads={threads} kc={kc}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_and_auto_selector_paths_match_naive_end_to_end() {
+    // The new OZACCEL_HOST_KERNEL values dispatch through the selector
+    // with unchanged numbers in both compute modes.
+    let mut rng = Rng::new(173);
+    let a = rand_f64(&mut rng, 24, 24);
+    let b = rand_f64(&mut rng, 24, 24);
+    let naive = KernelSelector {
+        kernel: HostKernel::Naive,
+        config: KernelConfig::single_threaded(),
+    };
+    for kernel in [HostKernel::Blocked, HostKernel::Simd, HostKernel::Auto] {
+        let sel = KernelSelector {
+            kernel,
+            config: KernelConfig::with_threads(4),
+        };
+        assert_eq!(
+            naive.dgemm(&a, &b).unwrap().data(),
+            sel.dgemm(&a, &b).unwrap().data(),
+            "dgemm kernel={}",
+            kernel.name()
+        );
+        assert_eq!(
+            naive.ozaki_dgemm(&a, &b, 5).unwrap().data(),
+            sel.ozaki_dgemm(&a, &b, 5).unwrap().data(),
+            "ozaki kernel={}",
+            kernel.name()
+        );
     }
 }
 
