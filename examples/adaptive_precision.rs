@@ -1,14 +1,17 @@
-//! Tunable precision in action (paper §4's proposal): solve the
-//! MuST-mini τ-matrix along the energy contour with the adaptive
-//! policy — few splits where the KKR matrix is well-conditioned, many
-//! near the 0.72 Ry resonance — and compare against fixed splits.
+//! Tunable precision in action (paper §4's proposal, measured rather
+//! than assumed): solve the MuST-mini τ-matrix along the energy contour
+//! under the *feedback* precision governor — the split count is seeded
+//! from the a-priori error bound, then FP64 probes and the measured
+//! condition number ramp it per call site: few splits where the KKR
+//! matrix is well-conditioned, many near the 0.72 Ry resonance.
 //!
 //! Run with `cargo run --release --example adaptive_precision`.
 
-use ozaccel::coordinator::{AdaptivePolicy, DispatchConfig, Dispatcher};
+use ozaccel::coordinator::{DispatchConfig, Dispatcher};
 use ozaccel::must::params::{mt_u56_mini, tiny_case};
 use ozaccel::must::scf::{ModeSelect, ScfDriver};
 use ozaccel::ozaki::ComputeMode;
+use ozaccel::precision::{PrecisionConfig, PrecisionMode};
 
 fn main() -> ozaccel::Result<()> {
     ozaccel::logging::init();
@@ -16,16 +19,17 @@ fn main() -> ozaccel::Result<()> {
     let mut case = if quick { tiny_case() } else { mt_u56_mini() };
     case.iterations = 1;
 
-    let dispatcher = Dispatcher::new(DispatchConfig::host_only(ComputeMode::Dgemm))?;
-    let driver = ScfDriver::new(case, &dispatcher)?;
-
-    let policy = AdaptivePolicy {
+    let mut cfg = DispatchConfig::host_only(ComputeMode::Int8 { splits: 18 });
+    cfg.precision = PrecisionConfig {
+        mode: PrecisionMode::Feedback,
         target: 1e-9,
         ..Default::default()
     };
-    let run = driver.run(ModeSelect::Adaptive(policy))?;
+    let dispatcher = Dispatcher::new(cfg)?;
+    let driver = ScfDriver::new(case, &dispatcher)?;
+    let run = driver.run(ModeSelect::Governed)?;
 
-    println!("per-energy-point split choice (target rel err 1e-9):\n");
+    println!("per-energy-point split choice (feedback governor, target 1e-9):\n");
     println!("   Re(z)    Im(z)     kappa(est)   splits");
     for p in &run.iterations[0].points {
         let bar = "#".repeat(p.splits_used as usize);
@@ -45,5 +49,17 @@ fn main() -> ozaccel::Result<()> {
          everywhere; cost scales with s(s+1)/2 per GEMM (paper §4:\n\
          \"minimizing splits while maintaining accuracy is critical\")."
     );
+    // The governor's own per-site view: calibrated error constant,
+    // last fed κ, probe count, and the decision trajectory.
+    println!("\ngovernor state per call site:");
+    for (site, snap) in dispatcher.governor().snapshots() {
+        println!(
+            "  {site}: splits {:>2}  kappa {:.2e}  calib {:.3}  probes {}  trajectory {:?}",
+            snap.splits, snap.kappa, snap.calib, snap.probes, snap.trajectory
+        );
+    }
+    // The PEAK report shows the execution-side footprint per call site:
+    // the split trajectory (`splits`) and the probe cost (`probe_ms`).
+    println!("\n{}", dispatcher.report().render());
     Ok(())
 }

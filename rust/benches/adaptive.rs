@@ -1,27 +1,34 @@
-//! E6 bench — the adaptive-precision ablation (paper §4 future work):
+//! E6 bench — the precision-governor ablation (paper §4 made real):
 //! accuracy and slice-pair-product cost of fixed split counts vs the
-//! condition-driven adaptive policy.
-//! Run with `cargo bench --bench adaptive`.
+//! a-priori and feedback governors.
+//! Run with `cargo bench --bench adaptive` (`--quick` for the tiny
+//! case, `--json` writes BENCH_precision.json).
 
-use ozaccel::coordinator::{DispatchConfig, Dispatcher};
-use ozaccel::experiments::{adaptive, run_adaptive_ablation};
+use ozaccel::coordinator::DispatchConfig;
+use ozaccel::experiments::{adaptive, run_precision_ablation};
 use ozaccel::must::params::{mt_u56_mini, tiny_case};
 use ozaccel::ozaki::ComputeMode;
 
 fn main() {
     ozaccel::logging::init();
     let quick = std::env::args().any(|a| a == "--quick");
+    let json = std::env::args().any(|a| a == "--json");
     let case = if quick { tiny_case() } else { mt_u56_mini() };
-    let dispatcher =
-        Dispatcher::new(DispatchConfig::host_only(ComputeMode::Dgemm)).expect("dispatcher");
+    let base = DispatchConfig::host_only(ComputeMode::Dgemm);
     let fixed: Vec<u32> = if quick { vec![4, 6, 8] } else { vec![3, 4, 5, 6, 7, 8] };
-    let rows = run_adaptive_ablation(&case, &dispatcher, &fixed, &[1e-6, 1e-9, 1e-12])
-        .expect("ablation");
-    println!("== E6: fixed vs adaptive split policy (accuracy vs INT8 work) ==");
+    let targets: &[f64] = if quick { &[1e-8] } else { &[1e-6, 1e-9, 1e-12] };
+    let rows = run_precision_ablation(&case, &base, &fixed, targets).expect("ablation");
+    println!("== E6: fixed vs governed split policy (accuracy vs INT8 work) ==");
     println!("{}", adaptive::render(&rows));
     println!(
-        "reading: adaptive rows should sit on or below the fixed-split\n\
+        "reading: governed rows should sit on or below the fixed-split\n\
          accuracy/cost frontier — same worst-case error with fewer\n\
-         slice-pair products (ozIMMU cost scales with s(s+1)/2)."
+         slice-pair products (ozIMMU cost scales with s(s+1)/2); the\n\
+         feedback rows additionally show what the probes cost."
     );
+    if json {
+        let path = std::path::Path::new("BENCH_precision.json");
+        std::fs::write(path, adaptive::to_json(&rows)).expect("write BENCH_precision.json");
+        println!("wrote {}", path.display());
+    }
 }

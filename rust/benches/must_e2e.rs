@@ -6,6 +6,7 @@
 use ozaccel::coordinator::{DispatchConfig, Dispatcher};
 use ozaccel::experiments::{e2e_time, run_e2e_timing};
 use ozaccel::must::params::{mt_u56_mini, tiny_case};
+use ozaccel::must::scf::ModeSelect;
 use ozaccel::ozaki::ComputeMode;
 use ozaccel::perfmodel::GB200;
 
@@ -15,7 +16,10 @@ fn main() {
     let mut case = if quick { tiny_case() } else { mt_u56_mini() };
     case.iterations = 1;
 
-    let modes = [ComputeMode::Dgemm, ComputeMode::Int8 { splits: 6 }];
+    let modes = [
+        ModeSelect::Fixed(ComputeMode::Dgemm),
+        ModeSelect::Fixed(ComputeMode::Int8 { splits: 6 }),
+    ];
 
     for gpu in ["GH200", "GB200"] {
         let mut cfg = DispatchConfig::default();

@@ -15,6 +15,28 @@ use crate::kernels::SimdSelect;
 use crate::must::params::{mt_u56_mini, tiny_case, CaseParams};
 use crate::ozaki::ComputeMode;
 use crate::perfmodel::{GB200, GH200};
+use crate::precision::PrecisionMode;
+
+/// Keys accepted under `[precision]` — anything else under that table
+/// is rejected loudly instead of being silently ignored.
+const PRECISION_KEYS: &[&str] = &[
+    "mode",
+    "target",
+    "min_splits",
+    "max_splits",
+    "up_threshold",
+    "down_threshold",
+    "cooldown",
+    "probe_rows",
+    "probe_period",
+];
+
+/// Keys accepted under the legacy `[adaptive]` table (value aliases for
+/// `precision.*`).  They intentionally do NOT switch the governor on:
+/// the old `adaptive.target` never changed execution by itself either —
+/// policies only took effect where code opted in — so activation stays
+/// explicit via `precision.mode` / `OZACCEL_PRECISION`.
+const ADAPTIVE_ALIAS_KEYS: &[&str] = &["target", "min_splits", "max_splits"];
 
 /// Full run configuration for the `ozaccel` binary.
 #[derive(Clone, Debug)]
@@ -131,11 +153,94 @@ impl RunConfig {
         if let Some(v) = lookup(&table, "run.output_dir") {
             cfg.output_dir = PathBuf::from(v.as_str()?);
         }
-        if let Some(v) = lookup(&table, "adaptive.target") {
-            let mut pol = cfg.dispatch.adaptive.unwrap_or_default();
-            pol.target = v.as_f64()?;
-            cfg.dispatch.adaptive = Some(pol);
+        // Unknown keys under [precision] / [adaptive] are config bugs:
+        // reject them loudly before interpreting the known ones.
+        for key in table.keys() {
+            // a scalar where a table is expected (e.g. `precision =
+            // "feedback"` under [run]) would otherwise be ignored
+            if matches!(key.as_str(), "precision" | "run.precision" | "adaptive" | "run.adaptive")
+            {
+                return Err(Error::Config(format!(
+                    "{key:?} is a table, not a scalar — write e.g. \
+                     [precision] with mode = \"feedback\""
+                )));
+            }
+            let prec_rest = key
+                .strip_prefix("run.precision.")
+                .or_else(|| key.strip_prefix("precision."));
+            if let Some(rest) = prec_rest {
+                if !PRECISION_KEYS.contains(&rest) {
+                    return Err(Error::Config(format!(
+                        "unknown precision key {key:?} (expected one of {PRECISION_KEYS:?})"
+                    )));
+                }
+            }
+            let adap_rest = key
+                .strip_prefix("run.adaptive.")
+                .or_else(|| key.strip_prefix("adaptive."));
+            if let Some(rest) = adap_rest {
+                if !ADAPTIVE_ALIAS_KEYS.contains(&rest) {
+                    return Err(Error::Config(format!(
+                        "unknown adaptive key {key:?} (expected one of {ADAPTIVE_ALIAS_KEYS:?}; \
+                         [adaptive] is a legacy alias for [precision])"
+                    )));
+                }
+            }
         }
+        // Legacy [adaptive] value aliases first (precision.* wins).
+        // They deliberately leave `precision.mode` untouched: the old
+        // `adaptive.target` key configured a policy without changing
+        // what fixed-mode runs executed, and flipping the governor on
+        // implicitly would silently retune explicit Table-1/Figure-1
+        // split sweeps.
+        let adap = |name: &str| {
+            lookup(&table, &format!("adaptive.{name}"))
+                .or_else(|| lookup(&table, &format!("run.adaptive.{name}")))
+        };
+        if let Some(v) = adap("target") {
+            cfg.dispatch.precision.target = v.as_f64()?;
+        }
+        if let Some(v) = adap("min_splits") {
+            cfg.dispatch.precision.min_splits = toml_u32(v, "adaptive.min_splits")?;
+        }
+        if let Some(v) = adap("max_splits") {
+            cfg.dispatch.precision.max_splits = toml_u32(v, "adaptive.max_splits")?;
+        }
+        // `[precision]` and `[run.precision]` are interchangeable (the
+        // rustdoc names the keys `run.precision.*`).
+        let prec = |name: &str| {
+            lookup(&table, &format!("precision.{name}"))
+                .or_else(|| lookup(&table, &format!("run.precision.{name}")))
+        };
+        if let Some(v) = prec("mode") {
+            cfg.dispatch.precision.mode = PrecisionMode::parse(v.as_str()?)?;
+        }
+        if let Some(v) = prec("target") {
+            cfg.dispatch.precision.target = v.as_f64()?;
+        }
+        if let Some(v) = prec("min_splits") {
+            cfg.dispatch.precision.min_splits = toml_u32(v, "precision.min_splits")?;
+        }
+        if let Some(v) = prec("max_splits") {
+            cfg.dispatch.precision.max_splits = toml_u32(v, "precision.max_splits")?;
+        }
+        if let Some(v) = prec("up_threshold") {
+            cfg.dispatch.precision.up_threshold = v.as_f64()?;
+        }
+        if let Some(v) = prec("down_threshold") {
+            cfg.dispatch.precision.down_threshold = v.as_f64()?;
+        }
+        if let Some(v) = prec("cooldown") {
+            cfg.dispatch.precision.cooldown = toml_u32(v, "precision.cooldown")?;
+        }
+        if let Some(v) = prec("probe_rows") {
+            cfg.dispatch.precision.probe_rows = toml_u32(v, "precision.probe_rows")? as usize;
+        }
+        if let Some(v) = prec("probe_period") {
+            cfg.dispatch.precision.probe_period = toml_u32(v, "precision.probe_period")?;
+        }
+        // Out-of-range pairs (e.g. min > max) are rejected loudly here.
+        cfg.dispatch.precision.validate()?;
         if let Some(v) = lookup(&table, "sweep.splits") {
             cfg.sweep_splits = v
                 .as_array()?
@@ -159,8 +264,9 @@ impl RunConfig {
     }
 
     /// Apply the paper's env-var interface on top
-    /// (`OZIMMU_COMPUTE_MODE`, plus the host-kernel knobs
-    /// `OZACCEL_THREADS`, `OZACCEL_HOST_KERNEL`, and `OZACCEL_SIMD`).
+    /// (`OZIMMU_COMPUTE_MODE`, the host-kernel knobs `OZACCEL_THREADS`,
+    /// `OZACCEL_HOST_KERNEL`, and `OZACCEL_SIMD`, plus the precision
+    /// governor's `OZACCEL_PRECISION`).
     pub fn apply_env(&mut self) -> Result<()> {
         if std::env::var("OZIMMU_COMPUTE_MODE").is_ok() {
             self.dispatch.mode = ComputeMode::from_env()?;
@@ -183,12 +289,26 @@ impl RunConfig {
             self.dispatch.kernels.config.simd = SimdSelect::parse(&v)
                 .ok_or_else(|| Error::Config(format!("bad OZACCEL_SIMD {v:?}")))?;
         }
+        if let Ok(v) = std::env::var("OZACCEL_PRECISION") {
+            self.dispatch.precision.mode = PrecisionMode::parse(&v)
+                .map_err(|_| Error::Config(format!("bad OZACCEL_PRECISION {v:?}")))?;
+        }
         Ok(())
     }
 }
 
 fn lookup<'a>(table: &'a BTreeMap<String, TomlValue>, path: &str) -> Option<&'a TomlValue> {
     table.get(path)
+}
+
+fn toml_u32(v: &TomlValue, key: &str) -> Result<u32> {
+    let f = v.as_f64()?;
+    if f.fract() != 0.0 || f < 0.0 || f > u32::MAX as f64 {
+        return Err(Error::Config(format!(
+            "{key} must be a non-negative integer, got {f}"
+        )));
+    }
+    Ok(f as u32)
 }
 
 #[cfg(test)]
@@ -223,7 +343,10 @@ n_contour = 12
         assert!(cfg.dispatch.policy.force_host);
         assert_eq!(cfg.sweep_splits, vec![3, 5, 7]);
         assert_eq!(cfg.case.n_contour, 12);
-        assert!((cfg.dispatch.adaptive.unwrap().target - 1e-8).abs() < 1e-20);
+        // legacy [adaptive] alias: maps the target but does NOT switch
+        // the governor on (activation stays explicit)
+        assert!((cfg.dispatch.precision.target - 1e-8).abs() < 1e-20);
+        assert_eq!(cfg.dispatch.precision.mode, PrecisionMode::Fixed);
     }
 
     #[test]
@@ -313,13 +436,148 @@ n_contour = 12
         assert!(RunConfig::from_toml("[run]\npack_parallel = \"yes\"\n").is_err());
     }
 
+    /// Serialises the tests that mutate process environment variables:
+    /// a test that momentarily sets an *invalid* value must not be
+    /// observable from another test's `apply_env`.  Lock poisoning is
+    /// ignored (a failed env test must not cascade into the other one)
+    /// and the mutated variable is restored by a drop guard even on
+    /// assertion failure.
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn env_lock() -> std::sync::MutexGuard<'static, ()> {
+        ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    struct RestoreVar(&'static str);
+    impl Drop for RestoreVar {
+        fn drop(&mut self) {
+            std::env::remove_var(self.0);
+        }
+    }
+
     #[test]
     fn env_override_wins() {
-        // NB: not parallel-safe w.r.t. other env tests; uses a unique var
+        let _guard = env_lock();
+        let _restore = RestoreVar("OZIMMU_COMPUTE_MODE");
         std::env::set_var("OZIMMU_COMPUTE_MODE", "fp64_int8_9");
         let mut cfg = RunConfig::from_toml("[run]\nmode = \"dgemm\"\n").unwrap();
         cfg.apply_env().unwrap();
         assert_eq!(cfg.dispatch.mode, ComputeMode::Int8 { splits: 9 });
-        std::env::remove_var("OZIMMU_COMPUTE_MODE");
+    }
+
+    #[test]
+    fn precision_keys_parse() {
+        let cfg = RunConfig::from_toml(
+            "[precision]\nmode = \"feedback\"\ntarget = 1e-10\nmin_splits = 4\n\
+             max_splits = 12\nup_threshold = 2.0\ndown_threshold = 0.05\n\
+             cooldown = 5\nprobe_rows = 3\nprobe_period = 7\n",
+        )
+        .unwrap();
+        let p = cfg.dispatch.precision;
+        assert_eq!(p.mode, PrecisionMode::Feedback);
+        assert!((p.target - 1e-10).abs() < 1e-24);
+        assert_eq!((p.min_splits, p.max_splits), (4, 12));
+        assert!((p.up_threshold - 2.0).abs() < 1e-12);
+        assert!((p.down_threshold - 0.05).abs() < 1e-12);
+        assert_eq!(p.cooldown, 5);
+        assert_eq!(p.probe_rows, 3);
+        assert_eq!(p.probe_period, 7);
+        // defaults: governor off
+        let d = RunConfig::default();
+        assert_eq!(d.dispatch.precision.mode, PrecisionMode::Fixed);
+    }
+
+    #[test]
+    fn adaptive_aliases_migrate_to_precision() {
+        let cfg = RunConfig::from_toml(
+            "[adaptive]\ntarget = 1e-7\nmin_splits = 4\nmax_splits = 10\n",
+        )
+        .unwrap();
+        let p = cfg.dispatch.precision;
+        // values map across, but the governor is NOT switched on: a
+        // pre-existing [adaptive] table must not start retuning
+        // explicit fixed-split sweeps (activation is precision.mode /
+        // OZACCEL_PRECISION only)
+        assert_eq!(p.mode, PrecisionMode::Fixed, "aliases never flip the mode");
+        assert!((p.target - 1e-7).abs() < 1e-20);
+        assert_eq!((p.min_splits, p.max_splits), (4, 10));
+        // combined with an explicit mode, the alias values apply
+        let cfg = RunConfig::from_toml(
+            "[precision]\nmode = \"feedback\"\n\n[adaptive]\ntarget = 1e-7\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dispatch.precision.mode, PrecisionMode::Feedback);
+        assert!((cfg.dispatch.precision.target - 1e-7).abs() < 1e-20);
+    }
+
+    #[test]
+    fn run_precision_section_spelling_is_accepted() {
+        // the rustdoc names the keys `run.precision.*`; both the
+        // [precision] and [run.precision] spellings must work and be
+        // covered by the unknown-key rejection
+        let cfg = RunConfig::from_toml(
+            "[run.precision]\nmode = \"apriori\"\ntarget = 1e-7\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dispatch.precision.mode, PrecisionMode::Apriori);
+        assert!((cfg.dispatch.precision.target - 1e-7).abs() < 1e-20);
+        assert!(RunConfig::from_toml("[run.precision]\nbogus = 1\n").is_err());
+        // explicit [precision] wins over [run.precision] for one key
+        let cfg = RunConfig::from_toml(
+            "[run.precision]\nmode = \"apriori\"\n\n[precision]\nmode = \"feedback\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dispatch.precision.mode, PrecisionMode::Feedback);
+    }
+
+    #[test]
+    fn precision_rejections_are_loud() {
+        // min > max (either spelling)
+        assert!(
+            RunConfig::from_toml("[adaptive]\nmin_splits = 9\nmax_splits = 4\n").is_err()
+        );
+        assert!(
+            RunConfig::from_toml("[precision]\nmin_splits = 9\nmax_splits = 4\n").is_err()
+        );
+        // outside the supported ozIMMU window
+        assert!(RunConfig::from_toml("[precision]\nmin_splits = 2\n").is_err());
+        assert!(RunConfig::from_toml("[precision]\nmax_splits = 19\n").is_err());
+        // malformed values
+        assert!(RunConfig::from_toml("[precision]\nmode = \"adaptive\"\n").is_err());
+        assert!(RunConfig::from_toml("[precision]\ntarget = -1.0\n").is_err());
+        assert!(RunConfig::from_toml("[precision]\nmin_splits = 4.5\n").is_err());
+        assert!(RunConfig::from_toml("[precision]\nprobe_rows = 0\n").is_err());
+        assert!(RunConfig::from_toml("[precision]\nprobe_period = 0\n").is_err());
+        // inverted hysteresis band
+        assert!(RunConfig::from_toml(
+            "[precision]\nup_threshold = 0.1\ndown_threshold = 0.5\n"
+        )
+        .is_err());
+        // unknown keys under both tables are rejected, not ignored
+        assert!(RunConfig::from_toml("[precision]\nbogus = 1\n").is_err());
+        assert!(RunConfig::from_toml("[adaptive]\nup_threshold = 1.0\n").is_err());
+        // a scalar where the table is expected is rejected too, in
+        // every spelling
+        assert!(RunConfig::from_toml("[run]\nprecision = \"feedback\"\n").is_err());
+        assert!(RunConfig::from_toml("precision = \"feedback\"\n").is_err());
+        assert!(RunConfig::from_toml("adaptive = 1e-8\n").is_err());
+        assert!(RunConfig::from_toml("[run]\nadaptive = 1e-8\n").is_err());
+        assert!(RunConfig::from_toml("[run.adaptive]\nbogus = 1\n").is_err());
+        // and the [run.adaptive] alias spelling maps like [adaptive]
+        let cfg = RunConfig::from_toml("[run.adaptive]\ntarget = 1e-7\n").unwrap();
+        assert!((cfg.dispatch.precision.target - 1e-7).abs() < 1e-20);
+        assert_eq!(cfg.dispatch.precision.mode, PrecisionMode::Fixed);
+    }
+
+    #[test]
+    fn precision_env_override() {
+        let _guard = env_lock();
+        let _restore = RestoreVar("OZACCEL_PRECISION");
+        std::env::set_var("OZACCEL_PRECISION", "feedback");
+        let mut cfg = RunConfig::from_toml("[precision]\nmode = \"fixed\"\n").unwrap();
+        cfg.apply_env().unwrap();
+        assert_eq!(cfg.dispatch.precision.mode, PrecisionMode::Feedback);
+        std::env::set_var("OZACCEL_PRECISION", "governed");
+        assert!(cfg.apply_env().is_err(), "bad OZACCEL_PRECISION is loud");
     }
 }

@@ -1,17 +1,21 @@
-//! Tunable / adaptive precision policy — the paper's §4 proposal
-//! ("dynamically adjusting the split number in that region") made
-//! concrete.
+//! **Deprecated shim** — the adaptive-precision policy moved to the
+//! [`crate::precision`] subsystem (governor, probes, per-site state).
 //!
-//! Given a target relative accuracy for the *solved* system and an
-//! estimate of the consumer's condition number, invert the a-priori
-//! Ozaki error bound to pick the cheapest split count that still meets
-//! the target.  Well-conditioned energy points get few splits; the
-//! resonance region gets many — accuracy where it matters, speed where
-//! it doesn't.
+//! [`AdaptivePolicy`] survives only as a thin compatibility wrapper
+//! that forwards to the precision governor's a-priori path; it holds
+//! no policy logic of its own.  New code should configure
+//! [`crate::precision::PrecisionConfig`] on
+//! [`super::DispatchConfig::precision`] and use the dispatcher's
+//! governor (`ModeSelect::Governed` at the SCF level).
 
-use crate::ozaki::{required_splits, ComputeMode};
+use crate::ozaki::ComputeMode;
+use crate::precision::{Governor, PrecisionConfig, PrecisionMode};
 
-/// Adaptive split-count selection.
+/// Compatibility wrapper around the precision governor's a-priori mode.
+///
+/// Deprecated: use [`crate::precision::PrecisionConfig`] (mode
+/// `apriori` or `feedback`) instead; this type only forwards.
+#[deprecated(note = "use crate::precision::{PrecisionConfig, Governor} — this shim only forwards")]
 #[derive(Clone, Copy, Debug)]
 pub struct AdaptivePolicy {
     /// Target relative accuracy of downstream results.
@@ -22,35 +26,48 @@ pub struct AdaptivePolicy {
     pub max_splits: u32,
 }
 
+#[allow(deprecated)]
 impl Default for AdaptivePolicy {
     fn default() -> Self {
+        let p = PrecisionConfig::default();
         AdaptivePolicy {
-            target: 1e-9,
-            min_splits: 3,
-            max_splits: 18,
+            target: p.target,
+            min_splits: p.min_splits,
+            max_splits: p.max_splits,
         }
     }
 }
 
+#[allow(deprecated)]
 impl AdaptivePolicy {
-    /// Pick a compute mode for a GEMM of contraction size `k_dim` whose
-    /// result feeds a consumer of condition number `kappa`.
-    pub fn mode_for(&self, k_dim: usize, kappa: f64) -> ComputeMode {
-        let s = required_splits(self.target, k_dim, kappa)
-            .clamp(self.min_splits, self.max_splits);
-        ComputeMode::Int8 { splits: s }
+    /// The equivalent precision-subsystem configuration (a-priori mode).
+    pub fn precision_config(&self) -> PrecisionConfig {
+        PrecisionConfig {
+            mode: PrecisionMode::Apriori,
+            target: self.target,
+            min_splits: self.min_splits,
+            max_splits: self.max_splits,
+            ..Default::default()
+        }
     }
 
-    /// Split count only (convenience for reports).
+    /// Pick a compute mode for a GEMM of contraction size `k_dim` whose
+    /// result feeds a consumer of condition number `kappa`.  Forwards
+    /// to [`Governor::splits_for`].
+    pub fn mode_for(&self, k_dim: usize, kappa: f64) -> ComputeMode {
+        Governor::splits_for(&self.precision_config(), k_dim, kappa).0
+    }
+
+    /// Split count only (convenience for reports).  Total — the
+    /// governor API returns mode + splits together, so the old
+    /// `unreachable!()` panic path is gone.
     pub fn splits_for(&self, k_dim: usize, kappa: f64) -> u32 {
-        match self.mode_for(k_dim, kappa) {
-            ComputeMode::Int8 { splits } => splits,
-            ComputeMode::Dgemm => unreachable!(),
-        }
+        Governor::splits_for(&self.precision_config(), k_dim, kappa).1
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
 
@@ -88,5 +105,15 @@ mod tests {
             max_splits: 9,
         };
         assert_eq!(p2.splits_for(16, 1.0), 5);
+    }
+
+    #[test]
+    fn mode_and_splits_always_agree() {
+        // the replacement for the old partial-match panic path
+        let p = AdaptivePolicy::default();
+        for kappa in [1.0, 1e4, 1e12] {
+            let m = p.mode_for(512, kappa);
+            assert_eq!(m.splits(), Some(p.splits_for(512, kappa)));
+        }
     }
 }

@@ -8,6 +8,7 @@
 use std::collections::BTreeMap;
 
 use super::kernel_select::HostCallInfo;
+use crate::precision::push_trajectory;
 
 /// Identity of one BLAS call site (source location).
 pub type CallSiteId = &'static str;
@@ -42,6 +43,46 @@ pub struct CallSiteStats {
     pub cache_hits: u64,
     /// Packed-panel cache misses across this site's host calls.
     pub cache_misses: u64,
+    /// Smallest split count any emulated call at this site used
+    /// (0 until the first emulated call).
+    pub splits_min: u32,
+    /// Largest split count any emulated call at this site used.
+    pub splits_max: u32,
+    /// *Executed* split counts in call order, consecutive duplicates
+    /// collapsed and capped at [`crate::precision::TRAJECTORY_CAP`]
+    /// (oldest changes evicted first).  Rendered as a trajectory line
+    /// under the PEAK table for sites that moved.  Distinct from the
+    /// governor's decision trajectory ([`SiteSnapshot::trajectory`]):
+    /// this one is ground truth of execution and includes pinned /
+    /// fixed-mode calls the governor never decided.
+    ///
+    /// [`SiteSnapshot::trajectory`]: crate::precision::SiteSnapshot
+    pub splits_trajectory: Vec<u32>,
+    /// Seconds spent in a-posteriori precision probes at this site
+    /// (the PEAK `probe_ms` column).
+    pub probe_s: f64,
+}
+
+impl CallSiteStats {
+    /// Split count of the most recent emulated call (0 = site has only
+    /// run native FP64 so far) — derived from the trajectory so the two
+    /// can never disagree.
+    pub fn splits_last(&self) -> u32 {
+        self.splits_trajectory.last().copied().unwrap_or(0)
+    }
+
+    /// The `splits` cell of the PEAK table: `-` for FP64-only sites, a
+    /// single number for constant-split sites, `min..max` once the
+    /// governor has moved a site around.
+    pub fn splits_cell(&self) -> String {
+        if self.splits_max == 0 {
+            "-".into()
+        } else if self.splits_min == self.splits_max {
+            format!("{}", self.splits_max)
+        } else {
+            format!("{}..{}", self.splits_min, self.splits_max)
+        }
+    }
 }
 
 /// Registry of every call site seen this run.
@@ -56,8 +97,11 @@ impl SiteRegistry {
         Self::default()
     }
 
-    /// Record one call.  `host` carries kernel-selector statistics for
-    /// host-executed calls (None for offloaded ones).
+    /// Record one call.  `splits` is the emulated split count (0 for
+    /// native FP64), `probe_s` the seconds an a-posteriori precision
+    /// probe spent on this call (0 when unprobed), and `host` carries
+    /// kernel-selector statistics for host-executed calls (None for
+    /// offloaded ones).
     #[allow(clippy::too_many_arguments)]
     pub fn record(
         &mut self,
@@ -67,6 +111,8 @@ impl SiteRegistry {
         measured_s: f64,
         modeled_gpu_s: f64,
         modeled_move_s: f64,
+        splits: u32,
+        probe_s: f64,
         host: Option<HostCallInfo>,
     ) {
         let e = self.sites.entry(site).or_default();
@@ -80,6 +126,16 @@ impl SiteRegistry {
         e.measured_s += measured_s;
         e.modeled_gpu_s += modeled_gpu_s;
         e.modeled_move_s += modeled_move_s;
+        if splits > 0 {
+            e.splits_min = if e.splits_min == 0 {
+                splits
+            } else {
+                e.splits_min.min(splits)
+            };
+            e.splits_max = e.splits_max.max(splits);
+            push_trajectory(&mut e.splits_trajectory, splits);
+        }
+        e.probe_s += probe_s;
         if let Some(h) = host {
             e.host_kernel = Some(h.kernel);
             if !h.isa.is_empty() {
@@ -90,6 +146,13 @@ impl SiteRegistry {
             e.cache_hits += h.cache_hits;
             e.cache_misses += h.cache_misses;
         }
+    }
+
+    /// Attribute probe seconds to a site outside [`SiteRegistry::record`]
+    /// (the offloaded complex path probes the *combined* result after
+    /// its four component records are already written).
+    pub fn add_probe_s(&mut self, site: CallSiteId, probe_s: f64) {
+        self.sites.entry(site).or_default().probe_s += probe_s;
     }
 
     /// Iterate sites (sorted by id for stable reports).
@@ -112,7 +175,11 @@ impl SiteRegistry {
         self.sites.is_empty()
     }
 
-    /// Totals across all sites.
+    /// Totals across all sites.  Split information aggregates as the
+    /// min/max envelope only: the trajectory stays per-site (so the
+    /// totals' `splits_last()` reads 0 — there is no meaningful "most
+    /// recent" split across sites; the registry does not order calls in
+    /// time).
     pub fn totals(&self) -> CallSiteStats {
         let mut t = CallSiteStats::default();
         for s in self.sites.values() {
@@ -129,6 +196,15 @@ impl SiteRegistry {
             t.pack_s += s.pack_s;
             t.cache_hits += s.cache_hits;
             t.cache_misses += s.cache_misses;
+            if s.splits_max > 0 {
+                t.splits_min = if t.splits_min == 0 {
+                    s.splits_min
+                } else {
+                    t.splits_min.min(s.splits_min)
+                };
+                t.splits_max = t.splits_max.max(s.splits_max);
+            }
+            t.probe_s += s.probe_s;
         }
         t
     }
@@ -141,7 +217,7 @@ mod tests {
     #[test]
     fn records_and_totals() {
         let mut r = SiteRegistry::new();
-        r.record("a.rs:1", 100.0, true, 1e-3, 2e-3, 3e-4, None);
+        r.record("a.rs:1", 100.0, true, 1e-3, 2e-3, 3e-4, 0, 0.0, None);
         let host = HostCallInfo {
             kernel: "blocked",
             isa: "avx2",
@@ -150,8 +226,8 @@ mod tests {
             cache_hits: 3,
             cache_misses: 1,
         };
-        r.record("a.rs:1", 100.0, false, 1e-3, 0.0, 0.0, Some(host));
-        r.record("b.rs:9", 50.0, true, 5e-4, 1e-3, 1e-4, None);
+        r.record("a.rs:1", 100.0, false, 1e-3, 0.0, 0.0, 6, 5e-5, Some(host));
+        r.record("b.rs:9", 50.0, true, 5e-4, 1e-3, 1e-4, 0, 0.0, None);
         assert_eq!(r.len(), 2);
         let a = r.get("a.rs:1").unwrap();
         assert_eq!(a.calls, 2);
@@ -162,6 +238,8 @@ mod tests {
         assert_eq!(a.bands, 4);
         assert_eq!((a.cache_hits, a.cache_misses), (3, 1));
         assert!((a.pack_s - 2e-4).abs() < 1e-12);
+        assert_eq!((a.splits_last(), a.splits_min, a.splits_max), (6, 6, 6));
+        assert!((a.probe_s - 5e-5).abs() < 1e-12);
         let t = r.totals();
         assert_eq!(t.calls, 3);
         assert!((t.flops - 250.0).abs() < 1e-12);
@@ -169,14 +247,34 @@ mod tests {
         assert_eq!(t.host_kernel, Some("blocked"));
         assert_eq!(t.isa, Some("avx2"));
         assert_eq!(t.cache_hits, 3);
+        assert_eq!((t.splits_min, t.splits_max), (6, 6));
+        assert!((t.probe_s - 5e-5).abs() < 1e-12);
     }
 
     #[test]
     fn iteration_is_sorted() {
         let mut r = SiteRegistry::new();
-        r.record("z.rs:5", 1.0, true, 0.0, 0.0, 0.0, None);
-        r.record("a.rs:2", 1.0, true, 0.0, 0.0, 0.0, None);
+        r.record("z.rs:5", 1.0, true, 0.0, 0.0, 0.0, 0, 0.0, None);
+        r.record("a.rs:2", 1.0, true, 0.0, 0.0, 0.0, 0, 0.0, None);
         let ids: Vec<_> = r.iter().map(|(id, _)| *id).collect();
         assert_eq!(ids, vec!["a.rs:2", "z.rs:5"]);
+    }
+
+    #[test]
+    fn split_trajectory_and_envelope() {
+        let mut r = SiteRegistry::new();
+        for s in [7u32, 7, 8, 8, 9, 3] {
+            r.record("lu.rs:1", 1.0, false, 0.0, 0.0, 0.0, s, 0.0, None);
+        }
+        // a native-FP64 call must not disturb the envelope
+        r.record("lu.rs:1", 1.0, false, 0.0, 0.0, 0.0, 0, 0.0, None);
+        let s = r.get("lu.rs:1").unwrap();
+        assert_eq!((s.splits_min, s.splits_max, s.splits_last()), (3, 9, 3));
+        assert_eq!(s.splits_trajectory, vec![7, 8, 9, 3]);
+        assert_eq!(s.splits_cell(), "3..9");
+        let mut constant = SiteRegistry::new();
+        constant.record("x.rs:1", 1.0, false, 0.0, 0.0, 0.0, 6, 0.0, None);
+        assert_eq!(constant.get("x.rs:1").unwrap().splits_cell(), "6");
+        assert_eq!(CallSiteStats::default().splits_cell(), "-");
     }
 }

@@ -1,6 +1,7 @@
 //! The dispatch seam: every BLAS call in the application flows through
 //! here, gets profiled per call site, routed host-or-device, priced by
-//! the data-movement model, and executed in the configured compute mode.
+//! the data-movement model, and executed in the compute mode the
+//! precision governor settles on.
 
 use std::path::PathBuf;
 use std::sync::Mutex;
@@ -8,7 +9,7 @@ use std::time::Instant;
 
 use log::{debug, warn};
 
-use super::adaptive::AdaptivePolicy;
+use super::callsite::CallSiteId;
 use super::callsite::SiteRegistry;
 use super::datamove::{DataMoveStrategy, MemModel};
 use super::kernel_select::{HostCallInfo, KernelSelector};
@@ -19,6 +20,9 @@ use crate::kernels::{panel_cache, MR_C64, MR_F64, MR_I8};
 use crate::linalg::{Mat, ZMat};
 use crate::ozaki::ComputeMode;
 use crate::perfmodel::{emulated_gemm_time, gemm_flops, native_gemm_time, GpuSpec, GH200};
+use crate::precision::{
+    probe_dgemm, probe_seed, probe_zgemm, sample_rows, Governor, PrecisionConfig,
+};
 use crate::runtime::{ArtifactKind, Runtime};
 
 /// Dispatcher configuration (the CLI / config-file surface).
@@ -34,8 +38,10 @@ pub struct DispatchConfig {
     pub gpu: GpuSpec,
     /// Artifact directory override (None = env / repo discovery).
     pub artifact_dir: Option<PathBuf>,
-    /// Adaptive-precision policy (None = fixed mode).
-    pub adaptive: Option<AdaptivePolicy>,
+    /// Precision-governor configuration (`OZACCEL_PRECISION` /
+    /// `run.precision.*`; mode `fixed` leaves every call's requested
+    /// `ComputeMode` untouched).
+    pub precision: PrecisionConfig,
     /// Host kernel routing (naive reference vs blocked/threaded core)
     /// plus its tiling and `OZACCEL_THREADS` parameters.
     pub kernels: KernelSelector,
@@ -49,7 +55,7 @@ impl Default for DispatchConfig {
             strategy: DataMoveStrategy::FirstTouchMigrate,
             gpu: GH200,
             artifact_dir: None,
-            adaptive: None,
+            precision: PrecisionConfig::default(),
             // honours OZACCEL_HOST_KERNEL / OZACCEL_THREADS out of the
             // box; config files can still override via `run.host_kernel`
             // and `run.threads`.
@@ -78,12 +84,16 @@ pub struct Dispatcher {
     runtime: Option<Runtime>,
     sites: Mutex<SiteRegistry>,
     mem: Mutex<MemModel>,
+    governor: Governor,
 }
 
 impl Dispatcher {
     /// Build a dispatcher; connects to the PJRT runtime unless the
-    /// policy forces host execution.
+    /// policy forces host execution.  An inconsistent precision
+    /// configuration (e.g. `min_splits > max_splits`) is rejected here,
+    /// mirroring the config parser's loud validation.
     pub fn new(cfg: DispatchConfig) -> Result<Self> {
+        cfg.precision.validate()?;
         let runtime = if cfg.policy.force_host {
             None
         } else {
@@ -100,11 +110,13 @@ impl Dispatcher {
             }
         };
         let mem = MemModel::new(cfg.strategy, cfg.gpu);
+        let governor = Governor::new(cfg.precision);
         Ok(Dispatcher {
             cfg,
             runtime,
             sites: Mutex::new(SiteRegistry::new()),
             mem: Mutex::new(mem),
+            governor,
         })
     }
 
@@ -113,9 +125,16 @@ impl Dispatcher {
         self.cfg.mode
     }
 
-    /// The adaptive policy, if enabled.
-    pub fn adaptive(&self) -> Option<AdaptivePolicy> {
-        self.cfg.adaptive
+    /// The precision-governor configuration.
+    pub fn precision(&self) -> &PrecisionConfig {
+        self.governor.config()
+    }
+
+    /// The precision governor (per-call-site split state; applications
+    /// feed consumer condition numbers through it and ask it for
+    /// per-point decisions, see `must::TauSolver::solve_governed`).
+    pub fn governor(&self) -> &Governor {
+        &self.governor
     }
 
     /// Whether a live PJRT runtime is attached.
@@ -127,14 +146,29 @@ impl Dispatcher {
     #[track_caller]
     pub fn dgemm(&self, a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
         let site = site_id(std::panic::Location::caller());
-        self.dgemm_mode_at(site, self.cfg.mode, a, b)
+        self.dgemm_mode_at(site, self.cfg.mode, a, b, true)
     }
 
-    /// FP64 GEMM with an explicit per-call mode (adaptive precision).
+    /// FP64 GEMM with an explicit per-call mode (still subject to the
+    /// precision governor when it is active).
     #[track_caller]
     pub fn dgemm_mode(&self, mode: ComputeMode, a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
         let site = site_id(std::panic::Location::caller());
-        self.dgemm_mode_at(site, mode, a, b)
+        self.dgemm_mode_at(site, mode, a, b, true)
+    }
+
+    /// FP64 GEMM attributed to an explicit call-site id (obtained from
+    /// [`call_site`]) — lets a consumer loop such as a blocked LU pin
+    /// all its trailing updates, and the governor state they share, to
+    /// one PEAK row.
+    pub fn dgemm_at(
+        &self,
+        site: CallSiteId,
+        mode: ComputeMode,
+        a: &Mat<f64>,
+        b: &Mat<f64>,
+    ) -> Result<Mat<f64>> {
+        self.dgemm_mode_at(site, mode, a, b, true)
     }
 
     /// Complex GEMM (ozIMMU's re/im split): host calls run fused with
@@ -144,14 +178,39 @@ impl Dispatcher {
     #[track_caller]
     pub fn zgemm(&self, a: &ZMat, b: &ZMat) -> Result<ZMat> {
         let site = site_id(std::panic::Location::caller());
-        self.zgemm_mode_at(site, self.cfg.mode, a, b)
+        self.zgemm_mode_at(site, self.cfg.mode, a, b, true)
     }
 
     /// Complex GEMM with an explicit per-call mode.
     #[track_caller]
     pub fn zgemm_mode(&self, mode: ComputeMode, a: &ZMat, b: &ZMat) -> Result<ZMat> {
         let site = site_id(std::panic::Location::caller());
-        self.zgemm_mode_at(site, mode, a, b)
+        self.zgemm_mode_at(site, mode, a, b, true)
+    }
+
+    /// Complex GEMM attributed to an explicit call-site id (see
+    /// [`Dispatcher::dgemm_at`]).
+    pub fn zgemm_at(&self, site: CallSiteId, mode: ComputeMode, a: &ZMat, b: &ZMat) -> Result<ZMat> {
+        self.zgemm_mode_at(site, mode, a, b, true)
+    }
+
+    /// FP64 GEMM pinned to exactly the given mode, bypassing the
+    /// precision governor — the real twin of
+    /// [`Dispatcher::zgemm_pinned`] for reference passes that must not
+    /// be retuned.
+    #[track_caller]
+    pub fn dgemm_pinned(&self, mode: ComputeMode, a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
+        let site = site_id(std::panic::Location::caller());
+        self.dgemm_mode_at(site, mode, a, b, false)
+    }
+
+    /// Complex GEMM pinned to exactly the given mode, bypassing the
+    /// precision governor — for κ pre-passes and reference solves whose
+    /// cost/accuracy must not be retuned by the feedback loop.
+    #[track_caller]
+    pub fn zgemm_pinned(&self, mode: ComputeMode, a: &ZMat, b: &ZMat) -> Result<ZMat> {
+        let site = site_id(std::panic::Location::caller());
+        self.zgemm_mode_at(site, mode, a, b, false)
     }
 
     /// The host-vs-device decision for one (possibly component) GEMM —
@@ -190,6 +249,71 @@ impl Dispatcher {
         }
     }
 
+    /// Shared probe gate: whether this emulated call at `site` is due
+    /// for a probe under the feedback cadence, and if so with which
+    /// deterministic row sample.  One home for the gating protocol so
+    /// the real and complex paths cannot drift.
+    fn probe_rows_for(
+        &self,
+        site: CallSiteId,
+        mode: ComputeMode,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Option<Vec<usize>> {
+        if !matches!(mode, ComputeMode::Int8 { .. }) {
+            return None;
+        }
+        let ord = self.governor.should_probe(site)?;
+        let rows = sample_rows(probe_seed(site, m, k, n, ord), m, self.precision().probe_rows);
+        if rows.is_empty() {
+            None
+        } else {
+            Some(rows)
+        }
+    }
+
+    /// A-posteriori probe of one emulated real GEMM (feedback mode
+    /// only): recompute a deterministic sample of output rows in FP64,
+    /// feed the observed residual back into the governor, and return
+    /// the probe seconds for the PEAK `probe_ms` column.
+    fn probe_real(
+        &self,
+        site: CallSiteId,
+        mode: ComputeMode,
+        a: &Mat<f64>,
+        b: &Mat<f64>,
+        c: &Mat<f64>,
+    ) -> Result<f64> {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let Some(rows) = self.probe_rows_for(site, mode, m, k, n) else {
+            return Ok(0.0);
+        };
+        let rep = probe_dgemm(a, b, c, &rows)?;
+        self.governor
+            .record_probe(site, mode.splits().unwrap_or(0), k, rep.rel_err, rep.seconds);
+        Ok(rep.seconds)
+    }
+
+    /// Complex twin of `probe_real` (fused and decomposed paths).
+    fn probe_complex(
+        &self,
+        site: CallSiteId,
+        mode: ComputeMode,
+        a: &ZMat,
+        b: &ZMat,
+        c: &ZMat,
+    ) -> Result<f64> {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let Some(rows) = self.probe_rows_for(site, mode, m, k, n) else {
+            return Ok(0.0);
+        };
+        let rep = probe_zgemm(a, b, c, &rows)?;
+        self.governor
+            .record_probe(site, mode.splits().unwrap_or(0), k, rep.rel_err, rep.seconds);
+        Ok(rep.seconds)
+    }
+
     /// Complex host calls run as **one** fused call through the kernel
     /// selector (`zgemm_blocked` / `ozaki_zgemm_with`), so the four
     /// component products share packed panels instead of paying the
@@ -198,26 +322,49 @@ impl Dispatcher {
     /// individually, exactly as before).  Either way, PEAK accounting
     /// records the four real GEMMs the decomposition represents, so
     /// per-site reports stay comparable across routes.
+    ///
+    /// `governed` routes the requested mode through the precision
+    /// governor and enables feedback probes; pinned entry points pass
+    /// `false`.
     fn zgemm_mode_at(
         &self,
         site: &'static str,
         mode: ComputeMode,
         a: &ZMat,
         b: &ZMat,
+        governed: bool,
     ) -> Result<ZMat> {
         let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mode = if governed {
+            self.governor.apply(site, mode, k).mode
+        } else {
+            mode
+        };
         let offloaded = self.route(mode, m, k, n).offloaded();
 
         if offloaded {
             // Decomposed path: each real component flows through
-            // dgemm_mode_at with its own pricing and site record.
+            // dgemm_mode_at with its own pricing and site record.  The
+            // governor has already settled the mode for this site, so
+            // the components run ungoverned (no double retune); the
+            // feedback probe runs once on the *combined* result below,
+            // keeping the probe cadence identical to the fused path.
             let (ar, ai) = (a.re(), a.im());
             let (br, bi) = (b.re(), b.im());
-            let rr = self.dgemm_mode_at(site, mode, &ar, &br)?;
-            let ii = self.dgemm_mode_at(site, mode, &ai, &bi)?;
-            let ri = self.dgemm_mode_at(site, mode, &ar, &bi)?;
-            let ir = self.dgemm_mode_at(site, mode, &ai, &br)?;
-            return Ok(crate::linalg::zcombine(&rr, &ii, &ri, &ir));
+            let rr = self.dgemm_mode_at(site, mode, &ar, &br, false)?;
+            let ii = self.dgemm_mode_at(site, mode, &ai, &bi, false)?;
+            let ri = self.dgemm_mode_at(site, mode, &ar, &bi, false)?;
+            let ir = self.dgemm_mode_at(site, mode, &ai, &br, false)?;
+            let combined = crate::linalg::zcombine(&rr, &ii, &ri, &ir);
+            if governed {
+                let probe_s = self.probe_complex(site, mode, a, b, &combined)?;
+                if probe_s > 0.0 {
+                    // the four component records are already written;
+                    // attribute the probe cost to the site directly
+                    self.sites.lock().unwrap().add_probe_s(site, probe_s);
+                }
+            }
+            return Ok(combined);
         }
 
         let cache_before = Self::cache_window(mode);
@@ -227,6 +374,11 @@ impl Dispatcher {
             ComputeMode::Int8 { splits } => self.cfg.kernels.ozaki_zgemm(a, b, splits)?,
         };
         let measured = t0.elapsed().as_secs_f64();
+        let probe_s = if governed {
+            self.probe_complex(site, mode, a, b, &result)?
+        } else {
+            0.0
+        };
 
         let mr = match mode {
             ComputeMode::Dgemm => MR_C64,
@@ -251,10 +403,12 @@ impl Dispatcher {
             n,
             mode.name()
         );
+        let splits = mode.splits().unwrap_or(0);
         let mut sites = self.sites.lock().unwrap();
         for i in 0..4 {
-            // pack time / cache traffic attach once; the four records
-            // keep the call count of the real-GEMM decomposition.
+            // pack time / cache traffic / probe cost attach once; the
+            // four records keep the call count of the real-GEMM
+            // decomposition.
             let info = if i == 0 {
                 full
             } else {
@@ -272,6 +426,8 @@ impl Dispatcher {
                 measured / 4.0,
                 0.0,
                 0.0,
+                splits,
+                if i == 0 { probe_s } else { 0.0 },
                 Some(info),
             );
         }
@@ -284,8 +440,14 @@ impl Dispatcher {
         mode: ComputeMode,
         a: &Mat<f64>,
         b: &Mat<f64>,
+        governed: bool,
     ) -> Result<Mat<f64>> {
         let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mode = if governed {
+            self.governor.apply(site, mode, k).mode
+        } else {
+            mode
+        };
         let decision = self.route(mode, m, k, n);
 
         let mut host_info = None;
@@ -327,6 +489,11 @@ impl Dispatcher {
             r
         };
         let measured = t0.elapsed().as_secs_f64();
+        let probe_s = if governed {
+            self.probe_real(site, mode, a, b, &result)?
+        } else {
+            0.0
+        };
 
         // Model GPU compute + movement for offloaded calls only.
         let (gpu_s, move_s) = if decision.offloaded() {
@@ -361,6 +528,8 @@ impl Dispatcher {
             measured,
             gpu_s,
             move_s,
+            mode.splits().unwrap_or(0),
+            probe_s,
             host_info,
         );
         Ok(result)
@@ -381,6 +550,7 @@ impl Dispatcher {
         let t = sites.totals();
         Report {
             mode: self.cfg.mode,
+            precision: self.precision().mode,
             strategy: self.cfg.strategy,
             gpu_name: self.cfg.gpu.name,
             total_calls: t.calls,
@@ -396,11 +566,24 @@ impl Dispatcher {
         }
     }
 
-    /// Clear profiling + residency state (e.g. between benchmark reps).
+    /// Clear profiling + residency state and the governor's per-site
+    /// precision state (e.g. between benchmark reps).
     pub fn reset_stats(&self) {
         *self.sites.lock().unwrap() = SiteRegistry::new();
         self.mem.lock().unwrap().reset();
+        self.governor.reset();
     }
+}
+
+/// The interned call-site id of the *caller* — the same id the
+/// dispatcher's `#[track_caller]` entry points would attribute a GEMM
+/// issued on that line to.  Lets an application capture one site key
+/// and share it between governor queries ([`Dispatcher::governor`])
+/// and explicit-site GEMMs ([`Dispatcher::zgemm_at`]), so the
+/// governor's state lines up with a single PEAK row.
+#[track_caller]
+pub fn call_site() -> CallSiteId {
+    site_id(std::panic::Location::caller())
 }
 
 fn site_id(loc: &'static std::panic::Location<'static>) -> &'static str {
@@ -419,6 +602,7 @@ fn site_id(loc: &'static std::panic::Location<'static>) -> &'static str {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::precision::PrecisionMode;
     use crate::testing::{max_rel_err, Rng};
     use crate::{linalg, ozaki};
 
@@ -534,6 +718,11 @@ mod tests {
             "repeat call must reuse both packed operands, got {} hits",
             s.cache_hits
         );
+        assert_eq!(
+            (s.splits_min, s.splits_max),
+            (4, 4),
+            "fixed-mode emulated calls surface their split count"
+        );
         let txt = rep.render();
         assert!(txt.contains("auto"));
     }
@@ -562,5 +751,99 @@ mod tests {
         d.dgemm(&a, &a.clone()).unwrap();
         d.reset_stats();
         assert_eq!(d.report().total_calls, 0);
+    }
+
+    #[test]
+    fn feedback_governor_probes_and_walks_splits_down() {
+        // Integer-valued operands emulate (near-)exactly at any split
+        // count, so every probe reports a residual far below goal: the
+        // calibration constant decays and the governor must walk this
+        // site's splits down from the conservative a-priori seed.
+        let mut cfg = DispatchConfig::host_only(ComputeMode::Int8 { splits: 18 });
+        cfg.precision = PrecisionConfig {
+            mode: PrecisionMode::Feedback,
+            target: 1e-8,
+            probe_period: 1,
+            cooldown: 0,
+            ..Default::default()
+        };
+        let d = Dispatcher::new(cfg).unwrap();
+        let a = Mat::from_fn(24, 24, |i, j| ((i * 7 + j * 3) % 5) as f64 - 2.0);
+        let b = Mat::from_fn(24, 24, |i, j| ((i * 3 + j * 5) % 7) as f64 - 3.0);
+        for _ in 0..40 {
+            d.dgemm(&a, &b).unwrap();
+        }
+        let rep = d.report();
+        let (site, s) = rep.sites.iter().next().unwrap();
+        assert!(
+            s.splits_last() < s.splits_max,
+            "governor should have walked down: {:?}",
+            (s.splits_min, s.splits_max, s.splits_last())
+        );
+        assert!(s.splits_min >= 3 && s.splits_max <= 18);
+        assert!(s.probe_s >= 0.0);
+        assert!(
+            s.splits_trajectory.len() > 1,
+            "trajectory visible: {:?}",
+            s.splits_trajectory
+        );
+        let snap = d.governor().snapshot(*site).unwrap();
+        assert!(snap.probes > 0, "probes must have run");
+        assert_eq!(snap.splits, s.splits_last());
+        let txt = rep.render();
+        assert!(txt.contains("precision=feedback"));
+    }
+
+    #[test]
+    fn fixed_precision_mode_never_retunes() {
+        let d = host_dispatcher(ComputeMode::Int8 { splits: 6 });
+        let mut rng = Rng::new(12);
+        let a = rand_mat(&mut rng, 16, 16);
+        let b = rand_mat(&mut rng, 16, 16);
+        for _ in 0..5 {
+            d.dgemm(&a, &b).unwrap();
+        }
+        let rep = d.report();
+        let (_, s) = rep.sites.iter().next().unwrap();
+        assert_eq!((s.splits_min, s.splits_max), (6, 6));
+        assert_eq!(s.probe_s, 0.0, "no probes in fixed mode");
+    }
+
+    #[test]
+    fn pinned_zgemm_bypasses_the_governor() {
+        let mut cfg = DispatchConfig::host_only(ComputeMode::Dgemm);
+        cfg.precision = PrecisionConfig {
+            mode: PrecisionMode::Feedback,
+            target: 1e-12,
+            ..Default::default()
+        };
+        let d = Dispatcher::new(cfg).unwrap();
+        let mut rng = Rng::new(13);
+        let a = ZMat::from_fn(8, 8, |_, _| rng.cnormal());
+        let b = ZMat::from_fn(8, 8, |_, _| rng.cnormal());
+        let got = d
+            .zgemm_pinned(ComputeMode::Int8 { splits: 4 }, &a, &b)
+            .unwrap();
+        let want = ozaki::ozaki_zgemm(&a, &b, 4).unwrap();
+        assert_eq!(got.data(), want.data(), "pinned mode executed verbatim");
+        let rep = d.report();
+        let (_, s) = rep.sites.iter().next().unwrap();
+        assert_eq!((s.splits_min, s.splits_max), (4, 4));
+        assert_eq!(s.probe_s, 0.0, "pinned calls are never probed");
+    }
+
+    #[test]
+    fn governed_dgemm_site_key_matches_call_site() {
+        // call_site() and a dgemm_at() with that key land on one row.
+        let d = host_dispatcher(ComputeMode::Dgemm);
+        let mut rng = Rng::new(14);
+        let a = rand_mat(&mut rng, 8, 8);
+        let b = rand_mat(&mut rng, 8, 8);
+        let site = call_site();
+        d.dgemm_at(site, ComputeMode::Dgemm, &a, &b).unwrap();
+        d.dgemm_at(site, ComputeMode::Dgemm, &a, &b).unwrap();
+        let rep = d.report();
+        assert_eq!(rep.sites.len(), 1);
+        assert_eq!(rep.sites.get(site).unwrap().calls, 2);
     }
 }

@@ -19,7 +19,11 @@
 //!   host-vs-device;
 //! * [`policy`] — offload decision (FLOP threshold + artifact coverage);
 //! * [`datamove`] — the three data-movement strategies of Li et al.;
-//! * [`adaptive`] — tunable-precision extension (paper §4 future work);
+//! * [`crate::precision`] — the tunable-precision subsystem: every
+//!   emulated call's split count is settled by its per-call-site
+//!   governor (a-priori seed → probe-driven feedback), configured via
+//!   [`DispatchConfig::precision`]; `adaptive` survives only as a
+//!   deprecated shim over it;
 //! * [`Dispatcher`] — ties them to the PJRT runtime and host fallback.
 
 mod adaptive;
@@ -30,10 +34,11 @@ mod kernel_select;
 mod policy;
 mod stats;
 
+#[allow(deprecated)]
 pub use adaptive::AdaptivePolicy;
 pub use callsite::{CallSiteId, CallSiteStats, SiteRegistry};
 pub use datamove::{BufferId, DataMoveStrategy, MemModel, Residency};
-pub use dispatcher::{DispatchConfig, Dispatcher};
+pub use dispatcher::{call_site, DispatchConfig, Dispatcher};
 pub use kernel_select::{HostCallInfo, HostKernel, KernelSelector};
 pub use policy::{OffloadDecision, RoutingPolicy};
 pub use stats::{GemmKind, Report};

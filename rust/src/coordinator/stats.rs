@@ -4,6 +4,7 @@
 use super::callsite::SiteRegistry;
 use super::datamove::DataMoveStrategy;
 use crate::ozaki::ComputeMode;
+use crate::precision::PrecisionMode;
 
 /// Which BLAS entry point a call came through.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -19,6 +20,8 @@ pub enum GemmKind {
 pub struct Report {
     /// Compute mode the run was configured with.
     pub mode: ComputeMode,
+    /// Precision-selection mode the governor ran under.
+    pub precision: PrecisionMode,
     /// Data-movement strategy that was modelled.
     pub strategy: DataMoveStrategy,
     /// GPU the movement/compute models priced against.
@@ -55,13 +58,14 @@ impl Report {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "== offload report: mode={} strategy={} gpu={} ==\n",
+            "== offload report: mode={} precision={} strategy={} gpu={} ==\n",
             self.mode.name(),
+            self.precision.name(),
             self.strategy.name(),
             self.gpu_name
         ));
         out.push_str(&format!(
-            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>7} {:>5} {:>10} {:>9}\n",
+            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>7} {:>5} {:>10} {:>9} {:>7} {:>9}\n",
             "call site",
             "calls",
             "offload",
@@ -73,11 +77,13 @@ impl Report {
             "isa",
             "bands",
             "pack",
-            "cache h/m"
+            "cache h/m",
+            "splits",
+            "probe_ms"
         ));
         for (site, s) in self.sites.iter() {
             out.push_str(&format!(
-                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>7} {:>5} {:>9.4}s {:>9}\n",
+                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>7} {:>5} {:>9.4}s {:>9} {:>7} {:>9.2}\n",
                 site,
                 s.calls,
                 s.offloaded,
@@ -90,7 +96,22 @@ impl Report {
                 s.bands,
                 s.pack_s,
                 format!("{}/{}", s.cache_hits, s.cache_misses),
+                s.splits_cell(),
+                s.probe_s * 1e3,
             ));
+        }
+        // Per-site split trajectories (executed counts, in call order)
+        // for every site the governor actually moved.
+        for (site, s) in self.sites.iter() {
+            if s.splits_trajectory.len() > 1 {
+                let path: Vec<String> =
+                    s.splits_trajectory.iter().map(|v| v.to_string()).collect();
+                out.push_str(&format!(
+                    "  splits trajectory {:<40} {}\n",
+                    site,
+                    path.join("->")
+                ));
+            }
         }
         out.push_str(&format!(
             "TOTAL: {} calls ({} offloaded, {} host), {:.3} GFLOP, measured {:.4}s, modeled gpu {:.4}s + move {:.4}s = {:.4}s, {} MiB moved, {} migrations\n",
@@ -118,7 +139,7 @@ mod tests {
     fn render_contains_the_essentials() {
         use crate::coordinator::HostCallInfo;
         let mut sites = SiteRegistry::new();
-        sites.record("lu.rs:88", 1e9, true, 0.5, 0.1, 0.01, None);
+        sites.record("lu.rs:88", 1e9, true, 0.5, 0.1, 0.01, 0, 0.0, None);
         sites.record(
             "scf.rs:12",
             1e8,
@@ -126,6 +147,8 @@ mod tests {
             0.2,
             0.0,
             0.0,
+            4,
+            1.5e-3,
             Some(HostCallInfo {
                 kernel: "simd",
                 isa: "avx2",
@@ -135,8 +158,28 @@ mod tests {
                 cache_misses: 1,
             }),
         );
+        // a second, governed-upward call: splits move, probe cost adds
+        sites.record(
+            "scf.rs:12",
+            1e8,
+            false,
+            0.2,
+            0.0,
+            0.0,
+            7,
+            1.5e-3,
+            Some(HostCallInfo {
+                kernel: "simd",
+                isa: "avx2",
+                bands: 4,
+                pack_s: 0.0,
+                cache_hits: 0,
+                cache_misses: 0,
+            }),
+        );
         let r = Report {
             mode: ComputeMode::Int8 { splits: 6 },
+            precision: crate::precision::PrecisionMode::Feedback,
             strategy: DataMoveStrategy::FirstTouchMigrate,
             gpu_name: "GH200",
             total_calls: 1,
@@ -152,14 +195,23 @@ mod tests {
         };
         let txt = r.render();
         assert!(txt.contains("fp64_int8_6"));
+        assert!(txt.contains("precision=feedback"), "header shows the governor mode");
         assert!(txt.contains("first_touch"));
         assert!(txt.contains("lu.rs:88"));
         assert!(txt.contains("2 MiB"));
         assert!(txt.contains("kernel"), "header shows host-kernel column");
         assert!(txt.contains("isa"), "header shows the microkernel ISA column");
+        assert!(txt.contains("splits"), "header shows the split-trajectory column");
+        assert!(txt.contains("probe_ms"), "header shows the probe-cost column");
         assert!(txt.contains("simd"), "host kernel surfaced per site");
         assert!(txt.contains("avx2"), "microkernel ISA surfaced per site");
-        assert!(txt.contains("2/1"), "cache hits/misses surfaced");
+        assert!(txt.contains("2/1"), "cache hits/misses surfaced"); // first record only
+        assert!(txt.contains("4..7"), "split envelope surfaced per site");
+        assert!(txt.contains("3.00"), "probe milliseconds surfaced per site");
+        assert!(
+            txt.contains("splits trajectory") && txt.contains("4->7"),
+            "moved sites get a trajectory line under the table"
+        );
         assert!((r.modeled_total_s() - 0.11).abs() < 1e-12);
     }
 }

@@ -1,24 +1,34 @@
 //! E6 — ablation of the paper's §4 proposal: dynamically adjusting the
 //! split number in the ill-conditioned region.
 //!
-//! Fixed-split runs pay the worst-case split count at *every* energy
-//! point; the adaptive policy pays it only near the resonance.  Cost is
-//! counted in INT8 slice-pair products (the quantity ozIMMU's runtime
-//! scales with, `s(s+1)/2` per GEMM), accuracy as the Table-1 max
-//! relative error.
+//! Three policies on the Table-1 contour, one dispatcher each:
+//!
+//! * **fixed** — every energy point pays the same split count (the
+//!   paper's `fp64_int8_<s>` columns);
+//! * **apriori** — per point, the precision governor inverts the Ozaki
+//!   error bound against the κ pre-pass (the old `AdaptivePolicy`);
+//! * **feedback** — the a-priori seed plus measured-residual
+//!   calibration and hysteresis from FP64 probes (the closed loop).
+//!
+//! Cost is counted in INT8 slice-pair products (the quantity ozIMMU's
+//! runtime scales with, `s(s+1)/2` per GEMM), accuracy as the Table-1
+//! max relative error; feedback rows additionally report their probe
+//! overhead.  `to_json` renders the rows as `BENCH_precision.json` for
+//! the CI perf trail.
 
-use crate::coordinator::{AdaptivePolicy, Dispatcher};
 use crate::bench::Table;
+use crate::coordinator::{DispatchConfig, Dispatcher};
 use crate::error::Result;
 use crate::must::greens::g_rel_err;
 use crate::must::params::CaseParams;
 use crate::must::scf::{ModeSelect, ScfDriver, ScfResult};
 use crate::ozaki::ComputeMode;
+use crate::precision::{PrecisionConfig, PrecisionMode};
 
 /// One policy's accuracy/cost point.
 #[derive(Clone, Debug)]
-pub struct AdaptiveAblation {
-    /// Policy label (`fixed_6`, `adaptive@1e-8`, ...).
+pub struct PrecisionAblation {
+    /// Policy label (`fixed_6`, `apriori@1e-9`, `feedback@1e-9`, ...).
     pub policy: String,
     /// Max relative error of Re G vs the reference.
     pub max_real: f64,
@@ -29,6 +39,8 @@ pub struct AdaptiveAblation {
     pub products: f64,
     /// Mean split number across energy points.
     pub mean_splits: f64,
+    /// Milliseconds the feedback probes cost (0 for unprobed policies).
+    pub probe_ms: f64,
 }
 
 fn cost_and_errors(reference: &ScfResult, run: &ScfResult) -> (f64, f64, f64, f64) {
@@ -51,59 +63,108 @@ fn cost_and_errors(reference: &ScfResult, run: &ScfResult) -> (f64, f64, f64, f6
     (max_real, max_imag, products, splits_sum / n.max(1) as f64)
 }
 
-/// Run the ablation: fixed splits vs adaptive targets.
-pub fn run_adaptive_ablation(
+/// Build a dispatcher for one ablation row: the shared base config with
+/// this row's compute mode and precision policy.
+fn row_dispatcher(
+    base: &DispatchConfig,
+    mode: ComputeMode,
+    precision: PrecisionConfig,
+) -> Result<Dispatcher> {
+    let mut cfg = base.clone();
+    cfg.mode = mode;
+    cfg.precision = precision;
+    Dispatcher::new(cfg)
+}
+
+/// Run the ablation: fixed splits vs the a-priori and feedback
+/// governors, each with its own dispatcher so policies can never bleed
+/// into each other.
+pub fn run_precision_ablation(
     case: &CaseParams,
-    dispatcher: &Dispatcher,
+    base: &DispatchConfig,
     fixed: &[u32],
     targets: &[f64],
-) -> Result<Vec<AdaptiveAblation>> {
-    // Full SCF (all iterations): the adaptive κ pre-pass runs once per
-    // distinct energy point and amortises across iterations.
-    let driver = ScfDriver::new(case.clone(), dispatcher)?;
-    let reference = driver.run(ModeSelect::Fixed(ComputeMode::Dgemm))?;
+) -> Result<Vec<PrecisionAblation>> {
+    // Rows that must not be retuned pin the governor to fixed mode but
+    // keep the rest of the user's [precision] settings.
+    let pinned = PrecisionConfig {
+        mode: PrecisionMode::Fixed,
+        ..base.precision
+    };
+    // Reference: native FP64 under a fixed-precision dispatcher.  Its
+    // driver calibrates the charge target (FP64 DOS pass) once; the
+    // calibrated parameters are reused by every row below so the pass
+    // does not repeat per dispatcher.
+    let dref = row_dispatcher(base, ComputeMode::Dgemm, pinned)?;
+    let drv = ScfDriver::new(case.clone(), &dref)?;
+    let case = drv.params.clone();
+    let reference = drv.run(ModeSelect::Fixed(ComputeMode::Dgemm))?;
 
     let mut out = Vec::new();
     for &s in fixed {
-        let run = driver.run(ModeSelect::Fixed(ComputeMode::Int8 { splits: s }))?;
+        let mode = ComputeMode::Int8 { splits: s };
+        let d = row_dispatcher(base, mode, pinned)?;
+        let drv = ScfDriver::new(case.clone(), &d)?;
+        let run = drv.run(ModeSelect::Fixed(mode))?;
         let (max_real, max_imag, products, mean) = cost_and_errors(&reference, &run);
-        out.push(AdaptiveAblation {
+        out.push(PrecisionAblation {
             policy: format!("fixed_{s}"),
             max_real,
             max_imag,
             products,
             mean_splits: mean,
+            probe_ms: 0.0,
         });
     }
     for &target in targets {
-        let pol = AdaptivePolicy {
-            target,
-            ..Default::default()
-        };
-        let run = driver.run(ModeSelect::Adaptive(pol))?;
-        let (max_real, max_imag, products, mean) = cost_and_errors(&reference, &run);
-        // the adaptive pre-pass costs one s=4 factorisation per
-        // *distinct* energy point (cached across iterations)
-        let pre = 4.0 * 5.0 / 2.0;
-        out.push(AdaptiveAblation {
-            policy: format!("adaptive(1e{:.0})", target.log10()),
-            max_real,
-            max_imag,
-            products: products + pre * run.iterations[0].points.len() as f64,
-            mean_splits: mean,
-        });
+        for pmode in [PrecisionMode::Apriori, PrecisionMode::Feedback] {
+            // inherit the user's [precision] tuning (splits window,
+            // thresholds, probe cadence); only the mode and the swept
+            // target belong to the ablation row
+            let precision = PrecisionConfig {
+                mode: pmode,
+                target,
+                ..base.precision
+            };
+            let d = row_dispatcher(
+                base,
+                ComputeMode::Int8 {
+                    splits: precision.max_splits,
+                },
+                precision,
+            )?;
+            // `case` was calibrated by the reference driver above, so
+            // this driver issues no calibration GEMMs and `d`'s fresh
+            // registry records the governed run alone
+            let drv = ScfDriver::new(case.clone(), &d)?;
+            let run = drv.run(ModeSelect::Governed)?;
+            let (max_real, max_imag, products, mean) = cost_and_errors(&reference, &run);
+            // the κ pre-pass costs one s=4 factorisation per *distinct*
+            // energy point (cached across iterations)
+            let pre = 4.0 * 5.0 / 2.0 * run.iterations[0].points.len() as f64;
+            let probe_ms = d.report().sites.totals().probe_s * 1e3;
+            out.push(PrecisionAblation {
+                policy: format!("{}@{target:.0e}", pmode.name()),
+                max_real,
+                max_imag,
+                products: products + pre,
+                mean_splits: mean,
+                probe_ms,
+            });
+        }
     }
     Ok(out)
 }
 
 /// Render the ablation table.
-pub fn render(rows: &[AdaptiveAblation]) -> String {
+pub fn render(rows: &[PrecisionAblation]) -> String {
     let mut t = Table::new(&[
         "policy",
         "max_real",
         "max_imag",
         "slice-pair products",
         "mean splits",
+        "probe_ms",
     ]);
     for r in rows {
         t.row(&[
@@ -112,32 +173,85 @@ pub fn render(rows: &[AdaptiveAblation]) -> String {
             format!("{:.2e}", r.max_imag),
             format!("{:.0}", r.products),
             format!("{:.2}", r.mean_splits),
+            format!("{:.2}", r.probe_ms),
         ]);
     }
     t.render()
 }
 
+/// Render the rows as the `BENCH_precision.json` array (hand-rolled —
+/// serde is unavailable offline; one object per line like the other
+/// `BENCH_*.json` emitters).
+pub fn to_json(rows: &[PrecisionAblation]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"policy\": \"{}\", \"max_real\": {:e}, \"max_imag\": {:e}, \
+             \"slice_pair_products\": {:e}, \"mean_splits\": {:e}, \"probe_ms\": {:e}}}{}\n",
+            r.policy,
+            r.max_real,
+            r.max_imag,
+            r.products,
+            r.mean_splits,
+            r.probe_ms,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::DispatchConfig;
     use crate::must::params::tiny_case;
 
     #[test]
-    fn adaptive_beats_fixed_on_cost_at_matched_accuracy() {
-        let d = Dispatcher::new(DispatchConfig::host_only(ComputeMode::Dgemm)).unwrap();
-        let case = tiny_case();
-        let rows = run_adaptive_ablation(&case, &d, &[8], &[1e-8]).unwrap();
-        assert_eq!(rows.len(), 2);
+    fn governed_policies_beat_fixed_max_on_cost_at_matched_accuracy() {
+        let base = DispatchConfig::host_only(ComputeMode::Dgemm);
+        let rows = run_precision_ablation(&tiny_case(), &base, &[9], &[1e-8]).unwrap();
+        assert_eq!(rows.len(), 3);
         let fixed = &rows[0];
-        let adaptive = &rows[1];
-        // accuracy within the target, cost below the fixed-max policy
-        assert!(adaptive.max_real < 1e-6, "{:?}", adaptive);
+        let apriori = &rows[1];
+        let feedback = &rows[2];
+        assert!(fixed.policy.starts_with("fixed_9"));
+        assert!(apriori.policy.starts_with("apriori"));
+        assert!(feedback.policy.starts_with("feedback"));
+        // accuracy within the target's headroom for both governors
+        assert!(apriori.max_real < 1e-6, "{apriori:?}");
+        assert!(feedback.max_real < 1e-6, "{feedback:?}");
+        // the acceptance bar: strictly fewer slice-pair products than
+        // the fixed worst-case policy (κ pre-pass included)
         assert!(
-            adaptive.mean_splits < 8.0,
-            "adaptive should use fewer splits on average: {:?}",
-            adaptive
+            apriori.products < fixed.products,
+            "apriori {apriori:?} vs fixed {fixed:?}"
         );
-        assert!(fixed.max_real <= adaptive.max_real * 1.5 + 1e-12);
+        assert!(
+            feedback.products < fixed.products,
+            "feedback {feedback:?} vs fixed {fixed:?}"
+        );
+        // both governors must actually spend fewer splits on average
+        // than the worst-case fixed policy
+        assert!(apriori.mean_splits < 9.0, "{apriori:?}");
+        assert!(feedback.mean_splits < 9.0, "{feedback:?}");
+        assert!(feedback.probe_ms >= 0.0);
+    }
+
+    #[test]
+    fn json_emitter_is_well_formed() {
+        let rows = vec![PrecisionAblation {
+            policy: "fixed_6".into(),
+            max_real: 1.5e-9,
+            max_imag: 2.5e-9,
+            products: 21.0,
+            mean_splits: 6.0,
+            probe_ms: 0.0,
+        }];
+        let j = to_json(&rows);
+        assert!(j.starts_with("[\n"));
+        assert!(j.ends_with("]\n"));
+        assert!(j.contains("\"policy\": \"fixed_6\""));
+        assert!(j.contains("\"slice_pair_products\""));
+        assert!(!j.contains(",\n]"), "no trailing comma");
     }
 }

@@ -14,7 +14,6 @@ use crate::coordinator::Dispatcher;
 use crate::error::Result;
 use crate::must::params::CaseParams;
 use crate::must::scf::{ModeSelect, ScfDriver};
-use crate::ozaki::ComputeMode;
 
 /// One mode's end-to-end timing.
 #[derive(Clone, Debug)]
@@ -31,22 +30,26 @@ pub struct E2eTiming {
     pub modeled_move_s: f64,
 }
 
-/// Run one SCF pass per mode, recording wall time + modelled trace cost.
+/// Run one SCF pass per mode selection, recording wall time + modelled
+/// trace cost.  Passing [`ModeSelect::Governed`] times the precision
+/// governor the dispatcher is configured with (the `must-scf`
+/// subcommand does this whenever `OZACCEL_PRECISION` / `[precision]`
+/// enables it); fixed selections stay pinned.
 pub fn run_e2e_timing(
     case: &CaseParams,
     dispatcher: &Dispatcher,
-    modes: &[ComputeMode],
+    selects: &[ModeSelect],
 ) -> Result<Vec<E2eTiming>> {
     let driver = ScfDriver::new(case.clone(), dispatcher)?;
     let mut out = Vec::new();
-    for &mode in modes {
+    for &select in selects {
         dispatcher.reset_stats();
         let t0 = Instant::now();
-        driver.run(ModeSelect::Fixed(mode))?;
+        let run = driver.run(select)?;
         let measured = t0.elapsed().as_secs_f64();
         let rep = dispatcher.report();
         out.push(E2eTiming {
-            mode: mode.short_name(),
+            mode: run.mode_name,
             measured_s: measured,
             gemm_calls: rep.total_calls,
             modeled_gemm_s: rep.modeled_gpu_s,
@@ -89,6 +92,7 @@ mod tests {
     use super::*;
     use crate::coordinator::DispatchConfig;
     use crate::must::params::tiny_case;
+    use crate::ozaki::ComputeMode;
 
     #[test]
     fn e2e_timing_rows() {
@@ -98,7 +102,10 @@ mod tests {
         let rows = run_e2e_timing(
             &case,
             &d,
-            &[ComputeMode::Dgemm, ComputeMode::Int8 { splits: 6 }],
+            &[
+                ModeSelect::Fixed(ComputeMode::Dgemm),
+                ModeSelect::Fixed(ComputeMode::Int8 { splits: 6 }),
+            ],
         )
         .unwrap();
         assert_eq!(rows.len(), 2);

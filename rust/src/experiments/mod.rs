@@ -9,7 +9,7 @@ pub mod figure1;
 pub mod gemm_bench;
 pub mod table1;
 
-pub use adaptive::{run_adaptive_ablation, AdaptiveAblation};
+pub use adaptive::{run_precision_ablation, PrecisionAblation};
 pub use datamove::{run_datamove_comparison, DataMoveRow};
 pub use e2e_time::{run_e2e_timing, E2eTiming};
 pub use figure1::{ascii_plot, run_figure1, Figure1Point, Figure1Series};

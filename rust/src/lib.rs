@@ -55,6 +55,17 @@
 //!   kernel choice, microkernel ISA, band counts, pack time, and cache
 //!   traffic in the PEAK per-site report.
 //!
+//! ## Precision governor ([`precision`])
+//!
+//! Split selection is a first-class subsystem rather than a dispatcher
+//! field: per call site, the governor seeds the split count from the
+//! a-priori Ozaki error bound and — in feedback mode — closes the loop
+//! with deterministic FP64 probes of sampled output rows and consumer
+//! condition numbers fed back from the LU/SCF seam, ramping splits up
+//! or down with hysteresis (`OZACCEL_PRECISION=fixed|apriori|feedback`,
+//! `run.precision.*`).  The per-site split trajectory and probe cost
+//! appear in the PEAK report's `splits` and `probe_ms` columns.
+//!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! model once, and the Rust binary is self-contained afterwards.
 //!
@@ -109,6 +120,7 @@ pub mod logging;
 pub mod must;
 pub mod ozaki;
 pub mod perfmodel;
+pub mod precision;
 pub mod runtime;
 pub mod testing;
 

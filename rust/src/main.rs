@@ -25,7 +25,8 @@ SUBCOMMANDS
   bench-gemm  E3: DGEMM TFLOPS, measured + GH200/GB200 models (§4)
   must-scf    E4: end-to-end MuST-mini run with offload report (§4 timing)
   datamove    E5: data-movement strategy comparison (§2.1)
-  adaptive    E6: adaptive-precision ablation (§4 future work)
+  adaptive    E6: precision-governor ablation, fixed vs apriori vs
+              feedback (alias: precision); writes BENCH_precision.json
   modes       list supported compute modes
   help        this text
 
@@ -178,10 +179,32 @@ fn run(cli: &Cli) -> Result<()> {
         }
         "must-scf" => {
             let cfg = build_config(cli)?;
-            let dispatcher = Dispatcher::new(cfg.dispatch.clone())?;
-            let modes = vec![ComputeMode::Dgemm, cfg.dispatch.mode];
-            let rows = exp::run_e2e_timing(&cfg.case, &dispatcher, &modes)?;
-            println!("{}", exp::e2e_time::render(&rows, cfg.dispatch.gpu.name));
+            // The governed selection makes OZACCEL_PRECISION /
+            // [precision] real in the shipped binary: apriori/feedback
+            // runs retune per energy point, fixed runs stay pinned.
+            // The governor needs an emulated base mode to retune, so a
+            // dgemm-mode config gets the ablation's convention
+            // (Int8 at the window ceiling) for its governed row.
+            let mut dispatch = cfg.dispatch.clone();
+            let active =
+                dispatch.precision.mode != ozaccel::precision::PrecisionMode::Fixed;
+            if active && dispatch.mode == ComputeMode::Dgemm {
+                dispatch.mode = ComputeMode::Int8 {
+                    splits: dispatch.precision.max_splits,
+                };
+            }
+            let governed = if active {
+                ozaccel::must::scf::ModeSelect::Governed
+            } else {
+                ozaccel::must::scf::ModeSelect::Fixed(dispatch.mode)
+            };
+            let dispatcher = Dispatcher::new(dispatch.clone())?;
+            let selects = vec![
+                ozaccel::must::scf::ModeSelect::Fixed(ComputeMode::Dgemm),
+                governed,
+            ];
+            let rows = exp::run_e2e_timing(&cfg.case, &dispatcher, &selects)?;
+            println!("{}", exp::e2e_time::render(&rows, dispatch.gpu.name));
             println!("{}", dispatcher.report().render());
             Ok(())
         }
@@ -192,13 +215,18 @@ fn run(cli: &Cli) -> Result<()> {
             println!("{}", exp::datamove::render(&rows));
             Ok(())
         }
-        "adaptive" => {
+        "adaptive" | "precision" => {
             let cfg = build_config(cli)?;
-            let dispatcher = Dispatcher::new(cfg.dispatch.clone())?;
             let fixed: Vec<u32> = cfg.sweep_splits.clone();
             let rows =
-                exp::run_adaptive_ablation(&cfg.case, &dispatcher, &fixed, &[1e-6, 1e-9])?;
+                exp::run_precision_ablation(&cfg.case, &cfg.dispatch, &fixed, &[1e-6, 1e-9])?;
             println!("{}", exp::adaptive::render(&rows));
+            let path = exp::write_output(
+                &cfg.output_dir,
+                "BENCH_precision.json",
+                &exp::adaptive::to_json(&rows),
+            )?;
+            println!("wrote {}", path.display());
             Ok(())
         }
         other => Err(ozaccel::Error::Config(format!(

@@ -4,7 +4,9 @@
 use log::info;
 
 use crate::complex::c64;
-use crate::coordinator::{AdaptivePolicy, Dispatcher};
+#[allow(deprecated)]
+use crate::coordinator::AdaptivePolicy;
+use crate::coordinator::Dispatcher;
 use crate::error::Result;
 use crate::ozaki::ComputeMode;
 
@@ -17,13 +19,23 @@ use super::tau::TauSolver;
 use super::tmatrix::TMatrix;
 
 /// How the compute mode is chosen per energy point.
+#[allow(deprecated)] // the Adaptive variant carries the deprecated shim
 #[derive(Clone, Copy, Debug)]
 pub enum ModeSelect {
-    /// One fixed mode for every GEMM (the paper's Table-1 columns).
+    /// One fixed mode for every GEMM (the paper's Table-1 columns),
+    /// executed verbatim: the τ solver pins it past the precision
+    /// governor, so `splits_used` always reports what actually ran.
     Fixed(ComputeMode),
-    /// Per-point split count from the condition estimate (paper §4
-    /// future work, experiment E6).
+    /// Per-point split count from the condition estimate via the
+    /// deprecated [`AdaptivePolicy`] shim (kept for compatibility;
+    /// prefer [`ModeSelect::Governed`]).
     Adaptive(AdaptivePolicy),
+    /// Per-point precision from the dispatcher's governor
+    /// (`run.precision.*` / `OZACCEL_PRECISION`): a cached κ pre-pass
+    /// seeds each distinct energy point, the τ solver feeds measured κ
+    /// back, and — in feedback mode — FP64 probes of the trailing
+    /// updates ramp the split count with hysteresis (experiment E6).
+    Governed,
 }
 
 /// One evaluated energy point.
@@ -70,9 +82,9 @@ pub struct ScfDriver<'a> {
     sc: StructureConstants,
     greens: GreensCalculator,
     dispatcher: &'a Dispatcher,
-    /// κ estimates per energy point (keyed by z bits): the adaptive
-    /// pre-pass runs once per distinct z and is reused across SCF
-    /// iterations and policies, amortising its cost.
+    /// κ estimates per energy point (keyed by z bits): the governed /
+    /// adaptive pre-pass runs once per distinct z per driver and is
+    /// reused across SCF iterations, amortising its cost.
     kappa_cache: std::sync::Mutex<std::collections::HashMap<(u64, u64), f64>>,
 }
 
@@ -136,23 +148,49 @@ impl<'a> ScfDriver<'a> {
         let (mode, kappa_pre) = match select {
             ModeSelect::Fixed(m) => (m, None),
             ModeSelect::Adaptive(pol) => {
-                let key = (z.re.to_bits(), z.im.to_bits());
-                let cached = self.kappa_cache.lock().unwrap().get(&key).copied();
-                let kappa = match cached {
-                    Some(k) => k,
-                    None => {
-                        let k = solver.estimate_kappa(t, z)?;
-                        self.kappa_cache.lock().unwrap().insert(key, k);
-                        k
-                    }
-                };
+                let kappa = self.cached_kappa(&solver, t, z)?;
                 (pol.mode_for(self.params.dim(), kappa), Some(kappa))
+            }
+            ModeSelect::Governed => {
+                // κ seam, SCF side: the cheap pre-pass estimate (cached
+                // per distinct z, amortised across iterations) seeds
+                // the governor before it decides; the τ solver feeds
+                // the measured κ back afterwards.  With the governor in
+                // fixed mode the pre-pass would be discarded work, so
+                // skip it and let solve_governed pass the configured
+                // mode through.
+                let active = self.dispatcher.precision().mode
+                    != crate::precision::PrecisionMode::Fixed;
+                let kappa_hint = if active {
+                    Some(self.cached_kappa(&solver, t, z)?)
+                } else {
+                    None
+                };
+                let (r, dec) = solver.solve_governed(t, z, kappa_hint)?;
+                let g = self.greens.g_of_z(&r.tau11, z);
+                return Ok((g, kappa_hint.unwrap_or(r.kappa), dec.splits));
             }
         };
         let r = solver.solve_mode(t, z, mode)?;
         let g = self.greens.g_of_z(&r.tau11, z);
         let splits = mode.splits().unwrap_or(0);
         Ok((g, kappa_pre.unwrap_or(r.kappa), splits))
+    }
+
+    /// κ estimate for one energy point, cached by the bits of `z` (the
+    /// pre-pass runs once per distinct point per driver and is reused
+    /// across SCF iterations, amortising its cost).
+    fn cached_kappa(&self, solver: &TauSolver<'_>, t: &TMatrix, z: c64) -> Result<f64> {
+        let key = (z.re.to_bits(), z.im.to_bits());
+        let cached = self.kappa_cache.lock().unwrap().get(&key).copied();
+        match cached {
+            Some(k) => Ok(k),
+            None => {
+                let k = solver.estimate_kappa(t, z)?;
+                self.kappa_cache.lock().unwrap().insert(key, k);
+                Ok(k)
+            }
+        }
     }
 
     /// Evaluate G(z) at every contour point.
@@ -199,6 +237,10 @@ impl<'a> ScfDriver<'a> {
         let mode_name = match select {
             ModeSelect::Fixed(m) => m.short_name(),
             ModeSelect::Adaptive(p) => format!("adaptive(τ={:.0e})", p.target),
+            ModeSelect::Governed => {
+                let p = self.dispatcher.precision();
+                format!("governed[{}](τ={:.0e})", p.mode.name(), p.target)
+            }
         };
         let mut iterations = Vec::with_capacity(self.params.iterations);
         let mut dv = 0.0f64;
@@ -338,6 +380,46 @@ mod tests {
         // Fermi level should sit near the resonance by calibration
         let ef1 = res.iterations[0].efermi;
         assert!((ef1 - 0.725).abs() < 0.05, "E_F = {ef1}");
+    }
+
+    #[test]
+    fn governed_scf_varies_splits_and_matches_reference() {
+        use crate::precision::{PrecisionConfig, PrecisionMode};
+        let p = crate::must::params::tiny_case();
+        let dref = Dispatcher::new(DispatchConfig::host_only(ComputeMode::Dgemm)).unwrap();
+        let refdrv = ScfDriver::new(p.clone(), &dref).unwrap();
+        let reference = refdrv.run(ModeSelect::Fixed(ComputeMode::Dgemm)).unwrap();
+
+        let mut cfg = DispatchConfig::host_only(ComputeMode::Int8 { splits: 18 });
+        cfg.precision = PrecisionConfig {
+            mode: PrecisionMode::Feedback,
+            target: 1e-8,
+            ..Default::default()
+        };
+        let d = Dispatcher::new(cfg).unwrap();
+        let driver = ScfDriver::new(p, &d).unwrap();
+        let run = driver.run(ModeSelect::Governed).unwrap();
+        for (a, b) in reference.iterations.iter().zip(&run.iterations) {
+            for (pa, pb) in a.points.iter().zip(&b.points) {
+                assert!((3..=18).contains(&pb.splits_used), "{:?}", pb);
+                let rel = (pa.g - pb.g).abs() / pa.g.abs();
+                assert!(rel < 1e-5, "G(z) rel err {rel:e} at z={:?}", pa.z);
+            }
+        }
+        // the governor must have used fewer than the worst-case splits
+        // somewhere (the whole point of governing)
+        let min_used = run
+            .iterations
+            .iter()
+            .flat_map(|it| it.points.iter().map(|pt| pt.splits_used))
+            .min()
+            .unwrap();
+        assert!(min_used < 18, "governor never came off the ceiling");
+        // and the PEAK report surfaces the trajectory + probe columns
+        let rep = d.report();
+        let txt = rep.render();
+        assert!(txt.contains("precision=feedback"));
+        assert!(rep.sites.totals().splits_max > 0);
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::coordinator::Dispatcher;
 use crate::error::Result;
 use crate::linalg::{cond_estimate_1norm, zgetrf_blocked, zgetrs, ZMat};
 use crate::ozaki::ComputeMode;
+use crate::precision::Decision;
 
 use super::params::CaseParams;
 use super::structure::StructureConstants;
@@ -54,14 +55,19 @@ impl<'a> TauSolver<'a> {
         self.solve_mode(t, z, self.dispatcher.mode())
     }
 
-    /// Solve with an explicit compute mode (adaptive precision path).
+    /// Solve with an explicit compute mode, executed verbatim: the mode
+    /// is pinned past the precision governor so fixed-split sweeps
+    /// (Table 1, Figure 1, the ablation's `fixed_*` rows) report
+    /// exactly the splits they ran, whatever `precision.mode` the
+    /// dispatcher carries.  Governed solves go through
+    /// [`TauSolver::solve_governed`].
     pub fn solve_mode(&self, t: &TMatrix, z: c64, mode: ComputeMode) -> Result<TauResult> {
         let m = self.sc.kkr_matrix(t, z);
         let nlm = self.params.n_lm();
         // Blocked LU; every trailing update is a ZGEMM through the
         // coordinator — the call SCILIB-Accel would intercept in MuST.
         let f = zgetrf_blocked(&m, self.params.nb, &|a, b| {
-            self.dispatcher.zgemm_mode(mode, a, b)
+            self.dispatcher.zgemm_pinned(mode, a, b)
         })?;
         // Scattering-path solve: τ columns for site 1 are M⁻¹ t e_j.
         let rhs = self.sc.t_rhs(t, z, nlm);
@@ -71,13 +77,76 @@ impl<'a> TauSolver<'a> {
         Ok(TauResult { tau11, kappa })
     }
 
+    /// Solve τ^{11}(z) with the split count the dispatcher's precision
+    /// governor settles on for this solver's call site — the LU/SCF
+    /// seam of the feedback loop.
+    ///
+    /// The flow per energy point: an optional κ hint (e.g. the SCF
+    /// driver's cached pre-pass estimate) is fed to the governor first,
+    /// the governor decides a mode for the whole factorisation, every
+    /// trailing-update ZGEMM runs through the dispatcher attributed to
+    /// this one site (so feedback probes adjust the same state the next
+    /// point will read), and the *measured* condition number of the
+    /// factorised matrix is fed back afterwards — the consumer κ pulled
+    /// automatically from [`cond_estimate_1norm`].
+    pub fn solve_governed(
+        &self,
+        t: &TMatrix,
+        z: c64,
+        kappa_hint: Option<f64>,
+    ) -> Result<(TauResult, Decision)> {
+        let site = crate::coordinator::call_site();
+        let governor = self.dispatcher.governor();
+        if let Some(k) = kappa_hint {
+            governor.feed_kappa(site, k);
+        }
+        // apply(), not decide(): a dispatcher configured for native
+        // FP64 must keep solving in FP64 — the governor only retunes
+        // emulated modes ("reference runs stay pinned").
+        let dec = governor.apply(site, self.dispatcher.mode(), self.params.dim());
+        let m = self.sc.kkr_matrix(t, z);
+        let nlm = self.params.n_lm();
+        let f = zgetrf_blocked(&m, self.params.nb, &|a, b| {
+            self.dispatcher.zgemm_at(site, dec.mode, a, b)
+        })?;
+        let rhs = self.sc.t_rhs(t, z, nlm);
+        let x = zgetrs(&f, &rhs)?;
+        let tau11 = x.block(0, 0, nlm, nlm);
+        // Feedback probes may have ramped the site while the
+        // factorisation ran; report the larger of the entry decision
+        // and the mid-LU settled count so downstream cost accounting
+        // (slice-pair products per point) never undercounts a ramp-up.
+        // Snapshot BEFORE feeding the measured κ below: the κ
+        // fast-attack is a next-point adjustment and must not be
+        // charged to work this point already executed.  The PEAK
+        // trajectory remains the exact record.
+        let dec = match dec.mode {
+            ComputeMode::Int8 { .. } => {
+                let settled = governor
+                    .snapshot(site)
+                    .map(|s| s.splits)
+                    .unwrap_or(dec.splits);
+                let splits = dec.splits.max(settled);
+                Decision {
+                    mode: ComputeMode::Int8 { splits },
+                    splits,
+                }
+            }
+            ComputeMode::Dgemm => dec,
+        };
+        let kappa = cond_estimate_1norm(&m, &f, 3)?;
+        governor.feed_kappa(site, kappa);
+        Ok((TauResult { tau11, kappa }, dec))
+    }
+
     /// Condition estimate only, using a cheap low-split factorisation —
-    /// the pre-pass of the adaptive policy (κ needs no accuracy).
+    /// the pre-pass of the governed/adaptive policies (κ needs no
+    /// accuracy, so the mode is pinned past the governor).
     pub fn estimate_kappa(&self, t: &TMatrix, z: c64) -> Result<f64> {
         let m = self.sc.kkr_matrix(t, z);
         let f = zgetrf_blocked(&m, self.params.nb, &|a, b| {
             self.dispatcher
-                .zgemm_mode(ComputeMode::Int8 { splits: 4 }, a, b)
+                .zgemm_pinned(ComputeMode::Int8 { splits: 4 }, a, b)
         })?;
         cond_estimate_1norm(&m, &f, 3)
     }
@@ -137,6 +206,40 @@ mod tests {
             k_res > 1.3 * k_arc,
             "kappa at resonance {k_res:.1} vs arc {k_arc:.1}"
         );
+    }
+
+    #[test]
+    fn governed_solve_feeds_kappa_and_stays_accurate() {
+        use crate::precision::{PrecisionConfig, PrecisionMode};
+        let p = tiny_case();
+        let sc = StructureConstants::new(Cluster::fcc(p.alat, p.n_sites), p.lmax);
+        let mut cfg = DispatchConfig::host_only(ComputeMode::Int8 { splits: 18 });
+        cfg.precision = PrecisionConfig {
+            mode: PrecisionMode::Apriori,
+            target: 1e-9,
+            ..Default::default()
+        };
+        let d = Dispatcher::new(cfg).unwrap();
+        let t = TMatrix::new(&p);
+        let solver = TauSolver::new(&sc, &p, &d);
+        let z = c64(0.5, 0.1);
+        // first solve decides with κ = 1 (nothing fed yet)
+        let (r1, dec1) = solver.solve_governed(&t, z, None).unwrap();
+        assert!((3..=18).contains(&dec1.splits), "{dec1:?}");
+        // the measured κ was fed back; re-deciding with it can only
+        // hold or raise the split count (monotone in κ)
+        let (r2, dec2) = solver.solve_governed(&t, z, None).unwrap();
+        assert!(r1.kappa > 1.0);
+        assert!(dec2.splits >= dec1.splits, "{dec2:?} < {dec1:?}");
+        // and the governed solve meets the reference within the target
+        let reference = solver.solve_mode(&t, z, ComputeMode::Dgemm).unwrap();
+        let mut err = 0.0f64;
+        let mut scale = 0.0f64;
+        for (a, b) in r2.tau11.data().iter().zip(reference.tau11.data()) {
+            err = err.max((*a - *b).abs());
+            scale = scale.max(b.abs());
+        }
+        assert!(err / scale < 1e-6, "governed rel err {:e}", err / scale);
     }
 
     #[test]

@@ -19,11 +19,60 @@
 use super::split::SLICE_BITS;
 use super::modes::{MAX_SPLITS, MIN_SPLITS};
 
+/// The a-priori model constant `c` (validated against measurement in
+/// the `ozaki::gemm` tests; the precision governor's feedback mode
+/// replaces it per call site with a measured value).
+pub const DEFAULT_ERROR_CONSTANT: f64 = 4.0;
+
+/// The forward bound with an explicit model constant — the form the
+/// precision governor calibrates per call site from probed residuals.
+pub fn forward_error_bound_with(c: f64, splits: u32, k_dim: usize) -> f64 {
+    c * (k_dim as f64).sqrt() * 2.0f64.powi(-(SLICE_BITS as i32) * (splits as i32 - 1))
+}
+
 /// Probabilistic bound on the max-norm relative error of one emulated
 /// DGEMM (random-sign accumulation model; see module docs).
 pub fn forward_error_bound(splits: u32, k_dim: usize) -> f64 {
-    let c = 4.0;
-    c * (k_dim as f64).sqrt() * 2.0f64.powi(-(SLICE_BITS as i32) * (splits as i32 - 1))
+    forward_error_bound_with(DEFAULT_ERROR_CONSTANT, splits, k_dim)
+}
+
+/// Inverse of the bound: the model constant a *measured* residual
+/// implies for a GEMM that ran with `splits` slices over contraction
+/// size `k_dim`.  A probe that measured `rel_err` says the effective
+/// constant is `rel_err / (sqrt(K) · 2^{-7(s-1)})`; feeding this back
+/// into [`forward_error_bound_with`] turns the a-priori model into an
+/// a-posteriori one.  Degenerate inputs fall back to the conservative
+/// default.
+pub fn implied_constant(measured_rel_err: f64, splits: u32, k_dim: usize) -> f64 {
+    let denom = (k_dim.max(1) as f64).sqrt()
+        * 2.0f64.powi(-(SLICE_BITS as i32) * (splits as i32 - 1));
+    if !measured_rel_err.is_finite() || measured_rel_err < 0.0 || denom <= 0.0 {
+        return DEFAULT_ERROR_CONSTANT;
+    }
+    measured_rel_err / denom
+}
+
+/// Smallest split count in `[min, max]` whose bound (with model
+/// constant `c`), amplified by the consumer's condition number, meets
+/// `target` relative accuracy — `None` when even `max` misses it.  The
+/// window is intersected with the supported `MIN_SPLITS..=MAX_SPLITS`.
+pub fn required_splits_in(
+    c: f64,
+    target: f64,
+    k_dim: usize,
+    kappa: f64,
+    min: u32,
+    max: u32,
+) -> Option<u32> {
+    let kappa = kappa.max(1.0);
+    let lo = min.max(MIN_SPLITS);
+    let hi = max.min(MAX_SPLITS);
+    for s in lo..=hi {
+        if forward_error_bound_with(c, s, k_dim) * kappa <= target {
+            return Some(s);
+        }
+    }
+    None
 }
 
 /// Smallest split count whose bound, amplified by the consumer's
@@ -32,13 +81,15 @@ pub fn forward_error_bound(splits: u32, k_dim: usize) -> f64 {
 /// This is the paper's §4 proposal made concrete: "dynamically adjusting
 /// the split number in that region" using conditioning information.
 pub fn required_splits(target: f64, k_dim: usize, kappa: f64) -> u32 {
-    let kappa = kappa.max(1.0);
-    for s in MIN_SPLITS..=MAX_SPLITS {
-        if forward_error_bound(s, k_dim) * kappa <= target {
-            return s;
-        }
-    }
-    MAX_SPLITS
+    required_splits_in(
+        DEFAULT_ERROR_CONSTANT,
+        target,
+        k_dim,
+        kappa,
+        MIN_SPLITS,
+        MAX_SPLITS,
+    )
+    .unwrap_or(MAX_SPLITS)
 }
 
 #[cfg(test)]
@@ -80,6 +131,39 @@ mod tests {
     fn required_splits_clamped_to_ozimmu_range() {
         assert_eq!(required_splits(1e-300, 2048, 1e12), MAX_SPLITS);
         assert_eq!(required_splits(1.0, 4, 1.0), MIN_SPLITS);
+    }
+
+    #[test]
+    fn implied_constant_inverts_the_bound() {
+        // bound → residual → implied constant must round-trip c exactly
+        for c in [0.25f64, 1.0, 4.0, 16.0] {
+            for s in [3u32, 6, 12] {
+                let measured = forward_error_bound_with(c, s, 512);
+                let got = implied_constant(measured, s, 512);
+                assert!((got - c).abs() < 1e-12 * c, "c={c} s={s}: {got}");
+            }
+        }
+        // degenerate measurements fall back to the default
+        assert_eq!(implied_constant(f64::NAN, 6, 64), DEFAULT_ERROR_CONSTANT);
+        assert_eq!(implied_constant(-1.0, 6, 64), DEFAULT_ERROR_CONSTANT);
+        // an exactly-zero residual implies constant zero (caller floors)
+        assert_eq!(implied_constant(0.0, 6, 64), 0.0);
+    }
+
+    #[test]
+    fn required_splits_in_respects_window_and_unreachability() {
+        // unreachable target → None, not a silent clamp
+        assert_eq!(
+            required_splits_in(4.0, 1e-300, 2048, 1e12, MIN_SPLITS, MAX_SPLITS),
+            None
+        );
+        // windowed: the answer cannot leave [min, max]
+        let s = required_splits_in(4.0, 1e-9, 256, 1.0, 5, 9).unwrap();
+        assert!((5..=9).contains(&s));
+        // a smaller calibrated constant needs fewer splits
+        let tight = required_splits_in(4.0, 1e-9, 256, 1.0, 3, 18).unwrap();
+        let calibrated = required_splits_in(0.05, 1e-9, 256, 1.0, 3, 18).unwrap();
+        assert!(calibrated <= tight, "{calibrated} !<= {tight}");
     }
 
     #[test]

@@ -21,9 +21,12 @@ mod modes;
 mod split;
 mod zgemm;
 
-pub use error_model::{forward_error_bound, required_splits};
+pub use error_model::{
+    forward_error_bound, forward_error_bound_with, implied_constant, required_splits,
+    required_splits_in, DEFAULT_ERROR_CONSTANT,
+};
 pub use gemm::{int8_gemm_i32, ozaki_dgemm, ozaki_dgemm_naive, ozaki_dgemm_with};
-pub use modes::ComputeMode;
+pub use modes::{ComputeMode, MAX_SPLITS, MIN_SPLITS};
 pub use split::{
     reconstruct, row_scale_exponents, scale_rows, split_scaled, split_scaled_into_panels,
     split_scaled_into_panels_mt, SLICE_BITS,

@@ -1,0 +1,471 @@
+//! The precision governor: per-call-site split selection with a-priori
+//! seeding, measured-residual calibration, and hysteresis.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::site_state::SiteState;
+use super::{PrecisionConfig, PrecisionMode};
+use crate::ozaki::{
+    forward_error_bound_with, implied_constant, required_splits_in, ComputeMode,
+};
+
+/// Interned call-site key (the same `&'static str` ids the PEAK
+/// profiler uses, see `crate::coordinator::CallSiteId`).
+pub type SiteKey = &'static str;
+
+/// Ceiling for the calibrated error-model constant (a wildly
+/// pessimistic probe cannot pin a site to `max_splits` forever).
+const CALIB_CEIL: f64 = 64.0;
+/// Floor for the calibrated constant (an exactly-zero residual decays
+/// toward this instead of 0, keeping the inverted bound meaningful).
+const CALIB_FLOOR: f64 = 0.01;
+/// Per-probe decay of the calibration's running max.
+const CALIB_DECAY: f64 = 0.9;
+/// Floor for the hysteresis goal: a probe compares against an FP64
+/// reference whose own rounding is O(K·ε) ≈ 1e-12 relative for the
+/// largest contractions we run, so demanding a measured residual below
+/// this is asking the probe to see past its instrument.  Without the
+/// floor, `target/κ` under extreme κ drops below FP64 resolution and
+/// every probe "fails", pinning the site at `max_splits` with the
+/// down-branch unreachable.  (The a-priori *model* seed is not floored
+/// — bounds are analytic, not measured.)
+const PROBE_MEASUREMENT_FLOOR: f64 = 1e-12;
+
+/// One governed choice: the mode to execute and its split count.
+///
+/// `splits` is total (0 for native FP64), so callers never need the
+/// partial match that used to hit `unreachable!()` in the old
+/// `AdaptivePolicy::splits_for`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    /// Mode the call should execute in.
+    pub mode: ComputeMode,
+    /// Split count of that mode (0 when `mode` is [`ComputeMode::Dgemm`]).
+    pub splits: u32,
+}
+
+impl Decision {
+    /// Wrap an explicit mode (splits derived, total — no panic path).
+    pub fn from_mode(mode: ComputeMode) -> Self {
+        Decision {
+            mode,
+            splits: mode.splits().unwrap_or(0),
+        }
+    }
+}
+
+/// Read-only snapshot of one site's governor state (reports, tests).
+#[derive(Clone, Debug)]
+pub struct SiteSnapshot {
+    /// Current split count (0 = never decided).
+    pub splits: u32,
+    /// Latest consumer κ fed to the site.
+    pub kappa: f64,
+    /// Calibrated error-model constant.
+    pub calib: f64,
+    /// Most recent probed residual.
+    pub last_err: f64,
+    /// Probes taken.
+    pub probes: u64,
+    /// Seconds spent probing.
+    pub probe_s: f64,
+    /// Split trajectory (consecutive duplicates collapsed).
+    pub trajectory: Vec<u32>,
+}
+
+/// Feedback-driven per-call-site precision selection.
+pub struct Governor {
+    cfg: PrecisionConfig,
+    sites: Mutex<HashMap<SiteKey, SiteState>>,
+}
+
+impl Governor {
+    /// Build a governor for the given configuration.  The config is
+    /// [normalized](PrecisionConfig::normalized) so the governor's
+    /// arithmetic is total even for configurations built in code
+    /// without `validate()`.
+    pub fn new(cfg: PrecisionConfig) -> Self {
+        Governor {
+            cfg: cfg.normalized(),
+            sites: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The configuration the governor runs under.
+    pub fn config(&self) -> &PrecisionConfig {
+        &self.cfg
+    }
+
+    /// A-priori split selection as a total function: the cheapest split
+    /// count in the configured window whose bound meets the target
+    /// under `kappa`, clamped to `max_splits` when the target is out of
+    /// reach.  Never panics, never leaves `[min_splits, max_splits]`.
+    pub fn splits_for(cfg: &PrecisionConfig, k_dim: usize, kappa: f64) -> (ComputeMode, u32) {
+        let cfg = cfg.normalized();
+        let s = seed_splits(&cfg, k_dim, kappa, crate::ozaki::DEFAULT_ERROR_CONSTANT);
+        (ComputeMode::Int8 { splits: s }, s)
+    }
+
+    /// Governed mode for a call that *requested* `requested`: fixed
+    /// mode and native-FP64 requests pass through untouched; emulated
+    /// requests are retuned per site under apriori/feedback.
+    pub fn apply(&self, site: SiteKey, requested: ComputeMode, k_dim: usize) -> Decision {
+        match (self.cfg.mode, requested) {
+            (PrecisionMode::Fixed, _) | (_, ComputeMode::Dgemm) => Decision::from_mode(requested),
+            (_, ComputeMode::Int8 { .. }) => self.decide(site, k_dim, requested),
+        }
+    }
+
+    /// Per-site *emulated* decision: always returns an Int8 mode in
+    /// apriori/feedback (`fallback` is returned verbatim only in fixed
+    /// mode).  Callers whose requested mode may be native FP64 and must
+    /// pass through untouched go through [`Governor::apply`] instead —
+    /// that is the seam both the dispatcher and the τ solver use.
+    ///
+    /// A site's effective contraction size is the *largest* `k_dim` it
+    /// has seen: the error budget belongs to the consumer (e.g. a whole
+    /// LU), so a small trailing-update GEMM re-entering the governor at
+    /// the same site must not be granted fewer splits than the
+    /// factorisation-level decision.
+    pub fn decide(&self, site: SiteKey, k_dim: usize, fallback: ComputeMode) -> Decision {
+        if self.cfg.mode == PrecisionMode::Fixed {
+            return Decision::from_mode(fallback);
+        }
+        let mut sites = self.sites.lock().unwrap();
+        let st = sites.entry(site).or_insert_with(SiteState::new);
+        let k_eff = k_dim.max(st.k_dim);
+        // Apriori re-derives on every decision; feedback holds its
+        // probe-walked state once seeded — except when the site's
+        // effective contraction size just grew, where the bound may now
+        // demand more than the held count (same one-jump semantics as
+        // the κ fast-attack; probes own the walk back down).
+        let s = if self.cfg.mode == PrecisionMode::Feedback && st.splits != 0 {
+            if k_eff > st.k_dim {
+                st.splits
+                    .max(seed_splits(&self.cfg, k_eff, st.kappa, st.calib))
+            } else {
+                st.splits
+            }
+        } else {
+            seed_splits(&self.cfg, k_eff, st.kappa, st.calib)
+        };
+        st.splits = s;
+        st.note_decision(s, k_eff);
+        Decision {
+            mode: ComputeMode::Int8 { splits: s },
+            splits: s,
+        }
+    }
+
+    /// Feed a measured consumer condition number (the LU/SCF seam).  In
+    /// feedback mode a κ that demands more splits than the site is
+    /// using raises them immediately (fast attack); walking back down
+    /// is left to the probes (slow decay).
+    pub fn feed_kappa(&self, site: SiteKey, kappa: f64) {
+        if !kappa.is_finite() || kappa <= 0.0 {
+            return;
+        }
+        if self.cfg.mode == PrecisionMode::Fixed {
+            return;
+        }
+        let mut sites = self.sites.lock().unwrap();
+        let st = sites.entry(site).or_insert_with(SiteState::new);
+        st.kappa = kappa;
+        if self.cfg.mode == PrecisionMode::Feedback && st.splits != 0 && st.k_dim != 0 {
+            let seed = seed_splits(&self.cfg, st.k_dim, kappa, st.calib);
+            if seed > st.splits {
+                st.splits = seed;
+                st.cooldown = self.cfg.cooldown;
+            }
+        }
+    }
+
+    /// Register one emulated call at `site`; returns the probe ordinal
+    /// when this call should be probed (feedback mode only, every
+    /// `probe_period`-th call).  Under concurrent dispatch the ordinal
+    /// assignment follows arrival order, like the rest of the per-site
+    /// accounting.
+    pub fn should_probe(&self, site: SiteKey) -> Option<u64> {
+        if self.cfg.mode != PrecisionMode::Feedback {
+            return None;
+        }
+        let mut sites = self.sites.lock().unwrap();
+        let st = sites.entry(site).or_insert_with(SiteState::new);
+        let ord = st.emulated_calls;
+        st.emulated_calls += 1;
+        if ord % self.cfg.probe_period as u64 == 0 {
+            Some(ord)
+        } else {
+            None
+        }
+    }
+
+    /// Close the loop with one probed residual: calibrate the error
+    /// model from the measurement, then ramp the site's split count
+    /// with hysteresis (up past `up_threshold·target/κ`, down below
+    /// `down_threshold·target/κ` when the calibrated bound predicts the
+    /// smaller count still meets the goal; `cooldown` probes must pass
+    /// between adjustments).
+    pub fn record_probe(&self, site: SiteKey, splits: u32, k_dim: usize, rel_err: f64, seconds: f64) {
+        let mut sites = self.sites.lock().unwrap();
+        let st = sites.entry(site).or_insert_with(SiteState::new);
+        st.probes += 1;
+        st.probe_s += seconds;
+        if !rel_err.is_finite() || rel_err < 0.0 {
+            return;
+        }
+        st.last_err = rel_err;
+        if st.splits == 0 {
+            // defensive seed for probes arriving before any decide():
+            // adopt the probed call's parameters so the κ fast-attack
+            // (which requires a known k_dim) works from the first feed
+            st.splits = splits.clamp(self.cfg.min_splits, self.cfg.max_splits);
+            st.k_dim = st.k_dim.max(k_dim);
+        }
+        if splits > 0 && k_dim > 0 {
+            // Only calibrate when the model's per-unit-constant residual
+            // at the probed split count is above the probe's FP64
+            // resolution: below it the measurement is instrument noise
+            // and would imply an absurd constant (clamped to the
+            // ceiling, ratcheting calib up on every probe and stalling
+            // the walk-down at high split counts).
+            if forward_error_bound_with(1.0, splits, k_dim) > PROBE_MEASUREMENT_FLOOR {
+                let c = implied_constant(rel_err, splits, k_dim);
+                st.calib = (st.calib * CALIB_DECAY).max(c).clamp(CALIB_FLOOR, CALIB_CEIL);
+            }
+        }
+        if self.cfg.mode != PrecisionMode::Feedback {
+            return;
+        }
+        // Hysteresis only acts on evidence gathered at the site's
+        // *current* split count: under concurrent dispatch (or a κ
+        // fast-attack between decision and probe) a stale measurement
+        // must not step a state it was not taken at.  Calibration above
+        // is exempt — it pairs the residual with the splits that
+        // produced it.
+        if splits != st.splits {
+            return;
+        }
+        let goal = (self.cfg.target / st.kappa.max(1.0)).max(PROBE_MEASUREMENT_FLOOR);
+        if st.cooldown > 0 {
+            st.cooldown -= 1;
+            return;
+        }
+        if rel_err > self.cfg.up_threshold * goal {
+            if st.splits < self.cfg.max_splits {
+                st.splits += 1;
+                st.cooldown = self.cfg.cooldown;
+            }
+        } else if rel_err < self.cfg.down_threshold * goal && st.splits > self.cfg.min_splits {
+            // predict at the site's consumer contraction size (the
+            // largest k seen), not just the probed GEMM's — same
+            // convention as the seeding path
+            let k_pred = st.k_dim.max(k_dim).max(1);
+            let predicted = forward_error_bound_with(st.calib, st.splits - 1, k_pred);
+            if predicted <= goal {
+                st.splits -= 1;
+                st.cooldown = self.cfg.cooldown;
+            }
+        }
+    }
+
+    /// Snapshot one site's state, if it has been seen.
+    pub fn snapshot(&self, site: SiteKey) -> Option<SiteSnapshot> {
+        self.sites.lock().unwrap().get(site).map(snapshot_of)
+    }
+
+    /// Snapshot every governed site (sorted by key for stable output).
+    pub fn snapshots(&self) -> Vec<(SiteKey, SiteSnapshot)> {
+        let sites = self.sites.lock().unwrap();
+        let mut out: Vec<(SiteKey, SiteSnapshot)> =
+            sites.iter().map(|(k, v)| (*k, snapshot_of(v))).collect();
+        out.sort_by_key(|(k, _)| *k);
+        out
+    }
+
+    /// Drop all per-site state (e.g. between benchmark reps, mirroring
+    /// `Dispatcher::reset_stats`).
+    pub fn reset(&self) {
+        self.sites.lock().unwrap().clear();
+    }
+}
+
+fn snapshot_of(st: &SiteState) -> SiteSnapshot {
+    SiteSnapshot {
+        splits: st.splits,
+        kappa: st.kappa,
+        calib: st.calib,
+        last_err: st.last_err,
+        probes: st.probes,
+        probe_s: st.probe_s,
+        trajectory: st.trajectory.clone(),
+    }
+}
+
+/// Smallest split count in `[cfg.min_splits, cfg.max_splits]` whose
+/// calibrated bound meets the target under `kappa`, clamped to the
+/// ceiling when the target is out of reach (total — never panics).
+fn seed_splits(cfg: &PrecisionConfig, k_dim: usize, kappa: f64, calib: f64) -> u32 {
+    required_splits_in(
+        calib,
+        cfg.target,
+        k_dim.max(1),
+        kappa,
+        cfg.min_splits,
+        cfg.max_splits,
+    )
+    .unwrap_or(cfg.max_splits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feedback_cfg() -> PrecisionConfig {
+        PrecisionConfig {
+            mode: PrecisionMode::Feedback,
+            target: 1e-9,
+            cooldown: 0,
+            probe_period: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fixed_mode_passes_requests_through() {
+        let g = Governor::new(PrecisionConfig::default());
+        let req = ComputeMode::Int8 { splits: 6 };
+        assert_eq!(g.apply("s", req, 256), Decision::from_mode(req));
+        assert_eq!(
+            g.apply("s", ComputeMode::Dgemm, 256),
+            Decision::from_mode(ComputeMode::Dgemm)
+        );
+        assert!(g.should_probe("s").is_none());
+    }
+
+    #[test]
+    fn dgemm_requests_never_governed() {
+        let g = Governor::new(PrecisionConfig {
+            mode: PrecisionMode::Feedback,
+            ..Default::default()
+        });
+        let d = g.apply("s", ComputeMode::Dgemm, 256);
+        assert_eq!(d.mode, ComputeMode::Dgemm);
+        assert_eq!(d.splits, 0);
+    }
+
+    #[test]
+    fn apriori_tracks_fed_kappa() {
+        let g = Governor::new(PrecisionConfig {
+            mode: PrecisionMode::Apriori,
+            target: 1e-9,
+            ..Default::default()
+        });
+        let low = g.decide("s", 256, ComputeMode::Dgemm).splits;
+        g.feed_kappa("s", 1e8);
+        let high = g.decide("s", 256, ComputeMode::Dgemm).splits;
+        assert!(high > low, "{high} !> {low}");
+    }
+
+    #[test]
+    fn feedback_ramps_up_on_bad_probes_and_down_on_good_ones() {
+        // Loose enough target that the calibrated bound permits the
+        // floor once the probes report clean residuals.
+        let cfg = PrecisionConfig {
+            target: 1e-4,
+            ..feedback_cfg()
+        };
+        let g = Governor::new(cfg);
+        let d0 = g.decide("s", 128, ComputeMode::Dgemm);
+        // hammer with terrible residuals: must climb to the ceiling and stop
+        for _ in 0..40 {
+            let s = g.snapshot("s").unwrap().splits;
+            g.record_probe("s", s, 128, 1.0, 0.0);
+        }
+        let up = g.snapshot("s").unwrap().splits;
+        assert_eq!(up, cfg.max_splits);
+        // now perfect residuals: must walk back down, never below the
+        // floor (the calibration constant has to decay first, so give
+        // it room)
+        for _ in 0..120 {
+            let s = g.snapshot("s").unwrap().splits;
+            g.record_probe("s", s, 128, 0.0, 0.0);
+        }
+        let down = g.snapshot("s").unwrap().splits;
+        assert_eq!(down, cfg.min_splits);
+        assert!(d0.splits >= cfg.min_splits && d0.splits <= cfg.max_splits);
+    }
+
+    #[test]
+    fn cooldown_throttles_adjustments() {
+        let cfg = PrecisionConfig {
+            cooldown: 3,
+            ..feedback_cfg()
+        };
+        let g = Governor::new(cfg);
+        let s0 = g.decide("s", 128, ComputeMode::Dgemm).splits;
+        g.record_probe("s", s0, 128, 1.0, 0.0); // ramps, sets cooldown
+        let s1 = g.snapshot("s").unwrap().splits;
+        assert_eq!(s1, s0 + 1);
+        for _ in 0..3 {
+            g.record_probe("s", s1, 128, 1.0, 0.0); // cooldown swallows these
+        }
+        assert_eq!(g.snapshot("s").unwrap().splits, s1);
+        g.record_probe("s", s1, 128, 1.0, 0.0); // cooldown expired
+        assert_eq!(g.snapshot("s").unwrap().splits, s1 + 1);
+    }
+
+    #[test]
+    fn kappa_fast_attack_raises_feedback_sites() {
+        let g = Governor::new(feedback_cfg());
+        let s0 = g.decide("s", 256, ComputeMode::Dgemm).splits;
+        g.feed_kappa("s", 1e10);
+        let s1 = g.snapshot("s").unwrap().splits;
+        assert!(s1 > s0, "{s1} !> {s0}");
+        // and a *smaller* κ does not lower it (probes own the decay)
+        g.feed_kappa("s", 1.0);
+        assert_eq!(g.snapshot("s").unwrap().splits, s1);
+    }
+
+    #[test]
+    fn probe_cadence_follows_period() {
+        let cfg = PrecisionConfig {
+            probe_period: 3,
+            ..feedback_cfg()
+        };
+        let g = Governor::new(cfg);
+        let due: Vec<bool> = (0..7).map(|_| g.should_probe("s").is_some()).collect();
+        assert_eq!(due, vec![true, false, false, true, false, false, true]);
+    }
+
+    #[test]
+    fn splits_for_is_total_and_clamped() {
+        let cfg = PrecisionConfig {
+            target: 1e-300,
+            min_splits: 4,
+            max_splits: 9,
+            ..Default::default()
+        };
+        let (mode, s) = Governor::splits_for(&cfg, 2048, 1e12);
+        assert_eq!(s, 9);
+        assert_eq!(mode, ComputeMode::Int8 { splits: 9 });
+        let loose = PrecisionConfig {
+            target: 1.0,
+            min_splits: 5,
+            max_splits: 9,
+            ..Default::default()
+        };
+        assert_eq!(Governor::splits_for(&loose, 16, 1.0).1, 5);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let g = Governor::new(feedback_cfg());
+        g.decide("s", 64, ComputeMode::Dgemm);
+        assert!(g.snapshot("s").is_some());
+        g.reset();
+        assert!(g.snapshot("s").is_none());
+        assert!(g.snapshots().is_empty());
+    }
+}

@@ -1,0 +1,305 @@
+//! The precision subsystem — closed-loop, per-call-site split selection.
+//!
+//! The paper's §4 proposal ("dynamically adjusting the split number in
+//! that region") lived in `coordinator/adaptive.rs` as a static
+//! a-priori policy: callers had to hand it a condition number, only the
+//! target was configurable, and the chosen splits never fed back from
+//! observed error.  This module promotes precision selection to a
+//! first-class subsystem with three escalating modes
+//! (`OZACCEL_PRECISION` / `run.precision.*`):
+//!
+//! * [`PrecisionMode::Fixed`] — the dispatcher's configured
+//!   `ComputeMode` is used verbatim (the paper's Table-1 columns);
+//! * [`PrecisionMode::Apriori`] — per call site, the split count is
+//!   re-derived on every call by inverting the Ozaki forward error
+//!   bound ([`crate::ozaki::required_splits_in`]) against the latest
+//!   consumer condition number fed to the governor;
+//! * [`PrecisionMode::Feedback`] — the a-priori choice seeds a per-site
+//!   state that is then *measured*: a deterministic sample of output
+//!   rows is recomputed in FP64 ([`probe_dgemm`] / [`probe_zgemm`]),
+//!   the observed residual calibrates the error-model constant
+//!   ([`crate::ozaki::implied_constant`]), and the split count ramps up
+//!   or down with hysteresis (up/down thresholds and a cooldown) —
+//!   resonance-region energy points climb to many slices while
+//!   well-conditioned points walk down to 3–4.
+//!
+//! The governor is keyed by the same interned call-site ids the PEAK
+//! profiler uses ([`crate::coordinator::CallSiteId`]), so its state
+//! lines up one-to-one with the rows of the per-site report, where the
+//! split trajectory and probe cost show up as the `splits` and
+//! `probe_ms` columns.
+//!
+//! Invariants (pinned by `tests/precision_governor.rs`):
+//!
+//! * every emulated decision satisfies
+//!   `min_splits <= splits <= max_splits` — the governor has no panic
+//!   path and never leaves the configured window;
+//! * the a-priori seed is monotone: tighter targets and larger κ never
+//!   decrease the split count;
+//! * probe row sampling and the probe residual are bit-identical for a
+//!   fixed seed, regardless of the thread that computes them.
+
+mod governor;
+mod probe;
+mod site_state;
+
+pub use governor::{Decision, Governor, SiteSnapshot};
+pub use probe::{probe_dgemm, probe_seed, probe_zgemm, sample_rows, ProbeReport};
+pub use site_state::{push_trajectory, SiteState, TRAJECTORY_CAP};
+
+use crate::error::{Error, Result};
+use crate::ozaki::{MAX_SPLITS, MIN_SPLITS};
+
+/// How the precision of emulated GEMMs is chosen
+/// (`OZACCEL_PRECISION` / `run.precision.mode`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrecisionMode {
+    /// Use the requested `ComputeMode` verbatim (no governing).
+    Fixed,
+    /// Re-derive the split count from the a-priori error bound and the
+    /// latest consumer κ on every call.
+    Apriori,
+    /// Seed a-priori, then close the loop with FP64 probes and
+    /// hysteresis (the tentpole feedback governor).
+    Feedback,
+}
+
+impl PrecisionMode {
+    /// Parse `fixed`, `apriori`, or `feedback` (rejects anything else
+    /// loudly — this backs both `OZACCEL_PRECISION` and
+    /// `run.precision.mode`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fixed" => Ok(PrecisionMode::Fixed),
+            "apriori" | "a-priori" => Ok(PrecisionMode::Apriori),
+            "feedback" => Ok(PrecisionMode::Feedback),
+            other => Err(Error::Config(format!(
+                "bad precision mode {other:?} (expected fixed | apriori | feedback)"
+            ))),
+        }
+    }
+
+    /// Canonical lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            PrecisionMode::Fixed => "fixed",
+            PrecisionMode::Apriori => "apriori",
+            PrecisionMode::Feedback => "feedback",
+        }
+    }
+}
+
+impl std::fmt::Display for PrecisionMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Governor configuration (the `run.precision.*` surface).
+#[derive(Clone, Copy, Debug)]
+pub struct PrecisionConfig {
+    /// Selection mode (fixed / apriori / feedback).
+    pub mode: PrecisionMode,
+    /// Target relative accuracy of downstream (consumer) results.
+    pub target: f64,
+    /// Floor for the split count (ozIMMU minimum is 3).
+    pub min_splits: u32,
+    /// Ceiling for the split count (cost guard; ozIMMU maximum is 18).
+    pub max_splits: u32,
+    /// Ramp up when the probed residual exceeds
+    /// `up_threshold · target / κ`.
+    pub up_threshold: f64,
+    /// Consider ramping down when the probed residual is below
+    /// `down_threshold · target / κ` (must stay `< up_threshold` so the
+    /// hysteresis band is non-empty).
+    pub down_threshold: f64,
+    /// Probes to skip after a split change before adjusting again.
+    pub cooldown: u32,
+    /// Output rows recomputed in FP64 per probe.
+    pub probe_rows: usize,
+    /// Probe every Nth emulated call per site (1 = every call).
+    pub probe_period: u32,
+}
+
+impl Default for PrecisionConfig {
+    fn default() -> Self {
+        PrecisionConfig {
+            mode: PrecisionMode::Fixed,
+            target: 1e-9,
+            min_splits: MIN_SPLITS,
+            max_splits: MAX_SPLITS,
+            up_threshold: 1.0,
+            down_threshold: 0.1,
+            cooldown: 2,
+            probe_rows: 2,
+            probe_period: 4,
+        }
+    }
+}
+
+impl PrecisionConfig {
+    /// Reject out-of-range or inconsistent settings loudly (used by the
+    /// config parser after `run.precision.*` / `[adaptive]` aliases are
+    /// applied).
+    pub fn validate(&self) -> Result<()> {
+        if !self.target.is_finite() || self.target <= 0.0 {
+            return Err(Error::Config(format!(
+                "precision.target must be a positive finite float, got {}",
+                self.target
+            )));
+        }
+        if self.min_splits < MIN_SPLITS || self.max_splits > MAX_SPLITS {
+            return Err(Error::Config(format!(
+                "precision splits window [{}, {}] outside the supported {MIN_SPLITS}..={MAX_SPLITS}",
+                self.min_splits, self.max_splits
+            )));
+        }
+        if self.min_splits > self.max_splits {
+            return Err(Error::Config(format!(
+                "precision.min_splits ({}) > precision.max_splits ({})",
+                self.min_splits, self.max_splits
+            )));
+        }
+        if !self.up_threshold.is_finite() || self.up_threshold <= 0.0 {
+            return Err(Error::Config(format!(
+                "precision.up_threshold must be a positive finite float, got {}",
+                self.up_threshold
+            )));
+        }
+        if !self.down_threshold.is_finite() || self.down_threshold <= 0.0 {
+            return Err(Error::Config(format!(
+                "precision.down_threshold must be a positive finite float, got {}",
+                self.down_threshold
+            )));
+        }
+        if self.down_threshold >= self.up_threshold {
+            return Err(Error::Config(format!(
+                "precision.down_threshold ({}) must be < precision.up_threshold ({}) \
+                 or the hysteresis band is empty",
+                self.down_threshold, self.up_threshold
+            )));
+        }
+        if self.probe_rows == 0 {
+            return Err(Error::Config(
+                "precision.probe_rows must be >= 1".into(),
+            ));
+        }
+        if self.probe_period == 0 {
+            return Err(Error::Config(
+                "precision.probe_period must be >= 1".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// A copy with every field forced into its legal range (defaults
+    /// substituted for unusable values).  [`crate::precision::Governor`]
+    /// normalizes on construction so its arithmetic stays total —
+    /// no division by a zero probe period, no inverted clamp — even for
+    /// configs built in code without [`PrecisionConfig::validate`];
+    /// the config parser still rejects such configs loudly.
+    pub fn normalized(mut self) -> Self {
+        let d = PrecisionConfig::default();
+        if !self.target.is_finite() || self.target <= 0.0 {
+            self.target = d.target;
+        }
+        self.min_splits = self.min_splits.clamp(MIN_SPLITS, MAX_SPLITS);
+        self.max_splits = self.max_splits.clamp(self.min_splits, MAX_SPLITS);
+        if !self.up_threshold.is_finite() || self.up_threshold <= 0.0 {
+            self.up_threshold = d.up_threshold;
+        }
+        if !self.down_threshold.is_finite()
+            || self.down_threshold <= 0.0
+            || self.down_threshold >= self.up_threshold
+        {
+            self.down_threshold = self.up_threshold * 0.1;
+        }
+        self.probe_rows = self.probe_rows.max(1);
+        self.probe_period = self.probe_period.max(1);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parses_and_rejects() {
+        assert_eq!(PrecisionMode::parse("fixed").unwrap(), PrecisionMode::Fixed);
+        assert_eq!(
+            PrecisionMode::parse(" APriori ").unwrap(),
+            PrecisionMode::Apriori
+        );
+        assert_eq!(
+            PrecisionMode::parse("feedback").unwrap(),
+            PrecisionMode::Feedback
+        );
+        for bad in ["", "adaptive", "feed-back", "fixed8", "governed"] {
+            assert!(PrecisionMode::parse(bad).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn default_config_is_valid() {
+        PrecisionConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_inconsistent_settings() {
+        let base = PrecisionConfig::default();
+        let cases = [
+            PrecisionConfig { min_splits: 9, max_splits: 4, ..base },
+            PrecisionConfig { min_splits: 2, ..base },
+            PrecisionConfig { max_splits: 19, ..base },
+            PrecisionConfig { target: 0.0, ..base },
+            PrecisionConfig { target: f64::NAN, ..base },
+            PrecisionConfig { up_threshold: 0.0, ..base },
+            PrecisionConfig { down_threshold: 2.0, ..base },
+            PrecisionConfig { down_threshold: 1.0, ..base },
+            PrecisionConfig { probe_rows: 0, ..base },
+            PrecisionConfig { probe_period: 0, ..base },
+        ];
+        for (i, c) in cases.iter().enumerate() {
+            assert!(c.validate().is_err(), "case {i} accepted: {c:?}");
+        }
+    }
+
+    #[test]
+    fn normalized_makes_any_config_usable() {
+        let bad = PrecisionConfig {
+            mode: PrecisionMode::Feedback,
+            target: -3.0,
+            min_splits: 25,
+            max_splits: 1,
+            up_threshold: f64::NAN,
+            down_threshold: 9.0,
+            cooldown: 7,
+            probe_rows: 0,
+            probe_period: 0,
+        };
+        let n = bad.normalized();
+        n.validate().expect("normalized config must validate");
+        assert!(n.min_splits <= n.max_splits);
+        assert!((3..=18).contains(&n.min_splits));
+        assert!(n.target > 0.0);
+        assert!(n.down_threshold < n.up_threshold);
+        assert!(n.probe_rows >= 1 && n.probe_period >= 1);
+        assert_eq!(n.cooldown, 7, "in-range fields pass through");
+        // an already-valid config is untouched
+        let ok = PrecisionConfig::default().normalized();
+        assert_eq!(format!("{ok:?}"), format!("{:?}", PrecisionConfig::default()));
+    }
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in [
+            PrecisionMode::Fixed,
+            PrecisionMode::Apriori,
+            PrecisionMode::Feedback,
+        ] {
+            assert_eq!(PrecisionMode::parse(m.name()).unwrap(), m);
+            assert_eq!(format!("{m}"), m.name());
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! A-posteriori precision probes: recompute a deterministic sample of
+//! output rows in FP64 and report the observed relative residual of the
+//! emulated result.
+//!
+//! A probe costs `rows · K · N` FLOPs against the GEMM's
+//! `M · K · N · s(s+1)/2` slice products, so sampling a couple of rows
+//! every few calls is orders of magnitude below the emulation itself;
+//! the dispatcher attributes the measured probe seconds to the call
+//! site (`probe_ms` PEAK column).
+//!
+//! Determinism: row selection is a seeded partial Fisher–Yates over the
+//! SplitMix64 PRNG, and the FP64 recomputation runs the blocked kernels
+//! pinned to one thread — both are bit-identical for a fixed seed no
+//! matter which thread executes them (pinned by
+//! `tests/precision_governor.rs`).
+
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::kernels::{dgemm_blocked, zgemm_blocked, KernelConfig};
+use crate::linalg::{Mat, ZMat};
+use crate::testing::Rng;
+
+/// Outcome of one probe.
+#[derive(Clone, Debug)]
+pub struct ProbeReport {
+    /// Max relative residual over the sampled rows
+    /// (`max |emul − exact| / max |exact|`, both over the sample).
+    pub rel_err: f64,
+    /// Row indices that were recomputed (sorted, distinct).
+    pub rows: Vec<usize>,
+    /// Wall seconds the probe took.
+    pub seconds: f64,
+}
+
+/// Deterministic probe seed from the call-site id, the GEMM shape, and
+/// the per-site probe ordinal (FNV-1a).
+pub fn probe_seed(site: &str, m: usize, k: usize, n: usize, ordinal: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in site.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    for v in [m as u64, k as u64, n as u64, ordinal] {
+        h = (h ^ v).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Sample `want` distinct row indices from `0..m` (partial
+/// Fisher–Yates, seeded; sorted output).  Returns all rows when
+/// `want >= m` and the empty set when `m == 0` or `want == 0`.
+pub fn sample_rows(seed: u64, m: usize, want: usize) -> Vec<usize> {
+    if m == 0 || want == 0 {
+        return Vec::new();
+    }
+    let want = want.min(m);
+    let mut rng = Rng::new(seed);
+    let mut swap: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+    let mut out = Vec::with_capacity(want);
+    for i in 0..want {
+        let j = rng.index(i, m);
+        let vi = *swap.get(&i).unwrap_or(&i);
+        let vj = *swap.get(&j).unwrap_or(&j);
+        out.push(vj);
+        swap.insert(j, vi);
+    }
+    out.sort_unstable();
+    out
+}
+
+/// One probe body shared by the real and complex entry points: build
+/// the row-subset of `a`, recompute it exactly with `gemm`, and reduce
+/// the sampled residual with `abs` / `diff` (`|x|` and `|x − y|` for
+/// the element type).  Keeping a single body means the probe protocol
+/// (sampling, scaling, timing) cannot drift between the two dtypes.
+fn probe_with<T, G, A, D>(
+    a: &Mat<T>,
+    b: &Mat<T>,
+    c_emul: &Mat<T>,
+    rows: &[usize],
+    gemm: G,
+    abs: A,
+    diff: D,
+) -> Result<ProbeReport>
+where
+    T: Copy + Default,
+    G: FnOnce(&Mat<T>, &Mat<T>) -> Result<Mat<T>>,
+    A: Fn(T) -> f64,
+    D: Fn(T, T) -> f64,
+{
+    let t0 = Instant::now();
+    let k = a.cols();
+    let n = b.cols();
+    let sub = Mat::from_fn(rows.len(), k, |i, j| a.get(rows[i], j));
+    let exact = gemm(&sub, b)?;
+    let mut err = 0.0f64;
+    let mut scale = 0.0f64;
+    for (i, &r) in rows.iter().enumerate() {
+        for j in 0..n {
+            let e = exact.get(i, j);
+            scale = scale.max(abs(e));
+            err = err.max(diff(c_emul.get(r, j), e));
+        }
+    }
+    let rel_err = if scale > 0.0 { err / scale } else { err };
+    Ok(ProbeReport {
+        rel_err,
+        rows: rows.to_vec(),
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Recompute `rows` of `a·b` in FP64 ([`dgemm_blocked`], pinned to one
+/// thread) and compare against the emulated result `c_emul`.
+pub fn probe_dgemm(
+    a: &Mat<f64>,
+    b: &Mat<f64>,
+    c_emul: &Mat<f64>,
+    rows: &[usize],
+) -> Result<ProbeReport> {
+    probe_with(
+        a,
+        b,
+        c_emul,
+        rows,
+        |sub, b| dgemm_blocked(sub, b, &KernelConfig::single_threaded()),
+        |x: f64| x.abs(),
+        |x: f64, y: f64| (x - y).abs(),
+    )
+}
+
+/// Complex twin of [`probe_dgemm`] ([`zgemm_blocked`], one thread).
+pub fn probe_zgemm(a: &ZMat, b: &ZMat, c_emul: &ZMat, rows: &[usize]) -> Result<ProbeReport> {
+    probe_with(
+        a,
+        b,
+        c_emul,
+        rows,
+        |sub, b| zgemm_blocked(sub, b, &KernelConfig::single_threaded()),
+        |x: crate::complex::c64| x.abs(),
+        |x: crate::complex::c64, y: crate::complex::c64| (x - y).abs(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dgemm_naive;
+    use crate::ozaki::ozaki_dgemm;
+    use crate::testing::Rng as TRng;
+
+    #[test]
+    fn sample_rows_is_deterministic_distinct_and_bounded() {
+        for m in [1usize, 2, 7, 40] {
+            for want in [1usize, 2, 5, 64] {
+                let a = sample_rows(42, m, want);
+                let b = sample_rows(42, m, want);
+                assert_eq!(a, b, "same seed must give the same rows");
+                assert_eq!(a.len(), want.min(m));
+                let mut dedup = a.clone();
+                dedup.dedup();
+                assert_eq!(dedup.len(), a.len(), "rows must be distinct: {a:?}");
+                assert!(a.iter().all(|&r| r < m));
+            }
+        }
+        assert!(sample_rows(1, 0, 3).is_empty());
+        assert!(sample_rows(1, 5, 0).is_empty(), "want = 0 means no sampling");
+        // different seeds eventually differ
+        let x = sample_rows(1, 1000, 4);
+        let y = sample_rows(2, 1000, 4);
+        assert_ne!(x, y);
+    }
+
+    #[test]
+    fn probe_reports_zero_for_exact_results() {
+        let mut rng = TRng::new(7);
+        let a = Mat::from_fn(12, 9, |_, _| rng.normal());
+        let b = Mat::from_fn(9, 11, |_, _| rng.normal());
+        let exact = dgemm_naive(&a, &b).unwrap();
+        let rows = sample_rows(3, 12, 3);
+        let rep = probe_dgemm(&a, &b, &exact, &rows).unwrap();
+        // dgemm_blocked is bit-identical to dgemm_naive, so the probe of
+        // an exact product must read exactly zero.
+        assert_eq!(rep.rel_err, 0.0);
+        assert_eq!(rep.rows, rows);
+    }
+
+    #[test]
+    fn probe_sees_emulation_error() {
+        let mut rng = TRng::new(8);
+        let a = Mat::from_fn(16, 16, |_, _| rng.normal());
+        let b = Mat::from_fn(16, 16, |_, _| rng.normal());
+        let emul = ozaki_dgemm(&a, &b, 3).unwrap();
+        let rows = sample_rows(5, 16, 4);
+        let rep = probe_dgemm(&a, &b, &emul, &rows).unwrap();
+        assert!(rep.rel_err > 1e-12, "3-split emulation error visible");
+        assert!(rep.rel_err < 1e-2, "but small: {}", rep.rel_err);
+    }
+
+    #[test]
+    fn probe_zgemm_matches_scale_of_real_probe() {
+        let mut rng = TRng::new(9);
+        let a = ZMat::from_fn(10, 8, |_, _| rng.cnormal());
+        let b = ZMat::from_fn(8, 7, |_, _| rng.cnormal());
+        let emul = crate::ozaki::ozaki_zgemm(&a, &b, 4).unwrap();
+        let rows = sample_rows(11, 10, 2);
+        let rep = probe_zgemm(&a, &b, &emul, &rows).unwrap();
+        assert!(rep.rel_err > 0.0 && rep.rel_err < 1e-3, "{}", rep.rel_err);
+    }
+
+    #[test]
+    fn probe_seed_separates_sites_and_ordinals() {
+        let s1 = probe_seed("a.rs:1", 8, 8, 8, 0);
+        let s2 = probe_seed("a.rs:2", 8, 8, 8, 0);
+        let s3 = probe_seed("a.rs:1", 8, 8, 8, 1);
+        assert_ne!(s1, s2);
+        assert_ne!(s1, s3);
+        assert_eq!(s1, probe_seed("a.rs:1", 8, 8, 8, 0));
+    }
+}

@@ -1,0 +1,121 @@
+//! Per-call-site governor state: the current split count, the latest
+//! consumer κ, the measured-residual calibration of the error-model
+//! constant, hysteresis bookkeeping, and the split trajectory the PEAK
+//! report surfaces.
+
+use crate::ozaki::DEFAULT_ERROR_CONSTANT;
+
+/// Maximum trajectory entries retained per site (consecutive duplicates
+/// are collapsed, so this bounds *changes*, not calls).
+pub const TRAJECTORY_CAP: usize = 64;
+
+/// Append one split decision to a trajectory vector: consecutive
+/// duplicates collapse, and past [`TRAJECTORY_CAP`] retained changes
+/// the *oldest* entry is evicted so the tail stays recent.  Shared by
+/// the governor's [`SiteState`] and the PEAK profiler's per-site
+/// statistics, so the two recorded trajectories cannot drift apart.
+pub fn push_trajectory(trajectory: &mut Vec<u32>, splits: u32) {
+    if trajectory.last() != Some(&splits) {
+        if trajectory.len() == TRAJECTORY_CAP {
+            trajectory.remove(0);
+        }
+        trajectory.push(splits);
+    }
+}
+
+/// Mutable state the governor keeps per call site.
+#[derive(Clone, Debug)]
+pub struct SiteState {
+    /// Current split count (0 = not yet seeded; feedback mode seeds it
+    /// from the a-priori bound on first decision).
+    pub splits: u32,
+    /// Effective (largest-seen) contraction size of this site's
+    /// decisions — the consumer's K, so small trailing-update GEMMs
+    /// re-entering the governor share the factorisation-level budget
+    /// (0 until the first decision; also used to re-seed when a larger
+    /// κ is fed in).
+    pub k_dim: usize,
+    /// Latest consumer condition number fed to the governor.
+    pub kappa: f64,
+    /// Calibrated error-model constant: starts at the conservative
+    /// a-priori default and tracks the measured residuals (running max
+    /// with decay, so one quiet probe cannot collapse it).
+    pub calib: f64,
+    /// Most recent probed relative residual.
+    pub last_err: f64,
+    /// Probes to skip before the next split adjustment.
+    pub cooldown: u32,
+    /// Emulated calls seen at this site (drives the probe cadence).
+    pub emulated_calls: u64,
+    /// Probes taken at this site.
+    pub probes: u64,
+    /// Seconds spent probing at this site.
+    pub probe_s: f64,
+    /// Split counts decided at this site, consecutive duplicates
+    /// collapsed, capped at [`TRAJECTORY_CAP`].
+    pub trajectory: Vec<u32>,
+}
+
+impl Default for SiteState {
+    fn default() -> Self {
+        SiteState {
+            splits: 0,
+            k_dim: 0,
+            kappa: 1.0,
+            calib: DEFAULT_ERROR_CONSTANT,
+            last_err: 0.0,
+            cooldown: 0,
+            emulated_calls: 0,
+            probes: 0,
+            probe_s: 0.0,
+            trajectory: Vec::new(),
+        }
+    }
+}
+
+impl SiteState {
+    /// Fresh state (κ = 1, calibration at the a-priori default).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one decided split count in the trajectory (see
+    /// [`push_trajectory`] for the dedupe/eviction policy).
+    pub fn note_decision(&mut self, splits: u32, k_dim: usize) {
+        self.k_dim = k_dim;
+        push_trajectory(&mut self.trajectory, splits);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trajectory_dedupes_consecutive_and_caps() {
+        let mut s = SiteState::new();
+        for v in [6, 6, 6, 7, 7, 6] {
+            s.note_decision(v, 64);
+        }
+        assert_eq!(s.trajectory, vec![6, 7, 6]);
+        assert_eq!(s.k_dim, 64);
+        for i in 0..(2 * TRAJECTORY_CAP as u32) {
+            s.note_decision(3 + (i % 2), 64);
+        }
+        assert_eq!(s.trajectory.len(), TRAJECTORY_CAP);
+        // overflow drops the *oldest* entries: the tail is the most
+        // recent decision, not the initial history
+        let last_pushed = 3 + ((2 * TRAJECTORY_CAP as u32 - 1) % 2);
+        assert_eq!(s.trajectory.last(), Some(&last_pushed));
+        assert_ne!(s.trajectory[0], 6, "initial history evicted");
+    }
+
+    #[test]
+    fn defaults_are_unseeded() {
+        let s = SiteState::new();
+        assert_eq!(s.splits, 0);
+        assert_eq!(s.kappa, 1.0);
+        assert_eq!(s.calib, DEFAULT_ERROR_CONSTANT);
+        assert!(s.trajectory.is_empty());
+    }
+}

@@ -9,6 +9,13 @@ use crate::complex::c64;
 
 /// SplitMix64 PRNG — deterministic, seedable, passes BigCrush for our
 /// purposes, and has no dependencies.
+///
+/// Stability contract: this generator is load-bearing *runtime*
+/// infrastructure, not just test support — the precision governor's
+/// probe row sampling (`crate::precision::sample_rows`) derives its
+/// documented cross-thread bit-determinism from this exact sequence.
+/// Changing the constants or the `index` mapping changes production
+/// probe selection; `tests/precision_governor.rs` pins the behaviour.
 #[derive(Clone, Debug)]
 pub struct Rng {
     state: u64,

@@ -1,0 +1,178 @@
+//! Property tests for the precision governor (extends the
+//! `kernels_equivalence.rs` conventions: deterministic seeded cases,
+//! bit-level assertions where the contract is bit-level).
+//!
+//! Pinned invariants:
+//! * every governed decision lies in `[min_splits, max_splits]`;
+//! * the a-priori seed is monotone in the target and in κ;
+//! * probe row sampling and probe residuals are bit-identical for a
+//!   fixed seed, across threads;
+//! * the feedback loop respects its hysteresis bounds under arbitrary
+//!   residual sequences.
+
+use ozaccel::linalg::Mat;
+use ozaccel::ozaki::ComputeMode;
+use ozaccel::precision::{
+    probe_dgemm, probe_seed, sample_rows, Governor, PrecisionConfig, PrecisionMode,
+};
+use ozaccel::testing::Rng;
+
+fn governed(mode: PrecisionMode, target: f64, min: u32, max: u32) -> Governor {
+    Governor::new(PrecisionConfig {
+        mode,
+        target,
+        min_splits: min,
+        max_splits: max,
+        cooldown: 0,
+        probe_period: 1,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn governed_output_always_lies_in_the_configured_window() {
+    let mut rng = Rng::new(0x90e1);
+    for case in 0..200u32 {
+        let min = 3 + (rng.next_u64() % 6) as u32; // 3..=8
+        let max = min + (rng.next_u64() % (18 - min as u64 + 1)) as u32;
+        let target = 10f64.powf(rng.range(-30.0, 2.0));
+        let kappa = 10f64.powf(rng.range(-2.0, 14.0));
+        let k_dim = 1 + (rng.next_u64() % 4096) as usize;
+        for mode in [PrecisionMode::Apriori, PrecisionMode::Feedback] {
+            let g = governed(mode, target, min, max);
+            g.feed_kappa("site", kappa);
+            let d = g.decide("site", k_dim, ComputeMode::Dgemm);
+            let ComputeMode::Int8 { splits } = d.mode else {
+                panic!("governed decision must be emulated, got {:?}", d.mode);
+            };
+            assert_eq!(splits, d.splits);
+            assert!(
+                (min..=max).contains(&splits),
+                "case {case}: splits {splits} outside [{min}, {max}] \
+                 (target {target:e}, kappa {kappa:e}, k {k_dim}, {mode:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn apriori_seed_is_monotone_in_target_and_kappa() {
+    let g = |target: f64, kappa: f64| -> u32 {
+        let gov = governed(PrecisionMode::Apriori, target, 3, 18);
+        gov.feed_kappa("s", kappa);
+        gov.decide("s", 256, ComputeMode::Dgemm).splits
+    };
+    // tighter target => never fewer splits
+    let mut prev = 0u32;
+    for exp in (-14..=-2).rev() {
+        let s = g(10f64.powi(exp), 10.0);
+        assert!(s >= prev, "target 1e{exp}: {s} < {prev}");
+        prev = s;
+    }
+    // larger kappa => never fewer splits
+    let mut prev = 0u32;
+    for exp in 0..=12 {
+        let s = g(1e-9, 10f64.powi(exp));
+        assert!(s >= prev, "kappa 1e{exp}: {s} < {prev}");
+        prev = s;
+    }
+}
+
+#[test]
+fn feedback_never_leaves_the_window_under_arbitrary_residuals() {
+    let mut rng = Rng::new(0xfeedbacc);
+    for case in 0..50u32 {
+        let min = 3 + (rng.next_u64() % 4) as u32;
+        let max = min + (rng.next_u64() % 8) as u32;
+        let g = governed(PrecisionMode::Feedback, 1e-9, min, max);
+        g.feed_kappa("s", 10f64.powf(rng.range(0.0, 8.0)));
+        for _ in 0..100 {
+            let d = g.decide("s", 128, ComputeMode::Dgemm);
+            assert!(
+                (min..=max).contains(&d.splits),
+                "case {case}: {} outside [{min}, {max}]",
+                d.splits
+            );
+            // adversarial residual: anything from exact to catastrophic
+            let err = if rng.uniform() < 0.3 {
+                0.0
+            } else {
+                10f64.powf(rng.range(-18.0, 1.0))
+            };
+            g.record_probe("s", d.splits, 128, err, 0.0);
+        }
+    }
+}
+
+#[test]
+fn probe_sampling_is_deterministic_for_a_fixed_seed() {
+    let seed = probe_seed("tau.rs:63", 64, 48, 64, 7);
+    let want = sample_rows(seed, 64, 4);
+    for _ in 0..3 {
+        assert_eq!(sample_rows(seed, 64, 4), want);
+    }
+    // bit-identical across threads
+    let handles: Vec<_> = (0..4)
+        .map(|_| std::thread::spawn(move || sample_rows(seed, 64, 4)))
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), want);
+    }
+}
+
+#[test]
+fn probe_reports_are_bit_identical_across_threads() {
+    let mut rng = Rng::new(0x9a0be);
+    let a = Mat::from_fn(32, 24, |_, _| rng.normal());
+    let b = Mat::from_fn(24, 16, |_, _| rng.normal());
+    let c = ozaccel::ozaki::ozaki_dgemm(&a, &b, 4).unwrap();
+    let rows = sample_rows(probe_seed("x.rs:1", 32, 24, 16, 0), 32, 3);
+    let want = probe_dgemm(&a, &b, &c, &rows).unwrap();
+    assert!(want.rel_err > 0.0, "emulation error must be visible");
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let (a, b, c, rows) = (a.clone(), b.clone(), c.clone(), rows.clone());
+            std::thread::spawn(move || probe_dgemm(&a, &b, &c, &rows).unwrap())
+        })
+        .collect();
+    for h in handles {
+        let got = h.join().unwrap();
+        assert_eq!(
+            got.rel_err.to_bits(),
+            want.rel_err.to_bits(),
+            "probe residual must be bit-identical across threads"
+        );
+        assert_eq!(got.rows, want.rows);
+    }
+}
+
+#[test]
+fn hysteresis_bounds_hold_with_cooldown() {
+    // With cooldown N, two adjustments must be at least N+1 probes apart.
+    let cfg = PrecisionConfig {
+        mode: PrecisionMode::Feedback,
+        target: 1e-9,
+        cooldown: 3,
+        probe_period: 1,
+        ..Default::default()
+    };
+    let g = Governor::new(cfg);
+    let mut last_change: Option<usize> = None;
+    let mut prev = g.decide("s", 128, ComputeMode::Dgemm).splits;
+    for i in 0..40 {
+        g.record_probe("s", prev, 128, 1.0, 0.0); // always demand more
+        let now = g.snapshot("s").unwrap().splits;
+        if now != prev {
+            assert!((now as i64 - prev as i64).abs() == 1, "steps are unit-sized");
+            if let Some(l) = last_change {
+                assert!(
+                    i - l >= cfg.cooldown as usize + 1,
+                    "changes at probes {l} and {i} violate cooldown {}",
+                    cfg.cooldown
+                );
+            }
+            last_change = Some(i);
+            prev = now;
+        }
+    }
+}
