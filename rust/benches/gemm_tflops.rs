@@ -6,11 +6,15 @@
 //! Run with `cargo bench --bench gemm_tflops` (add `--quick`,
 //! `--json` writes BENCH_gemm_tflops.json).
 
+use std::sync::Arc;
+
 use ozaccel::bench::{Bench, JsonRecord, JsonReport, Table};
+use ozaccel::coordinator::{call_site, DispatchConfig, Dispatcher};
+use ozaccel::engine::wait_all;
 use ozaccel::experiments::{gemm_bench, run_gemm_bench};
 use ozaccel::kernels::{dgemm_blocked, int8_gemm_blocked, KernelConfig, SimdSelect};
 use ozaccel::linalg::{dgemm_naive, Mat};
-use ozaccel::ozaki::{ozaki_dgemm_naive, ozaki_dgemm_with, ozaki_zgemm_with, SLICE_BITS};
+use ozaccel::ozaki::{ozaki_dgemm_naive, ozaki_dgemm_with, ozaki_zgemm_with, ComputeMode, SLICE_BITS};
 use ozaccel::perfmodel::gemm_flops;
 use ozaccel::runtime::Runtime;
 use ozaccel::testing::Rng;
@@ -278,9 +282,137 @@ fn main() {
     println!("== pool + panel cache (repeated operands; warm = cache on, coldpack = PR1-style) ==");
     println!("{}", rt.render());
 
+    // Batch engine trajectory (ISSUE 5): the repeated-small-GEMM
+    // workload — the paper's per-energy-point pattern — submitted per
+    // call through the dispatcher vs coalesced through one batch scope.
+    // The panel cache is disabled for BOTH paths so these rows isolate
+    // what the engine itself buys (one fused pool dispatch per bucket,
+    // per-flush shared-operand packing) from the cache's cross-call
+    // reuse, which the warm/cold section above already tracks.  The
+    // `_shared` rows multiply many matrices against ONE shared factor
+    // (the contour loop's τ pattern); the plain rows use fully distinct
+    // operands, so the JSON carries both the scheduling win and the
+    // pack-sharing win separately.  Emitted to BENCH_batch.json.
+    let mut batch_report = JsonReport::new();
+    let batch_n = 64usize;
+    let batch_splits = 6u32;
+    let batch_members: usize = if quick { 12 } else { 24 };
+    let mut bcfg = DispatchConfig::host_only(ComputeMode::Int8 {
+        splits: batch_splits,
+    });
+    bcfg.kernels.config.panel_cache_mb = 0;
+    let disp = Dispatcher::new(bcfg).expect("host dispatcher");
+    let site = call_site();
+    let mode = ComputeMode::Int8 {
+        splits: batch_splits,
+    };
+    let workload_flop = batch_members as f64 * gemm_flops(batch_n, batch_n, batch_n);
+    let packed_bytes = (2 * batch_n * batch_n) as u64 * batch_splits as u64;
+    let shared_a = Arc::new(Mat::from_fn(batch_n, batch_n, |_, _| rng.normal()));
+    let distinct: Vec<(Arc<Mat<f64>>, Arc<Mat<f64>>)> = (0..batch_members)
+        .map(|_| {
+            (
+                Arc::new(Mat::from_fn(batch_n, batch_n, |_, _| rng.normal())),
+                Arc::new(Mat::from_fn(batch_n, batch_n, |_, _| rng.normal())),
+            )
+        })
+        .collect();
+    let kthreads = KernelConfig::default().threads;
+    let mut bt = Table::new(&["case", "members", "median (ms)", "GFLOP/s", "speedup"]);
+
+    // fully distinct operands: the win is one fused pool dispatch per
+    // bucket instead of one dispatch-and-latch round trip per call
+    let m_percall = host_bench.run(|| {
+        for (a, b) in &distinct {
+            disp.dgemm_at(site, mode, a, b).expect("percall");
+        }
+    });
+    let m_batched = host_bench.run(|| {
+        disp.batch_scope(|scope| {
+            let tickets: Vec<_> = distinct
+                .iter()
+                .map(|(a, b)| scope.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+                .collect();
+            wait_all(tickets).map(|_| ())
+        })
+        .expect("batched");
+    });
+    // shared-A workload: one factor against many matrices — the engine
+    // additionally packs the shared operand once per flush
+    let m_percall_shared = host_bench.run(|| {
+        for (_, b) in &distinct {
+            disp.dgemm_at(site, mode, &shared_a, b).expect("percall shared");
+        }
+    });
+    let m_batched_shared = host_bench.run(|| {
+        disp.batch_scope(|scope| {
+            let tickets: Vec<_> = distinct
+                .iter()
+                .map(|(_, b)| scope.submit_dgemm_at(site, mode, shared_a.clone(), b.clone()))
+                .collect();
+            wait_all(tickets).map(|_| ())
+        })
+        .expect("batched shared");
+    });
+    let rows: [(String, &ozaccel::bench::Measurement, Option<f64>, u64); 4] = [
+        (
+            format!("percall@{batch_n}/s{batch_splits}"),
+            &m_percall,
+            None,
+            packed_bytes * batch_members as u64,
+        ),
+        (
+            format!("batched@{batch_n}/s{batch_splits}"),
+            &m_batched,
+            Some(m_percall.median_s),
+            packed_bytes * batch_members as u64,
+        ),
+        (
+            format!("percall_shared@{batch_n}/s{batch_splits}"),
+            &m_percall_shared,
+            None,
+            packed_bytes * batch_members as u64,
+        ),
+        (
+            // the shared A packs once per flush; only B repacks per member
+            format!("batched_shared@{batch_n}/s{batch_splits}"),
+            &m_batched_shared,
+            Some(m_percall_shared.median_s),
+            packed_bytes / 2 + (packed_bytes / 2) * batch_members as u64,
+        ),
+    ];
+    for (name, m, baseline, bytes) in rows {
+        bt.row(&[
+            name.clone(),
+            batch_members.to_string(),
+            format!("{:.3}", m.median_s * 1e3),
+            format!("{:.2}", m.flops(workload_flop) / 1e9),
+            baseline
+                .map(|b| format!("{:.2}x", b / m.median_s))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+        batch_report.push(JsonRecord::from_measurement(
+            name,
+            m,
+            Some(workload_flop),
+            Some(bytes),
+            kthreads,
+        ));
+    }
+    println!(
+        "batched vs per-call at {batch_n}^3 x{batch_members}: distinct {:.2}x, shared-A {:.2}x",
+        m_percall.median_s / m_batched.median_s,
+        m_percall_shared.median_s / m_batched_shared.median_s
+    );
+    println!("== batch engine (per-call dispatch vs one batch scope; panel cache off) ==");
+    println!("{}", bt.render());
+
     if json {
         let path = std::path::Path::new("BENCH_gemm_tflops.json");
         report.write(path).expect("write BENCH_gemm_tflops.json");
         println!("wrote {} ({} records)", path.display(), report.len());
+        let bpath = std::path::Path::new("BENCH_batch.json");
+        batch_report.write(bpath).expect("write BENCH_batch.json");
+        println!("wrote {} ({} records)", bpath.display(), batch_report.len());
     }
 }

@@ -38,6 +38,9 @@ const PRECISION_KEYS: &[&str] = &[
 /// explicit via `precision.mode` / `OZACCEL_PRECISION`.
 const ADAPTIVE_ALIAS_KEYS: &[&str] = &["target", "min_splits", "max_splits"];
 
+/// Keys accepted under `[batch]` — the execution engine's flush policy.
+const BATCH_KEYS: &[&str] = &["max_pending", "max_bytes"];
+
 /// Full run configuration for the `ozaccel` binary.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -153,17 +156,30 @@ impl RunConfig {
         if let Some(v) = lookup(&table, "run.output_dir") {
             cfg.output_dir = PathBuf::from(v.as_str()?);
         }
-        // Unknown keys under [precision] / [adaptive] are config bugs:
-        // reject them loudly before interpreting the known ones.
+        // Unknown keys under [precision] / [adaptive] / [batch] are
+        // config bugs: reject them loudly before interpreting the known
+        // ones.
         for key in table.keys() {
             // a scalar where a table is expected (e.g. `precision =
             // "feedback"` under [run]) would otherwise be ignored
-            if matches!(key.as_str(), "precision" | "run.precision" | "adaptive" | "run.adaptive")
-            {
+            if matches!(
+                key.as_str(),
+                "precision" | "run.precision" | "adaptive" | "run.adaptive" | "batch" | "run.batch"
+            ) {
                 return Err(Error::Config(format!(
                     "{key:?} is a table, not a scalar — write e.g. \
                      [precision] with mode = \"feedback\""
                 )));
+            }
+            let batch_rest = key
+                .strip_prefix("run.batch.")
+                .or_else(|| key.strip_prefix("batch."));
+            if let Some(rest) = batch_rest {
+                if !BATCH_KEYS.contains(&rest) {
+                    return Err(Error::Config(format!(
+                        "unknown batch key {key:?} (expected one of {BATCH_KEYS:?})"
+                    )));
+                }
             }
             let prec_rest = key
                 .strip_prefix("run.precision.")
@@ -241,6 +257,28 @@ impl RunConfig {
         }
         // Out-of-range pairs (e.g. min > max) are rejected loudly here.
         cfg.dispatch.precision.validate()?;
+        // `[batch]` and `[run.batch]` are interchangeable (the rustdoc
+        // names the keys `run.batch.*`), mirroring [precision].
+        let batch = |name: &str| {
+            lookup(&table, &format!("batch.{name}"))
+                .or_else(|| lookup(&table, &format!("run.batch.{name}")))
+        };
+        if let Some(v) = batch("max_pending") {
+            let n = toml_u32(v, "batch.max_pending")?;
+            if n == 0 {
+                return Err(Error::Config("batch.max_pending must be >= 1".into()));
+            }
+            cfg.dispatch.batch.max_pending = n as usize;
+        }
+        if let Some(v) = batch("max_bytes") {
+            let f = v.as_f64()?;
+            if f.fract() != 0.0 || f < 1.0 {
+                return Err(Error::Config(format!(
+                    "batch.max_bytes must be a positive integer, got {f}"
+                )));
+            }
+            cfg.dispatch.batch.max_bytes = f as usize;
+        }
         if let Some(v) = lookup(&table, "sweep.splits") {
             cfg.sweep_splits = v
                 .as_array()?
@@ -292,6 +330,26 @@ impl RunConfig {
         if let Ok(v) = std::env::var("OZACCEL_PRECISION") {
             self.dispatch.precision.mode = PrecisionMode::parse(&v)
                 .map_err(|_| Error::Config(format!("bad OZACCEL_PRECISION {v:?}")))?;
+        }
+        if let Ok(v) = std::env::var("OZACCEL_BATCH_MAX_PENDING") {
+            let n: usize = v
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("bad OZACCEL_BATCH_MAX_PENDING {v:?}")))?;
+            if n == 0 {
+                return Err(Error::Config("OZACCEL_BATCH_MAX_PENDING must be >= 1".into()));
+            }
+            self.dispatch.batch.max_pending = n;
+        }
+        if let Ok(v) = std::env::var("OZACCEL_BATCH_MAX_BYTES") {
+            let n: usize = v
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("bad OZACCEL_BATCH_MAX_BYTES {v:?}")))?;
+            if n == 0 {
+                return Err(Error::Config("OZACCEL_BATCH_MAX_BYTES must be >= 1".into()));
+            }
+            self.dispatch.batch.max_bytes = n;
         }
         Ok(())
     }
@@ -567,6 +625,43 @@ n_contour = 12
         let cfg = RunConfig::from_toml("[run.adaptive]\ntarget = 1e-7\n").unwrap();
         assert!((cfg.dispatch.precision.target - 1e-7).abs() < 1e-20);
         assert_eq!(cfg.dispatch.precision.mode, PrecisionMode::Fixed);
+    }
+
+    #[test]
+    fn batch_keys_parse_and_reject() {
+        let cfg = RunConfig::from_toml("[batch]\nmax_pending = 32\nmax_bytes = 1048576\n").unwrap();
+        assert_eq!(cfg.dispatch.batch.max_pending, 32);
+        assert_eq!(cfg.dispatch.batch.max_bytes, 1 << 20);
+        // the run.batch.* spelling maps identically
+        let cfg = RunConfig::from_toml("[run.batch]\nmax_pending = 7\n").unwrap();
+        assert_eq!(cfg.dispatch.batch.max_pending, 7);
+        // defaults are sane
+        let d = RunConfig::default();
+        assert!(d.dispatch.batch.max_pending >= 1);
+        assert!(d.dispatch.batch.max_bytes >= 1);
+        // rejections are loud: zero / fractional / unknown keys /
+        // scalar-where-table
+        assert!(RunConfig::from_toml("[batch]\nmax_pending = 0\n").is_err());
+        assert!(RunConfig::from_toml("[batch]\nmax_bytes = 0\n").is_err());
+        assert!(RunConfig::from_toml("[batch]\nmax_bytes = 2.5\n").is_err());
+        assert!(RunConfig::from_toml("[batch]\nbogus = 1\n").is_err());
+        assert!(RunConfig::from_toml("[run.batch]\nbogus = 1\n").is_err());
+        assert!(RunConfig::from_toml("[run]\nbatch = 4\n").is_err());
+        assert!(RunConfig::from_toml("batch = 4\n").is_err());
+    }
+
+    #[test]
+    fn batch_env_override() {
+        let _guard = env_lock();
+        let _restore = RestoreVar("OZACCEL_BATCH_MAX_PENDING");
+        std::env::set_var("OZACCEL_BATCH_MAX_PENDING", "11");
+        let mut cfg = RunConfig::from_toml("[batch]\nmax_pending = 5\n").unwrap();
+        cfg.apply_env().unwrap();
+        assert_eq!(cfg.dispatch.batch.max_pending, 11);
+        std::env::set_var("OZACCEL_BATCH_MAX_PENDING", "0");
+        assert!(cfg.apply_env().is_err(), "zero max_pending is loud");
+        std::env::set_var("OZACCEL_BATCH_MAX_PENDING", "many");
+        assert!(cfg.apply_env().is_err(), "bad OZACCEL_BATCH_MAX_PENDING is loud");
     }
 
     #[test]

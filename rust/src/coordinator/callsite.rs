@@ -13,6 +13,56 @@ use crate::precision::push_trajectory;
 /// Identity of one BLAS call site (source location).
 pub type CallSiteId = &'static str;
 
+/// Batch-engine statistics for one call that executed inside a fused
+/// bucket ([`crate::engine`]) — the PEAK `batch` column's input.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchCallInfo {
+    /// Members of the coalesced bucket this call ran in (1 = the call
+    /// was queued but found no shape-mates).
+    pub bucket: u64,
+    /// Engine-level pack-reuse hits this call contributed (operands
+    /// whose split+pack was shared with an earlier member of the same
+    /// flush instead of being prepared again).
+    pub pack_reuse: u64,
+    /// Whether this record opens its bucket at this site (exactly one
+    /// member per (bucket, site) sets it, so per-site coalesce ratios
+    /// `calls/buckets` can be derived from the accumulated stats).
+    pub lead: bool,
+}
+
+/// Everything measured about one dispatched call, recorded into the
+/// PEAK registry as a unit.
+///
+/// Folding the measurements into a struct (instead of nine positional
+/// `f64`/`u32` arguments) means adjacent floats cannot be transposed
+/// silently at a call site, and a new PEAK column is a one-field,
+/// one-line addition for callers that don't carry it (`..Default::
+/// default()`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CallMeasurement {
+    /// FLOPs of the call (`2·m·k·n` per real GEMM).
+    pub flops: f64,
+    /// Whether the call was routed to the device.
+    pub offloaded: bool,
+    /// Wall seconds measured around the GEMM itself.
+    pub measured_s: f64,
+    /// Modelled GPU compute seconds (offloaded calls only).
+    pub modeled_gpu_s: f64,
+    /// Modelled data-movement seconds (offloaded calls only).
+    pub modeled_move_s: f64,
+    /// Emulated split count (0 for native FP64).
+    pub splits: u32,
+    /// Seconds an a-posteriori precision probe spent on this call
+    /// (0 when unprobed).
+    pub probe_s: f64,
+    /// Kernel-selector statistics for host-executed calls (`None` for
+    /// offloaded ones).
+    pub host: Option<HostCallInfo>,
+    /// Batch-engine statistics when the call executed inside a
+    /// coalesced bucket (`None` for directly dispatched calls).
+    pub batch: Option<BatchCallInfo>,
+}
+
 /// Accumulated statistics for one call site.
 #[derive(Clone, Debug, Default)]
 pub struct CallSiteStats {
@@ -61,6 +111,14 @@ pub struct CallSiteStats {
     /// Seconds spent in a-posteriori precision probes at this site
     /// (the PEAK `probe_ms` column).
     pub probe_s: f64,
+    /// Calls that executed inside a coalesced engine bucket.
+    pub batch_calls: u64,
+    /// Buckets this site participated in (lead members only).
+    pub batch_buckets: u64,
+    /// Largest bucket any of this site's calls rode in.
+    pub bucket_max: u64,
+    /// Engine-level pack-reuse hits across this site's batched calls.
+    pub pack_reuse: u64,
 }
 
 impl CallSiteStats {
@@ -83,6 +141,32 @@ impl CallSiteStats {
             format!("{}..{}", self.splits_min, self.splits_max)
         }
     }
+
+    /// Mean members per bucket at this site (the coalesce ratio; 0 when
+    /// the site never rode the batch engine).
+    pub fn coalesce_ratio(&self) -> f64 {
+        if self.batch_buckets == 0 {
+            0.0
+        } else {
+            self.batch_calls as f64 / self.batch_buckets as f64
+        }
+    }
+
+    /// The `batch` cell of the PEAK table:
+    /// `<max bucket>b/<coalesce ratio>x/<pack-reuse hits>r`, or `-` for
+    /// sites that never went through the batch engine.
+    pub fn batch_cell(&self) -> String {
+        if self.batch_calls == 0 {
+            "-".into()
+        } else {
+            format!(
+                "{}b/{:.1}x/{}r",
+                self.bucket_max,
+                self.coalesce_ratio(),
+                self.pack_reuse
+            )
+        }
+    }
 }
 
 /// Registry of every call site seen this run.
@@ -97,46 +181,30 @@ impl SiteRegistry {
         Self::default()
     }
 
-    /// Record one call.  `splits` is the emulated split count (0 for
-    /// native FP64), `probe_s` the seconds an a-posteriori precision
-    /// probe spent on this call (0 when unprobed), and `host` carries
-    /// kernel-selector statistics for host-executed calls (None for
-    /// offloaded ones).
-    #[allow(clippy::too_many_arguments)]
-    pub fn record(
-        &mut self,
-        site: CallSiteId,
-        flops: f64,
-        offloaded: bool,
-        measured_s: f64,
-        modeled_gpu_s: f64,
-        modeled_move_s: f64,
-        splits: u32,
-        probe_s: f64,
-        host: Option<HostCallInfo>,
-    ) {
+    /// Record one call's [`CallMeasurement`].
+    pub fn record(&mut self, site: CallSiteId, m: CallMeasurement) {
         let e = self.sites.entry(site).or_default();
         e.calls += 1;
-        e.flops += flops;
-        if offloaded {
+        e.flops += m.flops;
+        if m.offloaded {
             e.offloaded += 1;
         } else {
             e.host += 1;
         }
-        e.measured_s += measured_s;
-        e.modeled_gpu_s += modeled_gpu_s;
-        e.modeled_move_s += modeled_move_s;
-        if splits > 0 {
+        e.measured_s += m.measured_s;
+        e.modeled_gpu_s += m.modeled_gpu_s;
+        e.modeled_move_s += m.modeled_move_s;
+        if m.splits > 0 {
             e.splits_min = if e.splits_min == 0 {
-                splits
+                m.splits
             } else {
-                e.splits_min.min(splits)
+                e.splits_min.min(m.splits)
             };
-            e.splits_max = e.splits_max.max(splits);
-            push_trajectory(&mut e.splits_trajectory, splits);
+            e.splits_max = e.splits_max.max(m.splits);
+            push_trajectory(&mut e.splits_trajectory, m.splits);
         }
-        e.probe_s += probe_s;
-        if let Some(h) = host {
+        e.probe_s += m.probe_s;
+        if let Some(h) = m.host {
             e.host_kernel = Some(h.kernel);
             if !h.isa.is_empty() {
                 e.isa = Some(h.isa);
@@ -145,6 +213,14 @@ impl SiteRegistry {
             e.pack_s += h.pack_s;
             e.cache_hits += h.cache_hits;
             e.cache_misses += h.cache_misses;
+        }
+        if let Some(b) = m.batch {
+            e.batch_calls += 1;
+            if b.lead {
+                e.batch_buckets += 1;
+            }
+            e.bucket_max = e.bucket_max.max(b.bucket);
+            e.pack_reuse += b.pack_reuse;
         }
     }
 
@@ -205,6 +281,10 @@ impl SiteRegistry {
                 t.splits_max = t.splits_max.max(s.splits_max);
             }
             t.probe_s += s.probe_s;
+            t.batch_calls += s.batch_calls;
+            t.batch_buckets += s.batch_buckets;
+            t.bucket_max = t.bucket_max.max(s.bucket_max);
+            t.pack_reuse += s.pack_reuse;
         }
         t
     }
@@ -217,7 +297,17 @@ mod tests {
     #[test]
     fn records_and_totals() {
         let mut r = SiteRegistry::new();
-        r.record("a.rs:1", 100.0, true, 1e-3, 2e-3, 3e-4, 0, 0.0, None);
+        r.record(
+            "a.rs:1",
+            CallMeasurement {
+                flops: 100.0,
+                offloaded: true,
+                measured_s: 1e-3,
+                modeled_gpu_s: 2e-3,
+                modeled_move_s: 3e-4,
+                ..Default::default()
+            },
+        );
         let host = HostCallInfo {
             kernel: "blocked",
             isa: "avx2",
@@ -226,8 +316,28 @@ mod tests {
             cache_hits: 3,
             cache_misses: 1,
         };
-        r.record("a.rs:1", 100.0, false, 1e-3, 0.0, 0.0, 6, 5e-5, Some(host));
-        r.record("b.rs:9", 50.0, true, 5e-4, 1e-3, 1e-4, 0, 0.0, None);
+        r.record(
+            "a.rs:1",
+            CallMeasurement {
+                flops: 100.0,
+                measured_s: 1e-3,
+                splits: 6,
+                probe_s: 5e-5,
+                host: Some(host),
+                ..Default::default()
+            },
+        );
+        r.record(
+            "b.rs:9",
+            CallMeasurement {
+                flops: 50.0,
+                offloaded: true,
+                measured_s: 5e-4,
+                modeled_gpu_s: 1e-3,
+                modeled_move_s: 1e-4,
+                ..Default::default()
+            },
+        );
         assert_eq!(r.len(), 2);
         let a = r.get("a.rs:1").unwrap();
         assert_eq!(a.calls, 2);
@@ -253,9 +363,14 @@ mod tests {
 
     #[test]
     fn iteration_is_sorted() {
+        let offl = CallMeasurement {
+            flops: 1.0,
+            offloaded: true,
+            ..Default::default()
+        };
         let mut r = SiteRegistry::new();
-        r.record("z.rs:5", 1.0, true, 0.0, 0.0, 0.0, 0, 0.0, None);
-        r.record("a.rs:2", 1.0, true, 0.0, 0.0, 0.0, 0, 0.0, None);
+        r.record("z.rs:5", offl);
+        r.record("a.rs:2", offl);
         let ids: Vec<_> = r.iter().map(|(id, _)| *id).collect();
         assert_eq!(ids, vec!["a.rs:2", "z.rs:5"]);
     }
@@ -264,17 +379,70 @@ mod tests {
     fn split_trajectory_and_envelope() {
         let mut r = SiteRegistry::new();
         for s in [7u32, 7, 8, 8, 9, 3] {
-            r.record("lu.rs:1", 1.0, false, 0.0, 0.0, 0.0, s, 0.0, None);
+            r.record(
+                "lu.rs:1",
+                CallMeasurement {
+                    flops: 1.0,
+                    splits: s,
+                    ..Default::default()
+                },
+            );
         }
         // a native-FP64 call must not disturb the envelope
-        r.record("lu.rs:1", 1.0, false, 0.0, 0.0, 0.0, 0, 0.0, None);
+        r.record(
+            "lu.rs:1",
+            CallMeasurement {
+                flops: 1.0,
+                ..Default::default()
+            },
+        );
         let s = r.get("lu.rs:1").unwrap();
         assert_eq!((s.splits_min, s.splits_max, s.splits_last()), (3, 9, 3));
         assert_eq!(s.splits_trajectory, vec![7, 8, 9, 3]);
         assert_eq!(s.splits_cell(), "3..9");
         let mut constant = SiteRegistry::new();
-        constant.record("x.rs:1", 1.0, false, 0.0, 0.0, 0.0, 6, 0.0, None);
+        constant.record(
+            "x.rs:1",
+            CallMeasurement {
+                flops: 1.0,
+                splits: 6,
+                ..Default::default()
+            },
+        );
         assert_eq!(constant.get("x.rs:1").unwrap().splits_cell(), "6");
         assert_eq!(CallSiteStats::default().splits_cell(), "-");
+    }
+
+    #[test]
+    fn batch_stats_accumulate_and_render() {
+        let mut r = SiteRegistry::new();
+        // a 3-member bucket at one site: one lead + two followers
+        for (i, reuse) in [(0u64, 0u64), (1, 1), (2, 2)] {
+            r.record(
+                "scf.rs:7",
+                CallMeasurement {
+                    flops: 1.0,
+                    splits: 6,
+                    batch: Some(BatchCallInfo {
+                        bucket: 3,
+                        pack_reuse: reuse,
+                        lead: i == 0,
+                    }),
+                    ..Default::default()
+                },
+            );
+        }
+        let s = r.get("scf.rs:7").unwrap();
+        assert_eq!((s.batch_calls, s.batch_buckets), (3, 1));
+        assert_eq!(s.bucket_max, 3);
+        assert_eq!(s.pack_reuse, 3);
+        assert!((s.coalesce_ratio() - 3.0).abs() < 1e-12);
+        assert_eq!(s.batch_cell(), "3b/3.0x/3r");
+        // direct calls never touch the batch columns
+        assert_eq!(CallSiteStats::default().batch_cell(), "-");
+        assert_eq!(CallSiteStats::default().coalesce_ratio(), 0.0);
+        let t = r.totals();
+        assert_eq!((t.batch_calls, t.batch_buckets, t.bucket_max), (3, 1, 3));
+        assert_eq!(t.pack_reuse, 3);
     }
 }

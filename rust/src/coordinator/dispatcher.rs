@@ -10,11 +10,12 @@ use std::time::Instant;
 use log::{debug, warn};
 
 use super::callsite::CallSiteId;
-use super::callsite::SiteRegistry;
+use super::callsite::{CallMeasurement, SiteRegistry};
 use super::datamove::{DataMoveStrategy, MemModel};
 use super::kernel_select::{HostCallInfo, KernelSelector};
 use super::policy::{OffloadDecision, RoutingPolicy};
 use super::stats::Report;
+use crate::engine::{BatchConfig, Engine};
 use crate::error::Result;
 use crate::kernels::{panel_cache, MR_C64, MR_F64, MR_I8};
 use crate::linalg::{Mat, ZMat};
@@ -45,6 +46,10 @@ pub struct DispatchConfig {
     /// Host kernel routing (naive reference vs blocked/threaded core)
     /// plus its tiling and `OZACCEL_THREADS` parameters.
     pub kernels: KernelSelector,
+    /// Flush policy of the batch execution engine
+    /// (`run.batch.*` / `OZACCEL_BATCH_*`), used by
+    /// [`Dispatcher::batch`] scopes.
+    pub batch: BatchConfig,
 }
 
 impl Default for DispatchConfig {
@@ -60,6 +65,7 @@ impl Default for DispatchConfig {
             // box; config files can still override via `run.host_kernel`
             // and `run.threads`.
             kernels: KernelSelector::from_env(),
+            batch: BatchConfig::from_env(),
         }
     }
 }
@@ -215,8 +221,12 @@ impl Dispatcher {
 
     /// The host-vs-device decision for one (possibly component) GEMM —
     /// the single home of the gate, shared by the real and complex
-    /// entry points so their routing can never drift.
-    fn route(&self, mode: ComputeMode, m: usize, k: usize, n: usize) -> OffloadDecision {
+    /// entry points (and the batch engine) so their routing can never
+    /// drift.  `mode` must be the mode the call will *execute* in —
+    /// i.e. after the precision governor has settled the split count —
+    /// because the policy prices the emulated slice-pair work, not the
+    /// raw FLOPs.
+    pub(crate) fn route(&self, mode: ComputeMode, m: usize, k: usize, n: usize) -> OffloadDecision {
         if self.runtime.is_none() {
             return OffloadDecision::HostForced;
         }
@@ -226,7 +236,41 @@ impl Dispatcher {
             .as_ref()
             .map(|rt| rt.covers(kind, m, k, n))
             .unwrap_or(false);
-        self.cfg.policy.decide(m, k, n, covered)
+        self.cfg
+            .policy
+            .decide(m, k, n, mode.splits().unwrap_or(0), covered)
+    }
+
+    /// The host-kernel selector dispatched calls run under — shared
+    /// with the batch engine so fused buckets execute with exactly the
+    /// sequential path's kernel configuration.
+    pub(crate) fn selector(&self) -> &KernelSelector {
+        &self.cfg.kernels
+    }
+
+    /// Record one call's measurements into the PEAK registry (the batch
+    /// engine's recording seam).
+    pub(crate) fn record_measurement(&self, site: CallSiteId, m: CallMeasurement) {
+        self.sites.lock().unwrap().record(site, m);
+    }
+
+    /// Open a batch scope on this dispatcher: an execution engine that
+    /// queues GEMM submissions and coalesces same-shaped requests into
+    /// fused bucket runs (see [`crate::engine`]).  Flush policy comes
+    /// from [`DispatchConfig::batch`]; results are bit-identical to
+    /// issuing the same calls sequentially.
+    pub fn batch(&self) -> Engine<'_> {
+        Engine::new(self, self.cfg.batch)
+    }
+
+    /// Run `f` inside a batch scope, flushing any still-queued work
+    /// when `f` returns — the scope-style builder over
+    /// [`Dispatcher::batch`].
+    pub fn batch_scope<'s, R>(&'s self, f: impl FnOnce(&Engine<'s>) -> Result<R>) -> Result<R> {
+        let engine = self.batch();
+        let out = f(&engine)?;
+        engine.flush()?;
+        Ok(out)
     }
 
     /// Snapshot the global cache counters around a host call — only in
@@ -277,7 +321,7 @@ impl Dispatcher {
     /// only): recompute a deterministic sample of output rows in FP64,
     /// feed the observed residual back into the governor, and return
     /// the probe seconds for the PEAK `probe_ms` column.
-    fn probe_real(
+    pub(crate) fn probe_real(
         &self,
         site: CallSiteId,
         mode: ComputeMode,
@@ -296,7 +340,7 @@ impl Dispatcher {
     }
 
     /// Complex twin of `probe_real` (fused and decomposed paths).
-    fn probe_complex(
+    pub(crate) fn probe_complex(
         &self,
         site: CallSiteId,
         mode: ComputeMode,
@@ -326,7 +370,7 @@ impl Dispatcher {
     /// `governed` routes the requested mode through the precision
     /// governor and enables feedback probes; pinned entry points pass
     /// `false`.
-    fn zgemm_mode_at(
+    pub(crate) fn zgemm_mode_at(
         &self,
         site: &'static str,
         mode: ComputeMode,
@@ -421,20 +465,20 @@ impl Dispatcher {
             };
             sites.record(
                 site,
-                gemm_flops(m, k, n),
-                false,
-                measured / 4.0,
-                0.0,
-                0.0,
-                splits,
-                if i == 0 { probe_s } else { 0.0 },
-                Some(info),
+                CallMeasurement {
+                    flops: gemm_flops(m, k, n),
+                    measured_s: measured / 4.0,
+                    splits,
+                    probe_s: if i == 0 { probe_s } else { 0.0 },
+                    host: Some(info),
+                    ..Default::default()
+                },
             );
         }
         Ok(result)
     }
 
-    fn dgemm_mode_at(
+    pub(crate) fn dgemm_mode_at(
         &self,
         site: &'static str,
         mode: ComputeMode,
@@ -523,14 +567,17 @@ impl Dispatcher {
         );
         self.sites.lock().unwrap().record(
             site,
-            gemm_flops(m, k, n),
-            decision.offloaded(),
-            measured,
-            gpu_s,
-            move_s,
-            mode.splits().unwrap_or(0),
-            probe_s,
-            host_info,
+            CallMeasurement {
+                flops: gemm_flops(m, k, n),
+                offloaded: decision.offloaded(),
+                measured_s: measured,
+                modeled_gpu_s: gpu_s,
+                modeled_move_s: move_s,
+                splits: mode.splits().unwrap_or(0),
+                probe_s,
+                host: host_info,
+                ..Default::default()
+            },
         );
         Ok(result)
     }

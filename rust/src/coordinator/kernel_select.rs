@@ -134,8 +134,11 @@ impl KernelSelector {
     /// The [`KernelConfig`] the blocked core actually receives: the
     /// `Blocked` selection pins the scalar INT8 body, `Simd` promotes a
     /// contradictory `simd = scalar` back to auto-detection, and
-    /// `Auto`/`Naive` pass the config through.
-    fn effective_config(&self) -> KernelConfig {
+    /// `Auto`/`Naive` pass the config through.  `pub(crate)` so the
+    /// batch engine's fused buckets run under exactly the config a
+    /// sequential call through this selector would (the bit-identity
+    /// contract depends on it).
+    pub(crate) fn effective_config(&self) -> KernelConfig {
         let mut cfg = self.config.clone();
         match self.kernel {
             HostKernel::Blocked => cfg.simd = SimdSelect::Scalar,

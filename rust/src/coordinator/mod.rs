@@ -36,9 +36,9 @@ mod stats;
 
 #[allow(deprecated)]
 pub use adaptive::AdaptivePolicy;
-pub use callsite::{CallSiteId, CallSiteStats, SiteRegistry};
+pub use callsite::{BatchCallInfo, CallMeasurement, CallSiteId, CallSiteStats, SiteRegistry};
 pub use datamove::{BufferId, DataMoveStrategy, MemModel, Residency};
 pub use dispatcher::{call_site, DispatchConfig, Dispatcher};
 pub use kernel_select::{HostCallInfo, HostKernel, KernelSelector};
-pub use policy::{OffloadDecision, RoutingPolicy};
+pub use policy::{emulation_work_factor, OffloadDecision, RoutingPolicy};
 pub use stats::{GemmKind, Report};

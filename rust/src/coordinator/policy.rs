@@ -2,8 +2,16 @@
 //!
 //! SCILIB-Accel offloads only the compute-intensive level-3 calls where
 //! the GPU wins despite movement costs; small GEMMs stay on the host.
-//! The policy here mirrors that: a FLOP threshold plus artifact
+//! The policy here mirrors that: a work threshold plus artifact
 //! coverage, with per-site overrides possible on top.
+//!
+//! The threshold is evaluated against the call's *emulated* work, not
+//! its raw FLOPs: the precision governor settles the split count before
+//! routing, and an `s`-split Ozaki GEMM performs `s(s+1)/2` INT8
+//! products per logical GEMM, so a shape too small to be worth moving
+//! in native FP64 can still clear the bar once the governor demands
+//! many slices (the ROADMAP's "routing threshold is still FLOP-only"
+//! item, closed).
 
 use crate::perfmodel::gemm_flops;
 
@@ -30,8 +38,9 @@ impl OffloadDecision {
 /// Size-threshold routing policy.
 #[derive(Clone, Copy, Debug)]
 pub struct RoutingPolicy {
-    /// Minimum GEMM FLOPs worth offloading.  Default corresponds to a
-    /// 64³ GEMM — the smallest artifact bucket.
+    /// Minimum GEMM work (FLOPs, scaled by the emulation's slice-pair
+    /// count for emulated calls) worth offloading.  Default corresponds
+    /// to a native 64³ GEMM — the smallest artifact bucket.
     pub min_flops: f64,
     /// Hard host-only switch (no runtime available / benchmarking).
     pub force_host: bool,
@@ -46,14 +55,32 @@ impl Default for RoutingPolicy {
     }
 }
 
+/// Work multiplier of an `s`-split emulated GEMM over its native FP64
+/// FLOPs: the ozIMMU triangle runs `s(s+1)/2` INT8 slice-pair products
+/// (1 for `splits == 0`, i.e. native FP64).
+pub fn emulation_work_factor(splits: u32) -> f64 {
+    if splits == 0 {
+        1.0
+    } else {
+        let s = splits as f64;
+        s * (s + 1.0) / 2.0
+    }
+}
+
 impl RoutingPolicy {
-    /// Decide for a GEMM of logical shape (m, k, n).  `covered` reports
-    /// whether an artifact bucket exists for the shape.
-    pub fn decide(&self, m: usize, k: usize, n: usize, covered: bool) -> OffloadDecision {
+    /// Decide for a GEMM of logical shape (m, k, n) executing at the
+    /// governed split count `splits` (0 = native FP64).  `covered`
+    /// reports whether an artifact bucket exists for the shape.
+    ///
+    /// The threshold compares `gemm_flops · s(s+1)/2` — the work the
+    /// device would actually absorb — so callers must pass the split
+    /// count the precision governor *settled on*, after
+    /// `Governor::apply`, not the configured request.
+    pub fn decide(&self, m: usize, k: usize, n: usize, splits: u32, covered: bool) -> OffloadDecision {
         if self.force_host {
             return OffloadDecision::HostForced;
         }
-        if gemm_flops(m, k, n) < self.min_flops {
+        if gemm_flops(m, k, n) * emulation_work_factor(splits) < self.min_flops {
             return OffloadDecision::HostSmall;
         }
         if !covered {
@@ -70,14 +97,17 @@ mod tests {
     #[test]
     fn default_threshold_is_64_cubed() {
         let p = RoutingPolicy::default();
-        assert_eq!(p.decide(64, 64, 64, true), OffloadDecision::Offload);
-        assert_eq!(p.decide(16, 16, 16, true), OffloadDecision::HostSmall);
+        assert_eq!(p.decide(64, 64, 64, 0, true), OffloadDecision::Offload);
+        assert_eq!(p.decide(16, 16, 16, 0, true), OffloadDecision::HostSmall);
     }
 
     #[test]
     fn uncovered_shapes_fall_back() {
         let p = RoutingPolicy::default();
-        assert_eq!(p.decide(4096, 4096, 4096, false), OffloadDecision::HostNoArtifact);
+        assert_eq!(
+            p.decide(4096, 4096, 4096, 0, false),
+            OffloadDecision::HostNoArtifact
+        );
     }
 
     #[test]
@@ -86,16 +116,37 @@ mod tests {
             force_host: true,
             ..Default::default()
         };
-        assert_eq!(p.decide(512, 512, 512, true), OffloadDecision::HostForced);
-        assert!(!p.decide(512, 512, 512, true).offloaded());
+        assert_eq!(p.decide(512, 512, 512, 0, true), OffloadDecision::HostForced);
+        assert!(!p.decide(512, 512, 512, 6, true).offloaded());
     }
 
     #[test]
     fn rectangular_shapes_use_flops_not_dims() {
         // 128 x 8 x 128 has fewer FLOPs than 64^3 → host
         let p = RoutingPolicy::default();
-        assert_eq!(p.decide(128, 8, 128, true), OffloadDecision::HostSmall);
+        assert_eq!(p.decide(128, 8, 128, 0, true), OffloadDecision::HostSmall);
         // 256 x 64 x 256 clears the bar
-        assert_eq!(p.decide(256, 64, 256, true), OffloadDecision::Offload);
+        assert_eq!(p.decide(256, 64, 256, 0, true), OffloadDecision::Offload);
+    }
+
+    #[test]
+    fn governed_splits_scale_the_work_threshold() {
+        // A 32³ GEMM is ~1/8 of the native threshold — but at 6 splits
+        // the device absorbs 21 slice-pair products, so the emulated
+        // work clears the same bar.
+        let p = RoutingPolicy::default();
+        assert_eq!(p.decide(32, 32, 32, 0, true), OffloadDecision::HostSmall);
+        assert_eq!(p.decide(32, 32, 32, 6, true), OffloadDecision::Offload);
+        // ... while a truly tiny GEMM stays on the host at any split
+        // count the governor can legally pick (3..=18).
+        assert_eq!(p.decide(8, 8, 8, 18, true), OffloadDecision::HostSmall);
+    }
+
+    #[test]
+    fn work_factor_is_the_ozimmu_triangle() {
+        assert_eq!(emulation_work_factor(0), 1.0);
+        assert_eq!(emulation_work_factor(1), 1.0);
+        assert_eq!(emulation_work_factor(6), 21.0);
+        assert_eq!(emulation_work_factor(18), 171.0);
     }
 }

@@ -65,7 +65,7 @@ impl Report {
             self.gpu_name
         ));
         out.push_str(&format!(
-            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>7} {:>5} {:>10} {:>9} {:>7} {:>9}\n",
+            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>7} {:>5} {:>10} {:>9} {:>7} {:>9} {:>13}\n",
             "call site",
             "calls",
             "offload",
@@ -79,11 +79,12 @@ impl Report {
             "pack",
             "cache h/m",
             "splits",
-            "probe_ms"
+            "probe_ms",
+            "batch"
         ));
         for (site, s) in self.sites.iter() {
             out.push_str(&format!(
-                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>7} {:>5} {:>9.4}s {:>9} {:>7} {:>9.2}\n",
+                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>7} {:>5} {:>9.4}s {:>9} {:>7} {:>9.2} {:>13}\n",
                 site,
                 s.calls,
                 s.offloaded,
@@ -98,6 +99,7 @@ impl Report {
                 format!("{}/{}", s.cache_hits, s.cache_misses),
                 s.splits_cell(),
                 s.probe_s * 1e3,
+                s.batch_cell(),
             ));
         }
         // Per-site split trajectories (executed counts, in call order)
@@ -137,45 +139,65 @@ mod tests {
 
     #[test]
     fn render_contains_the_essentials() {
-        use crate::coordinator::HostCallInfo;
+        use crate::coordinator::{BatchCallInfo, CallMeasurement, HostCallInfo};
         let mut sites = SiteRegistry::new();
-        sites.record("lu.rs:88", 1e9, true, 0.5, 0.1, 0.01, 0, 0.0, None);
+        sites.record(
+            "lu.rs:88",
+            CallMeasurement {
+                flops: 1e9,
+                offloaded: true,
+                measured_s: 0.5,
+                modeled_gpu_s: 0.1,
+                modeled_move_s: 0.01,
+                ..Default::default()
+            },
+        );
         sites.record(
             "scf.rs:12",
-            1e8,
-            false,
-            0.2,
-            0.0,
-            0.0,
-            4,
-            1.5e-3,
-            Some(HostCallInfo {
-                kernel: "simd",
-                isa: "avx2",
-                bands: 4,
-                pack_s: 0.05,
-                cache_hits: 2,
-                cache_misses: 1,
-            }),
+            CallMeasurement {
+                flops: 1e8,
+                measured_s: 0.2,
+                splits: 4,
+                probe_s: 1.5e-3,
+                host: Some(HostCallInfo {
+                    kernel: "simd",
+                    isa: "avx2",
+                    bands: 4,
+                    pack_s: 0.05,
+                    cache_hits: 2,
+                    cache_misses: 1,
+                }),
+                batch: Some(BatchCallInfo {
+                    bucket: 2,
+                    pack_reuse: 1,
+                    lead: true,
+                }),
+                ..Default::default()
+            },
         );
         // a second, governed-upward call: splits move, probe cost adds
         sites.record(
             "scf.rs:12",
-            1e8,
-            false,
-            0.2,
-            0.0,
-            0.0,
-            7,
-            1.5e-3,
-            Some(HostCallInfo {
-                kernel: "simd",
-                isa: "avx2",
-                bands: 4,
-                pack_s: 0.0,
-                cache_hits: 0,
-                cache_misses: 0,
-            }),
+            CallMeasurement {
+                flops: 1e8,
+                measured_s: 0.2,
+                splits: 7,
+                probe_s: 1.5e-3,
+                host: Some(HostCallInfo {
+                    kernel: "simd",
+                    isa: "avx2",
+                    bands: 4,
+                    pack_s: 0.0,
+                    cache_hits: 0,
+                    cache_misses: 0,
+                }),
+                batch: Some(BatchCallInfo {
+                    bucket: 2,
+                    pack_reuse: 0,
+                    lead: false,
+                }),
+                ..Default::default()
+            },
         );
         let r = Report {
             mode: ComputeMode::Int8 { splits: 6 },
@@ -208,6 +230,11 @@ mod tests {
         assert!(txt.contains("2/1"), "cache hits/misses surfaced"); // first record only
         assert!(txt.contains("4..7"), "split envelope surfaced per site");
         assert!(txt.contains("3.00"), "probe milliseconds surfaced per site");
+        assert!(txt.contains("batch"), "header shows the batch column");
+        assert!(
+            txt.contains("2b/2.0x/1r"),
+            "bucket size / coalesce ratio / pack reuse surfaced per site"
+        );
         assert!(
             txt.contains("splits trajectory") && txt.contains("4->7"),
             "moved sites get a trajectory line under the table"

@@ -1,0 +1,67 @@
+//! Shape-bucketed coalescing: grouping a flushed queue into fused runs.
+//!
+//! A bucket is the unit of fused execution: requests that agree on
+//! GEMM kind (real/complex), logical shape, requested mode, and
+//! governed-ness.  Members of one bucket can share a single pool
+//! dispatch, a single governor consultation per site, and any operands
+//! they have in common.  Grouping is **stable**: buckets appear in the
+//! order their first member was submitted, and members keep submission
+//! order within the bucket — so execution order (and therefore every
+//! PEAK trajectory) is a pure function of submission order, never of
+//! hash iteration.
+
+use std::collections::HashMap;
+
+use super::queue::{Payload, Request};
+use crate::ozaki::ComputeMode;
+
+/// What a bucket agrees on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub(crate) struct BucketKey {
+    /// Real or complex entry point.
+    pub complex: bool,
+    /// Logical shape (m, k, n).
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Requested compute mode (pre-governor; the scheduler settles the
+    /// executed mode once per site within the bucket).
+    pub mode: ComputeMode,
+    /// Whether the members are subject to the precision governor.
+    pub governed: bool,
+}
+
+impl BucketKey {
+    pub fn of(req: &Request) -> Self {
+        let (m, k, n) = req.shape();
+        BucketKey {
+            complex: matches!(req.payload, Payload::Complex { .. }),
+            m,
+            k,
+            n,
+            mode: req.mode,
+            governed: req.governed,
+        }
+    }
+}
+
+/// Stable grouping of a drained queue into buckets.
+pub(crate) fn bucketize(reqs: Vec<Request>) -> Vec<(BucketKey, Vec<Request>)> {
+    let mut order: Vec<BucketKey> = Vec::new();
+    let mut groups: HashMap<BucketKey, Vec<Request>> = HashMap::new();
+    for req in reqs {
+        let key = BucketKey::of(&req);
+        let entry = groups.entry(key).or_insert_with(|| {
+            order.push(key);
+            Vec::new()
+        });
+        entry.push(req);
+    }
+    order
+        .into_iter()
+        .map(|k| {
+            let members = groups.remove(&k).expect("bucket recorded in order");
+            (k, members)
+        })
+        .collect()
+}

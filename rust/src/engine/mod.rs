@@ -1,0 +1,410 @@
+//! The batched asynchronous GEMM execution engine.
+//!
+//! The paper's workload shape is thousands of *independent,
+//! similarly-shaped* emulated GEMMs — MuST fires one τ/Green's-function
+//! solve per energy point, and every complex product decomposes into
+//! four real ones.  The dispatcher executes each call synchronously, so
+//! the worker pool and the packed-panel machinery amortise only within
+//! a single call.  This engine sits between the dispatcher and the
+//! kernels and turns the per-call library into a throughput engine:
+//!
+//! * **async submission** — [`Engine::submit_dgemm`] /
+//!   [`Engine::submit_zgemm`] enqueue a request and return a
+//!   [`GemmTicket`] immediately; [`GemmTicket::wait`] (or
+//!   [`wait_all`]) delivers the result, flushing the queue first if
+//!   needed, so a ticket can never block on work that will not run;
+//! * **shape-bucketed coalescing** — at flush, queued requests are
+//!   grouped into shape × mode × splits buckets (the `scheduler` and
+//!   `bucket` submodules) and each bucket executes as **one
+//!   fused run**: all members' row bands enter a single pool dispatch
+//!   ([`crate::kernels::fused_ozaki_sweep_many`]), and the precision
+//!   governor is consulted once per (site, bucket) instead of once per
+//!   call;
+//! * **shared-operand detection** — within a flush, operands submitted
+//!   by `Arc` identity are split + packed **once** no matter how many
+//!   members use them (the contour loop multiplying many matrices
+//!   against one shared factor), on top of the content-addressed panel
+//!   cache that already catches repeats across flushes;
+//! * **bounded memory, deadlock-free backpressure** — the flush policy
+//!   ([`BatchConfig`]: `run.batch.max_pending`, `run.batch.max_bytes`,
+//!   explicit [`Engine::flush`], flush-on-`wait`, flush-on-drop)
+//!   guarantees the queue never holds more than `max_pending` requests
+//!   or `max_bytes` of queued operand bytes, and every execution path
+//!   runs on the submitting thread — nested submission from inside a
+//!   pool task executes inline, exactly like the pool's own nested
+//!   parallelism.
+//!
+//! **Bit-determinism invariant:** batched submission returns results
+//! bit-identical to issuing the same calls sequentially through the
+//! dispatcher, regardless of arrival order, bucket composition, thread
+//! count, or ISA.  The fused bucket run never changes a member's math —
+//! panels, weights, band partition, and accumulation order are exactly
+//! the sequential path's; only the scheduling (and redundant split/pack
+//! work) differs.  The one intentional semantic difference: in
+//! `feedback` precision mode the governor decides once per (site,
+//! bucket), so mid-bucket ramping that sequential submission could have
+//! interleaved is deferred to the next flush.
+
+mod bucket;
+mod queue;
+mod scheduler;
+mod ticket;
+
+pub use ticket::{wait_all, GemmTicket};
+
+use std::sync::Mutex;
+
+use crate::coordinator::Dispatcher;
+use crate::error::Result;
+use crate::linalg::{Mat, ZMat};
+use crate::ozaki::ComputeMode;
+
+use queue::{Payload, Queue, Request};
+use ticket::{FlushHost, Slot};
+
+/// Flush policy of the batch engine (`run.batch.*` / `OZACCEL_BATCH_*`).
+///
+/// Both bounds are hard: a submission that would push the queue past
+/// either limit flushes the queued work first, so the engine's memory
+/// footprint stays bounded regardless of how much a scope submits
+/// before waiting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// Maximum queued requests before an automatic flush
+    /// (`run.batch.max_pending`, ≥ 1).
+    pub max_pending: usize,
+    /// Maximum queued operand bytes before an automatic flush
+    /// (`run.batch.max_bytes`, ≥ 1; a single request larger than this
+    /// flushes immediately after enqueue).
+    pub max_bytes: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_pending: 256,
+            // 256 MiB of queued operands — roomy for thousands of the
+            // paper's small per-point GEMMs, tiny next to one large run.
+            max_bytes: 256 << 20,
+        }
+    }
+}
+
+impl BatchConfig {
+    /// Defaults with `OZACCEL_BATCH_MAX_PENDING` /
+    /// `OZACCEL_BATCH_MAX_BYTES` applied on top.  Unparseable or zero
+    /// values keep the default but warn — mirroring
+    /// [`crate::coordinator::KernelSelector::from_env`], `Default`
+    /// cannot fail loudly the way `RunConfig::apply_env` does.
+    pub fn from_env() -> Self {
+        let mut cfg = BatchConfig::default();
+        if let Ok(v) = std::env::var("OZACCEL_BATCH_MAX_PENDING") {
+            match v.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => cfg.max_pending = n,
+                _ => log::warn!("ignoring invalid OZACCEL_BATCH_MAX_PENDING={v:?} (want >= 1)"),
+            }
+        }
+        if let Ok(v) = std::env::var("OZACCEL_BATCH_MAX_BYTES") {
+            match v.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => cfg.max_bytes = n,
+                _ => log::warn!("ignoring invalid OZACCEL_BATCH_MAX_BYTES={v:?} (want >= 1)"),
+            }
+        }
+        cfg
+    }
+
+    /// A copy with both bounds forced to at least 1 (the engine's
+    /// arithmetic stays total for configs built in code).
+    pub fn normalized(self) -> Self {
+        BatchConfig {
+            max_pending: self.max_pending.max(1),
+            max_bytes: self.max_bytes.max(1),
+        }
+    }
+}
+
+/// Cumulative counters of one engine instance (tests, the PEAK report,
+/// and the bench's coalescing evidence).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Requests submitted.
+    pub submitted: u64,
+    /// Flushes executed (explicit, policy-triggered, wait, and drop).
+    pub flushes: u64,
+    /// Fused bucket runs executed.
+    pub buckets: u64,
+    /// Members executed through a fused bucket run.
+    pub fused_calls: u64,
+    /// Members executed through the per-call dispatcher fallback
+    /// (offloaded shapes, native-FP64 mode, or the naive selector).
+    pub direct_calls: u64,
+    /// Fused members that shared their bucket with at least one other
+    /// request (the coalescing the queue actually achieved).
+    pub coalesced_calls: u64,
+    /// Operand split+packs skipped because an earlier member of the
+    /// same flush already prepared the identical operand.
+    pub pack_reuse_hits: u64,
+    /// Largest number of requests the queue ever held.
+    pub high_water_pending: usize,
+    /// Largest operand byte count the queue ever held.
+    pub high_water_bytes: usize,
+}
+
+/// The batched asynchronous execution engine — one batch scope over a
+/// [`Dispatcher`].  Create with [`Dispatcher::batch`] (or the
+/// closure-style [`Dispatcher::batch_scope`]); drop (or `flush`) to
+/// settle everything still queued.
+pub struct Engine<'d> {
+    disp: &'d Dispatcher,
+    cfg: BatchConfig,
+    queue: Mutex<Queue>,
+    stats: Mutex<BatchStats>,
+}
+
+impl<'d> Engine<'d> {
+    /// Build an engine over `disp` with the given flush policy (bounds
+    /// are normalized to ≥ 1).
+    pub fn new(disp: &'d Dispatcher, cfg: BatchConfig) -> Self {
+        Engine {
+            disp,
+            cfg: cfg.normalized(),
+            queue: Mutex::new(Queue::new()),
+            stats: Mutex::new(BatchStats::default()),
+        }
+    }
+
+    /// The flush policy this engine runs under.
+    pub fn config(&self) -> BatchConfig {
+        self.cfg
+    }
+
+    /// Queue one FP64 GEMM in the dispatcher's configured mode,
+    /// attributed to the caller's source location (like
+    /// [`Dispatcher::dgemm`]) and subject to the precision governor.
+    #[track_caller]
+    pub fn submit_dgemm(
+        &self,
+        a: impl Into<std::sync::Arc<Mat<f64>>>,
+        b: impl Into<std::sync::Arc<Mat<f64>>>,
+    ) -> GemmTicket<'_, Mat<f64>> {
+        let site = crate::coordinator::call_site();
+        self.submit_dgemm_at(site, self.disp.mode(), a, b)
+    }
+
+    /// Queue one FP64 GEMM with an explicit site and mode (governed).
+    pub fn submit_dgemm_at(
+        &self,
+        site: crate::coordinator::CallSiteId,
+        mode: ComputeMode,
+        a: impl Into<std::sync::Arc<Mat<f64>>>,
+        b: impl Into<std::sync::Arc<Mat<f64>>>,
+    ) -> GemmTicket<'_, Mat<f64>> {
+        self.submit_real(site, mode, true, a.into(), b.into())
+    }
+
+    /// Queue one FP64 GEMM pinned to exactly `mode`, bypassing the
+    /// precision governor (the batch twin of
+    /// [`Dispatcher::dgemm_pinned`]).
+    pub fn submit_dgemm_pinned_at(
+        &self,
+        site: crate::coordinator::CallSiteId,
+        mode: ComputeMode,
+        a: impl Into<std::sync::Arc<Mat<f64>>>,
+        b: impl Into<std::sync::Arc<Mat<f64>>>,
+    ) -> GemmTicket<'_, Mat<f64>> {
+        self.submit_real(site, mode, false, a.into(), b.into())
+    }
+
+    /// Queue one complex GEMM in the dispatcher's configured mode,
+    /// attributed to the caller's source location (like
+    /// [`Dispatcher::zgemm`]) and subject to the precision governor.
+    #[track_caller]
+    pub fn submit_zgemm(
+        &self,
+        a: impl Into<std::sync::Arc<ZMat>>,
+        b: impl Into<std::sync::Arc<ZMat>>,
+    ) -> GemmTicket<'_, ZMat> {
+        let site = crate::coordinator::call_site();
+        self.submit_zgemm_at(site, self.disp.mode(), a, b)
+    }
+
+    /// Queue one complex GEMM with an explicit site and mode (governed).
+    pub fn submit_zgemm_at(
+        &self,
+        site: crate::coordinator::CallSiteId,
+        mode: ComputeMode,
+        a: impl Into<std::sync::Arc<ZMat>>,
+        b: impl Into<std::sync::Arc<ZMat>>,
+    ) -> GemmTicket<'_, ZMat> {
+        self.submit_complex(site, mode, true, a.into(), b.into())
+    }
+
+    /// Queue one complex GEMM pinned to exactly `mode`, bypassing the
+    /// precision governor (the batch twin of
+    /// [`Dispatcher::zgemm_pinned`]).
+    pub fn submit_zgemm_pinned_at(
+        &self,
+        site: crate::coordinator::CallSiteId,
+        mode: ComputeMode,
+        a: impl Into<std::sync::Arc<ZMat>>,
+        b: impl Into<std::sync::Arc<ZMat>>,
+    ) -> GemmTicket<'_, ZMat> {
+        self.submit_complex(site, mode, false, a.into(), b.into())
+    }
+
+    fn submit_real(
+        &self,
+        site: crate::coordinator::CallSiteId,
+        mode: ComputeMode,
+        governed: bool,
+        a: std::sync::Arc<Mat<f64>>,
+        b: std::sync::Arc<Mat<f64>>,
+    ) -> GemmTicket<'_, Mat<f64>> {
+        let slot = Slot::new();
+        if a.cols() != b.rows() {
+            slot.fill(Err(crate::error::Error::Shape(format!(
+                "batch dgemm: {}x{} @ {}x{}",
+                a.rows(),
+                a.cols(),
+                b.rows(),
+                b.cols()
+            ))));
+            return GemmTicket::new(self, slot);
+        }
+        self.enqueue(Request {
+            site,
+            mode,
+            governed,
+            payload: Payload::Real {
+                a,
+                b,
+                slot: slot.clone(),
+            },
+        });
+        GemmTicket::new(self, slot)
+    }
+
+    fn submit_complex(
+        &self,
+        site: crate::coordinator::CallSiteId,
+        mode: ComputeMode,
+        governed: bool,
+        a: std::sync::Arc<ZMat>,
+        b: std::sync::Arc<ZMat>,
+    ) -> GemmTicket<'_, ZMat> {
+        let slot = Slot::new();
+        if a.cols() != b.rows() {
+            slot.fill(Err(crate::error::Error::Shape(format!(
+                "batch zgemm: {}x{} @ {}x{}",
+                a.rows(),
+                a.cols(),
+                b.rows(),
+                b.cols()
+            ))));
+            return GemmTicket::new(self, slot);
+        }
+        self.enqueue(Request {
+            site,
+            mode,
+            governed,
+            payload: Payload::Complex {
+                a,
+                b,
+                slot: slot.clone(),
+            },
+        });
+        GemmTicket::new(self, slot)
+    }
+
+    /// Enqueue under the flush policy.  The bound check, any draining
+    /// it forces, and the push all happen inside **one** queue critical
+    /// section, so the bounds are hard even under concurrent
+    /// submission: the queue can never hold more than `max_pending`
+    /// requests (or exceed `max_bytes`, except by a single oversized
+    /// request, which drains by itself immediately).  The drained
+    /// batches execute after the lock is released.
+    fn enqueue(&self, req: Request) {
+        let bytes = req.bytes();
+        let mut to_run: Vec<Vec<Request>> = Vec::new();
+        {
+            let mut q = self.queue.lock().unwrap();
+            if !q.is_empty()
+                && (q.len() + 1 > self.cfg.max_pending || q.bytes() + bytes > self.cfg.max_bytes)
+            {
+                to_run.push(q.drain());
+            }
+            q.push(req);
+            let mut st = self.stats.lock().unwrap();
+            st.submitted += 1;
+            st.high_water_pending = st.high_water_pending.max(q.len());
+            st.high_water_bytes = st.high_water_bytes.max(q.bytes());
+            if q.len() >= self.cfg.max_pending || q.bytes() >= self.cfg.max_bytes {
+                to_run.push(q.drain());
+            }
+        }
+        for batch in to_run {
+            self.run_batch(batch);
+        }
+    }
+
+    /// Execute one drained batch (shared by [`Engine::flush`] and the
+    /// policy-triggered drains in `enqueue`).  Per-member errors land
+    /// in the members' slots; the scheduler itself cannot fail.
+    fn run_batch(&self, batch: Vec<Request>) {
+        if batch.is_empty() {
+            return;
+        }
+        self.stats.lock().unwrap().flushes += 1;
+        let _ = scheduler::execute(self.disp, batch, &self.stats);
+    }
+
+    /// Execute everything queued: coalesce into shape buckets, run each
+    /// bucket fused, and settle every pending ticket's slot (results
+    /// *and* per-member errors — a failed member never poisons its
+    /// bucket-mates).  Explicit flushes between submissions are the
+    /// third flush trigger next to the policy bounds and `wait`.
+    pub fn flush(&self) -> Result<()> {
+        let drained = {
+            let mut q = self.queue.lock().unwrap();
+            q.drain()
+        };
+        self.run_batch(drained);
+        Ok(())
+    }
+
+    /// Requests currently queued (un-flushed).
+    pub fn pending(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    /// Operand bytes currently queued.
+    pub fn pending_bytes(&self) -> usize {
+        self.queue.lock().unwrap().bytes()
+    }
+
+    /// Snapshot of the engine's cumulative counters.
+    pub fn stats(&self) -> BatchStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// The dispatcher this scope executes through.
+    pub fn dispatcher(&self) -> &'d Dispatcher {
+        self.disp
+    }
+}
+
+impl FlushHost for Engine<'_> {
+    fn flush_now(&self) -> Result<()> {
+        self.flush()
+    }
+}
+
+impl Drop for Engine<'_> {
+    /// Dropping a scope settles everything still queued, so no ticket
+    /// slot is ever left permanently empty (tickets cannot outlive the
+    /// engine, but a scope that submitted fire-and-forget work still
+    /// executes it).
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}

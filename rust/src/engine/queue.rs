@@ -1,0 +1,98 @@
+//! The pending-request queue: what a batch scope holds between
+//! submission and flush.
+//!
+//! Requests keep their operands alive by `Arc`, so a scope can queue
+//! hundreds of small GEMMs without copying a matrix twice — and the
+//! scheduler can detect *shared* operands by `Arc` identity (the same
+//! pointer submitted under several requests packs once per flush).
+
+use std::sync::Arc;
+
+use super::ticket::Slot;
+use crate::coordinator::CallSiteId;
+use crate::linalg::{Mat, ZMat};
+use crate::ozaki::ComputeMode;
+
+/// Operands + result slot of one queued request.
+pub(crate) enum Payload {
+    /// Real FP64 GEMM.
+    Real {
+        a: Arc<Mat<f64>>,
+        b: Arc<Mat<f64>>,
+        slot: Arc<Slot<Mat<f64>>>,
+    },
+    /// Complex GEMM (the 4-real-GEMM decomposition).
+    Complex {
+        a: Arc<ZMat>,
+        b: Arc<ZMat>,
+        slot: Arc<Slot<ZMat>>,
+    },
+}
+
+/// One queued GEMM request.
+pub(crate) struct Request {
+    /// PEAK call-site the execution will be attributed to.
+    pub site: CallSiteId,
+    /// Requested compute mode (pre-governor).
+    pub mode: ComputeMode,
+    /// Whether the precision governor may retune the request.
+    pub governed: bool,
+    /// Operands and the ticket's result slot.
+    pub payload: Payload,
+}
+
+impl Request {
+    /// Logical GEMM shape (m, k, n).
+    pub fn shape(&self) -> (usize, usize, usize) {
+        match &self.payload {
+            Payload::Real { a, b, .. } => (a.rows(), a.cols(), b.cols()),
+            Payload::Complex { a, b, .. } => (a.rows(), a.cols(), b.cols()),
+        }
+    }
+
+    /// Bytes of operand data this request keeps alive (the flush
+    /// policy's `max_bytes` unit).
+    pub fn bytes(&self) -> usize {
+        match &self.payload {
+            Payload::Real { a, b, .. } => (a.data().len() + b.data().len()) * 8,
+            Payload::Complex { a, b, .. } => (a.data().len() + b.data().len()) * 16,
+        }
+    }
+}
+
+/// FIFO of pending requests with a running byte count.
+#[derive(Default)]
+pub(crate) struct Queue {
+    pending: Vec<Request>,
+    bytes: usize,
+}
+
+impl Queue {
+    pub fn new() -> Self {
+        Queue::default()
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.bytes += req.bytes();
+        self.pending.push(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Take everything, leaving the queue empty (submission order is
+    /// preserved — bucket grouping is stable on top of it).
+    pub fn drain(&mut self) -> Vec<Request> {
+        self.bytes = 0;
+        std::mem::take(&mut self.pending)
+    }
+}

@@ -1,0 +1,483 @@
+//! The flush scheduler: buckets → fused runs → settled tickets.
+//!
+//! Execution rules, chosen so the bit-identity contract is trivially
+//! auditable:
+//!
+//! * a member is **fused** only on the path where fusion actually pays
+//!   and provably cannot change bits: host-routed, emulated (Int8)
+//!   mode, non-naive host kernel.  The fused run reuses the sequential
+//!   path's own building blocks — `ozaki::prepare_a`/`prepare_b` under
+//!   the same effective [`KernelConfig`], the same diagonal weights,
+//!   and a band partition identical to the per-call drivers — so each
+//!   member's result equals its sequential counterpart bit-for-bit;
+//! * every other member (native FP64, offload-routed shapes, the naive
+//!   oracle selector) is **re-issued verbatim** through the
+//!   dispatcher's sequential entry point — bit-identical by definition;
+//! * the precision governor is consulted **once per (site, bucket)**;
+//!   members at the same site inside one bucket share the decision
+//!   (the engine's cost amortisation; in feedback mode this defers
+//!   mid-bucket ramping to the next flush, which is the documented
+//!   semantic difference from sequential submission);
+//! * operands are packed **once per flush**: a shared `Arc` submitted
+//!   under many members (the contour loop's shared factor) prepares a
+//!   single panel set, counted as engine-level pack reuse on top of
+//!   whatever the content-addressed panel cache already catches.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::bucket::{bucketize, BucketKey};
+use super::queue::{Payload, Request};
+use super::BatchStats;
+use crate::coordinator::{
+    BatchCallInfo, CallMeasurement, CallSiteId, Dispatcher, HostCallInfo, HostKernel,
+};
+use crate::error::{Error, Result};
+use crate::kernels::{
+    fused_ozaki_sweep_many, panel_cache, KernelConfig, Panels, SweepSpec, MR_I8,
+};
+use crate::linalg::{zcombine, Mat};
+use crate::ozaki::{diagonal_weights, prepare_a, prepare_b, unscale, ComputeMode};
+use crate::perfmodel::gemm_flops;
+
+/// Execute a drained queue: coalesce, run, settle every slot.
+pub(crate) fn execute(
+    disp: &Dispatcher,
+    reqs: Vec<Request>,
+    stats: &Mutex<BatchStats>,
+) -> Result<()> {
+    for (key, members) in bucketize(reqs) {
+        execute_bucket(disp, key, members, stats)?;
+    }
+    Ok(())
+}
+
+/// Prepared panels of one operand (A-side or B-side), memoized per
+/// flush by `Arc` identity.
+type Prepared = (Arc<Panels<i8>>, Arc<Vec<i32>>);
+
+/// Per-flush pack memo: (operand address, B-side?, imaginary
+/// component?) → prepared panels.  `Arc` identity is exact — equal
+/// addresses mean the *same* allocation, so a hit can never alias two
+/// different matrices the way a content digest theoretically could.
+#[derive(Default)]
+struct PackMemo {
+    map: HashMap<(usize, bool, bool), Prepared>,
+    hits_by_member: Vec<u64>,
+}
+
+impl PackMemo {
+    /// Prepare (or reuse) one operand for `member`, counting reuse.
+    fn prepare(
+        &mut self,
+        member: usize,
+        addr: usize,
+        b_side: bool,
+        imag: bool,
+        pack: impl FnOnce() -> Prepared,
+    ) -> Prepared {
+        if let Some(hit) = self.map.get(&(addr, b_side, imag)) {
+            self.hits_by_member[member] += 1;
+            return hit.clone();
+        }
+        let fresh = pack();
+        self.map.insert((addr, b_side, imag), fresh.clone());
+        fresh
+    }
+}
+
+fn execute_bucket(
+    disp: &Dispatcher,
+    key: BucketKey,
+    members: Vec<Request>,
+    stats: &Mutex<BatchStats>,
+) -> Result<()> {
+    // Native-FP64 requests and the naive oracle selector take the
+    // sequential path verbatim (no fusion win to be had, and the
+    // bit-identity argument stays a tautology).
+    let naive = disp.selector().kernel == HostKernel::Naive;
+    if key.mode == ComputeMode::Dgemm || naive {
+        return direct_all(disp, members, stats);
+    }
+
+    // One governor consultation per (site, bucket): every member at a
+    // site shares the decision the first one triggered.  Members that
+    // later fall back to `direct_all` (offload-routed shapes, a
+    // Dgemm-decided group) re-issue with their original `governed`
+    // flag, so the dispatcher consults the governor a second time for
+    // them; that is deliberate and benign — `apply` is deterministic in
+    // the unchanged per-site state, the duplicate decision collapses in
+    // the trajectory (`push_trajectory`), and re-issuing governed keeps
+    // the fallback's probe cadence exactly sequential.
+    let mut decided: HashMap<CallSiteId, ComputeMode> = HashMap::new();
+    let mut groups: Vec<(ComputeMode, Vec<Request>)> = Vec::new();
+    for req in members {
+        let mode = *decided.entry(req.site).or_insert_with(|| {
+            if req.governed {
+                disp.governor().apply(req.site, req.mode, key.k).mode
+            } else {
+                req.mode
+            }
+        });
+        match groups.iter_mut().find(|(m, _)| *m == mode) {
+            Some((_, g)) => g.push(req),
+            None => groups.push((mode, vec![req])),
+        }
+    }
+
+    for (mode, group) in groups {
+        let splits = match mode.splits() {
+            // A governor running in fixed mode passes Dgemm requests
+            // through untouched; they cannot appear here (bucket mode
+            // is Int8 and apply() never downgrades Int8 to Dgemm), but
+            // stay total anyway.
+            None => {
+                direct_all(disp, group, stats)?;
+                continue;
+            }
+            Some(s) => s,
+        };
+        if disp.route(mode, key.m, key.k, key.n).offloaded() {
+            // Offload-routed shapes keep the per-call PJRT path.
+            direct_all(disp, group, stats)?;
+            continue;
+        }
+        if key.complex {
+            fused_complex(disp, key, mode, splits, group, stats)?;
+        } else {
+            fused_real(disp, key, mode, splits, group, stats)?;
+        }
+    }
+    Ok(())
+}
+
+/// Re-issue members one by one through the dispatcher's sequential
+/// entry points (bit-identical by definition; no batch accounting).
+fn direct_all(disp: &Dispatcher, members: Vec<Request>, stats: &Mutex<BatchStats>) -> Result<()> {
+    let n = members.len() as u64;
+    for req in members {
+        match req.payload {
+            Payload::Real { a, b, slot } => {
+                slot.fill(disp.dgemm_mode_at(req.site, req.mode, &a, &b, req.governed));
+            }
+            Payload::Complex { a, b, slot } => {
+                slot.fill(disp.zgemm_mode_at(req.site, req.mode, &a, &b, req.governed));
+            }
+        }
+    }
+    stats.lock().unwrap().direct_calls += n;
+    Ok(())
+}
+
+/// Fill every member's slot with (a copy of) one execution error.
+fn fail_all(members: &[Request], msg: &str) {
+    for req in members {
+        match &req.payload {
+            Payload::Real { slot, .. } => {
+                slot.fill(Err(Error::Numerical(msg.to_string())));
+            }
+            Payload::Complex { slot, .. } => {
+                slot.fill(Err(Error::Numerical(msg.to_string())));
+            }
+        }
+    }
+}
+
+/// Shared per-group accounting: batch counters, lead flags, and the
+/// host-call info carried by each site's first record.
+struct GroupRecorder {
+    bucket: u64,
+    lead_seen: HashSet<CallSiteId>,
+    full_info: HostCallInfo,
+    attached_full: bool,
+}
+
+impl GroupRecorder {
+    fn batch_info(&mut self, site: CallSiteId, reuse: u64) -> BatchCallInfo {
+        BatchCallInfo {
+            bucket: self.bucket,
+            pack_reuse: reuse,
+            lead: self.lead_seen.insert(site),
+        }
+    }
+
+    /// Pack time / cache traffic attach to the group's first record
+    /// only (the same convention the dispatcher's fused complex path
+    /// uses), so summed per-site numbers stay comparable.
+    fn host_info(&mut self) -> HostCallInfo {
+        if self.attached_full {
+            HostCallInfo {
+                pack_s: 0.0,
+                cache_hits: 0,
+                cache_misses: 0,
+                ..self.full_info
+            }
+        } else {
+            self.attached_full = true;
+            self.full_info
+        }
+    }
+}
+
+fn group_host_info(
+    disp: &Dispatcher,
+    m: usize,
+    before: panel_cache::CacheStats,
+) -> HostCallInfo {
+    let after = panel_cache::global_stats();
+    HostCallInfo {
+        kernel: disp.selector().kernel.name(),
+        isa: disp.selector().resolved_isa().unwrap_or(""),
+        bands: disp.selector().bands_for(m, MR_I8),
+        pack_s: after.pack_s - before.pack_s,
+        cache_hits: after.hits - before.hits,
+        cache_misses: after.misses - before.misses,
+    }
+}
+
+fn note_fused(stats: &Mutex<BatchStats>, members: usize, reuse_total: u64) {
+    let mut st = stats.lock().unwrap();
+    st.buckets += 1;
+    st.fused_calls += members as u64;
+    if members > 1 {
+        st.coalesced_calls += members as u64;
+    }
+    st.pack_reuse_hits += reuse_total;
+}
+
+/// One fused run of a real-GEMM group: shared prepare, one multi-C
+/// sweep, per-member unscale/probe/record.
+fn fused_real(
+    disp: &Dispatcher,
+    key: BucketKey,
+    mode: ComputeMode,
+    splits: u32,
+    group: Vec<Request>,
+    stats: &Mutex<BatchStats>,
+) -> Result<()> {
+    let ecfg: KernelConfig = disp.selector().effective_config();
+    let weights = diagonal_weights(splits);
+    let mut memo = PackMemo {
+        hits_by_member: vec![0; group.len()],
+        ..Default::default()
+    };
+    let cache_before = panel_cache::global_stats();
+    let t0 = Instant::now();
+
+    let mut prepared: Vec<(Prepared, Prepared)> = Vec::with_capacity(group.len());
+    for (mi, req) in group.iter().enumerate() {
+        let Payload::Real { a, b, .. } = &req.payload else {
+            unreachable!("real bucket holds real payloads");
+        };
+        let pa = memo.prepare(mi, Arc::as_ptr(a) as usize, false, false, || {
+            prepare_a(a, splits, &ecfg)
+        });
+        let pb = memo.prepare(mi, Arc::as_ptr(b) as usize, true, false, || {
+            prepare_b(b, splits, &ecfg)
+        });
+        prepared.push((pa, pb));
+    }
+    let specs: Vec<SweepSpec<'_>> = prepared
+        .iter()
+        .map(|((pa, _), (pb, _))| SweepSpec {
+            ap: pa.as_ref(),
+            bp: pb.as_ref(),
+            weights: &weights,
+        })
+        .collect();
+    let mut results = match fused_ozaki_sweep_many(&specs, &ecfg) {
+        Ok(r) => r,
+        Err(e) => {
+            fail_all(&group, &format!("batch bucket execution failed: {e}"));
+            return Ok(());
+        }
+    };
+    for (c, ((_, ea), (_, eb))) in results.iter_mut().zip(&prepared) {
+        unscale(c, ea, eb);
+    }
+    let measured = t0.elapsed().as_secs_f64();
+    let share = measured / group.len() as f64;
+    let reuse_total: u64 = memo.hits_by_member.iter().sum();
+
+    let mut rec = GroupRecorder {
+        bucket: group.len() as u64,
+        lead_seen: HashSet::new(),
+        full_info: group_host_info(disp, key.m, cache_before),
+        attached_full: false,
+    };
+    for ((req, result), reuse) in group
+        .iter()
+        .zip(results)
+        .zip(memo.hits_by_member.iter().copied())
+    {
+        let Payload::Real { a, b, slot } = &req.payload else {
+            unreachable!("real bucket holds real payloads");
+        };
+        // A probe failure is that member's error (mirroring the
+        // sequential path, where it propagates before the call is
+        // recorded) — it must not abort the rest of the bucket or
+        // leave later members' tickets unsettled.
+        let probe_s = if req.governed {
+            match disp.probe_real(req.site, mode, a, b, &result) {
+                Ok(s) => s,
+                Err(e) => {
+                    slot.fill(Err(e));
+                    continue;
+                }
+            }
+        } else {
+            0.0
+        };
+        let batch = rec.batch_info(req.site, reuse);
+        let host = rec.host_info();
+        disp.record_measurement(
+            req.site,
+            CallMeasurement {
+                flops: gemm_flops(key.m, key.k, key.n),
+                measured_s: share,
+                splits,
+                probe_s,
+                host: Some(host),
+                batch: Some(batch),
+                ..Default::default()
+            },
+        );
+        slot.fill(Ok(result));
+    }
+    note_fused(stats, group.len(), reuse_total);
+    Ok(())
+}
+
+/// One fused run of a complex-GEMM group: each member's four component
+/// products ride the same multi-C sweep, with re/im panels shared
+/// across members by operand identity.
+fn fused_complex(
+    disp: &Dispatcher,
+    key: BucketKey,
+    mode: ComputeMode,
+    splits: u32,
+    group: Vec<Request>,
+    stats: &Mutex<BatchStats>,
+) -> Result<()> {
+    let ecfg: KernelConfig = disp.selector().effective_config();
+    let weights = diagonal_weights(splits);
+    let mut memo = PackMemo {
+        hits_by_member: vec![0; group.len()],
+        ..Default::default()
+    };
+    let cache_before = panel_cache::global_stats();
+    let t0 = Instant::now();
+
+    // Per member: A-side (re, im) and B-side (re, im) prepared panels.
+    struct ZPrepared {
+        ar: Prepared,
+        ai: Prepared,
+        br: Prepared,
+        bi: Prepared,
+    }
+    let mut prepared: Vec<ZPrepared> = Vec::with_capacity(group.len());
+    for (mi, req) in group.iter().enumerate() {
+        let Payload::Complex { a, b, .. } = &req.payload else {
+            unreachable!("complex bucket holds complex payloads");
+        };
+        let (pa, pb) = (Arc::as_ptr(a) as usize, Arc::as_ptr(b) as usize);
+        prepared.push(ZPrepared {
+            ar: memo.prepare(mi, pa, false, false, || prepare_a(&a.re(), splits, &ecfg)),
+            ai: memo.prepare(mi, pa, false, true, || prepare_a(&a.im(), splits, &ecfg)),
+            br: memo.prepare(mi, pb, true, false, || prepare_b(&b.re(), splits, &ecfg)),
+            bi: memo.prepare(mi, pb, true, true, || prepare_b(&b.im(), splits, &ecfg)),
+        });
+    }
+    // Four sweeps per member, in the sequential path's rr/ii/ri/ir
+    // component order.
+    let specs: Vec<SweepSpec<'_>> = prepared
+        .iter()
+        .flat_map(|z| {
+            [
+                (&z.ar, &z.br),
+                (&z.ai, &z.bi),
+                (&z.ar, &z.bi),
+                (&z.ai, &z.br),
+            ]
+            .map(|((pa, _), (pb, _))| SweepSpec {
+                ap: pa.as_ref(),
+                bp: pb.as_ref(),
+                weights: &weights,
+            })
+        })
+        .collect();
+    let products = match fused_ozaki_sweep_many(&specs, &ecfg) {
+        Ok(r) => r,
+        Err(e) => {
+            fail_all(&group, &format!("batch bucket execution failed: {e}"));
+            return Ok(());
+        }
+    };
+    let mut products = products.into_iter();
+    let mut combined: Vec<crate::linalg::ZMat> = Vec::with_capacity(group.len());
+    for z in &prepared {
+        let unscaled = |mut c: Mat<f64>, ea: &Prepared, eb: &Prepared| {
+            unscale(&mut c, &ea.1, &eb.1);
+            c
+        };
+        let rr = unscaled(products.next().expect("rr"), &z.ar, &z.br);
+        let ii = unscaled(products.next().expect("ii"), &z.ai, &z.bi);
+        let ri = unscaled(products.next().expect("ri"), &z.ar, &z.bi);
+        let ir = unscaled(products.next().expect("ir"), &z.ai, &z.br);
+        combined.push(zcombine(&rr, &ii, &ri, &ir));
+    }
+    let measured = t0.elapsed().as_secs_f64();
+    let share = measured / group.len() as f64;
+    let reuse_total: u64 = memo.hits_by_member.iter().sum();
+
+    let mut rec = GroupRecorder {
+        bucket: group.len() as u64,
+        lead_seen: HashSet::new(),
+        full_info: group_host_info(disp, key.m, cache_before),
+        attached_full: false,
+    };
+    for ((req, result), reuse) in group
+        .iter()
+        .zip(combined)
+        .zip(memo.hits_by_member.iter().copied())
+    {
+        let Payload::Complex { a, b, slot } = &req.payload else {
+            unreachable!("complex bucket holds complex payloads");
+        };
+        // Probe failure = this member's error, never the bucket's (see
+        // the real path above).
+        let probe_s = if req.governed {
+            match disp.probe_complex(req.site, mode, a, b, &result) {
+                Ok(s) => s,
+                Err(e) => {
+                    slot.fill(Err(e));
+                    continue;
+                }
+            }
+        } else {
+            0.0
+        };
+        // PEAK accounting keeps the 4-real-GEMM decomposition, exactly
+        // like the dispatcher's fused complex host path.
+        let batch = rec.batch_info(req.site, reuse);
+        for i in 0..4 {
+            let host = rec.host_info();
+            disp.record_measurement(
+                req.site,
+                CallMeasurement {
+                    flops: gemm_flops(key.m, key.k, key.n),
+                    measured_s: share / 4.0,
+                    splits,
+                    probe_s: if i == 0 { probe_s } else { 0.0 },
+                    host: Some(host),
+                    batch: if i == 0 { Some(batch) } else { None },
+                    ..Default::default()
+                },
+            );
+        }
+        slot.fill(Ok(result));
+    }
+    note_fused(stats, group.len(), reuse_total);
+    Ok(())
+}

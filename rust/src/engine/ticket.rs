@@ -1,0 +1,109 @@
+//! Tickets: the engine's future-like handles.
+//!
+//! A [`GemmTicket`] is a one-shot receiver for a queued GEMM's result.
+//! `wait` never blocks on a scheduler thread — there is none; if the
+//! result has not been computed yet, the waiting thread flushes the
+//! engine's queue itself.  That makes the ticket protocol deadlock-free
+//! by construction (the same argument as the worker pool's
+//! nested-inline rule): any thread holding a ticket can always make
+//! progress, including pool workers submitting nested batches.  The one
+//! blocking case is benign: if *another* thread drained this request
+//! and is still executing it, `wait` parks on the slot's condvar until
+//! that thread settles it — every drained request is settled (result or
+//! error) by the draining thread, so the park is bounded by that
+//! bucket's execution.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::error::Result;
+
+/// One-shot result slot shared between a queued request and its ticket.
+pub(crate) struct Slot<T> {
+    state: Mutex<Option<Result<T>>>,
+    cv: Condvar,
+}
+
+impl<T> Slot<T> {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(Slot {
+            state: Mutex::new(None),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Deposit the result (first write wins; the scheduler writes each
+    /// slot exactly once) and wake any parked waiter.
+    pub(crate) fn fill(&self, value: Result<T>) {
+        let mut s = self.state.lock().unwrap();
+        if s.is_none() {
+            *s = Some(value);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Take the result, parking until some thread deposits it.
+    fn take_blocking(&self) -> Result<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = s.take() {
+                return r;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    fn is_filled(&self) -> bool {
+        self.state.lock().unwrap().is_some()
+    }
+}
+
+/// The engine surface a ticket needs: trigger a flush.  (Trait object
+/// so tickets do not carry the engine's dispatcher lifetime.)
+pub(crate) trait FlushHost {
+    fn flush_now(&self) -> Result<()>;
+}
+
+/// Future-like handle for one queued GEMM ([`crate::engine::Engine`]
+/// submission APIs).  Obtain the result with [`GemmTicket::wait`];
+/// dropping a ticket without waiting discards the result but never the
+/// execution (the engine flushes on scope exit).
+pub struct GemmTicket<'e, T> {
+    host: &'e dyn FlushHost,
+    slot: Arc<Slot<T>>,
+}
+
+impl<'e, T> GemmTicket<'e, T> {
+    pub(crate) fn new(host: &'e dyn FlushHost, slot: Arc<Slot<T>>) -> Self {
+        GemmTicket { host, slot }
+    }
+
+    /// Whether the result is already available (no flush triggered).
+    pub fn is_ready(&self) -> bool {
+        self.slot.is_filled()
+    }
+
+    /// Deliver the result, flushing the engine's queue first if this
+    /// request has not executed yet (flush-on-`wait`: a ticket can
+    /// never deadlock waiting for work nobody will run — either this
+    /// thread's flush executes it, or the thread that already drained
+    /// it settles the slot).
+    pub fn wait(self) -> Result<T> {
+        if !self.slot.is_filled() {
+            self.host.flush_now()?;
+        }
+        self.slot.take_blocking()
+    }
+}
+
+/// Wait on a whole batch of tickets in order, flushing once up front.
+/// Returns the first error if any member failed (later members still
+/// executed — every drained request is settled before its drain
+/// returns).
+pub fn wait_all<T>(tickets: Vec<GemmTicket<'_, T>>) -> Result<Vec<T>> {
+    if let Some(first) = tickets.first() {
+        if !first.slot.is_filled() {
+            first.host.flush_now()?;
+        }
+    }
+    tickets.into_iter().map(|t| t.wait()).collect()
+}

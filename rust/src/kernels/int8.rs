@@ -33,6 +33,7 @@ use super::simd::Microkernel;
 use super::{run_bands, KernelConfig};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
+use crate::runtime::pool::{self, SendPtr};
 
 /// Rows per A-side register tile.
 pub const MR_I8: usize = 4;
@@ -162,6 +163,43 @@ pub fn fused_ozaki_sweep(
     weights: &[f64],
     cfg: &KernelConfig,
 ) -> Result<Mat<f64>> {
+    check_sweep(ap, bp, weights)?;
+    let (m, n) = (ap.rows(), bp.rows());
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 || weights.is_empty() {
+        return Ok(c);
+    }
+    // Worst-case terms per anti-diagonal accumulator: K·splits.
+    let wide = ap.k().saturating_mul(weights.len()) > MAX_EXACT_I32_TERMS;
+    let mk = cfg.simd.resolve().microkernel();
+
+    run_bands(
+        c.data_mut(),
+        n,
+        MR_I8,
+        ap.tiles(),
+        cfg.threads,
+        |band, tile0| fused_band(band, tile0, n, ap, bp, weights, cfg, wide, mk),
+    );
+    Ok(c)
+}
+
+/// One member of a [`fused_ozaki_sweep_many`] batch: a packed operand
+/// pair plus its retained anti-diagonal weights.  Each member computes
+/// exactly what [`fused_ozaki_sweep`] would for the same inputs.
+#[derive(Clone, Copy)]
+pub struct SweepSpec<'a> {
+    /// A-side panels (packed with [`MR_I8`]).
+    pub ap: &'a Panels<i8>,
+    /// B-side panels (packed with [`NR_I8`]).
+    pub bp: &'a Panels<i8>,
+    /// Anti-diagonal weights (`d < splits` retained).
+    pub weights: &'a [f64],
+}
+
+/// Validate one sweep's panel pair (shared by the single and batched
+/// entry points so their rejections cannot drift).
+fn check_sweep(ap: &Panels<i8>, bp: &Panels<i8>, weights: &[f64]) -> Result<()> {
     if ap.tile() != MR_I8 || bp.tile() != NR_I8 {
         return Err(Error::Shape(format!(
             "fused_ozaki_sweep: panels must be packed with tiles {MR_I8}/{NR_I8}, \
@@ -185,24 +223,86 @@ pub fn fused_ozaki_sweep(
             weights.len()
         )));
     }
-    let (m, n) = (ap.rows(), bp.rows());
-    let mut c = Mat::zeros(m, n);
-    if m == 0 || n == 0 || weights.is_empty() {
-        return Ok(c);
+    Ok(())
+}
+
+/// The multi-C fused driver: run many independent Ozaki sweeps as **one**
+/// scheduling unit on the persistent worker pool — the batch engine's
+/// ([`crate::engine`]) kernel entry point.
+///
+/// Every member's row bands are cut exactly as [`fused_ozaki_sweep`]
+/// would cut them for `cfg.threads` (the partition depends only on the
+/// member's own shape and the configured thread count, never on the
+/// batch size), and each band computes the same pure function of its
+/// packed inputs — so each returned matrix is **bit-for-bit identical**
+/// to a standalone `fused_ozaki_sweep` call on the same panels.  The
+/// batching win is scheduling, not math: all members' bands enter one
+/// `pool::run`, so a bucket of small GEMMs saturates the pool (members
+/// × bands tasks) instead of paying one dispatch-and-latch round trip
+/// per call, and shared packed operands stay hot across consecutive
+/// members.
+///
+/// Validation is all-or-nothing: if any member's panels are malformed,
+/// the whole batch is rejected before any compute runs.
+pub fn fused_ozaki_sweep_many(
+    jobs: &[SweepSpec<'_>],
+    cfg: &KernelConfig,
+) -> Result<Vec<Mat<f64>>> {
+    for spec in jobs {
+        check_sweep(spec.ap, spec.bp, spec.weights)?;
     }
-    // Worst-case terms per anti-diagonal accumulator: K·splits.
-    let wide = ap.k().saturating_mul(weights.len()) > MAX_EXACT_I32_TERMS;
+    let mut outs: Vec<Mat<f64>> = jobs
+        .iter()
+        .map(|s| Mat::zeros(s.ap.rows(), s.bp.rows()))
+        .collect();
+    if jobs.is_empty() {
+        return Ok(outs);
+    }
     let mk = cfg.simd.resolve().microkernel();
 
-    run_bands(
-        c.data_mut(),
-        n,
-        MR_I8,
-        ap.tiles(),
-        cfg.threads,
-        |band, tile0| fused_band(band, tile0, n, ap, bp, weights, cfg, wide, mk),
-    );
-    Ok(c)
+    // Flat (member, band) task list, each band addressed by its byte
+    // range in the member's output — the same cuts `run_bands` makes.
+    struct BandTask {
+        job: usize,
+        start: usize,
+        end: usize,
+        tile0: usize,
+    }
+    let mut tasks: Vec<BandTask> = Vec::new();
+    for (ji, spec) in jobs.iter().enumerate() {
+        let (m, n) = (spec.ap.rows(), spec.bp.rows());
+        if m == 0 || n == 0 || spec.weights.is_empty() {
+            continue;
+        }
+        // The same cuts `run_bands` makes — `band_ranges` is the one
+        // home of the partition arithmetic, so the per-call and batched
+        // drivers cannot drift.
+        for (start, end, tile0) in super::band_ranges(m * n, n, MR_I8, spec.ap.tiles(), cfg.threads)
+        {
+            tasks.push(BandTask {
+                job: ji,
+                start,
+                end,
+                tile0,
+            });
+        }
+    }
+    let bases: Vec<SendPtr<f64>> = outs
+        .iter_mut()
+        .map(|c| SendPtr(c.data_mut().as_mut_ptr()))
+        .collect();
+    pool::run(tasks.len(), cfg.threads.max(1), |ti| {
+        let t = &tasks[ti];
+        let spec = &jobs[t.job];
+        let n = spec.bp.rows();
+        let wide = spec.ap.k().saturating_mul(spec.weights.len()) > MAX_EXACT_I32_TERMS;
+        // Safety: tasks of one job are disjoint in-bounds subslices of
+        // that job's output; distinct jobs write distinct matrices.
+        let slice =
+            unsafe { std::slice::from_raw_parts_mut(bases[t.job].get().add(t.start), t.end - t.start) };
+        fused_band(slice, t.tile0, n, spec.ap, spec.bp, spec.weights, cfg, wide, mk);
+    });
+    Ok(outs)
 }
 
 /// One row band of the fused sweep.  `c_band` covers whole tiles
@@ -477,6 +577,65 @@ mod tests {
         // Σ_d (d+1)·K·(−127²) = 6·K·(−16129), exact in f64 (< 2^53).
         let want = -6.0 * k as f64 * 16129.0;
         assert_eq!(c.get(0, 0), want);
+    }
+
+    #[test]
+    fn sweep_many_is_bitwise_equal_to_individual_sweeps() {
+        // The multi-C driver must be pure scheduling: each member's
+        // matrix equals its standalone sweep bit-for-bit, for ragged
+        // shapes, mixed sizes, and any thread count.
+        let mut rng = Rng::new(0xBA7C);
+        let mut planes = |r: usize, k: usize, s: usize| -> Vec<Mat<i8>> {
+            (0..s).map(|_| rand_i8(&mut rng, r, k)).collect()
+        };
+        let shapes = [(7usize, 5usize, 3usize, 3usize), (16, 16, 16, 4), (1, 33, 9, 2)];
+        let packed: Vec<(Panels<i8>, Panels<i8>, Vec<f64>)> = shapes
+            .iter()
+            .map(|&(m, k, n, s)| {
+                let pa = Panels::pack_planes(&planes(m, k, s), MR_I8);
+                let pb = Panels::pack_planes(&planes(n, k, s), NR_I8);
+                let w: Vec<f64> = (0..s).map(|d| 0.5f64.powi(d as i32)).collect();
+                (pa, pb, w)
+            })
+            .collect();
+        for threads in [1usize, 3] {
+            let cfg = KernelConfig {
+                threads,
+                ..KernelConfig::default()
+            };
+            let specs: Vec<SweepSpec<'_>> = packed
+                .iter()
+                .map(|(pa, pb, w)| SweepSpec {
+                    ap: pa,
+                    bp: pb,
+                    weights: w,
+                })
+                .collect();
+            let many = fused_ozaki_sweep_many(&specs, &cfg).unwrap();
+            for (got, (pa, pb, w)) in many.iter().zip(&packed) {
+                let want = fused_ozaki_sweep(pa, pb, w, &cfg).unwrap();
+                assert_eq!(got.data(), want.data(), "threads={threads}");
+            }
+        }
+        // empty batch is a no-op
+        assert!(fused_ozaki_sweep_many(&[], &KernelConfig::default())
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn sweep_many_rejects_any_bad_member_up_front() {
+        let mut rng = Rng::new(0xBA7D);
+        let good_a = Panels::pack_planes(&[rand_i8(&mut rng, 4, 6)], MR_I8);
+        let good_b = Panels::pack_planes(&[rand_i8(&mut rng, 8, 6)], NR_I8);
+        let bad_b = Panels::pack_planes(&[rand_i8(&mut rng, 8, 7)], NR_I8); // K mismatch
+        let cfg = KernelConfig::default();
+        let w = [1.0f64];
+        let specs = [
+            SweepSpec { ap: &good_a, bp: &good_b, weights: &w },
+            SweepSpec { ap: &good_a, bp: &bad_b, weights: &w },
+        ];
+        assert!(fused_ozaki_sweep_many(&specs, &cfg).is_err());
     }
 
     #[test]

@@ -49,7 +49,10 @@ pub mod panel_cache;
 pub mod simd;
 
 pub use fp64::{dgemm_blocked, zgemm_blocked, MR_C64, MR_F64, NR_C64, NR_F64};
-pub use int8::{fused_ozaki_sweep, int8_gemm_blocked, MAX_EXACT_I32_TERMS, MR_I8, NR_I8};
+pub use int8::{
+    fused_ozaki_sweep, fused_ozaki_sweep_many, int8_gemm_blocked, SweepSpec,
+    MAX_EXACT_I32_TERMS, MR_I8, NR_I8,
+};
 pub use simd::{available_isas, Isa, Microkernel, SimdSelect};
 pub use pack::{
     pack_cols_c64, pack_cols_c64_mt, pack_cols_f64, pack_cols_f64_mt, pack_rows_c64,
@@ -148,24 +151,51 @@ where
     if c.is_empty() || n == 0 || m_tiles == 0 {
         return;
     }
-    let threads = threads.max(1).min(m_tiles);
-    if threads <= 1 {
+    if threads.max(1).min(m_tiles) <= 1 {
+        // Single band: run inline, no partition or pool traffic.
         band(c, 0);
         return;
     }
-    let tiles_per_band = m_tiles.div_ceil(threads);
-    let chunk = tiles_per_band * tile * n;
-    let len = c.len();
-    let jobs = len.div_ceil(chunk);
-    debug_assert_eq!(jobs, band_count(m_tiles, threads), "bands_for must match");
+    let ranges = band_ranges(c.len(), n, tile, m_tiles, threads);
+    debug_assert_eq!(ranges.len(), band_count(m_tiles, threads), "bands_for must match");
     let base = SendPtr(c.as_mut_ptr());
-    pool::run(jobs, threads, |bi| {
-        let start = bi * chunk;
-        let end = (start + chunk).min(len);
+    pool::run(ranges.len(), threads, |bi| {
+        let (start, end, tile0) = ranges[bi];
         // Safety: bands are disjoint in-bounds subslices of `c`.
         let slice = unsafe { std::slice::from_raw_parts_mut(base.get().add(start), end - start) };
-        band(slice, bi * tiles_per_band);
+        band(slice, tile0);
     });
+}
+
+/// The exact band cuts [`run_bands`] executes for an output of `len`
+/// elements (`n` columns, `tile` rows per A-side tile, `m_tiles`
+/// tiles) at a requested `threads`: one `(start, end, tile0)` element
+/// range per band, in band order.
+///
+/// This is the **single home** of the partition arithmetic, shared
+/// with the multi-C batch driver ([`fused_ozaki_sweep_many`]) so the
+/// engine's bit-identity contract ("batched band cuts equal per-call
+/// band cuts") holds by construction, and consistent with
+/// [`band_count`] (pinned by a debug assertion in `run_bands`).
+pub fn band_ranges(
+    len: usize,
+    n: usize,
+    tile: usize,
+    m_tiles: usize,
+    threads: usize,
+) -> Vec<(usize, usize, usize)> {
+    if len == 0 || n == 0 || m_tiles == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(m_tiles);
+    if threads <= 1 {
+        return vec![(0, len, 0)];
+    }
+    let tiles_per_band = m_tiles.div_ceil(threads);
+    let chunk = tiles_per_band * tile * n;
+    (0..len.div_ceil(chunk))
+        .map(|bi| (bi * chunk, ((bi + 1) * chunk).min(len), bi * tiles_per_band))
+        .collect()
 }
 
 /// Number of row bands [`run_bands`] cuts for `m_tiles` A-side tiles at
@@ -243,6 +273,29 @@ mod tests {
         assert!(c[12 * n..24 * n].iter().all(|&v| v == 4));
         assert!(c[24 * n..36 * n].iter().all(|&v| v == 7));
         assert!(c[36 * n..].iter().all(|&v| v == 10));
+    }
+
+    #[test]
+    fn band_ranges_cover_disjointly_and_match_band_count() {
+        for (len, n, tile, m_tiles, threads) in [
+            (37 * 3, 3usize, 4usize, 10usize, 4usize),
+            (12, 3, 4, 1, 8),
+            (100 * 5, 5, 4, 25, 6),
+            (7 * 2, 2, 4, 2, 2),
+        ] {
+            let ranges = band_ranges(len, n, tile, m_tiles, threads);
+            assert_eq!(ranges.len(), band_count(m_tiles, threads), "{m_tiles}/{threads}");
+            // contiguous, disjoint, covering [0, len)
+            let mut pos = 0;
+            for (i, &(start, end, tile0)) in ranges.iter().enumerate() {
+                assert_eq!(start, pos);
+                assert!(end > start);
+                assert_eq!(tile0, i * m_tiles.div_ceil(threads.max(1).min(m_tiles)));
+                pos = end;
+            }
+            assert_eq!(pos, len);
+        }
+        assert!(band_ranges(0, 3, 4, 10, 4).is_empty());
     }
 
     #[test]

@@ -293,22 +293,20 @@ impl PanelCache {
 
 /// Content digest over the raw f64 bits — the identity of a cache key.
 ///
-/// Each word passes through the SplitMix64 finalizer (xor-shift +
-/// multiply, twice) before folding into the running state.  The
-/// xor-shifts matter: a plain word-wise FNV (`h ^= w; h *= prime`) is
-/// closed modulo `2^t`, so matrices whose entries all share `t`
-/// trailing-zero bits (every small-integer-valued f64 has ~52) would
-/// get value-independent low digest bits and collide after only a few
-/// thousand distinct operands.  With full avalanche per word, a
+/// Each word passes through the SplitMix64 finalizer
+/// ([`crate::util::rng::mix64`], the shared mixer whose stability
+/// contract lives with the generator) before folding into the running
+/// state.  The xor-shifts matter: a plain word-wise FNV (`h ^= w; h *=
+/// prime`) is closed modulo `2^t`, so matrices whose entries all share
+/// `t` trailing-zero bits (every small-integer-valued f64 has ~52)
+/// would get value-independent low digest bits and collide after only a
+/// few thousand distinct operands.  With full avalanche per word, a
 /// collision needs two same-shaped matrices agreeing on an honest
 /// 64-bit digest — negligible next to the cost model this serves.
 pub fn fingerprint(data: &[f64]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for v in data {
-        let mut z = h ^ v.to_bits();
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-        h = z ^ (z >> 31);
+        h = crate::util::rng::mix64(h ^ v.to_bits());
     }
     h
 }

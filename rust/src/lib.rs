@@ -55,6 +55,22 @@
 //!   kernel choice, microkernel ISA, band counts, pack time, and cache
 //!   traffic in the PEAK per-site report.
 //!
+//! ## Batch execution engine ([`engine`])
+//!
+//! The paper's workloads fire thousands of independent, similarly
+//! shaped emulated GEMMs.  [`coordinator::Dispatcher::batch`] opens an
+//! asynchronous batch scope: submissions return [`engine::GemmTicket`]
+//! futures, queued requests coalesce into shape × mode × splits
+//! buckets at flush, and each bucket executes as one fused run (one
+//! worker-pool dispatch for every member's row bands, the precision
+//! governor consulted once per site per bucket, shared operands packed
+//! once per flush).  Flush policy — `run.batch.max_pending`,
+//! `run.batch.max_bytes`, explicit flush, flush-on-`wait`,
+//! flush-on-drop — bounds memory and makes waiting deadlock-free.
+//! Batched results are bit-identical to sequential dispatch; the
+//! fixed-mode MuST contour sweep submits all energy points through one
+//! scope ([`must::TauSolver::solve_many`]).
+//!
 //! ## Precision governor ([`precision`])
 //!
 //! Split selection is a first-class subsystem rather than a dispatcher
@@ -112,6 +128,7 @@ pub mod cli;
 pub mod complex;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod error;
 pub mod experiments;
 pub mod kernels;
@@ -123,6 +140,7 @@ pub mod perfmodel;
 pub mod precision;
 pub mod runtime;
 pub mod testing;
+pub mod util;
 
 pub use complex::c64;
 pub use error::{Error, Result};

@@ -99,6 +99,136 @@ pub fn zgetrf_blocked(a: &ZMat, nb: usize, gemm: ZgemmHook) -> Result<ZLuFactors
     Ok(ZLuFactors { lu, piv })
 }
 
+/// Batched trailing-update hook: given the `(L21, A12)` pairs of one
+/// lockstep panel step (one pair per still-active matrix), return their
+/// products in order.  The τ solver hands this to the batch engine so
+/// the same-shaped updates of many energy points coalesce into one
+/// fused bucket run.
+pub type ZgemmBatchHook<'a> = &'a dyn Fn(Vec<(ZMat, ZMat)>) -> Result<Vec<ZMat>>;
+
+/// Lockstep blocked LU over many matrices.
+///
+/// Factorises every matrix with **exactly** the arithmetic of
+/// [`zgetrf_blocked`] — same pivot search, same panel elimination, same
+/// triangular solves, same trailing-update subtraction order — but
+/// advances all matrices panel step by panel step, collecting each
+/// step's trailing-update GEMMs into one `gemm_batch` call.  With the
+/// batch hook backed by a [`crate::engine`] scope, the independent,
+/// same-shaped updates of a whole energy contour execute as fused
+/// buckets; because every product is bit-identical to the sequential
+/// hook's, so is every factor.
+///
+/// Matrices may differ in size; a matrix past its last panel simply
+/// stops contributing pairs.  An exactly-zero pivot in any matrix
+/// aborts the whole batch with an error, like `?` over a sequential
+/// loop would.
+pub fn zgetrf_blocked_many(
+    mats: &[ZMat],
+    nb: usize,
+    gemm_batch: ZgemmBatchHook,
+) -> Result<Vec<ZLuFactors>> {
+    for a in mats {
+        if !a.is_square() {
+            return Err(Error::Shape(format!(
+                "zgetrf: matrix must be square, got {}x{}",
+                a.rows(),
+                a.cols()
+            )));
+        }
+    }
+    let nb = nb.max(1);
+    let mut factors: Vec<ZLuFactors> = mats
+        .iter()
+        .map(|a| ZLuFactors {
+            lu: a.clone(),
+            piv: Vec::with_capacity(a.rows()),
+        })
+        .collect();
+
+    let max_n = mats.iter().map(|a| a.rows()).max().unwrap_or(0);
+    let mut j0 = 0;
+    while j0 < max_n {
+        // --- per-matrix panel factorisation + U12 solve (cheap) ---
+        // `meta` keeps (member, panel width) so the products can be
+        // routed back after the batched update below.
+        let mut meta: Vec<(usize, usize)> = Vec::new();
+        let mut pairs: Vec<(ZMat, ZMat)> = Vec::new();
+        for (mi, f) in factors.iter_mut().enumerate() {
+            let n = f.lu.rows();
+            if j0 >= n {
+                continue;
+            }
+            let w = nb.min(n - j0);
+            let lu = &mut f.lu;
+            for j in j0..j0 + w {
+                let mut pr = j;
+                let mut pmax = lu.get(j, j).norm_sqr();
+                for r in j + 1..n {
+                    let v = lu.get(r, j).norm_sqr();
+                    if v > pmax {
+                        pmax = v;
+                        pr = r;
+                    }
+                }
+                if pmax == 0.0 {
+                    return Err(Error::Numerical(format!(
+                        "zgetrf: zero pivot at column {j} (batch member {mi})"
+                    )));
+                }
+                f.piv.push(pr);
+                lu.swap_rows(j, pr);
+
+                let dinv = lu.get(j, j).inv();
+                for r in j + 1..n {
+                    let l = lu.get(r, j) * dinv;
+                    lu.set(r, j, l);
+                    if l != c64::ZERO {
+                        for c in j + 1..j0 + w {
+                            let v = lu.get(r, c) - l * lu.get(j, c);
+                            lu.set(r, c, v);
+                        }
+                    }
+                }
+            }
+            let rest = n - (j0 + w);
+            if rest > 0 {
+                let mut a12 = lu.block(j0, j0 + w, w, rest);
+                ztrsm_left_lower_unit(lu, j0, j0, w, &mut a12);
+                lu.set_block(j0, j0 + w, &a12);
+                let l21 = lu.block(j0 + w, j0, rest, w);
+                meta.push((mi, w));
+                pairs.push((l21, a12));
+            }
+        }
+
+        // --- one coalesced trailing-update step across the batch ---
+        if !pairs.is_empty() {
+            let expected = pairs.len();
+            let prods = gemm_batch(pairs)?;
+            if prods.len() != expected {
+                return Err(Error::Shape(format!(
+                    "zgetrf_blocked_many: batch hook returned {} products for {expected} pairs",
+                    prods.len()
+                )));
+            }
+            for (&(mi, w), prod) in meta.iter().zip(prods) {
+                let f = &mut factors[mi];
+                let n = f.lu.rows();
+                let rest = n - (j0 + w);
+                for i in 0..rest {
+                    for j in 0..rest {
+                        let v = f.lu.get(j0 + w + i, j0 + w + j) - prod.get(i, j);
+                        f.lu.set(j0 + w + i, j0 + w + j, v);
+                    }
+                }
+            }
+        }
+        j0 += nb;
+    }
+
+    Ok(factors)
+}
+
 /// Solve `A X = B` given the factors from [`zgetrf_blocked`].
 pub fn zgetrs(f: &ZLuFactors, b: &ZMat) -> Result<ZMat> {
     let n = f.lu.rows();
@@ -186,6 +316,44 @@ mod tests {
             assert!((*x - *y).abs() < 1e-10);
             assert!((*x - *z).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn lockstep_batch_matches_sequential_bit_for_bit() {
+        // zgetrf_blocked_many with a hook that computes each product
+        // exactly like the sequential hook must reproduce every factor
+        // bit-for-bit — mixed sizes included.
+        let mut rng = Rng::new(0xBA7);
+        let mats: Vec<ZMat> = [5usize, 12, 12, 17]
+            .iter()
+            .map(|&n| rand_z(&mut rng, n))
+            .collect();
+        let batch_hook = |pairs: Vec<(ZMat, ZMat)>| -> crate::error::Result<Vec<ZMat>> {
+            pairs.iter().map(|(a, b)| host_gemm(a, b)).collect()
+        };
+        for nb in [1usize, 4, 32] {
+            let many = zgetrf_blocked_many(&mats, nb, &batch_hook).unwrap();
+            for (a, got) in mats.iter().zip(&many) {
+                let want = zgetrf_blocked(a, nb, &host_gemm).unwrap();
+                assert_eq!(got.piv, want.piv, "nb={nb}");
+                assert_eq!(got.lu.data(), want.lu.data(), "nb={nb}");
+            }
+        }
+        // empty batch is a no-op
+        assert!(zgetrf_blocked_many(&[], 4, &batch_hook).unwrap().is_empty());
+    }
+
+    #[test]
+    fn lockstep_batch_rejects_bad_members() {
+        let batch_hook = |pairs: Vec<(ZMat, ZMat)>| -> crate::error::Result<Vec<ZMat>> {
+            pairs.iter().map(|(a, b)| host_gemm(a, b)).collect()
+        };
+        // non-square member
+        assert!(zgetrf_blocked_many(&[ZMat::zeros(3, 4)], 2, &batch_hook).is_err());
+        // singular member aborts the batch
+        let mut rng = Rng::new(0xBA8);
+        let good = rand_z(&mut rng, 6);
+        assert!(zgetrf_blocked_many(&[good, ZMat::zeros(4, 4)], 2, &batch_hook).is_err());
     }
 
     #[test]

@@ -20,7 +20,7 @@ mod zgemm;
 
 pub use cond::{cond_estimate_1norm, inv_norm_estimate};
 pub use dgemm::{dgemm, dgemm_naive};
-pub use lu::{zgetrf_blocked, zgetrs, zlu_solve, ZLuFactors};
+pub use lu::{zgetrf_blocked, zgetrf_blocked_many, zgetrs, zlu_solve, ZLuFactors, ZgemmBatchHook};
 pub use matrix::{Mat, ZMat};
 pub use norms::{fro_norm, max_abs, one_norm, zfro_norm, zmax_abs, zone_norm};
 pub use refinement::{cgetrf, zcgesv_ir, CLuFactors, IrResult};

@@ -194,12 +194,40 @@ impl<'a> ScfDriver<'a> {
     }
 
     /// Evaluate G(z) at every contour point.
+    ///
+    /// Fixed-mode sweeps — the paper's Table-1 columns, where every
+    /// point runs the same pinned compute mode — submit **all** energy
+    /// points through one batch scope: the τ solver factorises the
+    /// whole contour in lockstep and the execution engine coalesces the
+    /// per-point trailing updates into fused bucket runs
+    /// ([`TauSolver::solve_many`]), bit-identical to the sequential
+    /// loop.  Adaptive/governed sweeps keep the sequential path: their
+    /// per-point feedback (κ pre-pass seeding, probe-driven ramping) is
+    /// inherently order-dependent.
     pub fn contour_sweep(&self, t: &TMatrix, select: ModeSelect) -> Result<Vec<PointRecord>> {
         let contour = Contour::semicircle(
             self.params.e_bottom,
             self.params.e_top,
             self.params.n_contour,
         );
+        if let ModeSelect::Fixed(mode) = select {
+            let solver = TauSolver::new(&self.sc, &self.params, self.dispatcher);
+            let zs: Vec<c64> = contour.points.iter().map(|p| p.z).collect();
+            let results = solver.solve_many(t, &zs, mode)?;
+            let splits_used = mode.splits().unwrap_or(0);
+            return Ok(contour
+                .points
+                .iter()
+                .zip(results)
+                .map(|(p, r)| PointRecord {
+                    z: p.z,
+                    theta: p.theta,
+                    g: self.greens.g_of_z(&r.tau11, p.z),
+                    kappa: r.kappa,
+                    splits_used,
+                })
+                .collect());
+        }
         let mut out = Vec::with_capacity(contour.len());
         for p in &contour.points {
             let (g, kappa, splits_used) = self.solve_point(t, p.z, select)?;

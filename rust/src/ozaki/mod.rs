@@ -26,6 +26,9 @@ pub use error_model::{
     required_splits_in, DEFAULT_ERROR_CONSTANT,
 };
 pub use gemm::{int8_gemm_i32, ozaki_dgemm, ozaki_dgemm_naive, ozaki_dgemm_with};
+// The batch engine re-runs the prepare/sweep/unscale pipeline itself so
+// shared operands across queued GEMMs are packed once per flush.
+pub(crate) use gemm::{diagonal_weights, prepare_a, prepare_b, unscale};
 pub use modes::{ComputeMode, MAX_SPLITS, MIN_SPLITS};
 pub use split::{
     reconstruct, row_scale_exponents, scale_rows, split_scaled, split_scaled_into_panels,

@@ -1,84 +1,15 @@
 //! Property-testing harness built from scratch.
 //!
 //! `proptest` is unavailable offline (DESIGN.md §Substitutions), so this
-//! module provides the two pieces the test suite needs: a fast,
-//! deterministic PRNG (SplitMix64) and a tiny `for_cases` driver that runs
-//! a property over many seeded cases and reports the failing seed.
+//! module provides the `for_cases` driver that runs a property over many
+//! seeded cases (reporting the failing seed) plus the relative-error
+//! helpers the suite shares.  The SplitMix64 generator the harness seeds
+//! lives in [`crate::util::rng`] — it is load-bearing *runtime*
+//! infrastructure (probe row sampling, the panel-cache digest), and its
+//! stability contract is documented there; this re-export keeps the
+//! historical `crate::testing::Rng` spelling working.
 
-use crate::complex::c64;
-
-/// SplitMix64 PRNG — deterministic, seedable, passes BigCrush for our
-/// purposes, and has no dependencies.
-///
-/// Stability contract: this generator is load-bearing *runtime*
-/// infrastructure, not just test support — the precision governor's
-/// probe row sampling (`crate::precision::sample_rows`) derives its
-/// documented cross-thread bit-determinism from this exact sequence.
-/// Changing the constants or the `index` mapping changes production
-/// probe selection; `tests/precision_governor.rs` pins the behaviour.
-#[derive(Clone, Debug)]
-pub struct Rng {
-    state: u64,
-}
-
-impl Rng {
-    /// Seeded generator (same seed, same sequence).
-    pub fn new(seed: u64) -> Self {
-        Rng {
-            state: seed.wrapping_add(0x9E3779B97F4A7C15),
-        }
-    }
-
-    /// Next raw 64-bit value.
-    pub fn next_u64(&mut self) -> u64 {
-        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-        z ^ (z >> 31)
-    }
-
-    /// Uniform in [0, 1).
-    pub fn uniform(&mut self) -> f64 {
-        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
-    }
-
-    /// Uniform in [lo, hi).
-    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
-        lo + (hi - lo) * self.uniform()
-    }
-
-    /// Uniform integer in [lo, hi).
-    pub fn index(&mut self, lo: usize, hi: usize) -> usize {
-        debug_assert!(hi > lo);
-        lo + (self.next_u64() as usize) % (hi - lo)
-    }
-
-    /// Standard normal via Box–Muller.
-    pub fn normal(&mut self) -> f64 {
-        let u1 = self.uniform().max(1e-300);
-        let u2 = self.uniform();
-        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
-    }
-
-    /// Standard complex normal.
-    pub fn cnormal(&mut self) -> c64 {
-        c64(self.normal(), self.normal()) * std::f64::consts::FRAC_1_SQRT_2
-    }
-
-    /// Vector of normals.
-    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
-        (0..n).map(|_| self.normal()).collect()
-    }
-
-    /// Value with a wide dynamic range: normal mantissa, random binary
-    /// exponent in [-emax, emax].  Stresses the scaling logic.
-    pub fn wide(&mut self, emax: i32) -> f64 {
-        let e = self.index(0, (2 * emax + 1) as usize) as i32 - emax;
-        let m = self.normal();
-        m * (e as f64).exp2()
-    }
-}
+pub use crate::util::rng::Rng;
 
 /// Run a property over `cases` seeded inputs; panic with the seed on the
 /// first failure so it can be replayed.
@@ -119,56 +50,6 @@ pub fn max_rel_err(got: &[f64], want: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn deterministic() {
-        let mut a = Rng::new(42);
-        let mut b = Rng::new(42);
-        for _ in 0..100 {
-            assert_eq!(a.next_u64(), b.next_u64());
-        }
-    }
-
-    #[test]
-    fn uniform_in_range() {
-        let mut r = Rng::new(1);
-        for _ in 0..10_000 {
-            let u = r.uniform();
-            assert!((0.0..1.0).contains(&u));
-        }
-    }
-
-    #[test]
-    fn normal_moments() {
-        let mut r = Rng::new(7);
-        let n = 200_000;
-        let (mut s1, mut s2) = (0.0, 0.0);
-        for _ in 0..n {
-            let x = r.normal();
-            s1 += x;
-            s2 += x * x;
-        }
-        let mean = s1 / n as f64;
-        let var = s2 / n as f64 - mean * mean;
-        assert!(mean.abs() < 0.02, "mean {mean}");
-        assert!((var - 1.0).abs() < 0.03, "var {var}");
-    }
-
-    #[test]
-    fn wide_covers_exponents() {
-        let mut r = Rng::new(3);
-        let (mut small, mut big) = (false, false);
-        for _ in 0..1000 {
-            let x = r.wide(30).abs();
-            if x != 0.0 && x < 1e-6 {
-                small = true;
-            }
-            if x > 1e6 {
-                big = true;
-            }
-        }
-        assert!(small && big);
-    }
 
     #[test]
     #[should_panic]

@@ -1,0 +1,11 @@
+//! Small shared utilities with cross-subsystem stability contracts.
+//!
+//! The only resident today is [`rng`]: the SplitMix64 generator started
+//! life as test support in `crate::testing`, but probe sampling and the
+//! panel-cache digest made its exact bit sequence load-bearing at
+//! runtime, so it lives here where the contract can be stated once and
+//! depended on from both sides.
+
+pub mod rng;
+
+pub use rng::{mix64, Rng};

@@ -1,0 +1,184 @@
+//! SplitMix64 — the crate's one deterministic PRNG and bit mixer.
+//!
+//! # Stability contract
+//!
+//! This generator is **runtime infrastructure**, not just test support.
+//! Three consumers depend on its exact output sequence:
+//!
+//! * the precision governor's probe row sampling
+//!   ([`crate::precision::sample_rows`]) derives its documented
+//!   cross-thread bit-determinism from this sequence — a changed
+//!   constant silently changes which output rows production probes
+//!   recompute;
+//! * the packed-panel cache digest
+//!   ([`crate::kernels::panel_cache::fingerprint`]) folds every operand
+//!   word through the same finalizer ([`mix64`]) — its collision
+//!   argument (full per-word avalanche, so small-integer-valued
+//!   matrices cannot collide on degenerate low bits) is an argument
+//!   about *these* xor-shift/multiply constants;
+//! * the property-test harness (`crate::testing::for_cases`) replays
+//!   failures by seed.
+//!
+//! Accordingly: the constants, the state update, and the
+//! seed/`index`/`uniform` mappings must not change.  Behaviour is
+//! pinned by `tests/precision_governor.rs` (probe determinism), the
+//! panel-cache digest tests, and the unit tests below.  If a different
+//! generator is ever needed, add it alongside — do not edit this one.
+
+use crate::complex::c64;
+
+/// The SplitMix64 finalizer: full-avalanche mix of one 64-bit word.
+///
+/// Shared verbatim by [`Rng::next_u64`] and the panel-cache content
+/// digest, so the avalanche property both rely on has a single home.
+#[inline]
+pub fn mix64(state: u64) -> u64 {
+    let mut z = state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// SplitMix64 PRNG — deterministic, seedable, passes BigCrush for our
+/// purposes, and has no dependencies.  See the module docs for the
+/// stability contract.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Seeded generator (same seed, same sequence).
+    pub fn new(seed: u64) -> Self {
+        Rng {
+            state: seed.wrapping_add(0x9E3779B97F4A7C15),
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        mix64(self.state)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn index(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + (self.next_u64() as usize) % (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-300);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Standard complex normal.
+    pub fn cnormal(&mut self) -> c64 {
+        c64(self.normal(), self.normal()) * std::f64::consts::FRAC_1_SQRT_2
+    }
+
+    /// Vector of normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Value with a wide dynamic range: normal mantissa, random binary
+    /// exponent in [-emax, emax].  Stresses the scaling logic.
+    pub fn wide(&mut self, emax: i32) -> f64 {
+        let e = self.index(0, (2 * emax + 1) as usize) as i32 - emax;
+        let m = self.normal();
+        m * (e as f64).exp2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn sequence_is_pinned() {
+        // The stability contract in concrete numbers: the first outputs
+        // of seeds 0 and 1 must never change (probe sampling and the
+        // cache digest both inherit from this exact sequence).
+        let mut r0 = Rng::new(0);
+        assert_eq!(r0.next_u64(), 0x6E789E6AA1B965F4);
+        assert_eq!(r0.next_u64(), 0x06C45D188009454F);
+        let mut r1 = Rng::new(1);
+        assert_eq!(r1.next_u64(), 0xBEEB8DA1658EEC67);
+    }
+
+    #[test]
+    fn mix64_matches_next_u64() {
+        // next_u64 must be exactly "advance by golden gamma, mix64" —
+        // the decomposition the panel-cache digest shares.
+        let seed = 0xDEADBEEFu64;
+        let mut r = Rng::new(seed);
+        let want = mix64(
+            seed.wrapping_add(0x9E3779B97F4A7C15)
+                .wrapping_add(0x9E3779B97F4A7C15),
+        );
+        assert_eq!(r.next_u64(), want);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(7);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn wide_covers_exponents() {
+        let mut r = Rng::new(3);
+        let (mut small, mut big) = (false, false);
+        for _ in 0..1000 {
+            let x = r.wide(30).abs();
+            if x != 0.0 && x < 1e-6 {
+                small = true;
+            }
+            if x > 1e6 {
+                big = true;
+            }
+        }
+        assert!(small && big);
+    }
+}

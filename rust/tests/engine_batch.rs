@@ -1,0 +1,315 @@
+//! Batch engine pins (ISSUE 5): batched submission is bit-identical to
+//! sequential dispatch for dgemm and zgemm across ISAs, thread counts,
+//! and arrival orders; the flush policy's bounds are hard; shared
+//! operands pack once per flush; and nested submission from pool
+//! workers cannot deadlock.
+
+use std::sync::Arc;
+
+use ozaccel::coordinator::{call_site, DispatchConfig, Dispatcher};
+use ozaccel::engine::{wait_all, BatchConfig};
+use ozaccel::kernels::{available_isas, SimdSelect};
+use ozaccel::linalg::{Mat, ZMat};
+use ozaccel::ozaki::ComputeMode;
+use ozaccel::testing::Rng;
+
+fn host_dispatcher(mode: ComputeMode) -> Dispatcher {
+    Dispatcher::new(DispatchConfig::host_only(mode)).unwrap()
+}
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat<f64> {
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn rand_zmat(rng: &mut Rng, r: usize, c: usize) -> ZMat {
+    ZMat::from_fn(r, c, |_, _| rng.cnormal())
+}
+
+/// Deterministic in-place shuffle (Fisher–Yates on the shared PRNG).
+fn shuffle<T>(v: &mut [T], rng: &mut Rng) {
+    for i in (1..v.len()).rev() {
+        let j = rng.index(0, i + 1);
+        v.swap(i, j);
+    }
+}
+
+#[test]
+fn batched_dgemm_is_bit_identical_across_arrival_orders_isas_and_threads() {
+    let mut rng = Rng::new(0xE9);
+    // Mixed shapes so the queue holds several buckets at once.
+    let shapes = [(12usize, 10usize, 8usize), (12, 10, 8), (7, 7, 7), (12, 10, 8), (7, 7, 7)];
+    let operands: Vec<(Arc<Mat<f64>>, Arc<Mat<f64>>)> = shapes
+        .iter()
+        .map(|&(m, k, n)| (Arc::new(rand_mat(&mut rng, m, k)), Arc::new(rand_mat(&mut rng, k, n))))
+        .collect();
+    let mode = ComputeMode::Int8 { splits: 5 };
+
+    for &threads in &[1usize, 3] {
+        for isa in available_isas() {
+            let mut cfg = DispatchConfig::host_only(mode);
+            cfg.kernels.config.threads = threads;
+            cfg.kernels.config.simd = SimdSelect::Force(isa);
+            let d = Dispatcher::new(cfg).unwrap();
+            let site = call_site();
+
+            // Sequential reference through the dispatcher itself.
+            let want: Vec<Mat<f64>> = operands
+                .iter()
+                .map(|(a, b)| d.dgemm_at(site, mode, a, b).unwrap())
+                .collect();
+
+            // Batched, under several arrival orders.
+            for seed in [1u64, 2, 3] {
+                let mut order: Vec<usize> = (0..operands.len()).collect();
+                shuffle(&mut order, &mut Rng::new(seed));
+                let engine = d.batch();
+                let tickets: Vec<_> = order
+                    .iter()
+                    .map(|&i| {
+                        let (a, b) = &operands[i];
+                        engine.submit_dgemm_at(site, mode, a.clone(), b.clone())
+                    })
+                    .collect();
+                let got = wait_all(tickets).unwrap();
+                for (&i, g) in order.iter().zip(&got) {
+                    assert_eq!(
+                        g.data(),
+                        want[i].data(),
+                        "threads={threads} isa={} order-seed={seed} member={i}",
+                        isa.name()
+                    );
+                }
+                let st = engine.stats();
+                assert!(st.fused_calls > 0, "emulated host calls must fuse");
+                assert!(st.coalesced_calls > 0, "same-shape members must coalesce");
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_zgemm_is_bit_identical_to_sequential() {
+    let mut rng = Rng::new(0xEA);
+    let a1 = Arc::new(rand_zmat(&mut rng, 10, 9));
+    let b1 = Arc::new(rand_zmat(&mut rng, 9, 7));
+    let a2 = Arc::new(rand_zmat(&mut rng, 10, 9));
+    let b2 = Arc::new(rand_zmat(&mut rng, 9, 7));
+    let mode = ComputeMode::Int8 { splits: 4 };
+    let d = host_dispatcher(mode);
+    let site = call_site();
+
+    let want1 = d.zgemm_at(site, mode, &a1, &b1).unwrap();
+    let want2 = d.zgemm_at(site, mode, &a2, &b2).unwrap();
+
+    let engine = d.batch();
+    // reversed arrival order relative to the reference
+    let t2 = engine.submit_zgemm_at(site, mode, a2.clone(), b2.clone());
+    let t1 = engine.submit_zgemm_at(site, mode, a1.clone(), b1.clone());
+    assert_eq!(t1.wait().unwrap().data(), want1.data());
+    assert_eq!(t2.wait().unwrap().data(), want2.data());
+    assert!(engine.stats().coalesced_calls >= 2);
+
+    // native FP64 rides the sequential path through the engine, still
+    // bit-identical
+    let dn = host_dispatcher(ComputeMode::Dgemm);
+    let want = dn.zgemm_at(site, ComputeMode::Dgemm, &a1, &b1).unwrap();
+    let engine = dn.batch();
+    let t = engine.submit_zgemm_at(site, ComputeMode::Dgemm, a1.clone(), b1.clone());
+    assert_eq!(t.wait().unwrap().data(), want.data());
+    assert_eq!(engine.stats().direct_calls, 1);
+}
+
+#[test]
+fn flush_policy_bounds_are_never_exceeded() {
+    let mut rng = Rng::new(0xEB);
+    let d = host_dispatcher(ComputeMode::Int8 { splits: 3 });
+    let site = call_site();
+    let a = Arc::new(rand_mat(&mut rng, 8, 8));
+    let b = Arc::new(rand_mat(&mut rng, 8, 8));
+    let req_bytes = 2 * 8 * 8 * 8; // two 8x8 f64 operands
+
+    // max_pending bound
+    let engine = ozaccel::engine::Engine::new(
+        &d,
+        BatchConfig {
+            max_pending: 4,
+            max_bytes: usize::MAX,
+        },
+    );
+    let tickets: Vec<_> = (0..11)
+        .map(|_| engine.submit_dgemm_at(site, ComputeMode::Int8 { splits: 3 }, a.clone(), b.clone()))
+        .collect();
+    let st = engine.stats();
+    assert!(
+        st.high_water_pending <= 4,
+        "queue held {} > max_pending=4",
+        st.high_water_pending
+    );
+    assert!(st.flushes >= 2, "policy must have auto-flushed");
+    assert_eq!(engine.pending(), 3, "remainder stays queued until wait");
+    let results = wait_all(tickets).unwrap();
+    assert_eq!(results.len(), 11);
+    assert_eq!(engine.pending(), 0);
+
+    // max_bytes bound
+    let engine = ozaccel::engine::Engine::new(
+        &d,
+        BatchConfig {
+            max_pending: usize::MAX,
+            max_bytes: 3 * req_bytes,
+        },
+    );
+    let tickets: Vec<_> = (0..10)
+        .map(|_| engine.submit_dgemm_at(site, ComputeMode::Int8 { splits: 3 }, a.clone(), b.clone()))
+        .collect();
+    let st = engine.stats();
+    assert!(
+        st.high_water_bytes <= 3 * req_bytes,
+        "queue held {} bytes > max_bytes={}",
+        st.high_water_bytes,
+        3 * req_bytes
+    );
+    wait_all(tickets).unwrap();
+
+    // results under forced flushing are still correct
+    let want = d.dgemm_at(site, ComputeMode::Int8 { splits: 3 }, &a, &b).unwrap();
+    let engine = d.batch();
+    let t = engine.submit_dgemm_at(site, ComputeMode::Int8 { splits: 3 }, a.clone(), b.clone());
+    assert_eq!(t.wait().unwrap().data(), want.data());
+}
+
+#[test]
+fn shared_operands_pack_once_per_flush() {
+    // The contour pattern: many matrices multiplied against one shared
+    // factor.  The shared Arc must be split+packed once; every reuse is
+    // counted and surfaced in the PEAK batch column.
+    let mut rng = Rng::new(0xEC);
+    let mode = ComputeMode::Int8 { splits: 4 };
+    let mut cfg = DispatchConfig::host_only(mode);
+    // Engine-level reuse must not hide behind the content-addressed
+    // panel cache: disable it so the memo is the only reuse mechanism.
+    cfg.kernels.config.panel_cache_mb = 0;
+    let d = Dispatcher::new(cfg).unwrap();
+    let site = call_site();
+
+    let shared_a = Arc::new(rand_mat(&mut rng, 10, 12));
+    let bs: Vec<Arc<Mat<f64>>> = (0..5).map(|_| Arc::new(rand_mat(&mut rng, 12, 6))).collect();
+
+    let engine = d.batch();
+    let tickets: Vec<_> = bs
+        .iter()
+        .map(|b| engine.submit_dgemm_at(site, mode, shared_a.clone(), b.clone()))
+        .collect();
+    let got = wait_all(tickets).unwrap();
+    for (b, g) in bs.iter().zip(&got) {
+        let want = d.dgemm_at(site, mode, &shared_a, b).unwrap();
+        assert_eq!(g.data(), want.data());
+    }
+    let st = engine.stats();
+    assert_eq!(
+        st.pack_reuse_hits, 4,
+        "shared A must be packed once and reused 4 times, got {st:?}"
+    );
+    let rep = d.report();
+    let totals = rep.sites.totals();
+    assert_eq!(totals.pack_reuse, 4, "reuse surfaced in the PEAK batch stats");
+    assert!(totals.bucket_max >= 5);
+    let txt = rep.render();
+    assert!(txt.contains("batch"), "PEAK report carries the batch column");
+    assert!(txt.contains("5b/"), "bucket size rendered: {txt}");
+}
+
+#[test]
+fn nested_submission_from_pool_workers_cannot_deadlock() {
+    // Regression: a pool task that submits to an engine and waits must
+    // complete (flush-on-wait runs inline; the pool's nested rule keeps
+    // the kernels inline too).  A scheduler that parked tickets on a
+    // queue nobody drains would hang here.
+    let mut rng = Rng::new(0xED);
+    let mode = ComputeMode::Int8 { splits: 3 };
+    let d = host_dispatcher(mode);
+    let a = Arc::new(rand_mat(&mut rng, 9, 9));
+    let b = Arc::new(rand_mat(&mut rng, 9, 9));
+    let site = call_site();
+    let want = d.dgemm_at(site, mode, &a, &b).unwrap();
+
+    let results: std::sync::Mutex<Vec<Mat<f64>>> = std::sync::Mutex::new(Vec::new());
+    ozaccel::runtime::pool::run(6, 4, |_| {
+        let engine = d.batch();
+        let t = engine.submit_dgemm_at(site, mode, a.clone(), b.clone());
+        let r = t.wait().unwrap();
+        results.lock().unwrap().push(r);
+    });
+    let results = results.into_inner().unwrap();
+    assert_eq!(results.len(), 6);
+    for r in &results {
+        assert_eq!(r.data(), want.data(), "nested result must stay bit-identical");
+    }
+}
+
+#[test]
+fn explicit_flush_and_scope_drop_settle_everything() {
+    let mut rng = Rng::new(0xEE);
+    let mode = ComputeMode::Int8 { splits: 4 };
+    let d = host_dispatcher(mode);
+    let site = call_site();
+    let a = Arc::new(rand_mat(&mut rng, 8, 8));
+    let b = Arc::new(rand_mat(&mut rng, 8, 8));
+
+    // explicit flush: tickets become ready without wait
+    let engine = d.batch();
+    let t = engine.submit_dgemm_at(site, mode, a.clone(), b.clone());
+    assert!(!t.is_ready());
+    assert_eq!(engine.pending(), 1);
+    engine.flush().unwrap();
+    assert!(t.is_ready());
+    assert_eq!(engine.pending(), 0);
+    t.wait().unwrap();
+
+    // scope-style builder flushes on exit; fire-and-forget work still
+    // executes and lands in the PEAK report
+    let calls_before = d.report().total_calls;
+    d.batch_scope(|scope| {
+        scope.submit_dgemm_at(site, mode, a.clone(), b.clone());
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(d.report().total_calls, calls_before + 1);
+
+    // shape mismatches fail the ticket, not the batch
+    let engine = d.batch();
+    let bad = engine.submit_dgemm_at(site, mode, a.clone(), Arc::new(rand_mat(&mut rng, 5, 5)));
+    let good = engine.submit_dgemm_at(site, mode, a.clone(), b.clone());
+    assert!(bad.wait().is_err());
+    assert!(good.wait().is_ok());
+}
+
+#[test]
+fn governed_batches_consult_the_governor_once_per_site_bucket() {
+    use ozaccel::precision::{PrecisionConfig, PrecisionMode};
+    let mut cfg = DispatchConfig::host_only(ComputeMode::Int8 { splits: 12 });
+    cfg.precision = PrecisionConfig {
+        mode: PrecisionMode::Apriori,
+        target: 1e-8,
+        ..Default::default()
+    };
+    let d = Dispatcher::new(cfg).unwrap();
+    let site = call_site();
+    let mut rng = Rng::new(0xEF);
+    let a = Arc::new(rand_mat(&mut rng, 16, 16));
+    let b = Arc::new(rand_mat(&mut rng, 16, 16));
+
+    let engine = d.batch();
+    let tickets: Vec<_> = (0..4)
+        .map(|_| engine.submit_dgemm_at(site, ComputeMode::Int8 { splits: 12 }, a.clone(), b.clone()))
+        .collect();
+    wait_all(tickets).unwrap();
+    // the governor decided for the site, and every member executed the
+    // same (governed) split count inside one bucket
+    let rep = d.report();
+    let s = rep.sites.get(site).unwrap();
+    assert_eq!(s.splits_min, s.splits_max, "one decision per (site, bucket)");
+    assert!(s.splits_max >= 3 && s.splits_max <= 18);
+    assert_eq!(s.batch_calls, 4);
+    assert_eq!(s.batch_buckets, 1);
+}
