@@ -29,6 +29,7 @@ const PRECISION_KEYS: &[&str] = &[
     "cooldown",
     "probe_rows",
     "probe_period",
+    "certify",
 ];
 
 /// Keys accepted under the legacy `[adaptive]` table (value aliases for
@@ -40,6 +41,10 @@ const ADAPTIVE_ALIAS_KEYS: &[&str] = &["target", "min_splits", "max_splits"];
 
 /// Keys accepted under `[batch]` — the execution engine's flush policy.
 const BATCH_KEYS: &[&str] = &["max_pending", "max_bytes"];
+
+/// Keys accepted under `[limits]` — the execution engine's admission
+/// control (backpressure) bounds.
+const LIMITS_KEYS: &[&str] = &["max_inflight", "submit_deadline_ms"];
 
 /// Full run configuration for the `ozaccel` binary.
 #[derive(Clone, Debug)]
@@ -164,7 +169,14 @@ impl RunConfig {
             // "feedback"` under [run]) would otherwise be ignored
             if matches!(
                 key.as_str(),
-                "precision" | "run.precision" | "adaptive" | "run.adaptive" | "batch" | "run.batch"
+                "precision"
+                    | "run.precision"
+                    | "adaptive"
+                    | "run.adaptive"
+                    | "batch"
+                    | "run.batch"
+                    | "limits"
+                    | "run.limits"
             ) {
                 return Err(Error::Config(format!(
                     "{key:?} is a table, not a scalar — write e.g. \
@@ -178,6 +190,16 @@ impl RunConfig {
                 if !BATCH_KEYS.contains(&rest) {
                     return Err(Error::Config(format!(
                         "unknown batch key {key:?} (expected one of {BATCH_KEYS:?})"
+                    )));
+                }
+            }
+            let limits_rest = key
+                .strip_prefix("run.limits.")
+                .or_else(|| key.strip_prefix("limits."));
+            if let Some(rest) = limits_rest {
+                if !LIMITS_KEYS.contains(&rest) {
+                    return Err(Error::Config(format!(
+                        "unknown limits key {key:?} (expected one of {LIMITS_KEYS:?})"
                     )));
                 }
             }
@@ -255,6 +277,15 @@ impl RunConfig {
         if let Some(v) = prec("probe_period") {
             cfg.dispatch.precision.probe_period = toml_u32(v, "precision.probe_period")?;
         }
+        // `certify = true` is shorthand for `mode = "certified"` — it
+        // switches the a-posteriori certification loop on without
+        // having to spell the mode name.  `certify = false` is a no-op
+        // (it never downgrades an explicitly configured mode).
+        if let Some(v) = prec("certify") {
+            if v.as_bool()? {
+                cfg.dispatch.precision.mode = PrecisionMode::Certified;
+            }
+        }
         // Out-of-range pairs (e.g. min > max) are rejected loudly here.
         cfg.dispatch.precision.validate()?;
         // `[batch]` and `[run.batch]` are interchangeable (the rustdoc
@@ -278,6 +309,20 @@ impl RunConfig {
                 )));
             }
             cfg.dispatch.batch.max_bytes = f as usize;
+        }
+        // `[limits]` and `[run.limits]` are interchangeable, mirroring
+        // [precision] and [batch].
+        let limits = |name: &str| {
+            lookup(&table, &format!("limits.{name}"))
+                .or_else(|| lookup(&table, &format!("run.limits.{name}")))
+        };
+        if let Some(v) = limits("max_inflight") {
+            // 0 is meaningful here: it disables admission control.
+            cfg.dispatch.limits.max_inflight = toml_u32(v, "limits.max_inflight")? as usize;
+        }
+        if let Some(v) = limits("submit_deadline_ms") {
+            cfg.dispatch.limits.submit_deadline_ms =
+                toml_u32(v, "limits.submit_deadline_ms")? as u64;
         }
         if let Some(v) = lookup(&table, "sweep.splits") {
             cfg.sweep_splits = v
@@ -350,6 +395,21 @@ impl RunConfig {
                 return Err(Error::Config("OZACCEL_BATCH_MAX_BYTES must be >= 1".into()));
             }
             self.dispatch.batch.max_bytes = n;
+        }
+        if let Ok(v) = std::env::var("OZACCEL_MAX_INFLIGHT") {
+            // 0 = admission control off, so only malformed values fail.
+            let n: usize = v
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("bad OZACCEL_MAX_INFLIGHT {v:?}")))?;
+            self.dispatch.limits.max_inflight = n;
+        }
+        if let Ok(v) = std::env::var("OZACCEL_SUBMIT_DEADLINE_MS") {
+            let n: u64 = v
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("bad OZACCEL_SUBMIT_DEADLINE_MS {v:?}")))?;
+            self.dispatch.limits.submit_deadline_ms = n;
         }
         Ok(())
     }
@@ -648,6 +708,68 @@ n_contour = 12
         assert!(RunConfig::from_toml("[run.batch]\nbogus = 1\n").is_err());
         assert!(RunConfig::from_toml("[run]\nbatch = 4\n").is_err());
         assert!(RunConfig::from_toml("batch = 4\n").is_err());
+    }
+
+    #[test]
+    fn certify_shorthand_switches_the_mode_on() {
+        let cfg = RunConfig::from_toml("[precision]\ncertify = true\n").unwrap();
+        assert_eq!(cfg.dispatch.precision.mode, PrecisionMode::Certified);
+        // the run.precision.* spelling works too
+        let cfg = RunConfig::from_toml("[run.precision]\ncertify = true\n").unwrap();
+        assert_eq!(cfg.dispatch.precision.mode, PrecisionMode::Certified);
+        // false is a no-op, never a downgrade
+        let cfg = RunConfig::from_toml(
+            "[precision]\nmode = \"feedback\"\ncertify = false\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dispatch.precision.mode, PrecisionMode::Feedback);
+        // non-boolean values are loud
+        assert!(RunConfig::from_toml("[precision]\ncertify = \"yes\"\n").is_err());
+    }
+
+    #[test]
+    fn limits_keys_parse_and_reject() {
+        let cfg = RunConfig::from_toml(
+            "[limits]\nmax_inflight = 8\nsubmit_deadline_ms = 250\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dispatch.limits.max_inflight, 8);
+        assert_eq!(cfg.dispatch.limits.submit_deadline_ms, 250);
+        // the run.limits.* spelling maps identically
+        let cfg = RunConfig::from_toml("[run.limits]\nmax_inflight = 3\n").unwrap();
+        assert_eq!(cfg.dispatch.limits.max_inflight, 3);
+        // 0 is valid for max_inflight: admission control off
+        let cfg = RunConfig::from_toml("[limits]\nmax_inflight = 0\n").unwrap();
+        assert_eq!(cfg.dispatch.limits.max_inflight, 0);
+        // rejections are loud: fractional / negative / unknown keys /
+        // scalar-where-table
+        assert!(RunConfig::from_toml("[limits]\nmax_inflight = 2.5\n").is_err());
+        assert!(RunConfig::from_toml("[limits]\nsubmit_deadline_ms = -1\n").is_err());
+        assert!(RunConfig::from_toml("[limits]\nbogus = 1\n").is_err());
+        assert!(RunConfig::from_toml("[run.limits]\nbogus = 1\n").is_err());
+        assert!(RunConfig::from_toml("[run]\nlimits = 4\n").is_err());
+        assert!(RunConfig::from_toml("limits = 4\n").is_err());
+    }
+
+    #[test]
+    fn limits_env_override() {
+        let _guard = env_lock();
+        let _restore = RestoreVar("OZACCEL_MAX_INFLIGHT");
+        let _restore2 = RestoreVar("OZACCEL_SUBMIT_DEADLINE_MS");
+        std::env::set_var("OZACCEL_MAX_INFLIGHT", "12");
+        std::env::set_var("OZACCEL_SUBMIT_DEADLINE_MS", "750");
+        let mut cfg = RunConfig::from_toml("[limits]\nmax_inflight = 4\n").unwrap();
+        cfg.apply_env().unwrap();
+        assert_eq!(cfg.dispatch.limits.max_inflight, 12);
+        assert_eq!(cfg.dispatch.limits.submit_deadline_ms, 750);
+        std::env::set_var("OZACCEL_MAX_INFLIGHT", "lots");
+        assert!(cfg.apply_env().is_err(), "bad OZACCEL_MAX_INFLIGHT is loud");
+        std::env::set_var("OZACCEL_MAX_INFLIGHT", "0");
+        std::env::set_var("OZACCEL_SUBMIT_DEADLINE_MS", "soon");
+        assert!(
+            cfg.apply_env().is_err(),
+            "bad OZACCEL_SUBMIT_DEADLINE_MS is loud"
+        );
     }
 
     #[test]

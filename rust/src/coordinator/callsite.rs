@@ -61,6 +61,17 @@ pub struct CallMeasurement {
     /// Batch-engine statistics when the call executed inside a
     /// coalesced bucket (`None` for directly dispatched calls).
     pub batch: Option<BatchCallInfo>,
+    /// Certification probes this call took (certified mode only).
+    pub cert_checks: u64,
+    /// Escalation re-runs certification forced on this call.
+    pub cert_escalations: u64,
+    /// Whether certification ended in the native-FP64 fallback.
+    pub cert_fp64: bool,
+    /// Whether the call's fused INT8 sweep took the i64
+    /// wide-accumulator escape (host emulated calls with
+    /// `K·splits > MAX_EXACT_I32_TERMS`; see
+    /// [`crate::kernels::is_wide`]).
+    pub wide: bool,
 }
 
 /// Accumulated statistics for one call site.
@@ -119,6 +130,15 @@ pub struct CallSiteStats {
     pub bucket_max: u64,
     /// Engine-level pack-reuse hits across this site's batched calls.
     pub pack_reuse: u64,
+    /// Certification probes across this site's calls (certified mode).
+    pub cert_checks: u64,
+    /// Certification escalation re-runs across this site's calls.
+    pub cert_escalations: u64,
+    /// Calls that ended in certification's native-FP64 fallback.
+    pub cert_fp64: u64,
+    /// Emulated calls whose fused sweep took the i64 wide-accumulator
+    /// escape (the PEAK `wide` column — overflow-escape visibility).
+    pub wide_calls: u64,
 }
 
 impl CallSiteStats {
@@ -164,6 +184,20 @@ impl CallSiteStats {
                 self.bucket_max,
                 self.coalesce_ratio(),
                 self.pack_reuse
+            )
+        }
+    }
+
+    /// The `cert` cell of the PEAK table:
+    /// `<checks>c/<escalations>e/<fp64 fallbacks>f`, or `-` for sites
+    /// certified mode never probed.
+    pub fn cert_cell(&self) -> String {
+        if self.cert_checks == 0 {
+            "-".into()
+        } else {
+            format!(
+                "{}c/{}e/{}f",
+                self.cert_checks, self.cert_escalations, self.cert_fp64
             )
         }
     }
@@ -222,6 +256,14 @@ impl SiteRegistry {
             e.bucket_max = e.bucket_max.max(b.bucket);
             e.pack_reuse += b.pack_reuse;
         }
+        e.cert_checks += m.cert_checks;
+        e.cert_escalations += m.cert_escalations;
+        if m.cert_fp64 {
+            e.cert_fp64 += 1;
+        }
+        if m.wide {
+            e.wide_calls += 1;
+        }
     }
 
     /// Attribute probe seconds to a site outside [`SiteRegistry::record`]
@@ -229,6 +271,29 @@ impl SiteRegistry {
     /// its four component records are already written).
     pub fn add_probe_s(&mut self, site: CallSiteId, probe_s: f64) {
         self.sites.entry(site).or_default().probe_s += probe_s;
+    }
+
+    /// Attribute probe seconds *and* certification activity to a site
+    /// outside [`SiteRegistry::record`] — the offloaded complex path
+    /// certifies the combined result after its four component records
+    /// are already written, and must not mint extra call records.
+    pub fn add_cert(
+        &mut self,
+        site: CallSiteId,
+        probe_s: f64,
+        extra_s: f64,
+        checks: u64,
+        escalations: u64,
+        fp64: bool,
+    ) {
+        let e = self.sites.entry(site).or_default();
+        e.probe_s += probe_s;
+        e.measured_s += extra_s;
+        e.cert_checks += checks;
+        e.cert_escalations += escalations;
+        if fp64 {
+            e.cert_fp64 += 1;
+        }
     }
 
     /// Iterate sites (sorted by id for stable reports).
@@ -285,6 +350,10 @@ impl SiteRegistry {
             t.batch_buckets += s.batch_buckets;
             t.bucket_max = t.bucket_max.max(s.bucket_max);
             t.pack_reuse += s.pack_reuse;
+            t.cert_checks += s.cert_checks;
+            t.cert_escalations += s.cert_escalations;
+            t.cert_fp64 += s.cert_fp64;
+            t.wide_calls += s.wide_calls;
         }
         t
     }
@@ -411,6 +480,46 @@ mod tests {
         );
         assert_eq!(constant.get("x.rs:1").unwrap().splits_cell(), "6");
         assert_eq!(CallSiteStats::default().splits_cell(), "-");
+    }
+
+    #[test]
+    fn cert_and_wide_stats_accumulate_and_render() {
+        let mut r = SiteRegistry::new();
+        r.record(
+            "scf.rs:3",
+            CallMeasurement {
+                flops: 1.0,
+                splits: 9,
+                cert_checks: 2,
+                cert_escalations: 1,
+                wide: true,
+                ..Default::default()
+            },
+        );
+        r.record(
+            "scf.rs:3",
+            CallMeasurement {
+                flops: 1.0,
+                cert_checks: 1,
+                cert_escalations: 1,
+                cert_fp64: true,
+                ..Default::default()
+            },
+        );
+        let s = r.get("scf.rs:3").unwrap();
+        assert_eq!((s.cert_checks, s.cert_escalations, s.cert_fp64), (3, 2, 1));
+        assert_eq!(s.wide_calls, 1);
+        assert_eq!(s.cert_cell(), "3c/2e/1f");
+        assert_eq!(CallSiteStats::default().cert_cell(), "-");
+        // the out-of-record seam the decomposed complex path uses
+        r.add_cert("scf.rs:3", 1e-4, 2e-3, 1, 0, false);
+        let s = r.get("scf.rs:3").unwrap();
+        assert_eq!(s.cert_checks, 4);
+        assert!((s.probe_s - 1e-4).abs() < 1e-12);
+        assert!((s.measured_s - 2e-3).abs() < 1e-12);
+        let t = r.totals();
+        assert_eq!((t.cert_checks, t.cert_escalations, t.cert_fp64), (4, 2, 1));
+        assert_eq!(t.wide_calls, 1);
     }
 
     #[test]

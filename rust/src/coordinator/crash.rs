@@ -1,0 +1,128 @@
+//! Crash-safe PEAK dump: a best-effort report on unexpected panics.
+//!
+//! A long MuST-style run accumulates per-call-site measurements that
+//! are lost if the process aborts before the application prints its
+//! report.  [`install_hook`] chains a `std::panic` hook that renders a
+//! best-effort PEAK snapshot to stderr the *first* time an unexpected
+//! panic unwinds — so a crashing run still leaves its profile behind.
+//!
+//! Two gates keep the hook honest:
+//!
+//! * **Injected and isolated panics stay silent.**  The std panic hook
+//!   runs even for panics later caught by `catch_unwind`, so the chaos
+//!   suite's deliberate [`crate::faults`] worker panics (payloads
+//!   marked `ozaccel fault injection`) would spam dumps for failures
+//!   the engine isolates by design.  [`should_dump`] skips them.
+//! * **At most one dump per process.**  A panic cascade (e.g. poisoned
+//!   test harness) must not re-render the report on every unwind.
+//!
+//! The snapshot itself comes from a registered *source* closure
+//! ([`set_crash_report_source`], installed by
+//! [`crate::coordinator::Dispatcher::enable_crash_dump`]) that must be
+//! crash-safe: it uses `try_lock` throughout and returns `None` when
+//! state is unavailable — a panic hook can never afford to block on a
+//! lock the panicking thread may hold.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once};
+
+type Source = Box<dyn Fn() -> Option<String> + Send + Sync>;
+
+fn source() -> &'static Mutex<Option<Source>> {
+    static SOURCE: once_cell::sync::Lazy<Mutex<Option<Source>>> =
+        once_cell::sync::Lazy::new(|| Mutex::new(None));
+    &SOURCE
+}
+
+static DUMPED: AtomicBool = AtomicBool::new(false);
+
+/// Register the closure that renders the crash-time report (replacing
+/// any previous source) and make sure the panic hook is installed.
+/// The closure must be crash-safe: `try_lock` only, `None` on any
+/// contention.
+pub fn set_crash_report_source(f: impl Fn() -> Option<String> + Send + Sync + 'static) {
+    install_hook();
+    if let Ok(mut s) = source().lock() {
+        *s = Some(Box::new(f));
+    }
+}
+
+/// Drop the registered source (e.g. when the dispatcher that owns the
+/// state is being torn down deliberately).
+pub fn clear_crash_report_source() {
+    if let Ok(mut s) = source().lock() {
+        *s = None;
+    }
+}
+
+/// Whether a panic with this payload message warrants a crash dump:
+/// deliberate fault-injection panics are isolated by design and must
+/// stay silent.  Pure so the gate is testable without panicking.
+pub fn should_dump(payload_msg: &str) -> bool {
+    !payload_msg.contains("ozaccel fault injection")
+}
+
+/// Render a panic payload's message (the two shapes `panic!` makes).
+/// Takes the payload itself so the hook-info type name (renamed across
+/// Rust releases) never appears in a signature.
+fn payload_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        String::new()
+    }
+}
+
+/// Install the chaining panic hook (idempotent; first call wins).
+pub fn install_hook() {
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            prev(info);
+            if !should_dump(&payload_message(info.payload())) {
+                return;
+            }
+            if DUMPED.swap(true, Ordering::SeqCst) {
+                return;
+            }
+            // try_lock: the panicking thread may already hold the
+            // source lock (a panic inside the source itself).
+            let rendered = source()
+                .try_lock()
+                .ok()
+                .and_then(|s| s.as_ref().and_then(|f| f()));
+            if let Some(report) = rendered {
+                eprintln!("ozaccel: panic — best-effort PEAK dump follows\n{report}");
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn injection_payloads_are_silent_and_real_ones_are_not() {
+        assert!(!should_dump("ozaccel fault injection: worker_panic"));
+        assert!(should_dump("index out of bounds: the len is 4"));
+        assert!(should_dump(""));
+    }
+
+    #[test]
+    fn source_registration_roundtrips() {
+        // Registration is global; this test only exercises set/clear
+        // plumbing (the hook itself fires on real panics only).
+        set_crash_report_source(|| Some("snapshot".to_string()));
+        let got = source()
+            .try_lock()
+            .ok()
+            .and_then(|s| s.as_ref().and_then(|f| f()));
+        assert_eq!(got.as_deref(), Some("snapshot"));
+        clear_crash_report_source();
+        assert!(source().lock().unwrap().is_none());
+    }
+}

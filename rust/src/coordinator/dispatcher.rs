@@ -15,14 +15,15 @@ use super::datamove::{DataMoveStrategy, MemModel};
 use super::kernel_select::{HostCallInfo, KernelSelector};
 use super::policy::{OffloadDecision, RoutingPolicy};
 use super::stats::Report;
-use crate::engine::{BatchConfig, Engine};
-use crate::error::Result;
-use crate::kernels::{panel_cache, MR_C64, MR_F64, MR_I8};
+use crate::engine::{BatchConfig, Engine, LimitsConfig};
+use crate::error::{Error, Result};
+use crate::faults::FaultSite;
+use crate::kernels::{is_wide, panel_cache, MR_C64, MR_F64, MR_I8};
 use crate::linalg::{Mat, ZMat};
-use crate::ozaki::ComputeMode;
+use crate::ozaki::{implied_constant, required_splits_in, ComputeMode};
 use crate::perfmodel::{emulated_gemm_time, gemm_flops, native_gemm_time, GpuSpec, GH200};
 use crate::precision::{
-    probe_dgemm, probe_seed, probe_zgemm, sample_rows, Governor, PrecisionConfig,
+    probe_dgemm, probe_seed, probe_zgemm, sample_rows, Governor, PrecisionConfig, PrecisionMode,
 };
 use crate::runtime::{ArtifactKind, Runtime};
 
@@ -50,6 +51,11 @@ pub struct DispatchConfig {
     /// (`run.batch.*` / `OZACCEL_BATCH_*`), used by
     /// [`Dispatcher::batch`] scopes.
     pub batch: BatchConfig,
+    /// Admission-control limits of the batch execution engine
+    /// (`[limits]` / `OZACCEL_MAX_INFLIGHT` /
+    /// `OZACCEL_SUBMIT_DEADLINE_MS`): bounded in-flight work and the
+    /// blocking-submit deadline.
+    pub limits: LimitsConfig,
 }
 
 impl Default for DispatchConfig {
@@ -66,6 +72,7 @@ impl Default for DispatchConfig {
             // and `run.threads`.
             kernels: KernelSelector::from_env(),
             batch: BatchConfig::from_env(),
+            limits: LimitsConfig::from_env(),
         }
     }
 }
@@ -146,6 +153,12 @@ impl Dispatcher {
     /// Whether a live PJRT runtime is attached.
     pub fn has_runtime(&self) -> bool {
         self.runtime.is_some()
+    }
+
+    /// The engine admission limits batch scopes inherit
+    /// ([`DispatchConfig::limits`]).
+    pub fn limits(&self) -> LimitsConfig {
+        self.cfg.limits
     }
 
     /// FP64 GEMM through the coordinator (call site auto-captured).
@@ -333,6 +346,7 @@ impl Dispatcher {
         let Some(rows) = self.probe_rows_for(site, mode, m, k, n) else {
             return Ok(0.0);
         };
+        crate::faults::maybe_fail(FaultSite::ProbeFail, Error::Numerical)?;
         let rep = probe_dgemm(a, b, c, &rows)?;
         self.governor
             .record_probe(site, mode.splits().unwrap_or(0), k, rep.rel_err, rep.seconds);
@@ -352,10 +366,183 @@ impl Dispatcher {
         let Some(rows) = self.probe_rows_for(site, mode, m, k, n) else {
             return Ok(0.0);
         };
+        crate::faults::maybe_fail(FaultSite::ProbeFail, Error::Numerical)?;
         let rep = probe_zgemm(a, b, c, &rows)?;
         self.governor
             .record_probe(site, mode.splits().unwrap_or(0), k, rep.rel_err, rep.seconds);
         Ok(rep.seconds)
+    }
+
+    /// Post-execution step of one governed real GEMM — the single seam
+    /// the sequential dispatcher and the batch scheduler both finish
+    /// through.  Ungoverned (pinned) calls pass straight through; in
+    /// feedback mode this is the a-posteriori probe; in certified mode
+    /// it is the certify/escalate loop of [`Dispatcher::certify_real`].
+    pub(crate) fn finish_real(
+        &self,
+        site: CallSiteId,
+        mode: ComputeMode,
+        a: &Mat<f64>,
+        b: &Mat<f64>,
+        result: Mat<f64>,
+        governed: bool,
+    ) -> Result<Finished<Mat<f64>>> {
+        let mut fin = Finished::new(result, mode);
+        if governed {
+            if self.precision().mode == PrecisionMode::Certified {
+                self.certify_real(site, a, b, &mut fin)?;
+            } else {
+                fin.probe_s = self.probe_real(site, mode, a, b, &fin.result)?;
+            }
+        }
+        Ok(fin)
+    }
+
+    /// Complex twin of [`Dispatcher::finish_real`].
+    pub(crate) fn finish_complex(
+        &self,
+        site: CallSiteId,
+        mode: ComputeMode,
+        a: &ZMat,
+        b: &ZMat,
+        result: ZMat,
+        governed: bool,
+    ) -> Result<Finished<ZMat>> {
+        let mut fin = Finished::new(result, mode);
+        if governed {
+            if self.precision().mode == PrecisionMode::Certified {
+                self.certify_complex(site, a, b, &mut fin)?;
+            } else {
+                fin.probe_s = self.probe_complex(site, mode, a, b, &fin.result)?;
+            }
+        }
+        Ok(fin)
+    }
+
+    /// Certified mode's a-posteriori loop: probe the emulated result
+    /// against the accuracy target; on violation invert the calibrated
+    /// error model for the split count that would meet it, re-run at
+    /// the ramped splits, and re-certify — falling back to native FP64
+    /// when even `max_splits` cannot reach the target.  Results degrade
+    /// in *speed*, never accuracy: the loop only exits with a result
+    /// whose probed residual satisfies the bound, or one computed in
+    /// FP64 outright (certified by construction).  Escalation re-runs
+    /// always execute on the host kernel selector — re-offloading an
+    /// uncertified shape would re-enter routing mid-call.  Termination:
+    /// each escalation strictly increases the split count toward
+    /// `max_splits`, and the FP64 fallback leaves the `Int8` match arm.
+    fn certify_real(
+        &self,
+        site: CallSiteId,
+        a: &Mat<f64>,
+        b: &Mat<f64>,
+        fin: &mut Finished<Mat<f64>>,
+    ) -> Result<()> {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        while let ComputeMode::Int8 { splits } = fin.mode {
+            let Some(rows) = self.probe_rows_for(site, fin.mode, m, k, n) else {
+                break; // nothing to sample (degenerate shape): accept
+            };
+            crate::faults::maybe_fail(FaultSite::ProbeFail, Error::Numerical)?;
+            let rep = probe_dgemm(a, b, &fin.result, &rows)?;
+            self.governor
+                .record_probe(site, splits, k, rep.rel_err, rep.seconds);
+            fin.probe_s += rep.seconds;
+            fin.cert_checks += 1;
+            if rep.rel_err <= self.precision().target {
+                break; // certified
+            }
+            match self.escalation_target(site, splits, k, rep.rel_err) {
+                Some(s) => {
+                    let t0 = Instant::now();
+                    fin.result = self.cfg.kernels.ozaki_dgemm(a, b, s)?;
+                    fin.extra_s += t0.elapsed().as_secs_f64();
+                    fin.mode = ComputeMode::Int8 { splits: s };
+                    self.governor.escalate(site, s);
+                    fin.cert_escalations += 1;
+                }
+                None => {
+                    let t0 = Instant::now();
+                    fin.result = self.cfg.kernels.dgemm(a, b)?;
+                    fin.extra_s += t0.elapsed().as_secs_f64();
+                    fin.mode = ComputeMode::Dgemm;
+                    self.governor.escalate(site, self.precision().max_splits);
+                    fin.cert_escalations += 1;
+                    fin.cert_fp64 = true;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Complex twin of [`Dispatcher::certify_real`] (fused host path
+    /// and the combined result of the decomposed offload path).
+    fn certify_complex(
+        &self,
+        site: CallSiteId,
+        a: &ZMat,
+        b: &ZMat,
+        fin: &mut Finished<ZMat>,
+    ) -> Result<()> {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        while let ComputeMode::Int8 { splits } = fin.mode {
+            let Some(rows) = self.probe_rows_for(site, fin.mode, m, k, n) else {
+                break;
+            };
+            crate::faults::maybe_fail(FaultSite::ProbeFail, Error::Numerical)?;
+            let rep = probe_zgemm(a, b, &fin.result, &rows)?;
+            self.governor
+                .record_probe(site, splits, k, rep.rel_err, rep.seconds);
+            fin.probe_s += rep.seconds;
+            fin.cert_checks += 1;
+            if rep.rel_err <= self.precision().target {
+                break;
+            }
+            match self.escalation_target(site, splits, k, rep.rel_err) {
+                Some(s) => {
+                    let t0 = Instant::now();
+                    fin.result = self.cfg.kernels.ozaki_zgemm(a, b, s)?;
+                    fin.extra_s += t0.elapsed().as_secs_f64();
+                    fin.mode = ComputeMode::Int8 { splits: s };
+                    self.governor.escalate(site, s);
+                    fin.cert_escalations += 1;
+                }
+                None => {
+                    let t0 = Instant::now();
+                    fin.result = self.cfg.kernels.zgemm(a, b)?;
+                    fin.extra_s += t0.elapsed().as_secs_f64();
+                    fin.mode = ComputeMode::Dgemm;
+                    self.governor.escalate(site, self.precision().max_splits);
+                    fin.cert_escalations += 1;
+                    fin.cert_fp64 = true;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The split count a certification violation escalates to: invert
+    /// the error model at the *measured* residual (amplified by the
+    /// site's consumer κ), clamped to strictly increase — `None` means
+    /// even `max_splits` cannot certify and the call must fall back to
+    /// native FP64.
+    fn escalation_target(
+        &self,
+        site: CallSiteId,
+        splits: u32,
+        k: usize,
+        rel_err: f64,
+    ) -> Option<u32> {
+        let pc = self.precision();
+        let c = implied_constant(rel_err, splits, k);
+        let kappa = self
+            .governor
+            .snapshot(site)
+            .map(|s| s.kappa)
+            .unwrap_or(1.0);
+        required_splits_in(c, pc.target, k, kappa, pc.min_splits, pc.max_splits)
+            .map(|s| s.max(splits + 1))
+            .filter(|&s| s <= pc.max_splits)
     }
 
     /// Complex host calls run as **one** fused call through the kernel
@@ -400,15 +587,21 @@ impl Dispatcher {
             let ri = self.dgemm_mode_at(site, mode, &ar, &bi, false)?;
             let ir = self.dgemm_mode_at(site, mode, &ai, &br, false)?;
             let combined = crate::linalg::zcombine(&rr, &ii, &ri, &ir);
-            if governed {
-                let probe_s = self.probe_complex(site, mode, a, b, &combined)?;
-                if probe_s > 0.0 {
-                    // the four component records are already written;
-                    // attribute the probe cost to the site directly
-                    self.sites.lock().unwrap().add_probe_s(site, probe_s);
-                }
+            let fin = self.finish_complex(site, mode, a, b, combined, governed)?;
+            if fin.probe_s > 0.0 || fin.cert_checks > 0 {
+                // the four component records are already written;
+                // attribute the probe/certification cost to the site
+                // directly without minting extra call records
+                self.sites.lock().unwrap().add_cert(
+                    site,
+                    fin.probe_s,
+                    fin.extra_s,
+                    fin.cert_checks,
+                    fin.cert_escalations,
+                    fin.cert_fp64,
+                );
             }
-            return Ok(combined);
+            return Ok(fin.result);
         }
 
         let cache_before = Self::cache_window(mode);
@@ -418,11 +611,7 @@ impl Dispatcher {
             ComputeMode::Int8 { splits } => self.cfg.kernels.ozaki_zgemm(a, b, splits)?,
         };
         let measured = t0.elapsed().as_secs_f64();
-        let probe_s = if governed {
-            self.probe_complex(site, mode, a, b, &result)?
-        } else {
-            0.0
-        };
+        let fin = self.finish_complex(site, mode, a, b, result, governed)?;
 
         let mr = match mode {
             ComputeMode::Dgemm => MR_C64,
@@ -447,12 +636,13 @@ impl Dispatcher {
             n,
             mode.name()
         );
-        let splits = mode.splits().unwrap_or(0);
+        let splits = fin.mode.splits().unwrap_or(0);
+        let wide = matches!(fin.mode, ComputeMode::Int8 { .. }) && is_wide(k, splits);
         let mut sites = self.sites.lock().unwrap();
         for i in 0..4 {
-            // pack time / cache traffic / probe cost attach once; the
-            // four records keep the call count of the real-GEMM
-            // decomposition.
+            // pack time / cache traffic / probe + certification cost
+            // attach once; the four records keep the call count of the
+            // real-GEMM decomposition.
             let info = if i == 0 {
                 full
             } else {
@@ -467,15 +657,19 @@ impl Dispatcher {
                 site,
                 CallMeasurement {
                     flops: gemm_flops(m, k, n),
-                    measured_s: measured / 4.0,
+                    measured_s: (measured + fin.extra_s) / 4.0,
                     splits,
-                    probe_s: if i == 0 { probe_s } else { 0.0 },
+                    probe_s: if i == 0 { fin.probe_s } else { 0.0 },
                     host: Some(info),
+                    cert_checks: if i == 0 { fin.cert_checks } else { 0 },
+                    cert_escalations: if i == 0 { fin.cert_escalations } else { 0 },
+                    cert_fp64: i == 0 && fin.cert_fp64,
+                    wide,
                     ..Default::default()
                 },
             );
         }
-        Ok(result)
+        Ok(fin.result)
     }
 
     pub(crate) fn dgemm_mode_at(
@@ -497,6 +691,7 @@ impl Dispatcher {
         let mut host_info = None;
         let t0 = Instant::now();
         let result = if decision.offloaded() {
+            crate::faults::maybe_fail(FaultSite::OffloadError, Error::Xla)?;
             let kind = ArtifactKind::for_mode(mode);
             self.runtime.as_ref().unwrap().gemm(kind, a, b)?
         } else {
@@ -533,11 +728,7 @@ impl Dispatcher {
             r
         };
         let measured = t0.elapsed().as_secs_f64();
-        let probe_s = if governed {
-            self.probe_real(site, mode, a, b, &result)?
-        } else {
-            0.0
-        };
+        let fin = self.finish_real(site, mode, a, b, result, governed)?;
 
         // Model GPU compute + movement for offloaded calls only.
         let (gpu_s, move_s) = if decision.offloaded() {
@@ -551,7 +742,8 @@ impl Dispatcher {
             let mut move_s = 0.0;
             move_s += mem.gpu_read(a.data().as_ptr() as usize, (a.data().len() * 8) as u64);
             move_s += mem.gpu_read(b.data().as_ptr() as usize, (b.data().len() * 8) as u64);
-            move_s += mem.gpu_write(result.data().as_ptr() as usize, (result.data().len() * 8) as u64);
+            move_s +=
+                mem.gpu_write(fin.result.data().as_ptr() as usize, (fin.result.data().len() * 8) as u64);
             (gpu_s, move_s)
         } else {
             (0.0, 0.0)
@@ -565,21 +757,29 @@ impl Dispatcher {
             mode.name(),
             decision
         );
+        let splits = fin.mode.splits().unwrap_or(0);
+        let wide = host_info.is_some()
+            && matches!(fin.mode, ComputeMode::Int8 { .. })
+            && is_wide(k, splits);
         self.sites.lock().unwrap().record(
             site,
             CallMeasurement {
                 flops: gemm_flops(m, k, n),
                 offloaded: decision.offloaded(),
-                measured_s: measured,
+                measured_s: measured + fin.extra_s,
                 modeled_gpu_s: gpu_s,
                 modeled_move_s: move_s,
-                splits: mode.splits().unwrap_or(0),
-                probe_s,
+                splits,
+                probe_s: fin.probe_s,
                 host: host_info,
+                cert_checks: fin.cert_checks,
+                cert_escalations: fin.cert_escalations,
+                cert_fp64: fin.cert_fp64,
+                wide,
                 ..Default::default()
             },
         );
-        Ok(result)
+        Ok(fin.result)
     }
 
     /// Account a CPU touch of a result buffer (residency model input).
@@ -590,10 +790,37 @@ impl Dispatcher {
             .cpu_touch(buf.data().as_ptr() as usize, (buf.data().len() * 8) as u64);
     }
 
+    /// Install this dispatcher as the process's crash-dump source: on
+    /// an unexpected panic (never the chaos suite's injected, isolated
+    /// ones) a best-effort PEAK snapshot is rendered to stderr, so a
+    /// crashing run still leaves its profile behind.  The registration
+    /// holds only a weak reference — dropping the dispatcher quietly
+    /// disables the dump.
+    pub fn enable_crash_dump(self: &std::sync::Arc<Self>) {
+        let weak = std::sync::Arc::downgrade(self);
+        super::crash::set_crash_report_source(move || {
+            weak.upgrade()
+                .and_then(|d| d.try_report().map(|r| r.render()))
+        });
+    }
+
+    /// Crash-safe [`Dispatcher::report`]: `try_lock` throughout, `None`
+    /// when any lock is contended — a panic hook must never block on a
+    /// lock the unwinding thread may hold.
+    pub fn try_report(&self) -> Option<Report> {
+        let sites = self.sites.try_lock().ok()?.clone();
+        let mem = self.mem.try_lock().ok()?;
+        Some(self.build_report(sites, &mem))
+    }
+
     /// Snapshot the run report.
     pub fn report(&self) -> Report {
         let sites = self.sites.lock().unwrap().clone();
         let mem = self.mem.lock().unwrap();
+        self.build_report(sites, &mem)
+    }
+
+    fn build_report(&self, sites: SiteRegistry, mem: &MemModel) -> Report {
         let t = sites.totals();
         Report {
             mode: self.cfg.mode,
@@ -619,6 +846,42 @@ impl Dispatcher {
         *self.sites.lock().unwrap() = SiteRegistry::new();
         self.mem.lock().unwrap().reset();
         self.governor.reset();
+    }
+}
+
+/// Post-execution accounting of one governed GEMM
+/// ([`Dispatcher::finish_real`] / [`Dispatcher::finish_complex`]):
+/// what the call finally ran as (certified mode may have re-executed
+/// it), plus the probe time and certification activity the finish
+/// added on top of the first execution.
+pub(crate) struct Finished<T> {
+    /// The (possibly re-computed) output.
+    pub(crate) result: T,
+    /// The mode the delivered result was actually computed in.
+    pub(crate) mode: ComputeMode,
+    /// Seconds spent in a-posteriori probes.
+    pub(crate) probe_s: f64,
+    /// Seconds spent re-executing after certification violations.
+    pub(crate) extra_s: f64,
+    /// Certification probes taken (certified mode only).
+    pub(crate) cert_checks: u64,
+    /// Escalation re-runs the certification loop forced.
+    pub(crate) cert_escalations: u64,
+    /// Whether the call ended in the native-FP64 fallback.
+    pub(crate) cert_fp64: bool,
+}
+
+impl<T> Finished<T> {
+    fn new(result: T, mode: ComputeMode) -> Self {
+        Finished {
+            result,
+            mode,
+            probe_s: 0.0,
+            extra_s: 0.0,
+            cert_checks: 0,
+            cert_escalations: 0,
+            cert_fp64: false,
+        }
     }
 }
 
@@ -877,6 +1140,100 @@ mod tests {
         let (_, s) = rep.sites.iter().next().unwrap();
         assert_eq!((s.splits_min, s.splits_max), (4, 4));
         assert_eq!(s.probe_s, 0.0, "pinned calls are never probed");
+    }
+
+    #[test]
+    fn certified_mode_falls_back_to_fp64_on_an_impossible_target() {
+        // target=0 is unreachable by any split count, so the very first
+        // certification check must escalate straight to native FP64 —
+        // the delivered result is the exact product, and the PEAK
+        // report shows the escalation.
+        let mut cfg = DispatchConfig::host_only(ComputeMode::Int8 { splits: 4 });
+        cfg.precision = PrecisionConfig {
+            mode: PrecisionMode::Certified,
+            target: 0.0,
+            probe_rows: 8,
+            ..Default::default()
+        };
+        let d = Dispatcher::new(cfg).unwrap();
+        let mut rng = Rng::new(21);
+        let a = rand_mat(&mut rng, 8, 8);
+        let b = rand_mat(&mut rng, 8, 8);
+        let got = d.dgemm(&a, &b).unwrap();
+        let want = linalg::dgemm(&a, &b).unwrap();
+        assert_eq!(got.data(), want.data(), "fp64 fallback is exact");
+        let rep = d.report();
+        let (_, s) = rep.sites.iter().next().unwrap();
+        assert!(s.cert_checks >= 1, "certification probed: {}", s.cert_checks);
+        assert!(s.cert_escalations >= 1);
+        assert_eq!(s.cert_fp64, 1, "exactly one fp64 fallback");
+        assert_eq!(s.splits_last(), 0, "final record is the FP64 run");
+        let txt = rep.render();
+        assert!(txt.contains("precision=certified"), "{txt}");
+    }
+
+    #[test]
+    fn certified_mode_accepts_and_records_when_the_target_is_met() {
+        let mut cfg = DispatchConfig::host_only(ComputeMode::Int8 { splits: 12 });
+        cfg.precision = PrecisionConfig {
+            mode: PrecisionMode::Certified,
+            target: 1e-2,
+            probe_rows: 8,
+            ..Default::default()
+        };
+        let d = Dispatcher::new(cfg).unwrap();
+        let mut rng = Rng::new(22);
+        let a = rand_mat(&mut rng, 8, 8);
+        let b = rand_mat(&mut rng, 8, 8);
+        d.dgemm(&a, &b).unwrap();
+        let rep = d.report();
+        let (site, s) = rep.sites.iter().next().unwrap();
+        assert!(s.cert_checks >= 1);
+        assert_eq!(s.cert_escalations, 0, "1e-2 is certifiable first try");
+        assert_eq!(s.cert_fp64, 0);
+        // The certification invariant: the delivered result's probed
+        // residual satisfies the accuracy bound.
+        let snap = d.governor().snapshot(*site).unwrap();
+        assert!(snap.last_err <= 1e-2, "last_err={}", snap.last_err);
+        assert!(s.probe_s >= 0.0);
+    }
+
+    #[test]
+    fn certified_zgemm_also_certifies() {
+        let mut cfg = DispatchConfig::host_only(ComputeMode::Int8 { splits: 10 });
+        cfg.precision = PrecisionConfig {
+            mode: PrecisionMode::Certified,
+            target: 0.0, // unreachable: must end in native FP64
+            probe_rows: 8,
+            ..Default::default()
+        };
+        let d = Dispatcher::new(cfg).unwrap();
+        let mut rng = Rng::new(23);
+        let a = ZMat::from_fn(6, 6, |_, _| rng.cnormal());
+        let b = ZMat::from_fn(6, 6, |_, _| rng.cnormal());
+        let got = d.zgemm(&a, &b).unwrap();
+        let want = linalg::zgemm_naive(&a, &b).unwrap();
+        let scale = want.data().iter().fold(0.0f64, |mx, z| mx.max(z.abs()));
+        for (g, w) in got.data().iter().zip(want.data()) {
+            assert!((*g - *w).abs() < 1e-12 * scale, "fp64 fallback accuracy");
+        }
+        let rep = d.report();
+        let (_, s) = rep.sites.iter().next().unwrap();
+        assert!(s.cert_escalations >= 1);
+        assert_eq!(s.cert_fp64, 1);
+    }
+
+    #[test]
+    fn crash_dump_source_renders_through_a_weak_dispatcher() {
+        let d = std::sync::Arc::new(host_dispatcher(ComputeMode::Dgemm));
+        let mut rng = Rng::new(24);
+        let a = rand_mat(&mut rng, 8, 8);
+        d.dgemm(&a, &a.clone()).unwrap();
+        d.enable_crash_dump();
+        // The crash-safe path renders without touching blocking locks.
+        let rep = d.try_report().expect("uncontended locks");
+        assert_eq!(rep.total_calls, 1);
+        super::super::crash::clear_crash_report_source();
     }
 
     #[test]

@@ -105,26 +105,29 @@ impl Default for KernelSelector {
 impl KernelSelector {
     /// Default selector with `OZACCEL_HOST_KERNEL` and `OZACCEL_SIMD`
     /// applied on top (threads already honour `OZACCEL_THREADS`
-    /// through [`KernelConfig::default`]).  Unparseable values keep the
-    /// default but warn — `Default` cannot fail loudly the way
-    /// `RunConfig::apply_env` does.
+    /// through [`KernelConfig::default`]).  Malformed values abort with
+    /// the uniform [`crate::util::env`] message — a typo'd selector
+    /// must never silently run the default kernel as if nothing were
+    /// wrong.
     pub fn from_env() -> Self {
         let mut sel = KernelSelector::default();
         if let Ok(v) = std::env::var("OZACCEL_HOST_KERNEL") {
             match HostKernel::parse(&v) {
                 Some(k) => sel.kernel = k,
-                None => log::warn!(
-                    "ignoring invalid OZACCEL_HOST_KERNEL={v:?} \
-                     (expected naive|blocked|simd|auto)"
+                None => crate::util::env::invalid(
+                    "OZACCEL_HOST_KERNEL",
+                    &v,
+                    "naive|blocked|simd|auto",
                 ),
             }
         }
         if let Ok(v) = std::env::var("OZACCEL_SIMD") {
             match SimdSelect::parse(&v) {
                 Some(s) => sel.config.simd = s,
-                None => log::warn!(
-                    "ignoring invalid OZACCEL_SIMD={v:?} \
-                     (expected scalar|auto|avx2|avx512|neon)"
+                None => crate::util::env::invalid(
+                    "OZACCEL_SIMD",
+                    &v,
+                    "scalar|auto|avx2|avx512|neon",
                 ),
             }
         }

@@ -28,6 +28,7 @@
 
 mod adaptive;
 mod callsite;
+pub mod crash;
 mod datamove;
 mod dispatcher;
 mod kernel_select;
@@ -37,8 +38,10 @@ mod stats;
 #[allow(deprecated)]
 pub use adaptive::AdaptivePolicy;
 pub use callsite::{BatchCallInfo, CallMeasurement, CallSiteId, CallSiteStats, SiteRegistry};
+pub use crash::{clear_crash_report_source, set_crash_report_source};
 pub use datamove::{BufferId, DataMoveStrategy, MemModel, Residency};
 pub use dispatcher::{call_site, DispatchConfig, Dispatcher};
+pub(crate) use dispatcher::Finished;
 pub use kernel_select::{HostCallInfo, HostKernel, KernelSelector};
 pub use policy::{emulation_work_factor, OffloadDecision, RoutingPolicy};
 pub use stats::{GemmKind, Report};

@@ -65,7 +65,7 @@ impl Report {
             self.gpu_name
         ));
         out.push_str(&format!(
-            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>7} {:>5} {:>10} {:>9} {:>7} {:>9} {:>13}\n",
+            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>7} {:>5} {:>10} {:>9} {:>7} {:>9} {:>13} {:>10} {:>5}\n",
             "call site",
             "calls",
             "offload",
@@ -80,11 +80,13 @@ impl Report {
             "cache h/m",
             "splits",
             "probe_ms",
-            "batch"
+            "batch",
+            "cert",
+            "wide"
         ));
         for (site, s) in self.sites.iter() {
             out.push_str(&format!(
-                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>7} {:>5} {:>9.4}s {:>9} {:>7} {:>9.2} {:>13}\n",
+                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>7} {:>5} {:>9.4}s {:>9} {:>7} {:>9.2} {:>13} {:>10} {:>5}\n",
                 site,
                 s.calls,
                 s.offloaded,
@@ -100,6 +102,8 @@ impl Report {
                 s.splits_cell(),
                 s.probe_s * 1e3,
                 s.batch_cell(),
+                s.cert_cell(),
+                s.wide_calls,
             ));
         }
         // Per-site split trajectories (executed counts, in call order)
@@ -196,6 +200,10 @@ mod tests {
                     pack_reuse: 0,
                     lead: false,
                 }),
+                cert_checks: 2,
+                cert_escalations: 1,
+                cert_fp64: false,
+                wide: true,
                 ..Default::default()
             },
         );
@@ -238,6 +246,12 @@ mod tests {
         assert!(
             txt.contains("splits trajectory") && txt.contains("4->7"),
             "moved sites get a trajectory line under the table"
+        );
+        assert!(txt.contains("cert"), "header shows the certification column");
+        assert!(txt.contains("wide"), "header shows the overflow-escape column");
+        assert!(
+            txt.contains("2c/1e/0f"),
+            "certification checks/escalations/fp64 surfaced per site"
         );
         assert!((r.modeled_total_s() - 0.11).abs() < 1e-12);
     }

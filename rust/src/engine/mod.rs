@@ -52,10 +52,11 @@ mod ticket;
 
 pub use ticket::{wait_all, GemmTicket};
 
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::Dispatcher;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::linalg::{Mat, ZMat};
 use crate::ozaki::ComputeMode;
 
@@ -92,23 +93,25 @@ impl Default for BatchConfig {
 
 impl BatchConfig {
     /// Defaults with `OZACCEL_BATCH_MAX_PENDING` /
-    /// `OZACCEL_BATCH_MAX_BYTES` applied on top.  Unparseable or zero
-    /// values keep the default but warn — mirroring
-    /// [`crate::coordinator::KernelSelector::from_env`], `Default`
-    /// cannot fail loudly the way `RunConfig::apply_env` does.
+    /// `OZACCEL_BATCH_MAX_BYTES` applied on top.  Malformed or zero
+    /// values abort with the uniform [`crate::util::env`] message —
+    /// a misconfigured environment must never silently run with
+    /// default bounds.
     pub fn from_env() -> Self {
         let mut cfg = BatchConfig::default();
-        if let Ok(v) = std::env::var("OZACCEL_BATCH_MAX_PENDING") {
-            match v.trim().parse::<usize>() {
-                Ok(n) if n >= 1 => cfg.max_pending = n,
-                _ => log::warn!("ignoring invalid OZACCEL_BATCH_MAX_PENDING={v:?} (want >= 1)"),
-            }
+        if let Some(n) = crate::util::env::parse_env_checked::<usize>(
+            "OZACCEL_BATCH_MAX_PENDING",
+            "an integer >= 1",
+            |&n| n >= 1,
+        ) {
+            cfg.max_pending = n;
         }
-        if let Ok(v) = std::env::var("OZACCEL_BATCH_MAX_BYTES") {
-            match v.trim().parse::<usize>() {
-                Ok(n) if n >= 1 => cfg.max_bytes = n,
-                _ => log::warn!("ignoring invalid OZACCEL_BATCH_MAX_BYTES={v:?} (want >= 1)"),
-            }
+        if let Some(n) = crate::util::env::parse_env_checked::<usize>(
+            "OZACCEL_BATCH_MAX_BYTES",
+            "an integer >= 1",
+            |&n| n >= 1,
+        ) {
+            cfg.max_bytes = n;
         }
         cfg
     }
@@ -121,6 +124,75 @@ impl BatchConfig {
             max_bytes: self.max_bytes.max(1),
         }
     }
+}
+
+/// Admission-control limits (`run.limits.*` / `OZACCEL_MAX_INFLIGHT`,
+/// `OZACCEL_SUBMIT_DEADLINE_MS`) — the backpressure surface on top of
+/// the flush policy.
+///
+/// Where [`BatchConfig`] bounds what the *queue* may hold (draining by
+/// making the submitter execute the backlog), these limits bound what
+/// the engine has **admitted and not yet settled** — queued requests
+/// plus buckets another thread is still executing.  At the ceiling, a
+/// blocking submit first services its own queue (the same
+/// deadlock-freedom rule as flush-on-`wait`), then waits up to the
+/// deadline for in-flight work to settle; on expiry the ticket settles
+/// with [`Error::Busy`].  The `try_submit_*` family instead refuses
+/// admission immediately, handing the caller a [`Pressure`] reading.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LimitsConfig {
+    /// Maximum admitted-but-unsettled requests; 0 disables admission
+    /// control (`run.limits.max_inflight`).
+    pub max_inflight: usize,
+    /// Milliseconds a blocking submit may wait for capacity before its
+    /// ticket settles with [`Error::Busy`]
+    /// (`run.limits.submit_deadline_ms`).
+    pub submit_deadline_ms: u64,
+}
+
+impl Default for LimitsConfig {
+    fn default() -> Self {
+        LimitsConfig {
+            max_inflight: 0,
+            submit_deadline_ms: 1000,
+        }
+    }
+}
+
+impl LimitsConfig {
+    /// Defaults with `OZACCEL_MAX_INFLIGHT` /
+    /// `OZACCEL_SUBMIT_DEADLINE_MS` applied on top (malformed values
+    /// abort with the uniform [`crate::util::env`] message).
+    pub fn from_env() -> Self {
+        let mut cfg = LimitsConfig::default();
+        if let Some(n) =
+            crate::util::env::parse_env::<usize>("OZACCEL_MAX_INFLIGHT", "an integer (0 = off)")
+        {
+            cfg.max_inflight = n;
+        }
+        if let Some(ms) = crate::util::env::parse_env::<u64>(
+            "OZACCEL_SUBMIT_DEADLINE_MS",
+            "a millisecond count",
+        ) {
+            cfg.submit_deadline_ms = ms;
+        }
+        cfg
+    }
+}
+
+/// Caller-visible admission pressure, returned by the `try_submit_*`
+/// family when the engine is at its [`LimitsConfig::max_inflight`]
+/// ceiling — the `WouldBlock` of the batch engine.
+#[derive(Clone, Copy, Debug)]
+pub struct Pressure {
+    /// Requests admitted and not yet settled.
+    pub inflight: usize,
+    /// The admission ceiling that refused this submission.
+    pub max_inflight: usize,
+    /// Requests currently queued (un-flushed).
+    pub pending: usize,
+    /// Operand bytes currently queued.
+    pub pending_bytes: usize,
 }
 
 /// Cumulative counters of one engine instance (tests, the PEAK report,
@@ -148,6 +220,11 @@ pub struct BatchStats {
     pub high_water_pending: usize,
     /// Largest operand byte count the queue ever held.
     pub high_water_bytes: usize,
+    /// `try_submit_*` refusals (admission pressure surfaced).
+    pub pressure_rejections: u64,
+    /// Blocking submits whose deadline expired (ticket settled
+    /// [`Error::Busy`]).
+    pub deadline_expiries: u64,
 }
 
 /// The batched asynchronous execution engine — one batch scope over a
@@ -157,25 +234,49 @@ pub struct BatchStats {
 pub struct Engine<'d> {
     disp: &'d Dispatcher,
     cfg: BatchConfig,
+    limits: LimitsConfig,
     queue: Mutex<Queue>,
     stats: Mutex<BatchStats>,
+    /// Requests admitted and not yet settled (queued + executing).
+    inflight: Mutex<usize>,
+    /// Signalled whenever settled work frees admission capacity.
+    capacity: Condvar,
 }
 
 impl<'d> Engine<'d> {
     /// Build an engine over `disp` with the given flush policy (bounds
-    /// are normalized to ≥ 1).
+    /// are normalized to ≥ 1); admission limits come from the
+    /// dispatcher's configuration.
     pub fn new(disp: &'d Dispatcher, cfg: BatchConfig) -> Self {
+        Engine::with_limits(disp, cfg, disp.limits())
+    }
+
+    /// [`Engine::new`] with explicit admission limits.
+    pub fn with_limits(disp: &'d Dispatcher, cfg: BatchConfig, limits: LimitsConfig) -> Self {
         Engine {
             disp,
             cfg: cfg.normalized(),
+            limits,
             queue: Mutex::new(Queue::new()),
             stats: Mutex::new(BatchStats::default()),
+            inflight: Mutex::new(0),
+            capacity: Condvar::new(),
         }
     }
 
     /// The flush policy this engine runs under.
     pub fn config(&self) -> BatchConfig {
         self.cfg
+    }
+
+    /// The admission limits this engine runs under.
+    pub fn limits(&self) -> LimitsConfig {
+        self.limits
+    }
+
+    /// Requests admitted and not yet settled (queued + executing).
+    pub fn inflight(&self) -> usize {
+        *self.inflight.lock().unwrap()
     }
 
     /// Queue one FP64 GEMM in the dispatcher's configured mode,
@@ -252,6 +353,66 @@ impl<'d> Engine<'d> {
         self.submit_complex(site, mode, false, a.into(), b.into())
     }
 
+    /// [`Engine::submit_dgemm_at`] that refuses instead of waiting when
+    /// the engine is at its admission ceiling: `Err(Pressure)` means
+    /// nothing was queued and the caller should flush, wait, or back
+    /// off.  (Shape errors still return a ticket carrying the error —
+    /// they consume no admission capacity.)
+    pub fn try_submit_dgemm_at(
+        &self,
+        site: crate::coordinator::CallSiteId,
+        mode: ComputeMode,
+        a: impl Into<std::sync::Arc<Mat<f64>>>,
+        b: impl Into<std::sync::Arc<Mat<f64>>>,
+    ) -> std::result::Result<GemmTicket<'_, Mat<f64>>, Pressure> {
+        let (a, b) = (a.into(), b.into());
+        let slot = Slot::new();
+        if let Some(e) = shape_check(a.rows(), a.cols(), b.rows(), b.cols(), "dgemm") {
+            slot.fill(Err(e));
+            return Ok(GemmTicket::new(self, slot));
+        }
+        self.try_admit()?;
+        self.enqueue(Request {
+            site,
+            mode,
+            governed: true,
+            payload: Payload::Real {
+                a,
+                b,
+                slot: slot.clone(),
+            },
+        });
+        Ok(GemmTicket::new(self, slot))
+    }
+
+    /// Complex twin of [`Engine::try_submit_dgemm_at`].
+    pub fn try_submit_zgemm_at(
+        &self,
+        site: crate::coordinator::CallSiteId,
+        mode: ComputeMode,
+        a: impl Into<std::sync::Arc<ZMat>>,
+        b: impl Into<std::sync::Arc<ZMat>>,
+    ) -> std::result::Result<GemmTicket<'_, ZMat>, Pressure> {
+        let (a, b) = (a.into(), b.into());
+        let slot = Slot::new();
+        if let Some(e) = shape_check(a.rows(), a.cols(), b.rows(), b.cols(), "zgemm") {
+            slot.fill(Err(e));
+            return Ok(GemmTicket::new(self, slot));
+        }
+        self.try_admit()?;
+        self.enqueue(Request {
+            site,
+            mode,
+            governed: true,
+            payload: Payload::Complex {
+                a,
+                b,
+                slot: slot.clone(),
+            },
+        });
+        Ok(GemmTicket::new(self, slot))
+    }
+
     fn submit_real(
         &self,
         site: crate::coordinator::CallSiteId,
@@ -261,14 +422,12 @@ impl<'d> Engine<'d> {
         b: std::sync::Arc<Mat<f64>>,
     ) -> GemmTicket<'_, Mat<f64>> {
         let slot = Slot::new();
-        if a.cols() != b.rows() {
-            slot.fill(Err(crate::error::Error::Shape(format!(
-                "batch dgemm: {}x{} @ {}x{}",
-                a.rows(),
-                a.cols(),
-                b.rows(),
-                b.cols()
-            ))));
+        if let Some(e) = shape_check(a.rows(), a.cols(), b.rows(), b.cols(), "dgemm") {
+            slot.fill(Err(e));
+            return GemmTicket::new(self, slot);
+        }
+        if let Err(e) = self.admit_blocking() {
+            slot.fill(Err(e));
             return GemmTicket::new(self, slot);
         }
         self.enqueue(Request {
@@ -293,14 +452,12 @@ impl<'d> Engine<'d> {
         b: std::sync::Arc<ZMat>,
     ) -> GemmTicket<'_, ZMat> {
         let slot = Slot::new();
-        if a.cols() != b.rows() {
-            slot.fill(Err(crate::error::Error::Shape(format!(
-                "batch zgemm: {}x{} @ {}x{}",
-                a.rows(),
-                a.cols(),
-                b.rows(),
-                b.cols()
-            ))));
+        if let Some(e) = shape_check(a.rows(), a.cols(), b.rows(), b.cols(), "zgemm") {
+            slot.fill(Err(e));
+            return GemmTicket::new(self, slot);
+        }
+        if let Err(e) = self.admit_blocking() {
+            slot.fill(Err(e));
             return GemmTicket::new(self, slot);
         }
         self.enqueue(Request {
@@ -314,6 +471,73 @@ impl<'d> Engine<'d> {
             },
         });
         GemmTicket::new(self, slot)
+    }
+
+    /// Non-blocking admission: reserve one in-flight slot or report the
+    /// pressure that refused it.
+    fn try_admit(&self) -> std::result::Result<(), Pressure> {
+        let max = self.limits.max_inflight;
+        let mut n = self.inflight.lock().unwrap();
+        if max == 0 || *n < max {
+            *n += 1;
+            return Ok(());
+        }
+        let inflight = *n;
+        drop(n);
+        self.stats.lock().unwrap().pressure_rejections += 1;
+        Err(Pressure {
+            inflight,
+            max_inflight: max,
+            pending: self.pending(),
+            pending_bytes: self.pending_bytes(),
+        })
+    }
+
+    /// Blocking admission: at the ceiling the submitter first services
+    /// its own queue (never waiting on work only it would run — the
+    /// flush-on-`wait` rule), then parks until another thread's
+    /// in-flight work settles or the configured deadline expires
+    /// ([`Error::Busy`]).
+    fn admit_blocking(&self) -> Result<()> {
+        let max = self.limits.max_inflight;
+        {
+            let mut n = self.inflight.lock().unwrap();
+            if max == 0 || *n < max {
+                *n += 1;
+                return Ok(());
+            }
+        }
+        self.flush()?;
+        let deadline = Instant::now() + Duration::from_millis(self.limits.submit_deadline_ms);
+        let mut n = self.inflight.lock().unwrap();
+        loop {
+            if *n < max {
+                *n += 1;
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(n);
+                self.stats.lock().unwrap().deadline_expiries += 1;
+                return Err(Error::Busy(format!(
+                    "admission ceiling max_inflight={max} still held after {} ms",
+                    self.limits.submit_deadline_ms
+                )));
+            }
+            n = self.capacity.wait_timeout(n, deadline - now).unwrap().0;
+        }
+    }
+
+    /// Release `count` in-flight reservations (their requests settled)
+    /// and wake parked submitters.
+    fn settle(&self, count: usize) {
+        if count == 0 {
+            return;
+        }
+        let mut n = self.inflight.lock().unwrap();
+        *n = n.saturating_sub(count);
+        drop(n);
+        self.capacity.notify_all();
     }
 
     /// Enqueue under the flush policy.  The bound check, any draining
@@ -354,8 +578,12 @@ impl<'d> Engine<'d> {
         if batch.is_empty() {
             return;
         }
+        let count = batch.len();
         self.stats.lock().unwrap().flushes += 1;
         let _ = scheduler::execute(self.disp, batch, &self.stats);
+        // Every drained request is settled (result or error) by now;
+        // release their admission reservations.
+        self.settle(count);
     }
 
     /// Execute everything queued: coalesce into shape buckets, run each
@@ -390,6 +618,16 @@ impl<'d> Engine<'d> {
     /// The dispatcher this scope executes through.
     pub fn dispatcher(&self) -> &'d Dispatcher {
         self.disp
+    }
+}
+
+/// Shape gate shared by every submission path (admission is only
+/// consumed by well-formed requests).
+fn shape_check(m: usize, k: usize, k2: usize, n: usize, what: &str) -> Option<Error> {
+    if k != k2 {
+        Some(Error::Shape(format!("batch {what}: {m}x{k} @ {k2}x{n}")))
+    } else {
+        None
     }
 }
 

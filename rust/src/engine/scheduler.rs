@@ -35,7 +35,7 @@ use crate::coordinator::{
 };
 use crate::error::{Error, Result};
 use crate::kernels::{
-    fused_ozaki_sweep_many, panel_cache, KernelConfig, Panels, SweepSpec, MR_I8,
+    fused_ozaki_sweep_many_isolated, is_wide, panel_cache, KernelConfig, Panels, SweepSpec, MR_I8,
 };
 use crate::linalg::{zcombine, Mat};
 use crate::ozaki::{diagonal_weights, prepare_a, prepare_b, unscale, ComputeMode};
@@ -154,20 +154,35 @@ fn execute_bucket(
 
 /// Re-issue members one by one through the dispatcher's sequential
 /// entry points (bit-identical by definition; no batch accounting).
+/// Each call runs inside `catch_unwind`: a panicking dispatch (kernel
+/// bug, injected worker fault) becomes *that member's* error — the
+/// draining thread survives to settle every remaining ticket instead
+/// of unwinding with bucket-mates' slots still empty.
 fn direct_all(disp: &Dispatcher, members: Vec<Request>, stats: &Mutex<BatchStats>) -> Result<()> {
     let n = members.len() as u64;
     for req in members {
         match req.payload {
             Payload::Real { a, b, slot } => {
-                slot.fill(disp.dgemm_mode_at(req.site, req.mode, &a, &b, req.governed));
+                slot.fill(isolate(|| disp.dgemm_mode_at(req.site, req.mode, &a, &b, req.governed)));
             }
             Payload::Complex { a, b, slot } => {
-                slot.fill(disp.zgemm_mode_at(req.site, req.mode, &a, &b, req.governed));
+                slot.fill(isolate(|| disp.zgemm_mode_at(req.site, req.mode, &a, &b, req.governed)));
             }
         }
     }
     stats.lock().unwrap().direct_calls += n;
     Ok(())
+}
+
+/// Run one member's dispatch, converting a panic into its error.
+fn isolate<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => Err(Error::Numerical(format!(
+            "dispatch panicked: {}",
+            crate::kernels::int8::panic_message(payload.as_ref())
+        ))),
+    }
 }
 
 /// Fill every member's slot with (a copy of) one execution error.
@@ -286,16 +301,16 @@ fn fused_real(
             weights: &weights,
         })
         .collect();
-    let mut results = match fused_ozaki_sweep_many(&specs, &ecfg) {
+    // Per-member isolation: a panicking band (kernel bug or injected
+    // worker fault) fails only its owning member below; the outer Err
+    // is batch-level validation, which rejects before any compute.
+    let results = match fused_ozaki_sweep_many_isolated(&specs, &ecfg) {
         Ok(r) => r,
         Err(e) => {
             fail_all(&group, &format!("batch bucket execution failed: {e}"));
             return Ok(());
         }
     };
-    for (c, ((_, ea), (_, eb))) in results.iter_mut().zip(&prepared) {
-        unscale(c, ea, eb);
-    }
     let measured = t0.elapsed().as_secs_f64();
     let share = measured / group.len() as f64;
     let reuse_total: u64 = memo.hits_by_member.iter().sum();
@@ -306,44 +321,52 @@ fn fused_real(
         full_info: group_host_info(disp, key.m, cache_before),
         attached_full: false,
     };
-    for ((req, result), reuse) in group
-        .iter()
-        .zip(results)
-        .zip(memo.hits_by_member.iter().copied())
-    {
+    for (mi, (req, member)) in group.iter().zip(results).enumerate() {
         let Payload::Real { a, b, slot } = &req.payload else {
             unreachable!("real bucket holds real payloads");
         };
-        // A probe failure is that member's error (mirroring the
-        // sequential path, where it propagates before the call is
-        // recorded) — it must not abort the rest of the bucket or
-        // leave later members' tickets unsettled.
-        let probe_s = if req.governed {
-            match disp.probe_real(req.site, mode, a, b, &result) {
-                Ok(s) => s,
-                Err(e) => {
-                    slot.fill(Err(e));
-                    continue;
-                }
+        let mut c = match member {
+            Ok(c) => c,
+            Err(e) => {
+                slot.fill(Err(e));
+                continue;
             }
-        } else {
-            0.0
         };
-        let batch = rec.batch_info(req.site, reuse);
+        let ((_, ea), (_, eb)) = &prepared[mi];
+        unscale(&mut c, ea, eb);
+        // Finish exactly as the sequential path would: a-posteriori
+        // probe in feedback mode, the certify/escalate loop in
+        // certified mode.  A finish failure is that member's error
+        // (mirroring the sequential path, where it propagates before
+        // the call is recorded) — it must not abort the rest of the
+        // bucket or leave later members' tickets unsettled.
+        let fin = match disp.finish_real(req.site, mode, a, b, c, req.governed) {
+            Ok(f) => f,
+            Err(e) => {
+                slot.fill(Err(e));
+                continue;
+            }
+        };
+        let batch = rec.batch_info(req.site, memo.hits_by_member[mi]);
         let host = rec.host_info();
+        let fsplits = fin.mode.splits().unwrap_or(0);
         disp.record_measurement(
             req.site,
             CallMeasurement {
                 flops: gemm_flops(key.m, key.k, key.n),
-                measured_s: share,
-                splits,
-                probe_s,
+                measured_s: share + fin.extra_s,
+                splits: fsplits,
+                probe_s: fin.probe_s,
                 host: Some(host),
                 batch: Some(batch),
+                cert_checks: fin.cert_checks,
+                cert_escalations: fin.cert_escalations,
+                cert_fp64: fin.cert_fp64,
+                wide: matches!(fin.mode, ComputeMode::Int8 { .. }) && is_wide(key.k, fsplits),
                 ..Default::default()
             },
         );
-        slot.fill(Ok(result));
+        slot.fill(Ok(fin.result));
     }
     note_fused(stats, group.len(), reuse_total);
     Ok(())
@@ -407,7 +430,10 @@ fn fused_complex(
             })
         })
         .collect();
-    let products = match fused_ozaki_sweep_many(&specs, &ecfg) {
+    // Per-member isolation: a member fails if *any* of its four
+    // component sweeps failed; other members' components are computed
+    // exactly as their standalone sweeps would be, bit for bit.
+    let products = match fused_ozaki_sweep_many_isolated(&specs, &ecfg) {
         Ok(r) => r,
         Err(e) => {
             fail_all(&group, &format!("batch bucket execution failed: {e}"));
@@ -415,17 +441,22 @@ fn fused_complex(
         }
     };
     let mut products = products.into_iter();
-    let mut combined: Vec<crate::linalg::ZMat> = Vec::with_capacity(group.len());
+    let mut combined: Vec<Result<crate::linalg::ZMat>> = Vec::with_capacity(group.len());
     for z in &prepared {
-        let unscaled = |mut c: Mat<f64>, ea: &Prepared, eb: &Prepared| {
-            unscale(&mut c, &ea.1, &eb.1);
-            c
-        };
-        let rr = unscaled(products.next().expect("rr"), &z.ar, &z.br);
-        let ii = unscaled(products.next().expect("ii"), &z.ai, &z.bi);
-        let ri = unscaled(products.next().expect("ri"), &z.ar, &z.bi);
-        let ir = unscaled(products.next().expect("ir"), &z.ai, &z.br);
-        combined.push(zcombine(&rr, &ii, &ri, &ir));
+        let quad: Result<Vec<Mat<f64>>> = (0..4)
+            .map(|_| products.next().expect("four components per member"))
+            .collect();
+        combined.push(quad.map(|mut v| {
+            let unscaled = |mut c: Mat<f64>, ea: &Prepared, eb: &Prepared| {
+                unscale(&mut c, &ea.1, &eb.1);
+                c
+            };
+            let ir = unscaled(v.pop().expect("ir"), &z.ai, &z.br);
+            let ri = unscaled(v.pop().expect("ri"), &z.ar, &z.bi);
+            let ii = unscaled(v.pop().expect("ii"), &z.ai, &z.bi);
+            let rr = unscaled(v.pop().expect("rr"), &z.ar, &z.br);
+            zcombine(&rr, &ii, &ri, &ir)
+        }));
     }
     let measured = t0.elapsed().as_secs_f64();
     let share = measured / group.len() as f64;
@@ -437,7 +468,7 @@ fn fused_complex(
         full_info: group_host_info(disp, key.m, cache_before),
         attached_full: false,
     };
-    for ((req, result), reuse) in group
+    for ((req, member), reuse) in group
         .iter()
         .zip(combined)
         .zip(memo.hits_by_member.iter().copied())
@@ -445,38 +476,47 @@ fn fused_complex(
         let Payload::Complex { a, b, slot } = &req.payload else {
             unreachable!("complex bucket holds complex payloads");
         };
-        // Probe failure = this member's error, never the bucket's (see
-        // the real path above).
-        let probe_s = if req.governed {
-            match disp.probe_complex(req.site, mode, a, b, &result) {
-                Ok(s) => s,
-                Err(e) => {
-                    slot.fill(Err(e));
-                    continue;
-                }
+        let result = match member {
+            Ok(c) => c,
+            Err(e) => {
+                slot.fill(Err(e));
+                continue;
             }
-        } else {
-            0.0
+        };
+        // Finish failure = this member's error, never the bucket's
+        // (see the real path above).
+        let fin = match disp.finish_complex(req.site, mode, a, b, result, req.governed) {
+            Ok(f) => f,
+            Err(e) => {
+                slot.fill(Err(e));
+                continue;
+            }
         };
         // PEAK accounting keeps the 4-real-GEMM decomposition, exactly
         // like the dispatcher's fused complex host path.
         let batch = rec.batch_info(req.site, reuse);
+        let fsplits = fin.mode.splits().unwrap_or(0);
+        let wide = matches!(fin.mode, ComputeMode::Int8 { .. }) && is_wide(key.k, fsplits);
         for i in 0..4 {
             let host = rec.host_info();
             disp.record_measurement(
                 req.site,
                 CallMeasurement {
                     flops: gemm_flops(key.m, key.k, key.n),
-                    measured_s: share / 4.0,
-                    splits,
-                    probe_s: if i == 0 { probe_s } else { 0.0 },
+                    measured_s: (share + fin.extra_s) / 4.0,
+                    splits: fsplits,
+                    probe_s: if i == 0 { fin.probe_s } else { 0.0 },
                     host: Some(host),
                     batch: if i == 0 { Some(batch) } else { None },
+                    cert_checks: if i == 0 { fin.cert_checks } else { 0 },
+                    cert_escalations: if i == 0 { fin.cert_escalations } else { 0 },
+                    cert_fp64: i == 0 && fin.cert_fp64,
+                    wide,
                     ..Default::default()
                 },
             );
         }
-        slot.fill(Ok(result));
+        slot.fill(Ok(fin.result));
     }
     note_fused(stats, group.len(), reuse_total);
     Ok(())

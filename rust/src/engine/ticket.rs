@@ -52,6 +52,23 @@ impl<T> Slot<T> {
         }
     }
 
+    /// Take the result if it is deposited within `timeout`; `None` on
+    /// expiry (the slot stays usable — a later deposit still lands).
+    fn take_timeout(&self, timeout: std::time::Duration) -> Option<Result<T>> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = s.take() {
+                return Some(r);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            s = self.cv.wait_timeout(s, deadline - now).unwrap().0;
+        }
+    }
+
     fn is_filled(&self) -> bool {
         self.state.lock().unwrap().is_some()
     }
@@ -92,6 +109,28 @@ impl<'e, T> GemmTicket<'e, T> {
             self.host.flush_now()?;
         }
         self.slot.take_blocking()
+    }
+
+    /// [`GemmTicket::wait`] with a bound: flushes the engine's queue
+    /// first (same deadlock-freedom argument — this thread executes its
+    /// own backlog rather than waiting on it), then parks at most
+    /// `timeout` for another thread's in-flight bucket to settle the
+    /// slot.  On expiry the ticket is handed back unconsumed, so the
+    /// caller can retry, keep polling [`GemmTicket::is_ready`], or fall
+    /// back to a plain `wait`.
+    pub fn wait_timeout(
+        self,
+        timeout: std::time::Duration,
+    ) -> std::result::Result<Result<T>, Self> {
+        if !self.slot.is_filled() {
+            if let Err(e) = self.host.flush_now() {
+                return Ok(Err(e));
+            }
+        }
+        match self.slot.take_timeout(timeout) {
+            Some(r) => Ok(r),
+            None => Err(self),
+        }
     }
 }
 

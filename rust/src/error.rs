@@ -30,6 +30,10 @@ pub enum Error {
     /// Numerical failure (singular pivot, non-convergence, overflow, ...).
     Numerical(String),
 
+    /// Engine admission refused or timed out (backpressure): the queue
+    /// is at its `[limits]` bound and no capacity freed up in time.
+    Busy(String),
+
     /// PJRT / XLA runtime failure.
     Xla(String),
 
@@ -59,6 +63,7 @@ impl fmt::Display for Error {
             ),
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Numerical(msg) => write!(f, "numerical error: {msg}"),
+            Error::Busy(msg) => write!(f, "engine busy: {msg}"),
             Error::Xla(msg) => write!(f, "xla runtime: {msg}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
@@ -108,6 +113,10 @@ mod tests {
         };
         assert!(e.to_string().contains("ozdg splits=6 shape 64x64x64"));
         assert!(Error::Mode("fp32".into()).to_string().contains("fp64_int8_<3..18>"));
+        assert_eq!(
+            Error::Busy("queue full".into()).to_string(),
+            "engine busy: queue full"
+        );
     }
 
     #[test]

@@ -1,0 +1,345 @@
+//! Deterministic fault injection for the chaos suite (the `failpoints`
+//! cargo feature).
+//!
+//! The robustness layer's claims — a panicking band fails only its own
+//! ticket, certified mode never ships an uncertified result, the pool
+//! and panel cache survive member failures — are only testable if the
+//! failures can be *provoked on demand*.  This module plants named
+//! injection sites at the five failure domains:
+//!
+//! | site            | where it fires                                   | effect            |
+//! |-----------------|--------------------------------------------------|-------------------|
+//! | `worker_panic`  | per-member band task of the fused batch sweep    | `panic!`          |
+//! | `slice_overflow`| INT8 sweep entry ([`crate::kernels::int8`])      | `Error::Numerical`|
+//! | `cache_corrupt` | packed-panel cache hit ([`crate::ozaki`] prepare)| forced repack     |
+//! | `probe_fail`    | dispatcher FP64 row probe                        | `Error::Numerical`|
+//! | `offload_error` | PJRT offload submission                          | `Error::Xla`      |
+//!
+//! Firing is **deterministic**: each armed site draws from
+//! [`crate::util::rng::mix64`] over `seed ⊕ site-tag ⊕ draw-ordinal`,
+//! so a given `(prob, seed)` arming fires on exactly the same draws in
+//! every run, on every thread.  Sites are armed programmatically
+//! ([`arm`] / [`disarm_all`], used by the chaos tests) or from the
+//! environment: `OZACCEL_FAULTS=site:prob:seed[,site:prob:seed...]`,
+//! e.g. `OZACCEL_FAULTS=worker_panic:0.25:7,probe_fail:1:3`.
+//!
+//! Without the `failpoints` feature every probe compiles to a constant
+//! `false` (the hooks cost nothing on release builds) and
+//! `OZACCEL_FAULTS` is ignored.
+
+use crate::error::{Error, Result};
+
+/// A named fault-injection site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Panic inside a worker-pool band task (one batch member's band).
+    WorkerPanic,
+    /// INT8 slice-accumulator overflow reported by the fused sweep.
+    SliceOverflow,
+    /// Packed-panel cache corruption: a hit is treated as detected
+    /// corruption and repacked (results stay bit-identical).
+    CacheCorrupt,
+    /// The a-posteriori FP64 row probe fails.
+    ProbeFail,
+    /// The PJRT offload submission fails.
+    OffloadError,
+}
+
+impl FaultSite {
+    /// Every site, in table order.
+    pub const ALL: [FaultSite; 5] = [
+        FaultSite::WorkerPanic,
+        FaultSite::SliceOverflow,
+        FaultSite::CacheCorrupt,
+        FaultSite::ProbeFail,
+        FaultSite::OffloadError,
+    ];
+
+    /// Canonical snake_case name (the `OZACCEL_FAULTS` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::WorkerPanic => "worker_panic",
+            FaultSite::SliceOverflow => "slice_overflow",
+            FaultSite::CacheCorrupt => "cache_corrupt",
+            FaultSite::ProbeFail => "probe_fail",
+            FaultSite::OffloadError => "offload_error",
+        }
+    }
+
+    /// Parse a canonical site name (loud on anything else).
+    pub fn parse(s: &str) -> Result<Self> {
+        let want = s.trim().to_ascii_lowercase();
+        FaultSite::ALL
+            .into_iter()
+            .find(|site| site.name() == want)
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "bad fault site {s:?} (expected one of worker_panic | slice_overflow \
+                     | cache_corrupt | probe_fail | offload_error)"
+                ))
+            })
+    }
+
+    #[cfg(feature = "failpoints")]
+    fn index(self) -> usize {
+        FaultSite::ALL.iter().position(|&s| s == self).unwrap()
+    }
+
+    /// Stable per-site salt folded into the deterministic draw.
+    #[cfg(feature = "failpoints")]
+    fn tag(self) -> u64 {
+        // FNV-1a over the site name: stable across reorderings.
+        self.name()
+            .bytes()
+            .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+                (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3)
+            })
+    }
+}
+
+impl std::fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(feature = "failpoints")]
+mod plan {
+    use super::FaultSite;
+    use std::sync::{Mutex, OnceLock};
+
+    #[derive(Clone, Copy, Default)]
+    pub(super) struct Arm {
+        pub prob: f64,
+        pub seed: u64,
+        pub draws: u64,
+        pub fired: u64,
+    }
+
+    pub(super) fn registry() -> &'static Mutex<[Option<Arm>; 5]> {
+        static PLAN: OnceLock<Mutex<[Option<Arm>; 5]>> = OnceLock::new();
+        PLAN.get_or_init(|| {
+            let mut sites: [Option<Arm>; 5] = [None; 5];
+            if let Ok(spec) = std::env::var("OZACCEL_FAULTS") {
+                for (site, prob, seed) in super::parse_spec(&spec).unwrap_or_else(|e| {
+                    crate::util::env::invalid(
+                        "OZACCEL_FAULTS",
+                        &spec,
+                        &format!("site:prob:seed[,site:prob:seed...] — {e}"),
+                    )
+                }) {
+                    sites[site.index()] = Some(Arm {
+                        prob,
+                        seed,
+                        draws: 0,
+                        fired: 0,
+                    });
+                }
+            }
+            Mutex::new(sites)
+        })
+    }
+}
+
+/// Parse an `OZACCEL_FAULTS` specification into `(site, prob, seed)`
+/// triples.  `prob` must be a finite value in `[0, 1]`; `seed` a u64.
+pub fn parse_spec(spec: &str) -> Result<Vec<(FaultSite, f64, u64)>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let mut parts = entry.split(':');
+        let (site, prob, seed) = (parts.next(), parts.next(), parts.next());
+        if parts.next().is_some() {
+            return Err(Error::Config(format!(
+                "bad fault entry {entry:?} (expected site:prob:seed)"
+            )));
+        }
+        let site = FaultSite::parse(site.unwrap_or(""))?;
+        let prob: f64 = prob
+            .unwrap_or("")
+            .trim()
+            .parse()
+            .map_err(|_| Error::Config(format!("bad fault probability in {entry:?}")))?;
+        if !(0.0..=1.0).contains(&prob) {
+            return Err(Error::Config(format!(
+                "fault probability {prob} in {entry:?} outside [0, 1]"
+            )));
+        }
+        let seed: u64 = seed
+            .unwrap_or("")
+            .trim()
+            .parse()
+            .map_err(|_| Error::Config(format!("bad fault seed in {entry:?}")))?;
+        out.push((site, prob, seed));
+    }
+    Ok(out)
+}
+
+/// Arm `site` to fire with probability `prob` on a deterministic
+/// sequence derived from `seed` (resets the site's draw/fired
+/// counters).  No-op without the `failpoints` feature.
+pub fn arm(site: FaultSite, prob: f64, seed: u64) {
+    #[cfg(feature = "failpoints")]
+    {
+        plan::registry().lock().unwrap()[site.index()] = Some(plan::Arm {
+            prob: prob.clamp(0.0, 1.0),
+            seed,
+            draws: 0,
+            fired: 0,
+        });
+    }
+    #[cfg(not(feature = "failpoints"))]
+    let _ = (site, prob, seed);
+}
+
+/// Disarm every site (chaos tests call this between scenarios).
+pub fn disarm_all() {
+    #[cfg(feature = "failpoints")]
+    for slot in plan::registry().lock().unwrap().iter_mut() {
+        *slot = None;
+    }
+}
+
+/// How many times `site` has fired since it was (re-)armed.
+pub fn fired(site: FaultSite) -> u64 {
+    #[cfg(feature = "failpoints")]
+    {
+        return plan::registry().lock().unwrap()[site.index()]
+            .map(|a| a.fired)
+            .unwrap_or(0);
+    }
+    #[cfg(not(feature = "failpoints"))]
+    {
+        let _ = site;
+        0
+    }
+}
+
+/// Draw the site's next deterministic sample and report whether the
+/// fault fires.  Always `false` without the `failpoints` feature.
+#[inline]
+pub fn should_fire(site: FaultSite) -> bool {
+    #[cfg(feature = "failpoints")]
+    {
+        let mut sites = plan::registry().lock().unwrap();
+        if let Some(arm) = sites[site.index()].as_mut() {
+            arm.draws += 1;
+            let word = crate::util::rng::mix64(arm.seed ^ site.tag() ^ arm.draws);
+            let u = (word >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            if u < arm.prob {
+                arm.fired += 1;
+                return true;
+            }
+        }
+        false
+    }
+    #[cfg(not(feature = "failpoints"))]
+    {
+        let _ = site;
+        false
+    }
+}
+
+/// Panic here when `site` fires (the worker-panic injection hook).
+#[inline]
+pub fn maybe_panic(site: FaultSite) {
+    if should_fire(site) {
+        panic!("ozaccel fault injection: {}", site.name());
+    }
+}
+
+/// Fail here when `site` fires; `make_err` shapes the injected error so
+/// each site surfaces through its natural error variant.
+#[inline]
+pub fn maybe_fail(site: FaultSite, make_err: impl FnOnce(String) -> Error) -> Result<()> {
+    if should_fire(site) {
+        Err(make_err(format!("injected fault: {}", site.name())))
+    } else {
+        Ok(())
+    }
+}
+
+/// Serialize tests and chaos scenarios that arm the process-global
+/// registry (the test harness runs cases concurrently; two armed plans
+/// interleaving would make the deterministic draws meaningless).
+/// Poisoning is ignored — a failed scenario must not cascade.
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_lock() -> std::sync::MutexGuard<'static, ()> {
+        test_guard()
+    }
+
+    #[test]
+    fn site_names_roundtrip_and_reject() {
+        for s in FaultSite::ALL {
+            assert_eq!(FaultSite::parse(s.name()).unwrap(), s);
+            assert_eq!(format!("{s}"), s.name());
+        }
+        for bad in ["", "panic", "worker-panic", "cache"] {
+            assert!(FaultSite::parse(bad).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        let plan = parse_spec("worker_panic:0.25:7, probe_fail:1:3").unwrap();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].0, FaultSite::WorkerPanic);
+        assert_eq!(plan[0].1, 0.25);
+        assert_eq!(plan[1].2, 3);
+        assert!(parse_spec("").unwrap().is_empty());
+        for bad in [
+            "worker_panic",
+            "worker_panic:0.5",
+            "worker_panic:2:1",
+            "worker_panic:x:1",
+            "worker_panic:0.5:y",
+            "worker_panic:0.5:1:9",
+            "bogus:0.5:1",
+        ] {
+            assert!(parse_spec(bad).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn armed_sites_fire_deterministically() {
+        let _g = plan_lock();
+        arm(FaultSite::ProbeFail, 0.5, 42);
+        let first: Vec<bool> = (0..64).map(|_| should_fire(FaultSite::ProbeFail)).collect();
+        let hits = fired(FaultSite::ProbeFail);
+        assert!(hits > 10 && hits < 54, "p=0.5 should fire ~half: {hits}");
+        arm(FaultSite::ProbeFail, 0.5, 42); // re-arm resets the sequence
+        let second: Vec<bool> = (0..64).map(|_| should_fire(FaultSite::ProbeFail)).collect();
+        assert_eq!(first, second, "same (prob, seed) must fire identically");
+        disarm_all();
+        assert!(!should_fire(FaultSite::ProbeFail));
+        assert_eq!(fired(FaultSite::ProbeFail), 0);
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn probability_extremes_always_and_never_fire() {
+        let _g = plan_lock();
+        arm(FaultSite::OffloadError, 1.0, 1);
+        assert!((0..32).all(|_| should_fire(FaultSite::OffloadError)));
+        arm(FaultSite::OffloadError, 0.0, 1);
+        assert!((0..32).all(|_| !should_fire(FaultSite::OffloadError)));
+        disarm_all();
+    }
+
+    #[test]
+    fn unarmed_sites_never_fire() {
+        let _g = plan_lock();
+        // Without the feature this also pins the no-op compile path.
+        assert!(!should_fire(FaultSite::CacheCorrupt));
+        maybe_panic(FaultSite::CacheCorrupt); // must not panic unarmed
+        assert!(maybe_fail(FaultSite::CacheCorrupt, Error::Numerical).is_ok());
+    }
+}

@@ -45,6 +45,15 @@ pub const NR_I8: usize = 8;
 /// `floor((2³¹−1) / 127²) = 133_144`.
 pub const MAX_EXACT_I32_TERMS: usize = (i32::MAX as usize) / (127 * 127);
 
+/// Whether a fused sweep over contraction size `k` with `splits` slices
+/// must take the `i64` wide-accumulator escape (worst-case terms per
+/// anti-diagonal accumulator: `K·splits`).  The single home of the
+/// predicate — the sweep drivers and the PEAK `wide` counter both
+/// consult it, so the report can never disagree with the kernel.
+pub fn is_wide(k: usize, splits: u32) -> bool {
+    k.saturating_mul(splits as usize) > MAX_EXACT_I32_TERMS
+}
+
 /// Integer accumulator of the INT8 microkernel: `i32` while the term
 /// count stays under [`MAX_EXACT_I32_TERMS`], `i64` beyond.  Both
 /// widths share one microkernel and one diagonal-accumulation body, so
@@ -164,13 +173,13 @@ pub fn fused_ozaki_sweep(
     cfg: &KernelConfig,
 ) -> Result<Mat<f64>> {
     check_sweep(ap, bp, weights)?;
+    crate::faults::maybe_fail(crate::faults::FaultSite::SliceOverflow, Error::Numerical)?;
     let (m, n) = (ap.rows(), bp.rows());
     let mut c = Mat::zeros(m, n);
     if m == 0 || n == 0 || weights.is_empty() {
         return Ok(c);
     }
-    // Worst-case terms per anti-diagonal accumulator: K·splits.
-    let wide = ap.k().saturating_mul(weights.len()) > MAX_EXACT_I32_TERMS;
+    let wide = is_wide(ap.k(), weights.len() as u32);
     let mk = cfg.simd.resolve().microkernel();
 
     run_bands(
@@ -243,11 +252,34 @@ fn check_sweep(ap: &Panels<i8>, bp: &Panels<i8>, weights: &[f64]) -> Result<()> 
 /// members.
 ///
 /// Validation is all-or-nothing: if any member's panels are malformed,
-/// the whole batch is rejected before any compute runs.
+/// the whole batch is rejected before any compute runs.  A member whose
+/// band *panics* mid-run fails the whole batch too (the panic payload
+/// becomes the error) — callers that need per-member isolation use
+/// [`fused_ozaki_sweep_many_isolated`].
 pub fn fused_ozaki_sweep_many(
     jobs: &[SweepSpec<'_>],
     cfg: &KernelConfig,
 ) -> Result<Vec<Mat<f64>>> {
+    fused_ozaki_sweep_many_isolated(jobs, cfg)?
+        .into_iter()
+        .collect()
+}
+
+/// [`fused_ozaki_sweep_many`] with **per-member failure domains**: the
+/// batch engine's chaos-hardened entry point.
+///
+/// Each member's band tasks run wrapped in `catch_unwind`, so a
+/// panicking band (a kernel bug, or an injected
+/// [`crate::faults::FaultSite::WorkerPanic`]) marks only its *owning
+/// member* failed — every other member's result is computed exactly as
+/// a standalone [`fused_ozaki_sweep`] would, bit for bit, and the
+/// worker pool and panel cache stay unpoisoned (the pool's own
+/// re-raise never sees a caught panic).  The outer `Result` still
+/// rejects malformed batches all-or-nothing, before any compute runs.
+pub fn fused_ozaki_sweep_many_isolated(
+    jobs: &[SweepSpec<'_>],
+    cfg: &KernelConfig,
+) -> Result<Vec<Result<Mat<f64>>>> {
     for spec in jobs {
         check_sweep(spec.ap, spec.bp, spec.weights)?;
     }
@@ -256,7 +288,7 @@ pub fn fused_ozaki_sweep_many(
         .map(|s| Mat::zeros(s.ap.rows(), s.bp.rows()))
         .collect();
     if jobs.is_empty() {
-        return Ok(outs);
+        return Ok(Vec::new());
     }
     let mk = cfg.simd.resolve().microkernel();
 
@@ -291,18 +323,52 @@ pub fn fused_ozaki_sweep_many(
         .iter_mut()
         .map(|c| SendPtr(c.data_mut().as_mut_ptr()))
         .collect();
+    // One failure slot per member: the first panicking band of a member
+    // records its payload; bucket-mates never observe it.
+    let failed: Vec<std::sync::Mutex<Option<String>>> =
+        jobs.iter().map(|_| std::sync::Mutex::new(None)).collect();
     pool::run(tasks.len(), cfg.threads.max(1), |ti| {
         let t = &tasks[ti];
         let spec = &jobs[t.job];
         let n = spec.bp.rows();
-        let wide = spec.ap.k().saturating_mul(spec.weights.len()) > MAX_EXACT_I32_TERMS;
+        let wide = is_wide(spec.ap.k(), spec.weights.len() as u32);
         // Safety: tasks of one job are disjoint in-bounds subslices of
         // that job's output; distinct jobs write distinct matrices.
         let slice =
             unsafe { std::slice::from_raw_parts_mut(bases[t.job].get().add(t.start), t.end - t.start) };
-        fused_band(slice, t.tile0, n, spec.ap, spec.bp, spec.weights, cfg, wide, mk);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::faults::maybe_panic(crate::faults::FaultSite::WorkerPanic);
+            fused_band(slice, t.tile0, n, spec.ap, spec.bp, spec.weights, cfg, wide, mk);
+        }));
+        if let Err(payload) = r {
+            let msg = panic_message(payload.as_ref());
+            let mut slot = failed[t.job].lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(msg);
+            }
+        }
     });
-    Ok(outs)
+    Ok(outs
+        .into_iter()
+        .zip(failed)
+        .map(|(c, f)| match f.into_inner().unwrap() {
+            None => Ok(c),
+            Some(msg) => Err(Error::Numerical(format!(
+                "fused sweep band panicked: {msg}"
+            ))),
+        })
+        .collect())
+}
+
+/// Render a caught panic payload (the two shapes `panic!` produces).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// One row band of the fused sweep.  `c_band` covers whole tiles
@@ -473,6 +539,7 @@ fn int8_band(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::{available_isas, SimdSelect};
     use crate::testing::Rng;
 
     fn rand_i8(rng: &mut Rng, r: usize, c: usize) -> Mat<i8> {
@@ -646,6 +713,182 @@ mod tests {
         assert!(fused_ozaki_sweep(&a, &b_badk, &[1.0], &cfg).is_err());
         let b_badtile = Panels::pack_planes(&[Mat::<i8>::zeros(2, 3)], MR_I8);
         assert!(fused_ozaki_sweep(&a, &b_badtile, &[1.0], &cfg).is_err());
+    }
+
+    #[test]
+    fn is_wide_flips_exactly_at_the_i32_term_bound() {
+        // The escape predicate is K·splits against the term budget —
+        // off-by-one here silently wraps i32 accumulators.
+        assert!(!is_wide(MAX_EXACT_I32_TERMS, 1));
+        assert!(is_wide(MAX_EXACT_I32_TERMS + 1, 1));
+        // It is the product that crosses, not K alone.
+        let k = MAX_EXACT_I32_TERMS / 3;
+        assert!(!is_wide(k, 3), "{}*3 <= bound", k);
+        assert!(is_wide(k + 1, 3), "{}*3 > bound", k + 1);
+        assert!(!is_wide(0, crate::ozaki::MAX_SPLITS));
+        // Absurd K must saturate, not wrap around to "narrow".
+        assert!(is_wide(usize::MAX, 2));
+    }
+
+    #[test]
+    fn every_isa_matches_scalar_across_the_wide_threshold() {
+        // The i32→i64 overflow escape must flip at exactly K·splits =
+        // MAX_EXACT_I32_TERMS on every vector path, with results
+        // bit-identical to the scalar oracle on both sides of the line.
+        let splits = 2usize;
+        let below = MAX_EXACT_I32_TERMS / splits;
+        let above = below + 1;
+        assert!(!is_wide(below, splits as u32));
+        assert!(is_wide(above, splits as u32));
+        let mut rng = Rng::new(0x51D3);
+        for k in [below, above] {
+            let pa: Vec<Mat<i8>> = (0..splits).map(|_| rand_i8(&mut rng, 5, k)).collect();
+            let pb: Vec<Mat<i8>> = (0..splits).map(|_| rand_i8(&mut rng, 9, k)).collect();
+            let ap = Panels::pack_planes(&pa, MR_I8);
+            let bp = Panels::pack_planes(&pb, NR_I8);
+            let w = [1.0f64, 0.5];
+            let scalar_cfg = KernelConfig {
+                simd: SimdSelect::Scalar,
+                threads: 1,
+                ..KernelConfig::default()
+            };
+            let want = fused_ozaki_sweep(&ap, &bp, &w, &scalar_cfg).unwrap();
+            for isa in available_isas() {
+                let cfg = KernelConfig {
+                    simd: SimdSelect::Force(isa),
+                    threads: 2,
+                    ..KernelConfig::default()
+                };
+                let got = fused_ozaki_sweep(&ap, &bp, &w, &cfg).unwrap();
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "isa={} k={k} wide={}",
+                    isa.name(),
+                    is_wide(k, splits as u32)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wide_escape_is_exact_at_saturation_on_every_isa() {
+        // Worst-case ±127 planes just past the bound: an i32 path would
+        // wrap; the i64 escape must hold the exact analytic value no
+        // matter which ISA the narrow path is routed to.
+        let splits = 2usize;
+        let k = MAX_EXACT_I32_TERMS / splits + 1;
+        let pa: Vec<Mat<i8>> = (0..splits)
+            .map(|_| Mat::from_fn(1, k, |_, _| 127i8))
+            .collect();
+        let pb: Vec<Mat<i8>> = (0..splits)
+            .map(|_| Mat::from_fn(1, k, |_, _| -127i8))
+            .collect();
+        let ap = Panels::pack_planes(&pa, MR_I8);
+        let bp = Panels::pack_planes(&pb, NR_I8);
+        // Anti-diagonals hold 1, 2, 1 plane pairs: Σ = 4·K·(−127²).
+        let want = -4.0 * k as f64 * 16129.0;
+        for isa in available_isas() {
+            let cfg = KernelConfig {
+                simd: SimdSelect::Force(isa),
+                threads: 1,
+                ..KernelConfig::default()
+            };
+            let c = fused_ozaki_sweep(&ap, &bp, &[1.0, 1.0], &cfg).unwrap();
+            assert_eq!(c.get(0, 0), want, "isa={}", isa.name());
+        }
+    }
+
+    #[test]
+    fn isolated_sweep_matches_the_collecting_wrapper_when_healthy() {
+        let mut rng = Rng::new(0xBA7E);
+        let pa = Panels::pack_planes(&[rand_i8(&mut rng, 6, 10)], MR_I8);
+        let pb = Panels::pack_planes(&[rand_i8(&mut rng, 7, 10)], NR_I8);
+        let w = [1.0f64];
+        let spec = || SweepSpec {
+            ap: &pa,
+            bp: &pb,
+            weights: &w,
+        };
+        let specs = [spec(), spec()];
+        let cfg = KernelConfig::default();
+        let isolated = fused_ozaki_sweep_many_isolated(&specs, &cfg).unwrap();
+        let plain = fused_ozaki_sweep_many(&specs, &cfg).unwrap();
+        assert_eq!(isolated.len(), 2);
+        for (got, want) in isolated.iter().zip(&plain) {
+            assert_eq!(got.as_ref().unwrap().data(), want.data());
+        }
+        assert!(fused_ozaki_sweep_many_isolated(&[], &cfg).unwrap().is_empty());
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn injected_band_panic_fails_only_its_own_member() {
+        use crate::faults::{arm, disarm_all, should_fire, FaultSite};
+        let _g = crate::faults::test_guard();
+        let mut rng = Rng::new(0xBA7F);
+        let packed: Vec<(Panels<i8>, Panels<i8>)> = (0..3)
+            .map(|_| {
+                (
+                    Panels::pack_planes(&[rand_i8(&mut rng, 5, 8)], MR_I8),
+                    Panels::pack_planes(&[rand_i8(&mut rng, 6, 8)], NR_I8),
+                )
+            })
+            .collect();
+        let w = [1.0f64];
+        let specs: Vec<SweepSpec<'_>> = packed
+            .iter()
+            .map(|(pa, pb)| SweepSpec {
+                ap: pa,
+                bp: pb,
+                weights: &w,
+            })
+            .collect();
+        // threads=1 → one band per member, run inline in member order,
+        // so draw i belongs to member i.  Find a seed whose first three
+        // draws mix fire and survive, replay it, and check the damage
+        // lands only where the plan says.
+        let seed = (0u64..64)
+            .find(|&s| {
+                arm(FaultSite::WorkerPanic, 0.5, s);
+                let p: Vec<bool> = (0..3).map(|_| should_fire(FaultSite::WorkerPanic)).collect();
+                p.iter().any(|&b| b) && !p.iter().all(|&b| b)
+            })
+            .expect("some seed in 0..64 mixes fire/survive at p=0.5");
+        arm(FaultSite::WorkerPanic, 0.5, seed);
+        let plan: Vec<bool> = (0..3).map(|_| should_fire(FaultSite::WorkerPanic)).collect();
+        let cfg = KernelConfig {
+            threads: 1,
+            ..KernelConfig::default()
+        };
+        let clean: Vec<Mat<f64>> = packed
+            .iter()
+            .map(|(pa, pb)| fused_ozaki_sweep(pa, pb, &w, &cfg).unwrap())
+            .collect();
+        arm(FaultSite::WorkerPanic, 0.5, seed); // replay the same draws
+        let got = fused_ozaki_sweep_many_isolated(&specs, &cfg).unwrap();
+        disarm_all();
+        for (i, (member, &fires)) in got.iter().zip(&plan).enumerate() {
+            match member {
+                Err(e) => {
+                    assert!(fires, "member {i} failed off-plan");
+                    assert!(
+                        e.to_string().contains("fault injection"),
+                        "member {i}: {e}"
+                    );
+                }
+                Ok(c) => {
+                    assert!(!fires, "member {i} survived off-plan");
+                    // Survivors are bit-identical to an uninjected run.
+                    assert_eq!(c.data(), clean[i].data(), "member {i}");
+                }
+            }
+        }
+        // The pool is unpoisoned: the same batch runs clean afterwards.
+        let healthy = fused_ozaki_sweep_many(&specs, &cfg).unwrap();
+        for (c, want) in healthy.iter().zip(&clean) {
+            assert_eq!(c.data(), want.data());
+        }
     }
 
     #[test]

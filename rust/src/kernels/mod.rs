@@ -50,8 +50,8 @@ pub mod simd;
 
 pub use fp64::{dgemm_blocked, zgemm_blocked, MR_C64, MR_F64, NR_C64, NR_F64};
 pub use int8::{
-    fused_ozaki_sweep, fused_ozaki_sweep_many, int8_gemm_blocked, SweepSpec,
-    MAX_EXACT_I32_TERMS, MR_I8, NR_I8,
+    fused_ozaki_sweep, fused_ozaki_sweep_many, fused_ozaki_sweep_many_isolated,
+    int8_gemm_blocked, is_wide, SweepSpec, MAX_EXACT_I32_TERMS, MR_I8, NR_I8,
 };
 pub use simd::{available_isas, Isa, Microkernel, SimdSelect};
 pub use pack::{
@@ -210,22 +210,22 @@ pub fn band_count(m_tiles: usize, threads: usize) -> usize {
 }
 
 /// Thread-count default: `OZACCEL_THREADS` if set to a positive
-/// integer (invalid values are ignored here; `config::RunConfig`
-/// rejects them loudly), otherwise the machine's available
+/// integer (a malformed or zero value aborts loudly — see
+/// [`crate::util::env`]), otherwise the machine's available
 /// parallelism.  Resolved once per process — `KernelConfig::default()`
 /// sits on the per-GEMM hot path and must not re-read the environment.
 pub fn default_threads() -> usize {
     static DEFAULT: once_cell::sync::Lazy<usize> = once_cell::sync::Lazy::new(|| {
-        if let Ok(v) = std::env::var("OZACCEL_THREADS") {
-            if let Ok(n) = v.trim().parse::<usize>() {
-                if n >= 1 {
-                    return n;
-                }
-            }
-        }
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
+        crate::util::env::parse_env_checked::<usize>(
+            "OZACCEL_THREADS",
+            "an integer >= 1",
+            |&n| n >= 1,
+        )
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
     });
     *DEFAULT
 }

@@ -131,6 +131,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod error;
 pub mod experiments;
+pub mod faults;
 pub mod kernels;
 pub mod linalg;
 pub mod logging;

@@ -117,7 +117,13 @@ fn prepare_cached(
         let mut cache = panel_cache::global().lock().unwrap();
         cache.ensure_capacity(cfg.panel_cache_mb << 20);
         if let Some(hit) = cache.lookup(side, rows, cols, splits, fp) {
-            return hit;
+            // Failpoint: model a detected cache corruption.  The fingerprint
+            // check caught a bad entry, so the hit is discarded and the
+            // operand repacked from source — results stay bit-identical,
+            // only the pack cost recurs.
+            if !crate::faults::should_fire(crate::faults::FaultSite::CacheCorrupt) {
+                return hit;
+            }
         }
     }
     let t0 = Instant::now();

@@ -140,7 +140,7 @@ impl Governor {
         // effective contraction size just grew, where the bound may now
         // demand more than the held count (same one-jump semantics as
         // the κ fast-attack; probes own the walk back down).
-        let s = if self.cfg.mode == PrecisionMode::Feedback && st.splits != 0 {
+        let s = if self.cfg.mode.is_feedback_like() && st.splits != 0 {
             if k_eff > st.k_dim {
                 st.splits
                     .max(seed_splits(&self.cfg, k_eff, st.kappa, st.calib))
@@ -172,7 +172,7 @@ impl Governor {
         let mut sites = self.sites.lock().unwrap();
         let st = sites.entry(site).or_insert_with(SiteState::new);
         st.kappa = kappa;
-        if self.cfg.mode == PrecisionMode::Feedback && st.splits != 0 && st.k_dim != 0 {
+        if self.cfg.mode.is_feedback_like() && st.splits != 0 && st.k_dim != 0 {
             let seed = seed_splits(&self.cfg, st.k_dim, kappa, st.calib);
             if seed > st.splits {
                 st.splits = seed;
@@ -182,19 +182,20 @@ impl Governor {
     }
 
     /// Register one emulated call at `site`; returns the probe ordinal
-    /// when this call should be probed (feedback mode only, every
-    /// `probe_period`-th call).  Under concurrent dispatch the ordinal
-    /// assignment follows arrival order, like the rest of the per-site
-    /// accounting.
+    /// when this call should be probed (feedback mode: every
+    /// `probe_period`-th call; certified mode: **every** call — the
+    /// probe doubles as the a-posteriori certificate, so no call may
+    /// skip it).  Under concurrent dispatch the ordinal assignment
+    /// follows arrival order, like the rest of the per-site accounting.
     pub fn should_probe(&self, site: SiteKey) -> Option<u64> {
-        if self.cfg.mode != PrecisionMode::Feedback {
+        if !self.cfg.mode.is_feedback_like() {
             return None;
         }
         let mut sites = self.sites.lock().unwrap();
         let st = sites.entry(site).or_insert_with(SiteState::new);
         let ord = st.emulated_calls;
         st.emulated_calls += 1;
-        if ord % self.cfg.probe_period as u64 == 0 {
+        if self.cfg.mode == PrecisionMode::Certified || ord % self.cfg.probe_period as u64 == 0 {
             Some(ord)
         } else {
             None
@@ -235,7 +236,7 @@ impl Governor {
                 st.calib = (st.calib * CALIB_DECAY).max(c).clamp(CALIB_FLOOR, CALIB_CEIL);
             }
         }
-        if self.cfg.mode != PrecisionMode::Feedback {
+        if !self.cfg.mode.is_feedback_like() {
             return;
         }
         // Hysteresis only acts on evidence gathered at the site's
@@ -268,6 +269,25 @@ impl Governor {
                 st.cooldown = self.cfg.cooldown;
             }
         }
+    }
+
+    /// Record a certified-mode escalation: the site's split count jumps
+    /// straight to `splits` (clamped to the configured window) so later
+    /// calls start where the certificate forced this one, instead of
+    /// re-failing and re-escalating from the old count.  A cooldown is
+    /// set so the next good probe does not immediately walk it back.
+    pub fn escalate(&self, site: SiteKey, splits: u32) {
+        if self.cfg.mode == PrecisionMode::Fixed {
+            return;
+        }
+        let mut sites = self.sites.lock().unwrap();
+        let st = sites.entry(site).or_insert_with(SiteState::new);
+        let s = splits.clamp(self.cfg.min_splits, self.cfg.max_splits).max(st.splits);
+        if s != st.splits {
+            st.splits = s;
+            st.note_decision(s, st.k_dim);
+        }
+        st.cooldown = self.cfg.cooldown;
     }
 
     /// Snapshot one site's state, if it has been seen.
@@ -457,6 +477,32 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(Governor::splits_for(&loose, 16, 1.0).1, 5);
+    }
+
+    #[test]
+    fn certified_mode_probes_every_call() {
+        let cfg = PrecisionConfig {
+            mode: PrecisionMode::Certified,
+            probe_period: 5, // the certificate must override the cadence
+            ..feedback_cfg()
+        };
+        let g = Governor::new(cfg);
+        assert!((0..9).all(|_| g.should_probe("s").is_some()));
+    }
+
+    #[test]
+    fn escalate_jumps_and_never_lowers() {
+        let g = Governor::new(PrecisionConfig {
+            mode: PrecisionMode::Certified,
+            ..feedback_cfg()
+        });
+        let s0 = g.decide("s", 64, ComputeMode::Dgemm).splits;
+        g.escalate("s", s0 + 4);
+        assert_eq!(g.snapshot("s").unwrap().splits, s0 + 4);
+        g.escalate("s", s0); // lower request: state must hold
+        assert_eq!(g.snapshot("s").unwrap().splits, s0 + 4);
+        g.escalate("s", 99); // clamped to the window ceiling
+        assert_eq!(g.snapshot("s").unwrap().splits, g.config().max_splits);
     }
 
     #[test]

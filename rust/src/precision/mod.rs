@@ -62,19 +62,26 @@ pub enum PrecisionMode {
     /// Seed a-priori, then close the loop with FP64 probes and
     /// hysteresis (the tentpole feedback governor).
     Feedback,
+    /// Feedback governing plus an a-posteriori certificate on **every**
+    /// emulated call: the deterministic row probe is compared against
+    /// the configured target, and a violating call escalates — ramped
+    /// splits first, native FP64 last — so the returned result always
+    /// satisfies the bound (`run.precision.certify`).
+    Certified,
 }
 
 impl PrecisionMode {
-    /// Parse `fixed`, `apriori`, or `feedback` (rejects anything else
-    /// loudly — this backs both `OZACCEL_PRECISION` and
+    /// Parse `fixed`, `apriori`, `feedback`, or `certified` (rejects
+    /// anything else loudly — this backs both `OZACCEL_PRECISION` and
     /// `run.precision.mode`).
     pub fn parse(s: &str) -> Result<Self> {
         match s.trim().to_ascii_lowercase().as_str() {
             "fixed" => Ok(PrecisionMode::Fixed),
             "apriori" | "a-priori" => Ok(PrecisionMode::Apriori),
             "feedback" => Ok(PrecisionMode::Feedback),
+            "certified" | "certify" => Ok(PrecisionMode::Certified),
             other => Err(Error::Config(format!(
-                "bad precision mode {other:?} (expected fixed | apriori | feedback)"
+                "bad precision mode {other:?} (expected fixed | apriori | feedback | certified)"
             ))),
         }
     }
@@ -85,7 +92,16 @@ impl PrecisionMode {
             PrecisionMode::Fixed => "fixed",
             PrecisionMode::Apriori => "apriori",
             PrecisionMode::Feedback => "feedback",
+            PrecisionMode::Certified => "certified",
         }
+    }
+
+    /// Whether this mode runs the measured feedback loop (probes,
+    /// residual calibration, hysteresis).  [`PrecisionMode::Certified`]
+    /// is feedback *plus* the per-call certificate, so every governor
+    /// branch that used to test `== Feedback` tests this instead.
+    pub fn is_feedback_like(self) -> bool {
+        matches!(self, PrecisionMode::Feedback | PrecisionMode::Certified)
     }
 }
 
@@ -235,7 +251,11 @@ mod tests {
             PrecisionMode::parse("feedback").unwrap(),
             PrecisionMode::Feedback
         );
-        for bad in ["", "adaptive", "feed-back", "fixed8", "governed"] {
+        assert_eq!(
+            PrecisionMode::parse("Certified").unwrap(),
+            PrecisionMode::Certified
+        );
+        for bad in ["", "adaptive", "feed-back", "fixed8", "governed", "certifiedd"] {
             assert!(PrecisionMode::parse(bad).is_err(), "{bad:?} accepted");
         }
     }
@@ -297,9 +317,18 @@ mod tests {
             PrecisionMode::Fixed,
             PrecisionMode::Apriori,
             PrecisionMode::Feedback,
+            PrecisionMode::Certified,
         ] {
             assert_eq!(PrecisionMode::parse(m.name()).unwrap(), m);
             assert_eq!(format!("{m}"), m.name());
         }
+    }
+
+    #[test]
+    fn feedback_likeness_is_exactly_feedback_and_certified() {
+        assert!(!PrecisionMode::Fixed.is_feedback_like());
+        assert!(!PrecisionMode::Apriori.is_feedback_like());
+        assert!(PrecisionMode::Feedback.is_feedback_like());
+        assert!(PrecisionMode::Certified.is_feedback_like());
     }
 }

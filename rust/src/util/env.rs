@@ -1,0 +1,85 @@
+//! Loud, uniform `OZACCEL_*` environment parsing.
+//!
+//! Every env knob read outside `config::RunConfig::apply_env`
+//! historically had its own ad-hoc reaction to malformed values — some
+//! logged a warning and kept the default, `OZACCEL_THREADS` was
+//! silently ignored.  A typo like `OZACCEL_BATCH_MAX_BYTES=junk` then
+//! ran with the default bound as if nothing were wrong, which is
+//! exactly the failure mode a robustness layer must not have.  These
+//! helpers make every such read fail one way: a panic naming the
+//! variable, the rejected value, and the accepted form.  (Unset
+//! variables are still simply absent — only *malformed* values are
+//! fatal.)
+
+/// Abort with the uniform malformed-env message.  Shared by
+/// [`parse_env`] and by sites whose values go through a domain parser
+/// (`HostKernel::parse`, `SimdSelect::parse`, ...) instead of
+/// [`std::str::FromStr`].
+pub fn invalid(name: &str, raw: &str, expected: &str) -> ! {
+    panic!("ozaccel: invalid {name}={raw:?} (expected {expected})")
+}
+
+/// Read and parse `name`: `None` when unset, `Some(parsed)` when the
+/// trimmed value parses, and a loud uniform panic otherwise.
+/// `expected` describes the accepted form (e.g. `"a positive
+/// integer"`).
+pub fn parse_env<T: std::str::FromStr>(name: &str, expected: &str) -> Option<T> {
+    let raw = std::env::var(name).ok()?;
+    match raw.trim().parse::<T>() {
+        Ok(v) => Some(v),
+        Err(_) => invalid(name, &raw, expected),
+    }
+}
+
+/// [`parse_env`] with a post-parse validity check; a parsed value the
+/// check rejects fails with the same uniform message.
+pub fn parse_env_checked<T: std::str::FromStr>(
+    name: &str,
+    expected: &str,
+    ok: impl Fn(&T) -> bool,
+) -> Option<T> {
+    let raw = std::env::var(name).ok()?;
+    match raw.trim().parse::<T>() {
+        Ok(v) if ok(&v) => Some(v),
+        _ => invalid(name, &raw, expected),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_is_none_and_valid_parses() {
+        assert_eq!(parse_env::<usize>("OZACCEL_TEST_ENV_UNSET", "int"), None);
+        std::env::set_var("OZACCEL_TEST_ENV_OK", " 42 ");
+        assert_eq!(parse_env::<usize>("OZACCEL_TEST_ENV_OK", "int"), Some(42));
+        std::env::remove_var("OZACCEL_TEST_ENV_OK");
+    }
+
+    #[test]
+    fn malformed_values_panic_with_the_uniform_message() {
+        std::env::set_var("OZACCEL_TEST_ENV_BAD", "junk");
+        let err = std::panic::catch_unwind(|| {
+            parse_env::<usize>("OZACCEL_TEST_ENV_BAD", "a positive integer")
+        })
+        .expect_err("malformed value must panic");
+        std::env::remove_var("OZACCEL_TEST_ENV_BAD");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(
+            msg.contains("invalid OZACCEL_TEST_ENV_BAD=\"junk\"")
+                && msg.contains("a positive integer"),
+            "message not uniform: {msg}"
+        );
+    }
+
+    #[test]
+    fn checked_rejects_out_of_domain_values() {
+        std::env::set_var("OZACCEL_TEST_ENV_ZERO", "0");
+        let caught = std::panic::catch_unwind(|| {
+            parse_env_checked::<usize>("OZACCEL_TEST_ENV_ZERO", ">= 1", |&v| v >= 1)
+        });
+        std::env::remove_var("OZACCEL_TEST_ENV_ZERO");
+        assert!(caught.is_err(), "0 must be rejected by the >= 1 check");
+    }
+}

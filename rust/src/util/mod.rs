@@ -1,11 +1,16 @@
 //! Small shared utilities with cross-subsystem stability contracts.
 //!
-//! The only resident today is [`rng`]: the SplitMix64 generator started
-//! life as test support in `crate::testing`, but probe sampling and the
-//! panel-cache digest made its exact bit sequence load-bearing at
-//! runtime, so it lives here where the contract can be stated once and
-//! depended on from both sides.
+//! [`rng`]: the SplitMix64 generator started life as test support in
+//! `crate::testing`, but probe sampling and the panel-cache digest made
+//! its exact bit sequence load-bearing at runtime, so it lives here
+//! where the contract can be stated once and depended on from both
+//! sides.
+//!
+//! [`env`]: the one loud way to read `OZACCEL_*` variables outside the
+//! config file parser — malformed values abort with a uniform message
+//! instead of each call site inventing its own silent fallback.
 
+pub mod env;
 pub mod rng;
 
 pub use rng::{mix64, Rng};

@@ -1,0 +1,497 @@
+//! Chaos suite (ISSUE 6): fault injection, panic isolation, certified
+//! fallback, and engine backpressure.
+//!
+//! The fault-injection tests are gated on the `failpoints` feature (the
+//! hooks compile to no-ops without it) and serialize on
+//! [`ozaccel::faults::test_guard`] because the fault registry is
+//! process-global.  The backpressure tests run under any feature set —
+//! they also take the guard so an armed fault from a concurrently
+//! scheduled chaos test can never leak into their GEMMs.
+//!
+//! Acceptance pins: surviving calls are bit-identical to the same
+//! submissions without injection, failed calls error their own tickets
+//! only, and certified results always satisfy the configured bound.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ozaccel::coordinator::{call_site, DispatchConfig, Dispatcher};
+use ozaccel::engine::{wait_all, BatchConfig, Engine, LimitsConfig};
+use ozaccel::error::Error;
+use ozaccel::linalg::Mat;
+use ozaccel::ozaki::ComputeMode;
+use ozaccel::precision::{PrecisionConfig, PrecisionMode};
+use ozaccel::testing::Rng;
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat<f64> {
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+/// Disarm every failpoint when the test exits, pass or fail.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        ozaccel::faults::disarm_all();
+    }
+}
+
+fn host_dispatcher_1t(mode: ComputeMode) -> Dispatcher {
+    let mut cfg = DispatchConfig::host_only(mode);
+    // threads = 1: one band per bucket member, executed inline in
+    // submission order — fault draws map to members deterministically.
+    cfg.kernels.config.threads = 1;
+    Dispatcher::new(cfg).unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Backpressure (no faults involved; runs with or without `failpoints`)
+// ---------------------------------------------------------------------
+
+#[test]
+fn try_submit_refuses_at_the_admission_ceiling() {
+    let _guard = ozaccel::faults::test_guard();
+    let _disarm = Disarm;
+    let mut rng = Rng::new(0xC4A01);
+    let mode = ComputeMode::Int8 { splits: 3 };
+    let d = host_dispatcher_1t(mode);
+    let site = call_site();
+    let a = Arc::new(rand_mat(&mut rng, 8, 8));
+    let b = Arc::new(rand_mat(&mut rng, 8, 8));
+    let want = d.dgemm_at(site, mode, &a, &b).unwrap();
+
+    let engine = Engine::with_limits(
+        &d,
+        BatchConfig::default(),
+        LimitsConfig {
+            max_inflight: 2,
+            submit_deadline_ms: 50,
+        },
+    );
+    let t1 = engine
+        .try_submit_dgemm_at(site, mode, a.clone(), b.clone())
+        .expect("first submission admits");
+    let t2 = engine
+        .try_submit_dgemm_at(site, mode, a.clone(), b.clone())
+        .expect("second submission admits");
+    assert_eq!(engine.inflight(), 2);
+    let p = engine
+        .try_submit_dgemm_at(site, mode, a.clone(), b.clone())
+        .expect_err("third submission must be refused at the ceiling");
+    assert_eq!(p.inflight, 2);
+    assert_eq!(p.max_inflight, 2);
+    assert_eq!(p.pending, 2, "nothing was queued by the refusal");
+    assert_eq!(engine.stats().pressure_rejections, 1);
+
+    // Settling frees capacity; refused work was never queued.
+    engine.flush().unwrap();
+    assert_eq!(engine.inflight(), 0);
+    assert_eq!(t1.wait().unwrap().data(), want.data());
+    assert_eq!(t2.wait().unwrap().data(), want.data());
+    let t3 = engine
+        .try_submit_dgemm_at(site, mode, a.clone(), b.clone())
+        .expect("capacity freed after settle");
+    assert_eq!(t3.wait().unwrap().data(), want.data());
+
+    // A shape error rides the ticket and consumes no admission slot.
+    let bad = engine
+        .try_submit_dgemm_at(site, mode, a.clone(), Arc::new(rand_mat(&mut rng, 3, 3)))
+        .expect("malformed requests are refused via the ticket, not Pressure");
+    assert!(bad.wait().is_err());
+    assert_eq!(engine.inflight(), 0);
+}
+
+#[test]
+fn blocking_submit_and_wait_timeout_surface_held_capacity() {
+    let _guard = ozaccel::faults::test_guard();
+    let _disarm = Disarm;
+    let mut rng = Rng::new(0xC4A02);
+    let mode = ComputeMode::Int8 { splits: 4 };
+    let d = host_dispatcher_1t(mode);
+    let site = call_site();
+    let a = Arc::new(rand_mat(&mut rng, 10, 10));
+    let b = Arc::new(rand_mat(&mut rng, 10, 10));
+    // Sequential reference (also warms the panel cache — irrelevant
+    // here, the executor blocks on the cache *lock*, hit or miss).
+    let want = d.dgemm_at(site, mode, &a, &b).unwrap();
+
+    let engine = Engine::with_limits(
+        &d,
+        BatchConfig {
+            max_pending: usize::MAX,
+            max_bytes: usize::MAX,
+        },
+        LimitsConfig {
+            max_inflight: 2,
+            submit_deadline_ms: 100,
+        },
+    );
+    let t1 = engine.submit_dgemm_at(site, mode, a.clone(), b.clone());
+    let t2 = engine.submit_dgemm_at(site, mode, a.clone(), b.clone());
+    assert_eq!(engine.inflight(), 2);
+
+    // Hold the global packed-panel cache lock so the executing thread
+    // blocks *inside* its bucket run, deterministically pinning both
+    // admission reservations for as long as this test wants.
+    let cache_guard = ozaccel::kernels::panel_cache::global().lock().unwrap();
+    std::thread::scope(|s| {
+        let executor = s.spawn(|| engine.flush().unwrap());
+        // The executor has drained the queue and entered execution once
+        // pending hits 0 while both reservations are still held.
+        let poll_start = std::time::Instant::now();
+        while !(engine.pending() == 0 && engine.inflight() == 2) {
+            assert!(
+                poll_start.elapsed() < Duration::from_secs(10),
+                "executor never started its bucket run"
+            );
+            std::thread::yield_now();
+        }
+
+        // wait_timeout expires and hands the ticket back unconsumed.
+        let t1 = match t1.wait_timeout(Duration::from_millis(10)) {
+            Err(ticket) => ticket,
+            Ok(r) => panic!("slot cannot settle while the executor is blocked: {r:?}"),
+        };
+
+        // Blocking submit at the ceiling: services its own (empty)
+        // queue, then expires at the deadline with a Busy ticket.
+        let busy = engine.submit_dgemm_at(site, mode, a.clone(), b.clone());
+        match busy.wait() {
+            Err(Error::Busy(msg)) => {
+                assert!(msg.contains("max_inflight=2"), "busy names the ceiling: {msg}")
+            }
+            other => panic!("expected Error::Busy, got {other:?}"),
+        }
+        assert_eq!(engine.stats().deadline_expiries, 1);
+
+        // Release the executor; everything settles with correct bits.
+        drop(cache_guard);
+        executor.join().unwrap();
+        assert_eq!(t1.wait().unwrap().data(), want.data());
+        assert_eq!(t2.wait().unwrap().data(), want.data());
+    });
+    assert_eq!(engine.inflight(), 0, "settle released every reservation");
+}
+
+#[test]
+fn dropping_an_unwaited_ticket_never_loses_the_execution() {
+    let _guard = ozaccel::faults::test_guard();
+    let _disarm = Disarm;
+    let mut rng = Rng::new(0xC4A03);
+    let mode = ComputeMode::Int8 { splits: 3 };
+    let d = host_dispatcher_1t(mode);
+    let site = call_site();
+    let a = Arc::new(rand_mat(&mut rng, 8, 8));
+    let b = Arc::new(rand_mat(&mut rng, 8, 8));
+
+    let before = d.report().total_calls;
+    {
+        let engine = d.batch();
+        // Dropped before any flush: the engine's scope-exit flush still
+        // executes and records the call.
+        let _ = engine.submit_dgemm_at(site, mode, a.clone(), b.clone());
+        // A ticket already carrying a shape error drops cleanly too.
+        let _ = engine.submit_dgemm_at(site, mode, a.clone(), Arc::new(rand_mat(&mut rng, 3, 3)));
+    }
+    assert_eq!(
+        d.report().total_calls,
+        before + 1,
+        "fire-and-forget work executes exactly once on scope exit"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Certified fallback through the batch engine (no faults)
+// ---------------------------------------------------------------------
+
+#[test]
+fn certified_batch_with_impossible_target_returns_native_fp64_bits() {
+    let _guard = ozaccel::faults::test_guard();
+    let _disarm = Disarm;
+    let mut rng = Rng::new(0xC4A04);
+    let mode = ComputeMode::Int8 { splits: 4 };
+    let mut cfg = DispatchConfig::host_only(mode);
+    cfg.kernels.config.threads = 1;
+    cfg.precision = PrecisionConfig {
+        mode: PrecisionMode::Certified,
+        target: 0.0, // unreachable by any emulation: forces the FP64 fallback
+        probe_rows: 4,
+        ..Default::default()
+    };
+    let d = Dispatcher::new(cfg).unwrap();
+    let site = call_site();
+    let a = Arc::new(rand_mat(&mut rng, 12, 12));
+    let b = Arc::new(rand_mat(&mut rng, 12, 12));
+    // The certified fallback re-runs the host kernel selector's native
+    // dgemm — the same function an FP64-mode dispatch executes.
+    let dn = host_dispatcher_1t(ComputeMode::Dgemm);
+    let want = dn.dgemm_at(site, ComputeMode::Dgemm, &a, &b).unwrap();
+
+    let engine = d.batch();
+    let tickets: Vec<_> = (0..3)
+        .map(|_| engine.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+        .collect();
+    let got = wait_all(tickets).unwrap();
+    for g in &got {
+        assert_eq!(
+            g.data(),
+            want.data(),
+            "certification degraded to native FP64, never to wrong bits"
+        );
+    }
+    let rep = d.report();
+    let t = rep.sites.totals();
+    assert_eq!(t.cert_fp64, 3, "every member fell back to FP64");
+    assert!(t.cert_checks >= 3, "every member was probed at least once");
+    assert!(t.cert_escalations >= 3, "the FP64 fallback is counted as an escalation");
+    assert!(rep.render().contains("precision=certified"));
+}
+
+#[test]
+fn certified_batch_meets_an_achievable_target_without_fallback() {
+    let _guard = ozaccel::faults::test_guard();
+    let _disarm = Disarm;
+    let mut rng = Rng::new(0xC4A05);
+    let mode = ComputeMode::Int8 { splits: 6 };
+    let mut cfg = DispatchConfig::host_only(mode);
+    cfg.kernels.config.threads = 1;
+    cfg.precision = PrecisionConfig {
+        mode: PrecisionMode::Certified,
+        target: 1e-2,
+        probe_rows: 4,
+        ..Default::default()
+    };
+    let d = Dispatcher::new(cfg).unwrap();
+    let site = call_site();
+    let a = Arc::new(rand_mat(&mut rng, 16, 16));
+    let b = Arc::new(rand_mat(&mut rng, 16, 16));
+    let exact = ozaccel::linalg::dgemm_naive(&a, &b).unwrap();
+
+    let engine = d.batch();
+    let tickets: Vec<_> = (0..4)
+        .map(|_| engine.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+        .collect();
+    let got = wait_all(tickets).unwrap();
+    for g in &got {
+        let err = ozaccel::testing::max_rel_err(g.data(), exact.data());
+        assert!(err <= 1e-2, "certified result violates its bound: {err}");
+    }
+    let rep = d.report();
+    let t = rep.sites.totals();
+    assert_eq!(t.cert_checks, 4, "one certification probe per member");
+    assert_eq!(t.cert_escalations, 0, "an achievable target never escalates");
+    assert_eq!(t.cert_fp64, 0);
+}
+
+// ---------------------------------------------------------------------
+// Fault injection (require the failpoints feature to actually fire)
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "failpoints")]
+mod injected {
+    use super::*;
+    use ozaccel::faults::{arm, disarm_all, fired, FaultSite};
+
+    #[test]
+    fn worker_panic_fails_only_its_own_tickets() {
+        let _guard = ozaccel::faults::test_guard();
+        let _disarm = Disarm;
+        let mut rng = Rng::new(0xC4A06);
+        let mode = ComputeMode::Int8 { splits: 4 };
+        let d = host_dispatcher_1t(mode);
+        let site = call_site();
+        let n = 6usize;
+        let operands: Vec<(Arc<Mat<f64>>, Arc<Mat<f64>>)> = (0..n)
+            .map(|_| {
+                (
+                    Arc::new(rand_mat(&mut rng, 9, 7)),
+                    Arc::new(rand_mat(&mut rng, 7, 8)),
+                )
+            })
+            .collect();
+        // Uninjected reference through the same engine path (one bucket,
+        // same governor decision shape) — the bit-identity oracle.
+        let want: Vec<Mat<f64>> = {
+            let engine = d.batch();
+            let tickets: Vec<_> = operands
+                .iter()
+                .map(|(a, b)| engine.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+                .collect();
+            wait_all(tickets).unwrap()
+        };
+
+        // Scan seeds until the injection splits the bucket: some members
+        // fail, some survive.  p=0.5 over 6 independent draws leaves an
+        // all-or-nothing outcome on a given seed with probability 2^-5.
+        let mut found = false;
+        for seed in 0..64u64 {
+            disarm_all();
+            arm(FaultSite::WorkerPanic, 0.5, seed);
+            let engine = d.batch();
+            let tickets: Vec<_> = operands
+                .iter()
+                .map(|(a, b)| engine.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+                .collect();
+            engine.flush().unwrap();
+            let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+            let failures = results.iter().filter(|r| r.is_err()).count();
+            if failures == 0 || failures == n {
+                continue;
+            }
+            assert!(fired(FaultSite::WorkerPanic) > 0);
+            for (i, r) in results.iter().enumerate() {
+                match r {
+                    Ok(g) => assert_eq!(
+                        g.data(),
+                        want[i].data(),
+                        "seed={seed}: survivor {i} must be bit-identical to uninjected"
+                    ),
+                    Err(e) => {
+                        let msg = e.to_string();
+                        assert!(
+                            msg.contains("fault injection"),
+                            "seed={seed}: member {i} failed for the wrong reason: {msg}"
+                        );
+                    }
+                }
+            }
+            found = true;
+            break;
+        }
+        assert!(found, "no seed in 0..64 produced a mixed fail/survive bucket");
+
+        // The engine (and its pool) stays healthy after the panic.
+        disarm_all();
+        let engine = d.batch();
+        let (a, b) = &operands[0];
+        let t = engine.submit_dgemm_at(site, mode, a.clone(), b.clone());
+        assert_eq!(t.wait().unwrap().data(), want[0].data());
+    }
+
+    #[test]
+    fn probe_failure_fails_governed_members_and_spares_pinned_ones() {
+        let _guard = ozaccel::faults::test_guard();
+        let _disarm = Disarm;
+        let mut rng = Rng::new(0xC4A07);
+        let mode = ComputeMode::Int8 { splits: 4 };
+        let mut cfg = DispatchConfig::host_only(mode);
+        cfg.kernels.config.threads = 1;
+        cfg.precision = PrecisionConfig {
+            mode: PrecisionMode::Feedback,
+            target: 1e-6,
+            probe_period: 1,
+            ..Default::default()
+        };
+        let d = Dispatcher::new(cfg).unwrap();
+        let site = call_site();
+        let a = Arc::new(rand_mat(&mut rng, 10, 10));
+        let b = Arc::new(rand_mat(&mut rng, 10, 10));
+        // Pinned (ungoverned) reference — never probes, so never sees
+        // the injected probe failure.
+        let want = {
+            let engine = d.batch();
+            let t = engine.submit_dgemm_pinned_at(site, mode, a.clone(), b.clone());
+            t.wait().unwrap()
+        };
+
+        arm(FaultSite::ProbeFail, 1.0, 0);
+        let engine = d.batch();
+        let governed: Vec<_> = (0..3)
+            .map(|_| engine.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+            .collect();
+        let pinned = engine.submit_dgemm_pinned_at(site, mode, a.clone(), b.clone());
+        engine.flush().unwrap();
+        for (i, t) in governed.into_iter().enumerate() {
+            let e = t.wait().expect_err("every governed member probes and fails");
+            assert!(
+                e.to_string().contains("injected fault: probe_fail"),
+                "member {i} failed for the wrong reason: {e}"
+            );
+        }
+        assert_eq!(
+            pinned.wait().unwrap().data(),
+            want.data(),
+            "a probe failure is the governed member's own error, never its bucket-mates'"
+        );
+        assert!(fired(FaultSite::ProbeFail) >= 3);
+    }
+
+    #[test]
+    fn cache_corruption_detection_repacks_and_preserves_bits() {
+        let _guard = ozaccel::faults::test_guard();
+        let _disarm = Disarm;
+        let mut rng = Rng::new(0xC4A08);
+        let a = rand_mat(&mut rng, 12, 12);
+        let b = rand_mat(&mut rng, 12, 12);
+        // First call fills the packed-panel cache; second hits it.
+        let want = ozaccel::ozaki::ozaki_dgemm(&a, &b, 5).unwrap();
+        arm(FaultSite::CacheCorrupt, 1.0, 0);
+        let got = ozaccel::ozaki::ozaki_dgemm(&a, &b, 5).unwrap();
+        assert!(
+            fired(FaultSite::CacheCorrupt) > 0,
+            "the second call must have consulted the cache"
+        );
+        assert_eq!(
+            got.data(),
+            want.data(),
+            "a detected corruption repacks from source — bits never change"
+        );
+    }
+
+    #[test]
+    fn certified_survivors_meet_the_bound_under_injection() {
+        let _guard = ozaccel::faults::test_guard();
+        let _disarm = Disarm;
+        let mut rng = Rng::new(0xC4A09);
+        let mode = ComputeMode::Int8 { splits: 6 };
+        let mut cfg = DispatchConfig::host_only(mode);
+        cfg.kernels.config.threads = 1;
+        cfg.precision = PrecisionConfig {
+            mode: PrecisionMode::Certified,
+            target: 1e-2,
+            probe_rows: 4,
+            ..Default::default()
+        };
+        let d = Dispatcher::new(cfg).unwrap();
+        let site = call_site();
+        let n = 6usize;
+        let a = Arc::new(rand_mat(&mut rng, 14, 14));
+        let b = Arc::new(rand_mat(&mut rng, 14, 14));
+        let exact = ozaccel::linalg::dgemm_naive(&a, &b).unwrap();
+        // Uninjected batched reference (achievable target: certification
+        // passes without escalating, so surviving members' bits cannot
+        // depend on which bucket-mates panicked).
+        let want = {
+            let engine = d.batch();
+            let tickets: Vec<_> = (0..n)
+                .map(|_| engine.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+                .collect();
+            wait_all(tickets).unwrap()
+        };
+
+        let mut found = false;
+        for seed in 0..64u64 {
+            disarm_all();
+            arm(FaultSite::WorkerPanic, 0.5, seed);
+            let engine = d.batch();
+            let tickets: Vec<_> = (0..n)
+                .map(|_| engine.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+                .collect();
+            engine.flush().unwrap();
+            let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+            let failures = results.iter().filter(|r| r.is_err()).count();
+            if failures == 0 || failures == n {
+                continue;
+            }
+            for (i, r) in results.iter().enumerate() {
+                if let Ok(g) = r {
+                    assert_eq!(g.data(), want[i].data(), "seed={seed} member {i}");
+                    let err = ozaccel::testing::max_rel_err(g.data(), exact.data());
+                    assert!(err <= 1e-2, "certified survivor violates the bound: {err}");
+                }
+            }
+            found = true;
+            break;
+        }
+        assert!(found, "no seed in 0..64 produced a mixed fail/survive bucket");
+    }
+}
