@@ -554,17 +554,11 @@ n_contour = 12
         assert!(RunConfig::from_toml("[run]\npack_parallel = \"yes\"\n").is_err());
     }
 
-    /// Serialises the tests that mutate process environment variables:
-    /// a test that momentarily sets an *invalid* value must not be
-    /// observable from another test's `apply_env`.  Lock poisoning is
-    /// ignored (a failed env test must not cascade into the other one)
-    /// and the mutated variable is restored by a drop guard even on
-    /// assertion failure.
-    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
-
-    fn env_lock() -> std::sync::MutexGuard<'static, ()> {
-        ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
-    }
+    // Process-wide env mutation lock shared with every other test
+    // module that touches `OZACCEL_*` / `OZIMMU_*` variables; the
+    // mutated variable is restored by a drop guard even on assertion
+    // failure.
+    use crate::testing::env_lock;
 
     struct RestoreVar(&'static str);
     impl Drop for RestoreVar {

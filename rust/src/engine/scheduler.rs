@@ -443,9 +443,15 @@ fn fused_complex(
     let mut products = products.into_iter();
     let mut combined: Vec<Result<crate::linalg::ZMat>> = Vec::with_capacity(group.len());
     for z in &prepared {
-        let quad: Result<Vec<Mat<f64>>> = (0..4)
+        // Consume all four components unconditionally before folding:
+        // collecting straight into `Result<Vec<_>>` would short-circuit
+        // at the first `Err`, leaving that member's remaining
+        // components in `products` and misaligning every later member
+        // of the bucket.
+        let items: Vec<Result<Mat<f64>>> = (0..4)
             .map(|_| products.next().expect("four components per member"))
             .collect();
+        let quad: Result<Vec<Mat<f64>>> = items.into_iter().collect();
         combined.push(quad.map(|mut v| {
             let unscaled = |mut c: Mat<f64>, ea: &Prepared, eb: &Prepared| {
                 unscale(&mut c, &ea.1, &eb.1);
@@ -458,6 +464,10 @@ fn fused_complex(
             zcombine(&rr, &ii, &ri, &ir)
         }));
     }
+    debug_assert!(
+        products.next().is_none(),
+        "component/member count mismatch in complex bucket"
+    );
     let measured = t0.elapsed().as_secs_f64();
     let share = measured / group.len() as f64;
     let reuse_total: u64 = memo.hits_by_member.iter().sum();

@@ -27,6 +27,18 @@ pub fn for_cases<F: FnMut(&mut Rng)>(cases: usize, base_seed: u64, mut prop: F) 
     }
 }
 
+/// Serialises tests that mutate process environment variables:
+/// `std::env::set_var` is not thread-safe, and under the default
+/// parallel test harness a test that momentarily sets an *invalid*
+/// value must not be observable from another test's env read.  Every
+/// test module that touches `OZACCEL_*` / `OZIMMU_*` variables shares
+/// this one lock.  Lock poisoning is ignored so one failed env test
+/// cannot cascade into the others.
+pub fn env_lock() -> std::sync::MutexGuard<'static, ()> {
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Relative-error helper used across the test suite.
 pub fn rel_err(got: f64, want: f64) -> f64 {
     if want == 0.0 {

@@ -48,9 +48,11 @@ pub fn parse_env_checked<T: std::str::FromStr>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::env_lock;
 
     #[test]
     fn unset_is_none_and_valid_parses() {
+        let _guard = env_lock();
         assert_eq!(parse_env::<usize>("OZACCEL_TEST_ENV_UNSET", "int"), None);
         std::env::set_var("OZACCEL_TEST_ENV_OK", " 42 ");
         assert_eq!(parse_env::<usize>("OZACCEL_TEST_ENV_OK", "int"), Some(42));
@@ -59,6 +61,7 @@ mod tests {
 
     #[test]
     fn malformed_values_panic_with_the_uniform_message() {
+        let _guard = env_lock();
         std::env::set_var("OZACCEL_TEST_ENV_BAD", "junk");
         let err = std::panic::catch_unwind(|| {
             parse_env::<usize>("OZACCEL_TEST_ENV_BAD", "a positive integer")
@@ -75,6 +78,7 @@ mod tests {
 
     #[test]
     fn checked_rejects_out_of_domain_values() {
+        let _guard = env_lock();
         std::env::set_var("OZACCEL_TEST_ENV_ZERO", "0");
         let caught = std::panic::catch_unwind(|| {
             parse_env_checked::<usize>("OZACCEL_TEST_ENV_ZERO", ">= 1", |&v| v >= 1)

@@ -18,13 +18,17 @@ use std::time::Duration;
 use ozaccel::coordinator::{call_site, DispatchConfig, Dispatcher};
 use ozaccel::engine::{wait_all, BatchConfig, Engine, LimitsConfig};
 use ozaccel::error::Error;
-use ozaccel::linalg::Mat;
+use ozaccel::linalg::{Mat, ZMat};
 use ozaccel::ozaki::ComputeMode;
 use ozaccel::precision::{PrecisionConfig, PrecisionMode};
 use ozaccel::testing::Rng;
 
 fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat<f64> {
     Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn rand_zmat(rng: &mut Rng, r: usize, c: usize) -> ZMat {
+    ZMat::from_fn(r, c, |_, _| rng.cnormal())
 }
 
 /// Disarm every failpoint when the test exits, pass or fail.
@@ -364,6 +368,90 @@ mod injected {
         let engine = d.batch();
         let (a, b) = &operands[0];
         let t = engine.submit_dgemm_at(site, mode, a.clone(), b.clone());
+        assert_eq!(t.wait().unwrap().data(), want[0].data());
+    }
+
+    #[test]
+    fn complex_component_panic_keeps_later_bucket_members_aligned() {
+        let _guard = ozaccel::faults::test_guard();
+        let _disarm = Disarm;
+        let mut rng = Rng::new(0xC4A0A);
+        let mode = ComputeMode::Int8 { splits: 4 };
+        let d = host_dispatcher_1t(mode);
+        let site = call_site();
+        let n = 4usize;
+        let operands: Vec<(Arc<ZMat>, Arc<ZMat>)> = (0..n)
+            .map(|_| {
+                (
+                    Arc::new(rand_zmat(&mut rng, 9, 7)),
+                    Arc::new(rand_zmat(&mut rng, 7, 8)),
+                )
+            })
+            .collect();
+        // Uninjected batched reference — the bit-identity oracle.
+        let want: Vec<ZMat> = {
+            let engine = d.batch();
+            let tickets: Vec<_> = operands
+                .iter()
+                .map(|(a, b)| engine.submit_zgemm_at(site, mode, a.clone(), b.clone()))
+                .collect();
+            wait_all(tickets).unwrap()
+        };
+
+        // A complex member fails when *any* of its four component
+        // sweeps draws a panic.  Scan seeds until an earlier member
+        // fails while a later one survives: exactly the alignment
+        // hazard — a partially failed quad must not leak its leftover
+        // component products into its successors (distinct operands per
+        // member make any cross-member mixing change the bits).
+        let mut found = false;
+        for seed in 0..64u64 {
+            disarm_all();
+            arm(FaultSite::WorkerPanic, 0.4, seed);
+            let engine = d.batch();
+            let tickets: Vec<_> = operands
+                .iter()
+                .map(|(a, b)| engine.submit_zgemm_at(site, mode, a.clone(), b.clone()))
+                .collect();
+            engine.flush().unwrap();
+            let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+            let survivor_after_failure = results
+                .iter()
+                .position(|r| r.is_err())
+                .is_some_and(|f| results[f..].iter().any(|r| r.is_ok()));
+            if !survivor_after_failure {
+                continue;
+            }
+            assert!(fired(FaultSite::WorkerPanic) > 0);
+            for (i, r) in results.iter().enumerate() {
+                match r {
+                    Ok(g) => assert_eq!(
+                        g.data(),
+                        want[i].data(),
+                        "seed={seed}: survivor {i} must be bit-identical to uninjected"
+                    ),
+                    Err(e) => {
+                        let msg = e.to_string();
+                        assert!(
+                            msg.contains("fault injection"),
+                            "seed={seed}: member {i} failed for the wrong reason: {msg}"
+                        );
+                    }
+                }
+            }
+            found = true;
+            break;
+        }
+        assert!(
+            found,
+            "no seed in 0..64 failed an early member while a later one survived"
+        );
+
+        // The engine stays healthy after the partial failure.
+        disarm_all();
+        let engine = d.batch();
+        let (a, b) = &operands[0];
+        let t = engine.submit_zgemm_at(site, mode, a.clone(), b.clone());
         assert_eq!(t.wait().unwrap().data(), want[0].data());
     }
 
