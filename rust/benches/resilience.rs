@@ -1,0 +1,246 @@
+//! Resilience bench (ISSUE 7) — what failing over costs: host dispatch
+//! vs simulated-device offload vs the 100%-fault fallback path (every
+//! device attempt fails, the call retries and re-runs on the host), the
+//! open-breaker degraded route that skips the device entirely, a full
+//! breaker trip/recover cycle under a seeded error storm, and a mixed
+//! fault-rate soak reporting p50/p99 per-call latency.  The fault rows
+//! need `--features failpoints` (the hooks are no-ops otherwise); run
+//! with `cargo bench --bench resilience --features failpoints`
+//! (`--quick` shrinks the case, `--json` writes BENCH_resilience.json).
+
+use ozaccel::bench::{Bench, JsonRecord, JsonReport, Measurement, Table};
+use ozaccel::coordinator::{call_site, DispatchConfig, Dispatcher};
+use ozaccel::faults::{arm, disarm_all, FaultSite};
+use ozaccel::linalg::Mat;
+use ozaccel::ozaki::ComputeMode;
+use ozaccel::perfmodel::gemm_flops;
+use ozaccel::resilience::{BreakerState, OffloadBackend, OffloadConfig};
+use ozaccel::testing::Rng;
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat<f64> {
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+/// Dispatcher attached to the in-process simulated device, with the
+/// FLOP threshold zeroed so every call routes through the offload seam.
+fn sim_dispatcher(mode: ComputeMode, offload: OffloadConfig) -> Dispatcher {
+    let mut cfg = DispatchConfig {
+        mode,
+        offload: OffloadConfig {
+            backend: OffloadBackend::Sim,
+            ..offload
+        },
+        ..DispatchConfig::default()
+    };
+    cfg.policy.min_flops = 0.0;
+    cfg.kernels.config.threads = 1;
+    Dispatcher::new(cfg).unwrap()
+}
+
+fn host_dispatcher(mode: ComputeMode) -> Dispatcher {
+    let mut cfg = DispatchConfig::host_only(mode);
+    cfg.kernels.config.threads = 1;
+    Dispatcher::new(cfg).unwrap()
+}
+
+/// Nearest-rank percentile of an ascending latency sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    ozaccel::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let json = std::env::args().any(|a| a == "--json");
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let mut report = JsonReport::new();
+    let mut table = Table::new(&["case", "median ms", "mad ms", "GFLOP/s"]);
+    let mut push = |report: &mut JsonReport, name: String, m: &Measurement, flop: f64| {
+        table.row(&[
+            name.clone(),
+            format!("{:.3}", m.median_s * 1e3),
+            format!("{:.3}", m.mad_s * 1e3),
+            format!("{:.2}", m.flops(flop) / 1e9),
+        ]);
+        report.push(JsonRecord::from_measurement(name, m, Some(flop), None, 1));
+    };
+
+    let n = if quick { 96 } else { 192 };
+    let splits = 6u32;
+    let mode = ComputeMode::Int8 { splits };
+    let flop = gemm_flops(n, n, n);
+    let mut rng = Rng::new(0x5E51);
+    let a = rand_mat(&mut rng, n, n);
+    let b = rand_mat(&mut rng, n, n);
+    let site = call_site();
+    // Fault sections never sleep (backoff 0) and never let the breaker
+    // interfere with the row being measured (huge threshold/cooldown).
+    let pinned_closed = OffloadConfig {
+        backoff_ms: 0,
+        breaker_threshold: 1 << 30,
+        ..OffloadConfig::default()
+    };
+
+    // Host baseline vs sim offload: the same emulated GEMM dispatched
+    // host-only and through the full offload seam (routing, breaker
+    // health check, simulated device, modeled transfer accounting).
+    let host = host_dispatcher(mode);
+    let m = bench.run(|| {
+        host.dgemm_at(site, mode, &a, &b).unwrap();
+    });
+    push(&mut report, format!("host_int8_s{splits}@{n}"), &m, flop);
+    let host_s = m.median_s;
+
+    let sim = sim_dispatcher(mode, OffloadConfig::default());
+    let m = bench.run(|| {
+        sim.dgemm_at(site, mode, &a, &b).unwrap();
+    });
+    push(&mut report, format!("sim_offload@{n}"), &m, flop);
+
+    let mut fallback_s = None;
+    if cfg!(feature = "failpoints") {
+        // Total-fault fallback: every device attempt errors, so each
+        // call pays attempts() failed probes plus one host re-run —
+        // the worst-case latency penalty of transparent fallback.
+        let storm = sim_dispatcher(mode, pinned_closed);
+        arm(FaultSite::OffloadError, 1.0, 0xFA11);
+        let m = bench.run(|| {
+            storm.dgemm_at(site, mode, &a, &b).unwrap();
+        });
+        disarm_all();
+        push(&mut report, format!("fallback_total_fault@{n}"), &m, flop);
+        fallback_s = Some(m.median_s);
+
+        // Degraded routing: trip the breaker open first (tiny threshold,
+        // huge cooldown), then measure calls while it refuses the
+        // device — the host-degraded route skips the retry loop, so
+        // this row should sit on the host baseline, not the fallback
+        // row.
+        let degraded = sim_dispatcher(
+            mode,
+            OffloadConfig {
+                max_retries: 0,
+                backoff_ms: 0,
+                breaker_threshold: 1,
+                breaker_cooldown: 1 << 30,
+                ..OffloadConfig::default()
+            },
+        );
+        arm(FaultSite::OffloadError, 1.0, 0xDE6);
+        degraded.dgemm_at(site, mode, &a, &b).unwrap();
+        disarm_all();
+        assert_eq!(degraded.resilience().breaker().state(), BreakerState::Open);
+        let m = bench.run(|| {
+            degraded.dgemm_at(site, mode, &a, &b).unwrap();
+        });
+        push(&mut report, format!("degraded_open_breaker@{n}"), &m, flop);
+
+        // Breaker storm cycle: arm a total error storm, trip the
+        // breaker, disarm, and drive the half-open probes until it
+        // closes.  One iteration is the whole open→recover round trip.
+        let cycle = OffloadConfig {
+            max_retries: 0,
+            backoff_ms: 0,
+            breaker_threshold: 3,
+            breaker_cooldown: 4,
+            breaker_probes: 2,
+            ..OffloadConfig::default()
+        };
+        let m = bench.run(|| {
+            let d = sim_dispatcher(mode, cycle);
+            arm(FaultSite::OffloadError, 1.0, 0x570);
+            for _ in 0..6 {
+                d.dgemm_at(site, mode, &a, &b).unwrap();
+            }
+            disarm_all();
+            let mut healthy = 0u32;
+            while d.resilience().breaker().state() != BreakerState::Closed {
+                d.dgemm_at(site, mode, &a, &b).unwrap();
+                healthy += 1;
+                assert!(healthy <= 64, "breaker never reclosed");
+            }
+        });
+        push(&mut report, format!("breaker_trip_recover@{n}"), &m, flop * 6.0);
+        // Replay once instrumented so the reading below can report the
+        // counters the cycle pins.
+        let d = sim_dispatcher(mode, cycle);
+        arm(FaultSite::OffloadError, 1.0, 0x570);
+        for _ in 0..6 {
+            d.dgemm_at(site, mode, &a, &b).unwrap();
+        }
+        disarm_all();
+        let mut healthy = 0u32;
+        while d.resilience().breaker().state() != BreakerState::Closed {
+            d.dgemm_at(site, mode, &a, &b).unwrap();
+            healthy += 1;
+        }
+        let br = d.resilience().breaker();
+        println!(
+            "breaker cycle: trips={} transitions={} healthy_calls_to_close={healthy}",
+            br.trips(),
+            br.transitions()
+        );
+
+        // Mixed fault-rate soak: errors at 10% and transients at 25%
+        // of device attempts, bounded retries absorbing most of them.
+        // Per-call wall times give the resilience tail (p50/p99).
+        let sn = if quick { 64 } else { 96 };
+        let sflop = gemm_flops(sn, sn, sn);
+        let sa = rand_mat(&mut rng, sn, sn);
+        let sb = rand_mat(&mut rng, sn, sn);
+        let soak = sim_dispatcher(
+            mode,
+            OffloadConfig {
+                backoff_ms: 0,
+                breaker_threshold: 5,
+                breaker_cooldown: 8,
+                breaker_probes: 2,
+                ..OffloadConfig::default()
+            },
+        );
+        arm(FaultSite::OffloadError, 0.10, 0xA0);
+        arm(FaultSite::OffloadTransient, 0.25, 0xB1);
+        let calls = if quick { 120 } else { 400 };
+        let mut lat = Vec::with_capacity(calls);
+        for _ in 0..calls {
+            let t = std::time::Instant::now();
+            soak.dgemm_at(site, mode, &sa, &sb).unwrap();
+            lat.push(t.elapsed().as_secs_f64());
+        }
+        disarm_all();
+        lat.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for (tag, q) in [("p50", 0.50), ("p99", 0.99)] {
+            let m = Measurement {
+                median_s: percentile(&lat, q),
+                mad_s: 0.0,
+                iters_per_sample: 1,
+                samples: calls,
+            };
+            push(&mut report, format!("soak_{tag}@{sn}"), &m, sflop);
+        }
+        let t = soak.report().sites.totals();
+        println!(
+            "soak: calls={} offloaded={} retries={} fallbacks={} breaker_trips={}",
+            t.calls, t.offloaded, t.offload_retries, t.offload_fallbacks, t.breaker_trips
+        );
+    } else {
+        println!("fault rows skipped: rebuild with --features failpoints to measure them");
+    }
+
+    println!("== Resilience: fallback penalty, breaker cycle, fault-storm soak ==");
+    println!("{}", table.render());
+    if let Some(fb) = fallback_s {
+        println!(
+            "reading: fallback/host = {:.2}x — retries plus the host re-run are the\n\
+             price of a call that never sees a healthy device; the open-breaker row\n\
+             shows what tripping buys back by skipping the device entirely.",
+            if host_s > 0.0 { fb / host_s } else { 0.0 }
+        );
+    }
+    if json {
+        let path = std::path::Path::new("BENCH_resilience.json");
+        report.write(path).expect("write BENCH_resilience.json");
+        println!("wrote {}", path.display());
+    }
+}

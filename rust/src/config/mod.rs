@@ -16,6 +16,7 @@ use crate::must::params::{mt_u56_mini, tiny_case, CaseParams};
 use crate::ozaki::ComputeMode;
 use crate::perfmodel::{GB200, GH200};
 use crate::precision::PrecisionMode;
+use crate::resilience::OffloadBackend;
 
 /// Keys accepted under `[precision]` — anything else under that table
 /// is rejected loudly instead of being silently ignored.
@@ -45,6 +46,19 @@ const BATCH_KEYS: &[&str] = &["max_pending", "max_bytes"];
 /// Keys accepted under `[limits]` — the execution engine's admission
 /// control (backpressure) bounds.
 const LIMITS_KEYS: &[&str] = &["max_inflight", "submit_deadline_ms"];
+
+/// Keys accepted under `[offload]` — the resilience layer's
+/// retry/backoff/deadline budget, circuit-breaker thresholds, and
+/// device-backend selection.
+const OFFLOAD_KEYS: &[&str] = &[
+    "max_retries",
+    "backoff_ms",
+    "deadline_ms",
+    "breaker_threshold",
+    "breaker_cooldown",
+    "breaker_probes",
+    "backend",
+];
 
 /// Full run configuration for the `ozaccel` binary.
 #[derive(Clone, Debug)]
@@ -177,6 +191,8 @@ impl RunConfig {
                     | "run.batch"
                     | "limits"
                     | "run.limits"
+                    | "offload"
+                    | "run.offload"
             ) {
                 return Err(Error::Config(format!(
                     "{key:?} is a table, not a scalar — write e.g. \
@@ -200,6 +216,16 @@ impl RunConfig {
                 if !LIMITS_KEYS.contains(&rest) {
                     return Err(Error::Config(format!(
                         "unknown limits key {key:?} (expected one of {LIMITS_KEYS:?})"
+                    )));
+                }
+            }
+            let offload_rest = key
+                .strip_prefix("run.offload.")
+                .or_else(|| key.strip_prefix("offload."));
+            if let Some(rest) = offload_rest {
+                if !OFFLOAD_KEYS.contains(&rest) {
+                    return Err(Error::Config(format!(
+                        "unknown offload key {key:?} (expected one of {OFFLOAD_KEYS:?})"
                     )));
                 }
             }
@@ -324,6 +350,53 @@ impl RunConfig {
             cfg.dispatch.limits.submit_deadline_ms =
                 toml_u32(v, "limits.submit_deadline_ms")? as u64;
         }
+        // `[offload]` and `[run.offload]` are interchangeable, mirroring
+        // [limits] and [batch].
+        let offload = |name: &str| {
+            lookup(&table, &format!("offload.{name}"))
+                .or_else(|| lookup(&table, &format!("run.offload.{name}")))
+        };
+        if let Some(v) = offload("max_retries") {
+            // 0 is meaningful: a single attempt, no retries.
+            cfg.dispatch.offload.max_retries = toml_u32(v, "offload.max_retries")?;
+        }
+        if let Some(v) = offload("backoff_ms") {
+            // 0 is meaningful: retry immediately.
+            cfg.dispatch.offload.backoff_ms = toml_u32(v, "offload.backoff_ms")? as u64;
+        }
+        if let Some(v) = offload("deadline_ms") {
+            // 0 is meaningful: no per-call deadline.
+            cfg.dispatch.offload.deadline_ms = toml_u32(v, "offload.deadline_ms")? as u64;
+        }
+        if let Some(v) = offload("breaker_threshold") {
+            let n = toml_u32(v, "offload.breaker_threshold")?;
+            if n == 0 {
+                return Err(Error::Config("offload.breaker_threshold must be >= 1".into()));
+            }
+            cfg.dispatch.offload.breaker_threshold = n;
+        }
+        if let Some(v) = offload("breaker_cooldown") {
+            let n = toml_u32(v, "offload.breaker_cooldown")?;
+            if n == 0 {
+                return Err(Error::Config("offload.breaker_cooldown must be >= 1".into()));
+            }
+            cfg.dispatch.offload.breaker_cooldown = n;
+        }
+        if let Some(v) = offload("breaker_probes") {
+            let n = toml_u32(v, "offload.breaker_probes")?;
+            if n == 0 {
+                return Err(Error::Config("offload.breaker_probes must be >= 1".into()));
+            }
+            cfg.dispatch.offload.breaker_probes = n;
+        }
+        if let Some(v) = offload("backend") {
+            cfg.dispatch.offload.backend = OffloadBackend::parse(v.as_str()?).ok_or_else(|| {
+                Error::Config(format!(
+                    "bad offload backend {:?} (expected pjrt | sim)",
+                    v.as_str().unwrap_or_default()
+                ))
+            })?;
+        }
         if let Some(v) = lookup(&table, "sweep.splits") {
             cfg.sweep_splits = v
                 .as_array()?
@@ -410,6 +483,51 @@ impl RunConfig {
                 .parse()
                 .map_err(|_| Error::Config(format!("bad OZACCEL_SUBMIT_DEADLINE_MS {v:?}")))?;
             self.dispatch.limits.submit_deadline_ms = n;
+        }
+        if let Ok(v) = std::env::var("OZACCEL_OFFLOAD_MAX_RETRIES") {
+            let n: u32 = v
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("bad OZACCEL_OFFLOAD_MAX_RETRIES {v:?}")))?;
+            self.dispatch.offload.max_retries = n;
+        }
+        if let Ok(v) = std::env::var("OZACCEL_OFFLOAD_BACKOFF_MS") {
+            let n: u64 = v
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("bad OZACCEL_OFFLOAD_BACKOFF_MS {v:?}")))?;
+            self.dispatch.offload.backoff_ms = n;
+        }
+        if let Ok(v) = std::env::var("OZACCEL_OFFLOAD_DEADLINE_MS") {
+            let n: u64 = v
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("bad OZACCEL_OFFLOAD_DEADLINE_MS {v:?}")))?;
+            self.dispatch.offload.deadline_ms = n;
+        }
+        for (name, slot) in [
+            ("OZACCEL_OFFLOAD_BREAKER_THRESHOLD", 0usize),
+            ("OZACCEL_OFFLOAD_BREAKER_COOLDOWN", 1),
+            ("OZACCEL_OFFLOAD_BREAKER_PROBES", 2),
+        ] {
+            if let Ok(v) = std::env::var(name) {
+                let n: u32 = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad {name} {v:?}")))?;
+                if n == 0 {
+                    return Err(Error::Config(format!("{name} must be >= 1")));
+                }
+                match slot {
+                    0 => self.dispatch.offload.breaker_threshold = n,
+                    1 => self.dispatch.offload.breaker_cooldown = n,
+                    _ => self.dispatch.offload.breaker_probes = n,
+                }
+            }
+        }
+        if let Ok(v) = std::env::var("OZACCEL_OFFLOAD_BACKEND") {
+            self.dispatch.offload.backend = OffloadBackend::parse(&v)
+                .ok_or_else(|| Error::Config(format!("bad OZACCEL_OFFLOAD_BACKEND {v:?}")))?;
         }
         Ok(())
     }
@@ -764,6 +882,62 @@ n_contour = 12
             cfg.apply_env().is_err(),
             "bad OZACCEL_SUBMIT_DEADLINE_MS is loud"
         );
+    }
+
+    #[test]
+    fn offload_keys_parse_and_reject() {
+        let cfg = RunConfig::from_toml(
+            "[offload]\nmax_retries = 5\nbackoff_ms = 7\ndeadline_ms = 900\n\
+             breaker_threshold = 2\nbreaker_cooldown = 16\nbreaker_probes = 1\n\
+             backend = \"sim\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dispatch.offload.max_retries, 5);
+        assert_eq!(cfg.dispatch.offload.backoff_ms, 7);
+        assert_eq!(cfg.dispatch.offload.deadline_ms, 900);
+        assert_eq!(cfg.dispatch.offload.breaker_threshold, 2);
+        assert_eq!(cfg.dispatch.offload.breaker_cooldown, 16);
+        assert_eq!(cfg.dispatch.offload.breaker_probes, 1);
+        assert_eq!(cfg.dispatch.offload.backend, OffloadBackend::Sim);
+        // the run.offload.* spelling maps identically
+        let cfg = RunConfig::from_toml("[run.offload]\nmax_retries = 0\n").unwrap();
+        assert_eq!(cfg.dispatch.offload.max_retries, 0);
+        // 0 disables the deadline; 0 backoff retries immediately
+        let cfg = RunConfig::from_toml("[offload]\ndeadline_ms = 0\nbackoff_ms = 0\n").unwrap();
+        assert_eq!(cfg.dispatch.offload.deadline_ms, 0);
+        assert_eq!(cfg.dispatch.offload.backoff_ms, 0);
+        // rejections are loud: zero breaker knobs / bad backend /
+        // fractional / unknown keys / scalar-where-table
+        assert!(RunConfig::from_toml("[offload]\nbreaker_threshold = 0\n").is_err());
+        assert!(RunConfig::from_toml("[offload]\nbreaker_cooldown = 0\n").is_err());
+        assert!(RunConfig::from_toml("[offload]\nbreaker_probes = 0\n").is_err());
+        assert!(RunConfig::from_toml("[offload]\nbackend = \"fpga\"\n").is_err());
+        assert!(RunConfig::from_toml("[offload]\nmax_retries = 1.5\n").is_err());
+        assert!(RunConfig::from_toml("[offload]\nbogus = 1\n").is_err());
+        assert!(RunConfig::from_toml("[run.offload]\nbogus = 1\n").is_err());
+        assert!(RunConfig::from_toml("[run]\noffload = 4\n").is_err());
+        assert!(RunConfig::from_toml("offload = 4\n").is_err());
+    }
+
+    #[test]
+    fn offload_env_override() {
+        let _guard = env_lock();
+        let _r1 = RestoreVar("OZACCEL_OFFLOAD_MAX_RETRIES");
+        let _r2 = RestoreVar("OZACCEL_OFFLOAD_BREAKER_THRESHOLD");
+        let _r3 = RestoreVar("OZACCEL_OFFLOAD_BACKEND");
+        std::env::set_var("OZACCEL_OFFLOAD_MAX_RETRIES", "7");
+        std::env::set_var("OZACCEL_OFFLOAD_BREAKER_THRESHOLD", "9");
+        std::env::set_var("OZACCEL_OFFLOAD_BACKEND", "sim");
+        let mut cfg = RunConfig::from_toml("[offload]\nmax_retries = 1\n").unwrap();
+        cfg.apply_env().unwrap();
+        assert_eq!(cfg.dispatch.offload.max_retries, 7);
+        assert_eq!(cfg.dispatch.offload.breaker_threshold, 9);
+        assert_eq!(cfg.dispatch.offload.backend, OffloadBackend::Sim);
+        std::env::set_var("OZACCEL_OFFLOAD_BREAKER_THRESHOLD", "0");
+        assert!(cfg.apply_env().is_err(), "zero breaker threshold is loud");
+        std::env::set_var("OZACCEL_OFFLOAD_BREAKER_THRESHOLD", "4");
+        std::env::set_var("OZACCEL_OFFLOAD_BACKEND", "abacus");
+        assert!(cfg.apply_env().is_err(), "bad OZACCEL_OFFLOAD_BACKEND is loud");
     }
 
     #[test]

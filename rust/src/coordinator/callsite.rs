@@ -72,6 +72,17 @@ pub struct CallMeasurement {
     /// `K·splits > MAX_EXACT_I32_TERMS`; see
     /// [`crate::kernels::is_wide`]).
     pub wide: bool,
+    /// Failed device attempts this call retried before succeeding or
+    /// falling back (0 for host-routed and first-try calls).
+    pub offload_retries: u64,
+    /// Whether a device-routed call ended on the host: retries
+    /// exhausted, runtime quarantined, or breaker open at routing
+    /// (`OffloadDecision::HostDegraded`).
+    ///
+    /// [`OffloadDecision::HostDegraded`]: super::OffloadDecision
+    pub offload_fallback: bool,
+    /// Circuit-breaker trips this call's failed attempts caused.
+    pub breaker_trips: u64,
 }
 
 /// Accumulated statistics for one call site.
@@ -139,6 +150,13 @@ pub struct CallSiteStats {
     /// Emulated calls whose fused sweep took the i64 wide-accumulator
     /// escape (the PEAK `wide` column — overflow-escape visibility).
     pub wide_calls: u64,
+    /// Failed device attempts retried across this site's calls.
+    pub offload_retries: u64,
+    /// Device-routed calls that ended on the host (fallback or
+    /// breaker-degraded routing) — the PEAK `route` column's `f` term.
+    pub offload_fallbacks: u64,
+    /// Circuit-breaker trips attributed to this site's calls.
+    pub breaker_trips: u64,
 }
 
 impl CallSiteStats {
@@ -198,6 +216,25 @@ impl CallSiteStats {
             format!(
                 "{}c/{}e/{}f",
                 self.cert_checks, self.cert_escalations, self.cert_fp64
+            )
+        }
+    }
+
+    /// The `route` cell of the PEAK table:
+    /// `<offloads>o/<retries>r/<fallbacks>f/<breaker trips>t`, or `-`
+    /// for sites the resilience layer never touched (host-routed with
+    /// no device activity at all).
+    pub fn route_cell(&self) -> String {
+        if self.offloaded == 0
+            && self.offload_retries == 0
+            && self.offload_fallbacks == 0
+            && self.breaker_trips == 0
+        {
+            "-".into()
+        } else {
+            format!(
+                "{}o/{}r/{}f/{}t",
+                self.offloaded, self.offload_retries, self.offload_fallbacks, self.breaker_trips
             )
         }
     }
@@ -264,6 +301,11 @@ impl SiteRegistry {
         if m.wide {
             e.wide_calls += 1;
         }
+        e.offload_retries += m.offload_retries;
+        if m.offload_fallback {
+            e.offload_fallbacks += 1;
+        }
+        e.breaker_trips += m.breaker_trips;
     }
 
     /// Attribute probe seconds to a site outside [`SiteRegistry::record`]
@@ -354,6 +396,9 @@ impl SiteRegistry {
             t.cert_escalations += s.cert_escalations;
             t.cert_fp64 += s.cert_fp64;
             t.wide_calls += s.wide_calls;
+            t.offload_retries += s.offload_retries;
+            t.offload_fallbacks += s.offload_fallbacks;
+            t.breaker_trips += s.breaker_trips;
         }
         t
     }
@@ -520,6 +565,52 @@ mod tests {
         let t = r.totals();
         assert_eq!((t.cert_checks, t.cert_escalations, t.cert_fp64), (4, 2, 1));
         assert_eq!(t.wide_calls, 1);
+    }
+
+    #[test]
+    fn route_stats_accumulate_and_render() {
+        let mut r = SiteRegistry::new();
+        // one clean offload, one retried offload, one fallback that
+        // tripped the breaker on its way down
+        r.record(
+            "scf.rs:11",
+            CallMeasurement {
+                flops: 1.0,
+                offloaded: true,
+                ..Default::default()
+            },
+        );
+        r.record(
+            "scf.rs:11",
+            CallMeasurement {
+                flops: 1.0,
+                offloaded: true,
+                offload_retries: 2,
+                ..Default::default()
+            },
+        );
+        r.record(
+            "scf.rs:11",
+            CallMeasurement {
+                flops: 1.0,
+                offload_retries: 3,
+                offload_fallback: true,
+                breaker_trips: 1,
+                ..Default::default()
+            },
+        );
+        let s = r.get("scf.rs:11").unwrap();
+        assert_eq!((s.offloaded, s.host), (2, 1));
+        assert_eq!(s.offload_retries, 5);
+        assert_eq!(s.offload_fallbacks, 1);
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(s.route_cell(), "2o/5r/1f/1t");
+        // untouched sites stay quiet in the route column
+        assert_eq!(CallSiteStats::default().route_cell(), "-");
+        let t = r.totals();
+        assert_eq!(t.offload_retries, 5);
+        assert_eq!(t.offload_fallbacks, 1);
+        assert_eq!(t.breaker_trips, 1);
     }
 
     #[test]

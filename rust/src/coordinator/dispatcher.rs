@@ -14,10 +14,10 @@ use super::callsite::{CallMeasurement, SiteRegistry};
 use super::datamove::{DataMoveStrategy, MemModel};
 use super::kernel_select::{HostCallInfo, KernelSelector};
 use super::policy::{OffloadDecision, RoutingPolicy};
-use super::stats::Report;
+use super::stats::{Report, RuntimeHealth};
 use crate::engine::{BatchConfig, Engine, LimitsConfig};
 use crate::error::{Error, Result};
-use crate::faults::FaultSite;
+use crate::faults::{maybe_fail, FaultSite};
 use crate::kernels::{is_wide, panel_cache, MR_C64, MR_F64, MR_I8};
 use crate::linalg::{Mat, ZMat};
 use crate::ozaki::{implied_constant, required_splits_in, ComputeMode};
@@ -25,6 +25,7 @@ use crate::perfmodel::{emulated_gemm_time, gemm_flops, native_gemm_time, GpuSpec
 use crate::precision::{
     probe_dgemm, probe_seed, probe_zgemm, sample_rows, Governor, PrecisionConfig, PrecisionMode,
 };
+use crate::resilience::{OffloadBackend, OffloadConfig, Resilience};
 use crate::runtime::{ArtifactKind, Runtime};
 
 /// Dispatcher configuration (the CLI / config-file surface).
@@ -56,6 +57,10 @@ pub struct DispatchConfig {
     /// `OZACCEL_SUBMIT_DEADLINE_MS`): bounded in-flight work and the
     /// blocking-submit deadline.
     pub limits: LimitsConfig,
+    /// Offload resilience knobs (`[offload]` / `OZACCEL_OFFLOAD_*`):
+    /// the retry/backoff/deadline budget, circuit-breaker thresholds,
+    /// and which device backend to attach (`pjrt` / `sim`).
+    pub offload: OffloadConfig,
 }
 
 impl Default for DispatchConfig {
@@ -73,6 +78,7 @@ impl Default for DispatchConfig {
             kernels: KernelSelector::from_env(),
             batch: BatchConfig::from_env(),
             limits: LimitsConfig::from_env(),
+            offload: OffloadConfig::from_env(),
         }
     }
 }
@@ -95,20 +101,29 @@ impl DispatchConfig {
 pub struct Dispatcher {
     cfg: DispatchConfig,
     runtime: Option<Runtime>,
+    resilience: Resilience,
+    /// Why runtime startup degraded to host-only, when it did — the
+    /// report header's evidence that "host-only" was not a choice.
+    startup_degraded: Option<String>,
     sites: Mutex<SiteRegistry>,
     mem: Mutex<MemModel>,
     governor: Governor,
 }
 
 impl Dispatcher {
-    /// Build a dispatcher; connects to the PJRT runtime unless the
-    /// policy forces host execution.  An inconsistent precision
-    /// configuration (e.g. `min_splits > max_splits`) is rejected here,
-    /// mirroring the config parser's loud validation.
+    /// Build a dispatcher; connects to the configured device backend
+    /// (PJRT, or the simulated device under `[offload] backend =
+    /// "sim"`) unless the policy forces host execution.  An
+    /// inconsistent precision configuration (e.g. `min_splits >
+    /// max_splits`) is rejected here, mirroring the config parser's
+    /// loud validation.
     pub fn new(cfg: DispatchConfig) -> Result<Self> {
         cfg.precision.validate()?;
+        let mut startup_degraded = None;
         let runtime = if cfg.policy.force_host {
             None
+        } else if cfg.offload.backend == OffloadBackend::Sim {
+            Some(Runtime::simulated())
         } else {
             let rt = match &cfg.artifact_dir {
                 Some(dir) => Runtime::new(dir.clone()),
@@ -118,15 +133,19 @@ impl Dispatcher {
                 Ok(rt) => Some(rt),
                 Err(e) => {
                     warn!("dispatcher: no runtime ({e}); falling back to host-only");
+                    startup_degraded = Some(e.to_string());
                     None
                 }
             }
         };
         let mem = MemModel::new(cfg.strategy, cfg.gpu);
         let governor = Governor::new(cfg.precision);
+        let resilience = Resilience::new(cfg.offload);
         Ok(Dispatcher {
             cfg,
             runtime,
+            resilience,
+            startup_degraded,
             sites: Mutex::new(SiteRegistry::new()),
             mem: Mutex::new(mem),
             governor,
@@ -150,9 +169,25 @@ impl Dispatcher {
         &self.governor
     }
 
-    /// Whether a live PJRT runtime is attached.
+    /// Whether a live device runtime is attached.
     pub fn has_runtime(&self) -> bool {
         self.runtime.is_some()
+    }
+
+    /// The offload resilience state (retry configuration plus the
+    /// backend's circuit breaker) — observable for tests and tools.
+    pub fn resilience(&self) -> &Resilience {
+        &self.resilience
+    }
+
+    /// How the device runtime came up: live (with its backend name),
+    /// host-only by configuration, or degraded because startup failed.
+    pub fn runtime_health(&self) -> RuntimeHealth {
+        match (&self.runtime, &self.startup_degraded) {
+            (Some(rt), _) => RuntimeHealth::Live(rt.backend_name()),
+            (None, Some(why)) => RuntimeHealth::Degraded(why.clone()),
+            (None, None) => RuntimeHealth::HostOnly,
+        }
     }
 
     /// The engine admission limits batch scopes inherit
@@ -240,18 +275,22 @@ impl Dispatcher {
     /// because the policy prices the emulated slice-pair work, not the
     /// raw FLOPs.
     pub(crate) fn route(&self, mode: ComputeMode, m: usize, k: usize, n: usize) -> OffloadDecision {
-        if self.runtime.is_none() {
+        let Some(rt) = self.runtime.as_ref() else {
             return OffloadDecision::HostForced;
-        }
+        };
         let kind = ArtifactKind::for_mode(mode);
-        let covered = self
-            .runtime
-            .as_ref()
-            .map(|rt| rt.covers(kind, m, k, n))
-            .unwrap_or(false);
-        self.cfg
-            .policy
-            .decide(m, k, n, mode.splits().unwrap_or(0), covered)
+        // Health before coverage, both lazy (see `RoutingPolicy::decide`):
+        // a call stuck behind an open breaker skips the manifest lookup,
+        // and sub-threshold calls tick neither the breaker's cooldown nor
+        // the manifest.
+        self.cfg.policy.decide(
+            m,
+            k,
+            n,
+            mode.splits().unwrap_or(0),
+            || rt.covers(kind, m, k, n),
+            || self.resilience.admits(),
+        )
     }
 
     /// The host-kernel selector dispatched calls run under — shared
@@ -566,14 +605,17 @@ impl Dispatcher {
         governed: bool,
     ) -> Result<ZMat> {
         let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        if m == 0 || k == 0 || n == 0 {
+            return self.degenerate_complex(site, a, b);
+        }
         let mode = if governed {
             self.governor.apply(site, mode, k).mode
         } else {
             mode
         };
-        let offloaded = self.route(mode, m, k, n).offloaded();
+        let decision = self.route(mode, m, k, n);
 
-        if offloaded {
+        if decision.offloaded() {
             // Decomposed path: each real component flows through
             // dgemm_mode_at with its own pricing and site record.  The
             // governor has already settled the mode for this site, so
@@ -665,11 +707,129 @@ impl Dispatcher {
                     cert_escalations: if i == 0 { fin.cert_escalations } else { 0 },
                     cert_fp64: i == 0 && fin.cert_fp64,
                     wide,
+                    // One logical call: the lead record carries the
+                    // breaker-degradation mark, like probe/cert cost.
+                    offload_fallback: i == 0 && decision == OffloadDecision::HostDegraded,
                     ..Default::default()
                 },
             );
         }
         Ok(fin.result)
+    }
+
+    /// Execute one routed-offload GEMM under the resilience policy:
+    /// bounded retries with deterministic exponential backoff, a
+    /// per-call deadline spanning attempts *and* backoff sleeps, and
+    /// breaker accounting on every attempt.  Exhaustion — or a missing
+    /// runtime, the checked replacement for the old `.unwrap()` on the
+    /// offload arm — never surfaces as an error: it degrades to
+    /// [`OffloadOutcome::Fallback`] and the caller re-executes the call
+    /// through the host path, bit-identical to host routing.  Shape
+    /// errors are the exception: they are deterministic caller bugs,
+    /// not device faults, so they propagate unretried.
+    fn offload_gemm(
+        &self,
+        site: &'static str,
+        kind: ArtifactKind,
+        a: &Mat<f64>,
+        b: &Mat<f64>,
+    ) -> Result<OffloadOutcome> {
+        let trips_before = self.resilience.breaker().trips();
+        let trips_delta = || self.resilience.breaker().trips() - trips_before;
+        let Some(rt) = self.runtime.as_ref() else {
+            // Routing never offloads without a runtime, but degrade
+            // rather than trust every caller with that invariant.
+            return Ok(OffloadOutcome::Fallback {
+                retries: 0,
+                trips: 0,
+            });
+        };
+        let cfg = *self.resilience.config();
+        let started = Instant::now();
+        let mut retries = 0u64;
+        for attempt in 1..=cfg.attempts() {
+            if attempt > 1 {
+                let sleep = cfg.backoff(attempt - 1);
+                if cfg.deadline().is_some_and(|d| started.elapsed() + sleep >= d) {
+                    debug!("offload {site}: deadline exhausted after {retries} retries");
+                    break;
+                }
+                if !sleep.is_zero() {
+                    std::thread::sleep(sleep);
+                }
+                retries += 1;
+            }
+            let attempt_result = maybe_fail(FaultSite::OffloadTimeout, Error::Timeout)
+                .and_then(|()| maybe_fail(FaultSite::OffloadError, Error::Xla))
+                .and_then(|()| maybe_fail(FaultSite::OffloadTransient, Error::Xla))
+                .and_then(|()| rt.gemm(kind, a, b));
+            match attempt_result {
+                Ok(result) => {
+                    self.resilience.on_success();
+                    return Ok(OffloadOutcome::Device { result, retries });
+                }
+                Err(Error::Shape(msg)) => return Err(Error::Shape(msg)),
+                Err(e) => {
+                    self.resilience.on_failure();
+                    debug!("offload {site}: device attempt {attempt} failed ({e})");
+                }
+            }
+        }
+        Ok(OffloadOutcome::Fallback {
+            retries,
+            trips: trips_delta(),
+        })
+    }
+
+    /// Degenerate GEMM shapes (any of `m`/`k`/`n` zero) short-circuit
+    /// to the exact all-zero (possibly empty) product without routing:
+    /// no artifact bucket covers them, `k == 0` would hand the Ozaki
+    /// prepare stage an empty split, and the probe sampler has no rows
+    /// to draw.  Recorded as a host call so PEAK totals stay complete.
+    fn degenerate_real(&self, site: &'static str, a: &Mat<f64>, b: &Mat<f64>) -> Result<Mat<f64>> {
+        if a.cols() != b.rows() {
+            return Err(Error::Shape(format!(
+                "dgemm: {}x{} @ {}x{}",
+                a.rows(),
+                a.cols(),
+                b.rows(),
+                b.cols()
+            )));
+        }
+        self.sites.lock().unwrap().record(
+            site,
+            CallMeasurement {
+                flops: gemm_flops(a.rows(), a.cols(), b.cols()),
+                ..Default::default()
+            },
+        );
+        Ok(Mat::zeros(a.rows(), b.cols()))
+    }
+
+    /// Complex twin of [`Dispatcher::degenerate_real`]; keeps the
+    /// 4-real-GEMM decomposition in PEAK accounting like every other
+    /// complex path.
+    fn degenerate_complex(&self, site: &'static str, a: &ZMat, b: &ZMat) -> Result<ZMat> {
+        if a.cols() != b.rows() {
+            return Err(Error::Shape(format!(
+                "zgemm: {}x{} @ {}x{}",
+                a.rows(),
+                a.cols(),
+                b.rows(),
+                b.cols()
+            )));
+        }
+        let mut sites = self.sites.lock().unwrap();
+        for _ in 0..4 {
+            sites.record(
+                site,
+                CallMeasurement {
+                    flops: gemm_flops(a.rows(), a.cols(), b.cols()),
+                    ..Default::default()
+                },
+            );
+        }
+        Ok(ZMat::zeros(a.rows(), b.cols()))
     }
 
     pub(crate) fn dgemm_mode_at(
@@ -681,6 +841,9 @@ impl Dispatcher {
         governed: bool,
     ) -> Result<Mat<f64>> {
         let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        if m == 0 || k == 0 || n == 0 {
+            return self.degenerate_real(site, a, b);
+        }
         let mode = if governed {
             self.governor.apply(site, mode, k).mode
         } else {
@@ -689,12 +852,32 @@ impl Dispatcher {
         let decision = self.route(mode, m, k, n);
 
         let mut host_info = None;
+        let mut retries = 0u64;
+        let mut trips = 0u64;
+        let mut fell_back = false;
         let t0 = Instant::now();
-        let result = if decision.offloaded() {
-            crate::faults::maybe_fail(FaultSite::OffloadError, Error::Xla)?;
-            let kind = ArtifactKind::for_mode(mode);
-            self.runtime.as_ref().unwrap().gemm(kind, a, b)?
-        } else {
+        let mut device = None;
+        if decision.offloaded() {
+            match self.offload_gemm(site, ArtifactKind::for_mode(mode), a, b)? {
+                OffloadOutcome::Device { result, retries: r } => {
+                    retries = r;
+                    device = Some(result);
+                }
+                OffloadOutcome::Fallback {
+                    retries: r,
+                    trips: t,
+                } => {
+                    // Retries/deadline exhausted: re-execute through the
+                    // host path below, bit-identical to host routing.
+                    retries = r;
+                    trips = t;
+                    fell_back = true;
+                }
+            }
+        }
+        let offloaded = device.is_some();
+        let result = match device {
+            Some(r) => r,
             // Host execution: route through the configured kernel
             // selector (naive reference vs blocked/threaded core),
             // attributing pack time and panel-cache traffic to the site
@@ -703,35 +886,39 @@ impl Dispatcher {
             // dispatch a window can absorb (and double-count) another
             // thread's traffic, so per-site and summed values are
             // approximate; only the cache's own counters are exact.
-            let cache_before = Self::cache_window(mode);
-            let r = match mode {
-                ComputeMode::Dgemm => self.cfg.kernels.dgemm(a, b)?,
-                ComputeMode::Int8 { splits } => self.cfg.kernels.ozaki_dgemm(a, b, splits)?,
-            };
-            let mr = match mode {
-                ComputeMode::Dgemm => MR_F64,
-                ComputeMode::Int8 { .. } => MR_I8,
-            };
-            let mut info = HostCallInfo {
-                kernel: self.cfg.kernels.kernel.name(),
-                isa: self.host_isa(mode),
-                bands: self.cfg.kernels.bands_for(m, mr),
-                ..Default::default()
-            };
-            if let Some(before) = cache_before {
-                let after = panel_cache::global_stats();
-                info.pack_s = after.pack_s - before.pack_s;
-                info.cache_hits = after.hits - before.hits;
-                info.cache_misses = after.misses - before.misses;
+            None => {
+                let cache_before = Self::cache_window(mode);
+                let r = match mode {
+                    ComputeMode::Dgemm => self.cfg.kernels.dgemm(a, b)?,
+                    ComputeMode::Int8 { splits } => self.cfg.kernels.ozaki_dgemm(a, b, splits)?,
+                };
+                let mr = match mode {
+                    ComputeMode::Dgemm => MR_F64,
+                    ComputeMode::Int8 { .. } => MR_I8,
+                };
+                let mut info = HostCallInfo {
+                    kernel: self.cfg.kernels.kernel.name(),
+                    isa: self.host_isa(mode),
+                    bands: self.cfg.kernels.bands_for(m, mr),
+                    ..Default::default()
+                };
+                if let Some(before) = cache_before {
+                    let after = panel_cache::global_stats();
+                    info.pack_s = after.pack_s - before.pack_s;
+                    info.cache_hits = after.hits - before.hits;
+                    info.cache_misses = after.misses - before.misses;
+                }
+                host_info = Some(info);
+                r
             }
-            host_info = Some(info);
-            r
         };
         let measured = t0.elapsed().as_secs_f64();
         let fin = self.finish_real(site, mode, a, b, result, governed)?;
 
-        // Model GPU compute + movement for offloaded calls only.
-        let (gpu_s, move_s) = if decision.offloaded() {
+        // Model GPU compute + movement only for calls the device
+        // actually served — a fallback execution must not pollute the
+        // modeled GPU/movement columns.
+        let (gpu_s, move_s) = if offloaded {
             let gpu_s = match mode {
                 ComputeMode::Dgemm => native_gemm_time(&self.cfg.gpu, m, k, n),
                 ComputeMode::Int8 { splits } => {
@@ -765,7 +952,7 @@ impl Dispatcher {
             site,
             CallMeasurement {
                 flops: gemm_flops(m, k, n),
-                offloaded: decision.offloaded(),
+                offloaded,
                 measured_s: measured + fin.extra_s,
                 modeled_gpu_s: gpu_s,
                 modeled_move_s: move_s,
@@ -776,6 +963,9 @@ impl Dispatcher {
                 cert_escalations: fin.cert_escalations,
                 cert_fp64: fin.cert_fp64,
                 wide,
+                offload_retries: retries,
+                offload_fallback: fell_back || decision == OffloadDecision::HostDegraded,
+                breaker_trips: trips,
                 ..Default::default()
             },
         );
@@ -825,6 +1015,7 @@ impl Dispatcher {
         Report {
             mode: self.cfg.mode,
             precision: self.precision().mode,
+            runtime: self.runtime_health(),
             strategy: self.cfg.strategy,
             gpu_name: self.cfg.gpu.name,
             total_calls: t.calls,
@@ -847,6 +1038,16 @@ impl Dispatcher {
         self.mem.lock().unwrap().reset();
         self.governor.reset();
     }
+}
+
+/// What one resilient offload attempt chain produced
+/// ([`Dispatcher::offload_gemm`]).
+enum OffloadOutcome {
+    /// The device returned a result, after `retries` re-attempts.
+    Device { result: Mat<f64>, retries: u64 },
+    /// Retries/deadline exhausted (every attempt reported to the
+    /// breaker): the caller re-executes on the host path.
+    Fallback { retries: u64, trips: u64 },
 }
 
 /// Post-execution accounting of one governed GEMM
@@ -1234,6 +1435,76 @@ mod tests {
         let rep = d.try_report().expect("uncontended locks");
         assert_eq!(rep.total_calls, 1);
         super::super::crash::clear_crash_report_source();
+    }
+
+    #[test]
+    fn degraded_startup_is_recorded_in_the_report_header() {
+        // A broken artifact dir degrades to host-only — and the report
+        // header must say so, distinguishably from host-only-by-config.
+        let cfg = DispatchConfig {
+            artifact_dir: Some(PathBuf::from("/nonexistent-dir-xyz")),
+            ..Default::default()
+        };
+        let d = Dispatcher::new(cfg).unwrap();
+        assert!(!d.has_runtime());
+        assert!(matches!(d.runtime_health(), RuntimeHealth::Degraded(_)));
+        assert!(d.report().render().contains("runtime=degraded("));
+
+        let host = host_dispatcher(ComputeMode::Dgemm);
+        assert_eq!(host.runtime_health(), RuntimeHealth::HostOnly);
+        assert!(host.report().render().contains("runtime=host-only"));
+    }
+
+    #[test]
+    fn sim_backend_attaches_and_reports_live() {
+        let cfg = DispatchConfig {
+            offload: crate::resilience::OffloadConfig {
+                backend: OffloadBackend::Sim,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let d = Dispatcher::new(cfg).unwrap();
+        assert!(d.has_runtime());
+        assert_eq!(d.runtime_health(), RuntimeHealth::Live("sim"));
+        // A large-enough call routes to the sim device and is recorded
+        // as offloaded — bits identical to the host path by
+        // construction.
+        let mut rng = Rng::new(31);
+        let a = rand_mat(&mut rng, 64, 64);
+        let b = rand_mat(&mut rng, 64, 64);
+        let got = d.dgemm(&a, &b).unwrap();
+        let want = linalg::dgemm(&a, &b).unwrap();
+        assert_eq!(got.data(), want.data());
+        let rep = d.report();
+        assert_eq!(rep.offloaded_calls, 1);
+        assert!(rep.render().contains("runtime=sim"));
+    }
+
+    #[test]
+    fn degenerate_shapes_return_exact_zero_products() {
+        let d = host_dispatcher(ComputeMode::Int8 { splits: 6 });
+        // k == 0 with splits > 0: an empty contraction the Ozaki
+        // prepare stage must never see.
+        let a = Mat::zeros(4, 0);
+        let b = Mat::zeros(0, 5);
+        let c = d.dgemm(&a, &b).unwrap();
+        assert_eq!((c.rows(), c.cols()), (4, 5));
+        assert!(c.data().iter().all(|&x| x == 0.0));
+        // m == 0 / n == 0: empty outputs.
+        let c = d
+            .dgemm_at(call_site(), ComputeMode::Dgemm, &Mat::zeros(0, 3), &Mat::zeros(3, 2))
+            .unwrap();
+        assert_eq!((c.rows(), c.cols()), (0, 2));
+        let z = d.zgemm(&ZMat::zeros(3, 0), &ZMat::zeros(0, 2)).unwrap();
+        assert_eq!((z.rows(), z.cols()), (3, 2));
+        assert!(z.data().iter().all(|&v| v.abs() == 0.0));
+        // Mismatched inner dims still error, even when degenerate.
+        assert!(d.dgemm(&Mat::zeros(2, 0), &Mat::zeros(1, 2)).is_err());
+        assert!(d.zgemm(&ZMat::zeros(2, 0), &ZMat::zeros(1, 2)).is_err());
+        let rep = d.report();
+        assert_eq!(rep.total_calls, 2 + 4, "zgemm keeps the 4-GEMM accounting");
+        assert_eq!(rep.offloaded_calls, 0);
     }
 
     #[test]

@@ -44,4 +44,4 @@ pub use dispatcher::{call_site, DispatchConfig, Dispatcher};
 pub(crate) use dispatcher::Finished;
 pub use kernel_select::{HostCallInfo, HostKernel, KernelSelector};
 pub use policy::{emulation_work_factor, OffloadDecision, RoutingPolicy};
-pub use stats::{GemmKind, Report};
+pub use stats::{GemmKind, Report, RuntimeHealth};

@@ -26,6 +26,10 @@ pub enum OffloadDecision {
     HostNoArtifact,
     /// Run on the host (dispatcher configured host-only).
     HostForced,
+    /// Run on the host (the backend's circuit breaker is open — the
+    /// device is sick and routing stops offering it calls until the
+    /// breaker's cooldown admits recovery probes).
+    HostDegraded,
 }
 
 impl OffloadDecision {
@@ -70,20 +74,39 @@ pub fn emulation_work_factor(splits: u32) -> f64 {
 impl RoutingPolicy {
     /// Decide for a GEMM of logical shape (m, k, n) executing at the
     /// governed split count `splits` (0 = native FP64).  `covered`
-    /// reports whether an artifact bucket exists for the shape.
+    /// reports whether an artifact bucket exists for the shape;
+    /// `healthy` whether the backend's circuit breaker admits the call.
     ///
     /// The threshold compares `gemm_flops · s(s+1)/2` — the work the
     /// device would actually absorb — so callers must pass the split
     /// count the precision governor *settled on*, after
     /// `Governor::apply`, not the configured request.
-    pub fn decide(&self, m: usize, k: usize, n: usize, splits: u32, covered: bool) -> OffloadDecision {
+    ///
+    /// Both predicates are lazy, and ordered health-before-coverage on
+    /// purpose: a site stuck behind an open breaker answers
+    /// [`OffloadDecision::HostDegraded`] without paying the artifact
+    /// manifest lookup (`covered` is never invoked), and sub-threshold
+    /// calls consult neither — they were never device candidates, so
+    /// they must not tick the breaker's recovery cooldown either.
+    pub fn decide(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        splits: u32,
+        covered: impl FnOnce() -> bool,
+        healthy: impl FnOnce() -> bool,
+    ) -> OffloadDecision {
         if self.force_host {
             return OffloadDecision::HostForced;
         }
         if gemm_flops(m, k, n) * emulation_work_factor(splits) < self.min_flops {
             return OffloadDecision::HostSmall;
         }
-        if !covered {
+        if !healthy() {
+            return OffloadDecision::HostDegraded;
+        }
+        if !covered() {
             return OffloadDecision::HostNoArtifact;
         }
         OffloadDecision::Offload
@@ -94,18 +117,32 @@ impl RoutingPolicy {
 mod tests {
     use super::*;
 
+    /// `decide` with both predicates constant (most tests don't care
+    /// about laziness).
+    fn decide(
+        p: &RoutingPolicy,
+        m: usize,
+        k: usize,
+        n: usize,
+        s: u32,
+        cov: bool,
+        ok: bool,
+    ) -> OffloadDecision {
+        p.decide(m, k, n, s, || cov, || ok)
+    }
+
     #[test]
     fn default_threshold_is_64_cubed() {
         let p = RoutingPolicy::default();
-        assert_eq!(p.decide(64, 64, 64, 0, true), OffloadDecision::Offload);
-        assert_eq!(p.decide(16, 16, 16, 0, true), OffloadDecision::HostSmall);
+        assert_eq!(decide(&p, 64, 64, 64, 0, true, true), OffloadDecision::Offload);
+        assert_eq!(decide(&p, 16, 16, 16, 0, true, true), OffloadDecision::HostSmall);
     }
 
     #[test]
     fn uncovered_shapes_fall_back() {
         let p = RoutingPolicy::default();
         assert_eq!(
-            p.decide(4096, 4096, 4096, 0, false),
+            decide(&p, 4096, 4096, 4096, 0, false, true),
             OffloadDecision::HostNoArtifact
         );
     }
@@ -116,17 +153,17 @@ mod tests {
             force_host: true,
             ..Default::default()
         };
-        assert_eq!(p.decide(512, 512, 512, 0, true), OffloadDecision::HostForced);
-        assert!(!p.decide(512, 512, 512, 6, true).offloaded());
+        assert_eq!(decide(&p, 512, 512, 512, 0, true, true), OffloadDecision::HostForced);
+        assert!(!decide(&p, 512, 512, 512, 6, true, true).offloaded());
     }
 
     #[test]
     fn rectangular_shapes_use_flops_not_dims() {
         // 128 x 8 x 128 has fewer FLOPs than 64^3 → host
         let p = RoutingPolicy::default();
-        assert_eq!(p.decide(128, 8, 128, 0, true), OffloadDecision::HostSmall);
+        assert_eq!(decide(&p, 128, 8, 128, 0, true, true), OffloadDecision::HostSmall);
         // 256 x 64 x 256 clears the bar
-        assert_eq!(p.decide(256, 64, 256, 0, true), OffloadDecision::Offload);
+        assert_eq!(decide(&p, 256, 64, 256, 0, true, true), OffloadDecision::Offload);
     }
 
     #[test]
@@ -135,11 +172,48 @@ mod tests {
         // the device absorbs 21 slice-pair products, so the emulated
         // work clears the same bar.
         let p = RoutingPolicy::default();
-        assert_eq!(p.decide(32, 32, 32, 0, true), OffloadDecision::HostSmall);
-        assert_eq!(p.decide(32, 32, 32, 6, true), OffloadDecision::Offload);
+        assert_eq!(decide(&p, 32, 32, 32, 0, true, true), OffloadDecision::HostSmall);
+        assert_eq!(decide(&p, 32, 32, 32, 6, true, true), OffloadDecision::Offload);
         // ... while a truly tiny GEMM stays on the host at any split
         // count the governor can legally pick (3..=18).
-        assert_eq!(p.decide(8, 8, 8, 18, true), OffloadDecision::HostSmall);
+        assert_eq!(decide(&p, 8, 8, 8, 18, true, true), OffloadDecision::HostSmall);
+    }
+
+    #[test]
+    fn unhealthy_backends_degrade_before_coverage_is_consulted() {
+        let p = RoutingPolicy::default();
+        assert_eq!(decide(&p, 512, 512, 512, 0, true, false), OffloadDecision::HostDegraded);
+        assert!(!OffloadDecision::HostDegraded.offloaded());
+        // Coverage is never evaluated behind an open breaker: that
+        // lookup is exactly the routing round-trip the decision skips.
+        let looked = std::cell::Cell::new(false);
+        let d = p.decide(
+            512,
+            512,
+            512,
+            0,
+            || {
+                looked.set(true);
+                true
+            },
+            || false,
+        );
+        assert_eq!(d, OffloadDecision::HostDegraded);
+        assert!(!looked.get(), "open breaker must skip the coverage lookup");
+    }
+
+    #[test]
+    fn sub_threshold_calls_consult_neither_predicate() {
+        let p = RoutingPolicy::default();
+        let d = p.decide(
+            8,
+            8,
+            8,
+            0,
+            || panic!("coverage consulted for a host-small call"),
+            || panic!("breaker ticked for a host-small call"),
+        );
+        assert_eq!(d, OffloadDecision::HostSmall);
     }
 
     #[test]

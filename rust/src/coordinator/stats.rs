@@ -15,6 +15,33 @@ pub enum GemmKind {
     Zgemm,
 }
 
+/// How the dispatcher's device runtime came up — surfaced in the
+/// report header so "host-only because the runtime failed to start" is
+/// distinguishable from "host-only by configuration" (the two used to
+/// render identically, hiding broken installs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RuntimeHealth {
+    /// A device runtime is attached; the label is its backend name
+    /// (`pjrt` / `sim`).
+    Live(&'static str),
+    /// Host-only by configuration (`force_host` routing).
+    HostOnly,
+    /// Host-only because runtime initialisation failed; carries the
+    /// startup error text.
+    Degraded(String),
+}
+
+impl RuntimeHealth {
+    /// Header label: `pjrt` / `sim` / `host-only` / `degraded(<why>)`.
+    pub fn label(&self) -> String {
+        match self {
+            RuntimeHealth::Live(name) => (*name).to_string(),
+            RuntimeHealth::HostOnly => "host-only".to_string(),
+            RuntimeHealth::Degraded(why) => format!("degraded({why})"),
+        }
+    }
+}
+
 /// Aggregated run report.
 #[derive(Clone, Debug)]
 pub struct Report {
@@ -22,6 +49,9 @@ pub struct Report {
     pub mode: ComputeMode,
     /// Precision-selection mode the governor ran under.
     pub precision: PrecisionMode,
+    /// Device-runtime startup state (live backend, host-only by
+    /// config, or degraded startup).
+    pub runtime: RuntimeHealth,
     /// Data-movement strategy that was modelled.
     pub strategy: DataMoveStrategy,
     /// GPU the movement/compute models priced against.
@@ -58,14 +88,15 @@ impl Report {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "== offload report: mode={} precision={} strategy={} gpu={} ==\n",
+            "== offload report: mode={} precision={} strategy={} gpu={} runtime={} ==\n",
             self.mode.name(),
             self.precision.name(),
             self.strategy.name(),
-            self.gpu_name
+            self.gpu_name,
+            self.runtime.label()
         ));
         out.push_str(&format!(
-            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>7} {:>5} {:>10} {:>9} {:>7} {:>9} {:>13} {:>10} {:>5}\n",
+            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>7} {:>5} {:>10} {:>9} {:>7} {:>9} {:>13} {:>10} {:>13} {:>5}\n",
             "call site",
             "calls",
             "offload",
@@ -82,11 +113,12 @@ impl Report {
             "probe_ms",
             "batch",
             "cert",
+            "route",
             "wide"
         ));
         for (site, s) in self.sites.iter() {
             out.push_str(&format!(
-                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>7} {:>5} {:>9.4}s {:>9} {:>7} {:>9.2} {:>13} {:>10} {:>5}\n",
+                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>7} {:>5} {:>9.4}s {:>9} {:>7} {:>9.2} {:>13} {:>10} {:>13} {:>5}\n",
                 site,
                 s.calls,
                 s.offloaded,
@@ -103,6 +135,7 @@ impl Report {
                 s.probe_s * 1e3,
                 s.batch_cell(),
                 s.cert_cell(),
+                s.route_cell(),
                 s.wide_calls,
             ));
         }
@@ -204,12 +237,16 @@ mod tests {
                 cert_escalations: 1,
                 cert_fp64: false,
                 wide: true,
+                offload_retries: 3,
+                offload_fallback: true,
+                breaker_trips: 1,
                 ..Default::default()
             },
         );
         let r = Report {
             mode: ComputeMode::Int8 { splits: 6 },
             precision: crate::precision::PrecisionMode::Feedback,
+            runtime: RuntimeHealth::Degraded("manifest error: no manifest.txt".into()),
             strategy: DataMoveStrategy::FirstTouchMigrate,
             gpu_name: "GH200",
             total_calls: 1,
@@ -253,6 +290,23 @@ mod tests {
             txt.contains("2c/1e/0f"),
             "certification checks/escalations/fp64 surfaced per site"
         );
+        assert!(txt.contains("route"), "header shows the resilience-route column");
+        assert!(
+            txt.contains("0o/3r/1f/1t"),
+            "offloads/retries/fallbacks/breaker-trips surfaced per site"
+        );
+        assert!(
+            txt.contains("runtime=degraded(manifest error: no manifest.txt)"),
+            "degraded startup is distinguishable from host-only-by-config"
+        );
         assert!((r.modeled_total_s() - 0.11).abs() < 1e-12);
+    }
+
+    #[test]
+    fn runtime_health_labels_are_stable() {
+        assert_eq!(RuntimeHealth::Live("pjrt").label(), "pjrt");
+        assert_eq!(RuntimeHealth::Live("sim").label(), "sim");
+        assert_eq!(RuntimeHealth::HostOnly.label(), "host-only");
+        assert_eq!(RuntimeHealth::Degraded("boom".into()).label(), "degraded(boom)");
     }
 }

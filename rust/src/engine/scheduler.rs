@@ -32,6 +32,7 @@ use super::queue::{Payload, Request};
 use super::BatchStats;
 use crate::coordinator::{
     BatchCallInfo, CallMeasurement, CallSiteId, Dispatcher, HostCallInfo, HostKernel,
+    OffloadDecision,
 };
 use crate::error::{Error, Result};
 use crate::kernels::{
@@ -93,6 +94,12 @@ fn execute_bucket(
     members: Vec<Request>,
     stats: &Mutex<BatchStats>,
 ) -> Result<()> {
+    // Degenerate shapes (any dim zero) short-circuit inside the
+    // dispatcher itself; re-issue them directly so the fused prepare
+    // below never sees an empty contraction.
+    if key.m == 0 || key.k == 0 || key.n == 0 {
+        return direct_all(disp, members, stats);
+    }
     // Native-FP64 requests and the naive oracle selector take the
     // sequential path verbatim (no fusion win to be had, and the
     // bit-identity argument stays a tautology).
@@ -138,15 +145,23 @@ fn execute_bucket(
             }
             Some(s) => s,
         };
-        if disp.route(mode, key.m, key.k, key.n).offloaded() {
-            // Offload-routed shapes keep the per-call PJRT path.
+        let decision = disp.route(mode, key.m, key.k, key.n);
+        if decision.offloaded() {
+            // Offload-routed shapes keep the per-call device path —
+            // which now includes retry/fallback, so a failed-over
+            // member settles through `dgemm_mode_at`'s own accounting
+            // and cannot poison its bucket-mates.
             direct_all(disp, group, stats)?;
             continue;
         }
+        // An open breaker lands the whole group on the fused host path;
+        // mark each member's record as a degradation, exactly like the
+        // sequential entry points do.
+        let degraded = decision == OffloadDecision::HostDegraded;
         if key.complex {
-            fused_complex(disp, key, mode, splits, group, stats)?;
+            fused_complex(disp, key, mode, splits, group, degraded, stats)?;
         } else {
-            fused_real(disp, key, mode, splits, group, stats)?;
+            fused_real(disp, key, mode, splits, group, degraded, stats)?;
         }
     }
     Ok(())
@@ -269,6 +284,7 @@ fn fused_real(
     mode: ComputeMode,
     splits: u32,
     group: Vec<Request>,
+    degraded: bool,
     stats: &Mutex<BatchStats>,
 ) -> Result<()> {
     let ecfg: KernelConfig = disp.selector().effective_config();
@@ -363,6 +379,7 @@ fn fused_real(
                 cert_escalations: fin.cert_escalations,
                 cert_fp64: fin.cert_fp64,
                 wide: matches!(fin.mode, ComputeMode::Int8 { .. }) && is_wide(key.k, fsplits),
+                offload_fallback: degraded,
                 ..Default::default()
             },
         );
@@ -381,6 +398,7 @@ fn fused_complex(
     mode: ComputeMode,
     splits: u32,
     group: Vec<Request>,
+    degraded: bool,
     stats: &Mutex<BatchStats>,
 ) -> Result<()> {
     let ecfg: KernelConfig = disp.selector().effective_config();
@@ -522,6 +540,7 @@ fn fused_complex(
                     cert_escalations: if i == 0 { fin.cert_escalations } else { 0 },
                     cert_fp64: i == 0 && fin.cert_fp64,
                     wide,
+                    offload_fallback: i == 0 && degraded,
                     ..Default::default()
                 },
             );

@@ -37,6 +37,10 @@ pub enum Error {
     /// PJRT / XLA runtime failure.
     Xla(String),
 
+    /// An offloaded call exceeded its `[offload] deadline_ms` budget
+    /// across retries (the resilience layer then falls back to host).
+    Timeout(String),
+
     /// I/O failure.
     Io(std::io::Error),
 }
@@ -65,6 +69,7 @@ impl fmt::Display for Error {
             Error::Numerical(msg) => write!(f, "numerical error: {msg}"),
             Error::Busy(msg) => write!(f, "engine busy: {msg}"),
             Error::Xla(msg) => write!(f, "xla runtime: {msg}"),
+            Error::Timeout(msg) => write!(f, "offload deadline: {msg}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -116,6 +121,10 @@ mod tests {
         assert_eq!(
             Error::Busy("queue full".into()).to_string(),
             "engine busy: queue full"
+        );
+        assert_eq!(
+            Error::Timeout("2000ms exceeded".into()).to_string(),
+            "offload deadline: 2000ms exceeded"
         );
     }
 

@@ -5,23 +5,30 @@
 //! ticket, certified mode never ships an uncertified result, the pool
 //! and panel cache survive member failures — are only testable if the
 //! failures can be *provoked on demand*.  This module plants named
-//! injection sites at the five failure domains:
+//! injection sites at the seven failure domains:
 //!
-//! | site            | where it fires                                   | effect            |
-//! |-----------------|--------------------------------------------------|-------------------|
-//! | `worker_panic`  | per-member band task of the fused batch sweep    | `panic!`          |
-//! | `slice_overflow`| INT8 sweep entry ([`crate::kernels::int8`])      | `Error::Numerical`|
-//! | `cache_corrupt` | packed-panel cache hit ([`crate::ozaki`] prepare)| forced repack     |
-//! | `probe_fail`    | dispatcher FP64 row probe                        | `Error::Numerical`|
-//! | `offload_error` | PJRT offload submission                          | `Error::Xla`      |
+//! | site               | where it fires                                   | effect            |
+//! |--------------------|--------------------------------------------------|-------------------|
+//! | `worker_panic`     | per-member band task of the fused batch sweep    | `panic!`          |
+//! | `slice_overflow`   | INT8 sweep entry ([`crate::kernels::int8`])      | `Error::Numerical`|
+//! | `cache_corrupt`    | packed-panel cache hit ([`crate::ozaki`] prepare)| forced repack     |
+//! | `probe_fail`       | dispatcher FP64 row probe                        | `Error::Numerical`|
+//! | `offload_error`    | device offload submission                        | `Error::Xla`      |
+//! | `offload_timeout`  | device offload submission                        | `Error::Timeout`  |
+//! | `offload_transient`| device offload submission                        | `Error::Xla`      |
 //!
 //! Firing is **deterministic**: each armed site draws from
 //! [`crate::util::rng::mix64`] over `seed ⊕ site-tag ⊕ draw-ordinal`,
 //! so a given `(prob, seed)` arming fires on exactly the same draws in
 //! every run, on every thread.  Sites are armed programmatically
-//! ([`arm`] / [`disarm_all`], used by the chaos tests) or from the
-//! environment: `OZACCEL_FAULTS=site:prob:seed[,site:prob:seed...]`,
-//! e.g. `OZACCEL_FAULTS=worker_panic:0.25:7,probe_fail:1:3`.
+//! ([`arm`] / [`arm_limited`] / [`disarm_all`], used by the chaos
+//! tests) or from the environment:
+//! `OZACCEL_FAULTS=site:prob:seed[:limit][,site:prob:seed[:limit]...]`,
+//! e.g. `OZACCEL_FAULTS=worker_panic:0.25:7,offload_transient:1:3:2`.
+//! The optional `limit` caps how many times the site fires before it
+//! goes quiet — `offload_transient:1:3:2` fails the first two draws and
+//! then succeeds forever, the canonical transient-device-glitch shape
+//! the retry layer must absorb.
 //!
 //! Without the `failpoints` feature every probe compiles to a constant
 //! `false` (the hooks cost nothing on release builds) and
@@ -41,18 +48,25 @@ pub enum FaultSite {
     CacheCorrupt,
     /// The a-posteriori FP64 row probe fails.
     ProbeFail,
-    /// The PJRT offload submission fails.
+    /// The device offload submission fails (hard backend error).
     OffloadError,
+    /// The device offload submission exceeds its deadline.
+    OffloadTimeout,
+    /// A transient device glitch: fails like `offload_error` but is
+    /// normally armed with a fire `limit` so retries eventually succeed.
+    OffloadTransient,
 }
 
 impl FaultSite {
     /// Every site, in table order.
-    pub const ALL: [FaultSite; 5] = [
+    pub const ALL: [FaultSite; 7] = [
         FaultSite::WorkerPanic,
         FaultSite::SliceOverflow,
         FaultSite::CacheCorrupt,
         FaultSite::ProbeFail,
         FaultSite::OffloadError,
+        FaultSite::OffloadTimeout,
+        FaultSite::OffloadTransient,
     ];
 
     /// Canonical snake_case name (the `OZACCEL_FAULTS` spelling).
@@ -63,6 +77,8 @@ impl FaultSite {
             FaultSite::CacheCorrupt => "cache_corrupt",
             FaultSite::ProbeFail => "probe_fail",
             FaultSite::OffloadError => "offload_error",
+            FaultSite::OffloadTimeout => "offload_timeout",
+            FaultSite::OffloadTransient => "offload_transient",
         }
     }
 
@@ -75,7 +91,8 @@ impl FaultSite {
             .ok_or_else(|| {
                 Error::Config(format!(
                     "bad fault site {s:?} (expected one of worker_panic | slice_overflow \
-                     | cache_corrupt | probe_fail | offload_error)"
+                     | cache_corrupt | probe_fail | offload_error | offload_timeout \
+                     | offload_transient)"
                 ))
             })
     }
@@ -114,18 +131,21 @@ mod plan {
         pub seed: u64,
         pub draws: u64,
         pub fired: u64,
+        /// Stop firing after this many hits (`None` = unlimited); the
+        /// transient-fault shape: fail N draws, then succeed forever.
+        pub limit: Option<u64>,
     }
 
-    pub(super) fn registry() -> &'static Mutex<[Option<Arm>; 5]> {
-        static PLAN: OnceLock<Mutex<[Option<Arm>; 5]>> = OnceLock::new();
+    pub(super) fn registry() -> &'static Mutex<[Option<Arm>; 7]> {
+        static PLAN: OnceLock<Mutex<[Option<Arm>; 7]>> = OnceLock::new();
         PLAN.get_or_init(|| {
-            let mut sites: [Option<Arm>; 5] = [None; 5];
+            let mut sites: [Option<Arm>; 7] = [None; 7];
             if let Ok(spec) = std::env::var("OZACCEL_FAULTS") {
-                for (site, prob, seed) in super::parse_spec(&spec).unwrap_or_else(|e| {
+                for (site, prob, seed, limit) in super::parse_spec(&spec).unwrap_or_else(|e| {
                     crate::util::env::invalid(
                         "OZACCEL_FAULTS",
                         &spec,
-                        &format!("site:prob:seed[,site:prob:seed...] — {e}"),
+                        &format!("site:prob:seed[:limit][,site:prob:seed[:limit]...] — {e}"),
                     )
                 }) {
                     sites[site.index()] = Some(Arm {
@@ -133,6 +153,7 @@ mod plan {
                         seed,
                         draws: 0,
                         fired: 0,
+                        limit,
                     });
                 }
             }
@@ -141,16 +162,17 @@ mod plan {
     }
 }
 
-/// Parse an `OZACCEL_FAULTS` specification into `(site, prob, seed)`
-/// triples.  `prob` must be a finite value in `[0, 1]`; `seed` a u64.
-pub fn parse_spec(spec: &str) -> Result<Vec<(FaultSite, f64, u64)>> {
+/// Parse an `OZACCEL_FAULTS` specification into `(site, prob, seed,
+/// limit)` tuples.  `prob` must be a finite value in `[0, 1]`; `seed` a
+/// u64; the optional fourth field caps how many times the site fires.
+pub fn parse_spec(spec: &str) -> Result<Vec<(FaultSite, f64, u64, Option<u64>)>> {
     let mut out = Vec::new();
     for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
         let mut parts = entry.split(':');
-        let (site, prob, seed) = (parts.next(), parts.next(), parts.next());
+        let (site, prob, seed, limit) = (parts.next(), parts.next(), parts.next(), parts.next());
         if parts.next().is_some() {
             return Err(Error::Config(format!(
-                "bad fault entry {entry:?} (expected site:prob:seed)"
+                "bad fault entry {entry:?} (expected site:prob:seed[:limit])"
             )));
         }
         let site = FaultSite::parse(site.unwrap_or(""))?;
@@ -169,7 +191,14 @@ pub fn parse_spec(spec: &str) -> Result<Vec<(FaultSite, f64, u64)>> {
             .trim()
             .parse()
             .map_err(|_| Error::Config(format!("bad fault seed in {entry:?}")))?;
-        out.push((site, prob, seed));
+        let limit = limit
+            .map(|raw| {
+                raw.trim()
+                    .parse::<u64>()
+                    .map_err(|_| Error::Config(format!("bad fault fire limit in {entry:?}")))
+            })
+            .transpose()?;
+        out.push((site, prob, seed, limit));
     }
     Ok(out)
 }
@@ -185,10 +214,30 @@ pub fn arm(site: FaultSite, prob: f64, seed: u64) {
             seed,
             draws: 0,
             fired: 0,
+            limit: None,
         });
     }
     #[cfg(not(feature = "failpoints"))]
     let _ = (site, prob, seed);
+}
+
+/// [`arm`] with a fire cap: the site fires at most `limit` times and
+/// then goes quiet — `arm_limited(OffloadTransient, 1.0, 0, 2)` fails
+/// the first two offload attempts and lets every later one through.
+/// No-op without the `failpoints` feature.
+pub fn arm_limited(site: FaultSite, prob: f64, seed: u64, limit: u64) {
+    #[cfg(feature = "failpoints")]
+    {
+        plan::registry().lock().unwrap()[site.index()] = Some(plan::Arm {
+            prob: prob.clamp(0.0, 1.0),
+            seed,
+            draws: 0,
+            fired: 0,
+            limit: Some(limit),
+        });
+    }
+    #[cfg(not(feature = "failpoints"))]
+    let _ = (site, prob, seed, limit);
 }
 
 /// Disarm every site (chaos tests call this between scenarios).
@@ -222,6 +271,9 @@ pub fn should_fire(site: FaultSite) -> bool {
     {
         let mut sites = plan::registry().lock().unwrap();
         if let Some(arm) = sites[site.index()].as_mut() {
+            if arm.limit.is_some_and(|cap| arm.fired >= cap) {
+                return false;
+            }
             arm.draws += 1;
             let word = crate::util::rng::mix64(arm.seed ^ site.tag() ^ arm.draws);
             let u = (word >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
@@ -293,6 +345,11 @@ mod tests {
         assert_eq!(plan[0].0, FaultSite::WorkerPanic);
         assert_eq!(plan[0].1, 0.25);
         assert_eq!(plan[1].2, 3);
+        assert_eq!(plan[0].3, None);
+        // The optional fourth field is a fire limit (transient faults).
+        let plan = parse_spec("offload_transient:1:3:2").unwrap();
+        assert_eq!(plan[0].0, FaultSite::OffloadTransient);
+        assert_eq!(plan[0].3, Some(2));
         assert!(parse_spec("").unwrap().is_empty());
         for bad in [
             "worker_panic",
@@ -300,7 +357,8 @@ mod tests {
             "worker_panic:2:1",
             "worker_panic:x:1",
             "worker_panic:0.5:y",
-            "worker_panic:0.5:1:9",
+            "worker_panic:0.5:1:z",
+            "worker_panic:0.5:1:9:2",
             "bogus:0.5:1",
         ] {
             assert!(parse_spec(bad).is_err(), "{bad:?} accepted");
@@ -331,6 +389,17 @@ mod tests {
         assert!((0..32).all(|_| should_fire(FaultSite::OffloadError)));
         arm(FaultSite::OffloadError, 0.0, 1);
         assert!((0..32).all(|_| !should_fire(FaultSite::OffloadError)));
+        disarm_all();
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn limited_arms_fire_exactly_n_times_then_go_quiet() {
+        let _g = plan_lock();
+        arm_limited(FaultSite::OffloadTransient, 1.0, 0, 3);
+        let hits: Vec<bool> = (0..8).map(|_| should_fire(FaultSite::OffloadTransient)).collect();
+        assert_eq!(hits, [true, true, true, false, false, false, false, false]);
+        assert_eq!(fired(FaultSite::OffloadTransient), 3);
         disarm_all();
     }
 

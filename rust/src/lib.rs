@@ -82,6 +82,21 @@
 //! `run.precision.*`).  The per-site split trajectory and probe cost
 //! appear in the PEAK report's `splits` and `probe_ms` columns.
 //!
+//! ## Resilient offload execution ([`resilience`])
+//!
+//! Device failures never surface as failed BLAS calls: every routed
+//! offload runs under bounded retries with deterministic exponential
+//! backoff and a per-call deadline, a per-backend **circuit breaker**
+//! (consecutive-failure trip → counted cooldown → half-open recovery
+//! probes) feeds back into routing so sick devices stop being offered
+//! calls, and exhausted calls **fall back to the host path** with
+//! results bit-identical to a host-routed call (`[offload]` /
+//! `OZACCEL_OFFLOAD_*`).  Retries, fallbacks, and breaker trips appear
+//! in the PEAK report's `route` column; the report header's `runtime=`
+//! label distinguishes a degraded startup from host-only-by-config.
+//! An in-process simulated device (`[offload] backend = "sim"`)
+//! exercises the whole seam without PJRT.
+//!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! model once, and the Rust binary is self-contained afterwards.
 //!
@@ -139,6 +154,7 @@ pub mod must;
 pub mod ozaki;
 pub mod perfmodel;
 pub mod precision;
+pub mod resilience;
 pub mod runtime;
 pub mod testing;
 pub mod util;

@@ -1,0 +1,287 @@
+//! Per-backend circuit breaker: closed → open → half-open → closed.
+//!
+//! The breaker is the health memory behind [`super::Resilience`]: a run
+//! of consecutive offload failures trips it **open**, routed calls then
+//! skip the device entirely (the dispatcher answers
+//! `OffloadDecision::HostDegraded` without even consulting artifact
+//! coverage), and after a cooldown counted in *routed health checks* —
+//! never wall-clock time, so every transition is replayable — it lets a
+//! bounded number of **half-open** probe calls through.  Probe
+//! successes close it again; any probe failure re-opens it with a fresh
+//! cooldown.
+//!
+//! Determinism contract: state only advances on three inputs —
+//! [`CircuitBreaker::admits`] (one cooldown tick), `on_success`, and
+//! `on_failure` — and the only randomness is the SplitMix64 cooldown
+//! jitter, seeded from the construction seed and the trip ordinal.
+//! Identical call sequences therefore produce identical transition
+//! sequences, which is what lets the chaos suite pin breaker behavior
+//! under seeded fault storms.
+
+use std::sync::Mutex;
+
+use crate::util::rng::mix64;
+
+/// Observable breaker state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: offloads flow, consecutive failures are counted.
+    Closed,
+    /// Tripped: offloads are refused until the cooldown expires.
+    Open,
+    /// Recovering: a bounded probe stream decides reopen vs close.
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Short lower-case label (`closed` / `open` / `half-open`).
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// Mutable breaker core; one [`Mutex`] keeps transitions atomic with
+/// respect to concurrent dispatch threads.
+#[derive(Debug)]
+struct Inner {
+    state: BreakerState,
+    /// Consecutive failures while closed (reset by any success).
+    consecutive: u32,
+    /// Remaining health checks before an open breaker half-opens.
+    cooldown_left: u32,
+    /// Consecutive probe successes while half-open.
+    probe_successes: u32,
+    /// Closed/half-open → open transitions, ever.
+    trips: u64,
+    /// All state transitions, ever (trips + half-opens + closes).
+    transitions: u64,
+}
+
+/// Deterministic consecutive-failure circuit breaker.
+///
+/// All three tuning knobs come from `[offload]`
+/// ([`super::OffloadConfig`]): `breaker_threshold` consecutive failures
+/// trip it, `breaker_cooldown` routed health checks reopen the gate for
+/// probes, and `breaker_probes` consecutive probe successes close it.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooldown: u32,
+    probes: u32,
+    seed: u64,
+    inner: Mutex<Inner>,
+}
+
+impl CircuitBreaker {
+    /// New closed breaker.  Zero thresholds are clamped to 1 (a breaker
+    /// that can never trip or never recover is a misconfiguration the
+    /// config layer rejects loudly; the clamp is belt-and-braces for
+    /// direct construction).
+    pub fn new(threshold: u32, cooldown: u32, probes: u32, seed: u64) -> Self {
+        CircuitBreaker {
+            threshold: threshold.max(1),
+            cooldown: cooldown.max(1),
+            probes: probes.max(1),
+            seed,
+            inner: Mutex::new(Inner {
+                state: BreakerState::Closed,
+                consecutive: 0,
+                cooldown_left: 0,
+                probe_successes: 0,
+                trips: 0,
+                transitions: 0,
+            }),
+        }
+    }
+
+    /// Health check at routing time: may the next call try the device?
+    ///
+    /// Closed and half-open admit.  Open consumes one cooldown tick; the
+    /// tick that exhausts the cooldown transitions to half-open and
+    /// admits — that very call is the first recovery probe, so an idle
+    /// site pays no extra round-trip discovering the breaker recovered.
+    pub fn admits(&self) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                if inner.cooldown_left > 1 {
+                    inner.cooldown_left -= 1;
+                    false
+                } else {
+                    inner.state = BreakerState::HalfOpen;
+                    inner.cooldown_left = 0;
+                    inner.probe_successes = 0;
+                    inner.transitions += 1;
+                    true
+                }
+            }
+        }
+    }
+
+    /// Record a successful device call (or recovery probe).
+    pub fn on_success(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.state {
+            BreakerState::Closed => inner.consecutive = 0,
+            BreakerState::HalfOpen => {
+                inner.probe_successes += 1;
+                if inner.probe_successes >= self.probes {
+                    inner.state = BreakerState::Closed;
+                    inner.consecutive = 0;
+                    inner.probe_successes = 0;
+                    inner.transitions += 1;
+                }
+            }
+            // A straggler finishing after the breaker tripped carries no
+            // new information about the *current* device state.
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Record a failed device attempt (each retry attempt counts — a
+    /// sick backend trips the breaker after `threshold` consecutive
+    /// attempt failures regardless of how they group into calls).
+    pub fn on_failure(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.state {
+            BreakerState::Closed => {
+                inner.consecutive += 1;
+                if inner.consecutive >= self.threshold {
+                    self.trip(&mut inner);
+                }
+            }
+            // Any half-open probe failure re-opens immediately.
+            BreakerState::HalfOpen => self.trip(&mut inner),
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Transition to open with a deterministic jittered cooldown.  The
+    /// jitter (up to cooldown/4 extra ticks, SplitMix64 over seed and
+    /// trip ordinal) de-synchronizes many sites re-probing a shared sick
+    /// backend; cooldowns under 8 get none so small-cooldown tests stay
+    /// pinned to the nominal count.
+    fn trip(&self, inner: &mut Inner) {
+        let jitter = if self.cooldown >= 8 {
+            (mix64(self.seed ^ inner.trips) % (self.cooldown as u64 / 4)) as u32
+        } else {
+            0
+        };
+        inner.state = BreakerState::Open;
+        inner.cooldown_left = self.cooldown + jitter;
+        inner.consecutive = 0;
+        inner.probe_successes = 0;
+        inner.trips += 1;
+        inner.transitions += 1;
+    }
+
+    /// Current state (for routing surfaces, PEAK, and tests).
+    pub fn state(&self) -> BreakerState {
+        self.inner.lock().unwrap().state
+    }
+
+    /// Closed/half-open → open transitions so far.
+    pub fn trips(&self) -> u64 {
+        self.inner.lock().unwrap().trips
+    }
+
+    /// Total state transitions so far (trips, half-opens, and closes).
+    pub fn transitions(&self) -> u64 {
+        self.inner.lock().unwrap().transitions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trips_after_consecutive_failures_and_success_resets_the_run() {
+        let b = CircuitBreaker::new(3, 4, 1, 0);
+        b.on_failure();
+        b.on_failure();
+        b.on_success(); // breaks the run
+        b.on_failure();
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn open_cooldown_counts_health_checks_then_half_opens() {
+        let b = CircuitBreaker::new(1, 3, 2, 0);
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        // cooldown 3 (< 8, so no jitter): two refusals, then the third
+        // check half-opens and admits as the first probe.
+        assert!(!b.admits());
+        assert!(!b.admits());
+        assert!(b.admits());
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // Two probe successes close it.
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.trips(), 1);
+        assert_eq!(b.transitions(), 3, "open, half-open, closed");
+    }
+
+    #[test]
+    fn half_open_failure_reopens_with_a_fresh_cooldown() {
+        let b = CircuitBreaker::new(1, 2, 1, 0);
+        b.on_failure();
+        assert!(!b.admits());
+        assert!(b.admits());
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 2);
+        // Full cooldown again before the next probe window.
+        assert!(!b.admits());
+        assert!(b.admits());
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+    }
+
+    #[test]
+    fn identical_sequences_are_bit_identical_even_with_jitter() {
+        // cooldown >= 8 engages the jitter; same seed + same event
+        // sequence must still transition at exactly the same points.
+        let mk = || CircuitBreaker::new(2, 16, 1, 0xD5EED);
+        let (x, y) = (mk(), mk());
+        for round in 0..3 {
+            for b in [&x, &y] {
+                b.on_failure();
+                b.on_failure();
+            }
+            assert_eq!(x.state(), BreakerState::Open, "round {round}");
+            loop {
+                let (ax, ay) = (x.admits(), y.admits());
+                assert_eq!(ax, ay, "round {round}: jittered cooldowns diverged");
+                if ax {
+                    break;
+                }
+            }
+            for b in [&x, &y] {
+                b.on_success();
+            }
+            assert_eq!(x.state(), BreakerState::Closed, "round {round}");
+            assert_eq!(x.trips(), y.trips());
+            assert_eq!(x.transitions(), y.transitions());
+        }
+    }
+
+    #[test]
+    fn state_names_are_stable() {
+        assert_eq!(BreakerState::Closed.name(), "closed");
+        assert_eq!(BreakerState::Open.name(), "open");
+        assert_eq!(BreakerState::HalfOpen.name(), "half-open");
+    }
+}

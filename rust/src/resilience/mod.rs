@@ -1,0 +1,312 @@
+//! Resilient offload execution (ISSUE 7): retry, backoff, deadline,
+//! and circuit-breaker host fallback around the device seam.
+//!
+//! The paper's premise is that an unmodified application can trust the
+//! interposed BLAS layer, so a flaky device backend must never surface
+//! as a failed `dgemm_`.  This module is the policy half of that
+//! promise; [`crate::coordinator::Dispatcher`] is the mechanism half:
+//!
+//! * [`OffloadConfig`] — `[offload]` / `OZACCEL_OFFLOAD_*` knobs:
+//!   bounded retries with deterministic exponential backoff, a per-call
+//!   deadline, the breaker thresholds, and the backend selector
+//!   ([`OffloadBackend`]).
+//! * [`CircuitBreaker`] — consecutive-failure trip, cooldown counted in
+//!   routed health checks, half-open recovery probes ([`breaker`]).
+//! * [`Resilience`] — the per-dispatcher bundle the routing layer
+//!   consults (`admits`) and the offload executor reports into
+//!   (`on_success` / `on_failure`).
+//!
+//! The invariant every consumer leans on: a call that exhausts its
+//! retries (or never routes because the breaker is open) re-executes
+//! through the host `KernelSelector` path and is **bit-identical** to
+//! the same call dispatched with `force_host` — fallback degrades
+//! latency, never bits.
+
+mod breaker;
+
+pub use breaker::{BreakerState, CircuitBreaker};
+
+use std::time::Duration;
+
+use crate::util::env::{parse_env, parse_env_checked};
+
+/// Breaker jitter seed: fixed so dispatcher construction is
+/// deterministic; per-trip SplitMix64 mixing de-correlates repeat trips.
+const BREAKER_SEED: u64 = 0x0FF1_0AD5_EED0_0007;
+
+/// Exponential backoff stops doubling past this many retries (the
+/// shift would overflow long before a sane `max_retries` gets here).
+const BACKOFF_SHIFT_CAP: u32 = 16;
+
+/// Which device backend the dispatcher should attach.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OffloadBackend {
+    /// The PJRT runtime over compiled HLO artifacts (production).
+    #[default]
+    Pjrt,
+    /// In-process simulated device: covers every shape and computes
+    /// through the host kernels, so the offload seam — routing, retry,
+    /// breaker, fallback — is exercisable on machines with no PJRT.
+    Sim,
+}
+
+impl OffloadBackend {
+    /// Parse `pjrt` / `sim` (case-insensitive); `None` on anything else
+    /// so callers can fail with their own loud message.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "pjrt" => Some(OffloadBackend::Pjrt),
+            "sim" => Some(OffloadBackend::Sim),
+            _ => None,
+        }
+    }
+
+    /// Lower-case label (`pjrt` / `sim`).
+    pub fn name(self) -> &'static str {
+        match self {
+            OffloadBackend::Pjrt => "pjrt",
+            OffloadBackend::Sim => "sim",
+        }
+    }
+}
+
+/// Offload resilience configuration (`[offload]` table,
+/// `OZACCEL_OFFLOAD_*` environment).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OffloadConfig {
+    /// Device retries after the first failed attempt (0 = fail over to
+    /// host immediately).
+    pub max_retries: u32,
+    /// Base backoff before retry `i`, doubled each retry
+    /// (`backoff_ms << (i-1)`); 0 disables sleeping entirely.
+    pub backoff_ms: u64,
+    /// Per-call deadline across all attempts and backoff sleeps; once
+    /// exceeded the call stops retrying and falls back (0 = no
+    /// deadline).
+    pub deadline_ms: u64,
+    /// Consecutive failed device attempts that trip the breaker open.
+    pub breaker_threshold: u32,
+    /// Routed health checks an open breaker refuses before half-opening.
+    pub breaker_cooldown: u32,
+    /// Consecutive half-open probe successes that close the breaker.
+    pub breaker_probes: u32,
+    /// Device backend to attach.
+    pub backend: OffloadBackend,
+}
+
+impl Default for OffloadConfig {
+    fn default() -> Self {
+        OffloadConfig {
+            max_retries: 2,
+            backoff_ms: 1,
+            deadline_ms: 2000,
+            breaker_threshold: 4,
+            breaker_cooldown: 32,
+            breaker_probes: 3,
+            backend: OffloadBackend::Pjrt,
+        }
+    }
+}
+
+impl OffloadConfig {
+    /// Defaults overridden by `OZACCEL_OFFLOAD_*`; malformed values fail
+    /// loudly (the PR 6 env policy — a typo must never silently run
+    /// with default resilience).
+    pub fn from_env() -> Self {
+        let mut cfg = Self::default();
+        if let Some(v) =
+            parse_env::<u32>("OZACCEL_OFFLOAD_MAX_RETRIES", "a retry count (0 = no retries)")
+        {
+            cfg.max_retries = v;
+        }
+        if let Some(v) =
+            parse_env::<u64>("OZACCEL_OFFLOAD_BACKOFF_MS", "a millisecond count (0 = no backoff)")
+        {
+            cfg.backoff_ms = v;
+        }
+        if let Some(v) =
+            parse_env::<u64>("OZACCEL_OFFLOAD_DEADLINE_MS", "a millisecond count (0 = no deadline)")
+        {
+            cfg.deadline_ms = v;
+        }
+        if let Some(v) = parse_env_checked::<u32>(
+            "OZACCEL_OFFLOAD_BREAKER_THRESHOLD",
+            "an integer >= 1",
+            |&n| n >= 1,
+        ) {
+            cfg.breaker_threshold = v;
+        }
+        if let Some(v) = parse_env_checked::<u32>(
+            "OZACCEL_OFFLOAD_BREAKER_COOLDOWN",
+            "an integer >= 1",
+            |&n| n >= 1,
+        ) {
+            cfg.breaker_cooldown = v;
+        }
+        if let Some(v) = parse_env_checked::<u32>(
+            "OZACCEL_OFFLOAD_BREAKER_PROBES",
+            "an integer >= 1",
+            |&n| n >= 1,
+        ) {
+            cfg.breaker_probes = v;
+        }
+        if let Ok(raw) = std::env::var("OZACCEL_OFFLOAD_BACKEND") {
+            cfg.backend = OffloadBackend::parse(&raw).unwrap_or_else(|| {
+                crate::util::env::invalid("OZACCEL_OFFLOAD_BACKEND", &raw, "pjrt | sim")
+            });
+        }
+        cfg
+    }
+
+    /// Total device attempts per routed call (first try + retries).
+    pub fn attempts(&self) -> u32 {
+        self.max_retries.saturating_add(1)
+    }
+
+    /// Deterministic exponential backoff before retry `retry` (1-based);
+    /// zero when `backoff_ms` is 0.
+    pub fn backoff(&self, retry: u32) -> Duration {
+        let shift = retry.saturating_sub(1).min(BACKOFF_SHIFT_CAP);
+        Duration::from_millis(self.backoff_ms.saturating_mul(1u64 << shift))
+    }
+
+    /// Per-call deadline, `None` when disabled.
+    pub fn deadline(&self) -> Option<Duration> {
+        (self.deadline_ms > 0).then(|| Duration::from_millis(self.deadline_ms))
+    }
+}
+
+/// One dispatcher's resilience state: the configuration plus the
+/// backend's circuit breaker.
+#[derive(Debug)]
+pub struct Resilience {
+    cfg: OffloadConfig,
+    breaker: CircuitBreaker,
+}
+
+impl Resilience {
+    /// Build from configuration (breaker seeded deterministically).
+    pub fn new(cfg: OffloadConfig) -> Self {
+        let breaker = CircuitBreaker::new(
+            cfg.breaker_threshold,
+            cfg.breaker_cooldown,
+            cfg.breaker_probes,
+            BREAKER_SEED,
+        );
+        Resilience { cfg, breaker }
+    }
+
+    /// The configuration this dispatcher runs under.
+    pub fn config(&self) -> &OffloadConfig {
+        &self.cfg
+    }
+
+    /// The backend's breaker (state/trip observation for PEAK & tests).
+    pub fn breaker(&self) -> &CircuitBreaker {
+        &self.breaker
+    }
+
+    /// Routing-time health check; open-breaker refusals cost one
+    /// counter decrement, not an artifact-coverage lookup.
+    pub fn admits(&self) -> bool {
+        self.breaker.admits()
+    }
+
+    /// Report a successful device attempt.
+    pub fn on_success(&self) {
+        self.breaker.on_success();
+    }
+
+    /// Report a failed device attempt.
+    pub fn on_failure(&self) {
+        self.breaker.on_failure();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane_and_attempts_counts_the_first_try() {
+        let cfg = OffloadConfig::default();
+        assert_eq!(cfg.backend, OffloadBackend::Pjrt);
+        assert_eq!(cfg.attempts(), cfg.max_retries + 1);
+        assert!(cfg.deadline().is_some());
+    }
+
+    #[test]
+    fn backoff_doubles_deterministically_and_zero_disables_it() {
+        let cfg = OffloadConfig {
+            backoff_ms: 3,
+            ..Default::default()
+        };
+        assert_eq!(cfg.backoff(1), Duration::from_millis(3));
+        assert_eq!(cfg.backoff(2), Duration::from_millis(6));
+        assert_eq!(cfg.backoff(3), Duration::from_millis(12));
+        let off = OffloadConfig {
+            backoff_ms: 0,
+            ..Default::default()
+        };
+        assert!(off.backoff(5).is_zero());
+    }
+
+    #[test]
+    fn zero_deadline_means_none() {
+        let cfg = OffloadConfig {
+            deadline_ms: 0,
+            ..Default::default()
+        };
+        assert_eq!(cfg.deadline(), None);
+    }
+
+    #[test]
+    fn backend_parses_case_insensitively_and_rejects_junk() {
+        assert_eq!(OffloadBackend::parse(" PJRT "), Some(OffloadBackend::Pjrt));
+        assert_eq!(OffloadBackend::parse("sim"), Some(OffloadBackend::Sim));
+        assert_eq!(OffloadBackend::parse("gpu"), None);
+        assert_eq!(OffloadBackend::Sim.name(), "sim");
+    }
+
+    #[test]
+    fn env_overrides_apply_and_malformed_values_fail_loud() {
+        let _guard = crate::testing::env_lock();
+        struct Restore(&'static str);
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                std::env::remove_var(self.0);
+            }
+        }
+        let _r1 = Restore("OZACCEL_OFFLOAD_MAX_RETRIES");
+        let _r2 = Restore("OZACCEL_OFFLOAD_BACKEND");
+        std::env::set_var("OZACCEL_OFFLOAD_MAX_RETRIES", "5");
+        std::env::set_var("OZACCEL_OFFLOAD_BACKEND", "sim");
+        let cfg = OffloadConfig::from_env();
+        assert_eq!(cfg.max_retries, 5);
+        assert_eq!(cfg.backend, OffloadBackend::Sim);
+
+        std::env::set_var("OZACCEL_OFFLOAD_BACKEND", "tpu");
+        assert!(std::panic::catch_unwind(OffloadConfig::from_env).is_err());
+        std::env::set_var("OZACCEL_OFFLOAD_BACKEND", "sim");
+        std::env::set_var("OZACCEL_OFFLOAD_MAX_RETRIES", "many");
+        assert!(std::panic::catch_unwind(OffloadConfig::from_env).is_err());
+    }
+
+    #[test]
+    fn resilience_delegates_to_its_breaker() {
+        let r = Resilience::new(OffloadConfig {
+            breaker_threshold: 2,
+            breaker_cooldown: 2,
+            breaker_probes: 1,
+            ..Default::default()
+        });
+        assert!(r.admits());
+        r.on_failure();
+        r.on_failure();
+        assert_eq!(r.breaker().state(), BreakerState::Open);
+        assert!(!r.admits());
+        assert!(r.admits(), "cooldown elapsed: half-open probe admitted");
+        r.on_success();
+        assert_eq!(r.breaker().state(), BreakerState::Closed);
+    }
+}

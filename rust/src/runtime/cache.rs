@@ -1,6 +1,15 @@
 //! Lazy executable cache: one PJRT client, one compiled executable per
 //! (kind, shape), compiled on first use and reused for the rest of the
 //! run (DESIGN.md §Perf: compile once per shape).
+//!
+//! Besides the PJRT backend there is a **simulated** device
+//! ([`Runtime::simulated`], selected by `[offload] backend = "sim"`):
+//! it covers every shape and computes through the host kernels, so the
+//! whole offload seam — routing, retry, circuit breaker, fallback —
+//! runs end-to-end on machines with no PJRT client or compiled
+//! artifacts.  A sim "device" result is bit-identical to the host path
+//! by construction, which is exactly the invariant the resilience
+//! layer's fallback tests pin.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -13,12 +22,22 @@ use super::exec::GemmExecutable;
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
 
-/// PJRT runtime with the artifact manifest and executable cache.
+/// Which device actually executes [`Runtime::gemm`].
+enum Backend {
+    /// PJRT client over compiled HLO artifacts.
+    Pjrt {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<(ArtifactKind, usize, usize, usize), &'static GemmExecutable>>,
+    },
+    /// In-process simulated device (host-kernel compute, full coverage).
+    Sim,
+}
+
+/// Device runtime with the artifact manifest and executable cache.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Backend,
     manifest: Manifest,
     dir: PathBuf,
-    cache: Mutex<HashMap<(ArtifactKind, usize, usize, usize), &'static GemmExecutable>>,
     stats: Mutex<RuntimeStats>,
 }
 
@@ -46,10 +65,12 @@ impl Runtime {
             dir.display()
         );
         Ok(Runtime {
-            client,
+            backend: Backend::Pjrt {
+                client,
+                cache: Mutex::new(HashMap::new()),
+            },
             manifest,
             dir,
-            cache: Mutex::new(HashMap::new()),
             stats: Mutex::new(RuntimeStats::default()),
         })
     }
@@ -59,14 +80,35 @@ impl Runtime {
         Self::new(super::default_artifact_dir())
     }
 
-    /// The artifact manifest.
+    /// Create the simulated device: no client, no artifacts, every
+    /// shape covered, results computed by the host kernels (so they are
+    /// bit-identical to host-routed calls by construction).
+    pub fn simulated() -> Self {
+        info!("runtime: simulated device backend (host-kernel compute, full coverage)");
+        Runtime {
+            backend: Backend::Sim,
+            manifest: Manifest::default(),
+            dir: PathBuf::new(),
+            stats: Mutex::new(RuntimeStats::default()),
+        }
+    }
+
+    /// The artifact manifest (empty for the simulated backend).
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Artifact directory in use.
+    /// Artifact directory in use (empty for the simulated backend).
     pub fn dir(&self) -> &PathBuf {
         &self.dir
+    }
+
+    /// Short backend label (`pjrt` / `sim`) for reports and logs.
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Pjrt { .. } => "pjrt",
+            Backend::Sim => "sim",
+        }
     }
 
     /// Runtime counters snapshot.
@@ -74,14 +116,20 @@ impl Runtime {
         *self.stats.lock().unwrap()
     }
 
-    /// True if a bucket exists for this GEMM under `kind`.
+    /// True if a bucket exists for this GEMM under `kind` (always, for
+    /// the simulated backend).
     pub fn covers(&self, kind: ArtifactKind, m: usize, k: usize, n: usize) -> bool {
-        self.manifest.find_bucket(kind, m, k, n).is_some()
+        match self.backend {
+            Backend::Pjrt { .. } => self.manifest.find_bucket(kind, m, k, n).is_some(),
+            Backend::Sim => true,
+        }
     }
 
     /// Compile-or-fetch the executable for the smallest covering bucket.
     fn executable(
         &self,
+        client: &xla::PjRtClient,
+        cache: &Mutex<HashMap<(ArtifactKind, usize, usize, usize), &'static GemmExecutable>>,
         kind: ArtifactKind,
         m: usize,
         k: usize,
@@ -105,7 +153,7 @@ impl Runtime {
             })?
             .clone();
         let key = (kind, art.m, art.k, art.n);
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = cache.lock().unwrap();
         if let Some(exe) = cache.get(&key) {
             return Ok(exe);
         }
@@ -117,7 +165,7 @@ impl Runtime {
             art.n,
             art.path.display()
         );
-        let exe = GemmExecutable::load(&self.client, &art.path, art.m, art.k, art.n)?;
+        let exe = GemmExecutable::load(client, &art.path, art.m, art.k, art.n)?;
         self.stats.lock().unwrap().compiles += 1;
         // Executables live for the process lifetime; leaking them gives a
         // 'static borrow without self-referential lifetimes.
@@ -139,20 +187,34 @@ impl Runtime {
                 b.cols()
             )));
         }
-        let exe = self.executable(kind, m, k, n)?;
-        {
-            let mut s = self.stats.lock().unwrap();
-            s.executions += 1;
-            if exe.shape() != (m, k, n) {
-                s.padded_executions += 1;
+        match &self.backend {
+            Backend::Pjrt { client, cache } => {
+                let exe = self.executable(client, cache, kind, m, k, n)?;
+                {
+                    let mut s = self.stats.lock().unwrap();
+                    s.executions += 1;
+                    if exe.shape() != (m, k, n) {
+                        s.padded_executions += 1;
+                    }
+                }
+                exe.run_padded(a, b, m, n)
+            }
+            Backend::Sim => {
+                self.stats.lock().unwrap().executions += 1;
+                match kind {
+                    ArtifactKind::Dgemm => crate::linalg::dgemm(a, b),
+                    ArtifactKind::Ozdg { splits } => crate::ozaki::ozaki_dgemm(a, b, splits),
+                }
             }
         }
-        exe.run_padded(a, b, m, n)
     }
 
-    /// Number of compiled executables currently cached.
+    /// Number of compiled executables currently cached (0 for sim).
     pub fn cached_executables(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        match &self.backend {
+            Backend::Pjrt { cache, .. } => cache.lock().unwrap().len(),
+            Backend::Sim => 0,
+        }
     }
 }
 
@@ -170,5 +232,30 @@ mod tests {
             Err(other) => panic!("unexpected error {other:?}"),
             Ok(_) => panic!("expected an error"),
         }
+    }
+
+    #[test]
+    fn simulated_backend_covers_everything_and_computes_host_bits() {
+        let rt = Runtime::simulated();
+        assert_eq!(rt.backend_name(), "sim");
+        assert!(rt.covers(ArtifactKind::Dgemm, 7, 9, 11));
+        assert!(rt.covers(ArtifactKind::Ozdg { splits: 5 }, 4096, 4096, 4096));
+        assert_eq!(rt.cached_executables(), 0);
+
+        let mut rng = crate::testing::Rng::new(0x51A1);
+        let a = Mat::from_fn(6, 5, |_, _| rng.normal());
+        let b = Mat::from_fn(5, 4, |_, _| rng.normal());
+        let got = rt.gemm(ArtifactKind::Dgemm, &a, &b).unwrap();
+        let want = crate::linalg::dgemm(&a, &b).unwrap();
+        assert_eq!(got.data(), want.data(), "sim dgemm is the host dgemm");
+        let got = rt.gemm(ArtifactKind::Ozdg { splits: 4 }, &a, &b).unwrap();
+        let want = crate::ozaki::ozaki_dgemm(&a, &b, 4).unwrap();
+        assert_eq!(got.data(), want.data(), "sim ozdg is the host emulation");
+        assert_eq!(rt.stats().executions, 2);
+        assert_eq!(rt.stats().compiles, 0);
+
+        // Shape errors still surface uniformly.
+        let bad = Mat::from_fn(3, 3, |_, _| 0.0);
+        assert!(rt.gemm(ArtifactKind::Dgemm, &a, &bad).is_err());
     }
 }
