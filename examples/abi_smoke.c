@@ -1,0 +1,347 @@
+/*
+ * abi_smoke — drop-in BLAS interception smoke caller.
+ *
+ * A plain C program that calls the Fortran BLAS ABI (dgemm_/zgemm_)
+ * exactly as an unmodified application would: column-major buffers,
+ * padded leading dimensions, every transpose combination, alpha/beta
+ * classes including beta == 0 over NaN-poisoned output.  It carries
+ * its own textbook oracle (same pinned evaluation order as ozaccel's
+ * fixed FP64 path) and bitwise-compares every call, printing a
+ * deterministic digest per case.
+ *
+ * Two ways to run it (see the CI `abi` job):
+ *   1. linked against examples/naive_blas.c — the baseline;
+ *   2. the same binary under LD_PRELOAD=libozaccel_blas.so — the
+ *      drop-in interception.
+ * In fixed FP64 mode both stdouts must be byte-identical, and both
+ * must match the pinned examples/abi_smoke.expected.
+ *
+ * Compile with -ffp-contract=off: the oracle must not be fused into
+ * FMA forms the interposed library does not use.
+ */
+
+#include <math.h>
+#include <pthread.h>
+#include <stdio.h>
+#include <string.h>
+
+typedef struct {
+    double re, im;
+} z16;
+
+extern void dgemm_(const char *transa, const char *transb, const int *m, const int *n,
+                   const int *k, const double *alpha, const double *a, const int *lda,
+                   const double *b, const int *ldb, const double *beta, double *c,
+                   const int *ldc);
+extern void zgemm_(const char *transa, const char *transb, const int *m, const int *n,
+                   const int *k, const z16 *alpha, const z16 *a, const int *lda, const z16 *b,
+                   const int *ldb, const z16 *beta, z16 *c, const int *ldc);
+
+static int checks = 0;
+static int failures = 0;
+
+/* ----------------------------------------------------------------- */
+/* Deterministic input generator (64-bit LCG, top 53 bits).           */
+/* ----------------------------------------------------------------- */
+
+static unsigned long long lcg_state = 42ULL;
+
+static double next_rand(void)
+{
+    lcg_state = lcg_state * 6364136223846793005ULL + 1442695040888963407ULL;
+    return ((double)(lcg_state >> 11)) / 9007199254740992.0 - 0.5;
+}
+
+static void fill(double *buf, int len)
+{
+    int i;
+    for (i = 0; i < len; i++)
+        buf[i] = next_rand();
+}
+
+/* ----------------------------------------------------------------- */
+/* Internal oracles — same pinned arithmetic as examples/naive_blas.c */
+/* ----------------------------------------------------------------- */
+
+static int is_trans(char t)
+{
+    return t == 'T' || t == 't' || t == 'C' || t == 'c';
+}
+
+static int is_conj(char t)
+{
+    return t == 'C' || t == 'c';
+}
+
+static void oracle_dgemm(char ta, char tb, int m, int n, int k, double alpha, const double *a,
+                         int lda, const double *b, int ldb, double beta, double *c, int ldc)
+{
+    int i, j, p;
+    if (m == 0 || n == 0)
+        return;
+    if (alpha == 0.0 || k == 0) {
+        for (j = 0; j < n; j++)
+            for (i = 0; i < m; i++)
+                c[i + j * ldc] = (beta == 0.0) ? 0.0 : beta * c[i + j * ldc];
+        return;
+    }
+    for (j = 0; j < n; j++) {
+        for (i = 0; i < m; i++) {
+            double acc = 0.0;
+            for (p = 0; p < k; p++) {
+                double av = is_trans(ta) ? a[p + i * lda] : a[i + p * lda];
+                double bv = is_trans(tb) ? b[j + p * ldb] : b[p + j * ldb];
+                acc += av * bv;
+            }
+            c[i + j * ldc] = (beta == 0.0) ? alpha * acc : alpha * acc + beta * c[i + j * ldc];
+        }
+    }
+}
+
+static z16 zmul(z16 x, z16 y)
+{
+    z16 r;
+    r.re = x.re * y.re - x.im * y.im;
+    r.im = x.re * y.im + x.im * y.re;
+    return r;
+}
+
+static void oracle_zgemm(char ta, char tb, int m, int n, int k, z16 alpha, const z16 *a,
+                         int lda, const z16 *b, int ldb, z16 beta, z16 *c, int ldc)
+{
+    int beta_zero = beta.re == 0.0 && beta.im == 0.0;
+    int i, j, p;
+    if (m == 0 || n == 0)
+        return;
+    if ((alpha.re == 0.0 && alpha.im == 0.0) || k == 0) {
+        for (j = 0; j < n; j++) {
+            for (i = 0; i < m; i++) {
+                z16 *cv = &c[i + j * ldc];
+                if (beta_zero) {
+                    cv->re = 0.0;
+                    cv->im = 0.0;
+                } else {
+                    *cv = zmul(beta, *cv);
+                }
+            }
+        }
+        return;
+    }
+    for (j = 0; j < n; j++) {
+        for (i = 0; i < m; i++) {
+            double rr = 0.0, ii = 0.0, ri = 0.0, ir = 0.0;
+            z16 prod, upd;
+            for (p = 0; p < k; p++) {
+                z16 av = is_trans(ta) ? a[p + i * lda] : a[i + p * lda];
+                z16 bv = is_trans(tb) ? b[j + p * ldb] : b[p + j * ldb];
+                if (is_conj(ta))
+                    av.im = -av.im;
+                if (is_conj(tb))
+                    bv.im = -bv.im;
+                rr += av.re * bv.re;
+                ii += av.im * bv.im;
+                ri += av.re * bv.im;
+                ir += av.im * bv.re;
+            }
+            prod.re = rr - ii;
+            prod.im = ri + ir;
+            upd = zmul(alpha, prod);
+            if (!beta_zero) {
+                z16 bc = zmul(beta, c[i + j * ldc]);
+                upd.re = upd.re + bc.re;
+                upd.im = upd.im + bc.im;
+            }
+            c[i + j * ldc] = upd;
+        }
+    }
+}
+
+/* ----------------------------------------------------------------- */
+/* DGEMM sweep                                                        */
+/* ----------------------------------------------------------------- */
+
+#define DM 5
+#define DN 4
+#define DK 3
+#define DLDA 8
+#define DLDB 7
+#define DLDC 6
+
+static void run_dgemm_case(char ta, char tb, double alpha, double beta)
+{
+    double a[DLDA * 8], b[DLDB * 8], c[DLDC * DN], ref[DLDC * DN];
+    int m = DM, n = DN, k = DK, lda = DLDA, ldb = DLDB, ldc = DLDC;
+    int i, j;
+    double digest = 0.0;
+
+    fill(a, DLDA * 8);
+    fill(b, DLDB * 8);
+    if (beta == 0.0) {
+        /* beta == 0 must overwrite, never read: poison the output. */
+        for (i = 0; i < DLDC * DN; i++)
+            c[i] = NAN;
+    } else {
+        fill(c, DLDC * DN);
+    }
+    memcpy(ref, c, sizeof c);
+
+    dgemm_(&ta, &tb, &m, &n, &k, &alpha, a, &lda, b, &ldb, &beta, c, &ldc);
+    oracle_dgemm(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, ref, ldc);
+
+    checks++;
+    if (memcmp(c, ref, sizeof c) != 0) {
+        failures++;
+        printf("MISMATCH dgemm %c%c alpha=%.17g beta=%.17g\n", ta, tb, alpha, beta);
+    }
+    for (j = 0; j < n; j++)
+        for (i = 0; i < m; i++)
+            digest += c[i + j * ldc];
+    printf("dgemm %c%c alpha=%.3g beta=%.3g digest=%.17g\n", ta, tb, alpha, beta, digest);
+}
+
+/* ----------------------------------------------------------------- */
+/* ZGEMM sweep                                                        */
+/* ----------------------------------------------------------------- */
+
+#define ZM 4
+#define ZN 3
+#define ZK 5
+#define ZLDA 7
+#define ZLDB 6
+#define ZLDC 5
+
+static void run_zgemm_case(char ta, char tb, z16 alpha, z16 beta)
+{
+    z16 a[ZLDA * 8], b[ZLDB * 8], c[ZLDC * ZN], ref[ZLDC * ZN];
+    int m = ZM, n = ZN, k = ZK, lda = ZLDA, ldb = ZLDB, ldc = ZLDC;
+    int beta_zero = beta.re == 0.0 && beta.im == 0.0;
+    int i, j;
+    double digest = 0.0;
+
+    fill((double *)a, 2 * ZLDA * 8);
+    fill((double *)b, 2 * ZLDB * 8);
+    if (beta_zero) {
+        for (i = 0; i < ZLDC * ZN; i++) {
+            c[i].re = NAN;
+            c[i].im = NAN;
+        }
+    } else {
+        fill((double *)c, 2 * ZLDC * ZN);
+    }
+    memcpy(ref, c, sizeof c);
+
+    zgemm_(&ta, &tb, &m, &n, &k, &alpha, a, &lda, b, &ldb, &beta, c, &ldc);
+    oracle_zgemm(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, ref, ldc);
+
+    checks++;
+    if (memcmp(c, ref, sizeof c) != 0) {
+        failures++;
+        printf("MISMATCH zgemm %c%c alpha=(%.17g,%.17g) beta=(%.17g,%.17g)\n", ta, tb,
+               alpha.re, alpha.im, beta.re, beta.im);
+    }
+    for (j = 0; j < n; j++) {
+        for (i = 0; i < m; i++) {
+            digest += c[i + j * ldc].re;
+            digest += c[i + j * ldc].im;
+        }
+    }
+    printf("zgemm %c%c alpha=(%.3g,%.3g) beta=(%.3g,%.3g) digest=%.17g\n", ta, tb, alpha.re,
+           alpha.im, beta.re, beta.im, digest);
+}
+
+/* ----------------------------------------------------------------- */
+/* Concurrent calls (pthreads) through the interposed symbol          */
+/* ----------------------------------------------------------------- */
+
+#define TM 16
+#define TN 13
+#define TK 11
+#define TLDA 17
+#define TLDB 12
+#define TLDC 16
+#define THREADS 4
+#define ITERS 8
+
+typedef struct {
+    const double *a, *b, *ref;
+    int fails;
+} thread_arg;
+
+static void *thread_body(void *argp)
+{
+    thread_arg *arg = (thread_arg *)argp;
+    char ta = 'N', tb = 'N';
+    int m = TM, n = TN, k = TK, lda = TLDA, ldb = TLDB, ldc = TLDC;
+    double alpha = 1.0, beta = 0.0;
+    int it, i;
+
+    for (it = 0; it < ITERS; it++) {
+        double c[TLDC * TN];
+        for (i = 0; i < TLDC * TN; i++)
+            c[i] = NAN;
+        dgemm_(&ta, &tb, &m, &n, &k, &alpha, arg->a, &lda, arg->b, &ldb, &beta, c, &ldc);
+        if (memcmp(c, arg->ref, sizeof c) != 0)
+            arg->fails++;
+    }
+    return NULL;
+}
+
+static void run_threads(void)
+{
+    static double a[TLDA * TK], b[TLDB * TN], ref[TLDC * TN];
+    pthread_t threads[THREADS];
+    thread_arg args[THREADS];
+    int t, i, total_fails = 0;
+
+    fill(a, TLDA * TK);
+    fill(b, TLDB * TN);
+    for (i = 0; i < TLDC * TN; i++)
+        ref[i] = NAN;
+    oracle_dgemm('N', 'N', TM, TN, TK, 1.0, a, TLDA, b, TLDB, 0.0, ref, TLDC);
+
+    for (t = 0; t < THREADS; t++) {
+        args[t].a = a;
+        args[t].b = b;
+        args[t].ref = ref;
+        args[t].fails = 0;
+        pthread_create(&threads[t], NULL, thread_body, &args[t]);
+    }
+    for (t = 0; t < THREADS; t++) {
+        pthread_join(threads[t], NULL);
+        total_fails += args[t].fails;
+    }
+    checks += THREADS * ITERS;
+    failures += total_fails;
+    printf("threads=%d iters=%d fails=%d\n", THREADS, ITERS, total_fails);
+}
+
+/* ----------------------------------------------------------------- */
+
+int main(void)
+{
+    static const char trans[3] = {'N', 'T', 'C'};
+    static const double alphas[4] = {0.0, 1.0, -1.0, 0.7};
+    static const double betas[4] = {0.0, 1.0, -1.0, 0.5};
+    int ti, tj, ai, bi, s;
+
+    for (ti = 0; ti < 3; ti++)
+        for (tj = 0; tj < 3; tj++)
+            for (ai = 0; ai < 4; ai++)
+                for (bi = 0; bi < 4; bi++)
+                    run_dgemm_case(trans[ti], trans[tj], alphas[ai], betas[bi]);
+
+    {
+        static const z16 zalphas[4] = {{0.0, 0.0}, {1.0, 0.0}, {-1.0, 0.0}, {0.7, -0.3}};
+        static const z16 zbetas[4] = {{0.0, 0.0}, {1.0, 0.0}, {0.0, 1.0}, {0.5, -0.25}};
+        for (ti = 0; ti < 3; ti++)
+            for (tj = 0; tj < 3; tj++)
+                for (s = 0; s < 4; s++)
+                    run_zgemm_case(trans[ti], trans[tj], zalphas[s], zbetas[s]);
+    }
+
+    run_threads();
+
+    printf("abi_smoke: %s (checks=%d, failures=%d)\n", failures ? "FAIL" : "PASS", checks,
+           failures);
+    return failures ? 1 : 0;
+}

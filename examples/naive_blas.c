@@ -1,0 +1,122 @@
+/*
+ * Reference Fortran-ABI BLAS (dgemm_/zgemm_ only) used as the
+ * abi_smoke baseline: the smoke binary links against this shared
+ * library, producing textbook results; running the same binary under
+ * LD_PRELOAD=libozaccel_blas.so interposes the ozaccel drop-in, and in
+ * fixed FP64 mode the two stdout streams must be bit-for-bit
+ * identical.
+ *
+ * The arithmetic deliberately mirrors ozaccel's pinned evaluation
+ * order: per-element ascending-p accumulation, the BLAS update written
+ * literally as alpha*acc + beta*c (overwrite at beta == 0, never
+ * reading C), and the complex product in the 4-real-accumulator
+ * decomposition (rr - ii, ri + ir).  Compile with -ffp-contract=off so
+ * the compiler cannot fuse these expressions.
+ */
+
+typedef struct {
+    double re, im;
+} z16;
+
+static int is_trans(char t)
+{
+    return t == 'T' || t == 't' || t == 'C' || t == 'c';
+}
+
+static int is_conj(char t)
+{
+    return t == 'C' || t == 'c';
+}
+
+void dgemm_(const char *transa, const char *transb, const int *pm, const int *pn,
+            const int *pk, const double *palpha, const double *a, const int *plda,
+            const double *b, const int *pldb, const double *pbeta, double *c,
+            const int *pldc)
+{
+    char ta = *transa, tb = *transb;
+    int m = *pm, n = *pn, k = *pk, lda = *plda, ldb = *pldb, ldc = *pldc;
+    double alpha = *palpha, beta = *pbeta;
+    int i, j, p;
+
+    if (m == 0 || n == 0)
+        return;
+    if (alpha == 0.0 || k == 0) {
+        for (j = 0; j < n; j++)
+            for (i = 0; i < m; i++)
+                c[i + j * ldc] = (beta == 0.0) ? 0.0 : beta * c[i + j * ldc];
+        return;
+    }
+    for (j = 0; j < n; j++) {
+        for (i = 0; i < m; i++) {
+            double acc = 0.0;
+            for (p = 0; p < k; p++) {
+                double av = is_trans(ta) ? a[p + i * lda] : a[i + p * lda];
+                double bv = is_trans(tb) ? b[j + p * ldb] : b[p + j * ldb];
+                acc += av * bv;
+            }
+            c[i + j * ldc] = (beta == 0.0) ? alpha * acc : alpha * acc + beta * c[i + j * ldc];
+        }
+    }
+}
+
+static z16 zmul(z16 x, z16 y)
+{
+    z16 r;
+    r.re = x.re * y.re - x.im * y.im;
+    r.im = x.re * y.im + x.im * y.re;
+    return r;
+}
+
+void zgemm_(const char *transa, const char *transb, const int *pm, const int *pn,
+            const int *pk, const z16 *alpha, const z16 *a, const int *plda, const z16 *b,
+            const int *pldb, const z16 *beta, z16 *c, const int *pldc)
+{
+    char ta = *transa, tb = *transb;
+    int m = *pm, n = *pn, k = *pk, lda = *plda, ldb = *pldb, ldc = *pldc;
+    int beta_zero = beta->re == 0.0 && beta->im == 0.0;
+    int i, j, p;
+
+    if (m == 0 || n == 0)
+        return;
+    if ((alpha->re == 0.0 && alpha->im == 0.0) || k == 0) {
+        for (j = 0; j < n; j++) {
+            for (i = 0; i < m; i++) {
+                z16 *cv = &c[i + j * ldc];
+                if (beta_zero) {
+                    cv->re = 0.0;
+                    cv->im = 0.0;
+                } else {
+                    *cv = zmul(*beta, *cv);
+                }
+            }
+        }
+        return;
+    }
+    for (j = 0; j < n; j++) {
+        for (i = 0; i < m; i++) {
+            double rr = 0.0, ii = 0.0, ri = 0.0, ir = 0.0;
+            z16 prod, upd;
+            for (p = 0; p < k; p++) {
+                z16 av = is_trans(ta) ? a[p + i * lda] : a[i + p * lda];
+                z16 bv = is_trans(tb) ? b[j + p * ldb] : b[p + j * ldb];
+                if (is_conj(ta))
+                    av.im = -av.im;
+                if (is_conj(tb))
+                    bv.im = -bv.im;
+                rr += av.re * bv.re;
+                ii += av.im * bv.im;
+                ri += av.re * bv.im;
+                ir += av.im * bv.re;
+            }
+            prod.re = rr - ii;
+            prod.im = ri + ir;
+            upd = zmul(*alpha, prod);
+            if (!beta_zero) {
+                z16 bc = zmul(*beta, c[i + j * ldc]);
+                upd.re = upd.re + bc.re;
+                upd.im = upd.im + bc.im;
+            }
+            c[i + j * ldc] = upd;
+        }
+    }
+}

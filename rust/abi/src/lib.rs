@@ -1,0 +1,334 @@
+//! Drop-in Fortran BLAS ABI over the ozaccel dispatcher.
+//!
+//! This crate builds `libozaccel_blas.so` (a cdylib) exporting the
+//! reference-BLAS GEMM symbols — `dgemm_` / `zgemm_` (the common
+//! trailing-underscore Fortran mangling) plus `dgemm` / `zgemm`
+//! no-underscore aliases — so an **unmodified** C or Fortran binary
+//! picks up tunable-precision emulation either at link time
+//! (`-lozaccel_blas` in place of `-lblas`) or at run time via
+//! `LD_PRELOAD`.  No CBLAS layer is involved: the exported surface is
+//! the raw Fortran calling convention (all arguments by pointer,
+//! column-major operands, 32-bit LP64 integers).
+//!
+//! Every call routes through the process-global dispatcher
+//! ([`ozaccel::blas::global`]), configured **only** from `OZACCEL_*` /
+//! `OZIMMU_COMPUTE_MODE` environment variables — an intercepted binary
+//! has no way to pass a config file.  Malformed configuration
+//! terminates the process with exit code 78 and a
+//! `ozaccel: abi init failed:` diagnostic on the first BLAS call;
+//! illegal call parameters print an `xerbla`-style message and return
+//! with `C` untouched; unless `OZACCEL_PEAK=0`, the per-call-site PEAK
+//! profile is dumped at process exit (`OZACCEL_PEAK_FILE` redirects it
+//! from stderr to a file).
+//!
+//! Calls never unwind across the C boundary: any internal panic is
+//! caught, reported on stderr, and turned into `abort()` — a BLAS
+//! routine has no error channel, and silently returning garbage in
+//! `C` would be worse.
+
+#![warn(missing_docs)]
+
+use ozaccel::blas::{dgemm_colmajor, zgemm_colmajor, GemmGeom};
+use ozaccel::c64;
+
+/// `xerbla`-style diagnostic for an illegal argument (1-based BLAS
+/// parameter number), printed to stderr; the call then returns without
+/// touching `C`, matching permissive `xerbla` implementations.
+fn xerbla(routine: &str, info: u32) {
+    eprintln!("ozaccel: ** On entry to {routine} parameter number {info} had an illegal value");
+}
+
+fn die(routine: &str, what: &str) -> ! {
+    eprintln!("ozaccel: {routine} {what}");
+    std::process::abort();
+}
+
+/// Run one intercepted call: catch panics (unwinding across the C
+/// boundary is undefined behaviour) and abort loudly instead.
+fn guarded(routine: &str, body: impl FnOnce()) {
+    if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)) {
+        let msg = if let Some(s) = p.downcast_ref::<String>() {
+            s.as_str()
+        } else if let Some(s) = p.downcast_ref::<&'static str>() {
+            s
+        } else {
+            "unknown panic"
+        };
+        die(routine, &format!("panicked: {msg}"));
+    }
+}
+
+unsafe fn slice<'a, T>(p: *const T, len: usize) -> &'a [T] {
+    if len == 0 {
+        &[]
+    } else {
+        std::slice::from_raw_parts(p, len)
+    }
+}
+
+unsafe fn slice_mut<'a, T>(p: *mut T, len: usize) -> &'a mut [T] {
+    if len == 0 {
+        &mut []
+    } else {
+        std::slice::from_raw_parts_mut(p, len)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+unsafe fn dgemm_body(
+    routine: &str,
+    site: &'static str,
+    transa: *const u8,
+    transb: *const u8,
+    m: *const i32,
+    n: *const i32,
+    k: *const i32,
+    alpha: *const f64,
+    a: *const f64,
+    lda: *const i32,
+    b: *const f64,
+    ldb: *const i32,
+    beta: *const f64,
+    c: *mut f64,
+    ldc: *const i32,
+) {
+    let g = match GemmGeom::check(
+        *transa,
+        *transb,
+        *m as i64,
+        *n as i64,
+        *k as i64,
+        *lda as i64,
+        *ldb as i64,
+        *ldc as i64,
+    ) {
+        Ok(g) => g,
+        Err(info) => return xerbla(routine, info),
+    };
+    let av = slice(a, g.a_len());
+    let bv = slice(b, g.b_len());
+    let cv = slice_mut(c, g.c_len());
+    let d = ozaccel::blas::global();
+    if let Err(e) = dgemm_colmajor(d, site, &g, *alpha, av, bv, *beta, cv) {
+        die(routine, &format!("failed: {e}"));
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+unsafe fn zgemm_body(
+    routine: &str,
+    site: &'static str,
+    transa: *const u8,
+    transb: *const u8,
+    m: *const i32,
+    n: *const i32,
+    k: *const i32,
+    alpha: *const c64,
+    a: *const c64,
+    lda: *const i32,
+    b: *const c64,
+    ldb: *const i32,
+    beta: *const c64,
+    c: *mut c64,
+    ldc: *const i32,
+) {
+    let g = match GemmGeom::check(
+        *transa,
+        *transb,
+        *m as i64,
+        *n as i64,
+        *k as i64,
+        *lda as i64,
+        *ldb as i64,
+        *ldc as i64,
+    ) {
+        Ok(g) => g,
+        Err(info) => return xerbla(routine, info),
+    };
+    let av = slice(a, g.a_len());
+    let bv = slice(b, g.b_len());
+    let cv = slice_mut(c, g.c_len());
+    let d = ozaccel::blas::global();
+    if let Err(e) = zgemm_colmajor(d, site, &g, *alpha, av, bv, *beta, cv) {
+        die(routine, &format!("failed: {e}"));
+    }
+}
+
+/// Fortran `DGEMM`: `C := alpha*op(A)*op(B) + beta*C`, column-major,
+/// all arguments by pointer (trailing-underscore gfortran mangling).
+///
+/// # Safety
+///
+/// Standard Fortran BLAS contract: every pointer must be valid for the
+/// duration of the call; `a`/`b`/`c` must cover at least
+/// `ld*(cols-1)+rows` elements of their column-major operands; `c`
+/// must not alias `a` or `b`.  Integers are 32-bit (LP64).
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn dgemm_(
+    transa: *const u8,
+    transb: *const u8,
+    m: *const i32,
+    n: *const i32,
+    k: *const i32,
+    alpha: *const f64,
+    a: *const f64,
+    lda: *const i32,
+    b: *const f64,
+    ldb: *const i32,
+    beta: *const f64,
+    c: *mut f64,
+    ldc: *const i32,
+) {
+    guarded("DGEMM", || {
+        dgemm_body(
+            "DGEMM",
+            "abi:dgemm_",
+            transa,
+            transb,
+            m,
+            n,
+            k,
+            alpha,
+            a,
+            lda,
+            b,
+            ldb,
+            beta,
+            c,
+            ldc,
+        )
+    });
+}
+
+/// No-underscore alias of [`dgemm_`] (compilers and Fortran runtimes
+/// with `-fno-underscoring` style mangling).
+///
+/// # Safety
+///
+/// Same contract as [`dgemm_`].
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn dgemm(
+    transa: *const u8,
+    transb: *const u8,
+    m: *const i32,
+    n: *const i32,
+    k: *const i32,
+    alpha: *const f64,
+    a: *const f64,
+    lda: *const i32,
+    b: *const f64,
+    ldb: *const i32,
+    beta: *const f64,
+    c: *mut f64,
+    ldc: *const i32,
+) {
+    guarded("DGEMM", || {
+        dgemm_body(
+            "DGEMM",
+            "abi:dgemm",
+            transa,
+            transb,
+            m,
+            n,
+            k,
+            alpha,
+            a,
+            lda,
+            b,
+            ldb,
+            beta,
+            c,
+            ldc,
+        )
+    });
+}
+
+/// Fortran `ZGEMM`: complex `C := alpha*op(A)*op(B) + beta*C`;
+/// `COMPLEX*16` scalars and operands (`{re, im}` f64 pairs), `'C'`
+/// flags conjugate-transpose.
+///
+/// # Safety
+///
+/// Same contract as [`dgemm_`], with `COMPLEX*16` elements.
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn zgemm_(
+    transa: *const u8,
+    transb: *const u8,
+    m: *const i32,
+    n: *const i32,
+    k: *const i32,
+    alpha: *const c64,
+    a: *const c64,
+    lda: *const i32,
+    b: *const c64,
+    ldb: *const i32,
+    beta: *const c64,
+    c: *mut c64,
+    ldc: *const i32,
+) {
+    guarded("ZGEMM", || {
+        zgemm_body(
+            "ZGEMM",
+            "abi:zgemm_",
+            transa,
+            transb,
+            m,
+            n,
+            k,
+            alpha,
+            a,
+            lda,
+            b,
+            ldb,
+            beta,
+            c,
+            ldc,
+        )
+    });
+}
+
+/// No-underscore alias of [`zgemm_`].
+///
+/// # Safety
+///
+/// Same contract as [`dgemm_`], with `COMPLEX*16` elements.
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn zgemm(
+    transa: *const u8,
+    transb: *const u8,
+    m: *const i32,
+    n: *const i32,
+    k: *const i32,
+    alpha: *const c64,
+    a: *const c64,
+    lda: *const i32,
+    b: *const c64,
+    ldb: *const i32,
+    beta: *const c64,
+    c: *mut c64,
+    ldc: *const i32,
+) {
+    guarded("ZGEMM", || {
+        zgemm_body(
+            "ZGEMM",
+            "abi:zgemm",
+            transa,
+            transb,
+            m,
+            n,
+            k,
+            alpha,
+            a,
+            lda,
+            b,
+            ldb,
+            beta,
+            c,
+            ldc,
+        )
+    });
+}

@@ -248,6 +248,126 @@ impl Dispatcher {
         self.zgemm_mode_at(site, mode, a, b, true)
     }
 
+    /// Full-surface BLAS update `c := alpha·(a·b) + beta·c` through the
+    /// coordinator.  The product runs through the normal dispatch path
+    /// (routing, precision governor, PEAK accounting); the scalar
+    /// update follows the BLAS conventions pinned in
+    /// [`crate::linalg::gemm_update_f64`]: `beta == 0` overwrites `c`
+    /// without reading it (NaN-poisoned output buffers are legal), and
+    /// `alpha == 0` or `k == 0` skips the product entirely and only
+    /// scales `c`.
+    #[track_caller]
+    pub fn dgemm_acc(
+        &self,
+        alpha: f64,
+        a: &Mat<f64>,
+        b: &Mat<f64>,
+        beta: f64,
+        c: &mut Mat<f64>,
+    ) -> Result<()> {
+        let site = site_id(std::panic::Location::caller());
+        self.dgemm_acc_at(site, self.cfg.mode, alpha, a, b, beta, c)
+    }
+
+    /// [`Dispatcher::dgemm_acc`] with an explicit call-site id and mode
+    /// (the entry point of the column-major ABI adapters, which pin
+    /// their site names statically).
+    #[allow(clippy::too_many_arguments)]
+    pub fn dgemm_acc_at(
+        &self,
+        site: CallSiteId,
+        mode: ComputeMode,
+        alpha: f64,
+        a: &Mat<f64>,
+        b: &Mat<f64>,
+        beta: f64,
+        c: &mut Mat<f64>,
+    ) -> Result<()> {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        if a.cols() != b.rows() || c.rows() != m || c.cols() != n {
+            return Err(Error::Shape(format!(
+                "dgemm_acc: {}x{} @ {}x{} -> {}x{}",
+                a.rows(),
+                a.cols(),
+                b.rows(),
+                b.cols(),
+                c.rows(),
+                c.cols()
+            )));
+        }
+        if m == 0 || n == 0 {
+            return Ok(());
+        }
+        if alpha == 0.0 || k == 0 {
+            for v in c.data_mut() {
+                *v = crate::linalg::gemm_scale_f64(beta, *v);
+            }
+            return Ok(());
+        }
+        let p = self.dgemm_mode_at(site, mode, a, b, true)?;
+        for (cv, &pv) in c.data_mut().iter_mut().zip(p.data()) {
+            *cv = crate::linalg::gemm_update_f64(alpha, pv, beta, *cv);
+        }
+        Ok(())
+    }
+
+    /// Complex twin of [`Dispatcher::dgemm_acc`]:
+    /// `c := alpha·(a·b) + beta·c` with complex scalars, following the
+    /// same BLAS quick-return and overwrite-at-`beta == 0` rules
+    /// ([`crate::linalg::gemm_update_c64`]).
+    #[track_caller]
+    pub fn zgemm_acc(
+        &self,
+        alpha: crate::complex::c64,
+        a: &ZMat,
+        b: &ZMat,
+        beta: crate::complex::c64,
+        c: &mut ZMat,
+    ) -> Result<()> {
+        let site = site_id(std::panic::Location::caller());
+        self.zgemm_acc_at(site, self.cfg.mode, alpha, a, b, beta, c)
+    }
+
+    /// [`Dispatcher::zgemm_acc`] with an explicit call-site id and mode.
+    #[allow(clippy::too_many_arguments)]
+    pub fn zgemm_acc_at(
+        &self,
+        site: CallSiteId,
+        mode: ComputeMode,
+        alpha: crate::complex::c64,
+        a: &ZMat,
+        b: &ZMat,
+        beta: crate::complex::c64,
+        c: &mut ZMat,
+    ) -> Result<()> {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        if a.cols() != b.rows() || c.rows() != m || c.cols() != n {
+            return Err(Error::Shape(format!(
+                "zgemm_acc: {}x{} @ {}x{} -> {}x{}",
+                a.rows(),
+                a.cols(),
+                b.rows(),
+                b.cols(),
+                c.rows(),
+                c.cols()
+            )));
+        }
+        if m == 0 || n == 0 {
+            return Ok(());
+        }
+        if (alpha.re == 0.0 && alpha.im == 0.0) || k == 0 {
+            for v in c.data_mut() {
+                *v = crate::linalg::gemm_scale_c64(beta, *v);
+            }
+            return Ok(());
+        }
+        let p = self.zgemm_mode_at(site, mode, a, b, true)?;
+        for (cv, &pv) in c.data_mut().iter_mut().zip(p.data()) {
+            *cv = crate::linalg::gemm_update_c64(alpha, pv, beta, *cv);
+        }
+        Ok(())
+    }
+
     /// FP64 GEMM pinned to exactly the given mode, bypassing the
     /// precision governor — the real twin of
     /// [`Dispatcher::zgemm_pinned`] for reference passes that must not
@@ -1505,6 +1625,145 @@ mod tests {
         let rep = d.report();
         assert_eq!(rep.total_calls, 2 + 4, "zgemm keeps the 4-GEMM accounting");
         assert_eq!(rep.offloaded_calls, 0);
+    }
+
+    #[test]
+    fn dgemm_acc_pins_the_blas_update_for_each_beta_class() {
+        let d = host_dispatcher(ComputeMode::Dgemm);
+        let mut rng = Rng::new(41);
+        let a = rand_mat(&mut rng, 9, 7);
+        let b = rand_mat(&mut rng, 7, 11);
+        let c0 = rand_mat(&mut rng, 9, 11);
+        let p = linalg::dgemm(&a, &b).unwrap();
+        for beta in [0.0, 1.0, -1.0, 0.5] {
+            for alpha in [0.0, 1.0, -1.0, 0.7] {
+                let mut c = c0.clone();
+                d.dgemm_acc(alpha, &a, &b, beta, &mut c).unwrap();
+                for i in 0..9 {
+                    for j in 0..11 {
+                        let want = if alpha == 0.0 {
+                            linalg::gemm_scale_f64(beta, c0.get(i, j))
+                        } else {
+                            linalg::gemm_update_f64(alpha, p.get(i, j), beta, c0.get(i, j))
+                        };
+                        assert_eq!(c.get(i, j), want, "alpha={alpha} beta={beta}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dgemm_acc_beta_zero_overwrites_poisoned_c() {
+        // BLAS convention: beta == 0 must never read the output buffer.
+        let d = host_dispatcher(ComputeMode::Dgemm);
+        let mut rng = Rng::new(42);
+        let a = rand_mat(&mut rng, 6, 5);
+        let b = rand_mat(&mut rng, 5, 4);
+        let mut c = Mat::from_fn(6, 4, |_, _| f64::NAN);
+        d.dgemm_acc(2.0, &a, &b, 0.0, &mut c).unwrap();
+        let p = linalg::dgemm(&a, &b).unwrap();
+        for i in 0..6 {
+            for j in 0..4 {
+                assert_eq!(c.get(i, j), 2.0 * p.get(i, j));
+            }
+        }
+        // ... including on the product-free alpha == 0 / k == 0 paths.
+        let mut c = Mat::from_fn(6, 4, |_, _| f64::NAN);
+        d.dgemm_acc(0.0, &a, &b, 0.0, &mut c).unwrap();
+        assert!(c.data().iter().all(|&v| v == 0.0));
+        let mut c = Mat::from_fn(3, 2, |_, _| f64::NAN);
+        d.dgemm_acc(1.0, &Mat::zeros(3, 0), &Mat::zeros(0, 2), 0.0, &mut c)
+            .unwrap();
+        assert!(c.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn dgemm_acc_scale_only_paths_skip_the_product() {
+        let d = host_dispatcher(ComputeMode::Dgemm);
+        let mut rng = Rng::new(43);
+        let a = rand_mat(&mut rng, 5, 4);
+        let b = rand_mat(&mut rng, 4, 3);
+        let c0 = rand_mat(&mut rng, 5, 3);
+        // alpha == 0: C := beta·C, no GEMM dispatched.
+        let mut c = c0.clone();
+        d.dgemm_acc(0.0, &a, &b, -1.0, &mut c).unwrap();
+        for (got, want) in c.data().iter().zip(c0.data()) {
+            assert_eq!(*got, -1.0 * want);
+        }
+        // k == 0: same scale-only semantics.
+        let mut c = c0.clone();
+        d.dgemm_acc(2.0, &Mat::zeros(5, 0), &Mat::zeros(0, 3), 0.5, &mut c)
+            .unwrap();
+        for (got, want) in c.data().iter().zip(c0.data()) {
+            assert_eq!(*got, 0.5 * want);
+        }
+        assert_eq!(d.report().total_calls, 0, "scale-only paths dispatch no GEMM");
+        // m == 0 / n == 0: pure no-op, shapes permitting.
+        let mut empty = Mat::zeros(0, 3);
+        d.dgemm_acc(1.0, &Mat::zeros(0, 4), &b, 1.0, &mut empty).unwrap();
+        // Mismatched output shape is rejected loudly.
+        let mut wrong = Mat::zeros(4, 3);
+        assert!(d.dgemm_acc(1.0, &a, &b, 1.0, &mut wrong).is_err());
+    }
+
+    #[test]
+    fn zgemm_acc_matches_the_scalar_update_and_overwrites_at_beta_zero() {
+        use crate::complex::c64;
+        let d = host_dispatcher(ComputeMode::Dgemm);
+        let mut rng = Rng::new(44);
+        let a = ZMat::from_fn(6, 5, |_, _| rng.cnormal());
+        let b = ZMat::from_fn(5, 7, |_, _| rng.cnormal());
+        let c0 = ZMat::from_fn(6, 7, |_, _| rng.cnormal());
+        let p = d.zgemm_pinned(ComputeMode::Dgemm, &a, &b).unwrap();
+        for beta in [c64(0.0, 0.0), c64(1.0, 0.0), c64(-1.0, 0.0), c64(0.5, -0.25)] {
+            let alpha = c64(0.7, 0.3);
+            let mut c = c0.clone();
+            d.zgemm_acc(alpha, &a, &b, beta, &mut c).unwrap();
+            for i in 0..6 {
+                for j in 0..7 {
+                    let want = linalg::gemm_update_c64(alpha, p.get(i, j), beta, c0.get(i, j));
+                    assert_eq!(c.get(i, j), want);
+                }
+            }
+        }
+        let mut c = ZMat::from_fn(6, 7, |_, _| c64(f64::NAN, f64::NAN));
+        d.zgemm_acc(c64(1.0, 0.0), &a, &b, c64(0.0, 0.0), &mut c).unwrap();
+        for i in 0..6 {
+            for j in 0..7 {
+                assert_eq!(c.get(i, j), c64(1.0, 0.0) * p.get(i, j));
+            }
+        }
+        // alpha == 0 scales without dispatching the 4-GEMM decomposition.
+        d.reset_stats();
+        let mut c = c0.clone();
+        d.zgemm_acc(c64(0.0, 0.0), &a, &b, c64(2.0, 0.0), &mut c).unwrap();
+        for (got, want) in c.data().iter().zip(c0.data()) {
+            assert_eq!(*got, c64(2.0, 0.0) * *want);
+        }
+        assert_eq!(d.report().total_calls, 0);
+    }
+
+    #[test]
+    fn dgemm_acc_accumulates_through_the_emulated_path_too() {
+        // The product inside the update is the dispatcher's product —
+        // in Int8 mode that means the Ozaki emulation, bit-for-bit.
+        let d = host_dispatcher(ComputeMode::Int8 { splits: 4 });
+        let mut rng = Rng::new(45);
+        let a = rand_mat(&mut rng, 12, 10);
+        let b = rand_mat(&mut rng, 10, 8);
+        let c0 = rand_mat(&mut rng, 12, 8);
+        let p = ozaki::ozaki_dgemm(&a, &b, 4).unwrap();
+        let mut c = c0.clone();
+        d.dgemm_acc(1.0, &a, &b, 1.0, &mut c).unwrap();
+        for i in 0..12 {
+            for j in 0..8 {
+                assert_eq!(
+                    c.get(i, j),
+                    linalg::gemm_update_f64(1.0, p.get(i, j), 1.0, c0.get(i, j))
+                );
+            }
+        }
     }
 
     #[test]

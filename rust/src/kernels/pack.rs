@@ -17,8 +17,132 @@
 //! blocks write disjoint regions and the parallel packers emit the
 //! exact bytes of their serial counterparts in any schedule.
 
+use crate::complex::c64;
 use crate::linalg::Mat;
 use crate::runtime::pool::{self, SendPtr};
+
+/// A layout-polymorphic read-only 2-D source for the packers: `rows`
+/// logical rows of depth `k`, drawn from any constant-stride buffer.
+/// Element `(r, p)` lives at `buf[r·row_stride + p·col_stride]`, which
+/// covers every layout the packers meet — row-major matrices, their
+/// column views, and raw **column-major** (Fortran/BLAS) buffers with a
+/// leading-dimension stride — so a column-major operand packs directly
+/// into panels instead of being copy-transposed into a row-major
+/// matrix first.
+#[derive(Clone, Copy, Debug)]
+pub struct SrcView<'a, T> {
+    buf: &'a [T],
+    rows: usize,
+    k: usize,
+    row_stride: usize,
+    col_stride: usize,
+}
+
+impl<'a, T: Copy> SrcView<'a, T> {
+    /// Strided view with explicit geometry; `buf` must cover the last
+    /// addressable element.
+    pub fn strided(
+        buf: &'a [T],
+        rows: usize,
+        k: usize,
+        row_stride: usize,
+        col_stride: usize,
+    ) -> Self {
+        if rows > 0 && k > 0 {
+            let last = (rows - 1) * row_stride + (k - 1) * col_stride;
+            assert!(last < buf.len(), "SrcView: buffer too short for geometry");
+        }
+        SrcView {
+            buf,
+            rows,
+            k,
+            row_stride,
+            col_stride,
+        }
+    }
+
+    /// The rows of a row-major matrix (A-side pack source).
+    pub fn mat_rows(m: &'a Mat<T>) -> Self {
+        SrcView {
+            buf: m.data(),
+            rows: m.rows(),
+            k: m.cols(),
+            row_stride: m.cols(),
+            col_stride: 1,
+        }
+    }
+
+    /// The columns of a row-major `k x n` matrix as logical rows
+    /// (B-side pack source: packed row `j` is column `j`).
+    pub fn mat_cols(m: &'a Mat<T>) -> Self {
+        SrcView {
+            buf: m.data(),
+            rows: m.cols(),
+            k: m.rows(),
+            row_stride: 1,
+            col_stride: m.cols(),
+        }
+    }
+
+    /// The rows of a column-major `rows x k` buffer with leading
+    /// dimension `ld >= rows` (element `(i, p)` at `buf[i + p·ld]`).
+    pub fn colmajor_rows(buf: &'a [T], rows: usize, k: usize, ld: usize) -> Self {
+        assert!(ld >= rows.max(1), "SrcView: ld < rows");
+        Self::strided(buf, rows, k, 1, ld)
+    }
+
+    /// The columns of a column-major `k x n` buffer with leading
+    /// dimension `ld >= k` as logical rows (element `(j, p)` at
+    /// `buf[p + j·ld]`).
+    pub fn colmajor_cols(buf: &'a [T], k: usize, n: usize, ld: usize) -> Self {
+        assert!(ld >= k.max(1), "SrcView: ld < k");
+        Self::strided(buf, n, k, ld, 1)
+    }
+
+    /// Logical rows of the view.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Depth (elements per logical row).
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Element `(r, p)`.
+    #[inline]
+    pub fn at(&self, r: usize, p: usize) -> T {
+        debug_assert!(r < self.rows && p < self.k);
+        self.buf[r * self.row_stride + p * self.col_stride]
+    }
+
+    /// Materialise the view as an owned row-major matrix (the gather
+    /// the dispatcher-facing adapters need; rows copy contiguously when
+    /// `col_stride == 1`).
+    pub fn to_mat(&self) -> Mat<T>
+    where
+        T: Default,
+    {
+        if self.col_stride == 1 {
+            let mut out = Mat::zeros(self.rows, self.k);
+            for r in 0..self.rows {
+                let base = r * self.row_stride;
+                out.row_mut(r).copy_from_slice(&self.buf[base..base + self.k]);
+            }
+            out
+        } else {
+            Mat::from_fn(self.rows, self.k, |r, p| self.at(r, p))
+        }
+    }
+
+    /// Map the view element-wise into an owned row-major matrix
+    /// (conjugating gathers for the complex `'C'` transpose flag).
+    pub fn map_mat<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Mat<U> {
+        Mat::from_fn(self.rows, self.k, |r, p| f(self.at(r, p)))
+    }
+}
 
 /// Packed tile panels over `planes` slice planes of a `rows x k`
 /// operand (`planes == 1` for plain FP64/complex-component GEMM).
@@ -208,21 +332,74 @@ where
     });
 }
 
-/// Pack the rows of `a` (A-side operand) into one-plane panels, using
-/// up to `threads` pool tasks.
-pub fn pack_rows_f64_mt(a: &Mat<f64>, tile: usize, threads: usize) -> Panels<f64> {
-    let mut out = Panels::zeroed(1, a.rows(), a.cols(), tile);
+/// Pack any [`SrcView`] into one-plane panels, using up to `threads`
+/// pool tasks — the single layout-polymorphic packing core every
+/// layout-specific entry point below delegates to.  The loop order
+/// follows the view's unit stride (row-contiguous sources stream rows,
+/// column-contiguous sources stream depth), but the written bytes are
+/// identical either way: writes land through [`PanelLayout::index`]
+/// alone.
+pub fn pack_view_mt<T: Copy + Default + Send + Sync>(
+    src: SrcView<'_, T>,
+    tile: usize,
+    threads: usize,
+) -> Panels<T> {
+    let mut out = Panels::zeroed(1, src.rows(), src.k(), tile);
     let layout = out.layout();
     let ptr = SendPtr(out.as_mut_ptr());
-    parallel_tile_rows(a.rows(), tile, threads, &|r0, r1| {
-        for i in r0..r1 {
-            for (p, &v) in a.row(i).iter().enumerate() {
-                // Safety: row blocks are tile-aligned, hence disjoint.
-                unsafe { *ptr.get().add(layout.index(0, i, p)) = v };
+    let k = src.k();
+    parallel_tile_rows(src.rows(), tile, threads, &|r0, r1| {
+        // Safety: row blocks are tile-aligned, hence disjoint.
+        if src.col_stride == 1 {
+            for r in r0..r1 {
+                for p in 0..k {
+                    unsafe { *ptr.get().add(layout.index(0, r, p)) = src.at(r, p) };
+                }
+            }
+        } else {
+            for p in 0..k {
+                for r in r0..r1 {
+                    unsafe { *ptr.get().add(layout.index(0, r, p)) = src.at(r, p) };
+                }
             }
         }
     });
     out
+}
+
+/// Pack a complex [`SrcView`] into separate re/im one-plane panels
+/// (the complex twin of [`pack_view_mt`]).
+pub fn pack_view_c64_mt(
+    src: SrcView<'_, c64>,
+    tile: usize,
+    threads: usize,
+) -> (Panels<f64>, Panels<f64>) {
+    let mut re = Panels::zeroed(1, src.rows(), src.k(), tile);
+    let mut im = Panels::zeroed(1, src.rows(), src.k(), tile);
+    let layout = re.layout();
+    let ptr_re = SendPtr(re.as_mut_ptr());
+    let ptr_im = SendPtr(im.as_mut_ptr());
+    let k = src.k();
+    parallel_tile_rows(src.rows(), tile, threads, &|r0, r1| {
+        // Safety: row blocks are tile-aligned, hence disjoint.
+        for r in r0..r1 {
+            for p in 0..k {
+                let z = src.at(r, p);
+                let idx = layout.index(0, r, p);
+                unsafe {
+                    *ptr_re.get().add(idx) = z.re;
+                    *ptr_im.get().add(idx) = z.im;
+                }
+            }
+        }
+    });
+    (re, im)
+}
+
+/// Pack the rows of `a` (A-side operand) into one-plane panels, using
+/// up to `threads` pool tasks.
+pub fn pack_rows_f64_mt(a: &Mat<f64>, tile: usize, threads: usize) -> Panels<f64> {
+    pack_view_mt(SrcView::mat_rows(a), tile, threads)
 }
 
 /// Pack the rows of `a` (A-side operand) into one-plane panels.
@@ -234,20 +411,7 @@ pub fn pack_rows_f64(a: &Mat<f64>, tile: usize) -> Panels<f64> {
 /// panels, using up to `threads` pool tasks: packed row `j` is column
 /// `j` of `b`, and tasks split over tile blocks of `j`.
 pub fn pack_cols_f64_mt(b: &Mat<f64>, tile: usize, threads: usize) -> Panels<f64> {
-    let (k, n) = (b.rows(), b.cols());
-    let mut out = Panels::zeroed(1, n, k, tile);
-    let layout = out.layout();
-    let ptr = SendPtr(out.as_mut_ptr());
-    parallel_tile_rows(n, tile, threads, &|j0, j1| {
-        for p in 0..k {
-            let brow = b.row(p);
-            for (j, &v) in brow[j0..j1].iter().enumerate() {
-                // Safety: column blocks are tile-aligned, hence disjoint.
-                unsafe { *ptr.get().add(layout.index(0, j0 + j, p)) = v };
-            }
-        }
-    });
-    out
+    pack_view_mt(SrcView::mat_cols(b), tile, threads)
 }
 
 /// Pack the columns of `b` (B-side operand, `k x n`) into one-plane
@@ -263,24 +427,7 @@ pub fn pack_rows_c64_mt(
     tile: usize,
     threads: usize,
 ) -> (Panels<f64>, Panels<f64>) {
-    let mut re = Panels::zeroed(1, a.rows(), a.cols(), tile);
-    let mut im = Panels::zeroed(1, a.rows(), a.cols(), tile);
-    let layout = re.layout();
-    let ptr_re = SendPtr(re.as_mut_ptr());
-    let ptr_im = SendPtr(im.as_mut_ptr());
-    parallel_tile_rows(a.rows(), tile, threads, &|r0, r1| {
-        for i in r0..r1 {
-            for (p, z) in a.row(i).iter().enumerate() {
-                let idx = layout.index(0, i, p);
-                // Safety: row blocks are tile-aligned, hence disjoint.
-                unsafe {
-                    *ptr_re.get().add(idx) = z.re;
-                    *ptr_im.get().add(idx) = z.im;
-                }
-            }
-        }
-    });
-    (re, im)
+    pack_view_c64_mt(SrcView::mat_rows(a), tile, threads)
 }
 
 /// Pack the rows of a complex matrix into separate re/im panels.
@@ -295,26 +442,7 @@ pub fn pack_cols_c64_mt(
     tile: usize,
     threads: usize,
 ) -> (Panels<f64>, Panels<f64>) {
-    let (k, n) = (b.rows(), b.cols());
-    let mut re = Panels::zeroed(1, n, k, tile);
-    let mut im = Panels::zeroed(1, n, k, tile);
-    let layout = re.layout();
-    let ptr_re = SendPtr(re.as_mut_ptr());
-    let ptr_im = SendPtr(im.as_mut_ptr());
-    parallel_tile_rows(n, tile, threads, &|j0, j1| {
-        for p in 0..k {
-            let brow = b.row(p);
-            for (j, z) in brow[j0..j1].iter().enumerate() {
-                let idx = layout.index(0, j0 + j, p);
-                // Safety: column blocks are tile-aligned, hence disjoint.
-                unsafe {
-                    *ptr_re.get().add(idx) = z.re;
-                    *ptr_im.get().add(idx) = z.im;
-                }
-            }
-        }
-    });
-    (re, im)
+    pack_view_c64_mt(SrcView::mat_cols(b), tile, threads)
 }
 
 /// Pack the columns of a complex `k x n` matrix into re/im panels.
@@ -394,6 +522,83 @@ mod tests {
         let (bre, bim) = pack_cols_c64(&z, 2);
         assert_eq!(bre.get(0, 2, 1), 1.0);
         assert_eq!(bim.get(0, 2, 1), 2.0);
+    }
+
+    #[test]
+    fn colmajor_views_pack_identically_to_rowmajor_copies() {
+        use crate::complex::c64;
+        // A 5x4 logical matrix stored column-major with ld = 7 (padded).
+        let (rows, k, ld) = (5usize, 4usize, 7usize);
+        let mut cm = vec![f64::NAN; ld * k]; // padding rows poisoned
+        let m = Mat::from_fn(rows, k, |i, p| (i * 31 + p) as f64 * 0.5 - 3.0);
+        for p in 0..k {
+            for i in 0..rows {
+                cm[i + p * ld] = m.get(i, p);
+            }
+        }
+        for threads in [1usize, 3] {
+            // A-side: column-major rows view ≡ packing the row-major copy.
+            let via_view = pack_view_mt(SrcView::colmajor_rows(&cm, rows, k, ld), 2, threads);
+            let via_mat = pack_rows_f64_mt(&m, 2, threads);
+            for i in 0..rows {
+                for p in 0..k {
+                    assert_eq!(via_view.get(0, i, p), via_mat.get(0, i, p));
+                }
+            }
+            // B-side: the same buffer read as a k x n column-major operand
+            // (k = 5 depth, n = 4 columns) ≡ packing the transposed copy's
+            // columns.
+            let bt = Mat::from_fn(rows, k, |i, p| cm[i + p * ld]);
+            let via_cols = pack_view_mt(SrcView::colmajor_cols(&cm, rows, k, ld), 2, threads);
+            let via_tmat = pack_cols_f64_mt(&bt, 2, threads);
+            for j in 0..k {
+                for p in 0..rows {
+                    assert_eq!(via_cols.get(0, j, p), via_tmat.get(0, j, p));
+                }
+            }
+        }
+        // Complex twin through the same strided geometry.
+        let zm = Mat::from_fn(rows, k, |i, p| c64(i as f64 + 0.25, -(p as f64)));
+        let mut zcm = vec![c64(f64::NAN, f64::NAN); ld * k];
+        for p in 0..k {
+            for i in 0..rows {
+                zcm[i + p * ld] = zm.get(i, p);
+            }
+        }
+        let (vre, vim) = pack_view_c64_mt(SrcView::colmajor_rows(&zcm, rows, k, ld), 2, 2);
+        let (mre, mim) = pack_rows_c64_mt(&zm, 2, 2);
+        for i in 0..rows {
+            for p in 0..k {
+                assert_eq!(vre.get(0, i, p), mre.get(0, i, p));
+                assert_eq!(vim.get(0, i, p), mim.get(0, i, p));
+            }
+        }
+    }
+
+    #[test]
+    fn srcview_materialisers_gather_all_layouts() {
+        use crate::complex::c64;
+        let m = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f64);
+        // mat_rows round-trips; mat_cols materialises the transpose.
+        assert_eq!(SrcView::mat_rows(&m).to_mat().data(), m.data());
+        assert_eq!(SrcView::mat_cols(&m).to_mat().data(), m.transposed().data());
+        // Column-major buffer with padding gathers the logical matrix.
+        let (rows, k, ld) = (3usize, 4usize, 5usize);
+        let mut cm = vec![-1.0f64; ld * k];
+        for p in 0..k {
+            for i in 0..rows {
+                cm[i + p * ld] = m.get(i, p);
+            }
+        }
+        assert_eq!(SrcView::colmajor_rows(&cm, rows, k, ld).to_mat().data(), m.data());
+        // map_mat applies the element transform (conjugating gather).
+        let z = Mat::from_fn(2, 2, |i, j| c64(i as f64, j as f64 + 1.0));
+        let conj = SrcView::mat_rows(&z).map_mat(|v| c64(v.re, -v.im));
+        for i in 0..2 {
+            for j in 0..2 {
+                assert_eq!(conj.get(i, j), c64(i as f64, -(j as f64 + 1.0)));
+            }
+        }
     }
 
     #[test]

@@ -139,6 +139,7 @@
 #![warn(missing_docs)]
 
 pub mod bench;
+pub mod blas;
 pub mod cli;
 pub mod complex;
 pub mod config;

@@ -16,6 +16,7 @@ mod matrix;
 mod norms;
 mod refinement;
 mod trsm;
+mod update;
 mod zgemm;
 
 pub use cond::{cond_estimate_1norm, inv_norm_estimate};
@@ -25,4 +26,5 @@ pub use matrix::{Mat, ZMat};
 pub use norms::{fro_norm, max_abs, one_norm, zfro_norm, zmax_abs, zone_norm};
 pub use refinement::{cgetrf, zcgesv_ir, CLuFactors, IrResult};
 pub use trsm::{ztrsm_left_lower_unit, ztrsm_left_upper};
+pub use update::{gemm_scale_c64, gemm_scale_f64, gemm_update_c64, gemm_update_f64};
 pub use zgemm::{zcombine, zgemm, zgemm_naive, ZgemmHook};

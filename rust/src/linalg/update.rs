@@ -1,0 +1,85 @@
+//! The BLAS output update `C := alpha·P + beta·C` — one home for the
+//! exact scalar expression, shared by the dispatcher's accumulate entry
+//! points, the column-major ABI adapters ([`crate::blas`]), and the
+//! conformance oracles.
+//!
+//! Bit-exactness across those layers depends on every one of them
+//! evaluating the *same* floating-point expression tree, so the rules
+//! live here once:
+//!
+//! * `beta == 0` must **overwrite** `C` without reading it (BLAS
+//!   convention: a NaN-poisoned output buffer is legal input), so the
+//!   update is `alpha·p`, never `alpha·p + 0·c`.
+//! * The scale-only path (`alpha == 0` or `k == 0`) never computes the
+//!   product: `C := beta·C`, with the same no-read rule at `beta == 0`.
+//! * Everything else is literally `alpha * p + beta * c` — callers must
+//!   not refactor this into FMA-able or reassociated forms.
+
+use crate::complex::c64;
+
+/// One element of `C := alpha·P + beta·C` (the general update with a
+/// computed product element `p`).
+#[inline]
+pub fn gemm_update_f64(alpha: f64, p: f64, beta: f64, c: f64) -> f64 {
+    if beta == 0.0 {
+        alpha * p
+    } else {
+        alpha * p + beta * c
+    }
+}
+
+/// One element of the product-free scale `C := beta·C` (the
+/// `alpha == 0` / `k == 0` quick-return path).
+#[inline]
+pub fn gemm_scale_f64(beta: f64, c: f64) -> f64 {
+    if beta == 0.0 {
+        0.0
+    } else {
+        beta * c
+    }
+}
+
+/// Complex twin of [`gemm_update_f64`]; `beta == (0, 0)` overwrites.
+#[inline]
+pub fn gemm_update_c64(alpha: c64, p: c64, beta: c64, c: c64) -> c64 {
+    if beta.re == 0.0 && beta.im == 0.0 {
+        alpha * p
+    } else {
+        alpha * p + beta * c
+    }
+}
+
+/// Complex twin of [`gemm_scale_f64`].
+#[inline]
+pub fn gemm_scale_c64(beta: c64, c: c64) -> c64 {
+    if beta.re == 0.0 && beta.im == 0.0 {
+        c64(0.0, 0.0)
+    } else {
+        beta * c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_zero_never_reads_c() {
+        assert_eq!(gemm_update_f64(2.0, 3.0, 0.0, f64::NAN), 6.0);
+        assert_eq!(gemm_scale_f64(0.0, f64::NAN), 0.0);
+        let z = gemm_update_c64(c64(2.0, 0.0), c64(3.0, 1.0), c64(0.0, 0.0), c64(f64::NAN, f64::NAN));
+        assert_eq!((z.re, z.im), (6.0, 2.0));
+        let s = gemm_scale_c64(c64(0.0, 0.0), c64(f64::NAN, 0.0));
+        assert_eq!((s.re, s.im), (0.0, 0.0));
+    }
+
+    #[test]
+    fn general_update_is_the_literal_expression() {
+        let (alpha, p, beta, c) = (0.7, 1.3, -0.5, 2.25);
+        assert_eq!(gemm_update_f64(alpha, p, beta, c), alpha * p + beta * c);
+        assert_eq!(gemm_scale_f64(beta, c), beta * c);
+        let (za, zp, zb, zc) = (c64(0.7, -0.1), c64(1.3, 0.2), c64(-0.5, 0.4), c64(2.25, -1.0));
+        assert_eq!(gemm_update_c64(za, zp, zb, zc), za * zp + zb * zc);
+        assert_eq!(gemm_scale_c64(zb, zc), zb * zc);
+    }
+}
