@@ -404,6 +404,83 @@ fn main() {
         m_percall.median_s / m_batched.median_s,
         m_percall_shared.median_s / m_batched_shared.median_s
     );
+
+    // Tuned rows (persistent shape autotuner): quick-search this very
+    // shape on this machine, persist the winners to a scratch cache,
+    // and re-run the per-call and batched workloads under
+    // `run.tune = read` — so the JSON carries what the autotuner buys
+    // over the crate defaults, next to the percall@/batched@ rows.
+    let tune_spec = ozaccel::tune::SearchSpec {
+        shapes: vec![(batch_n, batch_n, batch_n)],
+        splits: batch_splits,
+        threads: vec![kthreads],
+        quick: true,
+    };
+    let tune_out = ozaccel::tune::run_search(&tune_spec).expect("tune search");
+    let tune_path = std::env::temp_dir().join(format!(
+        "ozaccel-bench-tuning-{}.toml",
+        std::process::id()
+    ));
+    let mut tune_cache = ozaccel::tune::TuningCache::empty();
+    tune_out.merge_into(&mut tune_cache);
+    tune_cache.save(&tune_path).expect("save tuning cache");
+    ozaccel::tune::invalidate();
+    let mut tcfg = DispatchConfig::host_only(mode);
+    tcfg.kernels.config.panel_cache_mb = 0;
+    tcfg.kernels.config.tune = ozaccel::tune::TuneMode::Read;
+    tcfg.kernels.config.tune_file = Some(tune_path.clone());
+    let tdisp = Dispatcher::new(tcfg).expect("tuned dispatcher");
+    let m_tuned_percall = host_bench.run(|| {
+        for (a, b) in &distinct {
+            tdisp.dgemm_at(site, mode, a, b).expect("tuned percall");
+        }
+    });
+    let m_tuned_batched = host_bench.run(|| {
+        tdisp
+            .batch_scope(|scope| {
+                let tickets: Vec<_> = distinct
+                    .iter()
+                    .map(|(a, b)| scope.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+                    .collect();
+                wait_all(tickets).map(|_| ())
+            })
+            .expect("tuned batched");
+    });
+    let tuned_rows: [(String, &ozaccel::bench::Measurement, f64); 2] = [
+        (
+            format!("tuned_percall@{batch_n}/s{batch_splits}"),
+            &m_tuned_percall,
+            m_percall.median_s,
+        ),
+        (
+            format!("tuned_batched@{batch_n}/s{batch_splits}"),
+            &m_tuned_batched,
+            m_batched.median_s,
+        ),
+    ];
+    for (name, m, baseline) in tuned_rows {
+        bt.row(&[
+            name.clone(),
+            batch_members.to_string(),
+            format!("{:.3}", m.median_s * 1e3),
+            format!("{:.2}", m.flops(workload_flop) / 1e9),
+            format!("{:.2}x", baseline / m.median_s),
+        ]);
+        batch_report.push(JsonRecord::from_measurement(
+            name,
+            m,
+            Some(workload_flop),
+            Some(packed_bytes * batch_members as u64),
+            kthreads,
+        ));
+    }
+    println!(
+        "tuned vs default at {batch_n}^3 x{batch_members}: per-call {:.2}x, batched {:.2}x",
+        m_percall.median_s / m_tuned_percall.median_s,
+        m_batched.median_s / m_tuned_batched.median_s
+    );
+    let _ = std::fs::remove_file(&tune_path);
+
     println!("== batch engine (per-call dispatch vs one batch scope; panel cache off) ==");
     println!("{}", bt.render());
 

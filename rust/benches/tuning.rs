@@ -1,0 +1,88 @@
+//! Autotuner bench — runs the persistent shape autotuner's search on
+//! this machine and records the tuned-vs-default delta per
+//! (shape class × threads) key, plus the fused-batch flush-bound
+//! curve.  The tuned time can never exceed the default time by
+//! construction (the defaults are always a candidate and ties keep the
+//! incumbent), so the `tuned@*` rows track how much headroom the
+//! hand-chosen constants leave on each machine class.
+//! Run with `cargo bench --bench tuning` (add `--quick`; `--json`
+//! writes BENCH_tuning.json).
+
+use ozaccel::bench::{JsonRecord, JsonReport, Table};
+use ozaccel::perfmodel::gemm_flops;
+use ozaccel::tune::{run_search, SearchSpec};
+
+fn main() {
+    ozaccel::logging::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let json = std::env::args().any(|a| a == "--json");
+
+    let mut spec = SearchSpec::default_for_machine();
+    spec.quick = quick;
+    if quick {
+        spec.shapes = vec![(64, 64, 64), (128, 128, 128)];
+    }
+    let out = run_search(&spec).expect("tune search");
+
+    let mut report = JsonReport::new();
+    let mut t = Table::new(&[
+        "isa", "class", "threads", "shape", "default_ms", "tuned_ms", "gain", "mc", "nc",
+        "kc", "pack_par", "nr",
+    ]);
+    for r in &out.rows {
+        let (m, k, n) = r.shape;
+        let flop = gemm_flops(m, k, n);
+        let label = format!("{m}x{k}x{n}");
+        t.row(&[
+            r.isa.to_string(),
+            r.class.label(),
+            r.threads.to_string(),
+            label.clone(),
+            format!("{:.3}", r.default_s * 1e3),
+            format!("{:.3}", r.tuned_s * 1e3),
+            format!("{:.2}x", r.gain()),
+            r.entry.mc.to_string(),
+            r.entry.nc.to_string(),
+            r.entry.kc.to_string(),
+            r.entry.pack_parallel.to_string(),
+            r.entry.nr.to_string(),
+        ]);
+        report.push(JsonRecord {
+            name: format!("default@{label}/s{}/t{}", spec.splits, r.threads),
+            median_s: r.default_s,
+            mad_s: 0.0,
+            gflops: Some(flop / r.default_s / 1e9),
+            bytes_packed: None,
+            threads: r.threads,
+        });
+        report.push(JsonRecord {
+            name: format!("tuned@{label}/s{}/t{}", spec.splits, r.threads),
+            median_s: r.tuned_s,
+            mad_s: 0.0,
+            gflops: Some(flop / r.tuned_s / 1e9),
+            bytes_packed: None,
+            threads: r.threads,
+        });
+    }
+    println!("== autotuner: coordinate-descent winners vs crate defaults ==");
+    println!("{}", t.render());
+
+    for &(bs, s) in &out.batch {
+        println!("batch bucket {bs:>3}: {s:.3e} s/call");
+        report.push(JsonRecord {
+            name: format!("batch_flush@{bs}"),
+            median_s: s,
+            mad_s: 0.0,
+            gflops: None,
+            bytes_packed: None,
+            threads: spec.threads[0],
+        });
+    }
+    println!("batch max_pending winner: {}", out.batch_max_pending);
+
+    if json {
+        let path = std::path::Path::new("BENCH_tuning.json");
+        report.write(path).expect("write BENCH_tuning.json");
+        println!("wrote {} ({} records)", path.display(), report.len());
+    }
+}

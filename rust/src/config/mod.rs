@@ -43,6 +43,11 @@ const ADAPTIVE_ALIAS_KEYS: &[&str] = &["target", "min_splits", "max_splits"];
 /// Keys accepted under `[batch]` — the execution engine's flush policy.
 const BATCH_KEYS: &[&str] = &["max_pending", "max_bytes"];
 
+/// Keys accepted under `[tune]` — the persistent shape autotuner's
+/// dispatch-time consultation (`run.tune = "auto"` is scalar shorthand
+/// for `tune.mode`).
+const TUNE_KEYS: &[&str] = &["mode", "file"];
+
 /// Keys accepted under `[limits]` — the execution engine's admission
 /// control (backpressure) bounds.
 const LIMITS_KEYS: &[&str] = &["max_inflight", "submit_deadline_ms"];
@@ -157,6 +162,24 @@ impl RunConfig {
             }
             cfg.dispatch.kernels.config.kc = f as usize;
         }
+        if let Some(v) = lookup(&table, "run.mc") {
+            let f = v.as_f64()?;
+            if f.fract() != 0.0 || f < 1.0 {
+                return Err(Error::Config(format!(
+                    "run.mc must be a positive integer, got {f}"
+                )));
+            }
+            cfg.dispatch.kernels.config.mc = f as usize;
+        }
+        if let Some(v) = lookup(&table, "run.nc") {
+            let f = v.as_f64()?;
+            if f.fract() != 0.0 || f < 1.0 {
+                return Err(Error::Config(format!(
+                    "run.nc must be a positive integer, got {f}"
+                )));
+            }
+            cfg.dispatch.kernels.config.nc = f as usize;
+        }
         if let Some(v) = lookup(&table, "run.pack_parallel") {
             cfg.dispatch.kernels.config.pack_parallel = v.as_bool()?;
         }
@@ -226,6 +249,16 @@ impl RunConfig {
                 if !OFFLOAD_KEYS.contains(&rest) {
                     return Err(Error::Config(format!(
                         "unknown offload key {key:?} (expected one of {OFFLOAD_KEYS:?})"
+                    )));
+                }
+            }
+            let tune_rest = key
+                .strip_prefix("run.tune.")
+                .or_else(|| key.strip_prefix("tune."));
+            if let Some(rest) = tune_rest {
+                if !TUNE_KEYS.contains(&rest) {
+                    return Err(Error::Config(format!(
+                        "unknown tune key {key:?} (expected one of {TUNE_KEYS:?})"
                     )));
                 }
             }
@@ -397,6 +430,33 @@ impl RunConfig {
                 ))
             })?;
         }
+        // The autotuner knobs: `run.tune = "auto"` (or top-level
+        // `tune = "auto"`) is scalar shorthand for the mode; the
+        // `[tune]` / `[run.tune]` table spellings carry `mode` and the
+        // cache-file override `file` — note `tune` is deliberately NOT
+        // in the scalar-where-table rejection above.
+        let tune_mode = lookup(&table, "tune.mode")
+            .or_else(|| lookup(&table, "run.tune.mode"))
+            .or_else(|| lookup(&table, "run.tune"))
+            .or_else(|| lookup(&table, "tune"));
+        if let Some(v) = tune_mode {
+            cfg.dispatch.kernels.config.tune =
+                crate::tune::TuneMode::parse(v.as_str()?).ok_or_else(|| {
+                    Error::Config(format!(
+                        "bad tune mode {:?} (expected off | read | auto)",
+                        v.as_str().unwrap_or_default()
+                    ))
+                })?;
+        }
+        if let Some(v) =
+            lookup(&table, "tune.file").or_else(|| lookup(&table, "run.tune.file"))
+        {
+            let s = v.as_str()?;
+            if s.is_empty() {
+                return Err(Error::Config("tune.file must be a non-empty path".into()));
+            }
+            cfg.dispatch.kernels.config.tune_file = Some(PathBuf::from(s));
+        }
         if let Some(v) = lookup(&table, "sweep.splits") {
             cfg.sweep_splits = v
                 .as_array()?
@@ -444,6 +504,34 @@ impl RunConfig {
         if let Ok(v) = std::env::var("OZACCEL_SIMD") {
             self.dispatch.kernels.config.simd = SimdSelect::parse(&v)
                 .ok_or_else(|| Error::Config(format!("bad OZACCEL_SIMD {v:?}")))?;
+        }
+        if let Ok(v) = std::env::var("OZACCEL_MC") {
+            let n: usize = v
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("bad OZACCEL_MC {v:?}")))?;
+            if n == 0 {
+                return Err(Error::Config("OZACCEL_MC must be >= 1".into()));
+            }
+            self.dispatch.kernels.config.mc = n;
+        }
+        if let Ok(v) = std::env::var("OZACCEL_NC") {
+            let n: usize = v
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("bad OZACCEL_NC {v:?}")))?;
+            if n == 0 {
+                return Err(Error::Config("OZACCEL_NC must be >= 1".into()));
+            }
+            self.dispatch.kernels.config.nc = n;
+        }
+        if let Ok(v) = std::env::var("OZACCEL_TUNE") {
+            self.dispatch.kernels.config.tune =
+                crate::tune::TuneMode::parse(&v).ok_or_else(|| {
+                    Error::Config(format!(
+                        "bad OZACCEL_TUNE {v:?} (expected off | read | auto)"
+                    ))
+                })?;
         }
         if let Ok(v) = std::env::var("OZACCEL_PRECISION") {
             self.dispatch.precision.mode = PrecisionMode::parse(&v)
@@ -670,6 +758,54 @@ n_contour = 12
         assert!(RunConfig::from_toml("[run]\npanel_cache_mb = -4\n").is_err());
         assert!(RunConfig::from_toml("[run]\npanel_cache_mb = 2.5\n").is_err());
         assert!(RunConfig::from_toml("[run]\npack_parallel = \"yes\"\n").is_err());
+    }
+
+    #[test]
+    fn mc_nc_knobs_parse_and_reject() {
+        let cfg = RunConfig::from_toml("[run]\nmc = 96\nnc = 384\n").unwrap();
+        assert_eq!(cfg.dispatch.kernels.config.mc, 96);
+        assert_eq!(cfg.dispatch.kernels.config.nc, 384);
+        // defaults stay in place when unset
+        let d = RunConfig::default();
+        assert!(d.dispatch.kernels.config.mc >= 1);
+        assert!(d.dispatch.kernels.config.nc >= 1);
+        // rejections are loud: zero / negative / fractional
+        for bad in ["mc = 0", "mc = -4", "mc = 2.5", "nc = 0", "nc = -4", "nc = 2.5"] {
+            assert!(
+                RunConfig::from_toml(&format!("[run]\n{bad}\n")).is_err(),
+                "{bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn tune_keys_parse_and_reject() {
+        use crate::tune::TuneMode;
+        // scalar shorthand under [run]
+        let cfg = RunConfig::from_toml("[run]\ntune = \"auto\"\n").unwrap();
+        assert_eq!(cfg.dispatch.kernels.config.tune, TuneMode::Auto);
+        // table spellings carry mode + cache-file override
+        let cfg = RunConfig::from_toml(
+            "[tune]\nmode = \"read\"\nfile = \"/tmp/tuning.toml\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dispatch.kernels.config.tune, TuneMode::Read);
+        assert_eq!(
+            cfg.dispatch.kernels.config.tune_file,
+            Some(PathBuf::from("/tmp/tuning.toml"))
+        );
+        let cfg = RunConfig::from_toml("[run.tune]\nmode = \"off\"\n").unwrap();
+        assert_eq!(cfg.dispatch.kernels.config.tune, TuneMode::Off);
+        // the default is off (seed behaviour) with no file override
+        let d = RunConfig::default();
+        assert_eq!(d.dispatch.kernels.config.tune, TuneMode::Off);
+        assert_eq!(d.dispatch.kernels.config.tune_file, None);
+        // rejections are loud: bad mode / unknown keys / empty path
+        assert!(RunConfig::from_toml("[run]\ntune = \"fast\"\n").is_err());
+        assert!(RunConfig::from_toml("[tune]\nmode = \"fast\"\n").is_err());
+        assert!(RunConfig::from_toml("[tune]\nbogus = 1\n").is_err());
+        assert!(RunConfig::from_toml("[run.tune]\nbogus = 1\n").is_err());
+        assert!(RunConfig::from_toml("[tune]\nfile = \"\"\n").is_err());
     }
 
     // Process-wide env mutation lock shared with every other test
@@ -952,6 +1088,41 @@ n_contour = 12
         assert!(cfg.apply_env().is_err(), "zero max_pending is loud");
         std::env::set_var("OZACCEL_BATCH_MAX_PENDING", "many");
         assert!(cfg.apply_env().is_err(), "bad OZACCEL_BATCH_MAX_PENDING is loud");
+    }
+
+    #[test]
+    fn mc_nc_env_override() {
+        let _guard = env_lock();
+        let _r1 = RestoreVar("OZACCEL_MC");
+        let _r2 = RestoreVar("OZACCEL_NC");
+        std::env::set_var("OZACCEL_MC", "192");
+        std::env::set_var("OZACCEL_NC", "768");
+        let mut cfg = RunConfig::from_toml("[run]\nmc = 64\nnc = 128\n").unwrap();
+        cfg.apply_env().unwrap();
+        assert_eq!(cfg.dispatch.kernels.config.mc, 192);
+        assert_eq!(cfg.dispatch.kernels.config.nc, 768);
+        std::env::set_var("OZACCEL_MC", "0");
+        assert!(cfg.apply_env().is_err(), "zero OZACCEL_MC is loud");
+        std::env::set_var("OZACCEL_MC", "wide");
+        assert!(cfg.apply_env().is_err(), "bad OZACCEL_MC is loud");
+        std::env::set_var("OZACCEL_MC", "192");
+        std::env::set_var("OZACCEL_NC", "-1");
+        assert!(cfg.apply_env().is_err(), "negative OZACCEL_NC is loud");
+    }
+
+    #[test]
+    fn tune_env_override() {
+        let _guard = env_lock();
+        let _restore = RestoreVar("OZACCEL_TUNE");
+        std::env::set_var("OZACCEL_TUNE", "read");
+        let mut cfg = RunConfig::from_toml("[run]\ntune = \"off\"\n").unwrap();
+        cfg.apply_env().unwrap();
+        assert_eq!(
+            cfg.dispatch.kernels.config.tune,
+            crate::tune::TuneMode::Read
+        );
+        std::env::set_var("OZACCEL_TUNE", "fast");
+        assert!(cfg.apply_env().is_err(), "bad OZACCEL_TUNE is loud");
     }
 
     #[test]

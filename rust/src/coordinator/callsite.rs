@@ -107,6 +107,10 @@ pub struct CallSiteStats {
     /// INT8 microkernel ISA that served this site's emulated host
     /// calls (last seen; `None` for naive/FP64-only sites).
     pub isa: Option<&'static str>,
+    /// Source of the blocking constants this site's emulated host calls
+    /// ran under (last seen: `default` | `pretuned` | `cache`; `None`
+    /// until a host call records one) — the PEAK `tuned` column.
+    pub tuned: Option<&'static str>,
     /// Largest row-band parallelism a host call at this site used.
     pub bands: u64,
     /// Split/pack seconds spent by this site's host calls.
@@ -280,6 +284,9 @@ impl SiteRegistry {
             if !h.isa.is_empty() {
                 e.isa = Some(h.isa);
             }
+            if !h.tuned.is_empty() {
+                e.tuned = Some(h.tuned);
+            }
             e.bands = e.bands.max(h.bands);
             e.pack_s += h.pack_s;
             e.cache_hits += h.cache_hits;
@@ -375,6 +382,7 @@ impl SiteRegistry {
             t.modeled_move_s += s.modeled_move_s;
             t.host_kernel = t.host_kernel.or(s.host_kernel);
             t.isa = t.isa.or(s.isa);
+            t.tuned = t.tuned.or(s.tuned);
             t.bands = t.bands.max(s.bands);
             t.pack_s += s.pack_s;
             t.cache_hits += s.cache_hits;
@@ -429,6 +437,7 @@ mod tests {
             pack_s: 2e-4,
             cache_hits: 3,
             cache_misses: 1,
+            tuned: "cache",
         };
         r.record(
             "a.rs:1",
@@ -459,6 +468,7 @@ mod tests {
         assert_eq!(a.host, 1);
         assert_eq!(a.host_kernel, Some("blocked"));
         assert_eq!(a.isa, Some("avx2"));
+        assert_eq!(a.tuned, Some("cache"));
         assert_eq!(a.bands, 4);
         assert_eq!((a.cache_hits, a.cache_misses), (3, 1));
         assert!((a.pack_s - 2e-4).abs() < 1e-12);
@@ -470,6 +480,7 @@ mod tests {
         assert!((t.modeled_gpu_s - 3e-3).abs() < 1e-12);
         assert_eq!(t.host_kernel, Some("blocked"));
         assert_eq!(t.isa, Some("avx2"));
+        assert_eq!(t.tuned, Some("cache"));
         assert_eq!(t.cache_hits, 3);
         assert_eq!((t.splits_min, t.splits_max), (6, 6));
         assert!((t.probe_s - 5e-5).abs() < 1e-12);

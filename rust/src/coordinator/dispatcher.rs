@@ -783,6 +783,10 @@ impl Dispatcher {
             kernel: self.cfg.kernels.kernel.name(),
             isa: self.host_isa(mode),
             bands: self.cfg.kernels.bands_for(m, mr),
+            tuned: match mode {
+                ComputeMode::Dgemm => "default",
+                ComputeMode::Int8 { .. } => self.cfg.kernels.tuned_source(m, k, n),
+            },
             ..Default::default()
         };
         if let Some(before) = cache_before {
@@ -1020,6 +1024,12 @@ impl Dispatcher {
                     kernel: self.cfg.kernels.kernel.name(),
                     isa: self.host_isa(mode),
                     bands: self.cfg.kernels.bands_for(m, mr),
+                    tuned: match mode {
+                        // FP64 host calls never route through tuned
+                        // constants (bit contract on kc).
+                        ComputeMode::Dgemm => "default",
+                        ComputeMode::Int8 { .. } => self.cfg.kernels.tuned_source(m, k, n),
+                    },
                     ..Default::default()
                 };
                 if let Some(before) = cache_before {

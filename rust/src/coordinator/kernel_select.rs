@@ -38,6 +38,10 @@ pub struct HostCallInfo {
     pub cache_hits: u64,
     /// Packed-panel cache misses during this call.
     pub cache_misses: u64,
+    /// Source of the blocking constants the call ran under
+    /// (`default` | `pretuned` | `cache` — see
+    /// [`KernelSelector::config_for`]); empty when unrecorded.
+    pub tuned: &'static str,
 }
 
 /// Which host implementation serves non-offloaded calls
@@ -137,10 +141,12 @@ impl KernelSelector {
     /// The [`KernelConfig`] the blocked core actually receives: the
     /// `Blocked` selection pins the scalar INT8 body, `Simd` promotes a
     /// contradictory `simd = scalar` back to auto-detection, and
-    /// `Auto`/`Naive` pass the config through.  `pub(crate)` so the
-    /// batch engine's fused buckets run under exactly the config a
-    /// sequential call through this selector would (the bit-identity
-    /// contract depends on it).
+    /// `Auto`/`Naive` pass the config through.  The result is clamped
+    /// to the register-tile invariant ([`KernelConfig::clamped`]), so
+    /// no dispatch path can hand the kernels a non-tile-multiple block.
+    /// `pub(crate)` so the batch engine's fused buckets run under
+    /// exactly the config a sequential call through this selector would
+    /// (the bit-identity contract depends on it).
     pub(crate) fn effective_config(&self) -> KernelConfig {
         let mut cfg = self.config.clone();
         match self.kernel {
@@ -152,7 +158,39 @@ impl KernelSelector {
             }
             HostKernel::Auto | HostKernel::Naive => {}
         }
-        cfg
+        cfg.clamped()
+    }
+
+    /// The per-shape config for an **Ozaki/INT8** call of shape
+    /// `m x k x n`, plus the source of its blocking constants — the
+    /// PEAK report's `tuned` column (`"default"` | `"pretuned"` |
+    /// `"cache"`).  With `run.tune` off (the default) this is exactly
+    /// [`effective_config`]; otherwise the persistent autotuner cache
+    /// may override the blocking constants per
+    /// (ISA × [`crate::tune::ShapeClass`] × threads).  Only speed can
+    /// change: every tuned knob is bit-invisible on the integer paths,
+    /// which is why the FP64 paths (whose `kc` fixes summation order)
+    /// never route through here.
+    ///
+    /// [`effective_config`]: KernelSelector::effective_config
+    pub(crate) fn config_for(&self, m: usize, k: usize, n: usize) -> (KernelConfig, &'static str) {
+        let cfg = self.effective_config();
+        if self.kernel == HostKernel::Naive {
+            return (cfg, "default");
+        }
+        let isa = cfg.simd.resolve().name();
+        match crate::tune::lookup(&cfg, isa, m, k, n) {
+            Some((entry, source)) => (entry.apply(&cfg), source),
+            None => (cfg, "default"),
+        }
+    }
+
+    /// The `tuned` label [`config_for`] would report for this shape —
+    /// the dispatcher's PEAK column without rebuilding the config.
+    ///
+    /// [`config_for`]: KernelSelector::config_for
+    pub fn tuned_source(&self, m: usize, k: usize, n: usize) -> &'static str {
+        self.config_for(m, k, n).1
     }
 
     /// The INT8 microkernel ISA emulated host calls will run under this
@@ -179,7 +217,10 @@ impl KernelSelector {
     pub fn ozaki_dgemm(&self, a: &Mat<f64>, b: &Mat<f64>, splits: u32) -> Result<Mat<f64>> {
         match self.kernel {
             HostKernel::Naive => ozaki::ozaki_dgemm_naive(a, b, splits),
-            _ => ozaki::ozaki_dgemm_with(a, b, splits, &self.effective_config()),
+            _ => {
+                let (cfg, _) = self.config_for(a.rows(), a.cols(), b.cols());
+                ozaki::ozaki_dgemm_with(a, b, splits, &cfg)
+            }
         }
     }
 
@@ -226,7 +267,10 @@ impl KernelSelector {
                 let ir = ozaki::ozaki_dgemm_naive(&ai, &br, splits)?;
                 Ok(linalg::zcombine(&rr, &ii, &ri, &ir))
             }
-            _ => ozaki::ozaki_zgemm_with(a, b, splits, &self.effective_config()),
+            _ => {
+                let (cfg, _) = self.config_for(a.rows(), a.cols(), b.cols());
+                ozaki::ozaki_zgemm_with(a, b, splits, &cfg)
+            }
         }
     }
 

@@ -96,7 +96,7 @@ impl Report {
             self.runtime.label()
         ));
         out.push_str(&format!(
-            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>7} {:>5} {:>10} {:>9} {:>7} {:>9} {:>13} {:>10} {:>13} {:>5}\n",
+            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>7} {:>8} {:>5} {:>10} {:>9} {:>7} {:>9} {:>13} {:>10} {:>13} {:>5}\n",
             "call site",
             "calls",
             "offload",
@@ -106,6 +106,7 @@ impl Report {
             "move-model",
             "kernel",
             "isa",
+            "tuned",
             "bands",
             "pack",
             "cache h/m",
@@ -118,7 +119,7 @@ impl Report {
         ));
         for (site, s) in self.sites.iter() {
             out.push_str(&format!(
-                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>7} {:>5} {:>9.4}s {:>9} {:>7} {:>9.2} {:>13} {:>10} {:>13} {:>5}\n",
+                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>7} {:>8} {:>5} {:>9.4}s {:>9} {:>7} {:>9.2} {:>13} {:>10} {:>13} {:>5}\n",
                 site,
                 s.calls,
                 s.offloaded,
@@ -128,6 +129,7 @@ impl Report {
                 s.modeled_move_s,
                 s.host_kernel.unwrap_or("-"),
                 s.isa.unwrap_or("-"),
+                s.tuned.unwrap_or("-"),
                 s.bands,
                 s.pack_s,
                 format!("{}/{}", s.cache_hits, s.cache_misses),
@@ -203,6 +205,7 @@ mod tests {
                     pack_s: 0.05,
                     cache_hits: 2,
                     cache_misses: 1,
+                    tuned: "pretuned",
                 }),
                 batch: Some(BatchCallInfo {
                     bucket: 2,
@@ -227,6 +230,7 @@ mod tests {
                     pack_s: 0.0,
                     cache_hits: 0,
                     cache_misses: 0,
+                    tuned: "pretuned",
                 }),
                 batch: Some(BatchCallInfo {
                     bucket: 2,
@@ -272,6 +276,8 @@ mod tests {
         assert!(txt.contains("probe_ms"), "header shows the probe-cost column");
         assert!(txt.contains("simd"), "host kernel surfaced per site");
         assert!(txt.contains("avx2"), "microkernel ISA surfaced per site");
+        assert!(txt.contains("tuned"), "header shows the tuned-constants column");
+        assert!(txt.contains("pretuned"), "tuned-constants source surfaced per site");
         assert!(txt.contains("2/1"), "cache hits/misses surfaced"); // first record only
         assert!(txt.contains("4..7"), "split envelope surfaced per site");
         assert!(txt.contains("3.00"), "probe milliseconds surfaced per site");

@@ -253,6 +253,7 @@ impl GroupRecorder {
 fn group_host_info(
     disp: &Dispatcher,
     m: usize,
+    tuned: &'static str,
     before: panel_cache::CacheStats,
 ) -> HostCallInfo {
     let after = panel_cache::global_stats();
@@ -263,6 +264,7 @@ fn group_host_info(
         pack_s: after.pack_s - before.pack_s,
         cache_hits: after.hits - before.hits,
         cache_misses: after.misses - before.misses,
+        tuned,
     }
 }
 
@@ -287,7 +289,8 @@ fn fused_real(
     degraded: bool,
     stats: &Mutex<BatchStats>,
 ) -> Result<()> {
-    let ecfg: KernelConfig = disp.selector().effective_config();
+    let (ecfg, tuned): (KernelConfig, &'static str) =
+        disp.selector().config_for(key.m, key.k, key.n);
     let weights = diagonal_weights(splits);
     let mut memo = PackMemo {
         hits_by_member: vec![0; group.len()],
@@ -334,7 +337,7 @@ fn fused_real(
     let mut rec = GroupRecorder {
         bucket: group.len() as u64,
         lead_seen: HashSet::new(),
-        full_info: group_host_info(disp, key.m, cache_before),
+        full_info: group_host_info(disp, key.m, tuned, cache_before),
         attached_full: false,
     };
     for (mi, (req, member)) in group.iter().zip(results).enumerate() {
@@ -401,7 +404,8 @@ fn fused_complex(
     degraded: bool,
     stats: &Mutex<BatchStats>,
 ) -> Result<()> {
-    let ecfg: KernelConfig = disp.selector().effective_config();
+    let (ecfg, tuned): (KernelConfig, &'static str) =
+        disp.selector().config_for(key.m, key.k, key.n);
     let weights = diagonal_weights(splits);
     let mut memo = PackMemo {
         hits_by_member: vec![0; group.len()],
@@ -493,7 +497,7 @@ fn fused_complex(
     let mut rec = GroupRecorder {
         bucket: group.len() as u64,
         lead_seen: HashSet::new(),
-        full_info: group_host_info(disp, key.m, cache_before),
+        full_info: group_host_info(disp, key.m, tuned, cache_before),
         attached_full: false,
     };
     for ((req, member), reuse) in group

@@ -39,6 +39,13 @@ use crate::runtime::pool::{self, SendPtr};
 pub const MR_I8: usize = 4;
 /// Columns per B-side register tile.
 pub const NR_I8: usize = 8;
+/// Columns per B-side register tile in the **wide** (AVX-512
+/// native-width) variant the shape autotuner can select
+/// (`KernelConfig::nr = 16`).  B panels are packed with this tile width
+/// and the fused sweep runs [`super::simd::Microkernel::run_wide`];
+/// exact integer accumulation keeps the choice invisible in the result
+/// bits, so it is purely a throughput knob.
+pub const NR_I8_WIDE: usize = 16;
 
 /// Maximum number of `i8·i8` product terms an `i32` accumulator can
 /// absorb exactly in the worst case (`|q| <= 127`):
@@ -100,11 +107,24 @@ impl Accum for i64 {
 /// only body the rare `i64` wide-accumulator escape runs.
 #[inline]
 pub(crate) fn microkernel<A: Accum>(acc: &mut [[A; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
-    for (av, bv) in a_panel.chunks_exact(MR_I8).zip(b_panel.chunks_exact(NR_I8)) {
+    microkernel_nr::<A, NR_I8>(acc, a_panel, b_panel);
+}
+
+/// [`microkernel`] generalized over the B-tile width: the same scalar
+/// body serves the classic [`NR_I8`] tile and the [`NR_I8_WIDE`] NR=16
+/// tile (and both accumulator widths), so no tile variant can drift
+/// from the oracle.
+#[inline]
+pub(crate) fn microkernel_nr<A: Accum, const NR: usize>(
+    acc: &mut [[A; NR]; MR_I8],
+    a_panel: &[i8],
+    b_panel: &[i8],
+) {
+    for (av, bv) in a_panel.chunks_exact(MR_I8).zip(b_panel.chunks_exact(NR)) {
         for r in 0..MR_I8 {
             let ar = A::from_i8(av[r]);
             let row = &mut acc[r];
-            for c in 0..NR_I8 {
+            for c in 0..NR {
                 row[c] = row[c].mul_acc(ar, A::from_i8(bv[c]));
             }
         }
@@ -126,8 +146,8 @@ pub(crate) fn microkernel<A: Accum>(acc: &mut [[A; NR_I8]; MR_I8], a_panel: &[i8
 /// choice — cannot change a single bit.
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn accumulate_diagonal<A: Accum>(
-    ctile: &mut [[f64; NR_I8]; MR_I8],
+fn accumulate_diagonal<A: Accum, const NR: usize>(
+    ctile: &mut [[f64; NR]; MR_I8],
     d: usize,
     w: f64,
     a_tile: usize,
@@ -135,10 +155,10 @@ fn accumulate_diagonal<A: Accum>(
     ap: &Panels<i8>,
     bp: &Panels<i8>,
     kc: usize,
-    run: &dyn Fn(&mut [[A; NR_I8]; MR_I8], &[i8], &[i8]),
+    run: &dyn Fn(&mut [[A; NR]; MR_I8], &[i8], &[i8]),
 ) {
     let k = ap.k();
-    let mut acc = [[A::default(); NR_I8]; MR_I8];
+    let mut acc = [[A::default(); NR]; MR_I8];
     let mut k0 = 0;
     while k0 < k {
         let k1 = (k0 + kc).min(k);
@@ -152,7 +172,7 @@ fn accumulate_diagonal<A: Accum>(
         k0 = k1;
     }
     for r in 0..MR_I8 {
-        for cc in 0..NR_I8 {
+        for cc in 0..NR {
             ctile[r][cc] += acc[r][cc].to_f64() * w;
         }
     }
@@ -161,8 +181,9 @@ fn accumulate_diagonal<A: Accum>(
 /// Fused multi-slice sweep: `C = Σ_d weights[d] · D_d` with
 /// `D_d = Σ_{k+l=d} A_k · B_lᵀ`, one pass over the packed panels.
 ///
-/// `ap` must be packed with tile [`MR_I8`], `bp` with [`NR_I8`], and
-/// `weights.len()` selects how many anti-diagonals are retained (the
+/// `ap` must be packed with tile [`MR_I8`], `bp` with [`NR_I8`] or
+/// [`NR_I8_WIDE`], and `weights.len()` selects how many anti-diagonals
+/// are retained (the
 /// ozIMMU triangle keeps `d < splits`).  Row bands are distributed over
 /// `cfg.threads` tasks on the persistent worker pool; the result is
 /// independent of the thread count.
@@ -200,7 +221,7 @@ pub fn fused_ozaki_sweep(
 pub struct SweepSpec<'a> {
     /// A-side panels (packed with [`MR_I8`]).
     pub ap: &'a Panels<i8>,
-    /// B-side panels (packed with [`NR_I8`]).
+    /// B-side panels (packed with [`NR_I8`] or [`NR_I8_WIDE`]).
     pub bp: &'a Panels<i8>,
     /// Anti-diagonal weights (`d < splits` retained).
     pub weights: &'a [f64],
@@ -209,10 +230,10 @@ pub struct SweepSpec<'a> {
 /// Validate one sweep's panel pair (shared by the single and batched
 /// entry points so their rejections cannot drift).
 fn check_sweep(ap: &Panels<i8>, bp: &Panels<i8>, weights: &[f64]) -> Result<()> {
-    if ap.tile() != MR_I8 || bp.tile() != NR_I8 {
+    if ap.tile() != MR_I8 || !(bp.tile() == NR_I8 || bp.tile() == NR_I8_WIDE) {
         return Err(Error::Shape(format!(
-            "fused_ozaki_sweep: panels must be packed with tiles {MR_I8}/{NR_I8}, \
-             got {}/{}",
+            "fused_ozaki_sweep: panels must be packed with tiles \
+             {MR_I8}/{NR_I8} or {MR_I8}/{NR_I8_WIDE}, got {}/{}",
             ap.tile(),
             bp.tile()
         )));
@@ -373,6 +394,10 @@ pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 
 /// One row band of the fused sweep.  `c_band` covers whole tiles
 /// (bands are multiples of `MR_I8` rows except the ragged tail).
+/// Dispatches on the B panels' tile width: the classic NR=8 tile runs
+/// [`Microkernel::run`], the NR=16 wide tile
+/// [`Microkernel::run_wide`] — one generic body serves both, and exact
+/// integer accumulation keeps the choice bit-invisible.
 #[allow(clippy::too_many_arguments)]
 fn fused_band(
     c_band: &mut [f64],
@@ -385,11 +410,51 @@ fn fused_band(
     wide: bool,
     mk: &dyn Microkernel,
 ) {
+    match bp.tile() {
+        NR_I8 => fused_band_nr::<NR_I8>(
+            c_band,
+            tile0,
+            n,
+            ap,
+            bp,
+            weights,
+            cfg,
+            wide,
+            &|acc, a, b| mk.run(acc, a, b),
+        ),
+        NR_I8_WIDE => fused_band_nr::<NR_I8_WIDE>(
+            c_band,
+            tile0,
+            n,
+            ap,
+            bp,
+            weights,
+            cfg,
+            wide,
+            &|acc, a, b| mk.run_wide(acc, a, b),
+        ),
+        other => unreachable!("check_sweep admits only NR {NR_I8}/{NR_I8_WIDE}, got {other}"),
+    }
+}
+
+/// The NR-generic band body behind [`fused_band`].
+#[allow(clippy::too_many_arguments)]
+fn fused_band_nr<const NR: usize>(
+    c_band: &mut [f64],
+    tile0: usize,
+    n: usize,
+    ap: &Panels<i8>,
+    bp: &Panels<i8>,
+    weights: &[f64],
+    cfg: &KernelConfig,
+    wide: bool,
+    run32: &dyn Fn(&mut [[i32; NR]; MR_I8], &[i8], &[i8]),
+) {
     let band_rows = c_band.len() / n;
     let band_tiles = band_rows.div_ceil(MR_I8);
     let kc = cfg.kc.max(1);
     let mc_tiles = (cfg.mc / MR_I8).max(1);
-    let nc_tiles = (cfg.nc / NR_I8).max(1);
+    let nc_tiles = (cfg.nc / NR).max(1);
     let n_tiles = bp.tiles();
 
     for ic in (0..band_tiles).step_by(mc_tiles) {
@@ -400,12 +465,12 @@ fn fused_band(
                 let row0 = it * MR_I8;
                 let ilim = MR_I8.min(band_rows - row0);
                 for jt in jc..jc_end {
-                    let col0 = jt * NR_I8;
-                    let jlim = NR_I8.min(n - col0);
-                    let mut ctile = [[0.0f64; NR_I8]; MR_I8];
+                    let col0 = jt * NR;
+                    let jlim = NR.min(n - col0);
+                    let mut ctile = [[0.0f64; NR]; MR_I8];
                     for (d, &w) in weights.iter().enumerate() {
                         if wide {
-                            accumulate_diagonal::<i64>(
+                            accumulate_diagonal::<i64, NR>(
                                 &mut ctile,
                                 d,
                                 w,
@@ -414,10 +479,10 @@ fn fused_band(
                                 ap,
                                 bp,
                                 kc,
-                                &|acc, a, b| microkernel::<i64>(acc, a, b),
+                                &|acc, a, b| microkernel_nr::<i64, NR>(acc, a, b),
                             );
                         } else {
-                            accumulate_diagonal::<i32>(
+                            accumulate_diagonal::<i32, NR>(
                                 &mut ctile,
                                 d,
                                 w,
@@ -426,7 +491,7 @@ fn fused_band(
                                 ap,
                                 bp,
                                 kc,
-                                &|acc, a, b| mk.run(acc, a, b),
+                                run32,
                             );
                         }
                     }
@@ -889,6 +954,63 @@ mod tests {
         for (c, want) in healthy.iter().zip(&clean) {
             assert_eq!(c.data(), want.data());
         }
+    }
+
+    #[test]
+    fn wide_tile_sweep_is_bit_identical_to_the_classic_tile() {
+        // B packed with NR=16 vs NR=8: same fused sweep, same bits, on
+        // every ISA and thread count — the register-tile variant is a
+        // throughput knob only (the autotuner's selection contract).
+        let mut rng = Rng::new(0x16E);
+        for (m, k, n, s) in [
+            (1usize, 1usize, 1usize, 2usize),
+            (7, 13, 15, 3),
+            (9, 33, 17, 4),
+            (21, 16, 40, 6),
+        ] {
+            let pa: Vec<Mat<i8>> = (0..s).map(|_| rand_i8(&mut rng, m, k)).collect();
+            let pb: Vec<Mat<i8>> = (0..s).map(|_| rand_i8(&mut rng, n, k)).collect();
+            let ap = Panels::pack_planes(&pa, MR_I8);
+            let bp8 = Panels::pack_planes(&pb, NR_I8);
+            let bp16 = Panels::pack_planes(&pb, NR_I8_WIDE);
+            let w: Vec<f64> = (0..s).map(|d| 0.5f64.powi(d as i32)).collect();
+            let want = fused_ozaki_sweep(&ap, &bp8, &w, &KernelConfig::single_threaded()).unwrap();
+            for isa in available_isas() {
+                for threads in [1usize, 3] {
+                    let cfg = KernelConfig {
+                        simd: SimdSelect::Force(isa),
+                        threads,
+                        ..KernelConfig::default()
+                    };
+                    let got = fused_ozaki_sweep(&ap, &bp16, &w, &cfg).unwrap();
+                    assert_eq!(
+                        got.data(),
+                        want.data(),
+                        "{m}x{k}x{n} s={s} isa={} threads={threads}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_tile_takes_the_i64_escape_exactly_too() {
+        // NR=16 panels past the i32 bound: the wide-accumulator escape
+        // must run the NR-generic scalar body and stay exact.
+        let splits = 2usize;
+        let k = MAX_EXACT_I32_TERMS / splits + 1;
+        let pa: Vec<Mat<i8>> = (0..splits)
+            .map(|_| Mat::from_fn(1, k, |_, _| 127i8))
+            .collect();
+        let pb: Vec<Mat<i8>> = (0..splits)
+            .map(|_| Mat::from_fn(1, k, |_, _| -127i8))
+            .collect();
+        let ap = Panels::pack_planes(&pa, MR_I8);
+        let bp = Panels::pack_planes(&pb, NR_I8_WIDE);
+        let want = -4.0 * k as f64 * 16129.0;
+        let c = fused_ozaki_sweep(&ap, &bp, &[1.0, 1.0], &KernelConfig::default()).unwrap();
+        assert_eq!(c.get(0, 0), want);
     }
 
     #[test]

@@ -51,7 +51,7 @@ pub mod simd;
 pub use fp64::{dgemm_blocked, zgemm_blocked, MR_C64, MR_F64, NR_C64, NR_F64};
 pub use int8::{
     fused_ozaki_sweep, fused_ozaki_sweep_many, fused_ozaki_sweep_many_isolated,
-    int8_gemm_blocked, is_wide, SweepSpec, MAX_EXACT_I32_TERMS, MR_I8, NR_I8,
+    int8_gemm_blocked, is_wide, SweepSpec, MAX_EXACT_I32_TERMS, MR_I8, NR_I8, NR_I8_WIDE,
 };
 pub use simd::{available_isas, Isa, Microkernel, SimdSelect};
 pub use pack::{
@@ -86,6 +86,21 @@ pub struct KernelConfig {
     /// Results are bit-identical either way (exact integer
     /// accumulation); only speed changes.
     pub simd: SimdSelect,
+    /// INT8 B-panel register-tile width: [`NR_I8`] (the classic 8-wide
+    /// tile) or [`NR_I8_WIDE`] (the AVX-512 native-width 16-wide tile).
+    /// Like every other knob on the Ozaki path this is bit-invisible
+    /// (exact integer accumulation) — only speed changes.  The FP64
+    /// kernels ignore it.
+    pub nr: usize,
+    /// Tuning-cache consultation mode (`run.tune` / `OZACCEL_TUNE`):
+    /// whether [`crate::coordinator::KernelSelector`] may override the
+    /// blocking constants per call shape from the persistent autotuner
+    /// cache (see [`crate::tune`]).
+    pub tune: crate::tune::TuneMode,
+    /// Explicit tuning-cache path (`tune.file` / `OZACCEL_TUNE_FILE`);
+    /// `None` resolves to `$OZACCEL_TUNE_FILE` then
+    /// `~/.cache/ozaccel/tuning.toml`.
+    pub tune_file: Option<std::path::PathBuf>,
 }
 
 impl Default for KernelConfig {
@@ -98,6 +113,9 @@ impl Default for KernelConfig {
             pack_parallel: true,
             panel_cache_mb: panel_cache::DEFAULT_CAPACITY_MB,
             simd: SimdSelect::Auto,
+            nr: NR_I8,
+            tune: crate::tune::TuneMode::Off,
+            tune_file: None,
         }
     }
 }
@@ -116,6 +134,35 @@ impl KernelConfig {
         KernelConfig {
             threads: threads.max(1),
             ..KernelConfig::default()
+        }
+    }
+
+    /// Clamp the blocking constants to register-tile compatibility.
+    ///
+    /// **Invariant:** the blocked drivers assume `mc` is a positive
+    /// multiple of the A-side register tile ([`MR_I8`]), `nc` a
+    /// positive multiple of the B-side tile (`nr`), and `kc >= 1`; a
+    /// non-multiple silently degrades every cache block to the
+    /// ragged-edge path.  `nr` itself must be one of the two packed
+    /// tile widths ([`NR_I8`] / [`NR_I8_WIDE`]).  Dispatch resolves
+    /// every config through this method
+    /// (`KernelSelector::effective_config`), so hand-built or tuned
+    /// configs are normalized before they reach a kernel.  Clamping
+    /// rounds **down** (never above a user-requested cache footprint)
+    /// and is a no-op on the defaults.  Bit-identity is unaffected:
+    /// these knobs are invisible to Ozaki/INT8 results, and the FP64
+    /// path's `kc` is only floored at the same `max(1)` the kernels
+    /// already apply.
+    #[must_use]
+    pub fn clamped(&self) -> Self {
+        let nr = if self.nr == NR_I8_WIDE { NR_I8_WIDE } else { NR_I8 };
+        KernelConfig {
+            mc: (self.mc / MR_I8).max(1) * MR_I8,
+            nc: (self.nc / nr).max(1) * nr,
+            kc: self.kc.max(1),
+            threads: self.threads.max(1),
+            nr,
+            ..self.clone()
         }
     }
 
@@ -242,6 +289,27 @@ mod tests {
         assert_eq!(c.panel_cache_mb, panel_cache::DEFAULT_CAPACITY_MB);
         assert_eq!(c.simd, SimdSelect::Auto);
         assert!(c.simd.resolve().available());
+        assert_eq!(c.nr, NR_I8);
+        assert_eq!(c.tune, crate::tune::TuneMode::Off);
+        assert!(c.tune_file.is_none());
+        assert_eq!(c.clamped(), c, "defaults are already tile-aligned");
+    }
+
+    #[test]
+    fn clamped_rounds_down_to_tile_multiples() {
+        let c = KernelConfig {
+            mc: 130,
+            nc: 250,
+            kc: 0,
+            threads: 0,
+            nr: 16,
+            ..KernelConfig::default()
+        };
+        let k = c.clamped();
+        assert_eq!((k.mc, k.nc, k.kc, k.threads, k.nr), (128, 240, 1, 1, NR_I8_WIDE));
+        // Sub-tile requests floor to one whole tile, bogus nr to NR_I8.
+        let tiny = KernelConfig { mc: 1, nc: 3, nr: 5, ..KernelConfig::default() }.clamped();
+        assert_eq!((tiny.mc, tiny.nc, tiny.nr), (MR_I8, NR_I8, NR_I8));
     }
 
     #[test]

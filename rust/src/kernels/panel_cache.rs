@@ -13,8 +13,8 @@
 //!
 //! Keys are **content fingerprints** (a SplitMix64-mixed digest of the
 //! raw f64 bits — see [`fingerprint`] for why full per-word avalanche
-//! is load-bearing) plus shape, split count, and operand side — never
-//! bare pointers — so
+//! is load-bearing) plus shape, split count, pack tile width, and
+//! operand side — never bare pointers — so
 //! aliased copies of the same matrix hit, and in-place mutation misses
 //! by construction (the stale entry simply ages out of the LRU).  A hit
 //! therefore always returns exactly the panels a fresh pack would
@@ -54,6 +54,12 @@ struct Key {
     rows: usize,
     cols: usize,
     splits: u32,
+    /// Register-tile width the panels were packed with (`MR` for A,
+    /// `NR` for B).  Part of the key because the same operand packed
+    /// for the 8-wide and 16-wide B tiles yields different panel
+    /// layouts — the tuner switches `nr` per call shape, and a tile
+    /// mismatch must miss, never alias.
+    tile: usize,
     fp: u64,
 }
 
@@ -156,16 +162,17 @@ impl PanelCache {
         self.resident = 0;
     }
 
-    /// Look up the packed panels for (`side`, shape, `splits`, content
-    /// fingerprint `fp`), counting the hit or miss.  The caller packs
-    /// on a miss **without holding the cache lock** and hands the
-    /// product to [`PanelCache::insert`].
+    /// Look up the packed panels for (`side`, shape, `splits`, pack
+    /// `tile` width, content fingerprint `fp`), counting the hit or
+    /// miss.  The caller packs on a miss **without holding the cache
+    /// lock** and hands the product to [`PanelCache::insert`].
     pub fn lookup(
         &mut self,
         side: Side,
         rows: usize,
         cols: usize,
         splits: u32,
+        tile: usize,
         fp: u64,
     ) -> Option<(Arc<Panels<i8>>, Arc<Vec<i32>>)> {
         self.tick += 1;
@@ -174,6 +181,7 @@ impl PanelCache {
             rows,
             cols,
             splits,
+            tile,
             fp,
         };
         match self.map.get_mut(&key) {
@@ -201,6 +209,7 @@ impl PanelCache {
         rows: usize,
         cols: usize,
         splits: u32,
+        tile: usize,
         fp: u64,
         panels: Panels<i8>,
         exps: Vec<i32>,
@@ -213,6 +222,7 @@ impl PanelCache {
             rows,
             cols,
             splits,
+            tile,
             fp,
         };
         if let Some(e) = self.map.get_mut(&key) {
@@ -248,22 +258,24 @@ impl PanelCache {
     ///
     /// [`lookup`]: PanelCache::lookup
     /// [`insert`]: PanelCache::insert
+    #[allow(clippy::too_many_arguments)]
     pub fn get_or_pack(
         &mut self,
         side: Side,
         rows: usize,
         cols: usize,
         splits: u32,
+        tile: usize,
         fp: u64,
         pack: impl FnOnce() -> (Panels<i8>, Vec<i32>),
     ) -> (Arc<Panels<i8>>, Arc<Vec<i32>>) {
-        if let Some(hit) = self.lookup(side, rows, cols, splits, fp) {
+        if let Some(hit) = self.lookup(side, rows, cols, splits, tile, fp) {
             return hit;
         }
         let t0 = Instant::now();
         let (panels, exps) = pack();
         let dt = t0.elapsed().as_secs_f64();
-        self.insert(side, rows, cols, splits, fp, panels, exps, dt)
+        self.insert(side, rows, cols, splits, tile, fp, panels, exps, dt)
     }
 
     /// Evict the least-recently-used entry, skipping (when `protect` is
@@ -341,9 +353,9 @@ mod tests {
         let mut cache = PanelCache::new(1 << 20);
         let a = Mat::from_fn(8, 8, |i, j| (i * 8 + j) as f64 * 0.125 - 3.0);
         let fp = fingerprint(a.data());
-        let (p1, e1) = cache.get_or_pack(Side::A, 8, 8, 4, fp, || pack_a(&a, 4));
+        let (p1, e1) = cache.get_or_pack(Side::A, 8, 8, 4, MR_I8, fp, || pack_a(&a, 4));
         let (p2, e2) =
-            cache.get_or_pack(Side::A, 8, 8, 4, fp, || panic!("must not repack on a hit"));
+            cache.get_or_pack(Side::A, 8, 8, 4, MR_I8, fp, || panic!("must not repack on a hit"));
         assert!(Arc::ptr_eq(&p1, &p2));
         assert!(Arc::ptr_eq(&e1, &e2));
         let s = cache.stats();
@@ -357,8 +369,8 @@ mod tests {
         let a = Mat::from_fn(6, 5, |i, j| (i as f64 - j as f64) * 0.5);
         let alias = a.clone(); // different allocation, same content
         let (p1, _) =
-            cache.get_or_pack(Side::A, 6, 5, 3, fingerprint(a.data()), || pack_a(&a, 3));
-        let (p2, _) = cache.get_or_pack(Side::A, 6, 5, 3, fingerprint(alias.data()), || {
+            cache.get_or_pack(Side::A, 6, 5, 3, MR_I8, fingerprint(a.data()), || pack_a(&a, 3));
+        let (p2, _) = cache.get_or_pack(Side::A, 6, 5, 3, MR_I8, fingerprint(alias.data()), || {
             panic!("aliased content must hit")
         });
         assert!(Arc::ptr_eq(&p1, &p2));
@@ -369,11 +381,11 @@ mod tests {
         let mut cache = PanelCache::new(1 << 20);
         let mut a = Mat::from_fn(4, 4, |i, j| (i + j) as f64 + 0.25);
         let fp1 = fingerprint(a.data());
-        let (p1, _) = cache.get_or_pack(Side::A, 4, 4, 3, fp1, || pack_a(&a, 3));
+        let (p1, _) = cache.get_or_pack(Side::A, 4, 4, 3, MR_I8, fp1, || pack_a(&a, 3));
         a.set(2, 2, -17.5); // in-place mutation, same allocation
         let fp2 = fingerprint(a.data());
         assert_ne!(fp1, fp2);
-        let (p2, _) = cache.get_or_pack(Side::A, 4, 4, 3, fp2, || pack_a(&a, 3));
+        let (p2, _) = cache.get_or_pack(Side::A, 4, 4, 3, MR_I8, fp2, || pack_a(&a, 3));
         assert!(!Arc::ptr_eq(&p1, &p2), "mutated operand must repack");
         assert_eq!(cache.stats().misses, 2);
         // fresh pack of the mutated matrix matches the cached copy
@@ -392,11 +404,32 @@ mod tests {
         let mut cache = PanelCache::new(1 << 20);
         let a = Mat::from_fn(5, 5, |i, j| (i * j) as f64 * 0.1 + 0.01);
         let fp = fingerprint(a.data());
-        cache.get_or_pack(Side::A, 5, 5, 3, fp, || pack_a(&a, 3));
-        cache.get_or_pack(Side::A, 5, 5, 4, fp, || pack_a(&a, 4));
-        cache.get_or_pack(Side::B, 5, 5, 3, fp, || pack_a(&a, 3));
+        cache.get_or_pack(Side::A, 5, 5, 3, MR_I8, fp, || pack_a(&a, 3));
+        cache.get_or_pack(Side::A, 5, 5, 4, MR_I8, fp, || pack_a(&a, 4));
+        cache.get_or_pack(Side::B, 5, 5, 3, MR_I8, fp, || pack_a(&a, 3));
         assert_eq!(cache.stats().misses, 3);
         assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn pack_tile_is_part_of_the_key() {
+        use crate::kernels::{NR_I8, NR_I8_WIDE};
+        let mut cache = PanelCache::new(1 << 20);
+        let b = Mat::from_fn(8, 16, |i, j| (i as f64 + 1.0) * 0.25 - j as f64 * 0.125);
+        let fp = fingerprint(b.data());
+        let pack_b = |tile: usize| {
+            let eb = row_scale_exponents(&b.transposed());
+            let pb = split_scaled_into_panels(&b.transposed(), &eb, 3, tile);
+            (pb, eb)
+        };
+        let (p8, _) = cache.get_or_pack(Side::B, 8, 16, 3, NR_I8, fp, || pack_b(NR_I8));
+        let (p16, _) = cache.get_or_pack(Side::B, 8, 16, 3, NR_I8_WIDE, fp, || {
+            pack_b(NR_I8_WIDE)
+        });
+        assert!(!Arc::ptr_eq(&p8, &p16), "tile widths must not alias");
+        assert_eq!(cache.stats().misses, 2);
+        assert_eq!(p8.tile(), NR_I8);
+        assert_eq!(p16.tile(), NR_I8_WIDE);
     }
 
     #[test]
@@ -404,7 +437,7 @@ mod tests {
         let mut cache = PanelCache::new(0);
         let a = Mat::from_fn(4, 4, |_, _| 0.5);
         // capacity 0: computed but never stored
-        cache.get_or_pack(Side::A, 4, 4, 2, fingerprint(a.data()), || pack_a(&a, 2));
+        cache.get_or_pack(Side::A, 4, 4, 2, MR_I8, fingerprint(a.data()), || pack_a(&a, 2));
         assert_eq!(cache.len(), 0);
         assert_eq!(cache.resident_bytes(), 0);
 
@@ -416,7 +449,7 @@ mod tests {
         let mut cache = PanelCache::new(one_entry);
         for v in 0..5 {
             let m = Mat::from_fn(4, 4, |_, _| v as f64 + 0.5);
-            cache.get_or_pack(Side::A, 4, 4, 2, fingerprint(m.data()), || pack_a(&m, 2));
+            cache.get_or_pack(Side::A, 4, 4, 2, MR_I8, fingerprint(m.data()), || pack_a(&m, 2));
             assert!(cache.resident_bytes() <= cache.capacity_bytes());
         }
         assert_eq!(cache.stats().evictions, 4);
@@ -427,7 +460,7 @@ mod tests {
     fn shrinking_capacity_evicts() {
         let a = Mat::from_fn(4, 4, |_, _| 1.25);
         let mut cache = PanelCache::new(1 << 20);
-        cache.get_or_pack(Side::A, 4, 4, 2, fingerprint(a.data()), || pack_a(&a, 2));
+        cache.get_or_pack(Side::A, 4, 4, 2, MR_I8, fingerprint(a.data()), || pack_a(&a, 2));
         assert_eq!(cache.len(), 1);
         cache.set_capacity(0);
         assert_eq!(cache.len(), 0);

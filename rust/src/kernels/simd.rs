@@ -38,13 +38,14 @@
 //! `i64` wide-accumulator escape past the bound always runs the scalar
 //! body — it is exact by the same argument, and too rare to vectorize.
 
-use super::int8::{microkernel, MR_I8, NR_I8};
+use super::int8::{microkernel, microkernel_nr, MR_I8, NR_I8, NR_I8_WIDE};
 
 // The vector bodies below hard-code the 4-row x 8-column register tile
-// (one 256-bit lane row per accumulator row, 8-byte B loads).  Retuning
-// the tile must be a compile error here, not out-of-bounds UB in the
-// unsafe blocks.
-const _: () = assert!(MR_I8 == 4 && NR_I8 == 8);
+// (one 256-bit lane row per accumulator row, 8-byte B loads) and its
+// 4 x 16 wide variant (two 256-bit halves per row on AVX2, one 512-bit
+// lane row on AVX-512).  Retuning the tiles must be a compile error
+// here, not out-of-bounds UB in the unsafe blocks.
+const _: () = assert!(MR_I8 == 4 && NR_I8 == 8 && NR_I8_WIDE == 16);
 
 /// One INT8→`i32` register-tile microkernel implementation.
 ///
@@ -53,11 +54,22 @@ const _: () = assert!(MR_I8 == 4 && NR_I8 == 8);
 /// `b_panel.len() = k·NR_I8`) — the contract of the scalar body in
 /// [`super::int8`], which every implementation must match bit-for-bit
 /// (exact integer arithmetic makes any summation order equivalent).
+///
+/// `run_wide` is the same contract over the `MR_I8 x NR_I8_WIDE`
+/// register tile (B panels packed with tile width 16 — the AVX-512
+/// native-width variant the shape autotuner can select via
+/// `KernelConfig::nr`).  The default body is the scalar oracle, so
+/// every ISA is always wide-capable; AVX2 and AVX-512 override it with
+/// vector bodies.
 pub trait Microkernel: Send + Sync {
     /// ISA label shown in the PEAK report (`scalar`, `avx2`, ...).
     fn name(&self) -> &'static str;
     /// Accumulate one packed `MR_I8 x NR_I8` tile over the given panels.
     fn run(&self, acc: &mut [[i32; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]);
+    /// Accumulate one packed `MR_I8 x NR_I8_WIDE` (NR=16) tile.
+    fn run_wide(&self, acc: &mut [[i32; NR_I8_WIDE]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
+        microkernel_nr::<i32, NR_I8_WIDE>(acc, a_panel, b_panel);
+    }
 }
 
 /// The instruction set a resolved microkernel targets.
@@ -109,8 +121,11 @@ impl Isa {
             Isa::Avx2 => false,
             #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
             Isa::Avx512 => {
+                // BW is required by the NR=16 wide tile's i16 zip
+                // (`vpermt2w`); every VNNI-capable CPU also has BW+VL.
                 std::is_x86_feature_detected!("avx512vl")
                     && std::is_x86_feature_detected!("avx512vnni")
+                    && std::is_x86_feature_detected!("avx512bw")
             }
             #[cfg(not(all(target_arch = "x86_64", feature = "avx512")))]
             Isa::Avx512 => false,
@@ -245,6 +260,11 @@ impl Microkernel for Avx2Kernel {
         // `Isa::microkernel`, which verified AVX2 via CPUID.
         unsafe { x86::run_avx2(acc, a_panel, b_panel) }
     }
+    #[inline]
+    fn run_wide(&self, acc: &mut [[i32; NR_I8_WIDE]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
+        // Safety: as for `run`.
+        unsafe { x86::run_avx2_wide(acc, a_panel, b_panel) }
+    }
 }
 
 #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
@@ -261,8 +281,14 @@ impl Microkernel for Avx512Kernel {
     #[inline]
     fn run(&self, acc: &mut [[i32; NR_I8]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
         // Safety: reachable only via `Isa::microkernel` after the
-        // avx512vl+avx512vnni CPUID probe.
+        // avx512vl+avx512vnni+avx512bw CPUID probe.
         unsafe { x86::run_avx512(acc, a_panel, b_panel) }
+    }
+    #[inline]
+    fn run_wide(&self, acc: &mut [[i32; NR_I8_WIDE]; MR_I8], a_panel: &[i8], b_panel: &[i8]) {
+        // Safety: as for `run` (the wide body additionally uses
+        // `vpermt2w`, covered by the avx512bw probe).
+        unsafe { x86::run_avx512_wide(acc, a_panel, b_panel) }
     }
 }
 
@@ -286,7 +312,7 @@ impl Microkernel for NeonKernel {
 
 #[cfg(target_arch = "x86_64")]
 mod x86 {
-    use super::{MR_I8, NR_I8};
+    use super::{MR_I8, NR_I8, NR_I8_WIDE};
 
     /// Two sign-extended `i8` values packed as the `(lo, hi)` `i16`
     /// halves of one `i32` lane — the broadcast operand of
@@ -375,6 +401,73 @@ mod x86 {
         _mm256_storeu_si256(acc[3].as_mut_ptr() as *mut __m256i, c3);
     }
 
+    /// AVX2 NR=16 wide-tile body: two 256-bit accumulator halves per
+    /// row over B panels packed with tile width [`NR_I8_WIDE`], same
+    /// paired-step `vpmaddwd` layout as [`run_avx2`].
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2 is available on the running CPU.
+    #[target_feature(enable = "avx2,sse4.1")]
+    pub(super) unsafe fn run_avx2_wide(
+        acc: &mut [[i32; NR_I8_WIDE]; MR_I8],
+        a_panel: &[i8],
+        b_panel: &[i8],
+    ) {
+        use std::arch::x86_64::*;
+        let k = b_panel.len() / NR_I8_WIDE;
+        debug_assert_eq!(a_panel.len(), k * MR_I8);
+        debug_assert_eq!(b_panel.len(), k * NR_I8_WIDE);
+        let ap = a_panel.as_ptr();
+        let bp = b_panel.as_ptr();
+        // acc[r] is 16 contiguous i32 = two ymm halves per row.
+        let mut c: [[__m256i; 2]; MR_I8] = [[_mm256_setzero_si256(); 2]; MR_I8];
+        for r in 0..MR_I8 {
+            c[r][0] = _mm256_loadu_si256(acc[r].as_ptr() as *const __m256i);
+            c[r][1] = _mm256_loadu_si256(acc[r].as_ptr().add(8) as *const __m256i);
+        }
+        let mut p = 0usize;
+        while p < k {
+            // Pair step p with p+1 (or with zeros on the odd-K tail).
+            let b_lo0 =
+                _mm_cvtepi8_epi16(_mm_loadl_epi64(bp.add(p * NR_I8_WIDE) as *const __m128i));
+            let b_hi0 =
+                _mm_cvtepi8_epi16(_mm_loadl_epi64(bp.add(p * NR_I8_WIDE + 8) as *const __m128i));
+            let (b_lo1, b_hi1, a1) = if p + 1 < k {
+                (
+                    _mm_cvtepi8_epi16(_mm_loadl_epi64(
+                        bp.add((p + 1) * NR_I8_WIDE) as *const __m128i
+                    )),
+                    _mm_cvtepi8_epi16(_mm_loadl_epi64(
+                        bp.add((p + 1) * NR_I8_WIDE + 8) as *const __m128i,
+                    )),
+                    ap.add((p + 1) * MR_I8),
+                )
+            } else {
+                (_mm_setzero_si128(), _mm_setzero_si128(), std::ptr::null())
+            };
+            let bpair_lo = _mm256_set_m128i(
+                _mm_unpackhi_epi16(b_lo0, b_lo1),
+                _mm_unpacklo_epi16(b_lo0, b_lo1),
+            );
+            let bpair_hi = _mm256_set_m128i(
+                _mm_unpackhi_epi16(b_hi0, b_hi1),
+                _mm_unpacklo_epi16(b_hi0, b_hi1),
+            );
+            let a0 = ap.add(p * MR_I8);
+            for (r, cr) in c.iter_mut().enumerate() {
+                let hi = if a1.is_null() { 0 } else { *a1.add(r) };
+                let av = _mm256_set1_epi32(pair16(*a0.add(r), hi));
+                cr[0] = _mm256_add_epi32(cr[0], _mm256_madd_epi16(av, bpair_lo));
+                cr[1] = _mm256_add_epi32(cr[1], _mm256_madd_epi16(av, bpair_hi));
+            }
+            p += 2;
+        }
+        for r in 0..MR_I8 {
+            _mm256_storeu_si256(acc[r].as_mut_ptr() as *mut __m256i, c[r][0]);
+            _mm256_storeu_si256(acc[r].as_mut_ptr().add(8) as *mut __m256i, c[r][1]);
+        }
+    }
+
     /// AVX-512 VNNI microkernel body: identical pair layout to
     /// [`run_avx2`], with `_mm256_dpwssd_epi32` fusing the
     /// multiply-add-accumulate into one instruction.
@@ -425,6 +518,78 @@ mod x86 {
         _mm256_storeu_si256(acc[1].as_mut_ptr() as *mut __m256i, c1);
         _mm256_storeu_si256(acc[2].as_mut_ptr() as *mut __m256i, c2);
         _mm256_storeu_si256(acc[3].as_mut_ptr() as *mut __m256i, c3);
+    }
+
+    /// `vpermw` index interleaving two 16-element i16 halves of a zmm
+    /// into per-column `(b_p[c], b_{p+1}[c])` pairs: element `2c` picks
+    /// `c` (from `b_p`), element `2c+1` picks `16 + c` (from `b_{p+1}`).
+    #[cfg(feature = "avx512")]
+    const IDX_PAIR: [i16; 32] = {
+        let mut v = [0i16; 32];
+        let mut c = 0usize;
+        while c < 16 {
+            v[2 * c] = c as i16;
+            v[2 * c + 1] = 16 + c as i16;
+            c += 1;
+        }
+        v
+    };
+
+    /// AVX-512 NR=16 native-width body: one 512-bit accumulator row per
+    /// register-tile row, `vpermw` zipping the two contraction steps'
+    /// B columns into i16 pairs and `vpdpwssd` fusing the
+    /// multiply-add-accumulate — the full-width tile the autotuner can
+    /// select where it measures faster than two 256-bit passes.
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX-512F/BW/VL + AVX-512VNNI availability.
+    #[cfg(feature = "avx512")]
+    #[target_feature(enable = "avx512f,avx512bw,avx512vnni,avx512vl,avx2,sse4.1")]
+    pub(super) unsafe fn run_avx512_wide(
+        acc: &mut [[i32; NR_I8_WIDE]; MR_I8],
+        a_panel: &[i8],
+        b_panel: &[i8],
+    ) {
+        use std::arch::x86_64::*;
+        let k = b_panel.len() / NR_I8_WIDE;
+        debug_assert_eq!(a_panel.len(), k * MR_I8);
+        debug_assert_eq!(b_panel.len(), k * NR_I8_WIDE);
+        let ap = a_panel.as_ptr();
+        let bp = b_panel.as_ptr();
+        let idx: __m512i = std::mem::transmute(IDX_PAIR);
+        let mut c: [__m512i; MR_I8] = [
+            _mm512_loadu_si512(acc[0].as_ptr() as *const _),
+            _mm512_loadu_si512(acc[1].as_ptr() as *const _),
+            _mm512_loadu_si512(acc[2].as_ptr() as *const _),
+            _mm512_loadu_si512(acc[3].as_ptr() as *const _),
+        ];
+        let mut p = 0usize;
+        while p < k {
+            let b0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                bp.add(p * NR_I8_WIDE) as *const __m128i
+            ));
+            let (b1, a1) = if p + 1 < k {
+                (
+                    _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                        bp.add((p + 1) * NR_I8_WIDE) as *const __m128i,
+                    )),
+                    ap.add((p + 1) * MR_I8),
+                )
+            } else {
+                (_mm256_setzero_si256(), std::ptr::null())
+            };
+            let both = _mm512_inserti64x4(_mm512_castsi256_si512(b0), b1, 1);
+            let bpair = _mm512_permutexvar_epi16(idx, both);
+            let a0 = ap.add(p * MR_I8);
+            for (r, cr) in c.iter_mut().enumerate() {
+                let hi = if a1.is_null() { 0 } else { *a1.add(r) };
+                *cr = _mm512_dpwssd_epi32(*cr, _mm512_set1_epi32(pair16(*a0.add(r), hi)), bpair);
+            }
+            p += 2;
+        }
+        for r in 0..MR_I8 {
+            _mm512_storeu_si512(acc[r].as_mut_ptr() as *mut _, c[r]);
+        }
     }
 }
 
@@ -504,6 +669,45 @@ mod tests {
                 let mut got = [[123i32; NR_I8]; MR_I8];
                 isa.microkernel().run(&mut got, &a, &b);
                 assert_eq!(got, want, "isa={} k={k}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_isa_matches_scalar_bitwise_on_the_wide_tile() {
+        // Same bar for the NR=16 tile: the AVX2 two-half body and the
+        // AVX-512 zmm body must reproduce the scalar oracle's bits,
+        // including the zero-paired odd-K tail.
+        let mut rng = Rng::new(0x16D);
+        for k in [0usize, 1, 2, 3, 7, 8, 33, 64, 129] {
+            let a: Vec<i8> = (0..k * MR_I8)
+                .map(|_| (rng.index(0, 255) as i32 - 127) as i8)
+                .collect();
+            let b: Vec<i8> = (0..k * NR_I8_WIDE)
+                .map(|_| (rng.index(0, 255) as i32 - 127) as i8)
+                .collect();
+            let mut want = [[321i32; NR_I8_WIDE]; MR_I8]; // nonzero: += not =
+            SCALAR.run_wide(&mut want, &a, &b);
+            for isa in available_isas() {
+                let mut got = [[321i32; NR_I8_WIDE]; MR_I8];
+                isa.microkernel().run_wide(&mut got, &a, &b);
+                assert_eq!(got, want, "isa={} k={k}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn saturated_inputs_stay_exact_on_the_wide_tile() {
+        let k = 1000usize;
+        let a = vec![127i8; k * MR_I8];
+        let b = vec![-127i8; k * NR_I8_WIDE];
+        for isa in available_isas() {
+            let mut acc = [[0i32; NR_I8_WIDE]; MR_I8];
+            isa.microkernel().run_wide(&mut acc, &a, &b);
+            for row in &acc {
+                for &v in row {
+                    assert_eq!(v, -(k as i32) * 127 * 127, "isa={}", isa.name());
+                }
             }
         }
     }

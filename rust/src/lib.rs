@@ -48,12 +48,19 @@
 //!   complex GEMM, SCF iterations — skip the split/pack stage, with
 //!   aliasing and in-place mutation handled by content fingerprints;
 //! * tiling is governed by [`kernels::KernelConfig`] (`mc`/`nc`/`kc`,
-//!   `run.kc`); the coordinator picks implementations through a
-//!   [`coordinator::KernelSelector`]
+//!   `run.mc`/`run.nc`/`run.kc`); the coordinator picks implementations
+//!   through a [`coordinator::KernelSelector`]
 //!   (`OZACCEL_HOST_KERNEL=naive|blocked|simd|auto`, plus
 //!   `OZACCEL_SIMD`/`run.simd` to pin a microkernel ISA) and surfaces
 //!   kernel choice, microkernel ISA, band counts, pack time, and cache
-//!   traffic in the PEAK per-site report.
+//!   traffic in the PEAK per-site report;
+//! * the blocking constants themselves are searchable: the **persistent
+//!   shape autotuner** ([`tune`], CLI `ozaccel tune`) benchmarks the
+//!   real kernel paths per (ISA × shape class × threads), caches the
+//!   winners on disk, and `run.tune = off|read|auto` (`OZACCEL_TUNE`)
+//!   lets dispatch consult them — a pure speed knob (the tuned knobs
+//!   are bit-invisible on the Ozaki path, and FP64-mode calls never
+//!   route through it), reported per site in the PEAK `tuned` column.
 //!
 //! ## Batch execution engine ([`engine`])
 //!
@@ -158,6 +165,7 @@ pub mod precision;
 pub mod resilience;
 pub mod runtime;
 pub mod testing;
+pub mod tune;
 pub mod util;
 
 pub use complex::c64;

@@ -27,8 +27,20 @@ SUBCOMMANDS
   datamove    E5: data-movement strategy comparison (§2.1)
   adaptive    E6: precision-governor ablation, fixed vs apriori vs
               feedback (alias: precision); writes BENCH_precision.json
+  tune        search the blocking/tile space per (ISA x shape class x
+              threads) and persist winners to the tuning cache
+              (~/.cache/ozaccel/tuning.toml or OZACCEL_TUNE_FILE);
+              dispatch consults them under run.tune / OZACCEL_TUNE
   modes       list supported compute modes
   help        this text
+
+TUNE FLAGS
+  --sizes 64,256,512        cubic GEMM shapes to tune (n,n,n each)
+  --threads 1,4             thread counts to tune for
+  --tune-splits <n>         Ozaki split count for the timed calls (default 6)
+  --file <tuning.toml>      cache file (default OZACCEL_TUNE_FILE or
+                            ~/.cache/ozaccel/tuning.toml)
+  --quick                   bounded-budget search (CI smoke)
 
 COMMON FLAGS
   --config <file.toml>      load a run configuration
@@ -229,8 +241,117 @@ fn run(cli: &Cli) -> Result<()> {
             println!("wrote {}", path.display());
             Ok(())
         }
+        "tune" => run_tune(cli),
         other => Err(ozaccel::Error::Config(format!(
             "unknown subcommand {other:?}; try `ozaccel help`"
         ))),
     }
+}
+
+/// `ozaccel tune`: run the autotuner's deterministic search, merge the
+/// winners into the on-disk cache, and verify the written file round-
+/// trips through a fresh dispatch-time lookup.
+fn run_tune(cli: &Cli) -> Result<()> {
+    use ozaccel::tune::{self, SearchSpec, TuningCache};
+
+    let mut spec = SearchSpec::default_for_machine();
+    if let Some(sizes) = cli.flag_u32_list("sizes")? {
+        if sizes.is_empty() || sizes.iter().any(|&n| n == 0) {
+            return Err(ozaccel::Error::Config("bad --sizes: need positive sizes".into()));
+        }
+        spec.shapes = sizes
+            .iter()
+            .map(|&n| (n as usize, n as usize, n as usize))
+            .collect();
+    }
+    if let Some(threads) = cli.flag_u32_list("threads")? {
+        if threads.is_empty() || threads.iter().any(|&t| t == 0) {
+            return Err(ozaccel::Error::Config("bad --threads: need positive counts".into()));
+        }
+        spec.threads = threads.iter().map(|&t| t as usize).collect();
+    }
+    if let Some(s) = cli.flag_parse::<u32>("tune-splits")? {
+        if !(3..=18).contains(&s) {
+            return Err(ozaccel::Error::Config(format!(
+                "bad --tune-splits {s}: expected 3..=18"
+            )));
+        }
+        spec.splits = s;
+    }
+    spec.quick = cli.flag_bool("quick");
+
+    let explicit = cli.flag("file").map(std::path::PathBuf::from);
+    let path = tune::resolve_path(explicit.as_deref()).ok_or_else(|| {
+        ozaccel::Error::Config(
+            "no tuning-cache path: pass --file, set OZACCEL_TUNE_FILE, or set HOME".into(),
+        )
+    })?;
+    println!(
+        "tuning {} shape(s) x {:?} thread count(s), splits={}, {} profile",
+        spec.shapes.len(),
+        spec.threads,
+        spec.splits,
+        if spec.quick { "quick" } else { "full" },
+    );
+
+    let out = tune::run_search(&spec)?;
+
+    let mut cache = TuningCache::load(&path).unwrap_or_else(TuningCache::empty);
+    out.merge_into(&mut cache);
+    cache.save(&path)?;
+    // Drop the in-process loaded copy so this very process (and the
+    // round-trip check below) re-reads what was just written.
+    tune::invalidate();
+
+    let mut t = ozaccel::bench::Table::new(&[
+        "isa", "class", "threads", "shape", "default_ms", "tuned_ms", "gain", "mc", "nc",
+        "kc", "pack_par", "nr",
+    ]);
+    for r in &out.rows {
+        t.row(&[
+            r.isa.to_string(),
+            r.class.label(),
+            r.threads.to_string(),
+            format!("{}x{}x{}", r.shape.0, r.shape.1, r.shape.2),
+            format!("{:.3}", r.default_s * 1e3),
+            format!("{:.3}", r.tuned_s * 1e3),
+            format!("{:.2}x", r.gain()),
+            r.entry.mc.to_string(),
+            r.entry.nc.to_string(),
+            r.entry.kc.to_string(),
+            r.entry.pack_parallel.to_string(),
+            r.entry.nr.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    for (bs, s) in &out.batch {
+        println!("batch bucket {bs:>3}: {s:.3e} s/call");
+    }
+    println!("batch max_pending winner: {}", out.batch_max_pending);
+
+    // Round-trip check: every winner just persisted must be served back
+    // by a fresh load of the file it was written to.
+    let reloaded = TuningCache::load(&path).ok_or_else(|| {
+        ozaccel::Error::Config(format!(
+            "tuning cache {} failed to load back after save",
+            path.display()
+        ))
+    })?;
+    for r in &out.rows {
+        if reloaded.get(r.isa, r.class, r.threads) != Some(r.entry) {
+            return Err(ozaccel::Error::Config(format!(
+                "tuning cache round-trip lost entry {}.{}.t{}",
+                r.isa,
+                r.class.label(),
+                r.threads
+            )));
+        }
+    }
+    println!(
+        "wrote {} ({} entr{}; round-trip verified)",
+        path.display(),
+        cache.len(),
+        if cache.len() == 1 { "y" } else { "ies" }
+    );
+    Ok(())
 }

@@ -101,6 +101,7 @@ fn prepare_cached(
     side: panel_cache::Side,
     operand: &Mat<f64>,
     splits: u32,
+    tile: usize,
     cfg: &KernelConfig,
     pack: impl FnOnce() -> (Panels<i8>, Vec<i32>),
 ) -> (Arc<Panels<i8>>, Arc<Vec<i32>>) {
@@ -116,7 +117,7 @@ fn prepare_cached(
     {
         let mut cache = panel_cache::global().lock().unwrap();
         cache.ensure_capacity(cfg.panel_cache_mb << 20);
-        if let Some(hit) = cache.lookup(side, rows, cols, splits, fp) {
+        if let Some(hit) = cache.lookup(side, rows, cols, splits, tile, fp) {
             // Failpoint: model a detected cache corruption.  The fingerprint
             // check caught a bad entry, so the hit is discarded and the
             // operand repacked from source — results stay bit-identical,
@@ -132,7 +133,7 @@ fn prepare_cached(
     panel_cache::global()
         .lock()
         .unwrap()
-        .insert(side, rows, cols, splits, fp, p, e, dt)
+        .insert(side, rows, cols, splits, tile, fp, p, e, dt)
 }
 
 /// Scale + slice + pack the A operand (row scaling, `MR` panels),
@@ -146,7 +147,7 @@ pub(crate) fn prepare_a(
     cfg: &KernelConfig,
 ) -> (Arc<Panels<i8>>, Arc<Vec<i32>>) {
     let threads = cfg.pack_threads();
-    prepare_cached(panel_cache::Side::A, a, splits, cfg, || {
+    prepare_cached(panel_cache::Side::A, a, splits, MR_I8, cfg, || {
         let ea = row_scale_exponents(a);
         let pa = split_scaled_into_panels_mt(a, &ea, splits, MR_I8, threads);
         (pa, ea)
@@ -154,18 +155,21 @@ pub(crate) fn prepare_a(
 }
 
 /// Scale + slice + pack the B operand (per-column scaling via its
-/// transpose, `NR` panels), cached like [`prepare_a`].  The cache key
-/// is the *untransposed* contents, so a hit also skips the transpose.
+/// transpose, `NR` panels — [`KernelConfig::nr`], so a tuned config may
+/// pack the 16-wide tile), cached like [`prepare_a`].  The cache key
+/// is the *untransposed* contents plus the tile width, so a hit also
+/// skips the transpose and never aliases across tile variants.
 pub(crate) fn prepare_b(
     b: &Mat<f64>,
     splits: u32,
     cfg: &KernelConfig,
 ) -> (Arc<Panels<i8>>, Arc<Vec<i32>>) {
     let threads = cfg.pack_threads();
-    prepare_cached(panel_cache::Side::B, b, splits, cfg, || {
+    let nr = if cfg.nr == 0 { NR_I8 } else { cfg.nr };
+    prepare_cached(panel_cache::Side::B, b, splits, nr, cfg, || {
         let bt = b.transposed();
         let eb = row_scale_exponents(&bt);
-        let pb = split_scaled_into_panels_mt(&bt, &eb, splits, NR_I8, threads);
+        let pb = split_scaled_into_panels_mt(&bt, &eb, splits, nr, threads);
         (pb, eb)
     })
 }

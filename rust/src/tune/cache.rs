@@ -1,0 +1,330 @@
+//! The versioned on-disk tuning cache.
+//!
+//! Format: the crate's TOML subset ([`crate::config::parse_toml`]).
+//! A `[meta]` table carries the writing crate's version and the
+//! machine's ISA fingerprint; one `[entry.<isa>.<class>.t<threads>]`
+//! table per tuned winner; an optional `[batch]` table carries the
+//! measured engine flush bound.  Hygiene mirrors
+//! [`crate::kernels::panel_cache`]: a version mismatch invalidates the
+//! whole file (blocking constants are only meaningful against the
+//! kernels that were measured), a corrupt entry is skipped — both
+//! loudly via `log::warn!`, never silently.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::parse_toml;
+use crate::error::{Error, Result};
+use crate::kernels::NR_I8;
+
+use super::{ShapeClass, TunedEntry};
+
+/// The loaded (or under-construction) tuning cache.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuningCache {
+    /// Writing crate version (`CARGO_PKG_VERSION`); entries from a
+    /// different version are stale by definition.
+    pub version: String,
+    /// ISA fingerprint of the measuring machine (the `+`-joined
+    /// available-ISA list) — informational: entries are keyed per ISA,
+    /// so a foreign fingerprint only warns.
+    pub isa_fingerprint: String,
+    /// Measured engine flush bound (`[batch] max_pending`), if the
+    /// search probed it.  Advisory: reported and persisted, applied by
+    /// whoever configures the engine.
+    pub batch_max_pending: Option<usize>,
+    entries: BTreeMap<String, TunedEntry>,
+}
+
+/// The `+`-joined runtime-available ISA list — the fingerprint
+/// recorded by [`TuningCache::save`].
+pub fn isa_fingerprint() -> String {
+    crate::kernels::available_isas()
+        .iter()
+        .map(|i| i.name())
+        .collect::<Vec<_>>()
+        .join("+")
+}
+
+fn entry_key(isa: &str, class: ShapeClass, threads: usize) -> String {
+    format!("{isa}.{}.t{threads}", class.label())
+}
+
+impl TuningCache {
+    /// Empty cache stamped with this build's version + fingerprint.
+    pub fn empty() -> Self {
+        TuningCache {
+            version: env!("CARGO_PKG_VERSION").to_string(),
+            isa_fingerprint: isa_fingerprint(),
+            batch_max_pending: None,
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// Whether the cache holds no tuned entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Number of tuned entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Iterate `(key, entry)` in deterministic (sorted-key) order.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &TunedEntry)> {
+        self.entries.iter().map(|(k, e)| (k.as_str(), e))
+    }
+
+    /// The tuned winner for (ISA × shape class × threads), if any.
+    pub fn get(&self, isa: &str, class: ShapeClass, threads: usize) -> Option<TunedEntry> {
+        self.entries.get(&entry_key(isa, class, threads)).copied()
+    }
+
+    /// Record (or replace) the winner for (ISA × shape class ×
+    /// threads).
+    pub fn put(&mut self, isa: &str, class: ShapeClass, threads: usize, entry: TunedEntry) {
+        self.entries.insert(entry_key(isa, class, threads), entry);
+    }
+
+    /// Parse from TOML text.  A version mismatch yields a loud
+    /// [`Error::Config`] — the caller decides whether that means
+    /// "ignore the file" ([`TuningCache::load`]) or "report it"
+    /// (`ozaccel tune`).  Corrupt entries are skipped with a warning;
+    /// only a structurally unparsable file is an error.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let table = parse_toml(text)?;
+        let version = table
+            .get("meta.version")
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or_default()
+            .to_string();
+        let ours = env!("CARGO_PKG_VERSION");
+        if version != ours {
+            return Err(Error::Config(format!(
+                "tuning cache version {version:?} != crate {ours:?} — stale; \
+                 re-run `ozaccel tune`"
+            )));
+        }
+        let isa_fingerprint = table
+            .get("meta.isa_fingerprint")
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or_default()
+            .to_string();
+        if isa_fingerprint != self::isa_fingerprint() {
+            log::warn!(
+                "tuning cache was measured on ISA set {:?}, this machine has {:?}; \
+                 entries for shared ISAs still apply",
+                isa_fingerprint,
+                self::isa_fingerprint()
+            );
+        }
+        let batch_max_pending = match table.get("batch.max_pending") {
+            Some(v) => {
+                let f = v.as_f64()?;
+                if f.fract() != 0.0 || f < 1.0 {
+                    log::warn!("tuning cache: ignoring bad batch.max_pending = {f}");
+                    None
+                } else {
+                    Some(f as usize)
+                }
+            }
+            None => None,
+        };
+        // Group flattened `entry.<isa>.<class>.t<threads>.<field>` keys
+        // by their entry prefix.
+        let mut fields: BTreeMap<String, BTreeMap<&str, &crate::config::TomlValue>> =
+            BTreeMap::new();
+        for (key, value) in &table {
+            let Some(rest) = key.strip_prefix("entry.") else {
+                continue;
+            };
+            let Some((prefix, field)) = rest.rsplit_once('.') else {
+                log::warn!("tuning cache: ignoring malformed key {key:?}");
+                continue;
+            };
+            fields.entry(prefix.to_string()).or_default().insert(field, value);
+        }
+        let mut entries = BTreeMap::new();
+        for (prefix, f) in fields {
+            match parse_entry(&prefix, &f) {
+                Some(e) if e.valid() => {
+                    entries.insert(prefix, e);
+                }
+                _ => log::warn!("tuning cache: skipping corrupt entry {prefix:?}"),
+            }
+        }
+        Ok(TuningCache {
+            version,
+            isa_fingerprint,
+            batch_max_pending,
+            entries,
+        })
+    }
+
+    /// Load from disk, ignoring (loudly) a missing, unreadable, stale,
+    /// or corrupt file — a bad tuning cache must degrade to the
+    /// defaults, never break dispatch.
+    pub fn load(path: &Path) -> Option<Self> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
+            Err(e) => {
+                log::warn!("tuning cache {path:?} unreadable ({e}); using defaults");
+                return None;
+            }
+        };
+        match Self::from_toml(&text) {
+            Ok(c) => Some(c),
+            Err(e) => {
+                log::warn!("tuning cache {path:?} ignored: {e}");
+                None
+            }
+        }
+    }
+
+    /// Render as TOML (stable order: meta, batch, entries sorted by
+    /// key).
+    pub fn to_toml(&self) -> String {
+        let mut out = String::from("# ozaccel tuning cache — written by `ozaccel tune`\n");
+        out.push_str("[meta]\n");
+        out.push_str(&format!("version = \"{}\"\n", self.version));
+        out.push_str(&format!("isa_fingerprint = \"{}\"\n", self.isa_fingerprint));
+        if let Some(b) = self.batch_max_pending {
+            out.push_str("\n[batch]\n");
+            out.push_str(&format!("max_pending = {b}\n"));
+        }
+        for (key, e) in &self.entries {
+            out.push_str(&format!("\n[entry.{key}]\n"));
+            out.push_str(&format!("mc = {}\n", e.mc));
+            out.push_str(&format!("nc = {}\n", e.nc));
+            out.push_str(&format!("kc = {}\n", e.kc));
+            out.push_str(&format!("pack_parallel = {}\n", e.pack_parallel));
+            out.push_str(&format!("nr = {}\n", e.nr));
+            out.push_str(&format!("gain = {:.4}\n", e.gain));
+        }
+        out
+    }
+
+    /// Write to `path` (stamping this build's version + fingerprint),
+    /// creating parent directories as needed.
+    pub fn save(&mut self, path: &Path) -> Result<()> {
+        self.version = env!("CARGO_PKG_VERSION").to_string();
+        self.isa_fingerprint = isa_fingerprint();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_toml())?;
+        Ok(())
+    }
+}
+
+fn parse_entry(
+    prefix: &str,
+    fields: &BTreeMap<&str, &crate::config::TomlValue>,
+) -> Option<TunedEntry> {
+    // prefix is `<isa>.<class>.t<threads>`; validate its shape so a
+    // mangled header is skipped, not silently unreachable.
+    let mut parts = prefix.split('.');
+    let _isa = parts.next()?;
+    ShapeClass::parse(parts.next()?)?;
+    let threads: usize = parts.next()?.strip_prefix('t')?.parse().ok()?;
+    if parts.next().is_some() || threads == 0 {
+        return None;
+    }
+    let int = |name: &str| -> Option<usize> {
+        let f = fields.get(name)?.as_f64().ok()?;
+        (f.fract() == 0.0 && f >= 0.0).then_some(f as usize)
+    };
+    Some(TunedEntry {
+        mc: int("mc")?,
+        nc: int("nc")?,
+        kc: int("kc")?,
+        pack_parallel: fields.get("pack_parallel")?.as_bool().ok()?,
+        nr: int("nr").unwrap_or(NR_I8),
+        gain: fields.get("gain").and_then(|v| v.as_f64().ok()).unwrap_or(1.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::NR_I8_WIDE;
+
+    fn entry() -> TunedEntry {
+        TunedEntry {
+            mc: 64,
+            nc: 512,
+            kc: 128,
+            pack_parallel: false,
+            nr: NR_I8_WIDE,
+            gain: 1.25,
+        }
+    }
+
+    #[test]
+    fn round_trips_through_toml() {
+        let mut c = TuningCache::empty();
+        let class = ShapeClass::of(64, 100, 256);
+        c.put("avx2", class, 4, entry());
+        c.batch_max_pending = Some(16);
+        let text = c.to_toml();
+        let back = TuningCache::from_toml(&text).unwrap();
+        assert_eq!(back.get("avx2", class, 4), Some(entry()));
+        assert_eq!(back.batch_max_pending, Some(16));
+        assert_eq!(back.len(), 1);
+        // different ISA / threads / class miss
+        assert!(back.get("scalar", class, 4).is_none());
+        assert!(back.get("avx2", class, 2).is_none());
+        assert!(back.get("avx2", ShapeClass::of(8, 8, 8), 4).is_none());
+    }
+
+    #[test]
+    fn stale_version_is_rejected_loudly() {
+        let text = "[meta]\nversion = \"0.0.0-old\"\n";
+        assert!(matches!(TuningCache::from_toml(text), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn corrupt_entries_are_skipped_not_fatal() {
+        let good = {
+            let mut c = TuningCache::empty();
+            c.put("scalar", ShapeClass::of(32, 32, 32), 2, entry());
+            c.to_toml()
+        };
+        // append a corrupt sibling: missing mc, bogus threads key
+        let text = format!(
+            "{good}\n[entry.scalar.m5n5k5.t0]\nnc = 8\nkc = 8\npack_parallel = true\n\
+             \n[entry.scalar.broken.t2]\nmc = 8\nnc = 8\nkc = 8\npack_parallel = true\n"
+        );
+        let c = TuningCache::from_toml(&text).unwrap();
+        assert_eq!(c.len(), 1, "only the well-formed entry survives");
+        assert!(c.get("scalar", ShapeClass::of(32, 32, 32), 2).is_some());
+    }
+
+    #[test]
+    fn save_and_load_round_trip_on_disk() {
+        let dir = std::env::temp_dir().join(format!(
+            "ozaccel-tune-test-{}",
+            std::process::id()
+        ));
+        let path = dir.join("nested/tuning.toml");
+        let mut c = TuningCache::empty();
+        let class = ShapeClass::of(128, 128, 128);
+        c.put("scalar", class, 1, entry());
+        c.save(&path).unwrap();
+        let back = TuningCache::load(&path).expect("fresh file must load");
+        assert_eq!(back.get("scalar", class, 1), Some(entry()));
+        assert_eq!(back.version, env!("CARGO_PKG_VERSION"));
+        assert_eq!(back.isa_fingerprint, isa_fingerprint());
+        // a stale file loads as None (ignored), not an error
+        std::fs::write(&path, "[meta]\nversion = \"0.0.0-old\"\n").unwrap();
+        assert!(TuningCache::load(&path).is_none());
+        // unparsable garbage likewise
+        std::fs::write(&path, "not toml [[[").unwrap();
+        assert!(TuningCache::load(&path).is_none());
+        // a missing file is a quiet miss
+        assert!(TuningCache::load(&dir.join("absent.toml")).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

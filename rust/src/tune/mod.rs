@@ -1,0 +1,348 @@
+//! Persistent shape autotuner: search the blocking/tile space per
+//! (ISA × shape class × thread count), cache winners on disk, and let
+//! [`crate::coordinator::KernelSelector`] consult them at dispatch.
+//!
+//! Every blocking constant in [`crate::kernels`] (the `mc`/`nc`/`kc`
+//! cache blocks, the 8- vs 16-wide B register tile, pack-parallel
+//! gating, batch flush bounds) is a pure *speed* knob: exact integer
+//! accumulation makes all of them bit-invisible on the Ozaki/INT8
+//! paths, so tuning can change throughput but never results — the
+//! cross-ISA equivalence suites pin that contract.  This module adds
+//! the machinery to pick those constants per machine instead of
+//! hand-choosing them once:
+//!
+//! * [`ShapeClass`] — power-of-two bucketing over (m, n, k), the same
+//!   idea as the batch engine's shape keys, so one measured winner
+//!   covers the whole bucket;
+//! * [`TunedEntry`] / [`cache::TuningCache`] — the versioned on-disk
+//!   cache (`~/.cache/ozaccel/tuning.toml` or `OZACCEL_TUNE_FILE`),
+//!   entries keyed `entry.<isa>.<class>.t<threads>`, stale or corrupt
+//!   content ignored loudly (same hygiene as
+//!   [`crate::kernels::panel_cache`]);
+//! * [`search`] — the deterministic coordinate-descent driver behind
+//!   `ozaccel tune`, median-of-repeats timing over the real kernel
+//!   paths;
+//! * [`lookup`] — the dispatch-time consultation: `run.tune = off`
+//!   (default) never consults, `read` consults the on-disk cache only,
+//!   `auto` falls back to the pretuned defaults embedded for the CI
+//!   machine class ([`pretuned`]).
+//!
+//! The PEAK report's `tuned` column records which source actually
+//! served each call site (`default` | `pretuned` | `cache`).
+
+pub mod cache;
+pub mod search;
+
+pub use cache::TuningCache;
+pub use search::{run_search, SearchOutcome, SearchRow, SearchSpec};
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::kernels::{KernelConfig, NR_I8, NR_I8_WIDE};
+
+/// Whether dispatch may override blocking constants from the tuning
+/// cache (`run.tune` / `OZACCEL_TUNE`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TuneMode {
+    /// Never consult the tuner — the hand-chosen crate defaults run
+    /// unchanged (the seed behaviour, and the default).
+    #[default]
+    Off,
+    /// Consult the on-disk tuning cache only; misses fall back to the
+    /// crate defaults.
+    Read,
+    /// Consult the on-disk cache, then the embedded pretuned defaults
+    /// for the CI machine class, then the crate defaults.
+    Auto,
+}
+
+impl TuneMode {
+    /// Parse config/env names (`off` | `read` | `auto`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(TuneMode::Off),
+            "read" | "cache" => Some(TuneMode::Read),
+            "auto" | "on" => Some(TuneMode::Auto),
+            _ => None,
+        }
+    }
+
+    /// Stable lower-case label.
+    pub fn name(self) -> &'static str {
+        match self {
+            TuneMode::Off => "off",
+            TuneMode::Read => "read",
+            TuneMode::Auto => "auto",
+        }
+    }
+}
+
+/// Power-of-two shape-class bucket over a GEMM's (m, n, k): each extent
+/// maps to `floor(log2(x))` (0 for `x <= 1`), so e.g. every shape with
+/// `64 <= m < 128` shares `mb = 6`.  One tuned winner covers the whole
+/// bucket — the same coalescing granularity the batch engine uses for
+/// its shape keys, coarse enough that a bounded search generalizes and
+/// fine enough that small and large GEMMs never share constants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ShapeClass {
+    /// `floor(log2(m))` bucket of the output row extent.
+    pub mb: u32,
+    /// `floor(log2(n))` bucket of the output column extent.
+    pub nb: u32,
+    /// `floor(log2(k))` bucket of the contraction extent.
+    pub kb: u32,
+}
+
+impl ShapeClass {
+    /// Bucket a call shape (`m x k` times `k x n`).
+    pub fn of(m: usize, k: usize, n: usize) -> Self {
+        let b = |x: usize| if x <= 1 { 0 } else { usize::BITS - 1 - x.leading_zeros() };
+        ShapeClass {
+            mb: b(m),
+            nb: b(n),
+            kb: b(k),
+        }
+    }
+
+    /// Stable label used in cache keys and reports: `m{mb}n{nb}k{kb}`.
+    pub fn label(&self) -> String {
+        format!("m{}n{}k{}", self.mb, self.nb, self.kb)
+    }
+
+    /// Parse a [`ShapeClass::label`] back (`None` if malformed).
+    pub fn parse(s: &str) -> Option<Self> {
+        let rest = s.strip_prefix('m')?;
+        let (mb, rest) = rest.split_once('n')?;
+        let (nb, kb) = rest.split_once('k')?;
+        Some(ShapeClass {
+            mb: mb.parse().ok()?,
+            nb: nb.parse().ok()?,
+            kb: kb.parse().ok()?,
+        })
+    }
+}
+
+/// One tuned winner: the blocking constants the search found fastest
+/// for its (ISA × shape class × threads) key.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TunedEntry {
+    /// Row cache-block extent.
+    pub mc: usize,
+    /// Column cache-block extent.
+    pub nc: usize,
+    /// Contraction cache-block extent.
+    pub kc: usize,
+    /// Whether the split/pack stage runs pool-parallel.
+    pub pack_parallel: bool,
+    /// B-side register-tile width ([`NR_I8`] or [`NR_I8_WIDE`]).
+    pub nr: usize,
+    /// Measured speedup over the crate defaults
+    /// (`default_time / tuned_time`; informational).
+    pub gain: f64,
+}
+
+impl TunedEntry {
+    /// Apply this entry's constants onto a base config (threads, SIMD
+    /// routing, cache budget, and the tune mode itself stay the
+    /// caller's).  The result is clamped to the register-tile
+    /// invariant, so a hand-edited cache file cannot push a
+    /// non-tile-multiple into the kernels.
+    pub fn apply(&self, base: &KernelConfig) -> KernelConfig {
+        KernelConfig {
+            mc: self.mc,
+            nc: self.nc,
+            kc: self.kc,
+            pack_parallel: self.pack_parallel,
+            nr: self.nr,
+            ..base.clone()
+        }
+        .clamped()
+    }
+
+    /// Whether the entry's values are usable (positive blocks, a known
+    /// tile width) — corrupt entries are skipped loudly at load time.
+    pub fn valid(&self) -> bool {
+        self.mc >= 1
+            && self.nc >= 1
+            && self.kc >= 1
+            && (self.nr == NR_I8 || self.nr == NR_I8_WIDE)
+    }
+}
+
+/// Pretuned defaults for the CI machine class, shipped with the crate
+/// (the autotvm "pretuned index" idiom): parsed once from the embedded
+/// [`PRETUNED_TOML`].  An unparsable embedded file is a build defect
+/// and reported loudly, yielding an empty cache.
+pub fn pretuned() -> &'static TuningCache {
+    static PRETUNED: once_cell::sync::Lazy<TuningCache> = once_cell::sync::Lazy::new(|| {
+        TuningCache::from_toml(PRETUNED_TOML).unwrap_or_else(|e| {
+            log::warn!("embedded pretuned table failed to parse: {e}");
+            TuningCache::empty()
+        })
+    });
+    &PRETUNED
+}
+
+/// The embedded pretuned table (see [`pretuned`]).
+pub const PRETUNED_TOML: &str = include_str!("pretuned.toml");
+
+/// Resolve the tuning-cache path: an explicit override (config
+/// `tune.file`), else `OZACCEL_TUNE_FILE`, else
+/// `$HOME/.cache/ozaccel/tuning.toml`; `None` when no home directory
+/// is known either.
+pub fn resolve_path(explicit: Option<&Path>) -> Option<PathBuf> {
+    if let Some(p) = explicit {
+        return Some(p.to_path_buf());
+    }
+    if let Some(p) = crate::util::env::parse_env_checked::<PathBuf>(
+        "OZACCEL_TUNE_FILE",
+        "a file path",
+        |p| !p.as_os_str().is_empty(),
+    ) {
+        return Some(p);
+    }
+    std::env::var_os("HOME")
+        .filter(|h| !h.is_empty())
+        .map(|h| PathBuf::from(h).join(".cache/ozaccel/tuning.toml"))
+}
+
+struct Store {
+    path: Option<PathBuf>,
+    cache: Option<TuningCache>,
+    loaded: bool,
+}
+
+/// Process-wide lazily loaded on-disk cache, keyed by resolved path so
+/// tests (and config changes) pointing at a different file trigger a
+/// reload.
+fn store() -> &'static Mutex<Store> {
+    static STORE: once_cell::sync::Lazy<Mutex<Store>> = once_cell::sync::Lazy::new(|| {
+        Mutex::new(Store {
+            path: None,
+            cache: None,
+            loaded: false,
+        })
+    });
+    &STORE
+}
+
+/// Drop the loaded on-disk cache so the next [`lookup`] re-reads it —
+/// call after `ozaccel tune` persists new winners in-process (tests
+/// rely on this for write → reload → dispatch round-trips).
+pub fn invalidate() {
+    let mut s = store().lock().unwrap();
+    s.path = None;
+    s.cache = None;
+    s.loaded = false;
+}
+
+/// Dispatch-time consultation: the tuned entry (and its source label,
+/// `"cache"` or `"pretuned"`) for an Ozaki call of shape `m x k x n`
+/// under `cfg`, or `None` when tuning is off, the file is
+/// absent/stale, or no entry matches (ISA × shape class × threads).
+pub fn lookup(
+    cfg: &KernelConfig,
+    isa: &str,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Option<(TunedEntry, &'static str)> {
+    if cfg.tune == TuneMode::Off || m == 0 || k == 0 || n == 0 {
+        return None;
+    }
+    let class = ShapeClass::of(m, k, n);
+    let threads = cfg.threads.max(1);
+    {
+        let mut s = store().lock().unwrap();
+        let path = resolve_path(cfg.tune_file.as_deref());
+        if !s.loaded || s.path != path {
+            s.cache = path.as_deref().and_then(TuningCache::load);
+            s.path = path;
+            s.loaded = true;
+        }
+        if let Some(c) = &s.cache {
+            if let Some(e) = c.get(isa, class, threads) {
+                return Some((e, "cache"));
+            }
+        }
+    }
+    if cfg.tune == TuneMode::Auto {
+        if let Some(e) = pretuned().get(isa, class, threads) {
+            return Some((e, "pretuned"));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tune_mode_parses_and_defaults_off() {
+        assert_eq!(TuneMode::parse("off"), Some(TuneMode::Off));
+        assert_eq!(TuneMode::parse("READ"), Some(TuneMode::Read));
+        assert_eq!(TuneMode::parse(" auto "), Some(TuneMode::Auto));
+        assert_eq!(TuneMode::parse("on"), Some(TuneMode::Auto));
+        assert_eq!(TuneMode::parse("fast"), None);
+        assert_eq!(TuneMode::default(), TuneMode::Off);
+        assert_eq!(TuneMode::Read.name(), "read");
+    }
+
+    #[test]
+    fn shape_class_buckets_powers_of_two() {
+        assert_eq!(ShapeClass::of(1, 1, 1), ShapeClass { mb: 0, nb: 0, kb: 0 });
+        let c = ShapeClass::of(64, 256, 100);
+        assert_eq!((c.mb, c.kb, c.nb), (6, 8, 6));
+        // the whole [64, 128) band shares one bucket
+        assert_eq!(ShapeClass::of(64, 64, 64), ShapeClass::of(127, 127, 127));
+        assert_ne!(ShapeClass::of(64, 64, 64), ShapeClass::of(128, 64, 64));
+        assert_eq!(c.label(), "m6n6k8");
+        assert_eq!(ShapeClass::parse("m6n6k8"), Some(c));
+        assert_eq!(ShapeClass::parse("m6k8"), None);
+        assert_eq!(ShapeClass::parse("6n6k8"), None);
+    }
+
+    #[test]
+    fn tuned_entry_applies_clamped() {
+        let e = TunedEntry {
+            mc: 66,
+            nc: 250,
+            kc: 0,
+            pack_parallel: false,
+            nr: NR_I8_WIDE,
+            gain: 1.0,
+        };
+        let base = KernelConfig::with_threads(3);
+        let cfg = e.apply(&base);
+        assert_eq!((cfg.mc, cfg.nc, cfg.kc), (64, 240, 1));
+        assert_eq!(cfg.nr, NR_I8_WIDE);
+        assert!(!cfg.pack_parallel);
+        assert_eq!(cfg.threads, 3, "threads stay the caller's");
+        assert!(!TunedEntry { nr: 5, ..e }.valid());
+        assert!(!TunedEntry { mc: 0, ..e }.valid());
+    }
+
+    #[test]
+    fn pretuned_table_parses_and_has_entries() {
+        let p = pretuned();
+        assert!(!p.is_empty(), "embedded pretuned table must not be empty");
+        assert_eq!(p.version, env!("CARGO_PKG_VERSION"));
+        for (_, e) in p.entries() {
+            assert!(e.valid());
+        }
+    }
+
+    #[test]
+    fn lookup_respects_mode_and_degenerate_shapes() {
+        let off = KernelConfig::default();
+        assert_eq!(off.tune, TuneMode::Off);
+        assert!(lookup(&off, "scalar", 64, 64, 64).is_none());
+        let auto = KernelConfig {
+            tune: TuneMode::Auto,
+            ..KernelConfig::default()
+        };
+        assert!(lookup(&auto, "scalar", 0, 64, 64).is_none());
+    }
+}

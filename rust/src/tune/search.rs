@@ -1,0 +1,319 @@
+//! The deterministic search driver behind `ozaccel tune`.
+//!
+//! Coordinate descent from the crate defaults over the blocking axes
+//! (`mc`, `nc`, `kc`, `pack_parallel`, and the 8- vs 16-wide B register
+//! tile), one (shape × thread count) key at a time, timing the **real**
+//! kernel path ([`crate::ozaki::ozaki_dgemm_with`], panel cache off so
+//! every iteration pays the full split/pack + sweep cost) with the
+//! median-of-repeats harness of [`crate::bench::Bench`].  A separate
+//! probe times the fused multi-C batch path
+//! ([`crate::kernels::fused_ozaki_sweep_many`]) across bucket sizes to
+//! pick the engine's `[batch] max_pending` flush bound.
+//!
+//! Determinism: operands come from the crate's seeded
+//! [`crate::testing::Rng`], the candidate grid and visit order are
+//! fixed, and ties keep the incumbent — so two runs on the same idle
+//! machine walk the same path.  Timing noise can still flip a
+//! near-tie winner; that is safe by construction, because every
+//! candidate is bit-identical.
+
+use crate::bench::Bench;
+use crate::error::Result;
+use crate::kernels::{
+    fused_ozaki_sweep_many, KernelConfig, SimdSelect, SweepSpec, NR_I8, NR_I8_WIDE,
+};
+use crate::linalg::Mat;
+use crate::ozaki::{self, ozaki_dgemm_with};
+use crate::testing::Rng;
+
+use super::cache::TuningCache;
+use super::{ShapeClass, TunedEntry, TuneMode};
+
+/// What to search: shapes, split count, thread counts, and how long to
+/// spend per timing.
+#[derive(Clone, Debug)]
+pub struct SearchSpec {
+    /// GEMM shapes `(m, k, n)` to tune (each lands in its
+    /// [`ShapeClass`] bucket; duplicate buckets are re-tuned, last
+    /// winner kept).
+    pub shapes: Vec<(usize, usize, usize)>,
+    /// Ozaki split count used for the timed calls (a speed knob only;
+    /// the constants generalize across splits).
+    pub splits: u32,
+    /// Thread counts to tune for (each is a separate cache key).
+    pub threads: Vec<usize>,
+    /// Bounded-budget profile: fewer/shorter repeats (CI smoke).
+    pub quick: bool,
+}
+
+impl SearchSpec {
+    /// The default search: the bench-suite shape ladder at the
+    /// machine's default thread count.
+    pub fn default_for_machine() -> Self {
+        SearchSpec {
+            shapes: vec![(64, 64, 64), (256, 256, 256), (512, 512, 512)],
+            splits: 6,
+            threads: vec![crate::kernels::default_threads()],
+            quick: false,
+        }
+    }
+
+    fn bench(&self) -> Bench {
+        if self.quick {
+            Bench {
+                warmup_s: 0.02,
+                measure_s: 0.09,
+                samples: 3,
+            }
+        } else {
+            Bench {
+                warmup_s: 0.1,
+                measure_s: 0.5,
+                samples: 7,
+            }
+        }
+    }
+}
+
+/// One tuned (shape × threads) key's outcome.
+#[derive(Clone, Debug)]
+pub struct SearchRow {
+    /// ISA the measurements ran under.
+    pub isa: &'static str,
+    /// Shape class the winner is keyed by.
+    pub class: ShapeClass,
+    /// Thread count the winner is keyed by.
+    pub threads: usize,
+    /// The concrete shape that was timed.
+    pub shape: (usize, usize, usize),
+    /// Median seconds per call under the crate defaults.
+    pub default_s: f64,
+    /// Median seconds per call under the winner.
+    pub tuned_s: f64,
+    /// The winning constants.
+    pub entry: TunedEntry,
+}
+
+impl SearchRow {
+    /// `default_time / tuned_time` (>= 1 by construction: the defaults
+    /// are always a candidate and ties keep the incumbent).
+    pub fn gain(&self) -> f64 {
+        self.default_s / self.tuned_s
+    }
+}
+
+/// Everything one `ozaccel tune` run measured.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    /// One row per (shape × threads) key, in visit order.
+    pub rows: Vec<SearchRow>,
+    /// Winning engine flush bound from the batch probe, with the
+    /// per-call median seconds at each probed bucket size.
+    pub batch: Vec<(usize, f64)>,
+    /// The probed bucket size with the lowest per-call time.
+    pub batch_max_pending: usize,
+}
+
+impl SearchOutcome {
+    /// Fold the winners into `cache` (merge: existing entries for
+    /// other keys survive).
+    pub fn merge_into(&self, cache: &mut TuningCache) {
+        for row in &self.rows {
+            cache.put(row.isa, row.class, row.threads, row.entry);
+        }
+        cache.batch_max_pending = Some(self.batch_max_pending);
+    }
+}
+
+/// The candidate grid per axis.  Values are visited in order; the
+/// incumbent (the crate default on the first axis pass) only loses to
+/// a strictly faster candidate.
+const MC_GRID: &[usize] = &[64, 128, 256];
+const NC_GRID: &[usize] = &[128, 256, 512];
+const KC_GRID: &[usize] = &[128, 256, 512];
+const BATCH_GRID: &[usize] = &[4, 8, 16, 32];
+
+fn candidate(base: &KernelConfig, e: &TunedEntry) -> KernelConfig {
+    KernelConfig {
+        mc: e.mc,
+        nc: e.nc,
+        kc: e.kc,
+        pack_parallel: e.pack_parallel,
+        nr: e.nr,
+        // panel cache off: every timed iteration pays the full
+        // split/pack cost, so pack_parallel and the tile width are
+        // actually measured rather than amortized away.
+        panel_cache_mb: 0,
+        tune: TuneMode::Off,
+        tune_file: None,
+        ..base.clone()
+    }
+    .clamped()
+}
+
+/// Run the search over the real kernel paths.  Deterministic operand
+/// content; timing runs on the calling thread (plus the worker pool
+/// the kernels already use).
+pub fn run_search(spec: &SearchSpec) -> Result<SearchOutcome> {
+    let bench = spec.bench();
+    let isa = crate::kernels::simd::detect().name();
+    let mut rows = Vec::new();
+    for &(m, k, n) in &spec.shapes {
+        let mut rng = Rng::new(0x7u64 ^ ((m as u64) << 40 | (k as u64) << 20 | n as u64));
+        let a = Mat::from_fn(m, k, |_, _| rng.normal());
+        let b = Mat::from_fn(k, n, |_, _| rng.normal());
+        for &threads in &spec.threads {
+            let threads = threads.max(1);
+            let base = KernelConfig {
+                threads,
+                simd: SimdSelect::Auto,
+                ..KernelConfig::default()
+            };
+            let defaults = TunedEntry {
+                mc: base.mc,
+                nc: base.nc,
+                kc: base.kc,
+                pack_parallel: base.pack_parallel,
+                nr: NR_I8,
+                gain: 1.0,
+            };
+            let time = |e: &TunedEntry| -> Result<f64> {
+                let cfg = candidate(&base, e);
+                // fail fast on a broken candidate before timing it
+                ozaki_dgemm_with(&a, &b, spec.splits, &cfg)?;
+                Ok(bench.run(|| {
+                    ozaki_dgemm_with(&a, &b, spec.splits, &cfg).unwrap();
+                })
+                .median_s)
+            };
+            let default_s = time(&defaults)?;
+            let mut best = defaults;
+            let mut best_s = default_s;
+            // Coordinate descent, one deterministic pass per axis.
+            for axis in 0..5usize {
+                let incumbent = best;
+                let options: Vec<TunedEntry> = match axis {
+                    0 => MC_GRID.iter().map(|&mc| TunedEntry { mc, ..incumbent }).collect(),
+                    1 => NC_GRID.iter().map(|&nc| TunedEntry { nc, ..incumbent }).collect(),
+                    2 => KC_GRID.iter().map(|&kc| TunedEntry { kc, ..incumbent }).collect(),
+                    3 => [true, false]
+                        .iter()
+                        .map(|&pack_parallel| TunedEntry { pack_parallel, ..incumbent })
+                        .collect(),
+                    _ => [NR_I8, NR_I8_WIDE]
+                        .iter()
+                        .map(|&nr| TunedEntry { nr, ..incumbent })
+                        .collect(),
+                };
+                for e in options {
+                    if e == incumbent {
+                        continue; // already timed (best_s holds its time)
+                    }
+                    let s = time(&e)?;
+                    if s < best_s {
+                        best_s = s;
+                        best = e;
+                    }
+                }
+            }
+            best.gain = default_s / best_s;
+            rows.push(SearchRow {
+                isa,
+                class: ShapeClass::of(m, k, n),
+                threads,
+                shape: (m, k, n),
+                default_s,
+                tuned_s: best_s,
+                entry: best,
+            });
+        }
+    }
+    let (batch, batch_max_pending) = probe_batch(spec, &bench)?;
+    Ok(SearchOutcome {
+        rows,
+        batch,
+        batch_max_pending,
+    })
+}
+
+/// Time the fused multi-C batch path at each [`BATCH_GRID`] bucket
+/// size and return `(per-call medians, winning size)` — the engine's
+/// `[batch] max_pending` flush bound is exactly "how many coalesced
+/// members per fused dispatch".
+fn probe_batch(spec: &SearchSpec, bench: &Bench) -> Result<(Vec<(usize, f64)>, usize)> {
+    let (m, k, n) = (128usize, 128usize, 128usize);
+    let splits = spec.splits;
+    let threads = spec.threads.first().copied().unwrap_or(1).max(1);
+    let cfg = KernelConfig {
+        threads,
+        panel_cache_mb: 0,
+        ..KernelConfig::default()
+    };
+    let mut rng = Rng::new(0xBA7C4);
+    let max_members = *BATCH_GRID.iter().max().unwrap();
+    let weights = ozaki::diagonal_weights(splits);
+    let packed: Vec<_> = (0..max_members)
+        .map(|_| {
+            let a = Mat::from_fn(m, k, |_, _| rng.normal());
+            let b = Mat::from_fn(k, n, |_, _| rng.normal());
+            let (pa, _ea) = ozaki::prepare_a(&a, splits, &cfg);
+            let (pb, _eb) = ozaki::prepare_b(&b, splits, &cfg);
+            (pa, pb)
+        })
+        .collect();
+    let mut curve = Vec::new();
+    let mut best = (BATCH_GRID[0], f64::INFINITY);
+    for &bs in BATCH_GRID {
+        let jobs: Vec<SweepSpec<'_>> = packed[..bs]
+            .iter()
+            .map(|(pa, pb)| SweepSpec {
+                ap: &**pa,
+                bp: &**pb,
+                weights: &weights,
+            })
+            .collect();
+        let med = bench
+            .run(|| {
+                fused_ozaki_sweep_many(&jobs, &cfg).unwrap();
+            })
+            .median_s
+            / bs as f64;
+        curve.push((bs, med));
+        if med < best.1 {
+            best = (bs, med);
+        }
+    }
+    Ok((curve, best.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_search_finds_winners_and_merges() {
+        let spec = SearchSpec {
+            shapes: vec![(48, 32, 40)],
+            splits: 3,
+            threads: vec![1],
+            quick: true,
+        };
+        let out = run_search(&spec).unwrap();
+        assert_eq!(out.rows.len(), 1);
+        let row = &out.rows[0];
+        assert_eq!(row.class, ShapeClass::of(48, 32, 40));
+        assert_eq!(row.threads, 1);
+        assert!(row.entry.valid());
+        assert!(
+            row.tuned_s <= row.default_s,
+            "defaults are a candidate, so the winner can never be slower"
+        );
+        assert!(row.gain() >= 1.0);
+        assert!(BATCH_GRID.contains(&out.batch_max_pending));
+        assert_eq!(out.batch.len(), BATCH_GRID.len());
+        let mut cache = TuningCache::empty();
+        out.merge_into(&mut cache);
+        assert_eq!(cache.get(row.isa, row.class, 1), Some(row.entry));
+        assert_eq!(cache.batch_max_pending, Some(out.batch_max_pending));
+    }
+}

@@ -11,6 +11,7 @@
 use ozaccel::coordinator::{DispatchConfig, Dispatcher, HostKernel, KernelSelector};
 use ozaccel::kernels::{
     available_isas, dgemm_blocked, int8_gemm_blocked, KernelConfig, SimdSelect, MR_I8, NR_I8,
+    NR_I8_WIDE,
 };
 use ozaccel::linalg::{dgemm_naive, zgemm_naive, Mat, ZMat};
 use ozaccel::ozaki::{int8_gemm_i32, ozaki_dgemm, ozaki_dgemm_naive, ComputeMode};
@@ -362,8 +363,8 @@ fn panel_cache_reuse_tracks_aliasing_and_mutation() {
     let mut a = rand_f64(&mut rng, 9, 7);
 
     // repeat -> hit, same Arc
-    let (p1, _) = cache.get_or_pack(Side::A, 9, 7, 4, fingerprint(a.data()), || pack(&a));
-    let (p2, _) = cache.get_or_pack(Side::A, 9, 7, 4, fingerprint(a.data()), || {
+    let (p1, _) = cache.get_or_pack(Side::A, 9, 7, 4, MR_I8, fingerprint(a.data()), || pack(&a));
+    let (p2, _) = cache.get_or_pack(Side::A, 9, 7, 4, MR_I8, fingerprint(a.data()), || {
         panic!("repeat lookups must hit")
     });
     assert!(Arc::ptr_eq(&p1, &p2));
@@ -371,14 +372,14 @@ fn panel_cache_reuse_tracks_aliasing_and_mutation() {
 
     // aliased clone (different allocation, same bits) -> hit
     let alias = a.clone();
-    let (p3, _) = cache.get_or_pack(Side::A, 9, 7, 4, fingerprint(alias.data()), || {
+    let (p3, _) = cache.get_or_pack(Side::A, 9, 7, 4, MR_I8, fingerprint(alias.data()), || {
         panic!("aliased content must hit")
     });
     assert!(Arc::ptr_eq(&p1, &p3));
 
     // in-place mutation -> miss, repacked panels match a fresh pack
     a.set(4, 3, 1234.5);
-    let (p4, _) = cache.get_or_pack(Side::A, 9, 7, 4, fingerprint(a.data()), || pack(&a));
+    let (p4, _) = cache.get_or_pack(Side::A, 9, 7, 4, MR_I8, fingerprint(a.data()), || pack(&a));
     assert!(!Arc::ptr_eq(&p1, &p4), "mutation must invalidate");
     let fresh = pack(&a).0;
     for s in 0..4 {
@@ -439,6 +440,49 @@ fn dispatcher_routes_by_kernel_selector() {
         let got_n = dn.dgemm(&a, &b).unwrap();
         let got_b = db.dgemm(&a, &b).unwrap();
         assert_eq!(got_n.data(), got_b.data(), "mode {mode:?}");
+    }
+}
+
+#[test]
+fn tuned_constants_never_change_ozaki_bits() {
+    // The persistent autotuner may swap in any valid
+    // (mc, nc, kc, pack_parallel, nr, threads) combination at dispatch
+    // time; this is only sound because every such knob is bit-invisible
+    // on the exact-integer Ozaki path.  Sweep random tuned configs —
+    // routed through the same `TunedEntry::apply` + clamp the selector
+    // uses — across every available ISA against the scalar oracle.
+    let mut rng = Rng::new(179);
+    let a = rand_f64(&mut rng, 37, 29);
+    let b = rand_f64(&mut rng, 29, 26);
+    let splits = 5u32;
+    let want = ozaki_dgemm_naive(&a, &b, splits).unwrap();
+    for trial in 0..10 {
+        let entry = ozaccel::tune::TunedEntry {
+            mc: rng.index(1, 300),
+            nc: rng.index(1, 600),
+            kc: rng.index(1, 300),
+            pack_parallel: trial % 3 != 0,
+            nr: if trial % 2 == 0 { NR_I8 } else { NR_I8_WIDE },
+            gain: 1.0,
+        };
+        let threads = rng.index(1, 7);
+        for isa in available_isas() {
+            let base = KernelConfig {
+                simd: SimdSelect::Force(isa),
+                panel_cache_mb: if trial % 2 == 0 { 4 } else { 0 },
+                ..KernelConfig::with_threads(threads)
+            };
+            let cfg = entry.apply(&base);
+            assert_eq!(cfg.mc % MR_I8, 0, "apply() must clamp mc to the tile");
+            assert_eq!(cfg.nc % cfg.nr, 0, "apply() must clamp nc to nr");
+            let got = ozaccel::ozaki::ozaki_dgemm_with(&a, &b, splits, &cfg).unwrap();
+            assert_eq!(
+                got.data(),
+                want.data(),
+                "trial={trial} isa={} threads={threads} entry={entry:?}",
+                isa.name()
+            );
+        }
     }
 }
 

@@ -1,0 +1,90 @@
+//! Write → reload → dispatch round-trip of the persistent shape
+//! autotuner cache: winners saved to disk must be served back by the
+//! `KernelSelector` at dispatch time (the PEAK report's `tuned`
+//! column), and consulting them must never change a single result bit.
+//!
+//! Everything lives in one `#[test]` because the loaded cache is a
+//! process-wide store keyed by path — parallel test threads flipping
+//! the path would race each other, not the code under test.
+
+use ozaccel::coordinator::{DispatchConfig, Dispatcher, HostKernel, KernelSelector};
+use ozaccel::kernels::{KernelConfig, SimdSelect, NR_I8};
+use ozaccel::linalg::Mat;
+use ozaccel::ozaki::{ozaki_dgemm_naive, ComputeMode};
+use ozaccel::testing::Rng;
+use ozaccel::tune::{self, ShapeClass, TuneMode, TunedEntry, TuningCache};
+
+fn selector(tune: TuneMode, file: &std::path::Path) -> KernelSelector {
+    KernelSelector {
+        kernel: HostKernel::Auto,
+        config: KernelConfig {
+            // pin scalar so the cache key is machine-independent
+            simd: SimdSelect::Scalar,
+            tune,
+            tune_file: Some(file.to_path_buf()),
+            ..KernelConfig::with_threads(2)
+        },
+    }
+}
+
+#[test]
+fn saved_winners_reach_dispatch_and_keep_bits() {
+    let path = std::env::temp_dir().join(format!(
+        "ozaccel-test-tuning-roundtrip-{}.toml",
+        std::process::id()
+    ));
+    let entry = TunedEntry {
+        mc: 64,
+        nc: 128,
+        kc: 96,
+        pack_parallel: true,
+        nr: NR_I8,
+        gain: 1.25,
+    };
+    let (m, k, n) = (40usize, 32usize, 24usize);
+    let mut cache = TuningCache::empty();
+    cache.put("scalar", ShapeClass::of(m, k, n), 2, entry);
+    cache.save(&path).expect("save tuning cache");
+    tune::invalidate();
+
+    // read mode: the on-disk winner is consulted for its exact
+    // (ISA x shape class x threads) key and nothing else.
+    let tuned = selector(TuneMode::Read, &path);
+    assert_eq!(tuned.tuned_source(m, k, n), "cache");
+    assert_eq!(
+        tuned.tuned_source(1, 1, 1),
+        "default",
+        "shape classes without an entry keep the crate defaults"
+    );
+
+    // off mode (the seed behaviour): the file is never consulted.
+    let off = selector(TuneMode::Off, &path);
+    assert_eq!(off.tuned_source(m, k, n), "default");
+
+    // the tuned constants are a pure speed knob: bit-identical to the
+    // scalar oracle and to the untuned selector, through both the
+    // selector and a full host-only dispatcher.
+    let mut rng = Rng::new(193);
+    let a = Mat::from_fn(m, k, |_, _| rng.normal());
+    let b = Mat::from_fn(k, n, |_, _| rng.normal());
+    let splits = 5u32;
+    let want = ozaki_dgemm_naive(&a, &b, splits).unwrap();
+    assert_eq!(tuned.ozaki_dgemm(&a, &b, splits).unwrap().data(), want.data());
+    assert_eq!(off.ozaki_dgemm(&a, &b, splits).unwrap().data(), want.data());
+
+    let mode = ComputeMode::Int8 { splits };
+    let mut dcfg = DispatchConfig::host_only(mode);
+    dcfg.kernels = selector(TuneMode::Read, &path);
+    let disp = Dispatcher::new(dcfg).unwrap();
+    assert_eq!(disp.dgemm(&a, &b).unwrap().data(), want.data());
+
+    // auto mode falls through a cache miss to the embedded pretuned
+    // table (shipped for the CI machine class): scalar 64^3 at two
+    // threads is one of its keys.
+    let missing = path.with_extension("absent.toml");
+    let auto = selector(TuneMode::Auto, &missing);
+    assert_eq!(auto.tuned_source(64, 64, 64), "pretuned");
+
+    let _ = std::fs::remove_file(&path);
+    tune::invalidate();
+}
