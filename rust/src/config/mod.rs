@@ -63,6 +63,9 @@ const OFFLOAD_KEYS: &[&str] = &[
     "breaker_cooldown",
     "breaker_probes",
     "backend",
+    "artifact_cache",
+    "staging_depth",
+    "ewma_window",
 ];
 
 /// Full run configuration for the `ozaccel` binary.
@@ -359,6 +362,8 @@ impl RunConfig {
                 return Err(Error::Config("batch.max_pending must be >= 1".into()));
             }
             cfg.dispatch.batch.max_pending = n as usize;
+            // Explicit config beats the autotuner's persisted advisory.
+            cfg.dispatch.batch.max_pending_explicit = true;
         }
         if let Some(v) = batch("max_bytes") {
             let f = v.as_f64()?;
@@ -421,6 +426,27 @@ impl RunConfig {
                 return Err(Error::Config("offload.breaker_probes must be >= 1".into()));
             }
             cfg.dispatch.offload.breaker_probes = n;
+        }
+        if let Some(v) = offload("artifact_cache") {
+            let n = toml_u32(v, "offload.artifact_cache")?;
+            if n == 0 {
+                return Err(Error::Config("offload.artifact_cache must be >= 1".into()));
+            }
+            cfg.dispatch.offload.artifact_cache = n as usize;
+        }
+        if let Some(v) = offload("staging_depth") {
+            let n = toml_u32(v, "offload.staging_depth")?;
+            if n == 0 {
+                return Err(Error::Config("offload.staging_depth must be >= 1".into()));
+            }
+            cfg.dispatch.offload.staging_depth = n as usize;
+        }
+        if let Some(v) = offload("ewma_window") {
+            let n = toml_u32(v, "offload.ewma_window")?;
+            if n == 0 {
+                return Err(Error::Config("offload.ewma_window must be >= 1".into()));
+            }
+            cfg.dispatch.offload.ewma_window = n;
         }
         if let Some(v) = offload("backend") {
             cfg.dispatch.offload.backend = OffloadBackend::parse(v.as_str()?).ok_or_else(|| {
@@ -546,6 +572,7 @@ impl RunConfig {
                 return Err(Error::Config("OZACCEL_BATCH_MAX_PENDING must be >= 1".into()));
             }
             self.dispatch.batch.max_pending = n;
+            self.dispatch.batch.max_pending_explicit = true;
         }
         if let Ok(v) = std::env::var("OZACCEL_BATCH_MAX_BYTES") {
             let n: usize = v
@@ -597,6 +624,9 @@ impl RunConfig {
             ("OZACCEL_OFFLOAD_BREAKER_THRESHOLD", 0usize),
             ("OZACCEL_OFFLOAD_BREAKER_COOLDOWN", 1),
             ("OZACCEL_OFFLOAD_BREAKER_PROBES", 2),
+            ("OZACCEL_OFFLOAD_ARTIFACT_CACHE", 3),
+            ("OZACCEL_OFFLOAD_STAGING_DEPTH", 4),
+            ("OZACCEL_OFFLOAD_EWMA_WINDOW", 5),
         ] {
             if let Ok(v) = std::env::var(name) {
                 let n: u32 = v
@@ -609,7 +639,10 @@ impl RunConfig {
                 match slot {
                     0 => self.dispatch.offload.breaker_threshold = n,
                     1 => self.dispatch.offload.breaker_cooldown = n,
-                    _ => self.dispatch.offload.breaker_probes = n,
+                    2 => self.dispatch.offload.breaker_probes = n,
+                    3 => self.dispatch.offload.artifact_cache = n as usize,
+                    4 => self.dispatch.offload.staging_depth = n as usize,
+                    _ => self.dispatch.offload.ewma_window = n,
                 }
             }
         }
@@ -1025,7 +1058,8 @@ n_contour = 12
         let cfg = RunConfig::from_toml(
             "[offload]\nmax_retries = 5\nbackoff_ms = 7\ndeadline_ms = 900\n\
              breaker_threshold = 2\nbreaker_cooldown = 16\nbreaker_probes = 1\n\
-             backend = \"sim\"\n",
+             backend = \"sim\"\nartifact_cache = 48\nstaging_depth = 3\n\
+             ewma_window = 24\n",
         )
         .unwrap();
         assert_eq!(cfg.dispatch.offload.max_retries, 5);
@@ -1035,6 +1069,9 @@ n_contour = 12
         assert_eq!(cfg.dispatch.offload.breaker_cooldown, 16);
         assert_eq!(cfg.dispatch.offload.breaker_probes, 1);
         assert_eq!(cfg.dispatch.offload.backend, OffloadBackend::Sim);
+        assert_eq!(cfg.dispatch.offload.artifact_cache, 48);
+        assert_eq!(cfg.dispatch.offload.staging_depth, 3);
+        assert_eq!(cfg.dispatch.offload.ewma_window, 24);
         // the run.offload.* spelling maps identically
         let cfg = RunConfig::from_toml("[run.offload]\nmax_retries = 0\n").unwrap();
         assert_eq!(cfg.dispatch.offload.max_retries, 0);
@@ -1047,6 +1084,10 @@ n_contour = 12
         assert!(RunConfig::from_toml("[offload]\nbreaker_threshold = 0\n").is_err());
         assert!(RunConfig::from_toml("[offload]\nbreaker_cooldown = 0\n").is_err());
         assert!(RunConfig::from_toml("[offload]\nbreaker_probes = 0\n").is_err());
+        assert!(RunConfig::from_toml("[offload]\nartifact_cache = 0\n").is_err());
+        assert!(RunConfig::from_toml("[offload]\nstaging_depth = 0\n").is_err());
+        assert!(RunConfig::from_toml("[offload]\newma_window = 0\n").is_err());
+        assert!(RunConfig::from_toml("[offload]\nstaging_depth = 1.5\n").is_err());
         assert!(RunConfig::from_toml("[offload]\nbackend = \"fpga\"\n").is_err());
         assert!(RunConfig::from_toml("[offload]\nmax_retries = 1.5\n").is_err());
         assert!(RunConfig::from_toml("[offload]\nbogus = 1\n").is_err());

@@ -30,6 +30,22 @@ pub struct BatchCallInfo {
     pub lead: bool,
 }
 
+/// Device-pipeline statistics for one batched bucket submission
+/// ([`crate::device`]) — the PEAK `device` column's input.  Attached to
+/// the bucket's lead record only (the artifact fetch, staging traffic,
+/// and overlap belong to the submission, not to each member).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeviceCallInfo {
+    /// Batched-artifact cache hits this submission contributed.
+    pub artifact_hits: u64,
+    /// Batched-artifact cache misses (fresh compilations).
+    pub artifact_misses: u64,
+    /// Operand bytes the staging pipeline packed for this submission.
+    pub staged_bytes: u64,
+    /// Staging seconds hidden behind execution of earlier buckets.
+    pub overlap_s: f64,
+}
+
 /// Everything measured about one dispatched call, recorded into the
 /// PEAK registry as a unit.
 ///
@@ -61,6 +77,10 @@ pub struct CallMeasurement {
     /// Batch-engine statistics when the call executed inside a
     /// coalesced bucket (`None` for directly dispatched calls).
     pub batch: Option<BatchCallInfo>,
+    /// Device-pipeline statistics when the call led a batched device
+    /// submission (`None` for everything else — including the
+    /// submission's non-lead members).
+    pub device: Option<DeviceCallInfo>,
     /// Certification probes this call took (certified mode only).
     pub cert_checks: u64,
     /// Escalation re-runs certification forced on this call.
@@ -161,6 +181,23 @@ pub struct CallSiteStats {
     pub offload_fallbacks: u64,
     /// Circuit-breaker trips attributed to this site's calls.
     pub breaker_trips: u64,
+    /// Batched-artifact cache hits across this site's device buckets.
+    pub artifact_hits: u64,
+    /// Batched-artifact cache misses (fresh compilations).
+    pub artifact_misses: u64,
+    /// Operand bytes staged for this site's device buckets.
+    pub staged_bytes: u64,
+    /// Staging seconds hidden behind execution of earlier buckets.
+    pub overlap_s: f64,
+    /// Wall seconds of this site's device-served calls (the measured
+    /// device half of the PEAK `thrpt` column).
+    pub device_s: f64,
+    /// FLOPs of this site's device-served calls.
+    pub device_flops: f64,
+    /// Wall seconds of this site's host-executed calls.
+    pub host_s: f64,
+    /// FLOPs of this site's host-executed calls.
+    pub host_flops: f64,
 }
 
 impl CallSiteStats {
@@ -242,6 +279,46 @@ impl CallSiteStats {
             )
         }
     }
+
+    /// The `device` cell of the PEAK table:
+    /// `<artifact hits>h/<misses>m/<staged KiB>k/<overlap ms>o`, or `-`
+    /// for sites that never led a batched device submission.
+    pub fn device_cell(&self) -> String {
+        if self.artifact_hits == 0 && self.artifact_misses == 0 {
+            "-".into()
+        } else {
+            format!(
+                "{}h/{}m/{}k/{:.1}o",
+                self.artifact_hits,
+                self.artifact_misses,
+                self.staged_bytes >> 10,
+                self.overlap_s * 1e3
+            )
+        }
+    }
+
+    /// The `thrpt` cell of the PEAK table: measured host vs device
+    /// GFLOP/s as `<host>/<device>`, with `-` for an unmeasured half
+    /// and a bare `-` when the site measured neither.
+    pub fn throughput_cell(&self) -> String {
+        let gflops = |flops: f64, secs: f64| {
+            if secs > 0.0 && flops > 0.0 {
+                Some(flops / secs / 1e9)
+            } else {
+                None
+            }
+        };
+        let host = gflops(self.host_flops, self.host_s);
+        let device = gflops(self.device_flops, self.device_s);
+        if host.is_none() && device.is_none() {
+            return "-".into();
+        }
+        let fmt = |v: Option<f64>| match v {
+            Some(g) => format!("{g:.2}"),
+            None => "-".into(),
+        };
+        format!("{}/{}", fmt(host), fmt(device))
+    }
 }
 
 /// Registry of every call site seen this run.
@@ -263,8 +340,12 @@ impl SiteRegistry {
         e.flops += m.flops;
         if m.offloaded {
             e.offloaded += 1;
+            e.device_s += m.measured_s;
+            e.device_flops += m.flops;
         } else {
             e.host += 1;
+            e.host_s += m.measured_s;
+            e.host_flops += m.flops;
         }
         e.measured_s += m.measured_s;
         e.modeled_gpu_s += m.modeled_gpu_s;
@@ -299,6 +380,12 @@ impl SiteRegistry {
             }
             e.bucket_max = e.bucket_max.max(b.bucket);
             e.pack_reuse += b.pack_reuse;
+        }
+        if let Some(d) = m.device {
+            e.artifact_hits += d.artifact_hits;
+            e.artifact_misses += d.artifact_misses;
+            e.staged_bytes += d.staged_bytes;
+            e.overlap_s += d.overlap_s;
         }
         e.cert_checks += m.cert_checks;
         e.cert_escalations += m.cert_escalations;
@@ -407,6 +494,14 @@ impl SiteRegistry {
             t.offload_retries += s.offload_retries;
             t.offload_fallbacks += s.offload_fallbacks;
             t.breaker_trips += s.breaker_trips;
+            t.artifact_hits += s.artifact_hits;
+            t.artifact_misses += s.artifact_misses;
+            t.staged_bytes += s.staged_bytes;
+            t.overlap_s += s.overlap_s;
+            t.device_s += s.device_s;
+            t.device_flops += s.device_flops;
+            t.host_s += s.host_s;
+            t.host_flops += s.host_flops;
         }
         t
     }
@@ -655,5 +750,75 @@ mod tests {
         let t = r.totals();
         assert_eq!((t.batch_calls, t.batch_buckets, t.bucket_max), (3, 1, 3));
         assert_eq!(t.pack_reuse, 3);
+    }
+
+    #[test]
+    fn device_stats_accumulate_and_render() {
+        let mut r = SiteRegistry::new();
+        // A bucket lead carries the submission's device info; followers
+        // and host calls only feed the throughput halves.
+        r.record(
+            "scf.rs:21",
+            CallMeasurement {
+                flops: 2e9,
+                offloaded: true,
+                measured_s: 1e-3,
+                device: Some(DeviceCallInfo {
+                    artifact_hits: 1,
+                    artifact_misses: 2,
+                    staged_bytes: 4096,
+                    overlap_s: 1.5e-3,
+                }),
+                ..Default::default()
+            },
+        );
+        r.record(
+            "scf.rs:21",
+            CallMeasurement {
+                flops: 2e9,
+                offloaded: true,
+                measured_s: 1e-3,
+                ..Default::default()
+            },
+        );
+        r.record(
+            "scf.rs:21",
+            CallMeasurement {
+                flops: 1e9,
+                measured_s: 1e-3,
+                ..Default::default()
+            },
+        );
+        let s = r.get("scf.rs:21").unwrap();
+        assert_eq!((s.artifact_hits, s.artifact_misses), (1, 2));
+        assert_eq!(s.staged_bytes, 4096);
+        assert!((s.overlap_s - 1.5e-3).abs() < 1e-12);
+        assert!((s.device_s - 2e-3).abs() < 1e-12);
+        assert!((s.device_flops - 4e9).abs() < 1.0);
+        assert!((s.host_s - 1e-3).abs() < 1e-12);
+        assert!((s.host_flops - 1e9).abs() < 1.0);
+        assert_eq!(s.device_cell(), "1h/2m/4k/1.5o");
+        // host 1e9 flops / 1e-3 s = 1000 GFLOP/s; device 4e9 / 2e-3 = 2000.
+        assert_eq!(s.throughput_cell(), "1000.00/2000.00");
+        // quiet sites stay quiet in both columns
+        assert_eq!(CallSiteStats::default().device_cell(), "-");
+        assert_eq!(CallSiteStats::default().throughput_cell(), "-");
+        // a host-only site renders a device dash in the thrpt cell
+        let mut h = SiteRegistry::new();
+        h.record(
+            "lu.rs:4",
+            CallMeasurement {
+                flops: 1e9,
+                measured_s: 1e-3,
+                ..Default::default()
+            },
+        );
+        assert_eq!(h.get("lu.rs:4").unwrap().throughput_cell(), "1000.00/-");
+        let t = r.totals();
+        assert_eq!((t.artifact_hits, t.artifact_misses), (1, 2));
+        assert_eq!(t.staged_bytes, 4096);
+        assert!((t.overlap_s - 1.5e-3).abs() < 1e-12);
+        assert!((t.device_flops - 4e9).abs() < 1.0);
+        assert!((t.host_flops - 1e9).abs() < 1.0);
     }
 }

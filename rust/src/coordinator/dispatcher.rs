@@ -13,8 +13,9 @@ use super::callsite::CallSiteId;
 use super::callsite::{CallMeasurement, SiteRegistry};
 use super::datamove::{DataMoveStrategy, MemModel};
 use super::kernel_select::{HostCallInfo, KernelSelector};
-use super::policy::{OffloadDecision, RoutingPolicy};
+use super::policy::{emulation_work_factor, OffloadDecision, RoutingPolicy};
 use super::stats::{Report, RuntimeHealth};
+use crate::device::{ArtifactCache, ThroughputTracker};
 use crate::engine::{BatchConfig, Engine, LimitsConfig};
 use crate::error::{Error, Result};
 use crate::faults::{maybe_fail, FaultSite};
@@ -108,6 +109,12 @@ pub struct Dispatcher {
     sites: Mutex<SiteRegistry>,
     mem: Mutex<MemModel>,
     governor: Governor,
+    /// Per-site measured host-vs-device throughput EWMAs — the routing
+    /// policy's measured predicate (`[offload] ewma_window`).
+    throughput: ThroughputTracker,
+    /// Compiled per-bucket batched artifacts, LRU-bounded
+    /// (`[offload] artifact_cache`).
+    artifacts: ArtifactCache,
 }
 
 impl Dispatcher {
@@ -141,6 +148,8 @@ impl Dispatcher {
         let mem = MemModel::new(cfg.strategy, cfg.gpu);
         let governor = Governor::new(cfg.precision);
         let resilience = Resilience::new(cfg.offload);
+        let throughput = ThroughputTracker::new(cfg.offload.ewma_window);
+        let artifacts = ArtifactCache::new(cfg.offload.artifact_cache);
         Ok(Dispatcher {
             cfg,
             runtime,
@@ -149,6 +158,8 @@ impl Dispatcher {
             sites: Mutex::new(SiteRegistry::new()),
             mem: Mutex::new(mem),
             governor,
+            throughput,
+            artifacts,
         })
     }
 
@@ -394,15 +405,24 @@ impl Dispatcher {
     /// i.e. after the precision governor has settled the split count —
     /// because the policy prices the emulated slice-pair work, not the
     /// raw FLOPs.
-    pub(crate) fn route(&self, mode: ComputeMode, m: usize, k: usize, n: usize) -> OffloadDecision {
+    pub(crate) fn route(
+        &self,
+        site: CallSiteId,
+        mode: ComputeMode,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> OffloadDecision {
         let Some(rt) = self.runtime.as_ref() else {
             return OffloadDecision::HostForced;
         };
         let kind = ArtifactKind::for_mode(mode);
-        // Health before coverage, both lazy (see `RoutingPolicy::decide`):
-        // a call stuck behind an open breaker skips the manifest lookup,
-        // and sub-threshold calls tick neither the breaker's cooldown nor
-        // the manifest.
+        // Health before coverage before measurement, all lazy (see
+        // `RoutingPolicy::decide`): a call stuck behind an open breaker
+        // skips the manifest lookup, sub-threshold calls tick neither
+        // the breaker's cooldown nor the manifest, and only genuine
+        // device candidates consult (and thereby warm) the per-site
+        // throughput EWMAs.
         self.cfg.policy.decide(
             m,
             k,
@@ -410,7 +430,59 @@ impl Dispatcher {
             mode.splits().unwrap_or(0),
             || rt.covers(kind, m, k, n),
             || self.resilience.admits(),
+            || {
+                let (work, bytes) = Self::routing_work(mode, m, k, n);
+                self.throughput
+                    .advantageous(site, work, bytes, self.device_prior_secs(mode, m, k, n))
+            },
         )
+    }
+
+    /// The (emulated work, operand traffic) a routing decision weighs —
+    /// the same quantities both throughput EWMAs are recorded in, so
+    /// predictions and observations stay commensurable.  Shared with
+    /// the batch engine's device path, whose per-member observations
+    /// must land in the same units.
+    pub(crate) fn routing_work(mode: ComputeMode, m: usize, k: usize, n: usize) -> (f64, f64) {
+        let work = gemm_flops(m, k, n) * emulation_work_factor(mode.splits().unwrap_or(0));
+        let bytes = ((m * k + k * n + m * n) * 8) as f64;
+        (work, bytes)
+    }
+
+    /// Static-perfmodel estimate of the device's execution time — the
+    /// measured router's cold-start prior until a site has real device
+    /// observations.
+    fn device_prior_secs(&self, mode: ComputeMode, m: usize, k: usize, n: usize) -> f64 {
+        match mode {
+            ComputeMode::Dgemm => native_gemm_time(&self.cfg.gpu, m, k, n),
+            ComputeMode::Int8 { splits } => {
+                emulated_gemm_time(&self.cfg.gpu, m, k, n, splits).total_s
+            }
+        }
+    }
+
+    /// Per-site measured host-vs-device throughput EWMAs: the routing
+    /// policy's measured predicate and the PEAK `thrpt` column's
+    /// source.  Public so applications (and tests) can inspect — or
+    /// deterministically seed — the measured state.
+    pub fn throughput(&self) -> &ThroughputTracker {
+        &self.throughput
+    }
+
+    /// The batched-artifact cache (hit/miss/eviction counters feed the
+    /// PEAK `device` column and `BENCH_device.json`).
+    pub fn artifacts(&self) -> &ArtifactCache {
+        &self.artifacts
+    }
+
+    /// The runtime, iff it supports batched bucket submissions — the
+    /// batch engine's gate for the device path.  PJRT artifacts are
+    /// per-call programs, so today this is exactly the simulated
+    /// backend ([`crate::runtime::Runtime::batched_sweep`]).
+    pub(crate) fn batched_device(&self) -> Option<&Runtime> {
+        self.runtime
+            .as_ref()
+            .filter(|rt| rt.backend_name() == "sim")
     }
 
     /// The host-kernel selector dispatched calls run under — shared
@@ -431,8 +503,19 @@ impl Dispatcher {
     /// fused bucket runs (see [`crate::engine`]).  Flush policy comes
     /// from [`DispatchConfig::batch`]; results are bit-identical to
     /// issuing the same calls sequentially.
+    ///
+    /// Under `run.tune = read|auto` the engine auto-consumes the
+    /// tuner's persisted `[batch] max_pending` advisory — unless the
+    /// bound was set explicitly in config or environment, which always
+    /// wins (see [`BatchConfig::max_pending_explicit`]).
     pub fn batch(&self) -> Engine<'_> {
-        Engine::new(self, self.cfg.batch)
+        let mut cfg = self.cfg.batch;
+        if !cfg.max_pending_explicit {
+            if let Some(adv) = crate::tune::batch_advisory(&self.cfg.kernels.config) {
+                cfg.max_pending = adv;
+            }
+        }
+        Engine::new(self, cfg)
     }
 
     /// Run `f` inside a batch scope, flushing any still-queued work
@@ -733,7 +816,7 @@ impl Dispatcher {
         } else {
             mode
         };
-        let decision = self.route(mode, m, k, n);
+        let decision = self.route(site, mode, m, k, n);
 
         if decision.offloaded() {
             // Decomposed path: each real component flows through
@@ -773,6 +856,14 @@ impl Dispatcher {
             ComputeMode::Int8 { splits } => self.cfg.kernels.ozaki_zgemm(a, b, splits)?,
         };
         let measured = t0.elapsed().as_secs_f64();
+        // Host observation for the measured-throughput router: the
+        // fused complex call does the work of the four real component
+        // GEMMs over 16-byte elements.
+        {
+            let (work, bytes) = Self::routing_work(mode, m, k, n);
+            self.throughput
+                .record(site, false, 4.0 * work, 2.0 * bytes, measured);
+        }
         let fin = self.finish_complex(site, mode, a, b, result, governed)?;
 
         let mr = match mode {
@@ -905,6 +996,93 @@ impl Dispatcher {
         })
     }
 
+    /// Per-member admission of one batched device submission: exactly
+    /// [`Dispatcher::offload_gemm`]'s retry/backoff/deadline/breaker
+    /// protocol with the device execution factored out.  The batch
+    /// engine runs every admitted member's slice products in **one**
+    /// [`crate::runtime::Runtime::batched_sweep`], so admission — where
+    /// injected device faults fire — stays per member (a failing
+    /// member falls back to the host without evicting its
+    /// bucket-mates), while execution is per bucket.
+    pub(crate) fn admit_offload(&self, site: CallSiteId) -> OffloadAdmit {
+        let trips_before = self.resilience.breaker().trips();
+        let cfg = *self.resilience.config();
+        let started = Instant::now();
+        let mut retries = 0u64;
+        for attempt in 1..=cfg.attempts() {
+            if attempt > 1 {
+                let sleep = cfg.backoff(attempt - 1);
+                if cfg.deadline().is_some_and(|d| started.elapsed() + sleep >= d) {
+                    debug!("batched offload {site}: deadline exhausted after {retries} retries");
+                    break;
+                }
+                if !sleep.is_zero() {
+                    std::thread::sleep(sleep);
+                }
+                retries += 1;
+            }
+            let admitted = maybe_fail(FaultSite::OffloadTimeout, Error::Timeout)
+                .and_then(|()| maybe_fail(FaultSite::OffloadError, Error::Xla))
+                .and_then(|()| maybe_fail(FaultSite::OffloadTransient, Error::Xla));
+            match admitted {
+                Ok(()) => {
+                    self.resilience.on_success();
+                    return OffloadAdmit::Device { retries };
+                }
+                Err(e) => {
+                    self.resilience.on_failure();
+                    debug!("batched offload {site}: admission attempt {attempt} failed ({e})");
+                }
+            }
+        }
+        OffloadAdmit::Fallback {
+            retries,
+            trips: self.resilience.breaker().trips() - trips_before,
+        }
+    }
+
+    /// Model GPU compute + data movement of one device-served real
+    /// GEMM — the pricing half of the PEAK `gpu-model` / `move-model`
+    /// columns, shared by the sequential offload path and the batch
+    /// engine's device-bucket members so their modeled costs cannot
+    /// drift.
+    pub(crate) fn price_offload_real(
+        &self,
+        mode: ComputeMode,
+        a: &Mat<f64>,
+        b: &Mat<f64>,
+        c: &Mat<f64>,
+    ) -> (f64, f64) {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let gpu_s = self.device_prior_secs(mode, m, k, n);
+        let mut mem = self.mem.lock().unwrap();
+        let mut move_s = 0.0;
+        move_s += mem.gpu_read(a.data().as_ptr() as usize, (a.data().len() * 8) as u64);
+        move_s += mem.gpu_read(b.data().as_ptr() as usize, (b.data().len() * 8) as u64);
+        move_s += mem.gpu_write(c.data().as_ptr() as usize, (c.data().len() * 8) as u64);
+        (gpu_s, move_s)
+    }
+
+    /// Complex twin of [`Dispatcher::price_offload_real`]: four
+    /// component products' worth of modeled GPU time plus the complex
+    /// operands' movement (16 bytes per element).
+    pub(crate) fn price_offload_complex(
+        &self,
+        mode: ComputeMode,
+        a: &ZMat,
+        b: &ZMat,
+        c: &ZMat,
+    ) -> (f64, f64) {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let gpu_s = 4.0 * self.device_prior_secs(mode, m, k, n);
+        let mut mem = self.mem.lock().unwrap();
+        let mut move_s = 0.0;
+        move_s += mem.gpu_read(a.data().as_ptr() as usize, (a.data().len() * 16) as u64);
+        move_s += mem.gpu_read(b.data().as_ptr() as usize, (b.data().len() * 16) as u64);
+        move_s += mem.gpu_write(c.data().as_ptr() as usize, (c.data().len() * 16) as u64);
+        (gpu_s, move_s)
+    }
+
     /// Degenerate GEMM shapes (any of `m`/`k`/`n` zero) short-circuit
     /// to the exact all-zero (possibly empty) product without routing:
     /// no artifact bucket covers them, `k == 0` would hand the Ozaki
@@ -973,7 +1151,7 @@ impl Dispatcher {
         } else {
             mode
         };
-        let decision = self.route(mode, m, k, n);
+        let decision = self.route(site, mode, m, k, n);
 
         let mut host_info = None;
         let mut retries = 0u64;
@@ -1043,25 +1221,22 @@ impl Dispatcher {
             }
         };
         let measured = t0.elapsed().as_secs_f64();
+        // Feed the measured-throughput router: device observations from
+        // served offloads, host observations from *pure* host
+        // executions only — a fallback's latency conflates failed
+        // device attempts and backoff sleeps with the host kernel, and
+        // recording it would poison the host EWMA.
+        if offloaded || !fell_back {
+            let (work, bytes) = Self::routing_work(mode, m, k, n);
+            self.throughput.record(site, offloaded, work, bytes, measured);
+        }
         let fin = self.finish_real(site, mode, a, b, result, governed)?;
 
         // Model GPU compute + movement only for calls the device
         // actually served — a fallback execution must not pollute the
         // modeled GPU/movement columns.
         let (gpu_s, move_s) = if offloaded {
-            let gpu_s = match mode {
-                ComputeMode::Dgemm => native_gemm_time(&self.cfg.gpu, m, k, n),
-                ComputeMode::Int8 { splits } => {
-                    emulated_gemm_time(&self.cfg.gpu, m, k, n, splits).total_s
-                }
-            };
-            let mut mem = self.mem.lock().unwrap();
-            let mut move_s = 0.0;
-            move_s += mem.gpu_read(a.data().as_ptr() as usize, (a.data().len() * 8) as u64);
-            move_s += mem.gpu_read(b.data().as_ptr() as usize, (b.data().len() * 8) as u64);
-            move_s +=
-                mem.gpu_write(fin.result.data().as_ptr() as usize, (fin.result.data().len() * 8) as u64);
-            (gpu_s, move_s)
+            self.price_offload_real(mode, a, b, &fin.result)
         } else {
             (0.0, 0.0)
         };
@@ -1178,6 +1353,25 @@ enum OffloadOutcome {
     /// Retries/deadline exhausted (every attempt reported to the
     /// breaker): the caller re-executes on the host path.
     Fallback { retries: u64, trips: u64 },
+}
+
+/// Outcome of per-member admission into a batched device submission
+/// ([`Dispatcher::admit_offload`]).
+pub(crate) enum OffloadAdmit {
+    /// The member rides the bucket's single device submission, after
+    /// `retries` admission re-attempts.
+    Device {
+        /// Admission re-attempts this member consumed.
+        retries: u64,
+    },
+    /// Retry/deadline budget exhausted: the member falls back to host
+    /// execution while its bucket-mates keep their device slots.
+    Fallback {
+        /// Admission re-attempts this member consumed.
+        retries: u64,
+        /// Breaker trips this member's admission caused.
+        trips: u64,
+    },
 }
 
 /// Post-execution accounting of one governed GEMM

@@ -37,11 +37,13 @@ mod stats;
 
 #[allow(deprecated)]
 pub use adaptive::AdaptivePolicy;
-pub use callsite::{BatchCallInfo, CallMeasurement, CallSiteId, CallSiteStats, SiteRegistry};
+pub use callsite::{
+    BatchCallInfo, CallMeasurement, CallSiteId, CallSiteStats, DeviceCallInfo, SiteRegistry,
+};
 pub use crash::{clear_crash_report_source, set_crash_report_source};
 pub use datamove::{BufferId, DataMoveStrategy, MemModel, Residency};
 pub use dispatcher::{call_site, DispatchConfig, Dispatcher};
-pub(crate) use dispatcher::Finished;
+pub(crate) use dispatcher::{Finished, OffloadAdmit};
 pub use kernel_select::{HostCallInfo, HostKernel, KernelSelector};
 pub use policy::{emulation_work_factor, OffloadDecision, RoutingPolicy};
 pub use stats::{GemmKind, Report, RuntimeHealth};

@@ -30,6 +30,12 @@ pub enum OffloadDecision {
     /// device is sick and routing stops offering it calls until the
     /// breaker's cooldown admits recovery probes).
     HostDegraded,
+    /// Run on the host because **measured** per-site throughput says
+    /// so: both routes are past their EWMA warm-up and the observed
+    /// host path beats the device estimate by the flip margin
+    /// ([`crate::device::throughput`] — the static perfmodel is only
+    /// the cold-start prior).
+    HostMeasured,
 }
 
 impl OffloadDecision {
@@ -75,19 +81,23 @@ impl RoutingPolicy {
     /// Decide for a GEMM of logical shape (m, k, n) executing at the
     /// governed split count `splits` (0 = native FP64).  `covered`
     /// reports whether an artifact bucket exists for the shape;
-    /// `healthy` whether the backend's circuit breaker admits the call.
+    /// `healthy` whether the backend's circuit breaker admits the call;
+    /// `advantageous` whether measured per-site throughput still favors
+    /// the device ([`crate::device::ThroughputTracker::advantageous`]).
     ///
     /// The threshold compares `gemm_flops · s(s+1)/2` — the work the
     /// device would actually absorb — so callers must pass the split
     /// count the precision governor *settled on*, after
     /// `Governor::apply`, not the configured request.
     ///
-    /// Both predicates are lazy, and ordered health-before-coverage on
-    /// purpose: a site stuck behind an open breaker answers
-    /// [`OffloadDecision::HostDegraded`] without paying the artifact
-    /// manifest lookup (`covered` is never invoked), and sub-threshold
-    /// calls consult neither — they were never device candidates, so
-    /// they must not tick the breaker's recovery cooldown either.
+    /// All three predicates are lazy, ordered health → coverage →
+    /// measurement on purpose: a site stuck behind an open breaker
+    /// answers [`OffloadDecision::HostDegraded`] without paying the
+    /// artifact manifest lookup (`covered` is never invoked), an
+    /// uncovered shape never consults the throughput EWMAs (it was
+    /// never a device candidate, so it must not perturb the flip
+    /// detector), and sub-threshold calls consult nothing — they must
+    /// not tick the breaker's recovery cooldown either.
     pub fn decide(
         &self,
         m: usize,
@@ -96,6 +106,7 @@ impl RoutingPolicy {
         splits: u32,
         covered: impl FnOnce() -> bool,
         healthy: impl FnOnce() -> bool,
+        advantageous: impl FnOnce() -> bool,
     ) -> OffloadDecision {
         if self.force_host {
             return OffloadDecision::HostForced;
@@ -109,6 +120,9 @@ impl RoutingPolicy {
         if !covered() {
             return OffloadDecision::HostNoArtifact;
         }
+        if !advantageous() {
+            return OffloadDecision::HostMeasured;
+        }
         OffloadDecision::Offload
     }
 }
@@ -117,8 +131,8 @@ impl RoutingPolicy {
 mod tests {
     use super::*;
 
-    /// `decide` with both predicates constant (most tests don't care
-    /// about laziness).
+    /// `decide` with all predicates constant and the measured route
+    /// device-favorable (most tests don't care about laziness).
     fn decide(
         p: &RoutingPolicy,
         m: usize,
@@ -128,7 +142,7 @@ mod tests {
         cov: bool,
         ok: bool,
     ) -> OffloadDecision {
-        p.decide(m, k, n, s, || cov, || ok)
+        p.decide(m, k, n, s, || cov, || ok, || true)
     }
 
     #[test]
@@ -197,13 +211,14 @@ mod tests {
                 true
             },
             || false,
+            || panic!("throughput consulted behind an open breaker"),
         );
         assert_eq!(d, OffloadDecision::HostDegraded);
         assert!(!looked.get(), "open breaker must skip the coverage lookup");
     }
 
     #[test]
-    fn sub_threshold_calls_consult_neither_predicate() {
+    fn sub_threshold_calls_consult_no_predicate() {
         let p = RoutingPolicy::default();
         let d = p.decide(
             8,
@@ -212,8 +227,30 @@ mod tests {
             0,
             || panic!("coverage consulted for a host-small call"),
             || panic!("breaker ticked for a host-small call"),
+            || panic!("throughput consulted for a host-small call"),
         );
         assert_eq!(d, OffloadDecision::HostSmall);
+    }
+
+    #[test]
+    fn measured_disadvantage_routes_host_after_coverage() {
+        let p = RoutingPolicy::default();
+        let d = p.decide(512, 512, 512, 0, || true, || true, || false);
+        assert_eq!(d, OffloadDecision::HostMeasured);
+        assert!(!d.offloaded());
+        // An uncovered shape never consults the throughput EWMAs: it
+        // was never a device candidate, so the flip detector must not
+        // see it.
+        let d = p.decide(
+            512,
+            512,
+            512,
+            0,
+            || false,
+            || true,
+            || panic!("throughput consulted for an uncovered shape"),
+        );
+        assert_eq!(d, OffloadDecision::HostNoArtifact);
     }
 
     #[test]

@@ -96,7 +96,7 @@ impl Report {
             self.runtime.label()
         ));
         out.push_str(&format!(
-            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>7} {:>8} {:>5} {:>10} {:>9} {:>7} {:>9} {:>13} {:>10} {:>13} {:>5}\n",
+            "{:<42} {:>8} {:>8} {:>12} {:>11} {:>11} {:>11} {:>8} {:>7} {:>8} {:>5} {:>10} {:>9} {:>7} {:>9} {:>13} {:>10} {:>13} {:>16} {:>17} {:>5}\n",
             "call site",
             "calls",
             "offload",
@@ -115,11 +115,13 @@ impl Report {
             "batch",
             "cert",
             "route",
+            "device",
+            "thrpt",
             "wide"
         ));
         for (site, s) in self.sites.iter() {
             out.push_str(&format!(
-                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>7} {:>8} {:>5} {:>9.4}s {:>9} {:>7} {:>9.2} {:>13} {:>10} {:>13} {:>5}\n",
+                "{:<42} {:>8} {:>8} {:>12.3} {:>10.4}s {:>10.4}s {:>10.4}s {:>8} {:>7} {:>8} {:>5} {:>9.4}s {:>9} {:>7} {:>9.2} {:>13} {:>10} {:>13} {:>16} {:>17} {:>5}\n",
                 site,
                 s.calls,
                 s.offloaded,
@@ -138,6 +140,8 @@ impl Report {
                 s.batch_cell(),
                 s.cert_cell(),
                 s.route_cell(),
+                s.device_cell(),
+                s.throughput_cell(),
                 s.wide_calls,
             ));
         }
@@ -178,7 +182,7 @@ mod tests {
 
     #[test]
     fn render_contains_the_essentials() {
-        use crate::coordinator::{BatchCallInfo, CallMeasurement, HostCallInfo};
+        use crate::coordinator::{BatchCallInfo, CallMeasurement, DeviceCallInfo, HostCallInfo};
         let mut sites = SiteRegistry::new();
         sites.record(
             "lu.rs:88",
@@ -188,6 +192,12 @@ mod tests {
                 measured_s: 0.5,
                 modeled_gpu_s: 0.1,
                 modeled_move_s: 0.01,
+                device: Some(DeviceCallInfo {
+                    artifact_hits: 3,
+                    artifact_misses: 1,
+                    staged_bytes: 8192,
+                    overlap_s: 2e-3,
+                }),
                 ..Default::default()
             },
         );
@@ -300,6 +310,20 @@ mod tests {
         assert!(
             txt.contains("0o/3r/1f/1t"),
             "offloads/retries/fallbacks/breaker-trips surfaced per site"
+        );
+        assert!(txt.contains("device"), "header shows the device-pipeline column");
+        assert!(
+            txt.contains("3h/1m/8k/2.0o"),
+            "artifact hits/misses, staged KiB and overlap surfaced per site"
+        );
+        assert!(txt.contains("thrpt"), "header shows the measured-throughput column");
+        assert!(
+            txt.contains("-/2.00"),
+            "device-only sites render a host dash in the thrpt cell"
+        );
+        assert!(
+            txt.contains("0.50/-"),
+            "host-only sites render a device dash in the thrpt cell"
         );
         assert!(
             txt.contains("runtime=degraded(manifest error: no manifest.txt)"),

@@ -1,0 +1,259 @@
+//! Per-bucket batched artifacts and their content-addressed cache.
+//!
+//! The batch engine's device path executes one *compiled artifact* per
+//! engine bucket — the device analogue of the host path's
+//! `fused_ozaki_sweep_many`: a single submission that runs every
+//! member's retained slice products.  An artifact is identified by what
+//! the compiled program depends on — exact bucket shape (device
+//! programs are shape-exact, exactly like XLA executables), real vs
+//! complex decomposition, split count, and the backend it was compiled
+//! for — and carries everything a submission needs that is *derivable
+//! at compile time*: the anti-diagonal slice weights and the effective
+//! kernel configuration.  Compiling it once per key and serving repeat
+//! buckets from the cache is what amortises per-call offload overhead
+//! into per-bucket overhead.
+//!
+//! The cache is bounded ([`crate::resilience::OffloadConfig::
+//! artifact_cache`], `[offload] artifact_cache`) with LRU eviction, and
+//! publishes hit/miss/eviction counters for the PEAK `device` column
+//! and `BENCH_device.json`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::kernels::KernelConfig;
+use crate::tune::ShapeClass;
+
+/// Identity of one batched device artifact — everything the compiled
+/// program's code depends on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    /// Bucket rows (exact — compiled programs are shape-exact).
+    pub m: usize,
+    /// Bucket contraction length.
+    pub k: usize,
+    /// Bucket columns.
+    pub n: usize,
+    /// Whether members are complex GEMMs (the 4-real-GEMM
+    /// decomposition rides one artifact).
+    pub complex: bool,
+    /// Emulated split count the program was compiled for.
+    pub splits: u32,
+    /// Backend label the program targets (`sim` / `pjrt`).
+    pub backend: &'static str,
+}
+
+impl ArtifactKey {
+    /// The power-of-two shape class this key falls in (the panel-cache
+    /// style coarse label, used for reporting; the key itself stays
+    /// exact for bit safety).
+    pub fn class(&self) -> ShapeClass {
+        ShapeClass::of(self.m, self.k, self.n)
+    }
+
+    /// Human-readable label, e.g. `sim:m6n6k8:d:s6`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}:{}:{}:s{}",
+            self.backend,
+            self.class().label(),
+            if self.complex { "z" } else { "d" },
+            self.splits
+        )
+    }
+}
+
+/// One compiled batched artifact: the per-bucket program state shared
+/// by every submission with the same [`ArtifactKey`].
+#[derive(Clone, Debug)]
+pub struct DeviceArtifact {
+    /// The identity this artifact was compiled for.
+    pub key: ArtifactKey,
+    /// Anti-diagonal slice weights (`d < splits` retained), fixed at
+    /// compile time.
+    pub weights: Vec<f64>,
+    /// Effective kernel configuration the submission executes under —
+    /// the same one the sequential host path resolves for this shape,
+    /// so batched results stay bit-identical by construction.
+    pub ecfg: KernelConfig,
+    /// Where the blocking constants came from (`default` / `pretuned` /
+    /// `cache`) — the PEAK `tuned` column's input.
+    pub tuned: &'static str,
+}
+
+/// Hit/miss/eviction counters of the artifact cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArtifactCacheStats {
+    /// Submissions served by an already-compiled artifact.
+    pub hits: u64,
+    /// Submissions that had to compile a fresh artifact.
+    pub misses: u64,
+    /// Artifacts evicted to keep the cache at capacity.
+    pub evictions: u64,
+}
+
+struct Entry {
+    artifact: Arc<DeviceArtifact>,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<ArtifactKey, Entry>,
+    /// Monotonic use counter — the LRU clock (deterministic, unlike
+    /// wall time, and immune to equal-timestamp ties).
+    tick: u64,
+    stats: ArtifactCacheStats,
+}
+
+/// Bounded, content-addressed cache of compiled batched artifacts with
+/// LRU eviction.
+pub struct ArtifactCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+}
+
+impl ArtifactCache {
+    /// Empty cache holding at most `capacity` artifacts (clamped to
+    /// ≥ 1 so a misconfigured zero can never wedge compilation).
+    pub fn new(capacity: usize) -> Self {
+        ArtifactCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+                stats: ArtifactCacheStats::default(),
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Fetch the artifact for `key`, compiling it with `compile` on a
+    /// miss (evicting the least-recently-used entry when full).
+    /// Returns the artifact and whether it was a cache hit.
+    pub fn get_or_compile(
+        &self,
+        key: ArtifactKey,
+        compile: impl FnOnce() -> DeviceArtifact,
+    ) -> (Arc<DeviceArtifact>, bool) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.map.get_mut(&key) {
+            e.last_used = tick;
+            inner.stats.hits += 1;
+            return (e.artifact.clone(), true);
+        }
+        inner.stats.misses += 1;
+        let artifact = Arc::new(compile());
+        if inner.map.len() >= self.capacity {
+            if let Some(&evict) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k)
+            {
+                inner.map.remove(&evict);
+                inner.stats.evictions += 1;
+            }
+        }
+        inner.map.insert(
+            key,
+            Entry {
+                artifact: artifact.clone(),
+                last_used: tick,
+            },
+        );
+        (artifact, false)
+    }
+
+    /// Counters snapshot.
+    pub fn stats(&self) -> ArtifactCacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Artifacts currently resident.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// Whether nothing has been compiled yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(m: usize, splits: u32) -> ArtifactKey {
+        ArtifactKey {
+            m,
+            k: 64,
+            n: 64,
+            complex: false,
+            splits,
+            backend: "sim",
+        }
+    }
+
+    fn artifact(k: ArtifactKey) -> DeviceArtifact {
+        DeviceArtifact {
+            key: k,
+            weights: vec![1.0; k.splits as usize],
+            ecfg: KernelConfig::default(),
+            tuned: "default",
+        }
+    }
+
+    #[test]
+    fn hits_misses_and_identity() {
+        let c = ArtifactCache::new(8);
+        assert!(c.is_empty());
+        let (a1, hit1) = c.get_or_compile(key(64, 6), || artifact(key(64, 6)));
+        let (a2, hit2) = c.get_or_compile(key(64, 6), || panic!("must not recompile"));
+        assert!(!hit1 && hit2);
+        assert!(Arc::ptr_eq(&a1, &a2), "hits serve the same compiled artifact");
+        assert_eq!(c.stats(), ArtifactCacheStats { hits: 1, misses: 1, evictions: 0 });
+        assert_eq!(c.len(), 1);
+        // a different split count is a different program
+        let (_, hit3) = c.get_or_compile(key(64, 7), || artifact(key(64, 7)));
+        assert!(!hit3);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_entry() {
+        let c = ArtifactCache::new(2);
+        c.get_or_compile(key(32, 6), || artifact(key(32, 6)));
+        c.get_or_compile(key(64, 6), || artifact(key(64, 6)));
+        // touch 32 so 64 is now the LRU entry
+        c.get_or_compile(key(32, 6), || panic!("hit expected"));
+        c.get_or_compile(key(128, 6), || artifact(key(128, 6)));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 1);
+        // 32 survived, 64 was evicted and recompiles
+        c.get_or_compile(key(32, 6), || panic!("survivor must still hit"));
+        let (_, hit) = c.get_or_compile(key(64, 6), || artifact(key(64, 6)));
+        assert!(!hit, "evicted artifact recompiles");
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_and_labels_render() {
+        let c = ArtifactCache::new(0);
+        assert_eq!(c.capacity(), 1);
+        let k = ArtifactKey {
+            m: 100,
+            k: 256,
+            n: 64,
+            complex: true,
+            splits: 6,
+            backend: "sim",
+        };
+        assert_eq!(k.label(), format!("sim:{}:z:s6", k.class().label()));
+    }
+}

@@ -1,0 +1,32 @@
+//! Batched device execution pipeline.
+//!
+//! The seed offload path is strictly call-at-a-time: every routed GEMM
+//! pays its own admission, transfer, and submission overhead, which is
+//! exactly the per-call cost the paper's emulation amortises away on
+//! real accelerators.  This subsystem gives the batch engine a device
+//! path with the same amortisation story, in three pieces:
+//!
+//! * [`artifact`] — one compiled artifact per engine bucket
+//!   (shape × mode × splits × backend) executing **all** members' slice
+//!   products in a single submission, cached content-addressed with LRU
+//!   eviction ([`ArtifactCache`]).
+//! * [`staging`] — an async H2D staging pipeline ([`run_staged`]):
+//!   split/pack of bucket *k+1* overlaps execution of bucket *k*,
+//!   with bounded buffers and backpressure.
+//! * [`throughput`] — measured-throughput routing input
+//!   ([`ThroughputTracker`]): per-site EWMAs of observed host vs device
+//!   flop/s and bytes/s feed `RoutingPolicy::decide`, demoting the
+//!   static `perfmodel` tables to a cold-start prior.
+//!
+//! Everything here runs fully against the `sim` backend (which computes
+//! through the host kernels), so the whole pipeline is CI-testable
+//! today; the PJRT backend reports batched submission as typed
+//! `Unimplemented` and falls back per-call.
+
+pub mod artifact;
+pub mod staging;
+pub mod throughput;
+
+pub use artifact::{ArtifactCache, ArtifactCacheStats, ArtifactKey, DeviceArtifact};
+pub use staging::{run_staged, StageTiming, StagingStats};
+pub use throughput::{SiteThroughput, ThroughputTracker, FLIP_MARGIN, MIN_SAMPLES};

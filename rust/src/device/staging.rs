@@ -1,0 +1,206 @@
+//! Async H2D staging pipeline: overlap bucket *k+1*'s split/pack with
+//! bucket *k*'s execution.
+//!
+//! The engine's flush hands this module the ordered list of device
+//! buckets; a dedicated staging thread runs the (CPU-bound) Ozaki
+//! split/pack — the emulation's host-to-device preparation — and feeds
+//! staged buckets through a bounded channel to the caller's thread,
+//! which executes submissions in order.  The channel bound
+//! ([`crate::resilience::OffloadConfig::staging_depth`], `[offload]
+//! staging_depth`) is the backpressure: the stager blocks once `depth`
+//! buckets are prepared-but-unexecuted, so staging buffers stay bounded
+//! no matter how deep the flush is.
+//!
+//! Determinism contract: the execute callback runs on the *calling*
+//! thread, strictly in item order — fault-injection draws and
+//! per-member fallback decisions therefore happen in the same order as
+//! the sequential path, and results are bit-identical regardless of
+//! staging interleaving.  A panic inside a stage callback is caught and
+//! surfaced to the execute callback as an `Err(message)` for that item;
+//! later items still stage and execute.
+//!
+//! Per-item [`StageTiming`] separates time spent staging from time the
+//! executor spent *waiting* on the stager: staging time not waited on
+//! is transfer/compute overlap, the quantity `BENCH_device.json`
+//! reports.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::sync_channel;
+use std::time::Instant;
+
+use crate::kernels::int8::panic_message;
+
+/// Where one item's staging time went, as seen by the executor.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageTiming {
+    /// Nanoseconds the staging thread spent preparing this item.
+    pub stage_ns: u64,
+    /// Nanoseconds the executor blocked waiting for this item.
+    pub wait_ns: u64,
+}
+
+impl StageTiming {
+    /// Staging nanoseconds hidden behind execution of earlier items —
+    /// the overlap the pipeline exists to create.
+    pub fn overlap_ns(&self) -> u64 {
+        self.stage_ns.saturating_sub(self.wait_ns)
+    }
+}
+
+/// Aggregate staging counters for one flush.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StagingStats {
+    /// Items staged (successfully or not).
+    pub staged: u64,
+    /// Total staging-thread nanoseconds.
+    pub stage_ns: u64,
+    /// Total executor-side wait nanoseconds.
+    pub wait_ns: u64,
+}
+
+impl StagingStats {
+    /// Total staging nanoseconds hidden behind execution.
+    pub fn overlap_ns(&self) -> u64 {
+        self.stage_ns.saturating_sub(self.wait_ns)
+    }
+}
+
+/// Run `items` through a two-stage pipeline: `stage` on a dedicated
+/// thread (at most `depth` items ahead of execution), `exec` on the
+/// calling thread in item order.  A staging panic reaches `exec` as
+/// `Err(panic message)` for that item.  Returns the per-item results
+/// and the flush's aggregate [`StagingStats`].
+pub fn run_staged<I, S, R>(
+    depth: usize,
+    items: Vec<I>,
+    mut stage: impl FnMut(I) -> S + Send,
+    mut exec: impl FnMut(Result<S, String>, StageTiming) -> R,
+) -> (Vec<R>, StagingStats)
+where
+    I: Send,
+    S: Send,
+{
+    let mut results = Vec::with_capacity(items.len());
+    let mut stats = StagingStats::default();
+    let count = items.len();
+    std::thread::scope(|scope| {
+        let (tx, rx) = sync_channel::<(Result<S, String>, u64)>(depth.max(1));
+        scope.spawn(move || {
+            for item in items {
+                let t0 = Instant::now();
+                let staged = catch_unwind(AssertUnwindSafe(|| stage(item)))
+                    .map_err(|p| format!("staging panicked: {}", panic_message(&*p)));
+                let stage_ns = t0.elapsed().as_nanos() as u64;
+                if tx.send((staged, stage_ns)).is_err() {
+                    // executor gone (it never drops early today; belt
+                    // and braces against future early exits)
+                    return;
+                }
+            }
+        });
+        for _ in 0..count {
+            let t0 = Instant::now();
+            let Ok((staged, stage_ns)) = rx.recv() else {
+                break;
+            };
+            let wait_ns = t0.elapsed().as_nanos() as u64;
+            stats.staged += 1;
+            stats.stage_ns += stage_ns;
+            stats.wait_ns += wait_ns;
+            results.push(exec(staged, StageTiming { stage_ns, wait_ns }));
+        }
+    });
+    (results, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_in_item_order_on_the_calling_thread() {
+        let caller = std::thread::current().id();
+        let (results, stats) = run_staged(
+            2,
+            vec![1u32, 2, 3, 4, 5],
+            |i| i * 10,
+            |staged, _| {
+                assert_eq!(std::thread::current().id(), caller);
+                staged.unwrap()
+            },
+        );
+        assert_eq!(results, vec![10, 20, 30, 40, 50]);
+        assert_eq!(stats.staged, 5);
+    }
+
+    #[test]
+    fn staging_panic_reaches_exec_as_an_error_and_later_items_survive() {
+        let (results, stats) = run_staged(
+            1,
+            vec![1u32, 2, 3],
+            |i| {
+                if i == 2 {
+                    panic!("boom on {i}");
+                }
+                i
+            },
+            |staged, _| staged,
+        );
+        assert_eq!(results[0], Ok(1));
+        let err = results[1].as_ref().unwrap_err();
+        assert!(
+            err.contains("staging panicked") && err.contains("boom on 2"),
+            "got: {err}"
+        );
+        assert_eq!(results[2], Ok(3), "items after a panic still stage");
+        assert_eq!(stats.staged, 3);
+    }
+
+    #[test]
+    fn backpressure_bounds_how_far_staging_runs_ahead() {
+        // With depth 1, the stager can be at most 2 items past the last
+        // executed one (1 in the channel + 1 being staged).
+        static STAGED: AtomicUsize = AtomicUsize::new(0);
+        static EXECED: AtomicUsize = AtomicUsize::new(0);
+        STAGED.store(0, Ordering::SeqCst);
+        EXECED.store(0, Ordering::SeqCst);
+        let (_, stats) = run_staged(
+            1,
+            (0..16usize).collect(),
+            |i| {
+                STAGED.fetch_add(1, Ordering::SeqCst);
+                i
+            },
+            |staged, _| {
+                // slow executor: give the stager every chance to race ahead
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                let ahead =
+                    STAGED.load(Ordering::SeqCst) - EXECED.fetch_add(1, Ordering::SeqCst) - 1;
+                assert!(ahead <= 3, "stager ran {ahead} items ahead of depth-1 bound");
+                staged.unwrap()
+            },
+        );
+        assert_eq!(stats.staged, 16);
+    }
+
+    #[test]
+    fn overlap_accounting_subtracts_executor_waits() {
+        let t = StageTiming {
+            stage_ns: 1000,
+            wait_ns: 400,
+        };
+        assert_eq!(t.overlap_ns(), 600);
+        let fully_waited = StageTiming {
+            stage_ns: 300,
+            wait_ns: 900,
+        };
+        assert_eq!(fully_waited.overlap_ns(), 0, "saturating, never negative");
+        let s = StagingStats {
+            staged: 2,
+            stage_ns: 1300,
+            wait_ns: 1300,
+        };
+        assert_eq!(s.overlap_ns(), 0);
+    }
+}

@@ -1,0 +1,250 @@
+//! Measured-throughput routing input: per-site EWMAs of observed host
+//! vs device throughput.
+//!
+//! The static `perfmodel` tables predict what a *modelled* GPU would
+//! do; this tracker records what the attached backend and the host
+//! SIMD path *actually* delivered, per call site, as exponentially
+//! weighted moving averages of flop/s and bytes/s.  Routing
+//! ([`crate::coordinator::RoutingPolicy::decide`]) consults it as its
+//! last, lazy predicate: a site whose measured host throughput clearly
+//! beats the device's flips to [`crate::coordinator::OffloadDecision::
+//! HostMeasured`], with the static tables demoted to cold-start priors.
+//!
+//! Flip hygiene: a site only flips once **both** routes have at least
+//! [`MIN_SAMPLES`] observations (an EWMA needs warm-up — deciding off
+//! one noisy measurement would thrash), and only when the host is at
+//! least 2× faster than the device estimate (hysteresis against
+//! measurement noise; the sim backend computes through the host
+//! kernels, so without the margin every covered call would flip).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::coordinator::CallSiteId;
+
+/// Observations required on *each* route before measured routing may
+/// override the device-first default.
+pub const MIN_SAMPLES: u64 = 3;
+
+/// Host must be predicted at least this many times faster than the
+/// device before a site flips to measured-host routing.
+pub const FLIP_MARGIN: f64 = 2.0;
+
+/// EWMA throughput state of one call site.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SiteThroughput {
+    /// Host flop/s EWMA (0 until the first host observation).
+    pub host_flops_s: f64,
+    /// Host bytes/s EWMA.
+    pub host_bytes_s: f64,
+    /// Device flop/s EWMA.
+    pub device_flops_s: f64,
+    /// Device bytes/s EWMA.
+    pub device_bytes_s: f64,
+    /// Host observations recorded.
+    pub host_samples: u64,
+    /// Device observations recorded.
+    pub device_samples: u64,
+    /// Last `advantageous` verdict (None until routing first consults
+    /// the site) — the flip detector's memory.
+    last_device: Option<bool>,
+}
+
+/// Per-site measured-throughput registry feeding the routing policy.
+pub struct ThroughputTracker {
+    /// EWMA window (observations); `alpha = 2 / (window + 1)`.
+    window: u32,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    sites: HashMap<CallSiteId, SiteThroughput>,
+    flips: u64,
+}
+
+impl ThroughputTracker {
+    /// Empty tracker with the given EWMA window
+    /// (`[offload] ewma_window`, clamped to ≥ 1).
+    pub fn new(window: u32) -> Self {
+        ThroughputTracker {
+            window: window.max(1),
+            inner: Mutex::new(Inner {
+                sites: HashMap::new(),
+                flips: 0,
+            }),
+        }
+    }
+
+    /// The configured EWMA window.
+    pub fn window(&self) -> u32 {
+        self.window
+    }
+
+    fn alpha(&self) -> f64 {
+        2.0 / (self.window as f64 + 1.0)
+    }
+
+    /// Record one observation: `flops` of work (the emulated slice-pair
+    /// work, not raw GEMM FLOPs, so predictions stay comparable with
+    /// the routing threshold) and `bytes` of operand traffic served in
+    /// `secs`, on the device (`device = true`) or the host SIMD path.
+    /// Non-positive work or time is ignored (degenerate measurements
+    /// would poison the averages).
+    pub fn record(&self, site: CallSiteId, device: bool, flops: f64, bytes: f64, secs: f64) {
+        if secs <= 0.0 || flops <= 0.0 {
+            return;
+        }
+        let alpha = self.alpha();
+        let mut inner = self.inner.lock().unwrap();
+        let s = inner.sites.entry(site).or_default();
+        let ewma = |old: f64, fresh: f64| {
+            if old == 0.0 {
+                fresh
+            } else {
+                alpha * fresh + (1.0 - alpha) * old
+            }
+        };
+        if device {
+            s.device_flops_s = ewma(s.device_flops_s, flops / secs);
+            s.device_bytes_s = ewma(s.device_bytes_s, bytes / secs);
+            s.device_samples += 1;
+        } else {
+            s.host_flops_s = ewma(s.host_flops_s, flops / secs);
+            s.host_bytes_s = ewma(s.host_bytes_s, bytes / secs);
+            s.host_samples += 1;
+        }
+    }
+
+    /// Snapshot one site's EWMA state (None until an observation).
+    pub fn snapshot(&self, site: CallSiteId) -> Option<SiteThroughput> {
+        self.inner.lock().unwrap().sites.get(site).copied()
+    }
+
+    /// Route flips the measured predicate has caused: transitions of a
+    /// site's verdict between device-advantageous and host-faster.
+    pub fn flips(&self) -> u64 {
+        self.inner.lock().unwrap().flips
+    }
+
+    /// The routing policy's measured predicate: is the device (still)
+    /// the right route for `flops` of work and `bytes` of traffic at
+    /// `site`?  `device_prior_secs` is the static-perfmodel estimate,
+    /// used until the device has [`MIN_SAMPLES`] of its own.  A host
+    /// with no warm measurement answers `true` — the seed behaviour
+    /// (device-first) is the cold-start policy.
+    pub fn advantageous(
+        &self,
+        site: CallSiteId,
+        flops: f64,
+        bytes: f64,
+        device_prior_secs: f64,
+    ) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let snap = *inner.sites.entry(site).or_default();
+        let predict = |flops_s: f64, bytes_s: f64| -> Option<f64> {
+            if flops_s <= 0.0 {
+                return None;
+            }
+            // Roofline-style: the route takes as long as its slower of
+            // compute and traffic.
+            let compute = flops / flops_s;
+            let traffic = if bytes_s > 0.0 { bytes / bytes_s } else { 0.0 };
+            Some(compute.max(traffic))
+        };
+        let verdict = match predict(snap.host_flops_s, snap.host_bytes_s) {
+            None => true, // cold host: device-first seed behaviour
+            Some(_) if snap.host_samples < MIN_SAMPLES => true,
+            Some(host_secs) => {
+                let device_secs = if snap.device_samples >= MIN_SAMPLES {
+                    predict(snap.device_flops_s, snap.device_bytes_s)
+                        .unwrap_or(device_prior_secs)
+                } else {
+                    device_prior_secs
+                };
+                !(host_secs * FLIP_MARGIN < device_secs)
+            }
+        };
+        if snap.last_device.is_some_and(|prev| prev != verdict) {
+            inner.flips += 1;
+        }
+        if let Some(s) = inner.sites.get_mut(site) {
+            s.last_device = Some(verdict);
+        }
+        verdict
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SITE: CallSiteId = "throughput.rs:test";
+
+    #[test]
+    fn cold_sites_stay_device_first() {
+        let t = ThroughputTracker::new(16);
+        assert!(t.advantageous(SITE, 1e9, 1e6, 1e-3));
+        assert_eq!(t.flips(), 0);
+        assert!(t.snapshot(SITE).is_some(), "consultation creates the entry");
+    }
+
+    #[test]
+    fn ewma_warms_up_and_converges() {
+        let t = ThroughputTracker::new(3); // alpha = 0.5
+        t.record(SITE, false, 100.0, 0.0, 1.0); // 100 flop/s
+        assert_eq!(t.snapshot(SITE).unwrap().host_flops_s, 100.0);
+        t.record(SITE, false, 300.0, 0.0, 1.0); // EWMA: 0.5*300 + 0.5*100
+        let s = t.snapshot(SITE).unwrap();
+        assert_eq!(s.host_flops_s, 200.0);
+        assert_eq!(s.host_samples, 2);
+        // degenerate observations are ignored
+        t.record(SITE, false, 0.0, 0.0, 1.0);
+        t.record(SITE, false, 100.0, 0.0, 0.0);
+        assert_eq!(t.snapshot(SITE).unwrap().host_samples, 2);
+    }
+
+    #[test]
+    fn warm_fast_host_flips_and_counts_the_transition() {
+        let t = ThroughputTracker::new(16);
+        // cold consultation: device-first baseline verdict
+        assert!(t.advantageous(SITE, 1e9, 8e6, 1.0));
+        // warm both routes past MIN_SAMPLES: host 10x device throughput
+        for _ in 0..MIN_SAMPLES {
+            t.record(SITE, false, 1e9, 8e6, 1e-3); // host: 1e12 flop/s
+            t.record(SITE, true, 1e9, 8e6, 1e-2); // device: 1e11 flop/s
+        }
+        // host predicts 1e-3 s vs device 1e-2 s: the 2x margin is
+        // cleared, the site flips host-side, and the flip is counted.
+        assert!(!t.advantageous(SITE, 1e9, 8e6, 1.0));
+        assert_eq!(t.flips(), 1);
+        assert!(!t.advantageous(SITE, 1e9, 8e6, 1.0), "verdict is stable once warm");
+        assert_eq!(t.flips(), 1, "a stable verdict is not re-counted");
+    }
+
+    #[test]
+    fn prior_serves_until_device_is_warm() {
+        let t = ThroughputTracker::new(16);
+        for _ in 0..MIN_SAMPLES {
+            t.record(SITE, false, 1e9, 0.0, 1e-3); // host: 1e12 flop/s
+        }
+        // device unmeasured: a fast prior keeps the call on the device
+        assert!(t.advantageous(SITE, 1e9, 0.0, 1e-4));
+        // ... and a slow prior flips it host-side
+        assert!(!t.advantageous(SITE, 1e9, 0.0, 1.0));
+        assert_eq!(t.flips(), 1, "the verdict transition is counted");
+    }
+
+    #[test]
+    fn comparable_routes_stay_on_the_device() {
+        // The sim backend computes through the host kernels: measured
+        // throughput is ~equal, so the 2x margin must keep the call on
+        // the device (the seed routing behaviour).
+        let t = ThroughputTracker::new(16);
+        for _ in 0..MIN_SAMPLES {
+            t.record(SITE, false, 1e9, 8e6, 1.00e-3);
+            t.record(SITE, true, 1e9, 8e6, 1.05e-3);
+        }
+        assert!(t.advantageous(SITE, 1e9, 8e6, 1.0));
+        assert_eq!(t.flips(), 0);
+    }
+}

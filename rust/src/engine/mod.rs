@@ -78,6 +78,12 @@ pub struct BatchConfig {
     /// (`run.batch.max_bytes`, ≥ 1; a single request larger than this
     /// flushes immediately after enqueue).
     pub max_bytes: usize,
+    /// True when `max_pending` was set explicitly (config file, env, or
+    /// a caller-constructed config).  An explicit value always wins
+    /// over the autotuner's persisted `[batch] max_pending` advisory,
+    /// which [`crate::coordinator::Dispatcher::batch`] consults only
+    /// when this is false and `run.tune` is `read`/`auto`.
+    pub max_pending_explicit: bool,
 }
 
 impl Default for BatchConfig {
@@ -87,6 +93,7 @@ impl Default for BatchConfig {
             // 256 MiB of queued operands — roomy for thousands of the
             // paper's small per-point GEMMs, tiny next to one large run.
             max_bytes: 256 << 20,
+            max_pending_explicit: false,
         }
     }
 }
@@ -105,6 +112,7 @@ impl BatchConfig {
             |&n| n >= 1,
         ) {
             cfg.max_pending = n;
+            cfg.max_pending_explicit = true;
         }
         if let Some(n) = crate::util::env::parse_env_checked::<usize>(
             "OZACCEL_BATCH_MAX_BYTES",
@@ -122,6 +130,7 @@ impl BatchConfig {
         BatchConfig {
             max_pending: self.max_pending.max(1),
             max_bytes: self.max_bytes.max(1),
+            max_pending_explicit: self.max_pending_explicit,
         }
     }
 }
@@ -225,6 +234,25 @@ pub struct BatchStats {
     /// Blocking submits whose deadline expired (ticket settled
     /// [`Error::Busy`]).
     pub deadline_expiries: u64,
+    /// Offloaded buckets executed as **one batched device submission**
+    /// each ([`crate::runtime::Runtime::batched_sweep`]).
+    pub device_buckets: u64,
+    /// Members served by a batched device submission.
+    pub device_members: u64,
+    /// Members of device buckets that fell back to the (bit-identical)
+    /// host fused path after admission faults; their surviving bucket
+    /// mates kept their device slots.
+    pub device_fallback_members: u64,
+    /// Operand bytes packed by the staging pipeline for device buckets.
+    pub device_bytes_staged: u64,
+    /// Staging-thread nanoseconds spent preparing device buckets.
+    pub device_stage_ns: u64,
+    /// Nanoseconds spent executing batched device submissions.
+    pub device_exec_ns: u64,
+    /// Staging nanoseconds hidden behind execution of earlier buckets
+    /// (`stage − wait`, saturating) — the transfer/compute overlap the
+    /// staging pipeline creates.
+    pub device_overlap_ns: u64,
 }
 
 /// The batched asynchronous execution engine — one batch scope over a

@@ -21,7 +21,18 @@
 //! * operands are packed **once per flush**: a shared `Arc` submitted
 //!   under many members (the contour loop's shared factor) prepares a
 //!   single panel set, counted as engine-level pack reuse on top of
-//!   whatever the content-addressed panel cache already catches.
+//!   whatever the content-addressed panel cache already catches;
+//! * offload-routed buckets become **batched device submissions** when
+//!   the attached runtime supports them
+//!   ([`Dispatcher::batched_device`]): all members' slice products run
+//!   as one submission per bucket through a compiled per-bucket
+//!   artifact, with bucket *k+1*'s split/pack staged on a dedicated
+//!   thread while bucket *k* executes ([`crate::device`]).  Admission
+//!   (retry/backoff/breaker, where injected device faults fire) stays
+//!   per member, so a failing member falls back to the host
+//!   bit-identically while its bucket-mates keep their device slots.
+//!   Runtimes without batched submissions (PJRT) keep the per-call
+//!   device path via `direct_all`.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
@@ -31,27 +42,32 @@ use super::bucket::{bucketize, BucketKey};
 use super::queue::{Payload, Request};
 use super::BatchStats;
 use crate::coordinator::{
-    BatchCallInfo, CallMeasurement, CallSiteId, Dispatcher, HostCallInfo, HostKernel,
-    OffloadDecision,
+    BatchCallInfo, CallMeasurement, CallSiteId, DeviceCallInfo, Dispatcher, HostCallInfo,
+    HostKernel, OffloadAdmit, OffloadDecision,
 };
+use crate::device::{run_staged, ArtifactKey, DeviceArtifact, StageTiming};
 use crate::error::{Error, Result};
 use crate::kernels::{
     fused_ozaki_sweep_many_isolated, is_wide, panel_cache, KernelConfig, Panels, SweepSpec, MR_I8,
 };
-use crate::linalg::{zcombine, Mat};
+use crate::linalg::{zcombine, Mat, ZMat};
 use crate::ozaki::{diagonal_weights, prepare_a, prepare_b, unscale, ComputeMode};
 use crate::perfmodel::gemm_flops;
 
 /// Execute a drained queue: coalesce, run, settle every slot.
+/// Device-routed buckets are collected first and executed at the end
+/// through the staged pipeline, so their split/pack can overlap each
+/// other's submissions.
 pub(crate) fn execute(
     disp: &Dispatcher,
     reqs: Vec<Request>,
     stats: &Mutex<BatchStats>,
 ) -> Result<()> {
+    let mut device: Vec<DeviceBucket> = Vec::new();
     for (key, members) in bucketize(reqs) {
-        execute_bucket(disp, key, members, stats)?;
+        execute_bucket(disp, key, members, stats, &mut device)?;
     }
-    Ok(())
+    device_flush(disp, device, stats)
 }
 
 /// Prepared panels of one operand (A-side or B-side), memoized per
@@ -93,6 +109,7 @@ fn execute_bucket(
     key: BucketKey,
     members: Vec<Request>,
     stats: &Mutex<BatchStats>,
+    device_out: &mut Vec<DeviceBucket>,
 ) -> Result<()> {
     // Degenerate shapes (any dim zero) short-circuit inside the
     // dispatcher itself; re-issue them directly so the fused prepare
@@ -145,12 +162,28 @@ fn execute_bucket(
             }
             Some(s) => s,
         };
-        let decision = disp.route(mode, key.m, key.k, key.n);
+        // One routing consultation per group, attributed to the lead
+        // member's site (mirroring the per-(site, bucket) governor
+        // amortisation above) — it is the lead site's measured
+        // throughput EWMAs the decision consults.
+        let decision = disp.route(group[0].site, mode, key.m, key.k, key.n);
         if decision.offloaded() {
-            // Offload-routed shapes keep the per-call device path —
-            // which now includes retry/fallback, so a failed-over
-            // member settles through `dgemm_mode_at`'s own accounting
-            // and cannot poison its bucket-mates.
+            if disp.batched_device().is_some() {
+                // Batched device path: defer the whole group to the
+                // flush-level staged pipeline — one compiled artifact
+                // and ONE submission per bucket.
+                device_out.push(DeviceBucket {
+                    key,
+                    mode,
+                    splits,
+                    group,
+                });
+                continue;
+            }
+            // Per-call device path (PJRT) — which includes
+            // retry/fallback, so a failed-over member settles through
+            // `dgemm_mode_at`'s own accounting and cannot poison its
+            // bucket-mates.
             direct_all(disp, group, stats)?;
             continue;
         }
@@ -366,6 +399,15 @@ fn fused_real(
                 continue;
             }
         };
+        // Host observation for the measured-throughput router: the
+        // member's share of the fused run is a clean host sample.
+        // Degraded groups are excluded, mirroring the sequential
+        // hygiene (`offloaded || !fell_back`): routing artifacts of a
+        // sick device must not steer the healthy-state comparison.
+        if !degraded {
+            let (work, bytes) = Dispatcher::routing_work(mode, key.m, key.k, key.n);
+            disp.throughput().record(req.site, false, work, bytes, share);
+        }
         let batch = rec.batch_info(req.site, memo.hits_by_member[mi]);
         let host = rec.host_info();
         let fsplits = fin.mode.splits().unwrap_or(0);
@@ -524,6 +566,15 @@ fn fused_complex(
                 continue;
             }
         };
+        // Host observation for the measured-throughput router: four
+        // real components' work over 16-byte elements, like the
+        // dispatcher's fused complex host path.  Degraded groups are
+        // excluded, mirroring the sequential hygiene.
+        if !degraded {
+            let (work, bytes) = Dispatcher::routing_work(mode, key.m, key.k, key.n);
+            disp.throughput()
+                .record(req.site, false, 4.0 * work, 2.0 * bytes, share);
+        }
         // PEAK accounting keeps the 4-real-GEMM decomposition, exactly
         // like the dispatcher's fused complex host path.
         let batch = rec.batch_info(req.site, reuse);
@@ -552,5 +603,614 @@ fn fused_complex(
         slot.fill(Ok(fin.result));
     }
     note_fused(stats, group.len(), reuse_total);
+    Ok(())
+}
+
+/// One engine bucket routed to the device: deferred to the flush-level
+/// staged pipeline and executed as a single batched submission.
+struct DeviceBucket {
+    key: BucketKey,
+    mode: ComputeMode,
+    splits: u32,
+    group: Vec<Request>,
+}
+
+/// Operand handles of one device bucket, shipped to the staging thread
+/// (cheap `Arc` clones — the tickets themselves never leave the
+/// executor, so a staging panic can lose panels but never a slot).
+enum StageOperands {
+    Real(Vec<(Arc<Mat<f64>>, Arc<Mat<f64>>)>),
+    Complex(Vec<(Arc<ZMat>, Arc<ZMat>)>),
+}
+
+/// What the staging thread needs to prepare one bucket.
+struct StageInput {
+    key: BucketKey,
+    splits: u32,
+    ops: StageOperands,
+}
+
+impl StageInput {
+    fn of(bucket: &DeviceBucket) -> Self {
+        let ops = if bucket.key.complex {
+            StageOperands::Complex(
+                bucket
+                    .group
+                    .iter()
+                    .map(|r| {
+                        let Payload::Complex { a, b, .. } = &r.payload else {
+                            unreachable!("complex bucket holds complex payloads");
+                        };
+                        (a.clone(), b.clone())
+                    })
+                    .collect(),
+            )
+        } else {
+            StageOperands::Real(
+                bucket
+                    .group
+                    .iter()
+                    .map(|r| {
+                        let Payload::Real { a, b, .. } = &r.payload else {
+                            unreachable!("real bucket holds real payloads");
+                        };
+                        (a.clone(), b.clone())
+                    })
+                    .collect(),
+            )
+        };
+        StageInput {
+            key: bucket.key,
+            splits: bucket.splits,
+            ops,
+        }
+    }
+}
+
+/// One staged bucket: the compiled artifact plus every member's packed
+/// panels, ready for a single submission.
+struct StagedBucket {
+    artifact: Arc<DeviceArtifact>,
+    artifact_hit: bool,
+    /// Per member, the component products' prepared (A, B) panel pairs
+    /// in execution order: one pair for real members, the sequential
+    /// path's rr/ii/ri/ir four for complex members.
+    components: Vec<Vec<(Prepared, Prepared)>>,
+    /// Per-member pack-memo hits (engine-level reuse).
+    reuse: Vec<u64>,
+    /// Bytes of freshly packed panel data — the staged H2D traffic.
+    bytes: u64,
+}
+
+/// Packed panel + exponent bytes of one freshly prepared operand.
+fn prepared_bytes(p: &Prepared) -> u64 {
+    p.0.bytes() as u64 + (p.1.len() * std::mem::size_of::<i32>()) as u64
+}
+
+/// Staging-thread half of the device pipeline: fetch/compile the
+/// bucket's artifact and split/pack every member's operands, with the
+/// same per-flush `Arc`-identity memoization as the fused host paths.
+/// The artifact carries the effective kernel configuration the
+/// sequential path would resolve for this shape, so everything staged
+/// here feeds a bit-identical execution.
+fn stage_bucket(disp: &Dispatcher, input: StageInput) -> StagedBucket {
+    let key = input.key;
+    let splits = input.splits;
+    let akey = ArtifactKey {
+        m: key.m,
+        k: key.k,
+        n: key.n,
+        complex: key.complex,
+        splits,
+        backend: "sim",
+    };
+    let (artifact, artifact_hit) = disp.artifacts().get_or_compile(akey, || {
+        let (ecfg, tuned): (KernelConfig, &'static str) =
+            disp.selector().config_for(key.m, key.k, key.n);
+        DeviceArtifact {
+            key: akey,
+            weights: diagonal_weights(splits),
+            ecfg,
+            tuned,
+        }
+    });
+    let members = match &input.ops {
+        StageOperands::Real(v) => v.len(),
+        StageOperands::Complex(v) => v.len(),
+    };
+    let mut memo = PackMemo {
+        hits_by_member: vec![0; members],
+        ..Default::default()
+    };
+    let mut bytes = 0u64;
+    let ecfg = &artifact.ecfg;
+    let mut components: Vec<Vec<(Prepared, Prepared)>> = Vec::with_capacity(members);
+    match &input.ops {
+        StageOperands::Real(ops) => {
+            for (mi, (a, b)) in ops.iter().enumerate() {
+                let pa = memo.prepare(mi, Arc::as_ptr(a) as usize, false, false, || {
+                    let p = prepare_a(a, splits, ecfg);
+                    bytes += prepared_bytes(&p);
+                    p
+                });
+                let pb = memo.prepare(mi, Arc::as_ptr(b) as usize, true, false, || {
+                    let p = prepare_b(b, splits, ecfg);
+                    bytes += prepared_bytes(&p);
+                    p
+                });
+                components.push(vec![(pa, pb)]);
+            }
+        }
+        StageOperands::Complex(ops) => {
+            for (mi, (a, b)) in ops.iter().enumerate() {
+                let (aaddr, baddr) = (Arc::as_ptr(a) as usize, Arc::as_ptr(b) as usize);
+                let ar = memo.prepare(mi, aaddr, false, false, || {
+                    let p = prepare_a(&a.re(), splits, ecfg);
+                    bytes += prepared_bytes(&p);
+                    p
+                });
+                let ai = memo.prepare(mi, aaddr, false, true, || {
+                    let p = prepare_a(&a.im(), splits, ecfg);
+                    bytes += prepared_bytes(&p);
+                    p
+                });
+                let br = memo.prepare(mi, baddr, true, false, || {
+                    let p = prepare_b(&b.re(), splits, ecfg);
+                    bytes += prepared_bytes(&p);
+                    p
+                });
+                let bi = memo.prepare(mi, baddr, true, true, || {
+                    let p = prepare_b(&b.im(), splits, ecfg);
+                    bytes += prepared_bytes(&p);
+                    p
+                });
+                components.push(vec![
+                    (ar.clone(), br.clone()),
+                    (ai.clone(), bi.clone()),
+                    (ar, bi),
+                    (ai, br),
+                ]);
+            }
+        }
+    }
+    StagedBucket {
+        artifact,
+        artifact_hit,
+        components,
+        reuse: memo.hits_by_member,
+        bytes,
+    }
+}
+
+/// Flush-level device pipeline: stage bucket *k+1* on a dedicated
+/// thread while bucket *k* executes on this one, each bucket as one
+/// batched submission.  The staging depth — and therefore the bound on
+/// prepared-but-unexecuted buffers — is `[offload] staging_depth`.
+fn device_flush(
+    disp: &Dispatcher,
+    buckets: Vec<DeviceBucket>,
+    stats: &Mutex<BatchStats>,
+) -> Result<()> {
+    if buckets.is_empty() {
+        return Ok(());
+    }
+    let depth = disp.resilience().config().staging_depth;
+    // Ship operand handles to the stager; tickets stay here so every
+    // slot settles even if an item is lost to a staging panic.
+    let inputs: Vec<StageInput> = buckets.iter().map(StageInput::of).collect();
+    let mut pending = buckets.into_iter();
+    let (outcomes, sstats) = run_staged(
+        depth,
+        inputs,
+        |input| stage_bucket(disp, input),
+        |staged, timing| {
+            let bucket = pending.next().expect("one staged item per bucket");
+            match staged {
+                Ok(s) => execute_device_bucket(disp, bucket, s, timing, stats),
+                Err(msg) => {
+                    fail_all(&bucket.group, &format!("device staging failed: {msg}"));
+                    Ok(())
+                }
+            }
+        },
+    );
+    {
+        let mut st = stats.lock().unwrap();
+        st.device_stage_ns += sstats.stage_ns;
+        st.device_overlap_ns += sstats.overlap_ns();
+    }
+    for r in outcomes {
+        r?;
+    }
+    Ok(())
+}
+
+/// Fold one complex member's four component products (consumed
+/// unconditionally so later members stay aligned) into its combined
+/// result, unscaling each against its staged exponents.
+fn combine_complex(
+    staged: &StagedBucket,
+    mi: usize,
+    products: &mut std::vec::IntoIter<Result<Mat<f64>>>,
+) -> Result<ZMat> {
+    let items: Vec<Result<Mat<f64>>> = (0..4)
+        .map(|_| products.next().expect("four components per member"))
+        .collect();
+    let quad: Result<Vec<Mat<f64>>> = items.into_iter().collect();
+    quad.map(|mut v| {
+        let comps = &staged.components[mi];
+        let unscaled = |mut c: Mat<f64>, pair: &(Prepared, Prepared)| {
+            let ((_, ea), (_, eb)) = pair;
+            unscale(&mut c, ea, eb);
+            c
+        };
+        let ir = unscaled(v.pop().expect("ir"), &comps[3]);
+        let ri = unscaled(v.pop().expect("ri"), &comps[2]);
+        let ii = unscaled(v.pop().expect("ii"), &comps[1]);
+        let rr = unscaled(v.pop().expect("rr"), &comps[0]);
+        zcombine(&rr, &ii, &ri, &ir)
+    })
+}
+
+/// Execute one staged bucket: per-member admission (retry/breaker, in
+/// member order — exactly where injected device faults fire), ONE
+/// batched device submission for the admitted members, and a fused
+/// host fallback — built from the very same staged panels, so it is
+/// bit-identical to host routing by construction — for members whose
+/// admission exhausted its retry budget.
+fn execute_device_bucket(
+    disp: &Dispatcher,
+    bucket: DeviceBucket,
+    staged: StagedBucket,
+    timing: StageTiming,
+    stats: &Mutex<BatchStats>,
+) -> Result<()> {
+    let DeviceBucket {
+        key, mode, group, ..
+    } = bucket;
+    let Some(rt) = disp.batched_device() else {
+        // Routing only queues device buckets with a batched runtime
+        // attached; stay total regardless.
+        fail_all(&group, "device bucket without a batched runtime");
+        return Ok(());
+    };
+    let artifact = &staged.artifact;
+    let comps_per = if key.complex { 4 } else { 1 };
+
+    // Admission in member order: fault-injection draws and breaker
+    // accounting happen exactly as the sequential per-call path's
+    // would, so a mid-bucket fault fails exactly the member whose
+    // admission drew it.
+    let admits: Vec<OffloadAdmit> = group.iter().map(|r| disp.admit_offload(r.site)).collect();
+    let survivors: Vec<usize> = admits
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| matches!(a, OffloadAdmit::Device { .. }))
+        .map(|(i, _)| i)
+        .collect();
+    let fallbacks: Vec<usize> = admits
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| matches!(a, OffloadAdmit::Fallback { .. }))
+        .map(|(i, _)| i)
+        .collect();
+
+    // The bucket's single device submission: every admitted member's
+    // retained slice products in one execution.
+    let mut specs: Vec<SweepSpec<'_>> = Vec::with_capacity(survivors.len() * comps_per);
+    for &mi in &survivors {
+        for (pa, pb) in &staged.components[mi] {
+            specs.push(SweepSpec {
+                ap: pa.0.as_ref(),
+                bp: pb.0.as_ref(),
+                weights: &artifact.weights,
+            });
+        }
+    }
+    let mut exec_s = 0.0;
+    let mut sweep: Vec<Result<Mat<f64>>> = Vec::new();
+    let mut sweep_err: Option<String> = None;
+    if !survivors.is_empty() {
+        let t0 = Instant::now();
+        match rt.batched_sweep(&specs, &artifact.ecfg) {
+            Ok(r) => sweep = r,
+            Err(e) => sweep_err = Some(format!("batched device submission failed: {e}")),
+        }
+        exec_s = t0.elapsed().as_secs_f64();
+    }
+
+    // Bucket-level device accounting (artifact hit/miss, staged bytes,
+    // staging overlap) rides the bucket's first settled record.
+    let mut device_info = Some(DeviceCallInfo {
+        artifact_hits: staged.artifact_hit as u64,
+        artifact_misses: (!staged.artifact_hit) as u64,
+        staged_bytes: staged.bytes,
+        overlap_s: timing.overlap_ns() as f64 * 1e-9,
+    });
+    let mut lead_seen: HashSet<CallSiteId> = HashSet::new();
+    let flops = gemm_flops(key.m, key.k, key.n);
+    let (work, tbytes) = Dispatcher::routing_work(mode, key.m, key.k, key.n);
+
+    if let Some(msg) = &sweep_err {
+        // The whole submission failed (batch-level validation, not a
+        // per-member fault): the admitted members' slots carry the
+        // error; fallback members still settle host-side below.
+        for &mi in &survivors {
+            match &group[mi].payload {
+                Payload::Real { slot, .. } => slot.fill(Err(Error::Numerical(msg.clone()))),
+                Payload::Complex { slot, .. } => slot.fill(Err(Error::Numerical(msg.clone()))),
+            }
+        }
+    } else if !survivors.is_empty() {
+        let share = exec_s / survivors.len() as f64;
+        let mut products = sweep.into_iter();
+        for &mi in &survivors {
+            let req = &group[mi];
+            let retries = match &admits[mi] {
+                OffloadAdmit::Device { retries } => *retries,
+                OffloadAdmit::Fallback { .. } => unreachable!("survivors are admitted"),
+            };
+            match &req.payload {
+                Payload::Real { a, b, slot } => {
+                    let mut c = match products.next().expect("one product per real member") {
+                        Ok(c) => c,
+                        Err(e) => {
+                            slot.fill(Err(e));
+                            continue;
+                        }
+                    };
+                    let ((_, ea), (_, eb)) = &staged.components[mi][0];
+                    unscale(&mut c, ea, eb);
+                    let fin = match disp.finish_real(req.site, mode, a, b, c, req.governed) {
+                        Ok(f) => f,
+                        Err(e) => {
+                            slot.fill(Err(e));
+                            continue;
+                        }
+                    };
+                    let (gpu_s, move_s) = disp.price_offload_real(mode, a, b, &fin.result);
+                    disp.throughput().record(req.site, true, work, tbytes, share);
+                    disp.record_measurement(
+                        req.site,
+                        CallMeasurement {
+                            flops,
+                            offloaded: true,
+                            measured_s: share + fin.extra_s,
+                            modeled_gpu_s: gpu_s,
+                            modeled_move_s: move_s,
+                            splits: fin.mode.splits().unwrap_or(0),
+                            probe_s: fin.probe_s,
+                            batch: Some(BatchCallInfo {
+                                bucket: group.len() as u64,
+                                pack_reuse: staged.reuse[mi],
+                                lead: lead_seen.insert(req.site),
+                            }),
+                            device: device_info.take(),
+                            cert_checks: fin.cert_checks,
+                            cert_escalations: fin.cert_escalations,
+                            cert_fp64: fin.cert_fp64,
+                            offload_retries: retries,
+                            ..Default::default()
+                        },
+                    );
+                    slot.fill(Ok(fin.result));
+                }
+                Payload::Complex { a, b, slot } => {
+                    let c = match combine_complex(&staged, mi, &mut products) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            slot.fill(Err(e));
+                            continue;
+                        }
+                    };
+                    let fin = match disp.finish_complex(req.site, mode, a, b, c, req.governed) {
+                        Ok(f) => f,
+                        Err(e) => {
+                            slot.fill(Err(e));
+                            continue;
+                        }
+                    };
+                    let (gpu_s, move_s) = disp.price_offload_complex(mode, a, b, &fin.result);
+                    disp.throughput()
+                        .record(req.site, true, 4.0 * work, 2.0 * tbytes, share);
+                    let batch = BatchCallInfo {
+                        bucket: group.len() as u64,
+                        pack_reuse: staged.reuse[mi],
+                        lead: lead_seen.insert(req.site),
+                    };
+                    let fsplits = fin.mode.splits().unwrap_or(0);
+                    for i in 0..4 {
+                        disp.record_measurement(
+                            req.site,
+                            CallMeasurement {
+                                flops,
+                                offloaded: true,
+                                measured_s: (share + fin.extra_s) / 4.0,
+                                modeled_gpu_s: gpu_s / 4.0,
+                                modeled_move_s: move_s / 4.0,
+                                splits: fsplits,
+                                probe_s: if i == 0 { fin.probe_s } else { 0.0 },
+                                batch: if i == 0 { Some(batch) } else { None },
+                                device: if i == 0 { device_info.take() } else { None },
+                                cert_checks: if i == 0 { fin.cert_checks } else { 0 },
+                                cert_escalations: if i == 0 { fin.cert_escalations } else { 0 },
+                                cert_fp64: i == 0 && fin.cert_fp64,
+                                offload_retries: if i == 0 { retries } else { 0 },
+                                ..Default::default()
+                            },
+                        );
+                    }
+                    slot.fill(Ok(fin.result));
+                }
+            }
+        }
+        debug_assert!(products.next().is_none(), "component/member count mismatch");
+    }
+
+    // Host fallback for members whose admission exhausted its budget:
+    // the same staged panels through the host fused sweep — the exact
+    // building blocks of the fused host path, so bits match host
+    // routing by construction.  Fallback shares are never recorded
+    // into the host throughput EWMA (same hygiene as the sequential
+    // path: a fallback's latency is not a clean host sample).
+    if !fallbacks.is_empty() {
+        let mut hspecs: Vec<SweepSpec<'_>> = Vec::with_capacity(fallbacks.len() * comps_per);
+        for &mi in &fallbacks {
+            for (pa, pb) in &staged.components[mi] {
+                hspecs.push(SweepSpec {
+                    ap: pa.0.as_ref(),
+                    bp: pb.0.as_ref(),
+                    weights: &artifact.weights,
+                });
+            }
+        }
+        let t0 = Instant::now();
+        let host = fused_ozaki_sweep_many_isolated(&hspecs, &artifact.ecfg);
+        let fallback_s = t0.elapsed().as_secs_f64();
+        match host {
+            Err(e) => {
+                let msg = format!("batch bucket execution failed: {e}");
+                for &mi in &fallbacks {
+                    match &group[mi].payload {
+                        Payload::Real { slot, .. } => {
+                            slot.fill(Err(Error::Numerical(msg.clone())));
+                        }
+                        Payload::Complex { slot, .. } => {
+                            slot.fill(Err(Error::Numerical(msg.clone())));
+                        }
+                    }
+                }
+            }
+            Ok(results) => {
+                let share = fallback_s / fallbacks.len() as f64;
+                let host_info = HostCallInfo {
+                    kernel: disp.selector().kernel.name(),
+                    isa: disp.selector().resolved_isa().unwrap_or(""),
+                    bands: disp.selector().bands_for(key.m, MR_I8),
+                    tuned: artifact.tuned,
+                    ..Default::default()
+                };
+                let mut products = results.into_iter();
+                for &mi in &fallbacks {
+                    let req = &group[mi];
+                    let (retries, trips) = match &admits[mi] {
+                        OffloadAdmit::Fallback { retries, trips } => (*retries, *trips),
+                        OffloadAdmit::Device { .. } => unreachable!("fallbacks failed admission"),
+                    };
+                    match &req.payload {
+                        Payload::Real { a, b, slot } => {
+                            let mut c = match products.next().expect("one product per real member")
+                            {
+                                Ok(c) => c,
+                                Err(e) => {
+                                    slot.fill(Err(e));
+                                    continue;
+                                }
+                            };
+                            let ((_, ea), (_, eb)) = &staged.components[mi][0];
+                            unscale(&mut c, ea, eb);
+                            let fin =
+                                match disp.finish_real(req.site, mode, a, b, c, req.governed) {
+                                    Ok(f) => f,
+                                    Err(e) => {
+                                        slot.fill(Err(e));
+                                        continue;
+                                    }
+                                };
+                            let fsplits = fin.mode.splits().unwrap_or(0);
+                            disp.record_measurement(
+                                req.site,
+                                CallMeasurement {
+                                    flops,
+                                    measured_s: share + fin.extra_s,
+                                    splits: fsplits,
+                                    probe_s: fin.probe_s,
+                                    host: Some(host_info),
+                                    batch: Some(BatchCallInfo {
+                                        bucket: group.len() as u64,
+                                        pack_reuse: staged.reuse[mi],
+                                        lead: lead_seen.insert(req.site),
+                                    }),
+                                    device: device_info.take(),
+                                    cert_checks: fin.cert_checks,
+                                    cert_escalations: fin.cert_escalations,
+                                    cert_fp64: fin.cert_fp64,
+                                    wide: matches!(fin.mode, ComputeMode::Int8 { .. })
+                                        && is_wide(key.k, fsplits),
+                                    offload_retries: retries,
+                                    offload_fallback: true,
+                                    breaker_trips: trips,
+                                    ..Default::default()
+                                },
+                            );
+                            slot.fill(Ok(fin.result));
+                        }
+                        Payload::Complex { a, b, slot } => {
+                            let c = match combine_complex(&staged, mi, &mut products) {
+                                Ok(c) => c,
+                                Err(e) => {
+                                    slot.fill(Err(e));
+                                    continue;
+                                }
+                            };
+                            let fin =
+                                match disp.finish_complex(req.site, mode, a, b, c, req.governed) {
+                                    Ok(f) => f,
+                                    Err(e) => {
+                                        slot.fill(Err(e));
+                                        continue;
+                                    }
+                                };
+                            let batch = BatchCallInfo {
+                                bucket: group.len() as u64,
+                                pack_reuse: staged.reuse[mi],
+                                lead: lead_seen.insert(req.site),
+                            };
+                            let fsplits = fin.mode.splits().unwrap_or(0);
+                            let wide = matches!(fin.mode, ComputeMode::Int8 { .. })
+                                && is_wide(key.k, fsplits);
+                            for i in 0..4 {
+                                disp.record_measurement(
+                                    req.site,
+                                    CallMeasurement {
+                                        flops,
+                                        measured_s: (share + fin.extra_s) / 4.0,
+                                        splits: fsplits,
+                                        probe_s: if i == 0 { fin.probe_s } else { 0.0 },
+                                        host: Some(host_info),
+                                        batch: if i == 0 { Some(batch) } else { None },
+                                        device: if i == 0 { device_info.take() } else { None },
+                                        cert_checks: if i == 0 { fin.cert_checks } else { 0 },
+                                        cert_escalations: if i == 0 {
+                                            fin.cert_escalations
+                                        } else {
+                                            0
+                                        },
+                                        cert_fp64: i == 0 && fin.cert_fp64,
+                                        wide,
+                                        offload_retries: if i == 0 { retries } else { 0 },
+                                        offload_fallback: i == 0,
+                                        breaker_trips: if i == 0 { trips } else { 0 },
+                                        ..Default::default()
+                                    },
+                                );
+                            }
+                            slot.fill(Ok(fin.result));
+                        }
+                    }
+                }
+                debug_assert!(products.next().is_none(), "component/member count mismatch");
+            }
+        }
+    }
+
+    let mut st = stats.lock().unwrap();
+    if !survivors.is_empty() {
+        st.device_buckets += 1;
+        st.device_exec_ns += (exec_s * 1e9) as u64;
+    }
+    st.device_members += survivors.len() as u64;
+    st.device_fallback_members += fallbacks.len() as u64;
+    st.device_bytes_staged += staged.bytes;
     Ok(())
 }

@@ -37,6 +37,12 @@ pub enum Error {
     /// PJRT / XLA runtime failure.
     Xla(String),
 
+    /// The device entry point is not built into this binary (the
+    /// vendored `xla` stub): a typed signal distinct from a genuine
+    /// runtime failure, so breaker/fallback paths can degrade to host
+    /// execution without string-matching the message.
+    Unimplemented(String),
+
     /// An offloaded call exceeded its `[offload] deadline_ms` budget
     /// across retries (the resilience layer then falls back to host).
     Timeout(String),
@@ -69,6 +75,7 @@ impl fmt::Display for Error {
             Error::Numerical(msg) => write!(f, "numerical error: {msg}"),
             Error::Busy(msg) => write!(f, "engine busy: {msg}"),
             Error::Xla(msg) => write!(f, "xla runtime: {msg}"),
+            Error::Unimplemented(msg) => write!(f, "offload unimplemented: {msg}"),
             Error::Timeout(msg) => write!(f, "offload deadline: {msg}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
@@ -92,7 +99,11 @@ impl From<std::io::Error> for Error {
 
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+        if e.is_unimplemented() {
+            Error::Unimplemented(e.to_string())
+        } else {
+            Error::Xla(e.to_string())
+        }
     }
 }
 
@@ -126,6 +137,18 @@ mod tests {
             Error::Timeout("2000ms exceeded".into()).to_string(),
             "offload deadline: 2000ms exceeded"
         );
+    }
+
+    #[test]
+    fn stub_xla_errors_map_to_the_typed_unimplemented_variant() {
+        let xe = xla::PjRtClient::cpu().unwrap_err();
+        assert!(xe.is_unimplemented());
+        let e: Error = xe.into();
+        match &e {
+            Error::Unimplemented(msg) => assert!(msg.contains("stub")),
+            other => panic!("expected Unimplemented, got {other:?}"),
+        }
+        assert!(e.to_string().starts_with("offload unimplemented: "));
     }
 
     #[test]

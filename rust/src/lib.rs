@@ -104,6 +104,23 @@
 //! An in-process simulated device (`[offload] backend = "sim"`)
 //! exercises the whole seam without PJRT.
 //!
+//! ## Batched device execution ([`device`])
+//!
+//! Offloaded engine buckets no longer pay per-call offload overhead:
+//! each shape × mode × splits bucket executes as **one batched device
+//! submission** running every member's slice products, driven by a
+//! compiled per-bucket artifact served from a bounded LRU
+//! **artifact cache** (`[offload] artifact_cache`).  An async
+//! **staging pipeline** (`[offload] staging_depth`) overlaps the
+//! split/pack of bucket *k+1* with execution of bucket *k* under
+//! bounded-buffer backpressure, and routing consults **measured
+//! per-site throughput** (host vs device EWMAs, `[offload]
+//! ewma_window`) with the static [`perfmodel`] demoted to a cold-start
+//! prior.  Batched device results are bit-identical to the sequential
+//! host path; mid-bucket failures fall back per-member with survivors
+//! keeping their slots.  Cache hit rates, staged bytes, overlap, and
+//! measured throughput appear in the PEAK `device` and `thrpt` columns.
+//!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! model once, and the Rust binary is self-contained afterwards.
 //!
@@ -151,6 +168,7 @@ pub mod cli;
 pub mod complex;
 pub mod config;
 pub mod coordinator;
+pub mod device;
 pub mod engine;
 pub mod error;
 pub mod experiments;

@@ -92,6 +92,17 @@ pub struct OffloadConfig {
     pub breaker_probes: u32,
     /// Device backend to attach.
     pub backend: OffloadBackend,
+    /// Compiled batched artifacts the device artifact cache retains
+    /// before LRU eviction (`[offload] artifact_cache`, ≥ 1).
+    pub artifact_cache: usize,
+    /// Buckets the staging pipeline may prepare ahead of execution
+    /// (`[offload] staging_depth`, ≥ 1) — bounds the packed-panel
+    /// memory held by in-flight staged transfers.
+    pub staging_depth: usize,
+    /// Window (in observations) of the measured-throughput router's
+    /// per-site EWMA (`[offload] ewma_window`, ≥ 1); the smoothing
+    /// factor is `2 / (window + 1)`.
+    pub ewma_window: u32,
 }
 
 impl Default for OffloadConfig {
@@ -104,6 +115,9 @@ impl Default for OffloadConfig {
             breaker_cooldown: 32,
             breaker_probes: 3,
             backend: OffloadBackend::Pjrt,
+            artifact_cache: 32,
+            staging_depth: 2,
+            ewma_window: 16,
         }
     }
 }
@@ -149,6 +163,27 @@ impl OffloadConfig {
             |&n| n >= 1,
         ) {
             cfg.breaker_probes = v;
+        }
+        if let Some(v) = parse_env_checked::<usize>(
+            "OZACCEL_OFFLOAD_ARTIFACT_CACHE",
+            "an integer >= 1",
+            |&n| n >= 1,
+        ) {
+            cfg.artifact_cache = v;
+        }
+        if let Some(v) = parse_env_checked::<usize>(
+            "OZACCEL_OFFLOAD_STAGING_DEPTH",
+            "an integer >= 1",
+            |&n| n >= 1,
+        ) {
+            cfg.staging_depth = v;
+        }
+        if let Some(v) = parse_env_checked::<u32>(
+            "OZACCEL_OFFLOAD_EWMA_WINDOW",
+            "an integer >= 1",
+            |&n| n >= 1,
+        ) {
+            cfg.ewma_window = v;
         }
         if let Ok(raw) = std::env::var("OZACCEL_OFFLOAD_BACKEND") {
             cfg.backend = OffloadBackend::parse(&raw).unwrap_or_else(|| {
@@ -233,6 +268,9 @@ mod tests {
         assert_eq!(cfg.backend, OffloadBackend::Pjrt);
         assert_eq!(cfg.attempts(), cfg.max_retries + 1);
         assert!(cfg.deadline().is_some());
+        assert!(cfg.artifact_cache >= 1);
+        assert!(cfg.staging_depth >= 1);
+        assert!(cfg.ewma_window >= 1);
     }
 
     #[test]
@@ -290,6 +328,40 @@ mod tests {
         std::env::set_var("OZACCEL_OFFLOAD_BACKEND", "sim");
         std::env::set_var("OZACCEL_OFFLOAD_MAX_RETRIES", "many");
         assert!(std::panic::catch_unwind(OffloadConfig::from_env).is_err());
+    }
+
+    #[test]
+    fn device_pipeline_env_overrides_apply_and_zero_is_loud() {
+        let _guard = crate::testing::env_lock();
+        struct Restore(&'static str);
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                std::env::remove_var(self.0);
+            }
+        }
+        let _r1 = Restore("OZACCEL_OFFLOAD_ARTIFACT_CACHE");
+        let _r2 = Restore("OZACCEL_OFFLOAD_STAGING_DEPTH");
+        let _r3 = Restore("OZACCEL_OFFLOAD_EWMA_WINDOW");
+        std::env::set_var("OZACCEL_OFFLOAD_ARTIFACT_CACHE", "64");
+        std::env::set_var("OZACCEL_OFFLOAD_STAGING_DEPTH", "3");
+        std::env::set_var("OZACCEL_OFFLOAD_EWMA_WINDOW", "8");
+        let cfg = OffloadConfig::from_env();
+        assert_eq!(cfg.artifact_cache, 64);
+        assert_eq!(cfg.staging_depth, 3);
+        assert_eq!(cfg.ewma_window, 8);
+
+        for (var, bad) in [
+            ("OZACCEL_OFFLOAD_ARTIFACT_CACHE", "0"),
+            ("OZACCEL_OFFLOAD_STAGING_DEPTH", "0"),
+            ("OZACCEL_OFFLOAD_EWMA_WINDOW", "wide"),
+        ] {
+            std::env::set_var(var, bad);
+            assert!(
+                std::panic::catch_unwind(OffloadConfig::from_env).is_err(),
+                "{var}={bad} must be loud"
+            );
+            std::env::set_var(var, "2");
+        }
     }
 
     #[test]

@@ -209,6 +209,35 @@ impl Runtime {
         }
     }
 
+    /// Execute one **batched bucket submission**: every member's
+    /// retained slice products in a single device execution, fed with
+    /// already-staged panels.  This is the device analogue of the batch
+    /// engine's fused host sweep — one `executions` tick covers the
+    /// whole bucket, which is exactly the per-call→per-bucket overhead
+    /// amortization the device pipeline exists for.  On the simulated
+    /// backend the submission computes through the host fused sweep,
+    /// so batched device results are bit-identical to the sequential
+    /// host path by construction; the PJRT backend's artifacts are
+    /// per-call GEMM programs, so it reports a typed
+    /// [`Error::Unimplemented`] and callers fall back per-call.
+    pub fn batched_sweep(
+        &self,
+        specs: &[crate::kernels::SweepSpec<'_>],
+        ecfg: &crate::kernels::KernelConfig,
+    ) -> Result<Vec<Result<Mat<f64>>>> {
+        match &self.backend {
+            Backend::Pjrt { .. } => Err(Error::Unimplemented(
+                "batched bucket submission requires the simulated backend \
+                 (PJRT artifacts are per-call)"
+                    .into(),
+            )),
+            Backend::Sim => {
+                self.stats.lock().unwrap().executions += 1;
+                crate::kernels::fused_ozaki_sweep_many_isolated(specs, ecfg)
+            }
+        }
+    }
+
     /// Number of compiled executables currently cached (0 for sim).
     pub fn cached_executables(&self) -> usize {
         match &self.backend {

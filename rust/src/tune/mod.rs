@@ -275,6 +275,27 @@ pub fn lookup(
     None
 }
 
+/// Dispatch-time consultation of the tuner's persisted `[batch]
+/// max_pending` advisory: the flush bound the autotuner judged best for
+/// this machine, or `None` when tuning is off, the cache file is
+/// absent/stale, or it carries no batch advisory.  Callers apply it
+/// only when the batch config was *not* set explicitly
+/// ([`crate::engine::BatchConfig::max_pending_explicit`]) — an explicit
+/// value always wins.
+pub fn batch_advisory(cfg: &KernelConfig) -> Option<usize> {
+    if cfg.tune == TuneMode::Off {
+        return None;
+    }
+    let mut s = store().lock().unwrap();
+    let path = resolve_path(cfg.tune_file.as_deref());
+    if !s.loaded || s.path != path {
+        s.cache = path.as_deref().and_then(TuningCache::load);
+        s.path = path;
+        s.loaded = true;
+    }
+    s.cache.as_ref().and_then(|c| c.batch_max_pending)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,78 @@
+//! Round-trip of the autotuner's persisted `[batch] max_pending`
+//! advisory: written to the tuning cache by the tuner, auto-consumed by
+//! the batch engine under `run.tune = read|auto`, and always beaten by
+//! an explicitly configured bound.
+//!
+//! One `#[test]` on purpose: the loaded tuning cache is a process-wide
+//! store keyed by path, so parallel test threads flipping the path
+//! would race each other rather than exercise the code under test.
+
+use ozaccel::coordinator::{DispatchConfig, Dispatcher, HostKernel, KernelSelector};
+use ozaccel::kernels::{KernelConfig, SimdSelect};
+use ozaccel::ozaki::ComputeMode;
+use ozaccel::tune::{self, TuneMode, TuningCache};
+
+fn dispatcher(tune: TuneMode, file: &std::path::Path) -> Dispatcher {
+    let mut cfg = DispatchConfig::host_only(ComputeMode::Int8 { splits: 4 });
+    cfg.kernels = KernelSelector {
+        kernel: HostKernel::Auto,
+        config: KernelConfig {
+            simd: SimdSelect::Scalar,
+            tune,
+            tune_file: Some(file.to_path_buf()),
+            ..KernelConfig::default()
+        },
+    };
+    Dispatcher::new(cfg).unwrap()
+}
+
+#[test]
+fn persisted_batch_advisory_reaches_the_engine_unless_explicit() {
+    let path = std::env::temp_dir().join(format!(
+        "ozaccel-test-batch-advisory-{}.toml",
+        std::process::id()
+    ));
+    let mut cache = TuningCache::empty();
+    cache.batch_max_pending = Some(7);
+    cache.save(&path).expect("save tuning cache");
+    tune::invalidate();
+
+    // read mode: the engine auto-consumes the advisory.
+    let read = dispatcher(TuneMode::Read, &path);
+    assert_eq!(read.batch().config().max_pending, 7);
+
+    // off mode (the seed behaviour): the file is never consulted.
+    let off = dispatcher(TuneMode::Off, &path);
+    assert_eq!(
+        off.batch().config().max_pending,
+        ozaccel::engine::BatchConfig::default().max_pending
+    );
+
+    // an explicit bound always wins over the advisory.
+    let mut cfg = DispatchConfig::host_only(ComputeMode::Int8 { splits: 4 });
+    cfg.kernels = KernelSelector {
+        kernel: HostKernel::Auto,
+        config: KernelConfig {
+            simd: SimdSelect::Scalar,
+            tune: TuneMode::Read,
+            tune_file: Some(path.clone()),
+            ..KernelConfig::default()
+        },
+    };
+    cfg.batch.max_pending = 3;
+    cfg.batch.max_pending_explicit = true;
+    let explicit = Dispatcher::new(cfg).unwrap();
+    assert_eq!(explicit.batch().config().max_pending, 3);
+
+    // advisory-free cache: the default bound stands.
+    TuningCache::empty().save(&path).expect("rewrite cache");
+    tune::invalidate();
+    let bare = dispatcher(TuneMode::Auto, &path);
+    assert_eq!(
+        bare.batch().config().max_pending,
+        ozaccel::engine::BatchConfig::default().max_pending
+    );
+
+    tune::invalidate();
+    std::fs::remove_file(&path).ok();
+}

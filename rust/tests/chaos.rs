@@ -123,6 +123,7 @@ fn blocking_submit_and_wait_timeout_surface_held_capacity() {
         BatchConfig {
             max_pending: usize::MAX,
             max_bytes: usize::MAX,
+            ..BatchConfig::default()
         },
         LimitsConfig {
             max_inflight: 2,

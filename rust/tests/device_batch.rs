@@ -1,0 +1,412 @@
+//! Device batched-execution pins (ISSUE 10): offloaded engine buckets
+//! execute as ONE batched device submission per bucket, bit-identical
+//! to sequential host dispatch across ISAs, thread counts, and split
+//! counts; the per-bucket artifact cache counts hits/misses/evictions;
+//! measured per-site throughput can flip a covered site back to the
+//! host; and an injected mid-bucket admission fault fails over exactly
+//! the member that drew it while its bucket-mates keep their device
+//! slots.
+//!
+//! The device side is the in-process simulated backend
+//! (`[offload] backend = "sim"`), which computes through the host
+//! kernels — so every batched submission is checkable bit-for-bit
+//! against a `force_host` dispatcher.  Fault-injection tests need the
+//! `failpoints` feature; every test takes
+//! [`ozaccel::faults::test_guard`] so an armed sibling can never leak.
+
+use std::sync::Arc;
+
+use ozaccel::coordinator::{call_site, DispatchConfig, Dispatcher};
+use ozaccel::engine::wait_all;
+use ozaccel::kernels::{available_isas, SimdSelect};
+use ozaccel::linalg::{Mat, ZMat};
+use ozaccel::ozaki::ComputeMode;
+use ozaccel::resilience::{OffloadBackend, OffloadConfig};
+use ozaccel::testing::Rng;
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat<f64> {
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn rand_zmat(rng: &mut Rng, r: usize, c: usize) -> ZMat {
+    ZMat::from_fn(r, c, |_, _| rng.cnormal())
+}
+
+/// Disarm every failpoint when the test exits, pass or fail.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        ozaccel::faults::disarm_all();
+    }
+}
+
+/// Dispatcher attached to the simulated device: FLOP threshold zeroed
+/// so every call is a device candidate, with explicit host-kernel
+/// threading/ISA so the bit-identity matrix can sweep both.
+fn sim_dispatcher(
+    mode: ComputeMode,
+    offload: OffloadConfig,
+    threads: usize,
+    simd: SimdSelect,
+) -> Dispatcher {
+    let mut cfg = DispatchConfig {
+        mode,
+        offload: OffloadConfig {
+            backend: OffloadBackend::Sim,
+            ..offload
+        },
+        ..DispatchConfig::default()
+    };
+    cfg.policy.min_flops = 0.0;
+    cfg.kernels.config.threads = threads;
+    cfg.kernels.config.simd = simd;
+    Dispatcher::new(cfg).unwrap()
+}
+
+/// The reference oracle: same mode, host-forced, same kernel config.
+fn host_dispatcher(mode: ComputeMode, threads: usize, simd: SimdSelect) -> Dispatcher {
+    let mut cfg = DispatchConfig::host_only(mode);
+    cfg.kernels.config.threads = threads;
+    cfg.kernels.config.simd = simd;
+    Dispatcher::new(cfg).unwrap()
+}
+
+#[test]
+fn batched_device_real_buckets_are_bit_identical_across_isas_threads_and_splits() {
+    let _guard = ozaccel::faults::test_guard();
+    let _disarm = Disarm;
+    let mut rng = Rng::new(0xD3B1);
+    // Two shape classes → two buckets per flush → the staging pipeline
+    // actually pipelines; members 0 and 1 share one operand pair, so
+    // the stager's pack memo fires too.
+    let big: Vec<(Arc<Mat<f64>>, Arc<Mat<f64>>)> = (0..2)
+        .map(|_| {
+            (
+                Arc::new(rand_mat(&mut rng, 12, 10)),
+                Arc::new(rand_mat(&mut rng, 10, 8)),
+            )
+        })
+        .collect();
+    let small = (
+        Arc::new(rand_mat(&mut rng, 7, 7)),
+        Arc::new(rand_mat(&mut rng, 7, 7)),
+    );
+
+    for &threads in &[1usize, 3] {
+        for isa in available_isas() {
+            for splits in [4u32, 7] {
+                let mode = ComputeMode::Int8 { splits };
+                let simd = SimdSelect::Force(isa);
+                let d = sim_dispatcher(mode, OffloadConfig::default(), threads, simd);
+                let h = host_dispatcher(mode, threads, simd);
+                let site = call_site();
+
+                // submissions: shared-pair, shared-pair, distinct, small
+                let subs = [&big[0], &big[0], &big[1], &small];
+                let want: Vec<Mat<f64>> = subs
+                    .iter()
+                    .map(|(a, b)| h.dgemm_at(site, mode, a, b).unwrap())
+                    .collect();
+
+                let engine = d.batch();
+                let tickets: Vec<_> = subs
+                    .iter()
+                    .map(|(a, b)| engine.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+                    .collect();
+                let got = wait_all(tickets).unwrap();
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.data(),
+                        w.data(),
+                        "threads={threads} isa={} splits={splits} member={i}",
+                        isa.name()
+                    );
+                }
+
+                let st = engine.stats();
+                assert_eq!(st.device_buckets, 2, "one submission per bucket");
+                assert_eq!(st.device_members, 4);
+                assert_eq!(st.device_fallback_members, 0);
+                assert!(st.device_bytes_staged > 0, "staged H2D traffic counted");
+                assert!(st.device_stage_ns > 0, "staging time accounted");
+                assert_eq!(st.fused_calls, 0, "everything routed to the device");
+
+                let t = d.report().sites.totals();
+                assert_eq!(t.offloaded, 4);
+                assert_eq!(t.offload_fallbacks, 0);
+                assert_eq!(t.artifact_misses, 2, "one compile per bucket shape");
+                assert!(t.staged_bytes > 0);
+                assert!(t.modeled_gpu_s > 0.0, "device members stay modeled");
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_device_complex_buckets_are_bit_identical_to_sequential_host() {
+    let _guard = ozaccel::faults::test_guard();
+    let _disarm = Disarm;
+    let mode = ComputeMode::Int8 { splits: 5 };
+    let mut rng = Rng::new(0xD3B2);
+    let a1 = Arc::new(rand_zmat(&mut rng, 9, 8));
+    let b1 = Arc::new(rand_zmat(&mut rng, 8, 7));
+    let a2 = Arc::new(rand_zmat(&mut rng, 9, 8));
+    let b2 = Arc::new(rand_zmat(&mut rng, 8, 7));
+    let d = sim_dispatcher(mode, OffloadConfig::default(), 1, SimdSelect::Auto);
+    let h = host_dispatcher(mode, 1, SimdSelect::Auto);
+    let site = call_site();
+
+    let want1 = h.zgemm_at(site, mode, &a1, &b1).unwrap();
+    let want2 = h.zgemm_at(site, mode, &a2, &b2).unwrap();
+
+    let engine = d.batch();
+    // The repeated (a1, b1) member reuses the first member's staged
+    // re/im panels inside the bucket.
+    let t1 = engine.submit_zgemm_at(site, mode, a1.clone(), b1.clone());
+    let t2 = engine.submit_zgemm_at(site, mode, a2.clone(), b2.clone());
+    let t3 = engine.submit_zgemm_at(site, mode, a1.clone(), b1.clone());
+    engine.flush().unwrap();
+    assert_eq!(t1.wait().unwrap().data(), want1.data());
+    assert_eq!(t2.wait().unwrap().data(), want2.data());
+    assert_eq!(t3.wait().unwrap().data(), want1.data());
+
+    let st = engine.stats();
+    assert_eq!(st.device_buckets, 1, "one submission for the whole bucket");
+    assert_eq!(st.device_members, 3);
+    let t = d.report().sites.totals();
+    assert_eq!(t.calls, 12, "zgemm keeps the 4-real-GEMM accounting");
+    assert_eq!(t.offloaded, 12);
+}
+
+#[test]
+fn artifact_cache_counts_hits_misses_and_evictions() {
+    let _guard = ozaccel::faults::test_guard();
+    let _disarm = Disarm;
+    let mode = ComputeMode::Int8 { splits: 6 };
+    let mut rng = Rng::new(0xD3B3);
+    let a = Arc::new(rand_mat(&mut rng, 10, 9));
+    let b = Arc::new(rand_mat(&mut rng, 9, 8));
+
+    // Roomy cache: the second flush of the same shape hits.
+    let d = sim_dispatcher(mode, OffloadConfig::default(), 1, SimdSelect::Auto);
+    let site = call_site();
+    for _ in 0..2 {
+        let engine = d.batch();
+        let t = engine.submit_dgemm_at(site, mode, a.clone(), b.clone());
+        engine.flush().unwrap();
+        t.wait().unwrap();
+    }
+    let s = d.artifacts().stats();
+    assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+    assert!(d.report().sites.totals().artifact_hits >= 1);
+
+    // Capacity-1 cache with two alternating shapes: every flush evicts
+    // the other shape's artifact, so nothing ever hits.
+    let d = sim_dispatcher(
+        mode,
+        OffloadConfig {
+            artifact_cache: 1,
+            ..OffloadConfig::default()
+        },
+        1,
+        SimdSelect::Auto,
+    );
+    let small = (
+        Arc::new(rand_mat(&mut rng, 6, 6)),
+        Arc::new(rand_mat(&mut rng, 6, 6)),
+    );
+    for _ in 0..2 {
+        let engine = d.batch();
+        let t1 = engine.submit_dgemm_at(site, mode, a.clone(), b.clone());
+        let t2 = engine.submit_dgemm_at(site, mode, small.0.clone(), small.1.clone());
+        engine.flush().unwrap();
+        t1.wait().unwrap();
+        t2.wait().unwrap();
+    }
+    let s = d.artifacts().stats();
+    assert_eq!(s.hits, 0, "capacity 1 thrashes between two shapes");
+    assert_eq!(s.misses, 4);
+    assert_eq!(s.evictions, 3);
+}
+
+#[test]
+fn measured_throughput_flips_a_covered_site_back_to_the_host() {
+    let _guard = ozaccel::faults::test_guard();
+    let _disarm = Disarm;
+    let mode = ComputeMode::Int8 { splits: 5 };
+    let mut rng = Rng::new(0xD3B4);
+    let a = Arc::new(rand_mat(&mut rng, 11, 9));
+    let b = Arc::new(rand_mat(&mut rng, 9, 10));
+    let d = sim_dispatcher(mode, OffloadConfig::default(), 1, SimdSelect::Auto);
+    let site = call_site();
+
+    // Seed the measured state deterministically: the host is observed
+    // 1000× faster than the device at this site, with MIN_SAMPLES on
+    // both routes, so the measured predicate must override the static
+    // prior and route host.
+    for _ in 0..3 {
+        d.throughput().record(site, false, 1e9, 1e6, 1e-3);
+        d.throughput().record(site, true, 1e9, 1e6, 1.0);
+    }
+    let snap = d.throughput().snapshot(site).unwrap();
+    assert!(snap.host_samples >= 3 && snap.device_samples >= 3);
+
+    let h = host_dispatcher(mode, 1, SimdSelect::Auto);
+    let want = h.dgemm_at(site, mode, &a, &b).unwrap();
+    let engine = d.batch();
+    let tickets: Vec<_> = (0..2)
+        .map(|_| engine.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+        .collect();
+    for g in wait_all(tickets).unwrap() {
+        assert_eq!(g.data(), want.data());
+    }
+    let st = engine.stats();
+    assert_eq!(st.device_buckets, 0, "measured-host site never submits");
+    assert_eq!(st.fused_calls, 2, "the bucket ran on the fused host path");
+    let t = d.report().sites.totals();
+    assert_eq!(t.offloaded, 0);
+    assert_eq!(t.offload_fallbacks, 0, "measured routing is not a fallback");
+
+    // The sequential entry point consults the same per-site state.
+    assert_eq!(d.dgemm_at(site, mode, &a, &b).unwrap().data(), want.data());
+    assert_eq!(d.report().sites.totals().offloaded, 0);
+}
+
+#[cfg(feature = "failpoints")]
+mod injected {
+    use super::*;
+    use ozaccel::faults::{arm, arm_limited, FaultSite};
+    use ozaccel::resilience::BreakerState;
+
+    /// Admission-fault config: no retries, no sleeping, and a breaker
+    /// that can never open — members fail over individually.
+    fn no_retry() -> OffloadConfig {
+        OffloadConfig {
+            max_retries: 0,
+            backoff_ms: 0,
+            deadline_ms: 0,
+            breaker_threshold: 100,
+            ..OffloadConfig::default()
+        }
+    }
+
+    /// One bucket of four identical members under a single injected
+    /// admission fault: exactly one member must fall back (host bits),
+    /// the other three keep their device slots (host bits too — the
+    /// sim computes through the host kernels).
+    fn one_fault_spares_the_bucket(fault: FaultSite) {
+        let mode = ComputeMode::Int8 { splits: 4 };
+        let d = sim_dispatcher(mode, no_retry(), 1, SimdSelect::Auto);
+        let h = host_dispatcher(mode, 1, SimdSelect::Auto);
+        let site = call_site();
+        let mut rng = Rng::new(0xD3B5);
+        let a = Arc::new(rand_mat(&mut rng, 12, 12));
+        let b = Arc::new(rand_mat(&mut rng, 12, 12));
+        let want = h.dgemm_at(site, mode, &a, &b).unwrap();
+
+        arm_limited(fault, 1.0, 9, 1);
+        let engine = d.batch();
+        let tickets: Vec<_> = (0..4)
+            .map(|_| engine.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+            .collect();
+        for g in wait_all(tickets).unwrap() {
+            assert_eq!(g.data(), want.data(), "{fault:?}: mixed bucket bits");
+        }
+        let st = engine.stats();
+        assert_eq!(st.device_buckets, 1, "{fault:?}: survivors still batch");
+        assert_eq!(st.device_members, 3);
+        assert_eq!(st.device_fallback_members, 1);
+        let s = d.report().sites.get(site).unwrap().clone();
+        assert_eq!(s.calls, 4);
+        assert_eq!(s.offloaded, 3, "{fault:?}: survivors report the device");
+        assert_eq!(s.offload_fallbacks, 1);
+        assert_eq!(d.resilience().breaker().state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn mid_bucket_error_fails_over_one_member_and_spares_the_rest() {
+        let _guard = ozaccel::faults::test_guard();
+        let _disarm = Disarm;
+        one_fault_spares_the_bucket(FaultSite::OffloadError);
+    }
+
+    #[test]
+    fn mid_bucket_timeout_fails_over_one_member_and_spares_the_rest() {
+        let _guard = ozaccel::faults::test_guard();
+        let _disarm = Disarm;
+        one_fault_spares_the_bucket(FaultSite::OffloadTimeout);
+    }
+
+    #[test]
+    fn mid_bucket_transient_is_absorbed_by_the_retry_budget() {
+        let _guard = ozaccel::faults::test_guard();
+        let _disarm = Disarm;
+        let mode = ComputeMode::Int8 { splits: 4 };
+        let d = sim_dispatcher(
+            mode,
+            OffloadConfig {
+                max_retries: 2,
+                backoff_ms: 0,
+                deadline_ms: 0,
+                breaker_threshold: 100,
+                ..OffloadConfig::default()
+            },
+            1,
+            SimdSelect::Auto,
+        );
+        let h = host_dispatcher(mode, 1, SimdSelect::Auto);
+        let site = call_site();
+        let mut rng = Rng::new(0xD3B6);
+        let a = Arc::new(rand_mat(&mut rng, 10, 10));
+        let b = Arc::new(rand_mat(&mut rng, 10, 10));
+        let want = h.dgemm_at(site, mode, &a, &b).unwrap();
+
+        // Fires twice: the first member's admission retries through and
+        // still earns a device slot, so the whole bucket batches.
+        arm_limited(FaultSite::OffloadTransient, 1.0, 3, 2);
+        let engine = d.batch();
+        let tickets: Vec<_> = (0..3)
+            .map(|_| engine.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+            .collect();
+        for g in wait_all(tickets).unwrap() {
+            assert_eq!(g.data(), want.data());
+        }
+        let st = engine.stats();
+        assert_eq!(st.device_members, 3, "retries absorbed the transient");
+        assert_eq!(st.device_fallback_members, 0);
+        let s = d.report().sites.get(site).unwrap().clone();
+        assert_eq!(s.offloaded, 3);
+        assert_eq!(s.offload_retries, 2);
+    }
+
+    #[test]
+    fn total_admission_storm_falls_the_whole_bucket_back_bit_identically() {
+        let _guard = ozaccel::faults::test_guard();
+        let _disarm = Disarm;
+        let mode = ComputeMode::Int8 { splits: 5 };
+        let d = sim_dispatcher(mode, no_retry(), 1, SimdSelect::Auto);
+        let h = host_dispatcher(mode, 1, SimdSelect::Auto);
+        let site = call_site();
+        let mut rng = Rng::new(0xD3B7);
+        let a = Arc::new(rand_mat(&mut rng, 11, 10));
+        let b = Arc::new(rand_mat(&mut rng, 10, 9));
+        let want = h.dgemm_at(site, mode, &a, &b).unwrap();
+
+        arm(FaultSite::OffloadError, 1.0, 5);
+        let engine = d.batch();
+        let tickets: Vec<_> = (0..4)
+            .map(|_| engine.submit_dgemm_at(site, mode, a.clone(), b.clone()))
+            .collect();
+        for g in wait_all(tickets).unwrap() {
+            assert_eq!(g.data(), want.data(), "fallback members carry host bits");
+        }
+        let st = engine.stats();
+        assert_eq!(st.device_buckets, 0, "no survivors, no device submission");
+        assert_eq!(st.device_members, 0);
+        assert_eq!(st.device_fallback_members, 4);
+        let t = d.report().sites.totals();
+        assert_eq!(t.offloaded, 0);
+        assert_eq!(t.offload_fallbacks, 4);
+        assert_eq!(t.modeled_gpu_s, 0.0, "fallbacks never pollute the GPU model");
+    }
+}

@@ -134,6 +134,7 @@ fn flush_policy_bounds_are_never_exceeded() {
         BatchConfig {
             max_pending: 4,
             max_bytes: usize::MAX,
+            ..BatchConfig::default()
         },
     );
     let tickets: Vec<_> = (0..11)
@@ -157,6 +158,7 @@ fn flush_policy_bounds_are_never_exceeded() {
         BatchConfig {
             max_pending: usize::MAX,
             max_bytes: 3 * req_bytes,
+            ..BatchConfig::default()
         },
     );
     let tickets: Vec<_> = (0..10)

@@ -11,21 +11,51 @@
 use std::fmt;
 use std::path::Path;
 
-/// Error type mirroring `xla::Error`.
+/// Classification of an `xla::Error` (mirrors the status codes the
+/// real bindings surface; the stub only ever produces
+/// [`ErrorKind::Unimplemented`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The entry point is not implemented — in this stub build, every
+    /// PJRT-touching call.  Callers can branch on this to degrade
+    /// cleanly instead of string-matching the message.
+    Unimplemented,
+    /// Any other runtime failure (reserved for the real bindings).
+    Internal,
+}
+
+/// Error type mirroring `xla::Error`, carrying a typed [`ErrorKind`]
+/// so consumers never have to parse the message to tell "this binary
+/// has no PJRT" apart from a genuine device failure.
 #[derive(Debug)]
-pub struct Error(String);
+pub struct Error {
+    kind: ErrorKind,
+    message: String,
+}
 
 impl Error {
     fn unavailable(what: &str) -> Self {
-        Error(format!(
-            "{what}: xla stub (PJRT runtime not built into this binary)"
-        ))
+        Error {
+            kind: ErrorKind::Unimplemented,
+            message: format!("{what}: xla stub (PJRT runtime not built into this binary)"),
+        }
+    }
+
+    /// The typed classification of this error.
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
+    }
+
+    /// True when the failing entry point is simply not built into this
+    /// binary (the stub's only failure mode).
+    pub fn is_unimplemented(&self) -> bool {
+        self.kind == ErrorKind::Unimplemented
     }
 }
 
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}", self.0)
+        write!(f, "{}", self.message)
     }
 }
 
@@ -131,5 +161,22 @@ mod tests {
     fn client_construction_fails_cleanly() {
         let err = PjRtClient::cpu().unwrap_err();
         assert!(err.to_string().contains("stub"));
+        assert_eq!(err.kind(), ErrorKind::Unimplemented);
+        assert!(err.is_unimplemented());
+    }
+
+    #[test]
+    fn every_stub_entry_point_reports_unimplemented() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F64, &[2], &[0; 16])
+            .unwrap_err()
+            .is_unimplemented());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo")
+            .unwrap_err()
+            .is_unimplemented());
+        assert!(PjRtBuffer(()).to_literal_sync().unwrap_err().is_unimplemented());
+        assert!(PjRtLoadedExecutable(())
+            .execute::<Literal>(&[])
+            .unwrap_err()
+            .is_unimplemented());
     }
 }
